@@ -1,0 +1,72 @@
+//! End-to-end driver: federated training of the AOT-compiled transformer
+//! LM through the full three-layer stack.
+//!
+//!   L1  Pallas FWHT kernel (inside the model_grad_embed artifact)
+//!   L2  JAX transformer fwd/bwd, lowered once to artifacts/*.hlo.txt
+//!   L3  this Rust coordinator: m workers, NDSC-quantized gradients over
+//!       byte-accounted channels, consensus parameter server
+//!
+//! Prerequisite: `make artifacts`. Typical run (a few minutes on CPU):
+//!
+//! ```sh
+//! cargo run --release --example train_transformer -- rounds=300 workers=4 r=4 scheme=ndsc
+//! ```
+//!
+//! Compare against `scheme=naive r=4` (stalls) and `scheme=naive r=6`
+//! (recovers) to reproduce the Fig. 3b shape; the loss curve is printed
+//! as CSV for EXPERIMENTS.md.
+
+use kashinflow::coordinator::config::RunConfig;
+use kashinflow::exp::transformer::train_federated;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = RunConfig {
+        workers: 4,
+        r: 4.0,
+        rounds: 300,
+        step: 0.1,
+        seed: 7,
+        ..Default::default()
+    };
+    if !args.is_empty() {
+        // n is fixed by the artifact; parse the rest over our defaults.
+        match RunConfig::parse_args(&args) {
+            Ok(c) => {
+                cfg.workers = c.workers;
+                cfg.r = c.r;
+                cfg.scheme = c.scheme;
+                cfg.rounds = c.rounds;
+                cfg.step = c.step;
+                cfg.seed = c.seed;
+            }
+            Err(e) => {
+                eprintln!("config error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    eprintln!(
+        "federated transformer: scheme={} R={} workers={} rounds={} step={}",
+        cfg.scheme, cfg.r, cfg.workers, cfg.rounds, cfg.step
+    );
+    match train_federated(cfg.scheme, cfg.r, cfg.workers, cfg.rounds, cfg.step, cfg.seed) {
+        Ok(metrics) => {
+            print!("{}", metrics.to_csv());
+            let first = metrics.rounds.first().map(|r| r.value).unwrap_or(f32::NAN);
+            eprintln!(
+                "loss {first:.4} -> {:.4} over {} rounds; {:.3} bits/dim/worker/round; \
+                 uplink payload {:.2} MB total; {} rejected messages",
+                metrics.final_value(),
+                metrics.rounds.len(),
+                metrics.mean_rate(metrics.final_iterate.len(), cfg.workers),
+                metrics.total_payload_bits as f64 / 8e6,
+                metrics.rejected_messages
+            );
+        }
+        Err(e) => {
+            eprintln!("run `make artifacts` first — {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

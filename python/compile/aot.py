@@ -1,0 +1,159 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+Run once via `make artifacts` (a no-op when outputs are newer than inputs);
+Python never appears on the request path. The interchange format is HLO
+text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all under --out-dir, default ../artifacts):
+  model_grad.hlo.txt        (flat_params[n], tokens[b,s]u32, targets) -> (loss, grad[n])
+  model_loss.hlo.txt        same inputs -> (loss,)
+  model_grad_embed.hlo.txt  + signs[N] -> (loss, x_nd[N], linf) — L2 calling the L1 Pallas kernel
+  ndsc_embed_{N}.hlo.txt    (y[1,N], signs[N]) -> (x_nd[1,N],) — standalone L1 kernel
+  ndsc_decode_{N}.hlo.txt   (x[1,N], signs[N]) -> (y[1,N],)
+  model_meta.txt            key=value metadata (n_params, config, padded N)
+
+Model size is configurable through KF_* env vars (defaults give a ~0.9M
+parameter transformer that trains in minutes on CPU; KF_DMODEL=256
+KF_LAYERS=4 gives ~13M for bigger runs).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.hadamard import ndsc_decode_pallas, ndsc_embed_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def config_from_env() -> M.ModelConfig:
+    return M.ModelConfig(
+        vocab=env_int("KF_VOCAB", 64),
+        d_model=env_int("KF_DMODEL", 128),
+        n_heads=env_int("KF_HEADS", 4),
+        n_layers=env_int("KF_LAYERS", 2),
+        seq=env_int("KF_SEQ", 64),
+        batch=env_int("KF_BATCH", 8),
+    )
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def lower_model(cfg: M.ModelConfig, out_dir: str) -> None:
+    n = cfg.n_params
+    big_n = M.padded_dim(n)
+    flat = jax.ShapeDtypeStruct((n,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.uint32)
+    signs = jax.ShapeDtypeStruct((big_n,), jnp.float32)
+
+    def grad_fn(flat, tokens, targets):
+        loss, g = M.loss_and_grad(cfg, flat, tokens, targets)
+        return (loss, g)
+
+    def loss_fn(flat, tokens, targets):
+        return (M.loss_fn(cfg, flat, tokens, targets),)
+
+    def grad_embed_fn(flat, tokens, targets, signs):
+        return M.loss_and_grad_embed(cfg, flat, tokens, targets, signs)
+
+    print(f"model: {n} params (padded N = {big_n}), cfg = {cfg}")
+    write(
+        os.path.join(out_dir, "model_grad.hlo.txt"),
+        to_hlo_text(jax.jit(grad_fn).lower(flat, toks, toks)),
+    )
+    write(
+        os.path.join(out_dir, "model_loss.hlo.txt"),
+        to_hlo_text(jax.jit(loss_fn).lower(flat, toks, toks)),
+    )
+    write(
+        os.path.join(out_dir, "model_grad_embed.hlo.txt"),
+        to_hlo_text(jax.jit(grad_embed_fn).lower(flat, toks, toks, signs)),
+    )
+    # Initial parameters for the Rust server (flat f32 little-endian).
+    import numpy as np
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    flat = np.asarray(M.flatten(cfg, params), dtype="<f4")
+    flat.tofile(os.path.join(out_dir, "model_init.bin"))
+    print(f"  wrote {out_dir}/model_init.bin ({flat.nbytes / 1e6:.2f} MB)")
+    meta = "\n".join(
+        [
+            f"n_params={n}",
+            f"padded_n={big_n}",
+            f"vocab={cfg.vocab}",
+            f"d_model={cfg.d_model}",
+            f"n_heads={cfg.n_heads}",
+            f"n_layers={cfg.n_layers}",
+            f"seq={cfg.seq}",
+            f"batch={cfg.batch}",
+        ]
+    )
+    write(os.path.join(out_dir, "model_meta.txt"), meta + "\n")
+
+
+def lower_kernels(out_dir: str, sizes) -> None:
+    for big_n in sizes:
+        y = jax.ShapeDtypeStruct((1, big_n), jnp.float32)
+        s = jax.ShapeDtypeStruct((big_n,), jnp.float32)
+
+        def embed(yv, sv):
+            return (ndsc_embed_pallas(yv, sv),)
+
+        def decode(xv, sv):
+            return (ndsc_decode_pallas(xv, sv),)
+
+        write(
+            os.path.join(out_dir, f"ndsc_embed_{big_n}.hlo.txt"),
+            to_hlo_text(jax.jit(embed).lower(y, s)),
+        )
+        write(
+            os.path.join(out_dir, f"ndsc_decode_{big_n}.hlo.txt"),
+            to_hlo_text(jax.jit(decode).lower(y, s)),
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--kernel-sizes",
+        default="1024,4096",
+        help="comma-separated padded dims for standalone NDSC kernels",
+    )
+    ap.add_argument("--skip-model", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = config_from_env()
+    if not args.skip_model:
+        lower_model(cfg, args.out_dir)
+    sizes = [int(s) for s in args.kernel_sizes.split(",") if s]
+    lower_kernels(args.out_dir, sizes)
+    print("artifacts complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""L1 Pallas kernels: batched fast Walsh-Hadamard transform and the fused
+NDSC embed (sign-flip -> FWHT -> l_inf scale), the compute hot-spot of
+Near-Democratic Source Coding (paper §2.1).
+
+Hardware adaptation (DESIGN.md §2): the paper's transform ran on
+CPU/MATLAB; a CUDA port would use warp butterflies + shared memory. On TPU
+the right shape is a *batch-tiled, VMEM-resident* kernel: each grid step
+pulls a (block_rows x N) tile from HBM into VMEM (BlockSpec), runs all
+log2(N) butterfly stages in-register on the VPU (+-1 butterflies do not
+benefit from the MXU), and writes the tile back once. Sign-flip and scale
+extraction fuse into the same kernel so the embedding never round-trips to
+HBM between stages.
+
+Pallas is invoked with interpret=True throughout: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+that the Rust runtime can run (see /opt/xla-example/README.md). Real-TPU
+performance is estimated from the VMEM footprint in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_stages(x: jnp.ndarray) -> jnp.ndarray:
+    """All log2(N) butterfly stages over the last axis (unnormalized).
+
+    The loop is a Python (trace-time) loop: N is static, so this unrolls
+    into log2(N) fused adds/subs — exactly the structure a Mosaic build
+    would keep in VMEM.
+    """
+    shape = x.shape
+    n = shape[-1]
+    h = 1
+    while h < n:
+        x = x.reshape(shape[:-1] + (n // (2 * h), 2, h))
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.stack([a + b, a - b], axis=-2).reshape(shape)
+        h *= 2
+    return x
+
+
+def _fwht_kernel(x_ref, o_ref, *, n: int):
+    """Pallas kernel: orthonormal FWHT of a (rows, n) VMEM tile."""
+    x = x_ref[...]
+    y = _fwht_stages(x)
+    o_ref[...] = y * (1.0 / jnp.sqrt(jnp.asarray(n, dtype=x.dtype)))
+
+
+def fwht_pallas(x: jnp.ndarray, block_rows: int = 8) -> jnp.ndarray:
+    """Batched orthonormal FWHT over the last axis via pallas_call.
+
+    `x`: (batch, n) with n a power of two; batch need not divide
+    block_rows — the grid covers ceil(batch / block_rows) tiles and Pallas
+    masks the tail tile.
+    """
+    b, n = x.shape
+    assert n & (n - 1) == 0, f"n={n} must be a power of two"
+    rows = min(block_rows, b)
+    grid = ((b + rows - 1) // rows,)
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def _ndsc_embed_kernel(y_ref, signs_ref, o_ref, *, n: int):
+    """Fused NDSC embed tile: x = H . (D y), all in VMEM."""
+    y = y_ref[...]
+    d = signs_ref[...]
+    x = _fwht_stages(y * d[None, :])
+    o_ref[...] = x * (1.0 / jnp.sqrt(jnp.asarray(n, dtype=y.dtype)))
+
+
+def ndsc_embed_pallas(
+    y: jnp.ndarray, signs: jnp.ndarray, block_rows: int = 8
+) -> jnp.ndarray:
+    """Near-democratic embedding x = H D y for a batch of vectors.
+
+    `y`: (batch, n); `signs`: (n,) of +-1. Equivalent to
+    `ref.ndsc_embed_ref` but single-pass through VMEM.
+    """
+    b, n = y.shape
+    assert signs.shape == (n,)
+    rows = min(block_rows, b)
+    grid = ((b + rows - 1) // rows,)
+    return pl.pallas_call(
+        functools.partial(_ndsc_embed_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((b, n), y.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, n), lambda i: (i, 0)),
+        interpret=True,
+    )(y, signs)
+
+
+def ndsc_decode_pallas(
+    x: jnp.ndarray, signs: jnp.ndarray, block_rows: int = 8
+) -> jnp.ndarray:
+    """Inverse transform y = D H x (H symmetric, D its own inverse)."""
+    b, n = x.shape
+    hx = fwht_pallas(x, block_rows=block_rows)
+    return hx * signs[None, :]
+
+
+def vmem_footprint_bytes(block_rows: int, n: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step of the embed kernel:
+    input tile + signs + output tile (double-buffered input).
+
+    Used by DESIGN.md §8 to size block_rows: with N = 2^17 and
+    block_rows = 8 the footprint is ~12.6 MiB < 16 MiB VMEM.
+    """
+    tile = block_rows * n * dtype_bytes
+    return 2 * tile + n * dtype_bytes + tile

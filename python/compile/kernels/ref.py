@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1 ground truth).
+
+Every kernel in `hadamard.py` is checked against these references by
+`python/tests/test_kernel.py` (pytest + hypothesis-style sweeps). The
+references favour clarity over speed: `fwht_ref` is the O(N^2) dense
+multiply by the explicit Sylvester Hadamard matrix.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def hadamard_matrix(n: int) -> np.ndarray:
+    """Explicit +-1 Sylvester Hadamard matrix (n a power of two)."""
+    assert n & (n - 1) == 0 and n > 0, f"n={n} not a power of two"
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormal Walsh-Hadamard transform of the last axis, O(N^2)."""
+    n = x.shape[-1]
+    h = jnp.asarray(hadamard_matrix(n), dtype=jnp.float32) / jnp.sqrt(
+        jnp.asarray(n, dtype=jnp.float32)
+    )
+    return (x.astype(jnp.float32) @ h).astype(x.dtype)
+
+
+def ndsc_embed_ref(y: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+    """Near-democratic embedding x = H D y (Parseval Hadamard frame with
+    P = I, i.e. n == N): sign-flip then orthonormal FWHT."""
+    return fwht_ref(y * signs)
+
+
+def ndsc_decode_ref(x: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+    """Inverse transform y = D H x (H symmetric, D = D^-1)."""
+    return fwht_ref(x) * signs
+
+
+def uniform_quantize_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Deterministic nearest-neighbour uniform quantizer on [-scale, scale]
+    with 2^bits cells (eq. 11 of the paper), matching
+    rust/src/quant/uniform.rs exactly."""
+    m = 2 ** bits
+    delta = 2.0 / m
+    t = jnp.clip(x / jnp.maximum(scale, 1e-30), -1.0, 1.0)
+    idx = jnp.clip(jnp.floor((t + 1.0) / delta), 0, m - 1)
+    return scale * (-1.0 + (2.0 * idx + 1.0) * delta / 2.0)

@@ -1,0 +1,171 @@
+"""L2: a small causal transformer language model in pure JAX.
+
+The paper's Fig. 3b / Fig. 7 non-convex workload (a CNN on CIFAR-10,
+infeasible on this CPU-only offline image — DESIGN.md §3) is adapted to a
+byte-level transformer LM trained through the full Rust coordinator with
+quantized gradients. This module defines:
+
+  * `init_params` / `flatten` / `unflatten` — the parameter vector the
+    Rust server owns is the flat f32 vector; the order here is the wire
+    contract (opaque to Rust, which only needs its length).
+  * `loss_fn` — mean next-token cross-entropy.
+  * `loss_and_grad` — value_and_grad, returned flat. Lowered by aot.py to
+    `artifacts/model_grad.hlo.txt` and executed from Rust via PJRT.
+  * `loss_and_grad_embed` — same, but the flat gradient additionally runs
+    through the L1 Pallas NDSC-embed kernel (sign-flip + FWHT), so the
+    democratic transform lowers into the *same* HLO as the backward pass
+    and never leaves the device.
+"""
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.hadamard import ndsc_embed_pallas
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 64
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    seq: int = 64
+    batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def shapes(self):
+        """Ordered (name, shape) list — the flattening contract."""
+        c = self
+        out = [
+            ("tok_embed", (c.vocab, c.d_model)),
+            ("pos_embed", (c.seq, c.d_model)),
+        ]
+        for layer in range(c.n_layers):
+            out += [
+                (f"l{layer}.ln1_g", (c.d_model,)),
+                (f"l{layer}.ln1_b", (c.d_model,)),
+                (f"l{layer}.wqkv", (c.d_model, 3 * c.d_model)),
+                (f"l{layer}.wo", (c.d_model, c.d_model)),
+                (f"l{layer}.ln2_g", (c.d_model,)),
+                (f"l{layer}.ln2_b", (c.d_model,)),
+                (f"l{layer}.w1", (c.d_model, 4 * c.d_model)),
+                (f"l{layer}.b1", (4 * c.d_model,)),
+                (f"l{layer}.w2", (4 * c.d_model, c.d_model)),
+                (f"l{layer}.b2", (c.d_model,)),
+            ]
+        out += [("lnf_g", (c.d_model,)), ("lnf_b", (c.d_model,))]
+        # output head tied to tok_embed (no extra params)
+        return out
+
+    @property
+    def n_params(self) -> int:
+        return sum(math.prod(s) for _, s in self.shapes())
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    params = {}
+    for name, shape in cfg.shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", ".b1", ".b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+            )
+    return params
+
+
+def flatten(cfg: ModelConfig, params: dict) -> jnp.ndarray:
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in cfg.shapes()])
+
+
+def unflatten(cfg: ModelConfig, flat: jnp.ndarray) -> dict:
+    params = {}
+    off = 0
+    for name, shape in cfg.shapes():
+        size = math.prod(shape)
+        params[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, x, wqkv, wo):
+    b, s, d = x.shape
+    qkv = x @ wqkv  # (b, s, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = q @ k.transpose(0, 1, 3, 2) / math.sqrt(cfg.d_head)  # (b,h,s,s)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits (batch, seq, vocab) for u32 tokens (batch, seq)."""
+    x = params["tok_embed"][tokens] + params["pos_embed"][None, :, :]
+    for layer in range(cfg.n_layers):
+        p = lambda k: params[f"l{layer}.{k}"]
+        h = _layer_norm(x, p("ln1_g"), p("ln1_b"))
+        x = x + _attention(cfg, h, p("wqkv"), p("wo"))
+        h = _layer_norm(x, p("ln2_g"), p("ln2_b"))
+        h = jax.nn.gelu(h @ p("w1") + p("b1")) @ p("w2") + p("b2")
+        x = x + h
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["tok_embed"].T  # tied head
+
+
+def loss_fn(cfg: ModelConfig, flat: jnp.ndarray, tokens, targets) -> jnp.ndarray:
+    """Mean next-token cross-entropy (nats)."""
+    params = unflatten(cfg, flat)
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32), axis=-1)
+    return nll.mean()
+
+
+def loss_and_grad(cfg: ModelConfig, flat, tokens, targets):
+    """(loss, flat_grad) — the worker's oracle call."""
+    loss, grad = jax.value_and_grad(loss_fn, argnums=1)(cfg, flat, tokens, targets)
+    return loss, grad
+
+
+def padded_dim(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def loss_and_grad_embed(cfg: ModelConfig, flat, tokens, targets, signs):
+    """(loss, x_nd, linf) — the gradient already pushed through the L1
+    Pallas NDSC-embed kernel (zero-pad to N = 2^ceil(log2 n), sign-flip,
+    FWHT). `signs`: (N,) of +-1. The Rust worker then only normalizes by
+    `linf` and bit-packs — the O(n log n) hot-spot stays in the artifact.
+    """
+    loss, grad = loss_and_grad(cfg, flat, tokens, targets)
+    big_n = padded_dim(grad.shape[0])
+    padded = jnp.zeros((1, big_n), jnp.float32).at[0, : grad.shape[0]].set(grad)
+    x = ndsc_embed_pallas(padded, signs)[0]
+    return loss, x, jnp.max(jnp.abs(x))

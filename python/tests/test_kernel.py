@@ -1,0 +1,130 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes/block sizes; this is the CORE correctness
+signal for the kernels the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hadamard import (
+    fwht_pallas,
+    ndsc_decode_pallas,
+    ndsc_embed_pallas,
+    vmem_footprint_bytes,
+)
+
+POW2 = [8, 16, 64, 128, 512, 1024]
+
+
+def rand(key, shape, dtype=jnp.float32, heavy=False):
+    x = jax.random.normal(key, shape, jnp.float32)
+    if heavy:
+        x = x ** 3
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("n", POW2)
+def test_fwht_matches_ref(n):
+    x = rand(jax.random.PRNGKey(n), (4, n), heavy=True)
+    got = fwht_pallas(x)
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_pow=st.integers(min_value=1, max_value=10),
+    batch=st.integers(min_value=1, max_value=17),
+    block_rows=st.sampled_from([1, 2, 4, 8, 16]),
+    heavy=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fwht_hypothesis_sweep(n_pow, batch, block_rows, heavy, seed):
+    n = 2 ** n_pow
+    x = rand(jax.random.PRNGKey(seed), (batch, n), heavy=heavy)
+    got = fwht_pallas(x, block_rows=block_rows)
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwht_dtypes(dtype):
+    n = 128
+    x = rand(jax.random.PRNGKey(0), (4, n), dtype=dtype)
+    got = fwht_pallas(x).astype(jnp.float32)
+    want = ref.fwht_ref(x).astype(jnp.float32)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_fwht_is_involution():
+    n = 256
+    x = rand(jax.random.PRNGKey(1), (3, n))
+    y = fwht_pallas(fwht_pallas(x))
+    np.testing.assert_allclose(y, x, rtol=1e-4, atol=1e-4)
+
+
+def test_fwht_preserves_l2():
+    n = 512
+    x = rand(jax.random.PRNGKey(2), (2, n), heavy=True)
+    y = fwht_pallas(x)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-3
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_pow=st.integers(min_value=2, max_value=10),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ndsc_embed_matches_ref(n_pow, seed):
+    n = 2 ** n_pow
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    y = rand(k1, (5, n), heavy=True)
+    signs = jnp.sign(jax.random.normal(k2, (n,))) + (
+        jax.random.normal(k2, (n,)) == 0
+    )  # +-1, no zeros
+    got = ndsc_embed_pallas(y, signs)
+    want = ref.ndsc_embed_ref(y, signs)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+def test_embed_decode_roundtrip():
+    n = 1024
+    key = jax.random.PRNGKey(3)
+    y = rand(key, (2, n), heavy=True)
+    signs = jnp.where(jax.random.bernoulli(key, 0.5, (n,)), 1.0, -1.0)
+    x = ndsc_embed_pallas(y, signs)
+    back = ndsc_decode_pallas(x, signs)
+    np.testing.assert_allclose(back, y, rtol=1e-3, atol=1e-3)
+
+
+def test_embedding_flattens_heavy_tails():
+    """Lemma 3's point: l_inf of the embedding ~ sqrt(log N / N) * l2."""
+    n = 1024
+    key = jax.random.PRNGKey(4)
+    y = jnp.zeros((1, n)).at[0, 13].set(100.0)  # one-hot, worst case
+    signs = jnp.where(jax.random.bernoulli(key, 0.5, (n,)), 1.0, -1.0)
+    x = ndsc_embed_pallas(y, signs)
+    bound = 2.0 * np.sqrt(np.log(2 * n) / n) * float(jnp.linalg.norm(y))
+    assert float(jnp.max(jnp.abs(x))) <= bound
+
+
+def test_uniform_quantize_ref_error_bound():
+    x = jnp.linspace(-0.999, 0.999, 101)
+    for bits in [1, 2, 4, 8]:
+        q = ref.uniform_quantize_ref(x, jnp.asarray(1.0), bits)
+        assert float(jnp.max(jnp.abs(q - x))) <= 2.0 ** (-bits) + 1e-6
+
+
+def test_vmem_footprint_within_budget():
+    # DESIGN.md §8: default tiling must fit a 16 MiB VMEM.
+    assert vmem_footprint_bytes(8, 2**17) < 16 * 2**20
+    assert vmem_footprint_bytes(8, 2**20) > 16 * 2**20  # and the bound binds

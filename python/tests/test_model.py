@@ -1,0 +1,132 @@
+"""L2 correctness: transformer shapes, gradient integrity, trainability,
+and the L2-calls-L1 composition (loss_and_grad_embed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig(vocab=32, d_model=32, n_heads=2, n_layers=2, seq=16, batch=4)
+
+
+def make_batch(key, cfg=CFG):
+    k1, k2 = jax.random.split(key)
+    toks = jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab).astype(jnp.uint32)
+    tgts = jax.random.randint(k2, (cfg.batch, cfg.seq), 0, cfg.vocab).astype(jnp.uint32)
+    return toks, tgts
+
+
+def test_param_count_and_flatten_roundtrip():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    flat = M.flatten(CFG, params)
+    assert flat.shape == (CFG.n_params,)
+    back = M.unflatten(CFG, flat)
+    for name, _ in CFG.shapes():
+        np.testing.assert_array_equal(back[name], params[name])
+
+
+def test_forward_shapes_and_finiteness():
+    params = M.init_params(CFG, jax.random.PRNGKey(1))
+    toks, _ = make_batch(jax.random.PRNGKey(2))
+    logits = M.forward(CFG, params, toks)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    params = M.init_params(CFG, jax.random.PRNGKey(3))
+    flat = M.flatten(CFG, params)
+    toks, tgts = make_batch(jax.random.PRNGKey(4))
+    loss = M.loss_fn(CFG, flat, toks, tgts)
+    # near log(vocab) at init
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.7
+
+
+def test_causality():
+    """Changing a future token must not affect earlier logits."""
+    params = M.init_params(CFG, jax.random.PRNGKey(5))
+    toks, _ = make_batch(jax.random.PRNGKey(6))
+    logits1 = M.forward(CFG, params, toks)
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    logits2 = M.forward(CFG, params, toks2)
+    np.testing.assert_allclose(
+        logits1[:, :-1], logits2[:, :-1], rtol=1e-5, atol=1e-5
+    )
+    assert float(jnp.max(jnp.abs(logits1[:, -1] - logits2[:, -1]))) > 1e-4
+
+
+def test_grad_matches_finite_difference():
+    params = M.init_params(CFG, jax.random.PRNGKey(7))
+    flat = M.flatten(CFG, params)
+    toks, tgts = make_batch(jax.random.PRNGKey(8))
+    loss, grad = M.loss_and_grad(CFG, flat, toks, tgts)
+    assert grad.shape == flat.shape
+    rng = np.random.default_rng(0)
+    idx = rng.choice(CFG.n_params, size=5, replace=False)
+    eps = 1e-3
+    for j in idx:
+        e = jnp.zeros_like(flat).at[j].set(eps)
+        fp = M.loss_fn(CFG, flat + e, toks, tgts)
+        fm = M.loss_fn(CFG, flat - e, toks, tgts)
+        fd = (float(fp) - float(fm)) / (2 * eps)
+        assert abs(fd - float(grad[j])) < 5e-3 + 0.05 * abs(fd), (j, fd, float(grad[j]))
+
+
+def test_few_gd_steps_reduce_loss():
+    params = M.init_params(CFG, jax.random.PRNGKey(9))
+    flat = M.flatten(CFG, params)
+    # a fixed, learnable batch (memorization)
+    toks, tgts = make_batch(jax.random.PRNGKey(10))
+    grad_fn = jax.jit(lambda f: M.loss_and_grad(CFG, f, toks, tgts))
+    loss0, _ = grad_fn(flat)
+    for _ in range(30):
+        _, g = grad_fn(flat)
+        flat = flat - 0.5 * g
+    loss1, _ = grad_fn(flat)
+    assert float(loss1) < 0.7 * float(loss0)
+
+
+def test_loss_and_grad_embed_composes_l1():
+    """The embedded gradient must equal ref-embedding of the plain grad:
+    the L2 graph genuinely routed the gradient through the Pallas kernel."""
+    params = M.init_params(CFG, jax.random.PRNGKey(11))
+    flat = M.flatten(CFG, params)
+    toks, tgts = make_batch(jax.random.PRNGKey(12))
+    n = CFG.n_params
+    big_n = M.padded_dim(n)
+    key = jax.random.PRNGKey(13)
+    signs = jnp.where(jax.random.bernoulli(key, 0.5, (big_n,)), 1.0, -1.0)
+    loss_e, x_nd, linf = M.loss_and_grad_embed(CFG, flat, toks, tgts, signs)
+    loss_p, grad = M.loss_and_grad(CFG, flat, toks, tgts)
+    assert abs(float(loss_e) - float(loss_p)) < 1e-6
+    padded = jnp.zeros((1, big_n)).at[0, :n].set(grad)
+    want = ref.ndsc_embed_ref(padded, signs)[0]
+    np.testing.assert_allclose(x_nd, want, rtol=2e-3, atol=2e-4)
+    assert abs(float(linf) - float(jnp.max(jnp.abs(want)))) < 1e-5
+    # Parseval: embedding preserves the gradient's l2 norm
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x_nd), jnp.linalg.norm(grad), rtol=1e-3
+    )
+
+
+@pytest.mark.parametrize("d_model,n_layers", [(32, 1), (64, 2)])
+def test_param_count_formula(d_model, n_layers):
+    cfg = M.ModelConfig(
+        vocab=32, d_model=d_model, n_heads=2, n_layers=n_layers, seq=16, batch=2
+    )
+    want = 32 * d_model + 16 * d_model  # embeddings
+    per_layer = (
+        2 * d_model  # ln1
+        + d_model * 3 * d_model
+        + d_model * d_model
+        + 2 * d_model  # ln2
+        + d_model * 4 * d_model
+        + 4 * d_model
+        + 4 * d_model * d_model
+        + d_model
+    )
+    want += n_layers * per_layer + 2 * d_model  # final ln
+    assert cfg.n_params == want

@@ -1,0 +1,34 @@
+//! Table 1 timing column: encode+decode wall-clock for every compression
+//! scheme at n = 1024 and n = 65536 (the regimes of the paper's
+//! evaluation vs. the transformer workload).
+
+use kashinflow::exp::table1::schemes;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::testkit::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(2);
+    for &n in &[1024usize, 65536] {
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        let mut build_rng = Rng::seed_from(3);
+        for c in schemes(n, 3.0, &mut build_rng) {
+            // DE at n=65536 is O(n^2)-ish via dense frames — skip the
+            // dense-frame schemes at large n to keep the bench tractable.
+            if n > 4096 && (c.name().contains("DSC[") && !c.name().contains("NDSC")
+                || c.name().contains("orthonormal"))
+            {
+                continue;
+            }
+            let dim = c.n();
+            let input = &y[..dim];
+            b.run(&format!("encode/{}/{}", c.name(), dim), || {
+                black_box(c.compress(input, &mut rng));
+            });
+            let msg = c.compress(input, &mut rng);
+            b.run(&format!("decode/{}/{}", c.name(), dim), || {
+                black_box(c.decompress(&msg));
+            });
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! End-to-end coordinator bench: full rounds/second of the threaded
+//! parameter server (Fig. 3a regime) — the headline L3 throughput number
+//! for EXPERIMENTS.md §Perf.
+
+use kashinflow::coordinator::config::{RunConfig, SchemeKind};
+use kashinflow::coordinator::worker::DatasetGradSource;
+use kashinflow::coordinator::run_distributed;
+use kashinflow::data::synthetic::planted_regression_shards;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::opt::objectives::Loss;
+use kashinflow::testkit::bench::{black_box, Bencher};
+
+fn bench_rounds(b: &mut Bencher, scheme: SchemeKind, n: usize, workers: usize, rounds: usize) {
+    let name = format!("coordinator/{scheme:?}/n{n}/m{workers}/{rounds}rounds");
+    b.run(&name, || {
+        let mut rng = Rng::seed_from(6);
+        let (shards, _) = planted_regression_shards(workers, 10, n, Loss::Square, &mut rng, false);
+        let cfg = RunConfig {
+            n,
+            workers,
+            r: 2.0,
+            scheme,
+            rounds,
+            step: 0.02,
+            batch: 5,
+            ..Default::default()
+        };
+        let comps = cfg.build_compressors(&mut rng);
+        let sources: Vec<Box<dyn kashinflow::coordinator::worker::GradSource>> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, obj)| {
+                Box::new(DatasetGradSource { obj, batch: 5, rng: Rng::seed_from(i as u64) })
+                    as Box<dyn kashinflow::coordinator::worker::GradSource>
+            })
+            .collect();
+        let metrics = run_distributed(&cfg, vec![0.0; n], sources, comps, |_| 0.0);
+        black_box(metrics.total_payload_bits);
+    });
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    bench_rounds(&mut b, SchemeKind::Ndsc, 30, 4, 50);
+    bench_rounds(&mut b, SchemeKind::Ndsc, 30, 10, 50);
+    bench_rounds(&mut b, SchemeKind::NdscDithered, 1024, 4, 20);
+    bench_rounds(&mut b, SchemeKind::Naive, 1024, 4, 20);
+}

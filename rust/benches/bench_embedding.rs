@@ -1,0 +1,32 @@
+//! Fig. 1c as a bench: wall-clock of democratic (LP, LV) vs
+//! near-democratic embeddings across dimensions.
+
+use kashinflow::embed::democratic::KashinSolver;
+use kashinflow::embed::lp::{min_linf, LinfOptions};
+use kashinflow::embed::near_democratic::nde;
+use kashinflow::linalg::frames::HadamardFrame;
+use kashinflow::linalg::fwht::next_pow2;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::testkit::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(3);
+    for &n in &[64usize, 256, 1024, 4096] {
+        let big_n = next_pow2(n * 2);
+        let frame = HadamardFrame::with_big_n(n, big_n, &mut rng);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        b.run(&format!("nde/{n}"), || {
+            black_box(nde(&frame, &y));
+        });
+        let mut solver = KashinSolver::for_frame(&frame);
+        b.run(&format!("lv/{n}"), || {
+            black_box(solver.embed(&frame, &y));
+        });
+        if n <= 256 {
+            b.run(&format!("lp/{n}"), || {
+                black_box(min_linf(&frame, &y, &LinfOptions::default()));
+            });
+        }
+    }
+}

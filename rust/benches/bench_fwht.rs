@@ -1,0 +1,20 @@
+//! FWHT micro-benchmarks — the L3 hot-path kernel (and the §Perf target).
+//! Run with `cargo bench --bench bench_fwht`.
+
+use kashinflow::linalg::fwht::fwht_inplace;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::testkit::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(1);
+    for &n in &[1024usize, 4096, 16384, 65536, 262144, 1048576] {
+        let base: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut buf = base.clone();
+        b.run_throughput(&format!("fwht/{n}"), n, || {
+            buf.copy_from_slice(&base);
+            fwht_inplace(&mut buf);
+            black_box(buf[0]);
+        });
+    }
+}

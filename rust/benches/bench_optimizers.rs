@@ -1,0 +1,58 @@
+//! Optimizer-loop benches: per-iteration cost of DGD-DEF and DQ-PSGD at
+//! the paper's problem sizes (Fig. 1b / Fig. 2 regimes) — L3 must not be
+//! the bottleneck relative to the oracle call.
+
+use kashinflow::data::synthetic::{planted_regression, two_gaussian_svm, Tail};
+use kashinflow::linalg::rng::Rng;
+use kashinflow::opt::dgd_def::{self, DgdDefOptions};
+use kashinflow::opt::dq_psgd::{self, DqPsgdOptions};
+use kashinflow::opt::oracle::MinibatchOracle;
+use kashinflow::opt::projection::Domain;
+use kashinflow::quant::ndsc::Ndsc;
+use kashinflow::testkit::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(4);
+
+    // DGD-DEF per-iteration (10 iters per measurement), n = 116.
+    let (obj, _) = planted_regression(200, 116, Tail::GaussianCubed, Tail::Gaussian, 0.1, &mut rng);
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let c = Ndsc::hadamard(116, 4.0, &mut rng);
+    b.run("dgd_def/n116/10iter", || {
+        let tr = dgd_def::run(
+            &obj,
+            &c,
+            &vec![0.0; 116],
+            None,
+            DgdDefOptions { step: 2.0 / (l + mu), iters: 10 },
+            &mut rng,
+        );
+        black_box(tr.final_x[0]);
+    });
+
+    // DQ-PSGD per-iteration, n = 784 (MNIST regime), R = 0.1.
+    let svm = two_gaussian_svm(300, 784, 0.5, &mut rng);
+    let cd = Ndsc::hadamard_dithered(784, 0.1, &mut rng);
+    b.run("dq_psgd/n784_r0.1/10iter", || {
+        let mut oracle = MinibatchOracle::new(&svm, 30, Rng::seed_from(5));
+        let tr = dq_psgd::run(
+            &svm,
+            &mut oracle,
+            &cd,
+            &vec![0.0; 784],
+            None,
+            DqPsgdOptions { step: 0.05, iters: 10, domain: Domain::L2Ball { radius: 10.0 } },
+            &mut rng,
+        );
+        black_box(tr.final_x[0]);
+    });
+
+    // Raw compress/decompress at transformer scale (n = 2^17).
+    let n = 1 << 17;
+    let big = Ndsc::hadamard(n, 4.0, &mut rng);
+    let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+    b.run_throughput("ndsc_compress/n131072", n, || {
+        black_box(kashinflow::quant::Compressor::compress(&big, &y, &mut rng));
+    });
+}

@@ -1,0 +1,159 @@
+//! Byte-accounted, budget-enforced channels.
+//!
+//! [`AccountedSender`] wraps an `mpsc::Sender` and (a) tallies payload and
+//! overhead bits of everything sent, (b) **rejects** any message whose
+//! payload exceeds the per-message budget — making the paper's "strict
+//! budget of R bits per dimension" an enforced runtime invariant rather
+//! than a convention.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{SendError, Sender};
+use std::sync::Arc;
+
+use crate::coordinator::protocol::WireSize;
+
+/// Shared traffic counters for one logical link (or a set of links).
+#[derive(Default, Debug)]
+pub struct TrafficCounter {
+    pub payload_bits: AtomicUsize,
+    pub overhead_bits: AtomicUsize,
+    pub messages: AtomicUsize,
+    pub rejected: AtomicUsize,
+}
+
+impl TrafficCounter {
+    pub fn total_bits(&self) -> usize {
+        self.payload_bits.load(Ordering::Relaxed) + self.overhead_bits.load(Ordering::Relaxed)
+    }
+}
+
+/// Error returned by a budget-violating send.
+#[derive(Debug)]
+pub enum ChannelError<T> {
+    /// Message payload exceeded the per-message bit budget.
+    OverBudget { payload_bits: usize, budget_bits: usize },
+    /// Receiver hung up.
+    Disconnected(SendError<T>),
+}
+
+/// Budget-enforcing, accounting sender. Cloneable; clones share counters.
+pub struct AccountedSender<T: WireSize> {
+    tx: Sender<T>,
+    counter: Arc<TrafficCounter>,
+    /// Max payload bits per message (None = unconstrained, e.g. downlink).
+    budget_bits: Option<usize>,
+}
+
+impl<T: WireSize> Clone for AccountedSender<T> {
+    fn clone(&self) -> Self {
+        AccountedSender {
+            tx: self.tx.clone(),
+            counter: self.counter.clone(),
+            budget_bits: self.budget_bits,
+        }
+    }
+}
+
+impl<T: WireSize> AccountedSender<T> {
+    pub fn new(tx: Sender<T>, budget_bits: Option<usize>) -> Self {
+        AccountedSender { tx, counter: Arc::new(TrafficCounter::default()), budget_bits }
+    }
+
+    /// Send with budget enforcement and accounting.
+    pub fn send(&self, msg: T) -> Result<(), ChannelError<T>> {
+        let payload = msg.payload_bits();
+        if let Some(budget) = self.budget_bits {
+            if payload > budget {
+                self.counter.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ChannelError::OverBudget { payload_bits: payload, budget_bits: budget });
+            }
+        }
+        let overhead = msg.overhead_bits();
+        // Count BEFORE the send: the mpsc channel's happens-before edge then
+        // guarantees the receiver observes the updated counters for every
+        // message it has received (counting after the send races with a
+        // server that reads totals right after the final recv).
+        self.counter.payload_bits.fetch_add(payload, Ordering::Relaxed);
+        self.counter.overhead_bits.fetch_add(overhead, Ordering::Relaxed);
+        self.counter.messages.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(msg).map_err(|e| {
+            self.counter.payload_bits.fetch_sub(payload, Ordering::Relaxed);
+            self.counter.overhead_bits.fetch_sub(overhead, Ordering::Relaxed);
+            self.counter.messages.fetch_sub(1, Ordering::Relaxed);
+            ChannelError::Disconnected(e)
+        })?;
+        Ok(())
+    }
+
+    pub fn counter(&self) -> Arc<TrafficCounter> {
+        self.counter.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Upload;
+    use crate::quant::Compressed;
+    use std::sync::mpsc;
+
+    fn upload(payload_bits: usize) -> Upload {
+        Upload {
+            round: 0,
+            worker: 0,
+            msg: Compressed {
+                n: 10,
+                bytes: vec![0; payload_bits.div_ceil(8)],
+                payload_bits,
+                side_bits: 32,
+            },
+            local_value: 0.0,
+        }
+    }
+
+    #[test]
+    fn within_budget_passes_and_counts() {
+        let (tx, rx) = mpsc::channel();
+        let s = AccountedSender::new(tx, Some(100));
+        s.send(upload(80)).unwrap();
+        s.send(upload(100)).unwrap();
+        assert_eq!(rx.try_iter().count(), 2);
+        let c = s.counter();
+        assert_eq!(c.payload_bits.load(Ordering::Relaxed), 180);
+        assert_eq!(c.messages.load(Ordering::Relaxed), 2);
+        assert_eq!(c.rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn over_budget_rejected() {
+        let (tx, rx) = mpsc::channel();
+        let s = AccountedSender::new(tx, Some(100));
+        match s.send(upload(101)) {
+            Err(ChannelError::OverBudget { payload_bits, budget_bits }) => {
+                assert_eq!(payload_bits, 101);
+                assert_eq!(budget_bits, 100);
+            }
+            other => panic!("expected OverBudget, got {other:?}"),
+        }
+        assert_eq!(rx.try_iter().count(), 0);
+        assert_eq!(s.counter().rejected.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn clones_share_counters() {
+        let (tx, _rx) = mpsc::channel();
+        let s = AccountedSender::new(tx, None);
+        let s2 = s.clone();
+        s.send(upload(50)).unwrap();
+        s2.send(upload(70)).unwrap();
+        assert_eq!(s.counter().payload_bits.load(Ordering::Relaxed), 120);
+    }
+
+    #[test]
+    fn disconnected_receiver_reported() {
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        let s = AccountedSender::new(tx, None);
+        assert!(matches!(s.send(upload(1)), Err(ChannelError::Disconnected(_))));
+    }
+}

@@ -1,0 +1,330 @@
+//! Run configuration: every knob of a distributed job, parseable from
+//! `key=value` CLI arguments or a config file of the same lines — the
+//! "real config system" a deployment needs without any external crates.
+
+use crate::linalg::frames::FrameKind;
+
+/// Compression scheme selector (the CLI surface of [`crate::quant`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SchemeKind {
+    /// NDSC (near-democratic, deterministic) — default.
+    Ndsc,
+    /// NDSC dithered (for DQ-PSGD).
+    NdscDithered,
+    /// DSC (democratic via LV iteration).
+    Dsc,
+    /// DSC dithered.
+    DscDithered,
+    /// Naive uniform scalar quantizer.
+    Naive,
+    /// Standard dithering (no embedding).
+    StandardDither,
+    /// QSGD with `2^⌈R⌉−1`-ish levels.
+    Qsgd,
+    /// 1-bit sign quantization.
+    Sign,
+    /// TernGrad.
+    Ternary,
+    /// Top-k (k from the budget).
+    TopK,
+    /// Random-k (k from the budget).
+    RandK,
+    /// No compression (float32 gradients; reference).
+    None,
+}
+
+impl SchemeKind {
+    pub fn parse(s: &str) -> Option<SchemeKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "ndsc" => SchemeKind::Ndsc,
+            "ndsc-dith" | "ndsc_dithered" | "ndscd" => SchemeKind::NdscDithered,
+            "dsc" => SchemeKind::Dsc,
+            "dsc-dith" | "dsc_dithered" | "dscd" => SchemeKind::DscDithered,
+            "naive" | "uniform" => SchemeKind::Naive,
+            "sd" | "dither" | "standard-dither" => SchemeKind::StandardDither,
+            "qsgd" => SchemeKind::Qsgd,
+            "sign" => SchemeKind::Sign,
+            "ternary" | "terngrad" => SchemeKind::Ternary,
+            "topk" | "top-k" => SchemeKind::TopK,
+            "randk" | "rand-k" | "random" => SchemeKind::RandK,
+            "none" | "float" | "fp32" => SchemeKind::None,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for SchemeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Full distributed-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Problem dimension.
+    pub n: usize,
+    /// Number of workers `m`.
+    pub workers: usize,
+    /// Bit budget `R` (bits per dimension per worker per round).
+    pub r: f32,
+    pub scheme: SchemeKind,
+    pub frame: FrameKind,
+    /// Rounds `T`.
+    pub rounds: usize,
+    /// Step size `α`.
+    pub step: f32,
+    /// Worker minibatch size (0 = full local gradient).
+    pub batch: usize,
+    /// Projection-ball radius (`inf` = unconstrained).
+    pub radius: f32,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            n: 30,
+            workers: 10,
+            r: 1.0,
+            scheme: SchemeKind::Ndsc,
+            frame: FrameKind::Hadamard,
+            rounds: 200,
+            step: 0.05,
+            batch: 5,
+            radius: f32::INFINITY,
+            seed: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse `key=value` tokens, e.g.
+    /// `n=116 workers=4 r=0.5 scheme=ndsc frame=hadamard rounds=300`.
+    pub fn parse_args(args: &[String]) -> Result<RunConfig, String> {
+        let mut cfg = RunConfig::default();
+        for a in args {
+            let (k, v) = a
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got '{a}'"))?;
+            match k {
+                "n" => cfg.n = v.parse().map_err(|e| format!("n: {e}"))?,
+                "workers" | "m" => cfg.workers = v.parse().map_err(|e| format!("workers: {e}"))?,
+                "r" | "bits" => cfg.r = v.parse().map_err(|e| format!("r: {e}"))?,
+                "scheme" => {
+                    cfg.scheme =
+                        SchemeKind::parse(v).ok_or_else(|| format!("unknown scheme '{v}'"))?
+                }
+                "frame" => {
+                    cfg.frame = FrameKind::parse(v).ok_or_else(|| format!("unknown frame '{v}'"))?
+                }
+                "rounds" | "iters" | "t" => {
+                    cfg.rounds = v.parse().map_err(|e| format!("rounds: {e}"))?
+                }
+                "step" | "alpha" | "lr" => cfg.step = v.parse().map_err(|e| format!("step: {e}"))?,
+                "batch" => cfg.batch = v.parse().map_err(|e| format!("batch: {e}"))?,
+                "radius" => cfg.radius = v.parse().map_err(|e| format!("radius: {e}"))?,
+                "seed" => cfg.seed = v.parse().map_err(|e| format!("seed: {e}"))?,
+                _ => return Err(format!("unknown config key '{k}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("n must be positive".into());
+        }
+        if self.workers == 0 {
+            return Err("workers must be positive".into());
+        }
+        if !(self.r > 0.0) && self.scheme != SchemeKind::None {
+            return Err("r must be positive".into());
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Build one compressor per worker from the scheme/frame config.
+    /// Each worker draws independent frame randomness from `rng` (common
+    /// randomness with the server, established at setup).
+    pub fn build_compressors(
+        &self,
+        rng: &mut crate::linalg::rng::Rng,
+    ) -> Vec<std::sync::Arc<dyn crate::quant::Compressor>> {
+        use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
+        use crate::quant::gain_shape::{NaiveUniform, StandardDither};
+        use crate::quant::qsgd::Qsgd;
+        use crate::quant::randk::RandK;
+        use crate::quant::sign::SignQuantizer;
+        use crate::quant::ternary::Ternary;
+        use crate::quant::topk::TopK;
+        use std::sync::Arc;
+
+        let n = self.n;
+        let r = self.r;
+        (0..self.workers)
+            .map(|_| -> std::sync::Arc<dyn crate::quant::Compressor> {
+                match self.scheme {
+                    SchemeKind::Ndsc => Arc::new(SubspaceCodec::new(
+                        self.frame.build(n, rng),
+                        EmbedKind::NearDemocratic,
+                        CodecMode::Deterministic,
+                        r,
+                    )),
+                    SchemeKind::NdscDithered => Arc::new(SubspaceCodec::new(
+                        self.frame.build(n, rng),
+                        EmbedKind::NearDemocratic,
+                        CodecMode::Dithered,
+                        r,
+                    )),
+                    SchemeKind::Dsc => Arc::new(SubspaceCodec::new(
+                        self.frame.build(n, rng),
+                        EmbedKind::Democratic,
+                        CodecMode::Deterministic,
+                        r,
+                    )),
+                    SchemeKind::DscDithered => Arc::new(SubspaceCodec::new(
+                        self.frame.build(n, rng),
+                        EmbedKind::Democratic,
+                        CodecMode::Dithered,
+                        r,
+                    )),
+                    SchemeKind::Naive => Arc::new(NaiveUniform::new(n, r)),
+                    SchemeKind::StandardDither => Arc::new(StandardDither::new(n, r)),
+                    SchemeKind::Qsgd => {
+                        Arc::new(Qsgd::new(n, (r.ceil() as usize).saturating_sub(1).max(1)))
+                    }
+                    SchemeKind::Sign => Arc::new(SignQuantizer::new(n)),
+                    SchemeKind::Ternary => Arc::new(Ternary::new(n)),
+                    SchemeKind::TopK => {
+                        let k = (crate::quant::budget_bits(n, r) / 8).clamp(1, n);
+                        Arc::new(TopK::new(n, k, 8))
+                    }
+                    SchemeKind::RandK => {
+                        let k = crate::quant::budget_bits(n, r).clamp(1, n);
+                        Arc::new(RandK::new(n, k, 1).unbiased())
+                    }
+                    SchemeKind::None => Arc::new(Fp32Passthrough { n }),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Identity "compressor" for the unquantized reference runs: 32 bits per
+/// dimension of payload (so the traffic accounting stays meaningful).
+pub struct Fp32Passthrough {
+    pub n: usize,
+}
+
+impl crate::quant::Compressor for Fp32Passthrough {
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        32.0
+    }
+
+    fn compress(
+        &self,
+        y: &[f32],
+        _rng: &mut crate::linalg::rng::Rng,
+    ) -> crate::quant::Compressed {
+        let mut w = crate::quant::bitpack::BitWriter::with_capacity_bits(32 * y.len());
+        for &v in y {
+            w.write_f32(v);
+        }
+        crate::quant::Compressed {
+            n: self.n,
+            bytes: w.into_bytes(),
+            payload_bits: 32 * self.n,
+            side_bits: 0,
+        }
+    }
+
+    fn decompress(&self, msg: &crate::quant::Compressed) -> Vec<f32> {
+        let mut r = crate::quant::bitpack::BitReader::new(&msg.bytes);
+        (0..self.n).map(|_| r.read_f32()).collect()
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+    use crate::quant::Compressor;
+
+    #[test]
+    fn parse_roundtrip() {
+        let args: Vec<String> =
+            ["n=116", "workers=4", "r=0.5", "scheme=ndsc-dith", "frame=haar", "rounds=300", "seed=7"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let cfg = RunConfig::parse_args(&args).unwrap();
+        assert_eq!(cfg.n, 116);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.r, 0.5);
+        assert_eq!(cfg.scheme, SchemeKind::NdscDithered);
+        assert_eq!(cfg.frame, FrameKind::Orthonormal);
+        assert_eq!(cfg.rounds, 300);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(RunConfig::parse_args(&["nope".into()]).is_err());
+        assert!(RunConfig::parse_args(&["scheme=bogus".into()]).is_err());
+        assert!(RunConfig::parse_args(&["n=0".into()]).is_err());
+    }
+
+    #[test]
+    fn builds_all_schemes() {
+        let mut rng = Rng::seed_from(1);
+        for scheme in [
+            SchemeKind::Ndsc,
+            SchemeKind::NdscDithered,
+            SchemeKind::Dsc,
+            SchemeKind::DscDithered,
+            SchemeKind::Naive,
+            SchemeKind::StandardDither,
+            SchemeKind::Qsgd,
+            SchemeKind::Sign,
+            SchemeKind::Ternary,
+            SchemeKind::TopK,
+            SchemeKind::RandK,
+            SchemeKind::None,
+        ] {
+            let cfg = RunConfig { scheme, n: 32, workers: 2, r: 2.0, ..Default::default() };
+            let comps = cfg.build_compressors(&mut rng);
+            assert_eq!(comps.len(), 2);
+            // smoke: roundtrip a vector
+            let y: Vec<f32> = (0..32).map(|i| (i as f32) - 16.0).collect();
+            let msg = comps[0].compress(&y, &mut rng);
+            let yhat = comps[0].decompress(&msg);
+            assert_eq!(yhat.len(), 32, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn fp32_passthrough_is_lossless() {
+        let mut rng = Rng::seed_from(2);
+        let c = Fp32Passthrough { n: 10 };
+        let y: Vec<f32> = (0..10).map(|_| rng.gaussian_cubed()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        assert_eq!(y, yhat);
+    }
+}

@@ -1,0 +1,84 @@
+//! Run metrics: per-round loss, traffic, wall-clock; CSV export for the
+//! figure harness and EXPERIMENTS.md.
+
+use std::time::Duration;
+
+/// One consensus round.
+#[derive(Clone, Debug)]
+pub struct RoundMetrics {
+    pub round: u64,
+    /// Global objective value (server-side eval of the current iterate).
+    pub value: f32,
+    /// Mean of worker-reported local losses (cheap proxy when the global
+    /// objective is expensive to evaluate, e.g. the transformer).
+    pub mean_local_value: f32,
+    /// Total uplink payload bits this round (all workers).
+    pub payload_bits: usize,
+    pub wall: Duration,
+}
+
+/// Full run log.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub rounds: Vec<RoundMetrics>,
+    pub total_payload_bits: usize,
+    pub total_overhead_bits: usize,
+    pub rejected_messages: usize,
+    pub final_iterate: Vec<f32>,
+}
+
+impl RunMetrics {
+    pub fn final_value(&self) -> f32 {
+        self.rounds.last().map(|r| r.value).unwrap_or(f32::NAN)
+    }
+
+    /// Bits per dimension per worker per round, averaged over the run.
+    pub fn mean_rate(&self, n: usize, workers: usize) -> f32 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.total_payload_bits as f32 / (n * workers * self.rounds.len()) as f32
+    }
+
+    /// CSV dump: `round,value,mean_local_value,payload_bits,wall_us`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,value,mean_local_value,payload_bits,wall_us\n");
+        for r in &self.rounds {
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.round,
+                r.value,
+                r.mean_local_value,
+                r.payload_bits,
+                r.wall.as_micros()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_rate() {
+        let mut m = RunMetrics::default();
+        for i in 0..4u64 {
+            m.rounds.push(RoundMetrics {
+                round: i,
+                value: 1.0 / (i + 1) as f32,
+                mean_local_value: 0.0,
+                payload_bits: 100,
+                wall: Duration::from_micros(5),
+            });
+        }
+        m.total_payload_bits = 400;
+        // n=10, workers=2, 4 rounds -> 400/(10*2*4) = 5 bits/dim
+        assert!((m.mean_rate(10, 2) - 5.0).abs() < 1e-6);
+        let csv = m.to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("round,"));
+        assert!((m.final_value() - 0.25).abs() < 1e-6);
+    }
+}

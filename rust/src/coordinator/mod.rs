@@ -1,0 +1,90 @@
+//! L3 distributed runtime: a parameter server and `m` workers exchanging
+//! bit-budgeted gradient messages over byte-accounted channels (§4.3,
+//! Fig. 4 of the paper).
+//!
+//! The topology is the paper's: per round the server broadcasts the
+//! iterate, every worker computes a local (mini-batch) subgradient from its
+//! private shard, encodes it with its own `(E, D)` pair under the strict
+//! `⌊nR⌋`-bit budget, and the server decodes, averages (consensus step),
+//! steps and projects. The uplink — the constrained direction in the paper
+//! — flows through [`channel::AccountedChannel`]s that reject over-budget
+//! payloads and tally every byte.
+//!
+//! Workers run on `std::thread` (this image has no tokio); the gradient
+//! source is pluggable ([`worker::GradSource`]) so the same loop drives
+//! pure-Rust objectives and PJRT-compiled transformer workers
+//! (`examples/train_transformer.rs`).
+
+pub mod channel;
+pub mod config;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+pub mod worker;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::linalg::rng::Rng;
+use crate::quant::Compressor;
+
+use channel::AccountedSender;
+use config::RunConfig;
+use metrics::RunMetrics;
+use protocol::{Broadcast, Upload};
+use worker::GradSource;
+
+/// Run a full distributed job: spawns one thread per worker, runs the
+/// server loop on the calling thread, returns the metrics log.
+///
+/// `sources[i]` is worker `i`'s private gradient source; `compressors[i]`
+/// its codec (shared by value with the server for decoding — the frame
+/// randomness is common randomness established at setup, as in the paper).
+pub fn run_distributed(
+    cfg: &RunConfig,
+    x0: Vec<f32>,
+    sources: Vec<Box<dyn GradSource>>,
+    compressors: Vec<Arc<dyn Compressor>>,
+    eval: impl FnMut(&[f32]) -> f32,
+) -> RunMetrics {
+    let m = sources.len();
+    assert_eq!(m, cfg.workers);
+    assert_eq!(compressors.len(), m);
+    for c in &compressors {
+        assert_eq!(c.n(), cfg.n, "compressor dim mismatch");
+    }
+
+    // Uplink: workers -> server, budget-enforced + byte-accounted.
+    let (up_tx, up_rx) = mpsc::channel::<Upload>();
+    let budget_bits = crate::quant::budget_bits(cfg.n, cfg.r);
+    let uplink = AccountedSender::new(up_tx, Some(budget_bits));
+
+    // Downlinks: server -> each worker (broadcast is m sends).
+    let mut down_txs = Vec::with_capacity(m);
+    let mut handles = Vec::with_capacity(m);
+    let mut root_rng = Rng::seed_from(cfg.seed ^ 0xD15C0);
+    for (i, (mut source, comp)) in sources.into_iter().zip(compressors.iter().cloned()).enumerate()
+    {
+        let (down_tx, down_rx) = mpsc::channel::<Broadcast>();
+        down_txs.push(down_tx);
+        let uplink = uplink.clone();
+        let mut wrng = root_rng.fork(i as u64);
+        handles.push(std::thread::spawn(move || {
+            worker::worker_loop(i, &mut *source, comp.as_ref(), down_rx, uplink, &mut wrng);
+        }));
+    }
+
+    // Drop the prototype sender: only worker clones remain, so a dead
+    // worker is observable as a closed channel rather than a deadlock.
+    let traffic = uplink.counter();
+    drop(uplink);
+
+    let metrics = server::server_loop(cfg, x0, &down_txs, &up_rx, &compressors, traffic, eval);
+
+    // Downlink senders drop here => workers see a closed channel and exit.
+    drop(down_txs);
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+    metrics
+}

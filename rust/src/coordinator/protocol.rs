@@ -1,0 +1,81 @@
+//! Wire messages between the parameter server and workers.
+//!
+//! The in-process transport passes these structs directly, but byte
+//! accounting uses the *serialized* sizes ([`WireSize`]) so the metrics
+//! reflect what a network deployment would move. The uplink payload is a
+//! [`crate::quant::Compressed`] — already bit-exact — plus a small header.
+
+use crate::quant::Compressed;
+
+/// Downlink: server → worker. The broadcast iterate is sent at full
+/// precision, as in the paper ("the worker receives the current iterate") —
+//  only the uplink is budget-constrained.
+#[derive(Clone, Debug)]
+pub struct Broadcast {
+    pub round: u64,
+    pub iterate: Vec<f32>,
+}
+
+/// Uplink: worker → server, carrying the quantized gradient.
+#[derive(Debug)]
+pub struct Upload {
+    pub round: u64,
+    pub worker: usize,
+    pub msg: Compressed,
+    /// Local objective value at the broadcast iterate (f32 side channel,
+    /// used for metrics only).
+    pub local_value: f32,
+}
+
+/// Serialized size of a message, in bits, as it would cross a network.
+pub trait WireSize {
+    /// Bits subject to the per-round budget (quantized payload).
+    fn payload_bits(&self) -> usize;
+    /// Bits of headers/side info not counted against the budget.
+    fn overhead_bits(&self) -> usize;
+}
+
+impl WireSize for Broadcast {
+    fn payload_bits(&self) -> usize {
+        0 // downlink is unconstrained in the paper's model
+    }
+
+    fn overhead_bits(&self) -> usize {
+        64 + 32 * self.iterate.len()
+    }
+}
+
+impl WireSize for Upload {
+    fn payload_bits(&self) -> usize {
+        self.msg.payload_bits
+    }
+
+    fn overhead_bits(&self) -> usize {
+        // round + worker id + side info + local value
+        64 + 32 + self.msg.side_bits + 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_sizes_reflect_compressed() {
+        let up = Upload {
+            round: 3,
+            worker: 1,
+            msg: Compressed { n: 100, bytes: vec![0; 25], payload_bits: 200, side_bits: 32 },
+            local_value: 1.0,
+        };
+        assert_eq!(up.payload_bits(), 200);
+        assert_eq!(up.overhead_bits(), 64 + 32 + 32 + 32);
+    }
+
+    #[test]
+    fn broadcast_payload_free() {
+        let b = Broadcast { round: 0, iterate: vec![0.0; 10] };
+        assert_eq!(b.payload_bits(), 0);
+        assert_eq!(b.overhead_bits(), 64 + 320);
+    }
+}

@@ -1,0 +1,122 @@
+//! Worker loop: receive the broadcast iterate, evaluate the local
+//! (sub)gradient, encode under the bit budget, upload.
+
+use std::sync::mpsc::Receiver;
+
+use crate::coordinator::channel::{AccountedSender, ChannelError};
+use crate::coordinator::protocol::{Broadcast, Upload};
+use crate::linalg::rng::Rng;
+use crate::quant::Compressor;
+
+/// A worker's private gradient source. Implementations: pure-Rust dataset
+/// shards ([`DatasetGradSource`]) and PJRT-compiled models (the transformer
+/// example builds one over [`crate::runtime::Artifact`]).
+pub trait GradSource: Send {
+    fn dim(&self) -> usize;
+    /// Write a local (mini-batch) subgradient at `x` into `out`; return the
+    /// local objective value (metrics side channel).
+    fn grad(&mut self, x: &[f32], out: &mut [f32]) -> f32;
+}
+
+/// Minibatch gradient source over a private [`DatasetObjective`] shard.
+pub struct DatasetGradSource {
+    pub obj: crate::opt::objectives::DatasetObjective,
+    /// 0 = full local gradient.
+    pub batch: usize,
+    pub rng: Rng,
+}
+
+impl GradSource for DatasetGradSource {
+    fn dim(&self) -> usize {
+        self.obj.dim()
+    }
+
+    fn grad(&mut self, x: &[f32], out: &mut [f32]) -> f32 {
+        if self.batch == 0 || self.batch >= self.obj.m {
+            self.obj.gradient(x, out);
+        } else {
+            let batch = self.rng.sample_indices(self.obj.m, self.batch);
+            self.obj.minibatch_gradient(x, Some(&batch), out);
+        }
+        self.obj.value(x)
+    }
+}
+
+/// The worker thread body: loops until the downlink closes.
+pub fn worker_loop(
+    id: usize,
+    source: &mut dyn GradSource,
+    compressor: &dyn Compressor,
+    downlink: Receiver<Broadcast>,
+    uplink: AccountedSender<Upload>,
+    rng: &mut Rng,
+) {
+    let n = source.dim();
+    let mut g = vec![0.0f32; n];
+    while let Ok(bcast) = downlink.recv() {
+        let local_value = source.grad(&bcast.iterate, &mut g);
+        let msg = compressor.compress(&g, rng);
+        match uplink.send(Upload { round: bcast.round, worker: id, msg, local_value }) {
+            Ok(()) => {}
+            Err(ChannelError::OverBudget { payload_bits, budget_bits }) => {
+                // A correct compressor never trips this; it is the runtime
+                // guard against mis-configured schemes.
+                panic!(
+                    "worker {id}: compressor '{}' exceeded budget ({payload_bits} > {budget_bits} bits)",
+                    compressor.name()
+                );
+            }
+            Err(ChannelError::Disconnected(_)) => break, // server gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{planted_regression, Tail};
+    use crate::quant::ndsc::Ndsc;
+    use std::sync::mpsc;
+
+    #[test]
+    fn worker_responds_to_each_broadcast() {
+        let mut rng = Rng::seed_from(1);
+        let (obj, _) = planted_regression(20, 8, Tail::Gaussian, Tail::Gaussian, 0.0, &mut rng);
+        let mut source = DatasetGradSource { obj, batch: 0, rng: Rng::seed_from(2) };
+        let comp = Ndsc::hadamard(8, 2.0, &mut rng);
+        let (down_tx, down_rx) = mpsc::channel();
+        let (up_tx, up_rx) = mpsc::channel();
+        let uplink = AccountedSender::new(up_tx, Some(crate::quant::budget_bits(8, 2.0)));
+        let mut wrng = Rng::seed_from(3);
+        let handle = std::thread::spawn(move || {
+            worker_loop(7, &mut source, &comp, down_rx, uplink, &mut wrng);
+        });
+        for round in 0..5u64 {
+            down_tx.send(Broadcast { round, iterate: vec![0.1; 8] }).unwrap();
+            let up = up_rx.recv().unwrap();
+            assert_eq!(up.round, round);
+            assert_eq!(up.worker, 7);
+            assert!(up.msg.payload_bits <= 16);
+            assert!(up.local_value.is_finite());
+        }
+        drop(down_tx);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn dataset_source_full_vs_minibatch() {
+        let mut rng = Rng::seed_from(4);
+        let (obj, _) = planted_regression(30, 6, Tail::Gaussian, Tail::Gaussian, 0.0, &mut rng);
+        let mut full = DatasetGradSource { obj: obj.clone(), batch: 0, rng: Rng::seed_from(5) };
+        let x = vec![0.2f32; 6];
+        let mut g1 = vec![0.0f32; 6];
+        full.grad(&x, &mut g1);
+        let mut want = vec![0.0f32; 6];
+        obj.gradient(&x, &mut want);
+        assert_eq!(g1, want);
+        let mut mini = DatasetGradSource { obj, batch: 10, rng: Rng::seed_from(6) };
+        let mut g2 = vec![0.0f32; 6];
+        mini.grad(&x, &mut g2);
+        assert!(g2.iter().all(|v| v.is_finite()));
+    }
+}

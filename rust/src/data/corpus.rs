@@ -1,0 +1,144 @@
+//! Byte-level tiny corpus for the end-to-end transformer example
+//! (Fig. 3b's non-convex workload, adapted per DESIGN.md §3).
+//!
+//! A deterministic generator emits structured pseudo-English — Markovian
+//! word soup over a small vocabulary with punctuation — giving the language
+//! model real statistical structure (so the loss curve *moves*) without any
+//! external data. Batching produces `(tokens, next-token targets)` pairs.
+
+use crate::linalg::rng::Rng;
+
+pub const VOCAB: usize = 64;
+
+const WORDS: &[&str] = &[
+    "the", "a", "of", "and", "to", "in", "is", "that", "it", "was", "for", "on", "are", "as",
+    "with", "his", "they", "be", "at", "one", "have", "this", "from", "or", "had", "by", "hot",
+    "word", "but", "what", "some", "we", "can", "out", "other", "were", "all", "there", "when",
+    "up", "use", "your", "how", "said", "an", "each", "she",
+];
+
+/// Map a byte to the token alphabet: lowercase letters, space and a few
+/// punctuation marks; everything else folds onto space.
+fn tokenize_byte(b: u8) -> u8 {
+    match b {
+        b'a'..=b'z' => b - b'a' + 1,       // 1..26
+        b'A'..=b'Z' => b - b'A' + 1,       // fold case
+        b'.' => 27,
+        b',' => 28,
+        b'\n' => 29,
+        b'0'..=b'9' => 30 + (b - b'0') % 8, // 30..37
+        _ => 0,                             // space
+    }
+}
+
+/// Generate `len` tokens of pseudo-English.
+pub fn generate_tokens(len: usize, rng: &mut Rng) -> Vec<u8> {
+    let mut text = String::with_capacity(len * 2);
+    while text.len() < len + 16 {
+        let sentence_len = 4 + rng.below(10);
+        for w in 0..sentence_len {
+            if w > 0 {
+                text.push(' ');
+            }
+            text.push_str(WORDS[rng.below(WORDS.len())]);
+        }
+        text.push_str(if rng.bernoulli(0.8) { ". " } else { ",\n" });
+    }
+    text.bytes().take(len).map(tokenize_byte).collect()
+}
+
+/// A corpus with sequential batching for next-token prediction.
+pub struct Corpus {
+    pub tokens: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn synthetic(len: usize, rng: &mut Rng) -> Self {
+        Corpus { tokens: generate_tokens(len, rng) }
+    }
+
+    /// Sample a batch of `(inputs, targets)` windows of length `seq`.
+    /// Returned as flat `batch×seq` u32 arrays (the dtype the HLO expects).
+    pub fn batch(&self, batch: usize, seq: usize, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+        assert!(self.tokens.len() > seq + 1);
+        let mut xs = Vec::with_capacity(batch * seq);
+        let mut ys = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = rng.below(self.tokens.len() - seq - 1);
+            for t in 0..seq {
+                xs.push(self.tokens[start + t] as u32);
+                ys.push(self.tokens[start + t + 1] as u32);
+            }
+        }
+        (xs, ys)
+    }
+
+    /// Shard the corpus non-iid: worker `i` sees a contiguous region (so
+    /// token statistics differ across workers, mimicking the paper's
+    /// label-sharded CIFAR split).
+    pub fn shard(&self, m_workers: usize) -> Vec<Corpus> {
+        let chunk = self.tokens.len() / m_workers;
+        (0..m_workers)
+            .map(|i| Corpus { tokens: self.tokens[i * chunk..(i + 1) * chunk].to_vec() })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut rng = Rng::seed_from(1);
+        let toks = generate_tokens(5000, &mut rng);
+        assert_eq!(toks.len(), 5000);
+        assert!(toks.iter().all(|&t| (t as usize) < VOCAB));
+    }
+
+    #[test]
+    fn tokens_have_structure() {
+        // Letter bigram entropy of structured text is far below uniform.
+        let mut rng = Rng::seed_from(2);
+        let toks = generate_tokens(20_000, &mut rng);
+        let mut counts = vec![0u32; VOCAB];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        let total: u32 = counts.iter().sum();
+        let entropy: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total as f64;
+                -p * p.log2()
+            })
+            .sum();
+        assert!(entropy < 4.6, "entropy {entropy} too close to uniform(6 bits)");
+        assert!(entropy > 2.0);
+    }
+
+    #[test]
+    fn batches_are_shifted_pairs() {
+        let mut rng = Rng::seed_from(3);
+        let c = Corpus::synthetic(2000, &mut rng);
+        let (xs, ys) = c.batch(4, 16, &mut rng);
+        assert_eq!(xs.len(), 64);
+        assert_eq!(ys.len(), 64);
+        // within each window, ys[t] == xs[t+1]
+        for bidx in 0..4 {
+            for t in 0..15 {
+                assert_eq!(ys[bidx * 16 + t], xs[bidx * 16 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn shards_partition_and_differ() {
+        let mut rng = Rng::seed_from(4);
+        let c = Corpus::synthetic(9000, &mut rng);
+        let shards = c.shard(3);
+        assert_eq!(shards.len(), 3);
+        assert!(shards.iter().all(|s| s.tokens.len() == 3000));
+    }
+}

@@ -1,0 +1,202 @@
+//! MNIST-like synthetic digits — the offline substitute for the real
+//! dataset used in Figs. 1d, 2c, 2d (see DESIGN.md §3).
+//!
+//! If a real MNIST IDX file pair is present (`MNIST_DIR` env var or
+//! `data/mnist/`), it is loaded; otherwise a deterministic generator
+//! produces 28×28 grayscale "digits": class-specific stroke templates
+//! (vertical bar for "1", ring for "0") plus elastic jitter and pixel
+//! noise. The substitution preserves what the experiments need — 784-dim
+//! sparse non-negative features, two visually distinct, linearly separable
+//! classes, heavy-tailed gradient spectra.
+
+use crate::linalg::rng::Rng;
+use crate::opt::objectives::{DatasetObjective, Loss};
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+
+/// A binary (0-vs-1) MNIST-like dataset with ±1 labels.
+pub struct BinaryDigits {
+    /// Row-major `m × 784`, pixel range [0, 1].
+    pub x: Vec<f32>,
+    /// Labels in {−1 (digit 0), +1 (digit 1)}.
+    pub y: Vec<f32>,
+    pub m: usize,
+}
+
+/// Render a "0": a ring centered in the image.
+fn render_zero(img: &mut [f32], rng: &mut Rng) {
+    let cx = 13.5 + rng.gaussian_f32() * 1.2;
+    let cy = 13.5 + rng.gaussian_f32() * 1.2;
+    let r_out = 8.0 + rng.gaussian_f32() * 0.9;
+    let r_in = r_out - 2.5 - rng.uniform_f32();
+    for i in 0..SIDE {
+        for j in 0..SIDE {
+            let d = (((i as f32 - cy).powi(2) + (j as f32 - cx).powi(2)) as f32).sqrt();
+            if d <= r_out && d >= r_in.max(1.0) {
+                img[i * SIDE + j] = (0.75 + 0.25 * rng.uniform_f32()).min(1.0);
+            }
+        }
+    }
+}
+
+/// Render a "1": a near-vertical stroke.
+fn render_one(img: &mut [f32], rng: &mut Rng) {
+    let x0 = 13.5 + rng.gaussian_f32() * 1.5;
+    let slant = rng.gaussian_f32() * 0.15;
+    for i in 4..24 {
+        let x = x0 + slant * (i as f32 - 14.0);
+        let j0 = x.round() as i64;
+        for dj in -1..=1i64 {
+            let j = j0 + dj;
+            if (0..SIDE as i64).contains(&j) {
+                let v = if dj == 0 { 0.9 } else { 0.5 };
+                img[i * SIDE + j as usize] = (v + 0.1 * rng.uniform_f32()).min(1.0);
+            }
+        }
+    }
+}
+
+/// Generate `m` samples, alternating classes, with `noise` pixel noise.
+pub fn generate_binary(m: usize, noise: f32, rng: &mut Rng) -> BinaryDigits {
+    let mut x = vec![0.0f32; m * DIM];
+    let mut y = vec![0.0f32; m];
+    for s in 0..m {
+        let img = &mut x[s * DIM..(s + 1) * DIM];
+        let is_one = s % 2 == 1;
+        if is_one {
+            render_one(img, rng);
+            y[s] = 1.0;
+        } else {
+            render_zero(img, rng);
+            y[s] = -1.0;
+        }
+        if noise > 0.0 {
+            for v in img.iter_mut() {
+                if rng.bernoulli(0.02) {
+                    *v = (*v + noise * rng.uniform_f32()).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+    BinaryDigits { x, y, m }
+}
+
+impl BinaryDigits {
+    /// Hinge-loss SVM objective over this dataset (Fig. 2c/2d).
+    pub fn svm_objective(&self) -> DatasetObjective {
+        DatasetObjective::new(self.x.clone(), self.y.clone(), self.m, DIM, Loss::Hinge, 0.0)
+    }
+
+    /// Ridge-regression objective `½‖y − Xw‖² + reg/2·‖w‖²` (Fig. 1d).
+    pub fn ridge_objective(&self, reg: f32) -> DatasetObjective {
+        DatasetObjective::new(self.x.clone(), self.y.clone(), self.m, DIM, Loss::Square, reg)
+    }
+
+    /// Split into train/test.
+    pub fn split(&self, train: usize) -> (BinaryDigits, BinaryDigits) {
+        assert!(train < self.m);
+        let tr = BinaryDigits {
+            x: self.x[..train * DIM].to_vec(),
+            y: self.y[..train].to_vec(),
+            m: train,
+        };
+        let te = BinaryDigits {
+            x: self.x[train * DIM..].to_vec(),
+            y: self.y[train..].to_vec(),
+            m: self.m - train,
+        };
+        (tr, te)
+    }
+}
+
+/// Try to load real MNIST (IDX format) from `dir`; returns `None` when the
+/// files are absent (the usual case on this offline image).
+pub fn load_real_mnist_binary(dir: &str, m_cap: usize) -> Option<BinaryDigits> {
+    let imgs = std::fs::read(format!("{dir}/train-images-idx3-ubyte")).ok()?;
+    let lbls = std::fs::read(format!("{dir}/train-labels-idx1-ubyte")).ok()?;
+    if imgs.len() < 16 || lbls.len() < 8 {
+        return None;
+    }
+    let count = u32::from_be_bytes(imgs[4..8].try_into().ok()?) as usize;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for i in 0..count {
+        let lbl = lbls[8 + i];
+        if lbl > 1 {
+            continue; // keep only digits 0 and 1
+        }
+        let off = 16 + i * DIM;
+        if off + DIM > imgs.len() {
+            break;
+        }
+        x.extend(imgs[off..off + DIM].iter().map(|&p| p as f32 / 255.0));
+        y.push(if lbl == 1 { 1.0 } else { -1.0 });
+        if y.len() >= m_cap {
+            break;
+        }
+    }
+    if y.is_empty() {
+        return None;
+    }
+    let m = y.len();
+    Some(BinaryDigits { x, y, m })
+}
+
+/// Real MNIST if available, synthetic otherwise.
+pub fn binary_digits(m: usize, rng: &mut Rng) -> BinaryDigits {
+    let dir = std::env::var("MNIST_DIR").unwrap_or_else(|_| "data/mnist".into());
+    load_real_mnist_binary(&dir, m).unwrap_or_else(|| generate_binary(m, 0.3, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::norm2;
+
+    #[test]
+    fn classes_are_linearly_separable() {
+        let mut rng = Rng::seed_from(1);
+        let data = generate_binary(200, 0.3, &mut rng);
+        // Template difference is a separating direction: ones have center
+        // column mass, zeros have ring mass.
+        let obj = data.svm_objective();
+        // Train a quick perceptron to verify separability.
+        let mut w = vec![0.0f32; DIM];
+        for _ in 0..50 {
+            for s in 0..data.m {
+                let xi = &data.x[s * DIM..(s + 1) * DIM];
+                let pred: f32 = xi.iter().zip(&w).map(|(&a, &b)| a * b).sum();
+                if pred * data.y[s] <= 0.0 {
+                    for (wj, &xj) in w.iter_mut().zip(xi) {
+                        *wj += data.y[s] * xj;
+                    }
+                }
+            }
+        }
+        assert!(obj.classification_error(&w) < 0.05);
+    }
+
+    #[test]
+    fn pixels_sparse_and_in_range() {
+        let mut rng = Rng::seed_from(2);
+        let data = generate_binary(50, 0.3, &mut rng);
+        for s in 0..data.m {
+            let img = &data.x[s * DIM..(s + 1) * DIM];
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let nz = img.iter().filter(|&&v| v > 0.0).count();
+            assert!(nz > 10 && nz < DIM / 2, "nz={nz}");
+        }
+        assert!(norm2(&data.x) > 0.0);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let mut rng = Rng::seed_from(3);
+        let data = generate_binary(100, 0.1, &mut rng);
+        let (tr, te) = data.split(80);
+        assert_eq!(tr.m, 80);
+        assert_eq!(te.m, 20);
+        assert_eq!(tr.x.len(), 80 * DIM);
+    }
+}

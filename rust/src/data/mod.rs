@@ -1,0 +1,8 @@
+//! Data substrate: synthetic generators matching the paper's simulation
+//! setups, an MNIST-like digit generator (substitute for the real dataset,
+//! which is not available offline — see DESIGN.md §3), and a byte-level
+//! corpus for the end-to-end transformer example.
+
+pub mod corpus;
+pub mod mnist_like;
+pub mod synthetic;

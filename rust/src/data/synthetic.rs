@@ -1,0 +1,218 @@
+//! Synthetic problem generators from the paper's experiments.
+//!
+//! * Planted regression `b = A·x*` with Gaussian³ or Student-t heavy-tailed
+//!   entries (Figs. 1b, 3a, 5, 6);
+//! * Two-Gaussian SVM classes (Figs. 2a, 2b);
+//! * Worker-sharded versions for the parameter-server experiments.
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::matvec;
+use crate::opt::objectives::{DatasetObjective, Loss};
+
+/// Heavy-tail flavour of the planted model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tail {
+    /// `N(0,1)` entries.
+    Gaussian,
+    /// `N(0,1)³` entries (Fig. 1a/1b/5).
+    GaussianCubed,
+    /// Student-t, df = 1 (Fig. 3a/6).
+    StudentT1,
+}
+
+impl Tail {
+    pub fn sample(self, rng: &mut Rng) -> f32 {
+        match self {
+            Tail::Gaussian => rng.gaussian_f32(),
+            Tail::GaussianCubed => rng.gaussian_cubed(),
+            Tail::StudentT1 => rng.student_t(1),
+        }
+    }
+}
+
+/// Planted least squares: `A (m×n)` with `a_tail` entries, `x* ~ x_tail`,
+/// `b = A·x*`. Returns `(objective, x*)`.
+pub fn planted_regression(
+    m: usize,
+    n: usize,
+    a_tail: Tail,
+    x_tail: Tail,
+    reg: f32,
+    rng: &mut Rng,
+) -> (DatasetObjective, Vec<f32>) {
+    let a: Vec<f32> = (0..m * n).map(|_| a_tail.sample(rng)).collect();
+    let x_star: Vec<f32> = (0..n).map(|_| x_tail.sample(rng)).collect();
+    let mut b = vec![0.0f32; m];
+    matvec(&a, m, n, &x_star, &mut b);
+    (DatasetObjective::new(a, b, m, n, Loss::Square, reg), x_star)
+}
+
+/// Worker-sharded planted regression: `m_workers` shards of `s` local
+/// points each, all consistent with one global `x*` (the Fig. 3a / App. I
+/// setup: `x* ~ Student-t`, `A ~ N(0,1)` when `student_t`; else Gaussian³).
+pub fn planted_regression_shards(
+    m_workers: usize,
+    s: usize,
+    n: usize,
+    loss: Loss,
+    rng: &mut Rng,
+    student_t: bool,
+) -> (Vec<DatasetObjective>, Vec<f32>) {
+    let x_tail = if student_t { Tail::StudentT1 } else { Tail::GaussianCubed };
+    let a_tail = if student_t { Tail::Gaussian } else { Tail::GaussianCubed };
+    let x_star: Vec<f32> = (0..n).map(|_| x_tail.sample(rng)).collect();
+    let shards = (0..m_workers)
+        .map(|_| {
+            let a: Vec<f32> = (0..s * n).map(|_| a_tail.sample(rng)).collect();
+            let mut b = vec![0.0f32; s];
+            matvec(&a, s, n, &x_star, &mut b);
+            DatasetObjective::new(a, b, s, n, loss, 0.0)
+        })
+        .collect();
+    (shards, x_star)
+}
+
+/// Two-Gaussian SVM data (Fig. 2a/2b): class `±1` drawn from
+/// `N(±sep·1, I_n)`. Returns a hinge-loss objective.
+pub fn two_gaussian_svm(m: usize, n: usize, sep: f32, rng: &mut Rng) -> DatasetObjective {
+    let mut a = vec![0.0f32; m * n];
+    let mut b = vec![0.0f32; m];
+    for i in 0..m {
+        let cls = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+        for j in 0..n {
+            a[i * n + j] = rng.gaussian_f32() + cls * sep;
+        }
+        b[i] = cls;
+    }
+    DatasetObjective::new(a, b, m, n, Loss::Hinge, 0.0)
+}
+
+/// Non-i.i.d. label-sharded split: each worker receives samples from at
+/// most `classes_per_worker` classes (the Fig. 3b / Fig. 7 federated
+/// setup). `labels[i] ∈ 0..n_classes`.
+pub fn non_iid_shards(
+    n_samples: usize,
+    labels: &[usize],
+    n_classes: usize,
+    m_workers: usize,
+    classes_per_worker: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert_eq!(labels.len(), n_samples);
+    // Assign each worker a set of classes (round-robin over a shuffled
+    // class list so every class is covered).
+    let mut class_order: Vec<usize> = (0..n_classes).collect();
+    for i in (1..n_classes).rev() {
+        let j = rng.below(i + 1);
+        class_order.swap(i, j);
+    }
+    let mut worker_classes: Vec<Vec<usize>> = vec![Vec::new(); m_workers];
+    let mut k = 0;
+    while worker_classes.iter().any(|w| w.len() < classes_per_worker) {
+        for wc in worker_classes.iter_mut() {
+            if wc.len() < classes_per_worker {
+                wc.push(class_order[k % n_classes]);
+                k += 1;
+            }
+        }
+    }
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); m_workers];
+    for (i, &lbl) in labels.iter().enumerate() {
+        // among workers holding this class, pick one at random
+        let holders: Vec<usize> =
+            (0..m_workers).filter(|&w| worker_classes[w].contains(&lbl)).collect();
+        if holders.is_empty() {
+            shards[rng.below(m_workers)].push(i);
+        } else {
+            shards[holders[rng.below(holders.len())]].push(i);
+        }
+    }
+    shards
+}
+
+/// Sanity metric used in tests: fraction of label mass in the modal class
+/// of a shard (≈ 1/classes_per_worker for non-iid, ≈ 1/n_classes for iid).
+pub fn shard_concentration(shard: &[usize], labels: &[usize], n_classes: usize) -> f32 {
+    if shard.is_empty() {
+        return 0.0;
+    }
+    let mut counts = vec![0usize; n_classes];
+    for &i in shard {
+        counts[labels[i]] += 1;
+    }
+    *counts.iter().max().unwrap() as f32 / shard.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::dot;
+
+    #[test]
+    fn planted_regression_has_zero_loss_at_x_star() {
+        let mut rng = Rng::seed_from(1);
+        let (obj, xs) = planted_regression(50, 10, Tail::GaussianCubed, Tail::Gaussian, 0.0, &mut rng);
+        assert!(obj.value(&xs) < 1e-4);
+    }
+
+    #[test]
+    fn shards_share_the_planted_model() {
+        let mut rng = Rng::seed_from(2);
+        let (shards, xs) = planted_regression_shards(5, 8, 12, Loss::Square, &mut rng, true);
+        for s in &shards {
+            assert!(s.value(&xs) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn two_gaussian_svm_is_roughly_separable() {
+        let mut rng = Rng::seed_from(3);
+        let obj = two_gaussian_svm(200, 30, 0.8, &mut rng);
+        // The oracle direction (all-ones) separates most points.
+        let w = vec![1.0f32; 30];
+        assert!(obj.classification_error(&w) < 0.1);
+    }
+
+    #[test]
+    fn non_iid_shards_are_concentrated() {
+        let mut rng = Rng::seed_from(4);
+        let n = 2000;
+        let n_classes = 10;
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(n_classes)).collect();
+        let shards = non_iid_shards(n, &labels, n_classes, 10, 2, &mut rng);
+        // all samples assigned exactly once
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, n);
+        // each shard is dominated by <= 2 classes
+        for s in &shards {
+            if s.len() < 20 {
+                continue;
+            }
+            let mut counts = vec![0usize; n_classes];
+            for &i in s {
+                counts[labels[i]] += 1;
+            }
+            let nonzero = counts.iter().filter(|&&c| c > 0).count();
+            assert!(nonzero <= 2, "shard has {nonzero} classes");
+        }
+    }
+
+    #[test]
+    fn student_t_tail_heavier_than_gaussian() {
+        let mut rng = Rng::seed_from(5);
+        let big_t = (0..20_000).filter(|_| Tail::StudentT1.sample(&mut rng).abs() > 5.0).count();
+        let big_g = (0..20_000).filter(|_| Tail::Gaussian.sample(&mut rng).abs() > 5.0).count();
+        assert!(big_t > big_g * 10, "t:{big_t} g:{big_g}");
+    }
+
+    #[test]
+    fn gaussian_generator_rows_have_expected_norm() {
+        let mut rng = Rng::seed_from(6);
+        let (obj, _) = planted_regression(30, 50, Tail::Gaussian, Tail::Gaussian, 0.0, &mut rng);
+        let mean_sq: f32 = (0..30)
+            .map(|i| dot(&obj.a[i * 50..(i + 1) * 50], &obj.a[i * 50..(i + 1) * 50]) / 50.0)
+            .sum::<f32>()
+            / 30.0;
+        assert!((mean_sq - 1.0).abs() < 0.15, "row E[a²]={mean_sq}");
+    }
+}

@@ -1,0 +1,214 @@
+//! Exact minimum-`l∞` embedding — the LP (5) of the paper.
+//!
+//! The paper solves `min ‖x‖∞ s.t. y = Sx` with CVX (simplex / interior
+//! point). This module is our CVX stand-in: it computes the same optimum to
+//! a tolerance via **bisection on the level `t`** combined with
+//! **alternating projections (POCS)** onto the two convex sets
+//!
+//! * the affine subspace `A = {x : Sx = y}` — projection
+//!   `x ← x − Sᵀ(SSᵀ)⁻¹(Sx − y)` (for Parseval frames `x − Sᵀ(Sx − y)`),
+//! * the box `B_t = {x : ‖x‖∞ ≤ t}` — coordinate clipping.
+//!
+//! `A ∩ B_t ≠ ∅` iff `t ≥ t* = min ‖x‖∞`, and POCS converges to a point of
+//! the intersection whenever it is non-empty, so bisection on `t` brackets
+//! `t*`. Cost per POCS sweep is one `Sᵀ`/`S` pair — `O(N log N)` for
+//! Hadamard frames — with the overall solve `O(log(1/ε))` sweeps heavier
+//! than the LV iteration; this is deliberately the *slow, exact* reference
+//! used in tests and in the Fig. 1c wall-clock comparison.
+
+use crate::linalg::frames::Frame;
+use crate::linalg::vecops::{dist2, norm2, norm_inf};
+
+/// Options for the exact solver.
+#[derive(Clone, Copy, Debug)]
+pub struct LinfOptions {
+    /// Relative bisection tolerance on the level `t`.
+    pub tol: f32,
+    /// POCS sweeps per feasibility probe.
+    pub pocs_iters: usize,
+    /// Relative feasibility slack: the probe accepts if the affine residual
+    /// after projection onto the box is below `feas_tol·‖y‖₂`.
+    pub feas_tol: f32,
+}
+
+impl Default for LinfOptions {
+    fn default() -> Self {
+        LinfOptions { tol: 1e-3, pocs_iters: 400, feas_tol: 1e-3 }
+    }
+}
+
+/// Result of the exact solve.
+#[derive(Clone, Debug)]
+pub struct LinfEmbedding {
+    /// Feasible point with `Sx = y` (exact to float error) and
+    /// `‖x‖∞ ≤ (1 + tol)·t*`.
+    pub x: Vec<f32>,
+    /// The certified level (upper bracket of the bisection).
+    pub level: f32,
+    /// Total POCS sweeps spent.
+    pub sweeps: usize,
+}
+
+/// Project `x` onto the affine set `{x : Sx = y}` (Parseval frames):
+/// `x ← x + Sᵀ(y − Sx)`.
+fn project_affine(frame: &dyn Frame, y: &[f32], x: &mut [f32], sx: &mut [f32], corr: &mut [f32]) {
+    frame.apply(x, sx);
+    for (s, &yy) in sx.iter_mut().zip(y) {
+        *s = yy - *s;
+    }
+    frame.adjoint(sx, corr);
+    for (xi, &c) in x.iter_mut().zip(corr.iter()) {
+        *xi += c;
+    }
+}
+
+/// Probe whether the level `t` is feasible: run POCS from `x0`, return the
+/// final iterate (in the box) and its affine residual.
+fn probe(
+    frame: &dyn Frame,
+    y: &[f32],
+    t: f32,
+    x: &mut Vec<f32>,
+    opts: &LinfOptions,
+) -> (f32, usize) {
+    let (n, big_n) = (frame.n(), frame.big_n());
+    let mut sx = vec![0.0f32; n];
+    let mut corr = vec![0.0f32; big_n];
+    let mut sweeps = 0;
+    let ny = norm2(y).max(1e-30);
+    for _ in 0..opts.pocs_iters {
+        sweeps += 1;
+        // Project onto the box first, then the affine set, and measure the
+        // box violation of the affine point: when the intersection is
+        // non-empty both distances go to zero.
+        for v in x.iter_mut() {
+            *v = v.clamp(-t, t);
+        }
+        project_affine(frame, y, x, &mut sx, &mut corr);
+        // Residual: how far outside the box is the affine-feasible point?
+        let overflow =
+            x.iter().map(|&v| (v.abs() - t).max(0.0) as f64).fold(0.0f64, |a, b| a.max(b)) as f32;
+        if overflow <= opts.feas_tol * ny / (big_n as f32).sqrt() {
+            return (overflow, sweeps);
+        }
+    }
+    let overflow =
+        x.iter().map(|&v| (v.abs() - t).max(0.0) as f64).fold(0.0f64, |a, b| a.max(b)) as f32;
+    (overflow, sweeps)
+}
+
+/// Solve `min ‖x‖∞ s.t. Sx = y` to tolerance. Only valid for Parseval
+/// frames (all frames the paper's experiments use).
+pub fn min_linf(frame: &dyn Frame, y: &[f32], opts: &LinfOptions) -> LinfEmbedding {
+    let (n, big_n) = (frame.n(), frame.big_n());
+    assert_eq!(y.len(), n);
+    assert!(frame.is_parseval(), "min_linf requires a Parseval frame");
+    // Bracket: the NDE x = S^T y is feasible, so t_hi = ||S^T y||_inf works;
+    // t_lo = ||y||_2 / sqrt(N) is the Parseval lower bound (Lemma 1, K_l=1).
+    let mut nde = vec![0.0f32; big_n];
+    frame.adjoint(y, &mut nde);
+    let mut t_hi = norm_inf(&nde);
+    let mut t_lo = norm2(y) / (big_n as f32).sqrt();
+    if t_hi == 0.0 {
+        return LinfEmbedding { x: vec![0.0; big_n], level: 0.0, sweeps: 0 };
+    }
+    let mut best = nde.clone();
+    let mut total_sweeps = 0;
+    // Warm-start each probe from the previous feasible point.
+    let mut x = nde.clone();
+    while t_hi - t_lo > opts.tol * t_hi {
+        let t_mid = 0.5 * (t_lo + t_hi);
+        let mut x_probe = x.clone();
+        let (overflow, sweeps) = probe(frame, y, t_mid, &mut x_probe, opts);
+        total_sweeps += sweeps;
+        if overflow <= opts.feas_tol * norm2(y).max(1e-30) / (big_n as f32).sqrt() {
+            // Feasible at t_mid: tighten the upper bracket, keep the point.
+            t_hi = t_mid;
+            best = x_probe.clone();
+            x = x_probe;
+        } else {
+            t_lo = t_mid;
+        }
+    }
+    // Final exactness polish on the incumbent.
+    let mut sx = vec![0.0f32; n];
+    let mut corr = vec![0.0f32; big_n];
+    project_affine(frame, y, &mut best, &mut sx, &mut corr);
+    LinfEmbedding { x: best, level: t_hi, sweeps: total_sweeps }
+}
+
+/// Convenience wrapper asserting the returned point is exactly feasible.
+pub fn min_linf_checked(frame: &dyn Frame, y: &[f32], opts: &LinfOptions) -> LinfEmbedding {
+    let emb = min_linf(frame, y, opts);
+    let mut back = vec![0.0f32; frame.n()];
+    frame.apply(&emb.x, &mut back);
+    debug_assert!(
+        dist2(&back, y) <= 1e-2 * (1.0 + norm2(y)),
+        "LP solution infeasible: residual {}",
+        dist2(&back, y)
+    );
+    emb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::democratic::KashinSolver;
+    use crate::linalg::frames::{HadamardFrame, OrthonormalFrame};
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn lp_feasible_and_no_worse_than_nde() {
+        let mut rng = Rng::seed_from(1);
+        let frame = HadamardFrame::with_big_n(48, 64, &mut rng);
+        for _ in 0..3 {
+            let y: Vec<f32> = (0..48).map(|_| rng.gaussian_cubed()).collect();
+            let emb = min_linf_checked(&frame, &y, &LinfOptions::default());
+            let mut nde = vec![0.0f32; 64];
+            frame.adjoint(&y, &mut nde);
+            assert!(norm_inf(&emb.x) <= norm_inf(&nde) * (1.0 + 1e-3));
+            // Feasibility double-check.
+            let mut back = vec![0.0f32; 48];
+            frame.apply(&emb.x, &mut back);
+            assert!(dist2(&back, &y) < 1e-2 * (1.0 + norm2(&y)));
+        }
+    }
+
+    #[test]
+    fn lp_matches_kashin_solver_level() {
+        // The LV iteration is suboptimal but should land within a small
+        // multiple of the true optimum; conversely the LP must not be worse.
+        let mut rng = Rng::seed_from(2);
+        let frame = OrthonormalFrame::with_lambda(32, 2.0, &mut rng);
+        let y: Vec<f32> = (0..32).map(|_| rng.gaussian_cubed()).collect();
+        let lp = min_linf_checked(&frame, &y, &LinfOptions::default());
+        let mut solver = KashinSolver::for_frame(&frame);
+        let lv = solver.embed(&frame, &y);
+        assert!(
+            norm_inf(&lp.x) <= norm_inf(&lv.x) * 1.05,
+            "LP {} should be <= LV {}",
+            norm_inf(&lp.x),
+            norm_inf(&lv.x)
+        );
+    }
+
+    #[test]
+    fn lp_lower_bound_respected() {
+        // Lemma 1 with K_l = 1: ||x||_inf >= ||y||_2 / sqrt(N).
+        let mut rng = Rng::seed_from(3);
+        let frame = HadamardFrame::with_big_n(30, 32, &mut rng);
+        let y: Vec<f32> = (0..30).map(|_| rng.gaussian_f32()).collect();
+        let emb = min_linf_checked(&frame, &y, &LinfOptions::default());
+        let lower = norm2(&y) / (32f32).sqrt();
+        assert!(norm_inf(&emb.x) >= lower * 0.99, "{} < {}", norm_inf(&emb.x), lower);
+    }
+
+    #[test]
+    fn zero_input() {
+        let mut rng = Rng::seed_from(4);
+        let frame = HadamardFrame::new(16, &mut rng);
+        let emb = min_linf(&frame, &vec![0.0; 16], &LinfOptions::default());
+        assert_eq!(emb.level, 0.0);
+        assert!(emb.x.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,20 @@
+//! Democratic and near-democratic (Kashin) embeddings — §2 of the paper.
+//!
+//! Given a frame `S ∈ R^{n×N}`, the **democratic embedding** of `y ∈ R^n`
+//! is the minimum-`l∞` solution of the under-determined system `y = Sx`
+//! (eq. 5); the **near-democratic embedding** is the minimum-`l₂` solution
+//! `x = Sᵀ(SSᵀ)⁻¹y` (eq. 7/8), which for Parseval frames is just `Sᵀy`.
+//!
+//! Three solvers are provided:
+//!
+//! * [`democratic::KashinSolver`] — the Lyubarskii–Vershynin iterative
+//!   truncate-and-project algorithm ([10] in the paper), `O(K · n log n)`
+//!   for Hadamard frames. This is what DSC uses at runtime.
+//! * [`lp::min_linf`] — a bisection + alternating-projection solver of the
+//!   exact LP (5), the stand-in for the paper's CVX baseline (Fig. 1c) and
+//!   the ground truth for tests.
+//! * [`near_democratic::nde`] — the closed form `Sᵀy`.
+
+pub mod democratic;
+pub mod lp;
+pub mod near_democratic;

@@ -1,0 +1,116 @@
+//! Near-democratic embeddings — the closed form of §2.1.
+//!
+//! `x_nd = Sᵀ(SSᵀ)⁻¹y`, which for Parseval frames collapses to `Sᵀy`
+//! (Appendix G). Lemmas 2 and 3 bound `‖x_nd‖∞ ≤ 2√(log(2N)/N)·‖y‖₂`
+//! w.p. ≥ 1 − 1/(2N) (Hadamard; an extra `√λ` for orthonormal frames).
+
+use crate::linalg::frames::Frame;
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::{norm2, norm_inf};
+
+/// Compute the near-democratic embedding into `out` (`len = N`).
+/// Zero allocation — the runtime hot path of NDSC.
+#[inline]
+pub fn nde_into(frame: &dyn Frame, y: &[f32], out: &mut [f32]) {
+    frame.pinv_embed(y, out);
+}
+
+/// Allocating convenience wrapper.
+pub fn nde(frame: &dyn Frame, y: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; frame.big_n()];
+    nde_into(frame, y, &mut out);
+    out
+}
+
+/// The Lemma 2/3 bound `2√(λ̃·log(2N)/N)` with `λ̃ = λ` for orthonormal
+/// frames and `λ̃ = 1` for Hadamard frames.
+pub fn lemma_bound(big_n: usize, lambda_factor: f32) -> f32 {
+    2.0 * (lambda_factor * (2.0 * big_n as f32).ln() / big_n as f32).sqrt()
+}
+
+/// Empirical check of Lemma 2/3: fraction of random draws where
+/// `‖x_nd‖∞ > bound·‖y‖₂`. Should be ≤ ~1/(2N).
+pub fn lemma_violation_rate(
+    frame: &dyn Frame,
+    lambda_factor: f32,
+    trials: usize,
+    rng: &mut Rng,
+) -> f32 {
+    let n = frame.n();
+    let bound = lemma_bound(frame.big_n(), lambda_factor);
+    let mut bad = 0usize;
+    let mut x = vec![0.0f32; frame.big_n()];
+    for _ in 0..trials {
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        let ny = norm2(&y);
+        if ny == 0.0 {
+            continue;
+        }
+        nde_into(frame, &y, &mut x);
+        if norm_inf(&x) > bound * ny {
+            bad += 1;
+        }
+    }
+    bad as f32 / trials as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::frames::{HadamardFrame, OrthonormalFrame, SubGaussianFrame};
+    use crate::linalg::vecops::dist2;
+
+    #[test]
+    fn lemma3_bound_holds_hadamard() {
+        let mut rng = Rng::seed_from(1);
+        let frame = HadamardFrame::new(1000, &mut rng);
+        let rate = lemma_violation_rate(&frame, 1.0, 200, &mut rng);
+        // Lemma 3: violation probability <= 1/(2N) ~ 5e-4; allow slack.
+        assert!(rate <= 0.02, "violation rate {rate}");
+    }
+
+    #[test]
+    fn lemma2_bound_holds_orthonormal() {
+        let mut rng = Rng::seed_from(2);
+        let frame = OrthonormalFrame::with_lambda(100, 1.5, &mut rng);
+        let rate = lemma_violation_rate(&frame, frame.lambda(), 100, &mut rng);
+        assert!(rate <= 0.05, "violation rate {rate}");
+    }
+
+    #[test]
+    fn nde_is_exact_preimage_for_parseval() {
+        let mut rng = Rng::seed_from(3);
+        let frame = HadamardFrame::new(116, &mut rng);
+        let y: Vec<f32> = (0..116).map(|_| rng.gaussian_cubed()).collect();
+        let x = nde(&frame, &y);
+        let mut back = vec![0.0f32; 116];
+        frame.apply(&x, &mut back);
+        assert!(dist2(&back, &y) < 1e-3 * (1.0 + norm2(&y)));
+    }
+
+    #[test]
+    fn nde_is_exact_preimage_for_subgaussian() {
+        let mut rng = Rng::seed_from(4);
+        let frame = SubGaussianFrame::with_lambda(40, 2.0, &mut rng);
+        let y: Vec<f32> = (0..40).map(|_| rng.gaussian_cubed()).collect();
+        let x = nde(&frame, &y);
+        let mut back = vec![0.0f32; frame.big_n()];
+        // note: apply consumes len-N input
+        let mut out = vec![0.0f32; 40];
+        frame.apply(&x, &mut out);
+        back.truncate(0);
+        assert!(dist2(&out, &y) < 1e-2 * (1.0 + norm2(&y)));
+    }
+
+    #[test]
+    fn flattening_effect_on_heavy_tails() {
+        // The embedding spreads a spiky vector: l_inf shrinks by ~sqrt(N/log N).
+        let mut rng = Rng::seed_from(5);
+        let n = 1024;
+        let frame = HadamardFrame::new(n, &mut rng);
+        let mut y = vec![0.0f32; n];
+        y[17] = 100.0; // one-hot: worst case for naive quantization
+        let x = nde(&frame, &y);
+        assert!(norm_inf(&x) < norm_inf(&y) * 0.2, "no flattening: {}", norm_inf(&x));
+    }
+}

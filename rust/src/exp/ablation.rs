@@ -1,0 +1,115 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! * `ablation_ef` — error feedback on/off in DGD-DEF at a low budget
+//!   (feedback converts the quantization-noise ball into linear decay).
+//! * `ablation_lambda` — DGD-DEF convergence vs the frame aspect ratio λ
+//!   (App. N: λ → 1 wins once the fixed budget is split over N coords).
+//! * `ablation_dqgd` — our adaptive-scale naive baseline vs the paper's
+//!   original decaying-range DQGD [6] (which collapses at low R).
+
+use crate::data::synthetic::{planted_regression, Tail};
+use crate::exp::common::{print_figure, scaled, Series};
+use crate::linalg::frames::HadamardFrame;
+use crate::linalg::rng::Rng;
+use crate::opt::dgd_def::{self, DgdDefOptions};
+use crate::quant::dqgd::DqgdRange;
+use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
+use crate::quant::gain_shape::NaiveUniform;
+use crate::quant::ndsc::Ndsc;
+use crate::quant::Compressor;
+
+/// Error feedback on/off: DGD-DEF vs plain quantized GD (e ≡ 0).
+pub fn ablation_ef(quick: bool) -> Vec<Series> {
+    let n = 64;
+    let iters = scaled(120, quick);
+    let mut rng = Rng::seed_from(31);
+    let (obj, _) = planted_regression(128, n, Tail::GaussianCubed, Tail::Gaussian, 0.05, &mut rng);
+    let xs = obj.quadratic_minimizer();
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let opts = DgdDefOptions::optimal(l, mu, iters);
+    let mut series = Vec::new();
+    for &r in &[2.0f32, 4.0] {
+        // With feedback: Algorithm 1.
+        let c = Ndsc::hadamard(n, r, &mut rng);
+        let tr = dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng);
+        let mut s = Series::new(format!("EF-R{r}"));
+        s.push(iters as f32, tr.records.last().unwrap().dist_to_opt);
+        series.push(s);
+        // Without feedback: x <- x - α·Q(∇f(x)), same codec.
+        let c2 = Ndsc::hadamard(n, r, &mut rng);
+        let mut x = vec![0.0f32; n];
+        let mut g = vec![0.0f32; n];
+        for _ in 0..iters {
+            obj.gradient(&x, &mut g);
+            let q = c2.decompress(&c2.compress(&g, &mut rng));
+            for (xi, &qi) in x.iter_mut().zip(&q) {
+                *xi -= opts.step * qi;
+            }
+        }
+        let mut s = Series::new(format!("noEF-R{r}"));
+        s.push(iters as f32, crate::linalg::vecops::dist2(&x, &xs));
+        series.push(s);
+    }
+    print_figure("Ablation: error feedback on/off, final ||x−x*||", "iters", &series);
+    series
+}
+
+/// λ sweep: DGD-DEF final error vs frame aspect ratio at fixed budget.
+pub fn ablation_lambda(quick: bool) -> Vec<Series> {
+    let n = 64; // N = 64·λ must be a power of two: λ ∈ {1, 2, 4, 8}
+    let iters = scaled(120, quick);
+    let r = 3.0;
+    let mut rng = Rng::seed_from(32);
+    let (obj, _) = planted_regression(128, n, Tail::GaussianCubed, Tail::Gaussian, 0.05, &mut rng);
+    let xs = obj.quadratic_minimizer();
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let opts = DgdDefOptions::optimal(l, mu, iters);
+    let mut s = Series::new("final-dist");
+    for &lambda in &[1usize, 2, 4, 8] {
+        let frame = HadamardFrame::with_big_n(n, n * lambda, &mut rng);
+        let c = SubspaceCodec::new(
+            Box::new(frame),
+            EmbedKind::NearDemocratic,
+            CodecMode::Deterministic,
+            r,
+        );
+        let tr = dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng);
+        s.push(lambda as f32, tr.records.last().unwrap().dist_to_opt);
+    }
+    let series = vec![s];
+    print_figure("Ablation: DGD-DEF final ||x−x*|| vs frame λ (R=3)", "λ", &series);
+    series
+}
+
+/// Adaptive-scale naive vs the paper's decaying-range DQGD baseline.
+pub fn ablation_dqgd(quick: bool) -> Vec<Series> {
+    let n = 64;
+    let iters = scaled(120, quick);
+    let mut rng = Rng::seed_from(33);
+    let (obj, _) = planted_regression(128, n, Tail::GaussianCubed, Tail::Gaussian, 0.05, &mut rng);
+    let xs = obj.quadratic_minimizer();
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let sigma = crate::opt::gd::sigma(l, mu);
+    let opts = DgdDefOptions::optimal(l, mu, iters);
+    let mut g0 = vec![0.0f32; n];
+    obj.gradient(&vec![0.0; n], &mut g0);
+    let r0 = 2.0 * crate::linalg::vecops::norm_inf(&g0);
+    let mut s_adapt = Series::new("naive-adaptive");
+    let mut s_sched = Series::new("dqgd-range-schedule");
+    let mut s_ndsc = Series::new("ndsc");
+    for &r in &[1.0f32, 2.0, 3.0, 4.0, 6.0] {
+        let c = NaiveUniform::new(n, r);
+        s_adapt.push(r, dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng).empirical_rate());
+        let c = DqgdRange::new(n, r, r0, sigma);
+        s_sched.push(r, dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng).empirical_rate());
+        let c = Ndsc::hadamard(n, r, &mut rng);
+        s_ndsc.push(r, dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng).empirical_rate());
+    }
+    let series = vec![s_adapt, s_sched, s_ndsc];
+    print_figure(
+        "Ablation: DGD-DEF empirical rate vs R — adaptive naive vs range-schedule DQGD vs NDSC",
+        "R",
+        &series,
+    );
+    series
+}

@@ -1,0 +1,97 @@
+//! Appendix N figures — the λ = N/n tradeoff study.
+//!
+//! * Fig. 8a/8b: `‖x_nd‖∞` vs embedding dimension `N` (decreasing).
+//! * Fig. 9a/9b: `‖x_nd‖∞·√N` vs `N` (≈ constant — the two effects of
+//!   growing `N` cancel).
+//! * Fig. 11a/11b: same two quantities for *democratic* embeddings over
+//!   random orthonormal frames with λ ∈ [1, 50].
+//! * Fig. 12a/12b: `l₂` quantization error of DSC vs `N` (increasing ⇒
+//!   choose λ → 1, the paper's App. N conclusion).
+
+use crate::embed::democratic::KashinSolver;
+use crate::embed::near_democratic::nde;
+use crate::exp::common::{print_figure, scaled, Series};
+use crate::linalg::frames::{HadamardFrame, OrthonormalFrame};
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::{norm2, norm_inf};
+use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
+use crate::quant::normalized_error;
+
+fn heavy_vec(n: usize, student_t: bool, rng: &mut Rng) -> Vec<f32> {
+    (0..n)
+        .map(|_| if student_t { rng.student_t(1) } else { rng.gaussian_cubed() })
+        .collect()
+}
+
+/// Figs. 8 & 9: NDE l∞ norm (and ·√N) vs N, Hadamard frames, n = 30.
+pub fn fig8_9(quick: bool) -> Vec<Series> {
+    let n = 30;
+    let trials = scaled(50, quick);
+    let pows: &[u32] = if quick { &[5, 8, 11] } else { &[5, 6, 7, 8, 9, 10, 11, 12, 13] };
+    let mut rng = Rng::seed_from(8);
+    let mut series = Vec::new();
+    for (tail_name, student_t) in [("gauss3", false), ("student-t", true)] {
+        let mut s_inf = Series::new(format!("linf-{tail_name}"));
+        let mut s_scaled = Series::new(format!("linf*sqrtN-{tail_name}"));
+        for &p in pows {
+            let big_n = 1usize << p;
+            let mut acc = 0.0f64;
+            for _ in 0..trials {
+                let frame = HadamardFrame::with_big_n(n, big_n, &mut rng);
+                let y = heavy_vec(n, student_t, &mut rng);
+                let x = nde(&frame, &y);
+                acc += norm_inf(&x) as f64 / trials as f64;
+            }
+            s_inf.push(big_n as f32, acc as f32);
+            s_scaled.push(big_n as f32, (acc * (big_n as f64).sqrt()) as f32);
+        }
+        series.push(s_inf);
+        series.push(s_scaled);
+    }
+    print_figure("Figs 8/9: ‖x_nd‖∞ and ‖x_nd‖∞·√N vs N (n=30, Hadamard)", "N", &series);
+    series
+}
+
+/// Figs. 11 & 12: democratic embeddings over orthonormal frames,
+/// λ ∈ [1, 50]: l∞ norms and the DSC quantization error vs N.
+pub fn fig11_12(quick: bool) -> Vec<Series> {
+    let n = 30;
+    let r = 2.0; // bits/dim for the Fig. 12 error
+    let trials = scaled(20, quick);
+    let lambdas: &[f32] =
+        if quick { &[1.0, 1.5, 3.0, 10.0] } else { &[1.0, 1.1, 1.3, 1.5, 1.8, 2.0, 2.5, 3.0, 4.0, 5.0, 10.0, 20.0, 50.0] };
+    let mut rng = Rng::seed_from(11);
+    let mut s_inf = Series::new("linf(DE)");
+    let mut s_scaled = Series::new("linf*sqrtN(DE)");
+    let mut s_err = Series::new("DSC-quant-err(R=2)");
+    for &lambda in lambdas {
+        let big_n = ((n as f32 * lambda).ceil() as usize).max(n);
+        let mut acc_inf = 0.0f64;
+        for _ in 0..trials {
+            let frame = OrthonormalFrame::with_big_n(n, big_n, &mut rng);
+            let mut solver = KashinSolver::for_frame(&frame);
+            let y = heavy_vec(n, false, &mut rng);
+            let emb = solver.embed(&frame, &y);
+            acc_inf += (norm_inf(&emb.x) / norm2(&y).max(1e-30)) as f64 / trials as f64;
+        }
+        s_inf.push(big_n as f32, acc_inf as f32);
+        s_scaled.push(big_n as f32, (acc_inf * (big_n as f64).sqrt()) as f32);
+        // Fig 12: end-to-end DSC error at this λ.
+        let frame = OrthonormalFrame::with_big_n(n, big_n, &mut rng);
+        let codec = SubspaceCodec::new(
+            Box::new(frame),
+            EmbedKind::Democratic,
+            CodecMode::Deterministic,
+            r,
+        );
+        let err = normalized_error(&codec, trials, &mut rng, |rng| heavy_vec(n, false, rng));
+        s_err.push(big_n as f32, err);
+    }
+    let series = vec![s_inf, s_scaled, s_err];
+    print_figure(
+        "Figs 11/12: DE ‖x_d‖∞ (normalized), ·√N, and DSC error vs N (n=30, orthonormal)",
+        "N",
+        &series,
+    );
+    series
+}

@@ -1,0 +1,111 @@
+//! Shared plumbing for the experiment harness: series printing, trial
+//! averaging, and quick-mode scaling.
+
+/// A named series of (x, y) points — one curve of a figure.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f32, f32)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f32, y: f32) {
+        self.points.push((x, y));
+    }
+
+    pub fn y_at_end(&self) -> f32 {
+        self.points.last().map(|p| p.1).unwrap_or(f32::NAN)
+    }
+}
+
+/// Print a figure: header, one aligned row per x with all series values,
+/// plus machine-readable `SERIES` lines.
+pub fn print_figure(title: &str, xlabel: &str, series: &[Series]) {
+    println!("\n=== {title} ===");
+    print!("{:>12}", xlabel);
+    for s in series {
+        print!("  {:>18}", truncate(&s.name, 18));
+    }
+    println!();
+    let xs: Vec<f32> = series
+        .first()
+        .map(|s| s.points.iter().map(|p| p.0).collect())
+        .unwrap_or_default();
+    for (i, &x) in xs.iter().enumerate() {
+        print!("{x:>12.4}");
+        for s in series {
+            match s.points.get(i) {
+                Some(&(_, y)) => print!("  {y:>18.6}"),
+                None => print!("  {:>18}", "-"),
+            }
+        }
+        println!();
+    }
+    for s in series {
+        let pts: Vec<String> = s.points.iter().map(|(x, y)| format!("{x}:{y}")).collect();
+        println!("SERIES\t{title}\t{}\t{}", s.name, pts.join(","));
+    }
+}
+
+fn truncate(s: &str, w: usize) -> &str {
+    if s.len() <= w {
+        s
+    } else {
+        &s[..w]
+    }
+}
+
+/// Mean of `trials` runs of `f`.
+pub fn mean_of(trials: usize, mut f: impl FnMut(usize) -> f32) -> f32 {
+    (0..trials).map(&mut f).sum::<f32>() / trials as f32
+}
+
+/// Scale trial/iteration counts down in quick mode (CI smoke).
+pub fn scaled(full: usize, quick: bool) -> usize {
+    if quick {
+        (full / 5).max(2)
+    } else {
+        full
+    }
+}
+
+/// Thin down a trace to ~`k` evenly spaced points for printing.
+pub fn thin(points: &[(f32, f32)], k: usize) -> Vec<(f32, f32)> {
+    if points.len() <= k {
+        return points.to_vec();
+    }
+    let step = points.len() as f32 / k as f32;
+    (0..k).map(|i| points[((i as f32 * step) as usize).min(points.len() - 1)]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_basics() {
+        let mut s = Series::new("a");
+        s.push(1.0, 2.0);
+        s.push(2.0, 3.0);
+        assert_eq!(s.y_at_end(), 3.0);
+    }
+
+    #[test]
+    fn thin_preserves_ends_roughly() {
+        let pts: Vec<(f32, f32)> = (0..100).map(|i| (i as f32, i as f32)).collect();
+        let t = thin(&pts, 10);
+        assert_eq!(t.len(), 10);
+        assert_eq!(t[0].0, 0.0);
+    }
+
+    #[test]
+    fn scaled_quick() {
+        assert_eq!(scaled(50, true), 10);
+        assert_eq!(scaled(50, false), 50);
+        assert_eq!(scaled(4, true), 2);
+    }
+}

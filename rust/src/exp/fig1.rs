@@ -1,0 +1,269 @@
+//! Figure 1 — smooth & strongly-convex experiments.
+//!
+//! * 1a: normalized compression error, schemes ± near-democratic embedding
+//!   (`y ∈ R^1000` Gaussian³, 50 realizations).
+//! * 1b: empirical convergence rate of DGD-DEF vs bit budget `R`
+//!   (least squares, `n = 116`, Gaussian³ data).
+//! * 1c: wall-clock of democratic (LP / LV) vs near-democratic embeddings
+//!   vs dimension.
+//! * 1d: `l₂`-regularized least squares on (synthetic) MNIST with
+//!   sparsified GD at `R = 0.5` — rand-k + 1-bit, with vs without NDE.
+
+use std::time::Instant;
+
+use crate::data::mnist_like;
+use crate::embed::democratic::KashinSolver;
+use crate::embed::lp::{min_linf, LinfOptions};
+use crate::embed::near_democratic::nde;
+use crate::exp::common::{print_figure, scaled, thin, Series};
+use crate::linalg::frames::{HadamardFrame, OrthonormalFrame};
+use crate::linalg::fwht::next_pow2;
+use crate::linalg::rng::Rng;
+use crate::opt::dgd_def::{self, DgdDefOptions};
+use crate::opt::gd;
+use crate::quant::compose::EmbeddedCompressor;
+use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
+use crate::quant::gain_shape::{NaiveUniform, StandardDither};
+use crate::quant::ndsc::Ndsc;
+use crate::quant::randk::RandK;
+use crate::quant::topk::TopK;
+use crate::quant::{normalized_error, Compressor};
+
+/// Fig. 1a: compression error vs bit budget, with and without NDE.
+pub fn fig1a(quick: bool) -> Vec<Series> {
+    let n = 1000;
+    let trials = scaled(50, quick);
+    let rs: &[f32] = if quick { &[1.0, 3.0, 5.0] } else { &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+    let mut rng = Rng::seed_from(1);
+    let big_n = next_pow2(n);
+    let gen = move |rng: &mut Rng| -> Vec<f32> { (0..n).map(|_| rng.gaussian_cubed()).collect() };
+
+    let mut series: Vec<Series> = Vec::new();
+    let eval = |name: &str, make: &mut dyn FnMut(f32, &mut Rng) -> Box<dyn Compressor>,
+                    rng: &mut Rng,
+                    series: &mut Vec<Series>| {
+        let mut s = Series::new(name);
+        for &r in rs {
+            let c = make(r, rng);
+            s.push(r, normalized_error(c.as_ref(), trials, rng, gen));
+        }
+        series.push(s);
+    };
+
+    eval("SD", &mut |r, _| Box::new(StandardDither::new(n, r)), &mut rng, &mut series);
+    eval(
+        "SD+NDH",
+        &mut |r, rng| {
+            Box::new(EmbeddedCompressor::nde(
+                Box::new(HadamardFrame::new(n, rng)),
+                Box::new(StandardDither::new(big_n, r)),
+            ))
+        },
+        &mut rng,
+        &mut series,
+    );
+    eval(
+        "SD+NDO",
+        &mut |r, rng| {
+            Box::new(EmbeddedCompressor::nde(
+                Box::new(OrthonormalFrame::with_big_n(n, n, rng)),
+                Box::new(StandardDither::new(n, r)),
+            ))
+        },
+        &mut rng,
+        &mut series,
+    );
+    eval(
+        "TopK(10%)",
+        &mut |r, _| {
+            let bits = (r.max(1.0)) as usize;
+            Box::new(TopK::new(n, n / 10, bits * 10))
+        },
+        &mut rng,
+        &mut series,
+    );
+    eval(
+        "TopK+NDH",
+        &mut |r, rng| {
+            let bits = (r.max(1.0)) as usize;
+            Box::new(EmbeddedCompressor::nde(
+                Box::new(HadamardFrame::new(n, rng)),
+                Box::new(TopK::new(big_n, big_n / 10, bits * 10)),
+            ))
+        },
+        &mut rng,
+        &mut series,
+    );
+    eval(
+        "Kashin-1.5",
+        &mut |r, rng| {
+            Box::new(SubspaceCodec::new(
+                Box::new(OrthonormalFrame::with_lambda(n, 1.5, rng)),
+                EmbedKind::Democratic,
+                CodecMode::Deterministic,
+                r,
+            ))
+        },
+        &mut rng,
+        &mut series,
+    );
+    eval("naive", &mut |r, _| Box::new(NaiveUniform::new(n, r)), &mut rng, &mut series);
+    eval("NDH", &mut |r, rng| Box::new(Ndsc::hadamard(n, r, rng)), &mut rng, &mut series);
+
+    print_figure("Fig 1a: normalized compression error vs R (n=1000, Gaussian³)", "R", &series);
+    series
+}
+
+/// Fig. 1b: empirical linear rate of DGD-DEF vs R (n = 116 least squares).
+pub fn fig1b(quick: bool) -> Vec<Series> {
+    let n = 116;
+    let m = 200;
+    let iters = scaled(150, quick);
+    let rs: &[f32] =
+        if quick { &[2.0, 5.0, 8.0] } else { &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0] };
+    let mut rng = Rng::seed_from(2);
+    let (obj, _) = crate::data::synthetic::planted_regression(
+        m,
+        n,
+        crate::data::synthetic::Tail::GaussianCubed,
+        crate::data::synthetic::Tail::Gaussian,
+        0.1,
+        &mut rng,
+    );
+    let xs = obj.quadratic_minimizer();
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let sigma = gd::sigma(l, mu);
+    let x0 = vec![0.0f32; n];
+    let opts = DgdDefOptions::optimal(l, mu, iters);
+
+    let mut series = Vec::new();
+    // Unquantized GD: flat sigma line.
+    let mut s = Series::new("unquantized(σ)");
+    for &r in rs {
+        s.push(r, sigma);
+    }
+    series.push(s);
+
+    let mut run_scheme =
+        |name: &str, make: &mut dyn FnMut(f32, &mut Rng) -> Box<dyn Compressor>, rng: &mut Rng| {
+            let mut s = Series::new(name);
+            for &r in rs {
+                let c = make(r, rng);
+                let tr = dgd_def::run(&obj, c.as_ref(), &x0, Some(&xs), opts, rng);
+                s.push(r, tr.empirical_rate());
+            }
+            series.push(s);
+        };
+
+    run_scheme("DQGD(naive)", &mut |r, _| Box::new(NaiveUniform::new(n, r)), &mut rng);
+    run_scheme("NDE-Hadamard", &mut |r, rng| Box::new(Ndsc::hadamard(n, r, rng)), &mut rng);
+    run_scheme("NDE-Orthonormal", &mut |r, rng| Box::new(Ndsc::orthonormal(n, r, rng)), &mut rng);
+    run_scheme(
+        "DE(Kashin λ=1.5)",
+        &mut |r, rng| {
+            Box::new(SubspaceCodec::new(
+                Box::new(OrthonormalFrame::with_lambda(n, 1.5, rng)),
+                EmbedKind::Democratic,
+                CodecMode::Deterministic,
+                r,
+            ))
+        },
+        &mut rng,
+    );
+
+    print_figure(
+        &format!("Fig 1b: DGD-DEF empirical rate vs R (n={n}, σ={sigma:.3})"),
+        "R",
+        &series,
+    );
+    series
+}
+
+/// Fig. 1c: wall-clock to compute DE (LP and LV) vs NDE vs dimension.
+pub fn fig1c(quick: bool) -> Vec<Series> {
+    let dims: &[usize] =
+        if quick { &[16, 64, 256] } else { &[16, 32, 64, 128, 256, 512, 1024, 2048] };
+    let reps = if quick { 2 } else { 5 };
+    let mut rng = Rng::seed_from(3);
+    let mut s_lp = Series::new("DE(LP/CVX-like)");
+    let mut s_lv = Series::new("DE(LV-iter)");
+    let mut s_nde = Series::new("NDE(Sᵀy)");
+    for &n in dims {
+        let big_n = next_pow2(n.max(2) * 2); // λ≈2 as the paper's DE runs
+        let frame = HadamardFrame::with_big_n(n, big_n, &mut rng);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        // NDE
+        let t0 = Instant::now();
+        for _ in 0..reps * 20 {
+            std::hint::black_box(nde(&frame, &y));
+        }
+        s_nde.push(n as f32, t0.elapsed().as_secs_f32() * 1e3 / (reps * 20) as f32);
+        // LV
+        let mut solver = KashinSolver::for_frame(&frame);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(solver.embed(&frame, &y));
+        }
+        s_lv.push(n as f32, t0.elapsed().as_secs_f32() * 1e3 / reps as f32);
+        // LP (expensive — skip huge dims in quick mode)
+        if !quick || n <= 64 {
+            let t0 = Instant::now();
+            std::hint::black_box(min_linf(&frame, &y, &LinfOptions::default()));
+            s_lp.push(n as f32, t0.elapsed().as_secs_f32() * 1e3);
+        }
+    }
+    let series = vec![s_lp, s_lv, s_nde];
+    print_figure("Fig 1c: embedding wall-clock (ms) vs dimension", "n", &series);
+    series
+}
+
+/// Fig. 1d: ridge regression on MNIST(-like), sparsified GD at R = 0.5.
+pub fn fig1d(quick: bool) -> Vec<Series> {
+    let mut rng = Rng::seed_from(4);
+    let m = scaled(200, quick);
+    let data = mnist_like::generate_binary(m, 0.3, &mut rng);
+    let obj = data.ridge_objective(1.0);
+    let n = mnist_like::DIM;
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let iters = scaled(150, quick);
+    let opts = DgdDefOptions { step: 2.0 / (l + mu), iters };
+    let x0 = vec![0.0f32; n];
+    let xs = obj.quadratic_minimizer();
+    let _big_n = next_pow2(n);
+    let k = (n as f32 * 0.5) as usize; // R = 0.5: half the coords at 1 bit
+
+    let mut series = Vec::new();
+    let mut run_scheme = |name: &str, c: Box<dyn Compressor>, rng: &mut Rng| {
+        let tr = dgd_def::run(&obj, c.as_ref(), &x0, Some(&xs), opts, rng);
+        let mut s = Series::new(name);
+        let pts: Vec<(f32, f32)> = tr
+            .records
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i as f32, r.value))
+            .collect();
+        for (x, y) in thin(&pts, 20) {
+            s.push(x, y);
+        }
+        series.push(s);
+    };
+
+    run_scheme("rand-k+1bit", Box::new(RandK::new(n, k, 1).deterministic()), &mut rng);
+    let frame = OrthonormalFrame::with_big_n(n, n, &mut rng);
+    run_scheme(
+        "rand-k+1bit+NDE",
+        Box::new(EmbeddedCompressor::nde(
+            Box::new(frame),
+            Box::new(RandK::new(n, k, 1).deterministic()),
+        )),
+        &mut rng,
+    );
+    run_scheme("unquantized", Box::new(crate::coordinator::config::Fp32Passthrough { n }), &mut rng);
+
+    print_figure(
+        "Fig 1d: ridge on MNIST-like, sparsified GD at R=0.5 (objective vs iter)",
+        "iter",
+        &series,
+    );
+    series
+}

@@ -1,0 +1,110 @@
+//! Figure 3 + Appendix I — parameter-server with multiple workers.
+//!
+//! * 3a: multi-worker regression (`n = 30`, `m = 10`, `s = 10`,
+//!   `x* ~ Student-t`, `A ~ N(0,1)`) — suboptimality vs rounds.
+//! * 5/6: the Appendix-I sweeps (Gaussian³ / Student-t, R ∈ {0.5, 1}).
+//! * 3b: the non-convex federated run (transformer; see
+//!   [`crate::exp::transformer`] and `examples/train_transformer.rs`).
+
+use crate::data::synthetic::planted_regression_shards;
+use crate::exp::common::{print_figure, scaled, thin, Series};
+use crate::linalg::rng::Rng;
+use crate::opt::multi::{self, MultiOptions, ShardedProblem};
+use crate::opt::objectives::Loss;
+use crate::opt::projection::Domain;
+use crate::quant::gain_shape::StandardDither;
+use crate::quant::ndsc::Ndsc;
+use crate::quant::Compressor;
+
+fn make_worker_compressors(
+    m: usize,
+    n: usize,
+    r: f32,
+    scheme: &str,
+    rng: &mut Rng,
+) -> Vec<Box<dyn Compressor>> {
+    (0..m)
+        .map(|_| -> Box<dyn Compressor> {
+            match scheme {
+                "ndsc" => Box::new(Ndsc::hadamard_dithered(n, r, rng)),
+                "ndsc-ortho" => Box::new(Ndsc::orthonormal_dithered(n, r, rng)),
+                "naive" => Box::new(StandardDither::new(n, r)),
+                _ => panic!("unknown scheme {scheme}"),
+            }
+        })
+        .collect()
+}
+
+/// One multi-worker regression sweep; returns value-vs-round series per
+/// scheme, averaged over `trials` independent data draws.
+pub fn multiworker_sweep(
+    student_t: bool,
+    rs: &[f32],
+    trials: usize,
+    rounds: usize,
+    seed: u64,
+) -> Vec<Series> {
+    let (m_workers, s, n) = (10, 10, 30);
+    let mut series = Vec::new();
+    for &r in rs {
+        for scheme in ["naive", "ndsc"] {
+            let mut acc = vec![0.0f64; rounds];
+            for t in 0..trials {
+                let mut rng = Rng::seed_from(seed + 31 * t as u64);
+                let (shards, xs) =
+                    planted_regression_shards(m_workers, s, n, Loss::Square, &mut rng, student_t);
+                let problem = ShardedProblem::new(shards);
+                let comps = make_worker_compressors(m_workers, n, r, scheme, &mut rng);
+                let opts = MultiOptions {
+                    step: problem.stable_step(),
+                    iters: rounds,
+                    domain: Domain::Unconstrained,
+                    batch: Some(5),
+                };
+                let tr = multi::run(&problem, &comps, &vec![0.0; n], Some(&xs), opts, &mut rng);
+                for (i, rec) in tr.records.iter().enumerate() {
+                    acc[i] += (rec.value as f64).min(1e9) / trials as f64;
+                }
+            }
+            let mut ser = Series::new(format!("{scheme}-R{r}"));
+            let pts: Vec<(f32, f32)> =
+                acc.iter().enumerate().map(|(i, &v)| (i as f32, v as f32)).collect();
+            for (x, y) in thin(&pts, 16) {
+                ser.push(x, y);
+            }
+            series.push(ser);
+        }
+    }
+    series
+}
+
+/// Fig. 3a: Student-t planted model, R = 1.
+pub fn fig3a(quick: bool) -> Vec<Series> {
+    let rounds = scaled(300, quick);
+    let trials = scaled(5, quick);
+    let series = multiworker_sweep(true, &[1.0], trials, rounds, 42);
+    print_figure(
+        "Fig 3a: multi-worker regression (Student-t, m=10, R=1) — f(x_t) vs round",
+        "round",
+        &series,
+    );
+    series
+}
+
+/// Fig. 5: Gaussian³ data, R ∈ {0.5, 1} (Appendix I).
+pub fn fig5(quick: bool) -> Vec<Series> {
+    let rounds = scaled(300, quick);
+    let trials = scaled(5, quick);
+    let series = multiworker_sweep(false, &[0.5, 1.0], trials, rounds, 43);
+    print_figure("Fig 5: multi-worker regression (Gaussian³), R∈{0.5,1}", "round", &series);
+    series
+}
+
+/// Fig. 6: Student-t data, R ∈ {0.5, 1} (Appendix I).
+pub fn fig6(quick: bool) -> Vec<Series> {
+    let rounds = scaled(300, quick);
+    let trials = scaled(5, quick);
+    let series = multiworker_sweep(true, &[0.5, 1.0], trials, rounds, 44);
+    print_figure("Fig 6: multi-worker regression (Student-t), R∈{0.5,1}", "round", &series);
+    series
+}

@@ -1,0 +1,17 @@
+//! Experiment harness — regenerates every table and figure of the paper's
+//! evaluation (index in DESIGN.md §5). Each module prints the same
+//! rows/series the paper plots, in plain text + machine-readable
+//! `SERIES\t...` lines; `repro <exp-id>` is the CLI entry point.
+//!
+//! Absolute numbers differ from the paper (different hardware, synthetic
+//! data substitutes); the *shape* claims — who wins, by what factor, where
+//! crossovers fall — are asserted in `rust/tests/test_figures.rs`.
+
+pub mod ablation;
+pub mod appendix;
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+pub mod transformer;

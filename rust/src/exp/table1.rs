@@ -1,0 +1,94 @@
+//! Table 1 — measured comparison of compression schemes: wire bits per
+//! dimension, normalized `l₂` error on heavy-tailed inputs, and encode
+//! wall-clock. The paper's table lists asymptotic orders; this harness
+//! prints the corresponding *measured* values at `n = 1024` so the
+//! ordering claims can be checked directly.
+
+use std::time::Instant;
+
+use crate::linalg::frames::HadamardFrame;
+use crate::linalg::rng::Rng;
+use crate::quant::compose::EmbeddedCompressor;
+use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
+use crate::quant::gain_shape::{NaiveUniform, StandardDither};
+use crate::quant::ndsc::Ndsc;
+use crate::quant::qsgd::Qsgd;
+use crate::quant::randk::RandK;
+use crate::quant::ratq::Ratq;
+use crate::quant::sign::SignQuantizer;
+use crate::quant::ternary::Ternary;
+use crate::quant::topk::TopK;
+use crate::quant::vqsgd::VqSgd;
+use crate::quant::{normalized_error, Compressor};
+
+pub fn schemes(n: usize, r: f32, rng: &mut Rng) -> Vec<Box<dyn Compressor>> {
+    let big_n = crate::linalg::fwht::next_pow2(n);
+    vec![
+        Box::new(SignQuantizer::new(n)),
+        Box::new(Qsgd::new(n, (r as usize).max(1))),
+        Box::new(Ternary::new(n)),
+        Box::new(VqSgd::new(n, 1)),
+        Box::new(VqSgd::new(n, 16)),
+        Box::new(TopK::new(n, n / 10, 8).counting_index_bits()),
+        Box::new(RandK::new(n, n / 10, 8).unbiased()),
+        Box::new(NaiveUniform::new(n, r)),
+        Box::new(StandardDither::new(n, r)),
+        Box::new(Ratq::new(n, r as usize, rng)),
+        Box::new(SubspaceCodec::new(
+            Box::new(HadamardFrame::with_big_n(n / 2, big_n / 2, rng)),
+            EmbedKind::Democratic,
+            CodecMode::Deterministic,
+            r,
+        )),
+        Box::new(Ndsc::hadamard(n, r, rng)),
+        Box::new(Ndsc::orthonormal(n.min(512), r, rng)),
+        Box::new(EmbeddedCompressor::nde(
+            Box::new(HadamardFrame::new(n, rng)),
+            Box::new(StandardDither::new(big_n, r)),
+        )),
+    ]
+}
+
+/// Run Table 1. `quick` shrinks trial counts for CI.
+pub fn run(quick: bool) {
+    let n = 1024;
+    let r = 3.0;
+    let trials = if quick { 5 } else { 30 };
+    let mut rng = Rng::seed_from(42);
+    println!("\n=== Table 1: compression schemes at n={n}, R≈{r} (Gaussian³ inputs) ===");
+    println!(
+        "{:<24} {:>12} {:>14} {:>14} {:>12}",
+        "scheme", "bits/dim", "norm-error", "encode-us", "unbiased"
+    );
+    let schemes = schemes(n, r, &mut rng);
+    for c in &schemes {
+        let dim = c.n();
+        let err = normalized_error(c.as_ref(), trials, &mut rng, |rng| {
+            (0..dim).map(|_| rng.gaussian_cubed()).collect()
+        });
+        // encode timing
+        let y: Vec<f32> = (0..dim).map(|_| rng.gaussian_cubed()).collect();
+        let reps = if quick { 3 } else { 10 };
+        let t0 = Instant::now();
+        let mut bits = 0usize;
+        for _ in 0..reps {
+            bits = c.compress(&y, &mut rng).payload_bits;
+        }
+        let us = t0.elapsed().as_micros() as f64 / reps as f64;
+        println!(
+            "{:<24} {:>12.3} {:>14.4} {:>14.1} {:>12}",
+            c.name(),
+            bits as f32 / dim as f32,
+            err,
+            us,
+            c.is_unbiased()
+        );
+        println!(
+            "TABLE1\t{}\t{}\t{}\t{}",
+            c.name(),
+            bits as f32 / dim as f32,
+            err,
+            us
+        );
+    }
+}

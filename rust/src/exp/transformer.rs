@@ -1,0 +1,242 @@
+//! Fig. 3b / Fig. 7 workload: federated training of the AOT-compiled
+//! transformer LM through the full coordinator, with quantized gradients.
+//!
+//! The CNN-on-CIFAR setup of the paper is substituted per DESIGN.md §3 by
+//! a byte-level transformer on a synthetic corpus, sharded non-iid across
+//! workers. The model's forward/backward is the `model_grad.hlo.txt`
+//! artifact built by `make artifacts` (L2 JAX, lowered once); each worker
+//! thread owns a PJRT executable and never touches Python.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::{RunConfig, SchemeKind};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::worker::GradSource;
+use crate::data::corpus::Corpus;
+use crate::linalg::rng::Rng;
+use crate::runtime::artifact::{artifacts_dir, Artifact, Input};
+
+/// Metadata emitted by aot.py alongside the model artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub n_params: usize,
+    pub padded_n: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &str) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(format!("{dir}/model_meta.txt"))
+            .with_context(|| format!("{dir}/model_meta.txt missing — run `make artifacts`"))?;
+        let mut map = std::collections::HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                map.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            map.get(k)
+                .with_context(|| format!("model_meta.txt missing key {k}"))?
+                .parse::<usize>()
+                .with_context(|| format!("model_meta.txt bad value for {k}"))
+        };
+        Ok(ModelMeta {
+            n_params: get("n_params")?,
+            padded_n: get("padded_n")?,
+            vocab: get("vocab")?,
+            seq: get("seq")?,
+            batch: get("batch")?,
+        })
+    }
+}
+
+/// A worker gradient source backed by the PJRT `model_grad` artifact.
+///
+/// The artifact is loaded lazily on the **worker thread** (PJRT handles
+/// are `Rc`-based and must not cross threads); `Send` is sound because the
+/// handle is created, used and dropped on that one thread — asserted at
+/// every call.
+pub struct PjrtGradSource {
+    artifact_path: String,
+    meta: ModelMeta,
+    corpus: Corpus,
+    rng: Rng,
+    loaded: Option<(Artifact, std::thread::ThreadId)>,
+}
+
+// SAFETY: `loaded` is always None when the struct crosses threads (it is
+// populated on first use, on the worker thread, and the thread id is
+// asserted on every subsequent call).
+unsafe impl Send for PjrtGradSource {}
+
+impl PjrtGradSource {
+    pub fn new(artifact_path: String, meta: ModelMeta, corpus: Corpus, rng: Rng) -> Self {
+        PjrtGradSource { artifact_path, meta, corpus, rng, loaded: None }
+    }
+
+    fn artifact(&mut self) -> &Artifact {
+        let tid = std::thread::current().id();
+        if self.loaded.is_none() {
+            let art = Artifact::load(&self.artifact_path)
+                .unwrap_or_else(|e| panic!("loading {}: {e:#}", self.artifact_path));
+            self.loaded = Some((art, tid));
+        }
+        let (art, owner) = self.loaded.as_ref().unwrap();
+        assert_eq!(*owner, tid, "PjrtGradSource used from a different thread");
+        art
+    }
+}
+
+impl GradSource for PjrtGradSource {
+    fn dim(&self) -> usize {
+        self.meta.n_params
+    }
+
+    fn grad(&mut self, x: &[f32], out: &mut [f32]) -> f32 {
+        let (batch, seq) = (self.meta.batch, self.meta.seq);
+        let (toks, tgts) = self.corpus.batch(batch, seq, &mut self.rng);
+        let meta = self.meta.clone();
+        let art = self.artifact();
+        let outs = art
+            .run_f32(&[
+                Input::F32(x, vec![meta.n_params]),
+                Input::U32(&toks, vec![batch, seq]),
+                Input::U32(&tgts, vec![batch, seq]),
+            ])
+            .expect("model_grad execution failed");
+        assert_eq!(outs.len(), 2, "model_grad must return (loss, grad)");
+        let loss = outs[0][0];
+        out.copy_from_slice(&outs[1]);
+        loss
+    }
+}
+
+/// Server-side evaluation on a held-out batch via `model_loss.hlo.txt`.
+pub struct PjrtEvaluator {
+    art: Artifact,
+    toks: Vec<u32>,
+    tgts: Vec<u32>,
+    meta: ModelMeta,
+}
+
+impl PjrtEvaluator {
+    pub fn new(dir: &str, meta: ModelMeta, corpus: &Corpus, rng: &mut Rng) -> Result<Self> {
+        let art = Artifact::load(&format!("{dir}/model_loss.hlo.txt"))?;
+        let (toks, tgts) = corpus.batch(meta.batch, meta.seq, rng);
+        Ok(PjrtEvaluator { art, toks, tgts, meta })
+    }
+
+    pub fn loss(&self, x: &[f32]) -> f32 {
+        let outs = self
+            .art
+            .run_f32(&[
+                Input::F32(x, vec![self.meta.n_params]),
+                Input::U32(&self.toks, vec![self.meta.batch, self.meta.seq]),
+                Input::U32(&self.tgts, vec![self.meta.batch, self.meta.seq]),
+            ])
+            .expect("model_loss execution failed");
+        outs[0][0]
+    }
+}
+
+/// One federated training run; returns the metrics log.
+pub fn train_federated(
+    scheme: SchemeKind,
+    r: f32,
+    workers: usize,
+    rounds: usize,
+    step: f32,
+    seed: u64,
+) -> Result<RunMetrics> {
+    let dir = artifacts_dir();
+    let meta = ModelMeta::load(&dir)?;
+    let mut rng = Rng::seed_from(seed);
+    let corpus = Corpus::synthetic(200_000, &mut rng);
+    let shards = corpus.shard(workers);
+    let eval = PjrtEvaluator::new(&dir, meta.clone(), &corpus, &mut rng)?;
+
+    let cfg = RunConfig {
+        n: meta.n_params,
+        workers,
+        r,
+        scheme,
+        rounds,
+        step,
+        batch: 0,
+        seed,
+        ..Default::default()
+    };
+    let comps = cfg.build_compressors(&mut rng);
+    let path = format!("{dir}/model_grad.hlo.txt");
+    let sources: Vec<Box<dyn GradSource>> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, shard)| {
+            Box::new(PjrtGradSource::new(
+                path.clone(),
+                meta.clone(),
+                shard,
+                Rng::seed_from(seed ^ (i as u64 + 1) * 0x9E37),
+            )) as Box<dyn GradSource>
+        })
+        .collect();
+
+    // Initial parameters: the exact init tensor produced by
+    // model.init_params at AOT time (artifacts/model_init.bin, f32 LE).
+    let x0 = load_init(&dir, meta.n_params)?;
+    Ok(crate::coordinator::run_distributed(&cfg, x0, sources, comps, move |x| eval.loss(x)))
+}
+
+/// Load the flat f32 (little-endian) initial parameter vector.
+pub fn load_init(dir: &str, n: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(format!("{dir}/model_init.bin"))
+        .with_context(|| format!("{dir}/model_init.bin missing — run `make artifacts`"))?;
+    anyhow::ensure!(bytes.len() == 4 * n, "model_init.bin has {} bytes, want {}", bytes.len(), 4 * n);
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Fig. 3b: NDSC vs naive quantization on the federated non-convex
+/// workload, at matched budgets.
+///
+/// The paper ran a CNN on CIFAR and found naive quantization *diverges* at
+/// R = 4 while NDSC trains. On our substitute workload (transformer LM,
+/// whose gradients are better conditioned than momentum-SGD CNN gradients)
+/// the separation appears at the **1-bit** budget within the dithered
+/// family the multi-worker algorithm (Alg. 3) actually prescribes:
+/// NDSC-dith at R = 1 beats standard dithering at R = 1, and SD needs
+/// roughly twice the budget to catch up — the same crossover *shape* at a
+/// shifted threshold (see EXPERIMENTS.md §Fig 3b for the measurement and
+/// the per-message diagnostic behind it).
+pub fn fig3b(quick: bool) -> Result<Vec<crate::exp::common::Series>> {
+    use crate::exp::common::{print_figure, scaled, thin, Series};
+    let workers = if quick { 2 } else { 4 };
+    let rounds = scaled(100, quick);
+    let mut series = Vec::new();
+    for (name, scheme, r) in [
+        ("NDSC-dith-R1", SchemeKind::NdscDithered, 1.0),
+        ("SD-R1", SchemeKind::StandardDither, 1.0),
+        ("SD-R2", SchemeKind::StandardDither, 2.0),
+    ] {
+        let metrics = train_federated(scheme, r, workers, rounds, 0.1, 7)?;
+        let pts: Vec<(f32, f32)> = metrics
+            .rounds
+            .iter()
+            .map(|rm| (rm.round as f32, rm.mean_local_value))
+            .collect();
+        let mut s = Series::new(name);
+        for (x, y) in thin(&pts, 15) {
+            s.push(x, y);
+        }
+        println!(
+            "{name}: final held-out loss {:.4}, mean rate {:.3} bits/dim, {} rejected msgs",
+            metrics.final_value(),
+            metrics.mean_rate(metrics.final_iterate.len(), workers),
+            metrics.rejected_messages
+        );
+        series.push(s);
+    }
+    print_figure("Fig 3b: federated transformer, loss vs round", "round", &series);
+    Ok(series)
+}

@@ -1,0 +1,40 @@
+//! # kashinflow
+//!
+//! A production-grade reproduction of *"Efficient Randomized Subspace
+//! Embeddings for Distributed Optimization under a Communication Budget"*
+//! (Saha, Pilanci, Goldsmith, 2021).
+//!
+//! The library implements the paper's full stack:
+//!
+//! * **Democratic / near-democratic (Kashin) embeddings** ([`embed`]) —
+//!   the `l_inf`-minimizing subspace representations of §2, computed with the
+//!   Lyubarskii–Vershynin iteration, an exact LP, or the closed-form
+//!   near-democratic transform `x = Sᵀy`.
+//! * **Source coding** ([`quant`]) — Democratic Source Coding (DSC) and
+//!   Near-Democratic Source Coding (NDSC) of §3, plus every baseline
+//!   compressor from Table 1 (QSGD, sign, ternary, top-k, random-k,
+//!   vqSGD cross-polytope, RATQ-style adaptive ranges) and an exact-width
+//!   bit-packed wire format that respects the budget of `R` bits/dimension
+//!   for any `R ∈ (0, ∞)`.
+//! * **Optimizers** ([`opt`]) — `DGD-DEF` (Alg. 1, error feedback, smooth
+//!   strongly-convex) and `DQ-PSGD` (Alg. 2/3, dithered gain–shape,
+//!   general convex non-smooth), with unquantized GD / projected SGD
+//!   references and the objective/oracle zoo used in the evaluation.
+//! * **Distributed runtime** ([`coordinator`]) — a parameter-server with
+//!   `m` workers over byte-accounted channels enforcing the bit budget,
+//!   running the multi-worker consensus loop of §4.3.
+//! * **PJRT runtime** ([`runtime`]) — loads AOT-compiled JAX/Pallas HLO
+//!   artifacts (built once by `python/compile/aot.py`) and executes them
+//!   from the Rust hot path; Python is never on the request path.
+//! * **Experiment harness** ([`exp`]) — regenerates every table and figure
+//!   of the paper's evaluation (see `DESIGN.md` for the index).
+
+pub mod coordinator;
+pub mod data;
+pub mod embed;
+pub mod exp;
+pub mod linalg;
+pub mod opt;
+pub mod quant;
+pub mod runtime;
+pub mod testkit;

@@ -1,0 +1,8 @@
+//! Linear-algebra substrate: the deterministic RNG, the fast
+//! Walsh–Hadamard transform, frame constructions (§2 of the paper), and
+//! small dense-vector helpers used across the crate.
+
+pub mod fwht;
+pub mod frames;
+pub mod rng;
+pub mod vecops;

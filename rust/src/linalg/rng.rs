@@ -1,0 +1,298 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Everything in this crate that is randomized (frame construction, dithered
+//! quantization, data synthesis, property tests) draws from this one
+//! xoshiro256++ generator so that experiments are exactly reproducible from
+//! a single `u64` seed. No external RNG crates are available on this image,
+//! so the generator, the Gaussian sampler and the heavy-tailed samplers the
+//! paper's simulations use (Gaussian³, Student-t) are implemented here.
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Passes BigCrush; 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the Box–Muller pair.
+    gauss_spare: Option<f64>,
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// SplitMix64, used to expand a single `u64` seed into the xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a single seed word.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent stream for a sub-component (e.g. worker `i`).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as `f32`.
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's unbiased method).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Random sign, `+1.0` or `-1.0` with equal probability.
+    #[inline]
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Bernoulli draw with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box–Muller (the spare is cached).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        // Draw u in (0,1] to keep ln(u) finite.
+        let u = 1.0 - self.uniform();
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Standard normal as `f32`.
+    #[inline]
+    pub fn gaussian_f32(&mut self) -> f32 {
+        self.gaussian() as f32
+    }
+
+    /// Heavy-tailed `N(0,1)³` sample — the paper raises Gaussian draws to
+    /// the third power to get coordinates of widely varying magnitude
+    /// (Fig. 1a, Fig. 5, App. N).
+    #[inline]
+    pub fn gaussian_cubed(&mut self) -> f32 {
+        let g = self.gaussian();
+        (g * g * g) as f32
+    }
+
+    /// Student-t with `df` degrees of freedom. For `df = 1` this is the
+    /// Cauchy distribution used for the planted model in Fig. 3a / Fig. 6.
+    pub fn student_t(&mut self, df: u32) -> f32 {
+        debug_assert!(df >= 1);
+        let z = self.gaussian();
+        // chi^2_df as a sum of squared normals; df is tiny (1) in the paper.
+        let mut chi2 = 0.0;
+        for _ in 0..df {
+            let g = self.gaussian();
+            chi2 += g * g;
+        }
+        (z / (chi2 / df as f64).sqrt()) as f32
+    }
+
+    /// Fill `out` with i.i.d. standard normals.
+    pub fn fill_gaussian(&mut self, out: &mut [f32]) {
+        for x in out.iter_mut() {
+            *x = self.gaussian_f32();
+        }
+    }
+
+    /// A uniformly random permutation of `0..n` (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            p.swap(i, j);
+        }
+        p
+    }
+
+    /// `k` distinct indices sampled uniformly without replacement from
+    /// `0..n` (partial Fisher–Yates; O(n) memory, O(k) swaps).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            p.swap(i, j);
+        }
+        p.truncate(k);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut rng = Rng::seed_from(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::seed_from(11);
+        let n = 100_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = rng.gaussian();
+            m1 += g;
+            m2 += g * g;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean={m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var={m2}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut rng = Rng::seed_from(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[rng.below(10)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count={c}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut rng = Rng::seed_from(5);
+        let p = rng.permutation(257);
+        let mut seen = vec![false; 257];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Rng::seed_from(9);
+        let idx = rng.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn student_t_df1_is_heavy_tailed() {
+        let mut rng = Rng::seed_from(13);
+        let n = 50_000;
+        let big = (0..n).filter(|_| rng.student_t(1).abs() > 10.0).count();
+        // Cauchy: P(|X| > 10) = 2/pi * atan(1/10) ~ 0.0635.
+        let frac = big as f64 / n as f64;
+        assert!((frac - 0.0635).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::seed_from(21);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+}

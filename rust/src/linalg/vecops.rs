@@ -1,0 +1,183 @@
+//! Dense-vector helpers: norms, BLAS-1 style kernels and small dense
+//! matrix–vector products used by frames, objectives and optimizers.
+
+/// Euclidean norm `‖x‖₂` (f64 accumulation for stability).
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Squared Euclidean norm `‖x‖₂²`.
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f32 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() as f32
+}
+
+/// Max norm `‖x‖∞`.
+#[inline]
+pub fn norm_inf(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// `l1` norm `‖x‖₁`.
+#[inline]
+pub fn norm1(x: &[f32]) -> f32 {
+    x.iter().map(|&v| v.abs() as f64).sum::<f64>() as f32
+}
+
+/// Number of non-zeros `‖x‖₀`.
+#[inline]
+pub fn norm0(x: &[f32]) -> usize {
+    x.iter().filter(|&&v| v != 0.0).count()
+}
+
+/// Dot product (f64 accumulation).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x as f64) * (y as f64)).sum::<f64>() as f32
+}
+
+/// `y ← y + alpha·x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x ← alpha·x`.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Elementwise difference `a - b`.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x - y).collect()
+}
+
+/// `‖a - b‖₂` without allocating.
+pub fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+/// Row-major dense matrix `A (rows × cols)` times vector: `out = A·x`.
+pub fn matvec(a: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &a[r * cols..(r + 1) * cols];
+        *o = dot(row, x);
+    }
+}
+
+/// Row-major dense transposed product: `out = Aᵀ·x` (`x` has `rows` entries).
+pub fn matvec_t(a: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    out.fill(0.0);
+    for (r, &xr) in x.iter().enumerate() {
+        if xr == 0.0 {
+            continue;
+        }
+        let row = &a[r * cols..(r + 1) * cols];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += xr * v;
+        }
+    }
+}
+
+/// Indices of the `k` largest-magnitude entries (unordered). `O(n)` average
+/// via std's introselect (`select_nth_unstable_by`) on magnitudes — this is
+/// the Top-k sparsifier's kernel and beats the paper's
+/// `O(k + (n-k)log k)` heap bound for the regimes we run.
+pub fn top_k_indices(x: &[f32], k: usize) -> Vec<usize> {
+    let n = x.len();
+    if k >= n {
+        return (0..n).collect();
+    }
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+
+    #[test]
+    fn norms_basic() {
+        let x = [3.0, -4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-6);
+        assert!((norm_inf(&x) - 4.0).abs() < 1e-6);
+        assert!((norm1(&x) - 7.0).abs() < 1e-6);
+        assert_eq!(norm0(&[0.0, 1.0, 0.0, 2.0]), 2);
+    }
+
+    #[test]
+    fn dot_axpy() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert!((dot(&a, &b) - 32.0).abs() < 1e-6);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn matvec_roundtrip_against_transpose() {
+        let mut rng = Rng::seed_from(1);
+        let (rows, cols) = (7, 5);
+        let a: Vec<f32> = (0..rows * cols).map(|_| rng.gaussian_f32()).collect();
+        let x: Vec<f32> = (0..cols).map(|_| rng.gaussian_f32()).collect();
+        let y: Vec<f32> = (0..rows).map(|_| rng.gaussian_f32()).collect();
+        // <Ax, y> == <x, A^T y>
+        let mut ax = vec![0.0; rows];
+        matvec(&a, rows, cols, &x, &mut ax);
+        let mut aty = vec![0.0; cols];
+        matvec_t(&a, rows, cols, &y, &mut aty);
+        assert!((dot(&ax, &y) - dot(&x, &aty)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn top_k_matches_sort() {
+        let mut rng = Rng::seed_from(2);
+        for &(n, k) in &[(10usize, 3usize), (100, 10), (257, 77), (64, 64), (5, 0)] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let mut got = top_k_indices(&x, k);
+            got.sort_unstable();
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| x[b].abs().partial_cmp(&x[a].abs()).unwrap());
+            // Compare magnitude threshold rather than exact indices (ties).
+            if k > 0 && k < n {
+                let thresh = x[order[k - 1]].abs();
+                for &i in &got {
+                    assert!(x[i].abs() >= thresh - 1e-6);
+                }
+            }
+            assert_eq!(got.len(), k.min(n));
+        }
+    }
+}

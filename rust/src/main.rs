@@ -1,0 +1,199 @@
+//! `repro` — the kashinflow CLI.
+//!
+//! ```text
+//! repro table1|fig1a|fig1b|fig1c|fig1d|fig2ab|fig2cd|fig3a|fig3b|fig5|fig6|fig8|fig11   [--quick]
+//! repro figures [--quick]            # everything above in sequence
+//! repro train  [key=value ...]       # distributed run on a planted problem
+//! repro train-transformer [key=value ...]  # federated transformer (needs artifacts)
+//! ```
+//!
+//! `train` keys: n, workers, r, scheme, frame, rounds, step, batch, radius,
+//! seed (see coordinator::config). Example:
+//! `repro train n=116 workers=4 r=0.5 scheme=ndsc-dith rounds=300`
+
+use kashinflow::coordinator::config::RunConfig;
+use kashinflow::coordinator::worker::DatasetGradSource;
+use kashinflow::data::synthetic::planted_regression_shards;
+use kashinflow::exp;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::opt::objectives::Loss;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command> [--quick] [key=value ...]\n\
+         commands: table1 fig1a fig1b fig1c fig1d fig2ab fig2cd fig3a fig3b\n\
+                   fig5 fig6 fig8 fig11 ablation-ef ablation-lambda ablation-dqgd\n                   figures train train-transformer"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args.remove(0);
+    let quick = if let Some(pos) = args.iter().position(|a| a == "--quick") {
+        args.remove(pos);
+        true
+    } else {
+        false
+    };
+    match cmd.as_str() {
+        "table1" => exp::table1::run(quick),
+        "fig1a" => {
+            exp::fig1::fig1a(quick);
+        }
+        "fig1b" => {
+            exp::fig1::fig1b(quick);
+        }
+        "fig1c" => {
+            exp::fig1::fig1c(quick);
+        }
+        "fig1d" => {
+            exp::fig1::fig1d(quick);
+        }
+        "fig2ab" => {
+            exp::fig2::fig2ab(quick);
+        }
+        "fig2cd" => {
+            exp::fig2::fig2cd(quick);
+        }
+        "fig3a" => {
+            exp::fig3::fig3a(quick);
+        }
+        "fig3b" => {
+            if let Err(e) = exp::transformer::fig3b(quick) {
+                eprintln!("fig3b failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        "fig5" => {
+            exp::fig3::fig5(quick);
+        }
+        "fig6" => {
+            exp::fig3::fig6(quick);
+        }
+        "fig8" | "fig9" => {
+            exp::appendix::fig8_9(quick);
+        }
+        "ablation-ef" => {
+            exp::ablation::ablation_ef(quick);
+        }
+        "ablation-lambda" => {
+            exp::ablation::ablation_lambda(quick);
+        }
+        "ablation-dqgd" => {
+            exp::ablation::ablation_dqgd(quick);
+        }
+        "fig11" | "fig12" => {
+            exp::appendix::fig11_12(quick);
+        }
+        "figures" => {
+            exp::table1::run(quick);
+            exp::fig1::fig1a(quick);
+            exp::fig1::fig1b(quick);
+            exp::fig1::fig1c(quick);
+            exp::fig1::fig1d(quick);
+            exp::fig2::fig2ab(quick);
+            exp::fig2::fig2cd(quick);
+            exp::fig3::fig3a(quick);
+            exp::fig3::fig5(quick);
+            exp::fig3::fig6(quick);
+            exp::appendix::fig8_9(quick);
+            exp::appendix::fig11_12(quick);
+            exp::ablation::ablation_ef(quick);
+            exp::ablation::ablation_lambda(quick);
+            exp::ablation::ablation_dqgd(quick);
+            // fig3b last: requires artifacts
+            match exp::transformer::fig3b(quick) {
+                Ok(_) => {}
+                Err(e) => eprintln!("fig3b skipped: {e:#} (run `make artifacts`)"),
+            }
+        }
+        "train" => {
+            let cfg = match RunConfig::parse_args(&args) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("config error: {e}");
+                    std::process::exit(2);
+                }
+            };
+            run_train(&cfg);
+        }
+        "train-transformer" => {
+            let cfg = match RunConfig::parse_args(&args) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("config error: {e}");
+                    std::process::exit(2);
+                }
+            };
+            match exp::transformer::train_federated(
+                cfg.scheme,
+                cfg.r,
+                cfg.workers,
+                cfg.rounds,
+                cfg.step,
+                cfg.seed,
+            ) {
+                Ok(metrics) => {
+                    print!("{}", metrics.to_csv());
+                    eprintln!(
+                        "final loss {:.4}; {:.3} bits/dim/worker/round; {} total payload MB",
+                        metrics.final_value(),
+                        metrics.mean_rate(metrics.final_iterate.len(), cfg.workers),
+                        metrics.total_payload_bits / 8 / 1_000_000
+                    );
+                }
+                Err(e) => {
+                    eprintln!("train-transformer failed: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => usage(),
+    }
+}
+
+/// Distributed training on a planted regression problem (the `train`
+/// subcommand): the quickest way to exercise the full coordinator.
+fn run_train(cfg: &RunConfig) {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let s_local = 10;
+    let (shards, xs) =
+        planted_regression_shards(cfg.workers, s_local, cfg.n, Loss::Square, &mut rng, false);
+    let global = shards.clone();
+    let comps = cfg.build_compressors(&mut rng);
+    let sources: Vec<Box<dyn kashinflow::coordinator::worker::GradSource>> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, obj)| {
+            Box::new(DatasetGradSource {
+                obj,
+                batch: cfg.batch,
+                rng: Rng::seed_from(cfg.seed ^ (7 + i as u64)),
+            }) as Box<dyn kashinflow::coordinator::worker::GradSource>
+        })
+        .collect();
+    let m = cfg.workers;
+    let metrics = kashinflow::coordinator::run_distributed(
+        cfg,
+        vec![0.0; cfg.n],
+        sources,
+        comps,
+        move |x| global.iter().map(|s| s.value(x)).sum::<f32>() / m as f32,
+    );
+    print!("{}", metrics.to_csv());
+    let dist: f32 = kashinflow::linalg::vecops::dist2(&metrics.final_iterate, &xs);
+    eprintln!(
+        "scheme={} R={} workers={}: final value {:.6}, ||x-x*||={:.4}, rate {:.3} b/dim, rejected {}",
+        cfg.scheme,
+        cfg.r,
+        cfg.workers,
+        metrics.final_value(),
+        dist,
+        metrics.mean_rate(cfg.n, cfg.workers),
+        metrics.rejected_messages
+    );
+}

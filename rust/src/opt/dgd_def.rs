@@ -1,0 +1,222 @@
+//! **DGD-DEF** — Distributed Gradient Descent with Democratically Encoded
+//! Feedback (Algorithm 1).
+//!
+//! The worker keeps the quantization error `e_{t−1}`, evaluates the
+//! gradient at the *shifted* point `z_t = x̂_t + α·e_{t−1}` (which makes
+//! `z_t` track the **unquantized** GD trajectory exactly — the recursive
+//! invariant of App. D), subtracts the error from the gradient before
+//! encoding, and sends the (N)DSC codeword. Theorem 2: the iterates
+//! converge linearly at rate `max{ν, β}` with `β = 2^{1−R/λ}K_u` (DSC) or
+//! `2^{2−R/λ}√log(2N)` (NDSC) — dimension-free, matching the
+//! `max{σ, 2^{−R}}` lower bound up to constants.
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::dist2;
+use crate::opt::objectives::DatasetObjective;
+use crate::opt::{IterRecord, Trace};
+use crate::quant::Compressor;
+
+/// Options for a DGD-DEF run.
+#[derive(Clone, Copy, Debug)]
+pub struct DgdDefOptions {
+    /// Step size `α ≤ α* = 2/(L+μ)`.
+    pub step: f32,
+    pub iters: usize,
+}
+
+impl DgdDefOptions {
+    pub fn optimal(l: f32, mu: f32, iters: usize) -> Self {
+        DgdDefOptions { step: 2.0 / (l + mu), iters }
+    }
+}
+
+/// Run Algorithm 1 with the given compressor as `(E, D)`.
+pub fn run(
+    obj: &DatasetObjective,
+    compressor: &dyn Compressor,
+    x0: &[f32],
+    x_star: Option<&[f32]>,
+    opts: DgdDefOptions,
+    rng: &mut Rng,
+) -> Trace {
+    let n = obj.dim();
+    assert_eq!(compressor.n(), n);
+    let mut xhat = x0.to_vec();
+    let mut e = vec![0.0f32; n]; // e_{-1} = 0
+    let mut z = vec![0.0f32; n];
+    let mut u = vec![0.0f32; n];
+    let mut trace = Trace::default();
+    for _ in 0..opts.iters {
+        trace.records.push(IterRecord {
+            value: obj.value(&xhat),
+            dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
+            payload_bits: 0,
+        });
+        // Worker:
+        // z_t = x̂_t + α e_{t−1}
+        for ((zi, &xi), &ei) in z.iter_mut().zip(&xhat).zip(&e) {
+            *zi = xi + opts.step * ei;
+        }
+        // u_t = ∇f(z_t) − e_{t−1}
+        obj.gradient(&z, &mut u);
+        for (ui, &ei) in u.iter_mut().zip(&e) {
+            *ui -= ei;
+        }
+        // v_t = E(u_t); q_t = D(v_t)
+        let msg = compressor.compress(&u, rng);
+        trace.total_payload_bits += msg.payload_bits;
+        trace.total_side_bits += msg.side_bits;
+        if let Some(r) = trace.records.last_mut() {
+            r.payload_bits = msg.payload_bits;
+        }
+        let q = compressor.decompress(&msg);
+        // e_t = q_t − u_t
+        for ((ei, &qi), &ui) in e.iter_mut().zip(&q).zip(&u) {
+            *ei = qi - ui;
+        }
+        // Server: x̂_{t+1} = x̂_t − α q_t
+        for (xi, &qi) in xhat.iter_mut().zip(&q) {
+            *xi -= opts.step * qi;
+        }
+    }
+    trace.records.push(IterRecord {
+        value: obj.value(&xhat),
+        dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
+        payload_bits: 0,
+    });
+    trace.final_x = xhat;
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::frames::HadamardFrame;
+    use crate::linalg::vecops::matvec;
+    use crate::opt::gd::sigma;
+    use crate::opt::objectives::Loss;
+    use crate::quant::gain_shape::NaiveUniform;
+    use crate::quant::ndsc::Ndsc;
+
+    fn planted_lsq(m: usize, n: usize, seed: u64) -> (DatasetObjective, Vec<f32>) {
+        let mut rng = Rng::seed_from(seed);
+        // Gaussian-cubed entries as in Fig. 1b.
+        let a: Vec<f32> = (0..m * n).map(|_| rng.gaussian_cubed()).collect();
+        let xs: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut b = vec![0.0f32; m];
+        matvec(&a, m, n, &xs, &mut b);
+        (DatasetObjective::new(a, b, m, n, Loss::Square, 0.1), xs)
+    }
+
+    #[test]
+    fn converges_with_ndsc_at_moderate_budget() {
+        let (obj, _) = planted_lsq(80, 30, 1);
+        let xs = obj.quadratic_minimizer();
+        let (l, mu) = obj.smoothness_strong_convexity();
+        let mut rng = Rng::seed_from(2);
+        let c = Ndsc::hadamard(30, 6.0, &mut rng);
+        let trace =
+            run(&obj, &c, &vec![0.0; 30], Some(&xs), DgdDefOptions::optimal(l, mu, 200), &mut rng);
+        let d_end = trace.records.last().unwrap().dist_to_opt;
+        let d_0 = trace.records[0].dist_to_opt;
+        assert!(d_end < 1e-2 * d_0, "no convergence: {d_end} vs {d_0}");
+    }
+
+    #[test]
+    fn rate_approaches_sigma_at_high_budget() {
+        // Thm 2: for R large, max{ν, β} = ν → σ.
+        let (obj, _) = planted_lsq(60, 16, 3);
+        let xs = obj.quadratic_minimizer();
+        let (l, mu) = obj.smoothness_strong_convexity();
+        let mut rng = Rng::seed_from(4);
+        let c = Ndsc::hadamard(16, 10.0, &mut rng);
+        let trace =
+            run(&obj, &c, &vec![0.0; 16], Some(&xs), DgdDefOptions::optimal(l, mu, 150), &mut rng);
+        let s = sigma(l, mu);
+        assert!(
+            trace.empirical_rate() <= s + 0.05,
+            "rate {} should be near sigma {s}",
+            trace.empirical_rate()
+        );
+    }
+
+    #[test]
+    fn ndsc_converges_where_naive_fails() {
+        // The Fig. 1b crossover: at a low budget NDSC converges while the
+        // naive scalar quantizer (sqrt(n) penalty) does not.
+        let (obj, _) = planted_lsq(200, 116, 5);
+        let xs = obj.quadratic_minimizer();
+        let (l, mu) = obj.smoothness_strong_convexity();
+        let mut rng = Rng::seed_from(6);
+        let r = 3.0;
+        let opts = DgdDefOptions::optimal(l, mu, 120);
+        let ndsc = Ndsc::hadamard(116, r, &mut rng);
+        let t_ndsc = run(&obj, &ndsc, &vec![0.0; 116], Some(&xs), opts, &mut rng);
+        let naive = NaiveUniform::new(116, r);
+        let t_naive = run(&obj, &naive, &vec![0.0; 116], Some(&xs), opts, &mut rng);
+        assert!(
+            t_ndsc.empirical_rate() < t_naive.empirical_rate(),
+            "NDSC {} !< naive {}",
+            t_ndsc.empirical_rate(),
+            t_naive.empirical_rate()
+        );
+        assert!(t_ndsc.empirical_rate() < 1.0);
+    }
+
+    #[test]
+    fn error_feedback_invariant_tracks_unquantized_gd() {
+        // App. D: x̂_t = x_t − α·e_{t−1}, i.e. z_t equals the unquantized GD
+        // trajectory. We verify by running both and reconstructing z.
+        let (obj, _) = planted_lsq(40, 8, 7);
+        let (l, mu) = obj.smoothness_strong_convexity();
+        let step = 2.0 / (l + mu);
+        let mut rng = Rng::seed_from(8);
+        let frame = HadamardFrame::new(8, &mut rng);
+        let c = Ndsc::new(frame, 4.0);
+        // Manual DGD-DEF, checking the invariant each step.
+        let n = 8;
+        let mut xhat = vec![0.0f32; n];
+        let mut e = vec![0.0f32; n];
+        let mut x_gd = vec![0.0f32; n]; // unquantized trajectory
+        let mut g = vec![0.0f32; n];
+        for _ in 0..30 {
+            // invariant: x_gd == xhat + step*e
+            let z: Vec<f32> =
+                xhat.iter().zip(&e).map(|(&xi, &ei)| xi + step * ei).collect();
+            assert!(dist2(&z, &x_gd) < 1e-2 * (1.0 + crate::linalg::vecops::norm2(&x_gd)));
+            // advance unquantized GD
+            obj.gradient(&x_gd, &mut g);
+            for (xi, &gi) in x_gd.iter_mut().zip(&g) {
+                *xi -= step * gi;
+            }
+            // advance DGD-DEF
+            obj.gradient(&z, &mut g);
+            let u: Vec<f32> = g.iter().zip(&e).map(|(&gi, &ei)| gi - ei).collect();
+            let q = c.decompress(&c.compress(&u, &mut rng));
+            for ((ei, &qi), &ui) in e.iter_mut().zip(&q).zip(&u) {
+                *ei = qi - ui;
+            }
+            for (xi, &qi) in xhat.iter_mut().zip(&q) {
+                *xi -= step * qi;
+            }
+        }
+    }
+
+    #[test]
+    fn bits_accounted_per_iteration() {
+        let (obj, _) = planted_lsq(30, 10, 9);
+        let (l, mu) = obj.smoothness_strong_convexity();
+        let mut rng = Rng::seed_from(10);
+        let c = Ndsc::hadamard(10, 2.0, &mut rng);
+        let iters = 25;
+        let trace = run(
+            &obj,
+            &c,
+            &vec![0.0; 10],
+            None,
+            DgdDefOptions { step: 2.0 / (l + mu), iters },
+            &mut rng,
+        );
+        assert_eq!(trace.total_payload_bits, iters * crate::quant::budget_bits(10, 2.0));
+    }
+}

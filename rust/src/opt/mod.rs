@@ -1,0 +1,68 @@
+//! First-order optimization under a bit budget — §4 of the paper.
+//!
+//! * [`objectives`] — the objective zoo of the evaluation: least squares,
+//!   ridge, hinge-loss SVM, logistic regression, with smoothness/strong
+//!   convexity constants and closed-form minimizers where they exist.
+//! * [`oracle`] — exact-gradient and stochastic-subgradient oracles.
+//! * [`gd`] — unquantized gradient descent (the `σ = (L−μ)/(L+μ)` baseline).
+//! * [`dgd_def`] — **DGD-DEF** (Alg. 1): quantized GD with democratically
+//!   encoded error feedback; linear convergence at rate `max{ν, β}`.
+//! * [`psgd`] / [`dq_psgd`] — projected stochastic subgradient descent and
+//!   its democratically-quantized version **DQ-PSGD** (Alg. 2).
+//! * [`multi`] — the multi-worker consensus loop (Alg. 3) in its
+//!   single-process algorithmic form (the threaded runtime lives in
+//!   [`crate::coordinator`]).
+//! * [`projection`] — Euclidean-ball projection `Γ_X`.
+
+pub mod dgd_def;
+pub mod dq_psgd;
+pub mod gd;
+pub mod multi;
+pub mod multi_def;
+pub mod objectives;
+pub mod oracle;
+pub mod projection;
+pub mod psgd;
+
+/// Per-iteration record common to all optimizer traces.
+#[derive(Clone, Debug, Default)]
+pub struct IterRecord {
+    /// Objective value at the current (or averaged) iterate.
+    pub value: f32,
+    /// `‖x_t − x*‖₂` when the minimizer is known, else `NaN`.
+    pub dist_to_opt: f32,
+    /// Quantized payload bits sent this iteration (0 for unquantized).
+    pub payload_bits: usize,
+}
+
+/// Result of an optimizer run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub records: Vec<IterRecord>,
+    pub final_x: Vec<f32>,
+    /// Total payload bits across the run.
+    pub total_payload_bits: usize,
+    /// Total side-information bits.
+    pub total_side_bits: usize,
+}
+
+impl Trace {
+    /// Empirical linear rate `(‖x_T − x*‖ / ‖x_0 − x*‖)^{1/T}` — the y-axis
+    /// of Fig. 1b. Clipped at 1 when diverging (as in the paper).
+    pub fn empirical_rate(&self) -> f32 {
+        if self.records.len() < 2 {
+            return 1.0;
+        }
+        let d0 = self.records.first().unwrap().dist_to_opt;
+        let dt = self.records.last().unwrap().dist_to_opt;
+        if !(d0 > 0.0) || !dt.is_finite() {
+            return 1.0;
+        }
+        let t = (self.records.len() - 1) as f32;
+        ((dt / d0).powf(1.0 / t)).min(1.0)
+    }
+
+    pub fn final_value(&self) -> f32 {
+        self.records.last().map(|r| r.value).unwrap_or(f32::NAN)
+    }
+}

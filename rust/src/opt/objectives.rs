@@ -1,0 +1,357 @@
+//! The objective zoo of the paper's evaluation.
+//!
+//! One struct, [`DatasetObjective`], covers every experiment: a data matrix
+//! `A ∈ R^{m×n}`, targets `b ∈ R^m`, a [`Loss`] and an optional `l₂`
+//! regularizer. Square loss gives the smooth strongly-convex setting of
+//! §4.1 (with computable `L`, `μ` and minimizer); hinge gives the general
+//! convex non-smooth SVM of §5; logistic is included for completeness.
+
+use crate::linalg::frames::{cholesky, cholesky_solve};
+use crate::linalg::vecops::{dot, matvec, matvec_t, norm2};
+
+/// Per-sample loss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// `½(aᵀx − b)²` — least squares (Figs. 1b, 1d, 3a, 5, 6).
+    Square,
+    /// `max(0, 1 − b·aᵀx)` — SVM hinge (Fig. 2); `b ∈ {±1}`.
+    Hinge,
+    /// `log(1 + exp(−b·aᵀx))` — logistic; `b ∈ {±1}`.
+    Logistic,
+}
+
+/// `f(x) = (1/m)·Σᵢ loss(aᵢᵀx, bᵢ) + (reg/2)‖x‖²`.
+#[derive(Clone)]
+pub struct DatasetObjective {
+    /// Row-major `m × n` data matrix.
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub m: usize,
+    pub n: usize,
+    pub loss: Loss,
+    /// `l₂` regularization coefficient (the "ridge" of Fig. 1d).
+    pub reg: f32,
+    /// Scale: `1/m` averaging (matches the paper's formulations).
+    avg: f32,
+}
+
+impl DatasetObjective {
+    pub fn new(a: Vec<f32>, b: Vec<f32>, m: usize, n: usize, loss: Loss, reg: f32) -> Self {
+        assert_eq!(a.len(), m * n);
+        assert_eq!(b.len(), m);
+        DatasetObjective { a, b, m, n, loss, reg, avg: 1.0 / m as f32 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        &self.a[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Objective value.
+    pub fn value(&self, x: &[f32]) -> f32 {
+        let mut acc = 0.0f64;
+        for i in 0..self.m {
+            let z = dot(self.row(i), x);
+            acc += match self.loss {
+                Loss::Square => {
+                    let d = (z - self.b[i]) as f64;
+                    0.5 * d * d
+                }
+                Loss::Hinge => (1.0 - (self.b[i] * z) as f64).max(0.0),
+                Loss::Logistic =>
+
+                {
+                    let t = (-(self.b[i] * z)) as f64;
+                    // log(1+e^t) computed stably
+                    if t > 30.0 {
+                        t
+                    } else {
+                        t.exp().ln_1p()
+                    }
+                }
+            };
+        }
+        (acc * self.avg as f64) as f32 + 0.5 * self.reg * norm2(x).powi(2)
+    }
+
+    /// Full (sub)gradient into `out`.
+    pub fn gradient(&self, x: &[f32], out: &mut [f32]) {
+        self.minibatch_gradient(x, None, out);
+    }
+
+    /// (Sub)gradient over a minibatch of row indices (`None` = all rows).
+    /// Minibatch gradients are scaled by `1/|batch|`, making them unbiased
+    /// estimates of the full gradient — the stochastic oracle of §5.
+    pub fn minibatch_gradient(&self, x: &[f32], batch: Option<&[usize]>, out: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        let indices: Box<dyn Iterator<Item = usize>> = match batch {
+            Some(idx) => Box::new(idx.iter().copied()),
+            None => Box::new(0..self.m),
+        };
+        let mut count = 0usize;
+        for i in indices {
+            count += 1;
+            let row = self.row(i);
+            let z = dot(row, x);
+            let coef = match self.loss {
+                Loss::Square => z - self.b[i],
+                Loss::Hinge => {
+                    if self.b[i] * z < 1.0 {
+                        -self.b[i]
+                    } else {
+                        0.0
+                    }
+                }
+                Loss::Logistic => {
+                    let t = (self.b[i] * z) as f64;
+                    (-(self.b[i] as f64) / (1.0 + t.exp())) as f32
+                }
+            };
+            if coef != 0.0 {
+                for (o, &r) in out.iter_mut().zip(row) {
+                    *o += coef * r;
+                }
+            }
+        }
+        let scale = 1.0 / count.max(1) as f32;
+        for (o, &xi) in out.iter_mut().zip(x) {
+            *o = *o * scale + self.reg * xi;
+        }
+    }
+
+    /// Hessian of the square-loss objective: `(1/m)AᵀA + reg·I` (row-major
+    /// `n×n`). Panics for non-quadratic losses.
+    pub fn quadratic_hessian(&self) -> Vec<f32> {
+        assert_eq!(self.loss, Loss::Square, "hessian only for square loss");
+        let mut h = vec![0.0f32; self.n * self.n];
+        for i in 0..self.m {
+            let row = self.row(i);
+            for p in 0..self.n {
+                if row[p] == 0.0 {
+                    continue;
+                }
+                let rp = row[p] * self.avg;
+                for q in 0..self.n {
+                    h[p * self.n + q] += rp * row[q];
+                }
+            }
+        }
+        for p in 0..self.n {
+            h[p * self.n + p] += self.reg;
+        }
+        h
+    }
+
+    /// `(L, μ)` of the square-loss objective via power iteration on the
+    /// Hessian (λ_max) and on `L·I − H` (λ_min).
+    pub fn smoothness_strong_convexity(&self) -> (f32, f32) {
+        let h = self.quadratic_hessian();
+        let l = lambda_max(&h, self.n);
+        // λ_min(H) = l - λ_max(l·I - H)
+        let mut shifted = h;
+        for p in 0..self.n {
+            for q in 0..self.n {
+                let v = shifted[p * self.n + q];
+                shifted[p * self.n + q] = if p == q { l - v } else { -v };
+            }
+        }
+        let mu = (l - lambda_max(&shifted, self.n)).max(0.0);
+        (l, mu)
+    }
+
+    /// Exact minimizer of the square-loss objective via the normal
+    /// equations `(AᵀA/m + reg·I)x = Aᵀb/m` (Cholesky).
+    pub fn quadratic_minimizer(&self) -> Vec<f32> {
+        assert_eq!(self.loss, Loss::Square);
+        let h = self.quadratic_hessian();
+        let mut rhs = vec![0.0f32; self.n];
+        matvec_t(&self.a, self.m, self.n, &self.b, &mut rhs);
+        for v in rhs.iter_mut() {
+            *v *= self.avg;
+        }
+        let l = cholesky(&h, self.n).expect("normal equations should be PD (add reg if rank-deficient)");
+        cholesky_solve(&l, self.n, &mut rhs);
+        rhs
+    }
+
+    /// Residual vector `Ax − b` (handy for tests).
+    pub fn residual(&self, x: &[f32]) -> Vec<f32> {
+        let mut r = vec![0.0f32; self.m];
+        matvec(&self.a, self.m, self.n, x, &mut r);
+        for (ri, &bi) in r.iter_mut().zip(&self.b) {
+            *ri -= bi;
+        }
+        r
+    }
+
+    /// Training classification error (fraction misclassified) for ±1
+    /// labels — the y-axis of Fig. 2b/2d.
+    pub fn classification_error(&self, x: &[f32]) -> f32 {
+        let mut wrong = 0usize;
+        for i in 0..self.m {
+            let z = dot(self.row(i), x);
+            if z * self.b[i] <= 0.0 {
+                wrong += 1;
+            }
+        }
+        wrong as f32 / self.m as f32
+    }
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix by power iteration.
+pub fn lambda_max(h: &[f32], n: usize) -> f32 {
+    let mut v = vec![1.0f32 / (n as f32).sqrt(); n];
+    let mut hv = vec![0.0f32; n];
+    let mut lambda = 0.0f32;
+    for _ in 0..300 {
+        matvec(h, n, n, &v, &mut hv);
+        let nrm = norm2(&hv);
+        if nrm == 0.0 {
+            return 0.0;
+        }
+        let new_lambda = dot(&v, &hv);
+        for (vi, &hvi) in v.iter_mut().zip(&hv) {
+            *vi = hvi / nrm;
+        }
+        if (new_lambda - lambda).abs() < 1e-7 * new_lambda.abs().max(1.0) {
+            return new_lambda;
+        }
+        lambda = new_lambda;
+    }
+    lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+    use crate::linalg::vecops::dist2;
+
+    fn random_lsq(m: usize, n: usize, seed: u64) -> DatasetObjective {
+        let mut rng = Rng::seed_from(seed);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.gaussian_f32()).collect();
+        let x_star: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut b = vec![0.0f32; m];
+        matvec(&a, m, n, &x_star, &mut b);
+        DatasetObjective::new(a, b, m, n, Loss::Square, 0.0)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut rng = Rng::seed_from(1);
+        for loss in [Loss::Square, Loss::Logistic] {
+            let (m, n) = (20, 6);
+            let a: Vec<f32> = (0..m * n).map(|_| rng.gaussian_f32()).collect();
+            let b: Vec<f32> = (0..m).map(|_| rng.sign()).collect();
+            let obj = DatasetObjective::new(a, b, m, n, loss, 0.1);
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32() * 0.3).collect();
+            let mut g = vec![0.0f32; n];
+            obj.gradient(&x, &mut g);
+            let eps = 1e-3;
+            for j in 0..n {
+                let mut xp = x.clone();
+                xp[j] += eps;
+                let mut xm = x.clone();
+                xm[j] -= eps;
+                let fd = (obj.value(&xp) - obj.value(&xm)) / (2.0 * eps);
+                assert!(
+                    (fd - g[j]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{loss:?} coord {j}: fd {fd} vs g {}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hinge_subgradient_is_descentish() {
+        // The hinge subgradient at non-kink points equals the FD derivative.
+        let mut rng = Rng::seed_from(2);
+        let (m, n) = (15, 4);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.gaussian_f32()).collect();
+        let b: Vec<f32> = (0..m).map(|_| rng.sign()).collect();
+        let obj = DatasetObjective::new(a, b, m, n, Loss::Hinge, 0.0);
+        let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut g = vec![0.0f32; n];
+        obj.gradient(&x, &mut g);
+        // Moving against the subgradient shouldn't increase the objective
+        // (locally, for a small enough step on a convex function).
+        let f0 = obj.value(&x);
+        let step = 1e-4 / (1.0 + norm2(&g));
+        let x2: Vec<f32> = x.iter().zip(&g).map(|(&xi, &gi)| xi - step * gi).collect();
+        assert!(obj.value(&x2) <= f0 + 1e-6);
+    }
+
+    #[test]
+    fn minimizer_zeroes_gradient_and_matches_planted() {
+        let obj = random_lsq(40, 8, 3);
+        let xs = obj.quadratic_minimizer();
+        let mut g = vec![0.0f32; 8];
+        obj.gradient(&xs, &mut g);
+        assert!(norm2(&g) < 1e-3, "grad at minimizer: {}", norm2(&g));
+        // Planted consistent system: minimum value ~ 0.
+        assert!(obj.value(&xs) < 1e-5);
+    }
+
+    #[test]
+    fn l_mu_bracket_hessian_quadratic_forms() {
+        let mut rng = Rng::seed_from(4);
+        let obj = random_lsq(30, 6, 5);
+        let (l, mu) = obj.smoothness_strong_convexity();
+        assert!(l > 0.0 && mu >= 0.0 && mu <= l);
+        let h = obj.quadratic_hessian();
+        for _ in 0..20 {
+            let v: Vec<f32> = (0..6).map(|_| rng.gaussian_f32()).collect();
+            let mut hv = vec![0.0f32; 6];
+            matvec(&h, 6, 6, &v, &mut hv);
+            let q = dot(&v, &hv) / dot(&v, &v);
+            assert!(q <= l * 1.01 + 1e-5 && q >= mu * 0.99 - 1e-5, "q={q} not in [{mu},{l}]");
+        }
+    }
+
+    #[test]
+    fn minibatch_gradient_unbiased() {
+        let mut rng = Rng::seed_from(6);
+        let obj = random_lsq(50, 5, 7);
+        let x: Vec<f32> = (0..5).map(|_| rng.gaussian_f32()).collect();
+        let mut full = vec![0.0f32; 5];
+        obj.gradient(&x, &mut full);
+        let trials = 4000;
+        let mut mean = vec![0.0f64; 5];
+        let mut g = vec![0.0f32; 5];
+        for _ in 0..trials {
+            let batch = rng.sample_indices(50, 10);
+            obj.minibatch_gradient(&x, Some(&batch), &mut g);
+            for (m, &v) in mean.iter_mut().zip(&g) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        assert!(dist2(&mean_f, &full) < 0.05 * (1.0 + norm2(&full)));
+    }
+
+    #[test]
+    fn classification_error_perfect_vs_random() {
+        // Separable data classified by its generator has zero error.
+        let mut rng = Rng::seed_from(8);
+        let (m, n) = (60, 5);
+        let w: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut a = vec![0.0f32; m * n];
+        let mut b = vec![0.0f32; m];
+        for i in 0..m {
+            for j in 0..n {
+                a[i * n + j] = rng.gaussian_f32();
+            }
+            b[i] = if dot(&a[i * n..(i + 1) * n], &w) >= 0.0 { 1.0 } else { -1.0 };
+        }
+        let obj = DatasetObjective::new(a, b, m, n, Loss::Hinge, 0.0);
+        assert_eq!(obj.classification_error(&w), 0.0);
+        let junk: Vec<f32> = w.iter().map(|&v| -v).collect();
+        assert_eq!(obj.classification_error(&junk), 1.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! First-order oracles — the worker-side gradient access of §1.
+//!
+//! * [`ExactOracle`] — deterministic `∇f(x)` (setting (i), §4.1).
+//! * [`MinibatchOracle`] — unbiased stochastic subgradient from a random
+//!   minibatch (setting (ii), §4.2/§5, where "the stochasticity … arises
+//!   from randomly subsampling the dataset").
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::norm2;
+use crate::opt::objectives::DatasetObjective;
+
+/// A (possibly stochastic) subgradient oracle.
+pub trait Oracle: Send {
+    fn dim(&self) -> usize;
+    /// Write a (sub)gradient estimate at `x` into `out`.
+    fn query(&mut self, x: &[f32], out: &mut [f32]);
+    /// Uniform bound `B` with `‖ĝ(x)‖₂ ≤ B` over the domain of interest
+    /// (needed for DQ-PSGD's step size).
+    fn bound(&self) -> f32;
+}
+
+/// Exact full-gradient oracle.
+pub struct ExactOracle<'a> {
+    pub obj: &'a DatasetObjective,
+    bound: f32,
+}
+
+impl<'a> ExactOracle<'a> {
+    pub fn new(obj: &'a DatasetObjective, bound: f32) -> Self {
+        ExactOracle { obj, bound }
+    }
+}
+
+impl Oracle for ExactOracle<'_> {
+    fn dim(&self) -> usize {
+        self.obj.dim()
+    }
+
+    fn query(&mut self, x: &[f32], out: &mut [f32]) {
+        self.obj.gradient(x, out);
+    }
+
+    fn bound(&self) -> f32 {
+        self.bound
+    }
+}
+
+/// Random-minibatch stochastic subgradient oracle (unbiased).
+pub struct MinibatchOracle<'a> {
+    pub obj: &'a DatasetObjective,
+    pub batch: usize,
+    rng: Rng,
+    bound: f32,
+}
+
+impl<'a> MinibatchOracle<'a> {
+    pub fn new(obj: &'a DatasetObjective, batch: usize, rng: Rng) -> Self {
+        assert!(batch >= 1 && batch <= obj.m);
+        // Conservative subgradient bound for the supported losses:
+        // each per-sample subgradient has norm <= max_i ||a_i|| (hinge,
+        // logistic; coefficient in [-1,1]); square loss is bounded on the
+        // iterate ball — callers can override via with_bound.
+        let mut max_row = 0.0f32;
+        for i in 0..obj.m {
+            max_row = max_row.max(norm2(&obj.a[i * obj.n..(i + 1) * obj.n]));
+        }
+        MinibatchOracle { obj, batch, rng, bound: max_row }
+    }
+
+    pub fn with_bound(mut self, b: f32) -> Self {
+        self.bound = b;
+        self
+    }
+}
+
+impl Oracle for MinibatchOracle<'_> {
+    fn dim(&self) -> usize {
+        self.obj.dim()
+    }
+
+    fn query(&mut self, x: &[f32], out: &mut [f32]) {
+        let batch = self.rng.sample_indices(self.obj.m, self.batch);
+        self.obj.minibatch_gradient(x, Some(&batch), out);
+    }
+
+    fn bound(&self) -> f32 {
+        self.bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::dist2;
+    use crate::opt::objectives::Loss;
+
+    fn svm_objective(seed: u64) -> DatasetObjective {
+        let mut rng = Rng::seed_from(seed);
+        let (m, n) = (40, 6);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.gaussian_f32()).collect();
+        let b: Vec<f32> = (0..m).map(|_| rng.sign()).collect();
+        DatasetObjective::new(a, b, m, n, Loss::Hinge, 0.0)
+    }
+
+    #[test]
+    fn exact_oracle_is_gradient() {
+        let obj = svm_objective(1);
+        let mut oracle = ExactOracle::new(&obj, 10.0);
+        let x = vec![0.1f32; 6];
+        let mut g1 = vec![0.0f32; 6];
+        let mut g2 = vec![0.0f32; 6];
+        oracle.query(&x, &mut g1);
+        obj.gradient(&x, &mut g2);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn minibatch_oracle_unbiased_and_bounded() {
+        let obj = svm_objective(2);
+        let mut oracle = MinibatchOracle::new(&obj, 8, Rng::seed_from(3));
+        let x = vec![0.05f32; 6];
+        let mut full = vec![0.0f32; 6];
+        obj.gradient(&x, &mut full);
+        let trials = 3000;
+        let mut mean = vec![0.0f64; 6];
+        let mut g = vec![0.0f32; 6];
+        for _ in 0..trials {
+            oracle.query(&x, &mut g);
+            assert!(norm2(&g) <= oracle.bound() * 1.01, "||g||={} B={}", norm2(&g), oracle.bound());
+            for (m, &v) in mean.iter_mut().zip(&g) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        assert!(dist2(&mean_f, &full) < 0.05 * (1.0 + norm2(&full)));
+    }
+}

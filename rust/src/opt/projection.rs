@@ -1,0 +1,110 @@
+//! Projection `Γ_X` onto the (compact convex) constraint set — the
+//! projection step of Algorithms 2 and 3.
+
+/// Constraint sets used in the experiments.
+#[derive(Clone, Copy, Debug)]
+pub enum Domain {
+    /// All of `R^n` (no projection).
+    Unconstrained,
+    /// Euclidean ball `{‖x‖₂ ≤ radius}` centered at the origin; the
+    /// paper's compact domain with diameter `D = 2·radius`.
+    L2Ball { radius: f32 },
+    /// Box `[lo, hi]^n`.
+    Box { lo: f32, hi: f32 },
+}
+
+impl Domain {
+    /// Project `x` in place.
+    pub fn project(&self, x: &mut [f32]) {
+        match *self {
+            Domain::Unconstrained => {}
+            Domain::L2Ball { radius } => {
+                let nrm = crate::linalg::vecops::norm2(x);
+                if nrm > radius {
+                    let s = radius / nrm;
+                    for v in x.iter_mut() {
+                        *v *= s;
+                    }
+                }
+            }
+            Domain::Box { lo, hi } => {
+                for v in x.iter_mut() {
+                    *v = v.clamp(lo, hi);
+                }
+            }
+        }
+    }
+
+    /// Diameter `D = sup ‖x − y‖₂` (infinite for unconstrained).
+    pub fn diameter(&self, n: usize) -> f32 {
+        match *self {
+            Domain::Unconstrained => f32::INFINITY,
+            Domain::L2Ball { radius } => 2.0 * radius,
+            Domain::Box { lo, hi } => (hi - lo) * (n as f32).sqrt(),
+        }
+    }
+
+    /// Whether `x` is inside (up to float slack).
+    pub fn contains(&self, x: &[f32]) -> bool {
+        match *self {
+            Domain::Unconstrained => true,
+            Domain::L2Ball { radius } => crate::linalg::vecops::norm2(x) <= radius * (1.0 + 1e-5),
+            Domain::Box { lo, hi } => x.iter().all(|&v| v >= lo - 1e-6 && v <= hi + 1e-6),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+    use crate::linalg::vecops::{dist2, norm2};
+    use crate::testkit::prop::{forall, Cases};
+
+    #[test]
+    fn ball_projection_is_idempotent_and_nonexpansive() {
+        forall(Cases::new("ball projection", 100), |rng: &mut Rng, _| {
+            let n = 1 + rng.below(50);
+            let dom = Domain::L2Ball { radius: 1.0 + rng.uniform_f32() * 4.0 };
+            let mut x: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let mut y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let before = dist2(&x, &y);
+            dom.project(&mut x);
+            dom.project(&mut y);
+            assert!(dom.contains(&x));
+            // idempotence
+            let x1 = x.clone();
+            dom.project(&mut x);
+            assert!(dist2(&x, &x1) < 1e-6);
+            // non-expansiveness
+            assert!(dist2(&x, &y) <= before + 1e-5);
+        });
+    }
+
+    #[test]
+    fn interior_points_unchanged() {
+        let dom = Domain::L2Ball { radius: 10.0 };
+        let mut x = vec![1.0f32, 2.0, -1.5];
+        let orig = x.clone();
+        dom.project(&mut x);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn boundary_scaling() {
+        let dom = Domain::L2Ball { radius: 1.0 };
+        let mut x = vec![3.0f32, 4.0];
+        dom.project(&mut x);
+        assert!((norm2(&x) - 1.0).abs() < 1e-6);
+        assert!((x[0] / x[1] - 0.75).abs() < 1e-6); // direction preserved
+    }
+
+    #[test]
+    fn box_projection() {
+        let dom = Domain::Box { lo: -1.0, hi: 1.0 };
+        let mut x = vec![-3.0f32, 0.5, 7.0];
+        dom.project(&mut x);
+        assert_eq!(x, vec![-1.0, 0.5, 1.0]);
+        assert!((dom.diameter(4) - 4.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,110 @@
+//! Projected stochastic subgradient descent — the unquantized reference for
+//! the general convex non-smooth setting (§4.2), with Polyak–Ruppert
+//! averaging (`x_T = (1/T)Σ x̂_t`, the output of Alg. 2 with `Q = id`).
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::dist2;
+use crate::opt::objectives::DatasetObjective;
+use crate::opt::oracle::Oracle;
+use crate::opt::projection::Domain;
+use crate::opt::{IterRecord, Trace};
+
+#[derive(Clone, Copy, Debug)]
+pub struct PsgdOptions {
+    pub step: f32,
+    pub iters: usize,
+    pub domain: Domain,
+}
+
+impl PsgdOptions {
+    /// The theory step for suboptimality `DB/√T`: `α = D/(B√T)`.
+    pub fn theory(d: f32, b: f32, iters: usize, domain: Domain) -> Self {
+        PsgdOptions { step: d / (b * (iters as f32).sqrt()), iters, domain }
+    }
+}
+
+/// Run projected SGD; records the objective value of the **running
+/// average** (the algorithm's output), as plotted in Fig. 2.
+pub fn run(
+    obj: &DatasetObjective,
+    oracle: &mut dyn Oracle,
+    x0: &[f32],
+    x_star: Option<&[f32]>,
+    opts: PsgdOptions,
+    _rng: &mut Rng,
+) -> Trace {
+    let n = obj.dim();
+    let mut x = x0.to_vec();
+    opts.domain.project(&mut x);
+    let mut avg = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut trace = Trace::default();
+    for t in 0..opts.iters {
+        oracle.query(&x, &mut g);
+        for (xi, &gi) in x.iter_mut().zip(&g) {
+            *xi -= opts.step * gi;
+        }
+        opts.domain.project(&mut x);
+        // running average over x̂_1..x̂_t
+        let w = 1.0 / (t + 1) as f32;
+        for (ai, &xi) in avg.iter_mut().zip(&x) {
+            *ai += w * (xi - *ai);
+        }
+        trace.records.push(IterRecord {
+            value: obj.value(&avg),
+            dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
+            payload_bits: 0,
+        });
+    }
+    trace.final_x = avg;
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::objectives::Loss;
+    use crate::opt::oracle::MinibatchOracle;
+
+    #[test]
+    fn psgd_reduces_hinge_loss() {
+        let mut rng = Rng::seed_from(1);
+        let (m, n) = (100, 30);
+        // Two-Gaussian classes as in Fig. 2a.
+        let mut a = vec![0.0f32; m * n];
+        let mut b = vec![0.0f32; m];
+        for i in 0..m {
+            let cls = if i % 2 == 0 { 1.0 } else { -1.0 };
+            for j in 0..n {
+                a[i * n + j] = rng.gaussian_f32() + cls * 0.8;
+            }
+            b[i] = cls;
+        }
+        let obj = DatasetObjective::new(a, b, m, n, Loss::Hinge, 0.0);
+        let mut oracle = MinibatchOracle::new(&obj, 10, Rng::seed_from(2));
+        let opts = PsgdOptions {
+            step: 0.05,
+            iters: 400,
+            domain: Domain::L2Ball { radius: 10.0 },
+        };
+        let trace = run(&obj, &mut oracle, &vec![0.0; n], None, opts, &mut rng);
+        let first = trace.records[5].value;
+        let last = trace.final_value();
+        assert!(last < 0.7 * first, "no progress: {first} -> {last}");
+        assert!(obj.classification_error(&trace.final_x) < 0.2);
+    }
+
+    #[test]
+    fn iterates_stay_in_domain() {
+        let mut rng = Rng::seed_from(3);
+        let (m, n) = (20, 5);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.gaussian_cubed()).collect();
+        let b: Vec<f32> = (0..m).map(|_| rng.sign()).collect();
+        let obj = DatasetObjective::new(a, b, m, n, Loss::Hinge, 0.0);
+        let mut oracle = MinibatchOracle::new(&obj, 5, Rng::seed_from(4));
+        let dom = Domain::L2Ball { radius: 0.5 };
+        let opts = PsgdOptions { step: 0.3, iters: 50, domain: dom };
+        let trace = run(&obj, &mut oracle, &vec![0.0; n], None, opts, &mut rng);
+        assert!(dom.contains(&trace.final_x));
+    }
+}

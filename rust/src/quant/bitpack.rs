@@ -1,0 +1,225 @@
+//! Exact-width bit packing — the wire format substrate.
+//!
+//! The paper's budget is `R` bits **per dimension**, with `R` any positive
+//! real (sub-linear budgets `R < 1` included), plus `O(1)` bits for scalar
+//! side information (App. F). To make that budget *auditable* rather than
+//! notional, every compressor serializes through [`BitWriter`] /
+//! [`BitReader`]: the coordinator's channel layer counts the exact payload
+//! bits of each message and rejects over-budget sends.
+
+/// Append-only bit-level writer (LSB-first within each byte).
+#[derive(Default, Clone, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in `buf`.
+    len_bits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bits.div_ceil(8)), len_bits: 0 }
+    }
+
+    /// Write the low `width` bits of `value` (`width ≤ 64`).
+    pub fn write_bits(&mut self, value: u64, width: usize) {
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || value < (1u64 << width), "value {value} overflows {width} bits");
+        let mut remaining = width;
+        let mut v = value;
+        while remaining > 0 {
+            let bit_in_byte = self.len_bits % 8;
+            if bit_in_byte == 0 {
+                self.buf.push(0);
+            }
+            let byte = self.buf.last_mut().unwrap();
+            let take = remaining.min(8 - bit_in_byte);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            *byte |= ((v & mask) as u8) << bit_in_byte;
+            v >>= take;
+            remaining -= take;
+            self.len_bits += take;
+        }
+    }
+
+    /// Write a full `f32` (32 bits of side information).
+    pub fn write_f32(&mut self, x: f32) {
+        self.write_bits(x.to_bits() as u64, 32);
+    }
+
+    /// Write a `u64` (e.g. a shared-randomness seed).
+    pub fn write_u64(&mut self, x: u64) {
+        self.write_bits(x & 0xFFFF_FFFF, 32);
+        self.write_bits(x >> 32, 32);
+    }
+
+    /// Total bits written so far.
+    pub fn len_bits(&self) -> usize {
+        self.len_bits
+    }
+
+    /// Finish, returning the byte buffer (last byte zero-padded).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bit-level reader matching [`BitWriter`]'s layout.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos_bits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos_bits: 0 }
+    }
+
+    /// Read `width` bits (`≤ 64`). Panics past end of buffer.
+    pub fn read_bits(&mut self, width: usize) -> u64 {
+        debug_assert!(width <= 64);
+        let mut out = 0u64;
+        let mut got = 0usize;
+        while got < width {
+            let byte_idx = self.pos_bits / 8;
+            let bit_in_byte = self.pos_bits % 8;
+            assert!(byte_idx < self.buf.len(), "BitReader past end");
+            let take = (width - got).min(8 - bit_in_byte);
+            let chunk = (self.buf[byte_idx] >> bit_in_byte) as u64 & ((1u64 << take) - 1);
+            out |= chunk << got;
+            got += take;
+            self.pos_bits += take;
+        }
+        out
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_bits(32) as u32)
+    }
+
+    pub fn read_u64(&mut self) -> u64 {
+        let lo = self.read_bits(32);
+        let hi = self.read_bits(32);
+        lo | (hi << 32)
+    }
+
+    pub fn pos_bits(&self) -> usize {
+        self.pos_bits
+    }
+}
+
+/// Per-coordinate bit allocation for a total budget of `total_bits` over
+/// `big_n` coordinates: each coordinate gets `⌊total/N⌋` bits and the first
+/// `total mod N` coordinates get one extra. Exactly `total_bits` are used.
+///
+/// This is how a *fixed-length* scheme realizes fractional `R` (and the
+/// `nR/N` bits/dimension of Theorem 1's proof): with `R < λ` some
+/// coordinates receive zero bits and decode to the interval midpoint `0`.
+pub fn allocate_bits(total_bits: usize, big_n: usize) -> BitAllocation {
+    let base = total_bits / big_n;
+    let extra = total_bits % big_n;
+    BitAllocation { base, extra, big_n }
+}
+
+/// Compact representation of the allocation (no per-coordinate Vec).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitAllocation {
+    pub base: usize,
+    pub extra: usize,
+    pub big_n: usize,
+}
+
+impl BitAllocation {
+    /// Bits assigned to coordinate `i`.
+    #[inline]
+    pub fn bits(&self, i: usize) -> usize {
+        self.base + usize::from(i < self.extra)
+    }
+
+    /// Total bits across all coordinates.
+    pub fn total(&self) -> usize {
+        self.base * self.big_n + self.extra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Rng;
+    use crate::testkit::prop::{forall, Cases};
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_f32(3.25);
+        w.write_bits(0xDEAD, 16);
+        w.write_bits(1, 1);
+        w.write_u64(0x0123_4567_89AB_CDEF);
+        let total = w.len_bits();
+        assert_eq!(total, 3 + 32 + 16 + 1 + 64);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_f32(), 3.25);
+        assert_eq!(r.read_bits(16), 0xDEAD);
+        assert_eq!(r.read_bits(1), 1);
+        assert_eq!(r.read_u64(), 0x0123_4567_89AB_CDEF);
+        assert_eq!(r.pos_bits(), total);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_streams() {
+        forall(Cases::new("bitpack roundtrip", 200), |rng: &mut Rng, _| {
+            let n_fields = 1 + rng.below(40);
+            let mut fields: Vec<(u64, usize)> = Vec::new();
+            let mut w = BitWriter::new();
+            for _ in 0..n_fields {
+                let width = 1 + rng.below(64);
+                let value = if width == 64 {
+                    rng.next_u64()
+                } else {
+                    rng.next_u64() & ((1u64 << width) - 1)
+                };
+                w.write_bits(value, width);
+                fields.push((value, width));
+            }
+            let expected_bits: usize = fields.iter().map(|f| f.1).sum();
+            assert_eq!(w.len_bits(), expected_bits);
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), expected_bits.div_ceil(8));
+            let mut r = BitReader::new(&bytes);
+            for (value, width) in fields {
+                assert_eq!(r.read_bits(width), value, "width {width}");
+            }
+        });
+    }
+
+    #[test]
+    fn allocation_exactly_spends_budget() {
+        forall(Cases::new("bit allocation", 300), |rng: &mut Rng, _| {
+            let big_n = 1 + rng.below(2000);
+            let total = rng.below(8 * big_n);
+            let alloc = allocate_bits(total, big_n);
+            let sum: usize = (0..big_n).map(|i| alloc.bits(i)).sum();
+            assert_eq!(sum, total);
+            assert_eq!(alloc.total(), total);
+            // Allocation is balanced: widths differ by at most one.
+            let min = alloc.bits(big_n - 1);
+            let max = alloc.bits(0);
+            assert!(max - min <= 1);
+        });
+    }
+
+    #[test]
+    fn sublinear_budget_gives_zero_bits_to_tail() {
+        let alloc = allocate_bits(15, 30); // R = 0.5 over N = 30
+        assert_eq!(alloc.bits(0), 1);
+        assert_eq!(alloc.bits(14), 1);
+        assert_eq!(alloc.bits(15), 0);
+        assert_eq!(alloc.bits(29), 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Compression **in the embedding domain** — Appendix H / Theorem 4.
+//!
+//! For any compressor `C : R^N → R^N`, instead of compressing `y` directly,
+//! compress its (near-)democratic embedding: `E(y) = C(x)`, `D(x') = S·x'`.
+//! Theorem 4 shows the composed error is `γ²‖y‖²` with `γ = K_u` (DE) or
+//! `2√log(2N)` (NDE) — dimension-free — because every coordinate of `x`
+//! carries `Θ(1/√N)` of the mass, the best case for sparsifiers and
+//! scalar quantizers alike. This is the "with NDE" family of curves in
+//! Figs. 1a, 1d, 2a–2d.
+
+use std::sync::Mutex;
+
+use crate::embed::democratic::{KashinParams, KashinSolver};
+use crate::linalg::frames::Frame;
+use crate::linalg::rng::Rng;
+use crate::quant::dsc::EmbedKind;
+use crate::quant::{Compressed, Compressor};
+
+/// `inner` compressor (of dimension `N`) applied to the embedding of `y`
+/// (dimension `n`).
+pub struct EmbeddedCompressor {
+    frame: Box<dyn Frame>,
+    embed: EmbedKind,
+    inner: Box<dyn Compressor>,
+    solver: Mutex<KashinSolver>,
+}
+
+impl EmbeddedCompressor {
+    pub fn new(frame: Box<dyn Frame>, embed: EmbedKind, inner: Box<dyn Compressor>) -> Self {
+        assert_eq!(
+            inner.n(),
+            frame.big_n(),
+            "inner compressor must act on R^N = R^{}",
+            frame.big_n()
+        );
+        let params = KashinParams::for_lambda(frame.lambda());
+        EmbeddedCompressor { frame, embed, inner, solver: Mutex::new(KashinSolver::new(params)) }
+    }
+
+    /// Near-democratic composition (the common case: "X + NDE").
+    pub fn nde(frame: Box<dyn Frame>, inner: Box<dyn Compressor>) -> Self {
+        Self::new(frame, EmbedKind::NearDemocratic, inner)
+    }
+}
+
+impl Compressor for EmbeddedCompressor {
+    fn name(&self) -> String {
+        let tag = match self.embed {
+            EmbedKind::Democratic => "DE",
+            EmbedKind::NearDemocratic => "NDE",
+        };
+        format!("{}+{}", self.inner.name(), tag)
+    }
+
+    fn n(&self) -> usize {
+        self.frame.n()
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        // inner budget is per embedding dimension; express per original dim.
+        self.inner.bits_per_dim() * self.frame.big_n() as f32 / self.frame.n() as f32
+    }
+
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.frame.n());
+        let mut x = vec![0.0f32; self.frame.big_n()];
+        match self.embed {
+            EmbedKind::NearDemocratic => self.frame.pinv_embed(y, &mut x),
+            EmbedKind::Democratic => {
+                let mut solver = self.solver.lock().unwrap();
+                let emb = solver.embed(self.frame.as_ref(), y);
+                x.copy_from_slice(&emb.x);
+            }
+        }
+        let mut msg = self.inner.compress(&x, rng);
+        msg.n = self.frame.n(); // budget accounting is per original dim
+        msg
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut inner_msg = msg.clone();
+        inner_msg.n = self.frame.big_n();
+        let x = self.inner.decompress(&inner_msg);
+        let mut y = vec![0.0f32; self.frame.n()];
+        self.frame.apply(&x, &mut y);
+        y
+    }
+
+    fn is_unbiased(&self) -> bool {
+        // S is linear, so unbiasedness of the inner compressor transfers
+        // (Theorem 4's first step).
+        self.inner.is_unbiased()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::frames::HadamardFrame;
+    use crate::linalg::vecops::{dist2, norm2};
+    use crate::quant::gain_shape::StandardDither;
+    use crate::quant::randk::RandK;
+    use crate::quant::sign::SignQuantizer;
+
+    fn hadamard(n: usize, seed: u64) -> (Box<dyn Frame>, usize) {
+        let mut rng = Rng::seed_from(seed);
+        let f = HadamardFrame::new(n, &mut rng);
+        let big_n = f.big_n();
+        (Box::new(f), big_n)
+    }
+
+    #[test]
+    fn theorem4_randk_with_nde_beats_plain_randk() {
+        // Fig. 1d / 2a in miniature: random sparsification + 1-bit quantize,
+        // with vs without NDE, on heavy-tailed inputs.
+        let mut rng = Rng::seed_from(1);
+        let n = 1024;
+        let (frame, big_n) = hadamard(n, 2);
+        let k = n / 2;
+        let with_nde =
+            EmbeddedCompressor::nde(frame, Box::new(RandK::new(big_n, k, 1).unbiased()));
+        let without = RandK::new(n, k, 1).unbiased();
+        let gen = |rng: &mut Rng| -> Vec<f32> { (0..n).map(|_| rng.gaussian_cubed()).collect() };
+        let e_with = crate::quant::normalized_error(&with_nde, 15, &mut rng, gen);
+        let e_without = crate::quant::normalized_error(&without, 15, &mut rng, gen);
+        assert!(
+            e_with < e_without,
+            "rand-k+NDE {e_with} should beat plain rand-k {e_without}"
+        );
+    }
+
+    #[test]
+    fn sign_with_nde_nearly_lossless_shapewise() {
+        // After embedding, coordinates are near-equal magnitude: the best
+        // case for sign quantization (Theorem 4's intuition).
+        let mut rng = Rng::seed_from(3);
+        let n = 512;
+        let (frame, big_n) = hadamard(n, 4);
+        let c = EmbeddedCompressor::nde(frame, Box::new(SignQuantizer::new(big_n)));
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        let plain = SignQuantizer::new(n);
+        let yplain = plain.decompress(&plain.compress(&y, &mut rng));
+        assert!(dist2(&yhat, &y) < dist2(&yplain, &y));
+    }
+
+    #[test]
+    fn unbiasedness_transfers_through_s() {
+        let mut rng = Rng::seed_from(5);
+        let n = 32;
+        let (frame, big_n) = hadamard(n, 6);
+        let c = EmbeddedCompressor::nde(frame, Box::new(StandardDither::new(big_n, 2.0)));
+        assert!(c.is_unbiased());
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let trials = 4000;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let yhat = c.decompress(&c.compress(&y, &mut rng));
+            for (m, &v) in mean.iter_mut().zip(&yhat) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        assert!(dist2(&mean_f, &y) / norm2(&y) < 0.08);
+    }
+}

@@ -1,0 +1,140 @@
+//! Stochastic (dithered) uniform quantization — eq. (20) and App. I.
+//!
+//! For `v ∈ [lo, hi]` with `M = 2^b` levels `u_0 < … < u_{M−1}` uniformly
+//! spaced over `[lo, hi]`, the dithered quantizer outputs the bracketing
+//! level `u_{r+1}` w.p. `(v − u_r)/(u_{r+1} − u_r)` and `u_r` otherwise, so
+//! `E[Q(v)] = v` for in-range inputs. Unbiasedness is what lets DQ-PSGD
+//! (Alg. 2) reach the minimax rate *without* error feedback (§4.2).
+
+use crate::linalg::rng::Rng;
+
+/// Dithered quantizer over a fixed symmetric-or-not range.
+#[derive(Clone, Copy, Debug)]
+pub struct DitheredUniform {
+    pub lo: f32,
+    pub hi: f32,
+    /// Bits per sample (levels = 2^bits). `bits = 0` decodes to the
+    /// midpoint deterministically.
+    pub bits: usize,
+}
+
+impl DitheredUniform {
+    pub fn symmetric(range: f32, bits: usize) -> Self {
+        DitheredUniform { lo: -range, hi: range, bits }
+    }
+
+    #[inline]
+    fn levels(&self) -> u64 {
+        1u64 << self.bits
+    }
+
+    #[inline]
+    fn step(&self) -> f32 {
+        (self.hi - self.lo) / (self.levels() - 1).max(1) as f32
+    }
+
+    /// Stochastically round `v` to a level index. In-range values are
+    /// unbiased; out-of-range values clamp (biased — callers choose the
+    /// range so this happens with vanishing probability, cf. App. E.1).
+    #[inline]
+    pub fn encode(&self, v: f32, rng: &mut Rng) -> u64 {
+        if self.bits == 0 {
+            return 0;
+        }
+        let m = self.levels();
+        if m == 1 {
+            return 0;
+        }
+        let step = self.step();
+        let t = ((v - self.lo) / step).clamp(0.0, (m - 1) as f32);
+        let r = t.floor();
+        let frac = t - r;
+        let idx = r as u64 + u64::from(rng.bernoulli(frac as f64));
+        idx.min(m - 1)
+    }
+
+    /// Level value for an index.
+    #[inline]
+    pub fn decode(&self, idx: u64) -> f32 {
+        if self.bits == 0 {
+            return 0.5 * (self.lo + self.hi);
+        }
+        self.lo + idx as f32 * self.step()
+    }
+
+    /// One-shot stochastic rounding.
+    #[inline]
+    pub fn quantize(&self, v: f32, rng: &mut Rng) -> f32 {
+        self.decode(self.encode(v, rng))
+    }
+
+    /// Per-sample variance bound `step²/4` for in-range inputs
+    /// (`(u_{r+1}−v)(v−u_r) ≤ step²/4`, App. I).
+    pub fn variance_bound(&self) -> f32 {
+        let s = self.step();
+        s * s / 4.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{forall, Cases};
+
+    #[test]
+    fn unbiased_in_range() {
+        forall(Cases::new("dither unbiased", 20), |rng, _| {
+            let q = DitheredUniform::symmetric(1.0, 1 + rng.below(4));
+            let v = (rng.uniform_f32() - 0.5) * 1.9;
+            let trials = 20_000;
+            let mean: f64 =
+                (0..trials).map(|_| q.quantize(v, rng) as f64).sum::<f64>() / trials as f64;
+            let tol = 4.0 * (q.variance_bound() as f64 / trials as f64).sqrt() + 1e-3;
+            assert!((mean - v as f64).abs() < tol, "v={v} mean={mean} tol={tol}");
+        });
+    }
+
+    #[test]
+    fn outputs_are_levels() {
+        let mut rng = Rng::seed_from(1);
+        let q = DitheredUniform::symmetric(2.0, 3);
+        for _ in 0..100 {
+            let v = (rng.uniform_f32() - 0.5) * 4.0;
+            let out = q.quantize(v, &mut rng);
+            let idx = ((out - q.lo) / q.step()).round() as i64;
+            assert!((0..8).contains(&idx));
+            assert!((q.decode(idx as u64) - out).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let mut rng = Rng::seed_from(2);
+        let q = DitheredUniform::symmetric(1.0, 2);
+        assert_eq!(q.quantize(10.0, &mut rng), 1.0);
+        assert_eq!(q.quantize(-10.0, &mut rng), -1.0);
+    }
+
+    #[test]
+    fn variance_within_bound() {
+        let mut rng = Rng::seed_from(3);
+        let q = DitheredUniform::symmetric(1.0, 2);
+        let v = 0.37;
+        let trials = 50_000;
+        let var: f64 = (0..trials)
+            .map(|_| {
+                let d = (q.quantize(v, &mut rng) - v) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / trials as f64;
+        assert!(var <= q.variance_bound() as f64 * 1.05, "var={var}");
+    }
+
+    #[test]
+    fn zero_bits_is_midpoint() {
+        let mut rng = Rng::seed_from(4);
+        let q = DitheredUniform { lo: 0.0, hi: 4.0, bits: 0 };
+        assert_eq!(q.quantize(3.3, &mut rng), 2.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! DQGD's quantizer — the baseline of Lin, Kostina & Hassibi [6] that the
+//! paper's Fig. 1b compares against.
+//!
+//! Unlike our adaptive `NaiveUniform` (which spends 32 side bits on the
+//! per-message `‖u‖∞` scale), DQGD uses a **predefined decaying dynamic
+//! range** `r_t = r₀·γᵗ` agreed offline between worker and server — zero
+//! side information, but fragile: once the quantizer input outgrows the
+//! shrunken range, clipping error compounds through the error-feedback
+//! loop and the descent diverges. This is exactly the sharp rate-1 plateau
+//! of the paper's Fig. 1b at low budgets, which the ‖·‖∞-normalized
+//! variants avoid.
+//!
+//! The schedule state is a per-compressor atomic round counter; the round
+//! index rides in the message header (counted as side bits) so decode is
+//! self-contained and order-robust.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::linalg::rng::Rng;
+use crate::quant::bitpack::{allocate_bits, BitReader, BitWriter};
+use crate::quant::uniform::{dequantize_index, quantize_index};
+use crate::quant::{budget_bits, Compressed, Compressor};
+
+pub struct DqgdRange {
+    n: usize,
+    r: f32,
+    /// Initial dynamic range `r₀` (≈ an upper bound on `‖∇f(x₀)‖∞`).
+    pub r0: f32,
+    /// Per-round decay `γ` (the paper's ν, the target linear rate).
+    pub gamma: f32,
+    round: AtomicU64,
+}
+
+impl DqgdRange {
+    pub fn new(n: usize, r: f32, r0: f32, gamma: f32) -> Self {
+        assert!(r > 0.0 && r0 > 0.0 && (0.0..=1.0).contains(&gamma));
+        DqgdRange { n, r, r0, gamma, round: AtomicU64::new(0) }
+    }
+
+    fn range_at(&self, t: u64) -> f32 {
+        self.r0 * self.gamma.powi(t.min(1_000_000) as i32)
+    }
+}
+
+impl Compressor for DqgdRange {
+    fn name(&self) -> String {
+        format!("dqgd(r0={},γ={})", self.r0, self.gamma)
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        self.r
+    }
+
+    fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.n);
+        let t = self.round.fetch_add(1, Ordering::Relaxed);
+        let range = self.range_at(t).max(1e-30);
+        let budget = budget_bits(self.n, self.r);
+        let alloc = allocate_bits(budget, self.n);
+        let mut w = BitWriter::with_capacity_bits(budget + 32);
+        w.write_bits(t & 0xFFFF_FFFF, 32); // round header
+        let inv = 1.0 / range;
+        for (i, &yi) in y.iter().enumerate() {
+            let bits = alloc.bits(i);
+            if bits > 0 {
+                // values outside the schedule's range CLIP — the failure mode
+                w.write_bits(quantize_index(yi * inv, bits), bits);
+            }
+        }
+        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits: budget, side_bits: 32 }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut rd = BitReader::new(&msg.bytes);
+        let t = rd.read_bits(32);
+        let range = self.range_at(t).max(1e-30);
+        let alloc = allocate_bits(budget_bits(self.n, self.r), self.n);
+        let mut y = vec![0.0f32; self.n];
+        for (i, yi) in y.iter_mut().enumerate() {
+            let bits = alloc.bits(i);
+            if bits > 0 {
+                *yi = range * dequantize_index(rd.read_bits(bits), bits);
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist2, norm2};
+
+    #[test]
+    fn roundtrip_within_range_is_accurate() {
+        let mut rng = Rng::seed_from(1);
+        let c = DqgdRange::new(64, 6.0, 10.0, 1.0); // no decay
+        let y: Vec<f32> = (0..64).map(|_| rng.gaussian_f32()).collect(); // well within ±10
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        assert!(dist2(&yhat, &y) / norm2(&y) < 0.2);
+    }
+
+    #[test]
+    fn out_of_range_inputs_clip() {
+        let mut rng = Rng::seed_from(2);
+        let c = DqgdRange::new(8, 8.0, 1.0, 1.0);
+        let y = vec![100.0f32; 8]; // far outside ±1
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        // everything clips to the top cell near +1
+        assert!(yhat.iter().all(|&v| v < 1.1));
+        assert!(dist2(&yhat, &y) / norm2(&y) > 0.9, "clipping must destroy the vector");
+    }
+
+    #[test]
+    fn schedule_decays_across_rounds() {
+        let mut rng = Rng::seed_from(3);
+        let c = DqgdRange::new(4, 8.0, 8.0, 0.5);
+        let y = vec![1.0f32; 4];
+        // round 0: range 8, resolution coarse; round 3: range 1, exact-ish
+        let e0 = {
+            let yhat = c.decompress(&c.compress(&y, &mut rng));
+            dist2(&yhat, &y)
+        };
+        c.compress(&y, &mut rng); // round 1
+        c.compress(&y, &mut rng); // round 2
+        let e3 = {
+            let yhat = c.decompress(&c.compress(&y, &mut rng));
+            dist2(&yhat, &y)
+        };
+        assert!(e3 < e0, "finer range should quantize better: {e0} -> {e3}");
+    }
+}

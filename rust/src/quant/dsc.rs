@@ -1,0 +1,466 @@
+//! Democratic Source Coding — the paper's central contribution (§3.1).
+//!
+//! [`SubspaceCodec`] implements the encode/decode pair (eq. 12):
+//!
+//! ```text
+//! E(y) = Q( x / ‖x‖∞ ),   D(x') = ‖x‖∞ · S·x'
+//! ```
+//!
+//! where `x` is either the **democratic** embedding (LV iteration, → DSC)
+//! or the **near-democratic** embedding (`Sᵀy`, → NDSC), and `Q` is either
+//! the deterministic nearest-neighbour uniform quantizer of eq. (11)
+//! (used by DGD-DEF, which needs a *uniform* error bound) or the dithered
+//! unbiased quantizer of App. E (used by DQ-PSGD, which needs
+//! `E[Q(y)] = y`).
+//!
+//! Budget handling follows the paper exactly:
+//! * the total payload is `⌊nR⌋` bits regardless of the embedding dimension
+//!   `N ≥ n` (each coordinate gets `≈ nR/N` bits — Thm. 1's `R/λ`);
+//! * in the **sub-linear regime** (`⌊nR⌋ < N`) the dithered encoder
+//!   subsamples `⌊nR⌋` random coordinates, allots 1 bit each, and rescales
+//!   by `N/k` for unbiasedness (App. E.2);
+//! * scalar side information (gain, `‖x‖∞`, the subsampling seed) is
+//!   counted separately as the `O(1)` of App. F.
+
+use std::sync::Mutex;
+
+use crate::embed::democratic::{KashinParams, KashinSolver};
+use crate::linalg::frames::Frame;
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::{norm2, norm_inf};
+use crate::quant::bitpack::{allocate_bits, BitReader, BitWriter};
+use crate::quant::dither::DitheredUniform;
+use crate::quant::uniform::{dequantize_index, quantize_index};
+use crate::quant::{budget_bits, Compressed, Compressor};
+
+/// Which embedding feeds the quantizer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EmbedKind {
+    /// Lyubarskii–Vershynin democratic embedding → **DSC**.
+    Democratic,
+    /// Closed-form `Sᵀy` → **NDSC**.
+    NearDemocratic,
+}
+
+/// Quantizer flavour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecMode {
+    /// Nearest-neighbour (eq. 11): uniform worst-case error, biased.
+    /// What DGD-DEF uses.
+    Deterministic,
+    /// Dithered gain–shape (App. E): unbiased. What DQ-PSGD uses.
+    Dithered,
+}
+
+/// The (N)DSC encoder/decoder over an arbitrary frame.
+pub struct SubspaceCodec {
+    frame: Box<dyn Frame>,
+    embed: EmbedKind,
+    mode: CodecMode,
+    r: f32,
+    /// LV solver state (scratch buffers) — only touched when
+    /// `embed == Democratic`.
+    solver: Mutex<KashinSolver>,
+    /// Embedding scratch, reused across calls: the compress hot path is
+    /// allocation-free after warmup (§Perf iteration 2).
+    scratch: Mutex<Vec<f32>>,
+    label: String,
+}
+
+impl SubspaceCodec {
+    pub fn new(frame: Box<dyn Frame>, embed: EmbedKind, mode: CodecMode, r: f32) -> Self {
+        assert!(r > 0.0, "bit budget must be positive");
+        let params = KashinParams::for_lambda(frame.lambda());
+        let label = match (embed, mode) {
+            (EmbedKind::Democratic, CodecMode::Deterministic) => "DSC",
+            (EmbedKind::Democratic, CodecMode::Dithered) => "DSC-dith",
+            (EmbedKind::NearDemocratic, CodecMode::Deterministic) => "NDSC",
+            (EmbedKind::NearDemocratic, CodecMode::Dithered) => "NDSC-dith",
+        }
+        .to_string();
+        SubspaceCodec {
+            frame,
+            embed,
+            mode,
+            r,
+            solver: Mutex::new(KashinSolver::new(params)),
+            scratch: Mutex::new(Vec::new()),
+            label,
+        }
+    }
+
+    /// Access the frame (used by tests and the experiment harness).
+    pub fn frame(&self) -> &dyn Frame {
+        self.frame.as_ref()
+    }
+
+    /// Compute the configured embedding of `y` into `out` (`len = N`).
+    fn embed_into(&self, y: &[f32], out: &mut Vec<f32>) {
+        out.resize(self.frame.big_n(), 0.0);
+        match self.embed {
+            EmbedKind::NearDemocratic => self.frame.pinv_embed(y, out),
+            EmbedKind::Democratic => {
+                let mut solver = self.solver.lock().unwrap();
+                let emb = solver.embed(self.frame.as_ref(), y);
+                out.copy_from_slice(&emb.x);
+            }
+        }
+    }
+
+    /// Theorem-1 error factor `β` for this codec: `2^{1−R/λ}·K̂` (DSC) or
+    /// `2^{2−R/λ}·√log(2N)` (NDSC) — used by DGD-DEF's step-size theory.
+    pub fn beta(&self) -> f32 {
+        let lambda = self.frame.lambda();
+        let big_n = self.frame.big_n() as f32;
+        match self.embed {
+            EmbedKind::Democratic => (2.0f32).powf(1.0 - self.r / lambda) * 3.0, // K_u ≈ 3
+            EmbedKind::NearDemocratic => {
+                (2.0f32).powf(2.0 - self.r / lambda) * (2.0 * big_n).ln().sqrt()
+            }
+        }
+    }
+
+    fn compress_deterministic(&self, y: &[f32]) -> Compressed {
+        let n = self.frame.n();
+        let big_n = self.frame.big_n();
+        let mut x = self.scratch.lock().unwrap();
+        self.embed_into(y, &mut x);
+        let s = norm_inf(&x);
+        let budget = budget_bits(n, self.r);
+        let alloc = allocate_bits(budget, big_n);
+        let mut w = BitWriter::with_capacity_bits(budget + 32);
+        w.write_f32(s);
+        if s > 0.0 {
+            let inv = 1.0 / s;
+            for (i, &xi) in x.iter().enumerate() {
+                let bits = alloc.bits(i);
+                if bits > 0 {
+                    w.write_bits(quantize_index(xi * inv, bits), bits);
+                }
+            }
+        } else {
+            // all-zero input: budget bits of zeros keep the format fixed-length
+            let mut left = budget;
+            while left > 0 {
+                let take = left.min(64);
+                w.write_bits(0, take);
+                left -= take;
+            }
+        }
+        let payload_bits = w.len_bits() - 32;
+        Compressed { n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+    }
+
+    fn decompress_deterministic(&self, msg: &Compressed) -> Vec<f32> {
+        let n = self.frame.n();
+        let big_n = self.frame.big_n();
+        let mut r = BitReader::new(&msg.bytes);
+        let s = r.read_f32();
+        let alloc = allocate_bits(budget_bits(n, self.r), big_n);
+        let mut x = vec![0.0f32; big_n];
+        if s > 0.0 {
+            for (i, xi) in x.iter_mut().enumerate() {
+                let bits = alloc.bits(i);
+                if bits > 0 {
+                    *xi = s * dequantize_index(r.read_bits(bits), bits);
+                }
+            }
+        }
+        let mut y = vec![0.0f32; n];
+        self.frame.apply(&x, &mut y);
+        y
+    }
+
+    fn compress_dithered(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        let n = self.frame.n();
+        let big_n = self.frame.big_n();
+        let gain = norm2(y);
+        let budget = budget_bits(n, self.r);
+        let mut w = BitWriter::with_capacity_bits(budget + 96);
+        w.write_f32(gain);
+        if gain == 0.0 || budget == 0 {
+            let payload = 0;
+            return Compressed { n, bytes: w.into_bytes(), payload_bits: payload, side_bits: 32 };
+        }
+        let shape: Vec<f32> = y.iter().map(|&v| v / gain).collect();
+        let mut x = self.scratch.lock().unwrap();
+        self.embed_into(&shape, &mut x);
+        let s = norm_inf(&x);
+        w.write_f32(s);
+        let mut side_bits = 64;
+        let payload_bits;
+        if budget >= big_n {
+            // High-budget: every coordinate gets >= 1 bit.
+            let alloc = allocate_bits(budget, big_n);
+            for (i, &xi) in x.iter().enumerate() {
+                let bits = alloc.bits(i);
+                let q = DitheredUniform::symmetric(s, bits);
+                w.write_bits(q.encode(xi, rng), bits);
+            }
+            payload_bits = alloc.total();
+        } else {
+            // Sub-linear: random k = budget coords, 1 bit each, rescale by
+            // N/k at the decoder (App. E.2). The index set is shared
+            // randomness: the seed rides along as side information.
+            let seed = rng.next_u64();
+            w.write_u64(seed);
+            side_bits += 64;
+            let mut sel_rng = Rng::seed_from(seed);
+            let idx = sel_rng.sample_indices(big_n, budget);
+            let q = DitheredUniform::symmetric(s, 1);
+            for &i in &idx {
+                w.write_bits(q.encode(x[i], rng), 1);
+            }
+            payload_bits = budget;
+        }
+        Compressed { n, bytes: w.into_bytes(), payload_bits, side_bits }
+    }
+
+    fn decompress_dithered(&self, msg: &Compressed) -> Vec<f32> {
+        let n = self.frame.n();
+        let big_n = self.frame.big_n();
+        let budget = budget_bits(n, self.r);
+        let mut r = BitReader::new(&msg.bytes);
+        let gain = r.read_f32();
+        if gain == 0.0 || budget == 0 {
+            return vec![0.0; n];
+        }
+        let s = r.read_f32();
+        let mut x = vec![0.0f32; big_n];
+        if budget >= big_n {
+            let alloc = allocate_bits(budget, big_n);
+            for (i, xi) in x.iter_mut().enumerate() {
+                let bits = alloc.bits(i);
+                let q = DitheredUniform::symmetric(s, bits);
+                *xi = q.decode(r.read_bits(bits));
+            }
+        } else {
+            let seed = r.read_u64();
+            let mut sel_rng = Rng::seed_from(seed);
+            let idx = sel_rng.sample_indices(big_n, budget);
+            let q = DitheredUniform::symmetric(s, 1);
+            let rescale = big_n as f32 / budget as f32;
+            for &i in &idx {
+                x[i] = rescale * q.decode(r.read_bits(1));
+            }
+        }
+        let mut shape = vec![0.0f32; n];
+        self.frame.apply(&x, &mut shape);
+        shape.iter_mut().for_each(|v| *v *= gain);
+        shape
+    }
+}
+
+impl Compressor for SubspaceCodec {
+    fn name(&self) -> String {
+        format!("{}[{}λ={:.2}]", self.label, self.frame.big_n(), self.frame.lambda())
+    }
+
+    fn n(&self) -> usize {
+        self.frame.n()
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        self.r
+    }
+
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.frame.n());
+        match self.mode {
+            CodecMode::Deterministic => self.compress_deterministic(y),
+            CodecMode::Dithered => self.compress_dithered(y, rng),
+        }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        match self.mode {
+            CodecMode::Deterministic => self.decompress_deterministic(msg),
+            CodecMode::Dithered => self.decompress_dithered(msg),
+        }
+    }
+
+    fn is_unbiased(&self) -> bool {
+        self.mode == CodecMode::Dithered
+    }
+}
+
+/// DSC constructor (democratic embedding, deterministic quantizer).
+pub fn dsc(frame: Box<dyn Frame>, r: f32) -> SubspaceCodec {
+    SubspaceCodec::new(frame, EmbedKind::Democratic, CodecMode::Deterministic, r)
+}
+
+/// Dithered DSC — the `(E_Dith, D_Dith)` of Alg. 2.
+pub fn dsc_dithered(frame: Box<dyn Frame>, r: f32) -> SubspaceCodec {
+    SubspaceCodec::new(frame, EmbedKind::Democratic, CodecMode::Dithered, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::frames::{HadamardFrame, OrthonormalFrame};
+    use crate::linalg::vecops::dist2;
+    use crate::testkit::prop::{forall, gen, Cases};
+
+    fn hadamard_codec(n: usize, embed: EmbedKind, mode: CodecMode, r: f32, seed: u64) -> SubspaceCodec {
+        let mut rng = Rng::seed_from(seed);
+        SubspaceCodec::new(Box::new(HadamardFrame::new(n, &mut rng)), embed, mode, r)
+    }
+
+    #[test]
+    fn theorem1_error_bound_dsc() {
+        // ||y - Q_d(y)|| <= 2^{1-R/λ} K_u ||y|| — check with measured slack.
+        let mut rng = Rng::seed_from(1);
+        let n = 512; // N = 512, λ = 1 exactly
+        let c = hadamard_codec(n, EmbedKind::Democratic, CodecMode::Deterministic, 4.0, 2);
+        for _ in 0..5 {
+            let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let msg = c.compress(&y, &mut rng);
+            let yhat = c.decompress(&msg);
+            let rel = dist2(&yhat, &y) / norm2(&y);
+            // β = 2^{1-4}·K_u ≈ 0.125·K_u; with K_u ≲ 3 allow 0.5.
+            assert!(rel < 0.5, "rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn theorem1_error_bound_ndsc() {
+        let mut rng = Rng::seed_from(3);
+        let n = 1000; // N = 1024
+        let c = hadamard_codec(n, EmbedKind::NearDemocratic, CodecMode::Deterministic, 4.0, 4);
+        for _ in 0..5 {
+            let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let msg = c.compress(&y, &mut rng);
+            let yhat = c.decompress(&msg);
+            let rel = dist2(&yhat, &y) / norm2(&y);
+            let bound = c.beta();
+            assert!(rel < bound, "rel err {rel} vs β {bound}");
+        }
+    }
+
+    #[test]
+    fn budget_respected_exactly() {
+        forall(Cases::new("(N)DSC budget", 40), |rng, _| {
+            let n = gen::dim(rng);
+            let r = gen::bit_budget(rng);
+            let mode =
+                if rng.bernoulli(0.5) { CodecMode::Deterministic } else { CodecMode::Dithered };
+            let embed =
+                if rng.bernoulli(0.3) { EmbedKind::Democratic } else { EmbedKind::NearDemocratic };
+            let frame = HadamardFrame::new(n, rng);
+            let c = SubspaceCodec::new(Box::new(frame), embed, mode, r);
+            let y = gen::nonzero_vector(rng, n);
+            let msg = c.compress(&y, rng);
+            assert!(
+                msg.payload_bits <= budget_bits(n, r),
+                "{}: payload {} > budget {}",
+                c.name(),
+                msg.payload_bits,
+                budget_bits(n, r)
+            );
+            assert!(msg.side_bits <= 128 + 64);
+            let yhat = c.decompress(&msg);
+            assert_eq!(yhat.len(), n);
+            assert!(yhat.iter().all(|v| v.is_finite()));
+        });
+    }
+
+    #[test]
+    fn dithered_is_unbiased() {
+        // Average many independent compressions: mean → y.
+        let mut rng = Rng::seed_from(5);
+        let n = 64;
+        let c = hadamard_codec(n, EmbedKind::NearDemocratic, CodecMode::Dithered, 2.0, 6);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let trials = 3000;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let msg = c.compress(&y, &mut rng);
+            let yhat = c.decompress(&msg);
+            for (m, &v) in mean.iter_mut().zip(&yhat) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        let err = dist2(&mean_f, &y) / norm2(&y);
+        assert!(err < 0.06, "bias {err}");
+    }
+
+    #[test]
+    fn sublinear_dithered_unbiased() {
+        // R = 0.5: subsampling + rescale must stay unbiased.
+        let mut rng = Rng::seed_from(7);
+        let n = 32;
+        let c = hadamard_codec(n, EmbedKind::NearDemocratic, CodecMode::Dithered, 0.5, 8);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let trials = 8000;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let msg = c.compress(&y, &mut rng);
+            assert_eq!(msg.payload_bits, 16);
+            let yhat = c.decompress(&msg);
+            for (m, &v) in mean.iter_mut().zip(&yhat) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        let err = dist2(&mean_f, &y) / norm2(&y);
+        assert!(err < 0.12, "bias {err}");
+    }
+
+    #[test]
+    fn error_dimension_free_across_n() {
+        // The headline property: at fixed R the relative error of NDSC
+        // grows at most ~ sqrt(log N), nothing like sqrt(n).
+        let mut rng = Rng::seed_from(9);
+        let mut errs = Vec::new();
+        for &n in &[64usize, 256, 1024, 4096] {
+            let c = hadamard_codec(n, EmbedKind::NearDemocratic, CodecMode::Deterministic, 3.0, 10);
+            let e = crate::quant::normalized_error(&c, 10, &mut rng, |rng| {
+                (0..n).map(|_| rng.gaussian_cubed()).collect()
+            });
+            errs.push(e);
+        }
+        let growth = errs.last().unwrap() / errs.first().unwrap();
+        // sqrt(n) growth would be 8x; sqrt(log) growth is ~1.2x.
+        assert!(growth < 2.0, "errors {errs:?} grew {growth}x");
+    }
+
+    #[test]
+    fn deterministic_roundtrip_is_deterministic() {
+        let mut rng = Rng::seed_from(11);
+        let n = 100;
+        let c = hadamard_codec(n, EmbedKind::NearDemocratic, CodecMode::Deterministic, 2.0, 12);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        let m1 = c.compress(&y, &mut rng);
+        let m2 = c.compress(&y, &mut rng);
+        assert_eq!(m1.bytes, m2.bytes);
+    }
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        let mut rng = Rng::seed_from(13);
+        for mode in [CodecMode::Deterministic, CodecMode::Dithered] {
+            let c = hadamard_codec(16, EmbedKind::NearDemocratic, mode, 1.0, 14);
+            let msg = c.compress(&vec![0.0; 16], &mut rng);
+            let yhat = c.decompress(&msg);
+            assert!(yhat.iter().all(|&v| v == 0.0), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn orthonormal_frame_codec_works() {
+        let mut rng = Rng::seed_from(15);
+        let n = 30;
+        let frame = OrthonormalFrame::with_big_n(n, n, &mut rng);
+        let c = SubspaceCodec::new(
+            Box::new(frame),
+            EmbedKind::NearDemocratic,
+            CodecMode::Deterministic,
+            4.0,
+        );
+        let y: Vec<f32> = (0..n).map(|_| rng.student_t(1)).collect();
+        let msg = c.compress(&y, &mut rng);
+        let yhat = c.decompress(&msg);
+        assert!(dist2(&yhat, &y) / norm2(&y) < 0.6);
+    }
+}

@@ -1,0 +1,247 @@
+//! Gain–shape quantizers (App. E) and the **naive** uniform scalar
+//! baseline the paper compares against everywhere.
+//!
+//! A gain–shape quantizer factors `Q(y) = Q_G(‖y‖)·Q_S(y/‖y‖)`: the scalar
+//! gain is side information (`O(1)` bits, App. F) and the shape is the
+//! budget-constrained part. [`NaiveUniform`] is exactly the paper's "naive
+//! scalar quantization": normalize by `‖y‖∞`, spend `⌊nR⌋` bits on
+//! coordinate-wise nearest-neighbour uniform quantization of `y` itself —
+//! no subspace embedding. Its error carries the `√n` covering-efficiency
+//! penalty (§3.2) that DSC/NDSC remove.
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::norm_inf;
+use crate::quant::bitpack::{allocate_bits, BitReader, BitWriter};
+use crate::quant::dither::DitheredUniform;
+use crate::quant::uniform::{dequantize_index, quantize_index};
+use crate::quant::{budget_bits, Compressed, Compressor};
+
+/// Naive uniform scalar quantizer: `Q(y) = ‖y‖∞ · Q_unif(y/‖y‖∞)`.
+pub struct NaiveUniform {
+    n: usize,
+    r: f32,
+}
+
+impl NaiveUniform {
+    pub fn new(n: usize, r: f32) -> Self {
+        assert!(r > 0.0);
+        NaiveUniform { n, r }
+    }
+}
+
+impl Compressor for NaiveUniform {
+    fn name(&self) -> String {
+        "naive-uniform".into()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        self.r
+    }
+
+    fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.n);
+        let s = norm_inf(y);
+        let budget = budget_bits(self.n, self.r);
+        let alloc = allocate_bits(budget, self.n);
+        let mut w = BitWriter::with_capacity_bits(budget + 32);
+        w.write_f32(s);
+        if s > 0.0 {
+            let inv = 1.0 / s;
+            for (i, &yi) in y.iter().enumerate() {
+                let bits = alloc.bits(i);
+                if bits > 0 {
+                    w.write_bits(quantize_index(yi * inv, bits), bits);
+                }
+            }
+        }
+        let payload_bits = w.len_bits().saturating_sub(32);
+        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        let s = r.read_f32();
+        let alloc = allocate_bits(budget_bits(self.n, self.r), self.n);
+        let mut y = vec![0.0f32; self.n];
+        if s > 0.0 {
+            for (i, yi) in y.iter_mut().enumerate() {
+                let bits = alloc.bits(i);
+                if bits > 0 {
+                    *yi = s * dequantize_index(r.read_bits(bits), bits);
+                }
+            }
+        }
+        y
+    }
+}
+
+/// Standard Dithering (the "SD" curve of Fig. 1a): gain–shape with
+/// `Q_G = ‖y‖₂` sent as a float and an unbiased dithered shape quantizer
+/// over `[−‖y‖∞, ‖y‖∞]` — the stochastic uniform quantizer of App. I
+/// applied directly to `y` (no embedding).
+pub struct StandardDither {
+    n: usize,
+    r: f32,
+}
+
+impl StandardDither {
+    pub fn new(n: usize, r: f32) -> Self {
+        assert!(r > 0.0);
+        StandardDither { n, r }
+    }
+}
+
+impl Compressor for StandardDither {
+    fn name(&self) -> String {
+        "standard-dither".into()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        self.r
+    }
+
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.n);
+        let s = norm_inf(y);
+        let budget = budget_bits(self.n, self.r);
+        let mut w = BitWriter::with_capacity_bits(budget + 96);
+        w.write_f32(s);
+        let mut side_bits = 32;
+        let payload_bits;
+        if s == 0.0 || budget == 0 {
+            payload_bits = 0;
+        } else if budget >= self.n {
+            let alloc = allocate_bits(budget, self.n);
+            for (i, &yi) in y.iter().enumerate() {
+                let bits = alloc.bits(i);
+                let q = DitheredUniform::symmetric(s, bits);
+                w.write_bits(q.encode(yi, rng), bits);
+            }
+            payload_bits = alloc.total();
+        } else {
+            // Sub-linear: random subsample + 1 bit, rescaled (unbiased).
+            let seed = rng.next_u64();
+            w.write_u64(seed);
+            side_bits += 64;
+            let mut sel = Rng::seed_from(seed);
+            let idx = sel.sample_indices(self.n, budget);
+            let q = DitheredUniform::symmetric(s, 1);
+            for &i in &idx {
+                w.write_bits(q.encode(y[i], rng), 1);
+            }
+            payload_bits = budget;
+        }
+        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let budget = budget_bits(self.n, self.r);
+        let mut r = BitReader::new(&msg.bytes);
+        let s = r.read_f32();
+        let mut y = vec![0.0f32; self.n];
+        if s == 0.0 || budget == 0 {
+            return y;
+        }
+        if budget >= self.n {
+            let alloc = allocate_bits(budget, self.n);
+            for (i, yi) in y.iter_mut().enumerate() {
+                let bits = alloc.bits(i);
+                let q = DitheredUniform::symmetric(s, bits);
+                *yi = q.decode(r.read_bits(bits));
+            }
+        } else {
+            let seed = r.read_u64();
+            let mut sel = Rng::seed_from(seed);
+            let idx = sel.sample_indices(self.n, budget);
+            let q = DitheredUniform::symmetric(s, 1);
+            let rescale = self.n as f32 / budget as f32;
+            for &i in &idx {
+                y[i] = rescale * q.decode(r.read_bits(1));
+            }
+        }
+        y
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::norm2;
+    use crate::linalg::vecops::dist2;
+    use crate::testkit::prop::{forall, gen, Cases};
+
+    #[test]
+    fn naive_error_bound() {
+        // ||y - Q(y)||_2 <= ||y||_inf 2^{-R} sqrt(n): the sqrt(n) penalty.
+        let mut rng = Rng::seed_from(1);
+        let n = 256;
+        let c = NaiveUniform::new(n, 3.0);
+        for _ in 0..5 {
+            let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let msg = c.compress(&y, &mut rng);
+            let yhat = c.decompress(&msg);
+            let bound = norm_inf(&y) * (2.0f32).powi(-3) * (n as f32).sqrt();
+            assert!(dist2(&yhat, &y) <= bound * 1.01);
+        }
+    }
+
+    #[test]
+    fn budgets_respected() {
+        forall(Cases::new("naive/SD budget", 50), |rng, _| {
+            let n = gen::dim(rng);
+            let r = gen::bit_budget(rng);
+            let y = gen::nonzero_vector(rng, n);
+            for c in [&NaiveUniform::new(n, r) as &dyn Compressor, &StandardDither::new(n, r)] {
+                let msg = c.compress(&y, rng);
+                assert!(msg.payload_bits <= budget_bits(n, r), "{}", c.name());
+                let yhat = c.decompress(&msg);
+                assert_eq!(yhat.len(), n);
+            }
+        });
+    }
+
+    #[test]
+    fn standard_dither_unbiased() {
+        let mut rng = Rng::seed_from(2);
+        let n = 32;
+        let c = StandardDither::new(n, 2.0);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let trials = 4000;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let yhat = c.decompress(&c.compress(&y, &mut rng));
+            for (m, &v) in mean.iter_mut().zip(&yhat) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        assert!(dist2(&mean_f, &y) / norm2(&y) < 0.06);
+    }
+
+    #[test]
+    fn naive_struggles_on_one_hot() {
+        // The motivating failure: a one-hot vector under R=1 naive
+        // quantization loses almost everything relative to NDSC (see
+        // ndsc.rs::one_hot_worst_case).
+        let mut rng = Rng::seed_from(3);
+        let n = 1024;
+        let c = NaiveUniform::new(n, 1.0);
+        let mut y = vec![0.0f32; n];
+        y[7] = 42.0;
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        // With 1 bit/coord every zero coordinate decodes to ±s/2 => huge error.
+        assert!(dist2(&yhat, &y) / norm2(&y) > 5.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Source coding under a strict bit budget — §3 of the paper plus every
+//! baseline from Table 1.
+//!
+//! All compressors implement [`Compressor`]: a fixed-length mapping
+//! `R^n → {0,1}^{⌊nR⌋ + O(1)}` with bit-exact serialization. The `O(1)`
+//! side-information bits (norm scalars, shared-randomness seeds) are
+//! reported separately per App. F so the coordinator can account them.
+//!
+//! | Module | Scheme | Paper ref |
+//! |---|---|---|
+//! | [`dsc`] | Democratic Source Coding (deterministic & dithered) | §3.1, App. E |
+//! | [`ndsc`] | Near-Democratic Source Coding (Hadamard/orthonormal) | §3.1 |
+//! | [`uniform`] | R-bit uniform scalar quantizer (eq. 11) | §3 |
+//! | [`dither`] | stochastic uniform / dithered quantizer (eq. 20) | App. E |
+//! | [`gain_shape`] | gain–shape composition | App. E |
+//! | [`qsgd`] | QSGD [8] | Table 1 |
+//! | [`sign`] | 1-bit sign quantization [14, 15] | Table 1 |
+//! | [`ternary`] | TernGrad [16] | Table 1 |
+//! | [`topk`] | Top-k sparsification [18] | Table 1 |
+//! | [`randk`] | random-k sparsification [19] | Table 1 |
+//! | [`vqsgd`] | vqSGD cross-polytope [17] | Table 1 |
+//! | [`ratq`] | RATQ-style rotated adaptive quantizer [7] | Table 1 |
+//! | [`compose`] | sparsify/compress *in the embedding domain* | App. H |
+
+pub mod bitpack;
+pub mod compose;
+pub mod dither;
+pub mod dqgd;
+pub mod dsc;
+pub mod gain_shape;
+pub mod ndsc;
+pub mod qsgd;
+pub mod randk;
+pub mod ratq;
+pub mod sign;
+pub mod ternary;
+pub mod topk;
+pub mod uniform;
+pub mod vqsgd;
+
+use crate::linalg::rng::Rng;
+
+/// A compressed message: exact wire bytes plus the bit accounting the
+/// coordinator's budget enforcement uses.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    /// Original dimension `n` of the compressed vector.
+    pub n: usize,
+    /// Bit-packed wire payload.
+    pub bytes: Vec<u8>,
+    /// Bits charged against the `⌊nR⌋` budget.
+    pub payload_bits: usize,
+    /// `O(1)` side-information bits (norm scalars, seeds) per App. F.
+    pub side_bits: usize,
+}
+
+impl Compressed {
+    /// Total wire bits.
+    pub fn total_bits(&self) -> usize {
+        self.payload_bits + self.side_bits
+    }
+
+    /// Effective rate in bits/dimension, *excluding* the `O(1)` part —
+    /// the quantity constrained to `≤ R` in the paper.
+    pub fn rate(&self) -> f32 {
+        self.payload_bits as f32 / self.n as f32
+    }
+}
+
+/// A fixed-length vector compressor with budget `R` bits/dimension.
+pub trait Compressor: Send + Sync {
+    /// Human-readable name used in reports (e.g. `"NDSC-Hadamard"`).
+    fn name(&self) -> String;
+    /// Input dimension.
+    fn n(&self) -> usize;
+    /// Configured budget `R` (bits per dimension); the compressor must emit
+    /// `payload_bits ≤ ⌊n·R⌋` for every input.
+    fn bits_per_dim(&self) -> f32;
+    /// Encode. Stochastic schemes draw dithers / samples from `rng`;
+    /// deterministic schemes ignore it.
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed;
+    /// Decode (the parameter-server side).
+    fn decompress(&self, msg: &Compressed) -> Vec<f32>;
+    /// Whether `E[decompress(compress(y))] = y` (needed by DQ-PSGD's
+    /// analysis; deterministic nearest-neighbour schemes are biased).
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+}
+
+/// Budget ceiling in payload bits for dimension `n` at rate `r`.
+pub fn budget_bits(n: usize, r: f32) -> usize {
+    (n as f64 * r as f64).floor() as usize
+}
+
+/// Measured normalized error `‖Q(y) − y‖₂ / ‖y‖₂` averaged over `trials`
+/// draws of `gen` — the quantity plotted in Fig. 1a.
+pub fn normalized_error(
+    c: &dyn Compressor,
+    trials: usize,
+    rng: &mut Rng,
+    mut gen: impl FnMut(&mut Rng) -> Vec<f32>,
+) -> f32 {
+    let mut acc = 0.0f64;
+    let mut used = 0usize;
+    for _ in 0..trials {
+        let y = gen(rng);
+        let ny = crate::linalg::vecops::norm2(&y);
+        if ny == 0.0 {
+            continue;
+        }
+        let msg = c.compress(&y, rng);
+        let yhat = c.decompress(&msg);
+        acc += (crate::linalg::vecops::dist2(&yhat, &y) / ny) as f64;
+        used += 1;
+    }
+    (acc / used.max(1) as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_bits_floor() {
+        assert_eq!(budget_bits(1000, 0.5), 500);
+        assert_eq!(budget_bits(784, 0.1), 78);
+        assert_eq!(budget_bits(30, 0.5), 15);
+        assert_eq!(budget_bits(116, 3.0), 348);
+    }
+}

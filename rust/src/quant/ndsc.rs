@@ -1,0 +1,102 @@
+//! Near-Democratic Source Coding — NDSC (§3.1, §2.1).
+//!
+//! NDSC is the [`SubspaceCodec`] instantiated with the closed-form
+//! near-democratic embedding `x = Sᵀy`. This module provides the
+//! paper-named constructors:
+//!
+//! * **NDH** — NDSC with a randomized Hadamard frame (`O(n log n)`
+//!   additions, 1-bit-per-entry frame storage), the paper's recommended
+//!   default;
+//! * **NDO** — NDSC with a random (Haar) orthonormal frame at λ = 1
+//!   (a random rotation; the paper notes NDSC generalizes random
+//!   rotations).
+
+use crate::linalg::frames::{Frame, HadamardFrame, OrthonormalFrame};
+use crate::linalg::rng::Rng;
+use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
+
+/// NDSC over an arbitrary frame, deterministic (nearest-neighbour) mode.
+pub struct Ndsc;
+
+impl Ndsc {
+    /// NDSC with the given frame and budget, deterministic quantizer.
+    pub fn new(frame: impl Frame + 'static, r: f32) -> SubspaceCodec {
+        SubspaceCodec::new(Box::new(frame), EmbedKind::NearDemocratic, CodecMode::Deterministic, r)
+    }
+
+    /// NDSC, dithered/unbiased quantizer (for DQ-PSGD).
+    pub fn dithered(frame: impl Frame + 'static, r: f32) -> SubspaceCodec {
+        SubspaceCodec::new(Box::new(frame), EmbedKind::NearDemocratic, CodecMode::Dithered, r)
+    }
+
+    /// NDH: randomized Hadamard frame with `N = 2^⌈log₂n⌉`.
+    pub fn hadamard(n: usize, r: f32, rng: &mut Rng) -> SubspaceCodec {
+        Self::new(HadamardFrame::new(n, rng), r)
+    }
+
+    /// Dithered NDH.
+    pub fn hadamard_dithered(n: usize, r: f32, rng: &mut Rng) -> SubspaceCodec {
+        Self::dithered(HadamardFrame::new(n, rng), r)
+    }
+
+    /// NDO: random orthonormal (λ = 1 — "no resolution is lost due to the
+    /// fixed bit-budget", §5).
+    pub fn orthonormal(n: usize, r: f32, rng: &mut Rng) -> SubspaceCodec {
+        Self::new(OrthonormalFrame::with_big_n(n, n, rng), r)
+    }
+
+    /// Dithered NDO.
+    pub fn orthonormal_dithered(n: usize, r: f32, rng: &mut Rng) -> SubspaceCodec {
+        Self::dithered(OrthonormalFrame::with_big_n(n, n, rng), r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist2, norm2};
+    use crate::quant::Compressor;
+
+    #[test]
+    fn ndh_beats_naive_on_heavy_tails() {
+        // The Fig. 1a claim in miniature: at R = 2, NDH error on Gaussian³
+        // inputs is well below the naive uniform scalar quantizer's.
+        let mut rng = Rng::seed_from(1);
+        let n = 1000;
+        let ndh = Ndsc::hadamard(n, 2.0, &mut rng);
+        let naive = crate::quant::gain_shape::NaiveUniform::new(n, 2.0);
+        let gen = |rng: &mut Rng| -> Vec<f32> { (0..n).map(|_| rng.gaussian_cubed()).collect() };
+        let e_ndh = crate::quant::normalized_error(&ndh, 20, &mut rng, gen);
+        let e_naive = crate::quant::normalized_error(&naive, 20, &mut rng, gen);
+        assert!(
+            e_ndh < 0.7 * e_naive,
+            "NDH {e_ndh} should beat naive {e_naive} on heavy tails"
+        );
+    }
+
+    #[test]
+    fn ndo_matches_ndh_order_of_magnitude() {
+        let mut rng = Rng::seed_from(2);
+        let n = 128;
+        let ndh = Ndsc::hadamard(n, 3.0, &mut rng);
+        let ndo = Ndsc::orthonormal(n, 3.0, &mut rng);
+        let gen = |rng: &mut Rng| -> Vec<f32> { (0..n).map(|_| rng.gaussian_cubed()).collect() };
+        let e_h = crate::quant::normalized_error(&ndh, 15, &mut rng, gen);
+        let e_o = crate::quant::normalized_error(&ndo, 15, &mut rng, gen);
+        assert!(e_h < 3.0 * e_o && e_o < 3.0 * e_h, "NDH {e_h} vs NDO {e_o}");
+    }
+
+    #[test]
+    fn one_hot_worst_case() {
+        // One-hot vectors are the naive quantizer's nightmare and the
+        // embedding's showcase.
+        let mut rng = Rng::seed_from(3);
+        let n = 1024;
+        let ndh = Ndsc::hadamard(n, 2.0, &mut rng);
+        let mut y = vec![0.0f32; n];
+        y[123] = 42.0;
+        let msg = ndh.compress(&y, &mut rng);
+        let yhat = ndh.decompress(&msg);
+        assert!(dist2(&yhat, &y) / norm2(&y) < 0.3);
+    }
+}

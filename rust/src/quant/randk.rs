@@ -1,0 +1,153 @@
+//! Random-k sparsification [19] — Table 1 and the "Rand-K" curves.
+//!
+//! Retains `k` coordinates chosen uniformly at random; indices are **shared
+//! randomness** (the seed rides as `O(1)` side information — no per-index
+//! cost, which is exactly how the paper budgets Fig. 2's "randomly
+//! sparsified, 1 bit each" runs). Retained values get `value_bits` dithered
+//! bits in `±‖y‖∞`. Optional `1/p` rescaling makes the sparsifier unbiased
+//! (`p = k/n`), as required when used inside DQ-PSGD.
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::norm_inf;
+use crate::quant::bitpack::{BitReader, BitWriter};
+use crate::quant::dither::DitheredUniform;
+use crate::quant::{Compressed, Compressor};
+
+pub struct RandK {
+    n: usize,
+    pub k: usize,
+    pub value_bits: usize,
+    /// Rescale by `n/k` for unbiasedness.
+    pub rescale: bool,
+    /// Nearest-neighbour (eq. 11 midpoints) instead of dithered values —
+    /// the low-worst-case-error variant for error-feedback GD (Fig. 1d).
+    pub deterministic: bool,
+}
+
+impl RandK {
+    pub fn new(n: usize, k: usize, value_bits: usize) -> Self {
+        assert!(k <= n && k > 0);
+        assert!(value_bits >= 1);
+        RandK { n, k, value_bits, rescale: false, deterministic: false }
+    }
+
+    pub fn unbiased(mut self) -> Self {
+        self.rescale = true;
+        self
+    }
+
+    pub fn deterministic(mut self) -> Self {
+        self.deterministic = true;
+        self
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("rand{}x{}b", self.k, self.value_bits)
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        (self.k * self.value_bits) as f32 / self.n as f32
+    }
+
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.n);
+        let s = norm_inf(y);
+        let seed = rng.next_u64();
+        let mut w = BitWriter::with_capacity_bits(self.k * self.value_bits + 96);
+        w.write_f32(s);
+        w.write_u64(seed);
+        let mut sel = Rng::seed_from(seed);
+        let idx = sel.sample_indices(self.n, self.k);
+        let q = DitheredUniform::symmetric(s.max(1e-30), self.value_bits);
+        let inv = 1.0 / s.max(1e-30);
+        for &i in &idx {
+            let code = if self.deterministic {
+                crate::quant::uniform::quantize_index(y[i] * inv, self.value_bits)
+            } else {
+                q.encode(y[i], rng)
+            };
+            w.write_bits(code, self.value_bits);
+        }
+        Compressed {
+            n: self.n,
+            bytes: w.into_bytes(),
+            payload_bits: self.k * self.value_bits,
+            side_bits: 32 + 64,
+        }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        let s = r.read_f32();
+        let seed = r.read_u64();
+        let mut sel = Rng::seed_from(seed);
+        let idx = sel.sample_indices(self.n, self.k);
+        let q = DitheredUniform::symmetric(s.max(1e-30), self.value_bits);
+        let gain = if self.rescale { self.n as f32 / self.k as f32 } else { 1.0 };
+        let mut y = vec![0.0f32; self.n];
+        for &i in &idx {
+            let code = r.read_bits(self.value_bits);
+            y[i] = gain
+                * if self.deterministic {
+                    s * crate::quant::uniform::dequantize_index(code, self.value_bits)
+                } else {
+                    q.decode(code)
+                };
+        }
+        y
+    }
+
+    fn is_unbiased(&self) -> bool {
+        self.rescale && !self.deterministic
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist2, norm0, norm2};
+
+    #[test]
+    fn support_size_is_at_most_k() {
+        let mut rng = Rng::seed_from(1);
+        let c = RandK::new(100, 17, 4);
+        let y: Vec<f32> = (0..100).map(|_| 1.0 + rng.uniform_f32()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        assert!(norm0(&yhat) <= 17);
+    }
+
+    #[test]
+    fn unbiased_with_rescale() {
+        let mut rng = Rng::seed_from(2);
+        let n = 30;
+        let c = RandK::new(n, 15, 1).unbiased();
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let trials = 10_000;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let yhat = c.decompress(&c.compress(&y, &mut rng));
+            for (m, &v) in mean.iter_mut().zip(&yhat) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        assert!(dist2(&mean_f, &y) / norm2(&y) < 0.1);
+    }
+
+    #[test]
+    fn decoder_recovers_same_support() {
+        let mut rng = Rng::seed_from(3);
+        let c = RandK::new(50, 10, 3);
+        let y: Vec<f32> = (0..50).map(|_| rng.gaussian_f32()).collect();
+        let msg = c.compress(&y, &mut rng);
+        let y1 = c.decompress(&msg);
+        let y2 = c.decompress(&msg);
+        assert_eq!(y1, y2); // decode is deterministic given the message
+    }
+}

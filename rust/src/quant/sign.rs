@@ -1,0 +1,96 @@
+//! 1-bit sign quantization (signSGD [14], EF-signSGD [15]) — Table 1 row 1.
+//!
+//! `Q(y) = s · sign(y)` with the scale `s = ‖y‖₁/n` (the magnitude that
+//! minimizes `‖y − s·sign(y)‖₂`). Exactly 1 payload bit per dimension plus
+//! one `f32` of side information.
+
+use crate::linalg::rng::Rng;
+use crate::quant::bitpack::{BitReader, BitWriter};
+use crate::quant::{Compressed, Compressor};
+
+pub struct SignQuantizer {
+    n: usize,
+}
+
+impl SignQuantizer {
+    pub fn new(n: usize) -> Self {
+        SignQuantizer { n }
+    }
+}
+
+impl Compressor for SignQuantizer {
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        1.0
+    }
+
+    fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.n);
+        let scale = y.iter().map(|v| v.abs() as f64).sum::<f64>() as f32 / self.n as f32;
+        let mut w = BitWriter::with_capacity_bits(self.n + 32);
+        w.write_f32(scale);
+        for &v in y {
+            w.write_bits(u64::from(v >= 0.0), 1);
+        }
+        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits: self.n, side_bits: 32 }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        let scale = r.read_f32();
+        (0..self.n).map(|_| if r.read_bits(1) == 1 { scale } else { -scale }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist2, norm2};
+    use crate::testkit::prop::{forall, gen, Cases};
+
+    #[test]
+    fn signs_preserved() {
+        forall(Cases::new("sign preserves signs", 50), |rng, _| {
+            let n = gen::dim(rng);
+            let c = SignQuantizer::new(n);
+            let y = gen::nonzero_vector(rng, n);
+            let msg = c.compress(&y, rng);
+            assert_eq!(msg.payload_bits, n);
+            let yhat = c.decompress(&msg);
+            for (a, b) in y.iter().zip(&yhat) {
+                if *a != 0.0 {
+                    assert!(a.signum() == b.signum() || *b == 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn exact_on_constant_magnitude() {
+        // If |y_i| = c for all i, sign quantization is lossless.
+        let y = vec![0.7, -0.7, 0.7, 0.7, -0.7];
+        let c = SignQuantizer::new(5);
+        let mut rng = Rng::seed_from(1);
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        assert!(dist2(&yhat, &y) < 1e-6);
+    }
+
+    #[test]
+    fn error_order_n_on_heavy_tails() {
+        // Table 1: sign quantization's normalized error is O(1)·||y|| on
+        // heavy-tailed inputs (it cannot represent magnitude variation).
+        let mut rng = Rng::seed_from(2);
+        let n = 1000;
+        let c = SignQuantizer::new(n);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        assert!(dist2(&yhat, &y) / norm2(&y) > 0.5);
+    }
+}

@@ -1,0 +1,159 @@
+//! TernGrad-style ternary quantization [16] — Table 1.
+//!
+//! `Q(y)_i = s·sign(y_i)·b_i` with `s = ‖y‖∞` and
+//! `b_i ~ Bernoulli(|y_i|/s)` — unbiased by construction. Trits are packed
+//! five to a byte (3⁵ = 243 ≤ 256), i.e. 1.6 bits per dimension on the
+//! wire (the paper's `n·log₂3 ≈ 1.585n` row, within 1%).
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::norm_inf;
+use crate::quant::bitpack::{BitReader, BitWriter};
+use crate::quant::{Compressed, Compressor};
+
+pub struct Ternary {
+    n: usize,
+}
+
+impl Ternary {
+    pub fn new(n: usize) -> Self {
+        Ternary { n }
+    }
+}
+
+/// Bits per group of 5 trits.
+const GROUP_BITS: usize = 8;
+
+impl Compressor for Ternary {
+    fn name(&self) -> String {
+        "ternary".into()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        GROUP_BITS as f32 / 5.0
+    }
+
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.n);
+        let s = norm_inf(y);
+        let mut w = BitWriter::with_capacity_bits(self.n * 2 + 32);
+        w.write_f32(s);
+        let mut payload_bits = 0;
+        if s > 0.0 {
+            let mut group = 0u64;
+            let mut count = 0;
+            for &v in y {
+                let p = (v.abs() / s) as f64;
+                let trit: u64 = if rng.bernoulli(p) {
+                    if v >= 0.0 {
+                        2
+                    } else {
+                        0
+                    }
+                } else {
+                    1
+                };
+                group = group * 3 + trit;
+                count += 1;
+                if count == 5 {
+                    w.write_bits(group, GROUP_BITS);
+                    payload_bits += GROUP_BITS;
+                    group = 0;
+                    count = 0;
+                }
+            }
+            if count > 0 {
+                for _ in count..5 {
+                    group *= 3; // pad with zeros (decoded then discarded)
+                }
+                w.write_bits(group, GROUP_BITS);
+                payload_bits += GROUP_BITS;
+            }
+        }
+        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        let s = r.read_f32();
+        let mut y = vec![0.0f32; self.n];
+        if s == 0.0 {
+            return y;
+        }
+        let mut i = 0;
+        while i < self.n {
+            let group = r.read_bits(GROUP_BITS);
+            let mut trits = [0u64; 5];
+            let mut g = group;
+            for t in (0..5).rev() {
+                trits[t] = g % 3;
+                g /= 3;
+            }
+            for &t in trits.iter().take((self.n - i).min(5)) {
+                y[i] = match t {
+                    0 => -s,
+                    1 => 0.0,
+                    _ => s,
+                };
+                i += 1;
+            }
+        }
+        y
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist2, norm2};
+
+    #[test]
+    fn values_are_ternary() {
+        let mut rng = Rng::seed_from(1);
+        let n = 103; // not a multiple of 5: exercises the tail group
+        let c = Ternary::new(n);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let s = norm_inf(&y);
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        for &v in &yhat {
+            assert!(v == 0.0 || (v.abs() - s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unbiased() {
+        let mut rng = Rng::seed_from(2);
+        let n = 24;
+        let c = Ternary::new(n);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let trials = 6000;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let yhat = c.decompress(&c.compress(&y, &mut rng));
+            for (m, &v) in mean.iter_mut().zip(&yhat) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        assert!(dist2(&mean_f, &y) / norm2(&y) < 0.08);
+    }
+
+    #[test]
+    fn wire_rate_close_to_log2_3() {
+        let mut rng = Rng::seed_from(3);
+        let n = 1000;
+        let c = Ternary::new(n);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let msg = c.compress(&y, &mut rng);
+        let rate = msg.payload_bits as f32 / n as f32;
+        assert!(rate <= 1.61, "rate={rate}");
+        assert!(rate >= 1.55);
+    }
+}

@@ -1,0 +1,152 @@
+//! Top-k sparsification [18] — Table 1 and the "Top-K" curves of Figs. 1, 2.
+//!
+//! Keeps the `k` largest-magnitude coordinates and quantizes each retained
+//! value with `value_bits` bits (dithered, range `±‖y‖∞`). Index cost:
+//! `⌈log₂ n⌉` bits per index, charged against the payload when
+//! `count_index_bits` is set (the paper's Table 1 charges the
+//! information-theoretic `log₂ C(n,k)`; our explicit coding is within
+//! `k·log₂(n/k)·O(1)` of that and is what actually crosses the wire).
+//! The paper's Fig. 2 experiments charge only value bits — matching their
+//! "78 coordinates × 1 bit = 78 bits" accounting — so the flag defaults
+//! to `false` there.
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::{norm_inf, top_k_indices};
+use crate::quant::bitpack::{BitReader, BitWriter};
+use crate::quant::dither::DitheredUniform;
+use crate::quant::{Compressed, Compressor};
+
+pub struct TopK {
+    n: usize,
+    pub k: usize,
+    pub value_bits: usize,
+    pub count_index_bits: bool,
+}
+
+impl TopK {
+    pub fn new(n: usize, k: usize, value_bits: usize) -> Self {
+        assert!(k <= n && k > 0);
+        assert!(value_bits >= 1);
+        TopK { n, k, value_bits, count_index_bits: false }
+    }
+
+    pub fn counting_index_bits(mut self) -> Self {
+        self.count_index_bits = true;
+        self
+    }
+
+    fn index_bits(&self) -> usize {
+        (usize::BITS - (self.n - 1).leading_zeros()) as usize
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("top{}x{}b", self.k, self.value_bits)
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        let idx = if self.count_index_bits { self.index_bits() } else { 0 };
+        (self.k * (self.value_bits + idx)) as f32 / self.n as f32
+    }
+
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.n);
+        let s = norm_inf(y);
+        let ib = self.index_bits();
+        let mut w = BitWriter::with_capacity_bits(self.k * (ib + self.value_bits) + 32);
+        w.write_f32(s);
+        let mut idx = top_k_indices(y, self.k);
+        idx.sort_unstable();
+        let q = DitheredUniform::symmetric(s.max(1e-30), self.value_bits);
+        for &i in &idx {
+            w.write_bits(i as u64, ib);
+            w.write_bits(q.encode(y[i], rng), self.value_bits);
+        }
+        let value_payload = self.k * self.value_bits;
+        let index_payload = self.k * ib;
+        let (payload_bits, side_bits) = if self.count_index_bits {
+            (value_payload + index_payload, 32)
+        } else {
+            (value_payload, 32 + index_payload)
+        };
+        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        let s = r.read_f32();
+        let ib = self.index_bits();
+        let q = DitheredUniform::symmetric(s.max(1e-30), self.value_bits);
+        let mut y = vec![0.0f32; self.n];
+        for _ in 0..self.k {
+            let i = r.read_bits(ib) as usize;
+            y[i] = q.decode(r.read_bits(self.value_bits));
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::{dist2, norm2};
+
+    #[test]
+    fn keeps_largest_coordinates() {
+        let mut rng = Rng::seed_from(1);
+        let n = 100;
+        let c = TopK::new(n, 10, 8);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        // The support of yhat must be among the top-10 magnitudes of y.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| y[b].abs().partial_cmp(&y[a].abs()).unwrap());
+        let top: std::collections::HashSet<usize> = order[..10].iter().copied().collect();
+        for (i, &v) in yhat.iter().enumerate() {
+            if v != 0.0 {
+                assert!(top.contains(&i), "index {i} not in top-10");
+            }
+        }
+    }
+
+    #[test]
+    fn sparsification_error_fraction() {
+        // Table 1: error ~ mass of the dropped (n-k) coordinates.
+        let mut rng = Rng::seed_from(2);
+        let n = 1000;
+        let c = TopK::new(n, 100, 12);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        let rel = dist2(&yhat, &y) / norm2(&y);
+        // Gaussian: dropping 90% of coords keeps ~ the top decile of mass.
+        assert!(rel > 0.5 && rel < 1.0, "rel={rel}");
+    }
+
+    #[test]
+    fn heavy_tail_friendly() {
+        // On Gaussian³, top-k captures most of the l2 mass.
+        let mut rng = Rng::seed_from(3);
+        let n = 1000;
+        let c = TopK::new(n, 100, 12);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        assert!(dist2(&yhat, &y) / norm2(&y) < 0.45);
+    }
+
+    #[test]
+    fn bit_accounting_modes() {
+        let mut rng = Rng::seed_from(4);
+        let y: Vec<f32> = (0..784).map(|_| rng.gaussian_f32()).collect();
+        let free = TopK::new(784, 78, 1);
+        let m = free.compress(&y, &mut rng);
+        assert_eq!(m.payload_bits, 78); // the paper's Fig 2c accounting
+        let charged = TopK::new(784, 78, 1).counting_index_bits();
+        let m2 = charged.compress(&y, &mut rng);
+        assert_eq!(m2.payload_bits, 78 * (1 + 10)); // ceil(log2 784) = 10
+    }
+}

@@ -1,0 +1,93 @@
+//! R-bit uniform scalar quantization (eq. 11 of the paper).
+//!
+//! With `b` bits a coordinate in `[-1, 1]` maps to one of `M = 2^b` points
+//! `v_i = −1 + (2i−1)Δ/2`, `Δ = 2/M`; the worst-case per-coordinate error
+//! is `Δ/2 = 2^{−b}`. Coordinates allotted 0 bits decode to the midpoint 0.
+
+/// Nearest-neighbour index of `x ∈ [−1,1]` among the `M = 2^bits` points.
+#[inline]
+pub fn quantize_index(x: f32, bits: usize) -> u64 {
+    debug_assert!(bits >= 1 && bits <= 32);
+    let m = 1u64 << bits;
+    // Cells are [-1 + iΔ, -1 + (i+1)Δ); clamp handles x = ±1 and overshoot.
+    let delta = 2.0 / m as f32;
+    let i = ((x.clamp(-1.0, 1.0) + 1.0) / delta) as i64;
+    i.clamp(0, m as i64 - 1) as u64
+}
+
+/// Reconstruction point for an index.
+#[inline]
+pub fn dequantize_index(i: u64, bits: usize) -> f32 {
+    let m = 1u64 << bits;
+    let delta = 2.0 / m as f32;
+    -1.0 + (2.0 * i as f32 + 1.0) * delta / 2.0
+}
+
+/// Quantize a value with `bits` bits (0 bits → 0.0).
+#[inline]
+pub fn quantize_value(x: f32, bits: usize) -> f32 {
+    if bits == 0 {
+        0.0
+    } else {
+        dequantize_index(quantize_index(x, bits), bits)
+    }
+}
+
+/// Worst-case error of the `b`-bit scalar quantizer on `[−1,1]`: `2^{−b}`
+/// (`= 1` for `b = 0`, the midpoint decoder).
+#[inline]
+pub fn worst_case_err(bits: usize) -> f32 {
+    if bits == 0 {
+        1.0
+    } else {
+        (2.0f32).powi(-(bits as i32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{forall, Cases};
+
+    #[test]
+    fn one_bit_maps_to_pm_half() {
+        // M = 2: points at -0.5 and +0.5.
+        assert_eq!(quantize_value(-0.9, 1), -0.5);
+        assert_eq!(quantize_value(0.3, 1), 0.5);
+        assert_eq!(quantize_value(-0.001, 1), -0.5);
+    }
+
+    #[test]
+    fn error_bounded_by_half_delta() {
+        forall(Cases::new("uniform error bound", 500), |rng, _| {
+            let bits = 1 + rng.below(12);
+            let x = (rng.uniform_f32() - 0.5) * 2.0;
+            let q = quantize_value(x, bits);
+            let delta = 2.0 / (1u64 << bits) as f32;
+            assert!((x - q).abs() <= delta / 2.0 + 1e-6, "bits={bits} x={x} q={q}");
+        });
+    }
+
+    #[test]
+    fn roundtrip_index_value() {
+        for bits in 1..=10 {
+            let m = 1u64 << bits;
+            for i in 0..m.min(64) {
+                let v = dequantize_index(i, bits);
+                assert_eq!(quantize_index(v, bits), i, "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        assert_eq!(quantize_index(5.0, 3), (1 << 3) - 1);
+        assert_eq!(quantize_index(-5.0, 3), 0);
+    }
+
+    #[test]
+    fn zero_bits_decodes_to_midpoint() {
+        assert_eq!(quantize_value(0.73, 0), 0.0);
+        assert_eq!(worst_case_err(0), 1.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! vqSGD cross-polytope quantizer [17] — Table 1.
+//!
+//! The unit `l₂` ball sits inside the scaled cross-polytope
+//! `conv{±√n·e_i}` (since `‖v‖₁ ≤ √n‖v‖₂`). vqSGD writes
+//! `v = Σ λ_j c_j` as a convex combination of the `2n` vertices plus a
+//! slack split evenly over antipodal pairs, samples **one** vertex from the
+//! λ distribution, and transmits its index — `⌈log₂ 2n⌉ + O(1)` bits total,
+//! unbiased, with `O(n)` variance (the Table 1 error row). Repetitions
+//! (`reps`) average independent samples to trade bits for variance.
+
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::{norm1, norm2};
+use crate::quant::bitpack::{BitReader, BitWriter};
+use crate::quant::{Compressed, Compressor};
+
+pub struct VqSgd {
+    n: usize,
+    /// Number of independent vertex samples averaged at the decoder.
+    pub reps: usize,
+}
+
+impl VqSgd {
+    pub fn new(n: usize, reps: usize) -> Self {
+        assert!(reps >= 1);
+        VqSgd { n, reps }
+    }
+
+    fn index_bits(&self) -> usize {
+        (usize::BITS - (2 * self.n - 1).leading_zeros()) as usize
+    }
+}
+
+impl Compressor for VqSgd {
+    fn name(&self) -> String {
+        format!("vqsgd-x{}", self.reps)
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        (self.reps * self.index_bits()) as f32 / self.n as f32
+    }
+
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        assert_eq!(y.len(), self.n);
+        let g = norm2(y);
+        let ib = self.index_bits();
+        let mut w = BitWriter::with_capacity_bits(self.reps * ib + 32);
+        w.write_f32(g);
+        if g > 0.0 {
+            let sqrt_n = (self.n as f32).sqrt();
+            // λ_i = |v_i| / √n for the vertex sign(v_i)·√n·e_i; the slack
+            // 1 − ‖v‖₁/√n is split evenly across all 2n vertices (their
+            // contributions cancel in expectation).
+            let v: Vec<f32> = y.iter().map(|&x| x / g).collect();
+            let slack = (1.0 - norm1(&v) / sqrt_n).max(0.0);
+            let slack_each = slack / (2 * self.n) as f32;
+            for _ in 0..self.reps {
+                // Sample from the categorical distribution over 2n vertices.
+                let mut u = rng.uniform_f32();
+                let mut chosen = 2 * self.n - 1;
+                for (i, &vi) in v.iter().enumerate() {
+                    let (p_pos, p_neg) = if vi >= 0.0 {
+                        (vi / sqrt_n + slack_each, slack_each)
+                    } else {
+                        (slack_each, -vi / sqrt_n + slack_each)
+                    };
+                    if u < p_pos {
+                        chosen = 2 * i;
+                        break;
+                    }
+                    u -= p_pos;
+                    if u < p_neg {
+                        chosen = 2 * i + 1;
+                        break;
+                    }
+                    u -= p_neg;
+                }
+                w.write_bits(chosen as u64, ib);
+            }
+        }
+        let payload_bits = if g > 0.0 { self.reps * ib } else { 0 };
+        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut r = BitReader::new(&msg.bytes);
+        let g = r.read_f32();
+        let mut y = vec![0.0f32; self.n];
+        if g == 0.0 {
+            return y;
+        }
+        let ib = self.index_bits();
+        let sqrt_n = (self.n as f32).sqrt();
+        let scale = g * sqrt_n / self.reps as f32;
+        for _ in 0..self.reps {
+            let idx = r.read_bits(ib) as usize;
+            let coord = idx / 2;
+            let sign = if idx % 2 == 0 { 1.0 } else { -1.0 };
+            if coord < self.n {
+                y[coord] += sign * scale;
+            }
+        }
+        y
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::dist2;
+
+    #[test]
+    fn output_is_scaled_vertex_average() {
+        let mut rng = Rng::seed_from(1);
+        let n = 16;
+        let c = VqSgd::new(n, 1);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        // Exactly one coordinate, magnitude g·√n.
+        let nz: Vec<f32> = yhat.iter().copied().filter(|&v| v != 0.0).collect();
+        assert_eq!(nz.len(), 1);
+        assert!((nz[0].abs() - norm2(&y) * (n as f32).sqrt()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn unbiased() {
+        let mut rng = Rng::seed_from(2);
+        let n = 8;
+        let c = VqSgd::new(n, 4);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let trials = 40_000;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let yhat = c.decompress(&c.compress(&y, &mut rng));
+            for (m, &v) in mean.iter_mut().zip(&yhat) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        assert!(dist2(&mean_f, &y) / norm2(&y) < 0.1, "bias {}", dist2(&mean_f, &y) / norm2(&y));
+    }
+
+    #[test]
+    fn bit_cost_logarithmic() {
+        let c = VqSgd::new(1024, 1);
+        assert_eq!(c.index_bits(), 11); // log2(2048)
+        let mut rng = Rng::seed_from(3);
+        let y: Vec<f32> = (0..1024).map(|_| rng.gaussian_f32()).collect();
+        let msg = c.compress(&y, &mut rng);
+        assert_eq!(msg.payload_bits, 11);
+    }
+}

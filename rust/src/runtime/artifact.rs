@@ -1,0 +1,104 @@
+//! A compiled HLO artifact: load text → compile once → execute many.
+//!
+//! Artifacts are HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`). Lowering uses
+//! `return_tuple=True`, so executables return a 1-tuple that we flatten.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::client::with_cpu_client;
+
+/// Typed input buffer for an artifact call.
+pub enum Input<'a> {
+    F32(&'a [f32], Vec<usize>),
+    U32(&'a [u32], Vec<usize>),
+}
+
+/// A loaded, compiled HLO computation.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Artifact {
+    /// Load and compile `path` (HLO text file).
+    pub fn load(path: &str) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            with_cpu_client(|c| c.compile(&comp)).with_context(|| format!("compiling {path}"))?;
+        Ok(Artifact { exe, name: path.to_string() })
+    }
+
+    /// Execute with the given inputs; returns all outputs flattened to f32
+    /// vectors (model artifacts emit f32 tensors).
+    pub fn run_f32(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                Ok(match inp {
+                    Input::F32(data, shape) => {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(data).reshape(&dims)?
+                    }
+                    Input::U32(data, shape) => {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(data).reshape(&dims)?
+                    }
+                })
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // return_tuple=True => outputs arrive as a tuple; decompose.
+        let parts = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Execute and return the single output (convenience).
+    pub fn run1_f32(&self, inputs: &[Input]) -> Result<Vec<f32>> {
+        let mut outs = self.run_f32(inputs)?;
+        anyhow::ensure!(outs.len() == 1, "{}: expected 1 output, got {}", self.name, outs.len());
+        Ok(outs.pop().unwrap())
+    }
+}
+
+/// Default artifacts directory (overridable for tests).
+pub fn artifacts_dir() -> String {
+    std::env::var("KASHINFLOW_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Minimal HLO text computation: f(x) = x + x over f32[4] (1-tuple).
+    const ADD_HLO: &str = r#"
+HloModule jit_fn, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  add.3 = f32[4]{0} add(Arg_0.1, Arg_0.1)
+  ROOT tuple.4 = (f32[4]{0}) tuple(add.3)
+}
+"#;
+
+    #[test]
+    fn loads_and_runs_handwritten_hlo() {
+        let dir = std::env::temp_dir().join("kashinflow_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("add.hlo.txt");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(ADD_HLO.as_bytes()).unwrap();
+        drop(f);
+        let art = Artifact::load(path.to_str().unwrap()).unwrap();
+        let out = art.run1_f32(&[Input::F32(&[1.0, 2.0, 3.0, 4.0], vec![4])]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+}

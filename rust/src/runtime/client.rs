@@ -1,0 +1,37 @@
+//! Thread-local PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so
+//! each thread that touches the runtime gets its own client, created
+//! lazily. In the coordinator topology this is exactly one client per
+//! model-executing worker thread — artifacts are loaded and run on the
+//! thread that owns them.
+
+use std::cell::OnceCell;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// Run `f` with this thread's CPU client (created on first use).
+pub fn with_cpu_client<R>(f: impl FnOnce(&xla::PjRtClient) -> R) -> R {
+    CLIENT.with(|cell| {
+        let client =
+            cell.get_or_init(|| xla::PjRtClient::cpu().expect("failed to create PJRT CPU client"));
+        f(client)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_cpu_and_cached() {
+        let name1 = with_cpu_client(|c| c.platform_name());
+        let name2 = with_cpu_client(|c| c.platform_name());
+        assert_eq!(name1, "cpu");
+        assert_eq!(name2, "cpu");
+        let devs = with_cpu_client(|c| c.device_count());
+        assert!(devs >= 1);
+    }
+}

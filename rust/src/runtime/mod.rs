@@ -1,0 +1,9 @@
+//! PJRT runtime — loads AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`) and executes them from the Rust hot path.
+//! Python is never on the request path: after `make artifacts` the binary
+//! is self-contained.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::Artifact;

@@ -1,0 +1,153 @@
+//! Micro-benchmark harness (stand-in for `criterion`, unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is built with `harness = false` and calls
+//! [`Bencher::run`] per case. The harness warms up, collects wall-clock
+//! samples, and prints `name  median  mean  p95  [throughput]` rows plus a
+//! machine-readable `BENCH\t...` line consumed by `EXPERIMENTS.md` tooling.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub samples: usize,
+}
+
+/// Micro-benchmark runner.
+pub struct Bencher {
+    /// Target time to spend measuring each case.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    /// Cap on recorded samples.
+    pub max_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(600),
+            warmup_time: Duration::from_millis(150),
+            max_samples: 512,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (stable `black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast settings for CI smoke runs.
+    pub fn quick() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(120),
+            warmup_time: Duration::from_millis(30),
+            max_samples: 64,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; `f` should perform one logical operation.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup + estimate per-iter cost.
+        let warm_start = Instant::now();
+        let mut iters_per_sample = 1usize;
+        let mut one = Duration::ZERO;
+        while warm_start.elapsed() < self.warmup_time {
+            let t = Instant::now();
+            f();
+            one = t.elapsed();
+        }
+        if one < Duration::from_micros(50) && !one.is_zero() {
+            iters_per_sample =
+                (Duration::from_micros(50).as_nanos() / one.as_nanos().max(1)) as usize + 1;
+        } else if one.is_zero() {
+            iters_per_sample = 1000;
+        }
+
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure_time && samples.len() < self.max_samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed() / iters_per_sample as u32);
+        }
+        samples.sort_unstable();
+        let median = samples[samples.len() / 2];
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let stats =
+            Stats { name: name.to_string(), median, mean, p95, samples: samples.len() };
+        println!(
+            "{:<48} median {:>12?}  mean {:>12?}  p95 {:>12?}  ({} samples)",
+            stats.name, stats.median, stats.mean, stats.p95, stats.samples
+        );
+        println!(
+            "BENCH\t{}\t{}\t{}\t{}",
+            stats.name,
+            stats.median.as_nanos(),
+            stats.mean.as_nanos(),
+            stats.p95.as_nanos()
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Like [`run`] but also reports elements/second throughput.
+    pub fn run_throughput<F: FnMut()>(&mut self, name: &str, elems: usize, f: F) -> Stats {
+        let stats = self.run(name, f);
+        let eps = elems as f64 / stats.median.as_secs_f64();
+        println!("{:<48} throughput {:>12.3e} elems/s", name, eps);
+        stats
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let mut b = Bencher::quick();
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.median < Duration::from_millis(1));
+        assert!(s.samples > 0);
+    }
+
+    #[test]
+    fn ordering_of_costs() {
+        let mut b = Bencher::quick();
+        let small = b.run("sum-1k", || {
+            let v: f64 = (0..1_000).map(|i| i as f64).sum();
+            black_box(v);
+        });
+        let big = b.run("sum-100k", || {
+            let v: f64 = (0..100_000).map(|i| i as f64).sum();
+            black_box(v);
+        });
+        assert!(big.median > small.median);
+    }
+}

@@ -1,0 +1,14 @@
+//! In-tree testing & benchmarking substrate.
+//!
+//! The build image is fully offline and ships neither `proptest` nor
+//! `criterion`, so this module provides the two pieces the test/bench suite
+//! needs:
+//!
+//! * [`prop`] — a miniature property-testing harness: run a closure over
+//!   many seeded random cases, report the failing seed for replay.
+//! * [`bench`] — a micro-benchmark timer with warmup, repeated samples and
+//!   criterion-style median/p95 reporting, used by every `rust/benches/*`
+//!   target (built with `harness = false`).
+
+pub mod bench;
+pub mod prop;

@@ -1,0 +1,162 @@
+//! Miniature property-testing harness (stand-in for `proptest`, which is
+//! unavailable offline).
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss this image's libstdc++ rpath)
+//! use kashinflow::testkit::prop::{forall, Cases};
+//! forall(Cases::new("abs is non-negative", 100), |rng, case| {
+//!     let x = rng.gaussian_f32();
+//!     assert!(x.abs() >= 0.0, "case {case}: {x}");
+//! });
+//! ```
+//!
+//! On failure the panic message includes the master seed and the case index
+//! so the exact input is replayable with
+//! `Cases::new(..).seed(s).only(case_idx)`.
+
+use crate::linalg::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Cases {
+    pub name: &'static str,
+    pub n_cases: usize,
+    pub master_seed: u64,
+    pub only: Option<usize>,
+}
+
+impl Cases {
+    pub fn new(name: &'static str, n_cases: usize) -> Self {
+        Cases { name, n_cases, master_seed: 0xC0FFEE, only: None }
+    }
+
+    /// Override the master seed (for replay).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.master_seed = s;
+        self
+    }
+
+    /// Run only one case index (for replay / shrinking by hand).
+    pub fn only(mut self, idx: usize) -> Self {
+        self.only = Some(idx);
+        self
+    }
+}
+
+/// Run `body` over `cases.n_cases` independent RNG streams. Each case gets
+/// an RNG deterministically derived from `(master_seed, case_idx)`, so a
+/// failing case reproduces in isolation.
+pub fn forall<F: FnMut(&mut Rng, usize)>(cases: Cases, mut body: F) {
+    let run_one = |idx: usize, body: &mut F| {
+        let mut rng = Rng::seed_from(cases.master_seed ^ (idx as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng, idx);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{}' failed at case {idx} (replay: Cases::new(..).seed({:#x}).only({idx})): {msg}",
+                cases.name, cases.master_seed
+            );
+        }
+    };
+    if let Some(idx) = cases.only {
+        run_one(idx, &mut body);
+        return;
+    }
+    for idx in 0..cases.n_cases {
+        run_one(idx, &mut body);
+    }
+}
+
+/// Common generators for property tests.
+pub mod gen {
+    use crate::linalg::rng::Rng;
+
+    /// A random vector with one of several "shapes" the paper's inputs take:
+    /// Gaussian, heavy-tailed Gaussian³, Student-t(1), sparse, constant and
+    /// one-hot — the adversarial cases for quantizers.
+    pub fn vector(rng: &mut Rng, n: usize) -> Vec<f32> {
+        match rng.below(6) {
+            0 => (0..n).map(|_| rng.gaussian_f32()).collect(),
+            1 => (0..n).map(|_| rng.gaussian_cubed()).collect(),
+            2 => (0..n).map(|_| rng.student_t(1)).collect(),
+            3 => {
+                // sparse: ~10% support
+                (0..n)
+                    .map(|_| if rng.bernoulli(0.1) { rng.gaussian_cubed() } else { 0.0 })
+                    .collect()
+            }
+            4 => vec![rng.gaussian_f32(); n],
+            _ => {
+                let mut v = vec![0.0; n];
+                v[rng.below(n)] = rng.gaussian_cubed() + 1.0;
+                v
+            }
+        }
+    }
+
+    /// A non-zero vector (quantizers normalize by the norm).
+    pub fn nonzero_vector(rng: &mut Rng, n: usize) -> Vec<f32> {
+        loop {
+            let v = vector(rng, n);
+            if v.iter().any(|&x| x != 0.0 && x.is_finite()) {
+                return v;
+            }
+        }
+    }
+
+    /// A dimension in the ranges the paper sweeps.
+    pub fn dim(rng: &mut Rng) -> usize {
+        [3, 8, 16, 30, 31, 100, 116, 128, 257, 784, 1000][rng.below(11)]
+    }
+
+    /// A bit budget R covering sub-linear, unit and high-budget regimes.
+    pub fn bit_budget(rng: &mut Rng) -> f32 {
+        [0.1, 0.25, 0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0][rng.below(9)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall(Cases::new("trivial", 50), |rng, _| {
+            let x = rng.gaussian_f32();
+            assert!(x.is_finite());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed at case 0")]
+    fn reports_failing_case() {
+        forall(Cases::new("always-false", 10), |_, _| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn only_replays_single_case() {
+        let mut ran = 0;
+        forall(Cases::new("only", 100).only(7), |_, idx| {
+            assert_eq!(idx, 7);
+        });
+        ran += 1;
+        assert_eq!(ran, 1);
+    }
+
+    #[test]
+    fn nonzero_vector_is_nonzero() {
+        forall(Cases::new("nonzero", 100), |rng, _| {
+            let n = gen::dim(rng);
+            let v = gen::nonzero_vector(rng, n);
+            assert!(v.iter().any(|&x| x != 0.0));
+        });
+    }
+}

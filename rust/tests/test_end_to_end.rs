@@ -1,0 +1,157 @@
+//! Integration: the full threaded coordinator over every scheme, budget
+//! enforcement under adversarial configs, and determinism.
+
+use std::sync::Arc;
+
+use kashinflow::coordinator::config::{RunConfig, SchemeKind};
+use kashinflow::coordinator::run_distributed;
+use kashinflow::coordinator::worker::{DatasetGradSource, GradSource};
+use kashinflow::data::synthetic::planted_regression_shards;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::opt::objectives::Loss;
+use kashinflow::quant::Compressor;
+
+fn sources_for(
+    shards: Vec<kashinflow::opt::objectives::DatasetObjective>,
+    batch: usize,
+    seed: u64,
+) -> Vec<Box<dyn GradSource>> {
+    shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, obj)| {
+            Box::new(DatasetGradSource { obj, batch, rng: Rng::seed_from(seed + i as u64) })
+                as Box<dyn GradSource>
+        })
+        .collect()
+}
+
+#[test]
+fn every_scheme_completes_a_distributed_run() {
+    for scheme in [
+        SchemeKind::Ndsc,
+        SchemeKind::NdscDithered,
+        SchemeKind::Naive,
+        SchemeKind::StandardDither,
+        SchemeKind::Qsgd,
+        SchemeKind::Sign,
+        SchemeKind::Ternary,
+        SchemeKind::TopK,
+        SchemeKind::RandK,
+        SchemeKind::None,
+    ] {
+        let mut rng = Rng::seed_from(1);
+        let (shards, _) = planted_regression_shards(3, 8, 16, Loss::Square, &mut rng, false);
+        // Schemes with fixed wire rates need a budget that admits them.
+        let r = match scheme {
+            SchemeKind::None => 32.0,
+            SchemeKind::Qsgd => 4.0,
+            SchemeKind::Ternary | SchemeKind::Sign => 2.0,
+            _ => 2.0,
+        };
+        let cfg = RunConfig { n: 16, workers: 3, r, scheme, rounds: 20, step: 0.02, batch: 0, ..Default::default() };
+        let comps = cfg.build_compressors(&mut rng);
+        let metrics =
+            run_distributed(&cfg, vec![0.0; 16], sources_for(shards, 0, 50), comps, |_| 0.0);
+        assert_eq!(metrics.rounds.len(), 20, "{scheme:?}");
+        assert_eq!(metrics.rejected_messages, 0, "{scheme:?}");
+        assert!(metrics.rounds.iter().all(|r| r.payload_bits > 0 || scheme == SchemeKind::None));
+    }
+}
+
+#[test]
+fn budget_enforcement_rejects_over_budget_compressor() {
+    // A compressor that lies about its rate must be caught by the channel.
+    struct Liar;
+    impl Compressor for Liar {
+        fn name(&self) -> String {
+            "liar".into()
+        }
+        fn n(&self) -> usize {
+            16
+        }
+        fn bits_per_dim(&self) -> f32 {
+            1.0
+        }
+        fn compress(&self, _y: &[f32], _rng: &mut Rng) -> kashinflow::quant::Compressed {
+            kashinflow::quant::Compressed {
+                n: 16,
+                bytes: vec![0; 100],
+                payload_bits: 800, // way over floor(16*1) = 16
+                side_bits: 0,
+            }
+        }
+        fn decompress(&self, _msg: &kashinflow::quant::Compressed) -> Vec<f32> {
+            vec![0.0; 16]
+        }
+    }
+    let mut rng = Rng::seed_from(2);
+    let (shards, _) = planted_regression_shards(1, 8, 16, Loss::Square, &mut rng, false);
+    let cfg =
+        RunConfig { n: 16, workers: 1, r: 1.0, rounds: 5, step: 0.01, ..Default::default() };
+    let comps: Vec<Arc<dyn Compressor>> = vec![Arc::new(Liar)];
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_distributed(&cfg, vec![0.0; 16], sources_for(shards, 0, 60), comps, |_| 0.0)
+    }));
+    assert!(result.is_err(), "over-budget messages must abort the run");
+}
+
+#[test]
+fn runs_are_deterministic_given_seed() {
+    let run = || {
+        let mut rng = Rng::seed_from(3);
+        let (shards, _) = planted_regression_shards(4, 10, 24, Loss::Square, &mut rng, false);
+        let cfg = RunConfig {
+            n: 24,
+            workers: 4,
+            r: 2.0,
+            scheme: SchemeKind::Ndsc,
+            rounds: 30,
+            step: 0.02,
+            batch: 0,
+            seed: 9,
+            ..Default::default()
+        };
+        let comps = cfg.build_compressors(&mut rng);
+        let metrics =
+            run_distributed(&cfg, vec![0.0; 24], sources_for(shards, 0, 70), comps, |_| 0.0);
+        metrics.final_iterate
+    };
+    // NOTE: worker->server message interleaving is nondeterministic, but
+    // consensus averaging is order-independent up to float rounding; with
+    // deterministic codecs the result must match to high precision.
+    let a = run();
+    let b = run();
+    let d = kashinflow::linalg::vecops::dist2(&a, &b);
+    assert!(d < 1e-5, "nondeterministic result: {d}");
+}
+
+#[test]
+fn multiworker_variance_reduction() {
+    // App. I: quantization variance enters as sigma_q^2 / m — more workers
+    // should land closer to x* at a fixed round budget (dithered codec).
+    let run_with_workers = |m: usize| -> f32 {
+        let mut rng = Rng::seed_from(4);
+        let (shards, xs) = planted_regression_shards(m, 10, 16, Loss::Square, &mut rng, false);
+        let cfg = RunConfig {
+            n: 16,
+            workers: m,
+            r: 1.0,
+            scheme: SchemeKind::NdscDithered,
+            rounds: 150,
+            step: 0.01,
+            batch: 0,
+            ..Default::default()
+        };
+        let comps = cfg.build_compressors(&mut rng);
+        let metrics =
+            run_distributed(&cfg, vec![0.0; 16], sources_for(shards, 0, 80), comps, |_| 0.0);
+        kashinflow::linalg::vecops::dist2(&metrics.final_iterate, &xs)
+    };
+    let d1 = run_with_workers(2);
+    let d2 = run_with_workers(12);
+    assert!(
+        d2 < d1 * 1.2,
+        "more workers should not be much worse: m=2 gives {d1}, m=12 gives {d2}"
+    );
+}

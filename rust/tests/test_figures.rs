@@ -1,0 +1,115 @@
+//! Shape assertions for the paper's headline figure claims (DESIGN.md §5),
+//! run on the quick settings of the experiment harness.
+
+use kashinflow::exp;
+
+/// Fig. 1a: NDE-composed schemes beat their plain counterparts on
+/// heavy-tailed inputs; NDSC beats naive.
+#[test]
+fn fig1a_nde_improves_compression() {
+    let series = exp::fig1::fig1a(true);
+    let get = |name: &str| {
+        series
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing series {name}"))
+    };
+    let sd = get("SD");
+    let sd_ndh = get("SD+NDH");
+    let naive = get("naive");
+    let ndh = get("NDH");
+    // compare at the last (largest) R
+    assert!(sd_ndh.y_at_end() < sd.y_at_end(), "SD+NDH {} !< SD {}", sd_ndh.y_at_end(), sd.y_at_end());
+    assert!(ndh.y_at_end() < naive.y_at_end(), "NDH {} !< naive {}", ndh.y_at_end(), naive.y_at_end());
+}
+
+/// Fig. 1b: at the largest budget all democratic schemes approach σ and
+/// beat the naive quantizer at the smallest budget.
+#[test]
+fn fig1b_rate_ordering() {
+    let series = exp::fig1::fig1b(true);
+    let get = |name: &str| series.iter().find(|s| s.name == name).unwrap();
+    let sigma = get("unquantized(σ)").y_at_end();
+    let naive = get("DQGD(naive)");
+    let ndh = get("NDE-Hadamard");
+    // At the smallest swept R, NDSC converges strictly faster than naive.
+    let naive_first = naive.points.first().unwrap().1;
+    let ndh_first = ndh.points.first().unwrap().1;
+    assert!(ndh_first <= naive_first + 1e-6, "NDH {ndh_first} vs naive {naive_first} at low R");
+    // At the largest R, NDSC is within a whisker of sigma.
+    assert!(ndh.y_at_end() <= sigma + 0.06, "NDH {} vs sigma {sigma}", ndh.y_at_end());
+}
+
+/// Fig. 1c: NDE is orders of magnitude faster than the LP; LV sits
+/// between; all grow with n.
+#[test]
+fn fig1c_wallclock_ordering() {
+    let series = exp::fig1::fig1c(true);
+    let get = |name: &str| series.iter().find(|s| s.name == name).unwrap();
+    let nde = get("NDE(Sᵀy)");
+    let lv = get("DE(LV-iter)");
+    let lp = get("DE(LP/CVX-like)");
+    // compare at the largest n both have
+    let last_common = nde.points.len().min(lv.points.len()) - 1;
+    assert!(nde.points[last_common].1 < lv.points[last_common].1);
+    assert!(lp.y_at_end() > nde.points[lp.points.len() - 1].1 * 5.0, "LP should dwarf NDE");
+}
+
+/// Fig. 3a: on the Student-t planted model (Gaussian *data* rows, so the
+/// gradients are not heavy-tailed) NDSC must stay competitive with naive
+/// dithering at equal budget (the paper's curves nearly overlap early on).
+#[test]
+fn fig3a_ndsc_competitive_on_student_t() {
+    let series = exp::fig3::fig3a(true);
+    let naive = series.iter().find(|s| s.name.starts_with("naive")).unwrap();
+    let ndsc = series.iter().find(|s| s.name.starts_with("ndsc")).unwrap();
+    assert!(
+        ndsc.y_at_end() <= naive.y_at_end() * 1.5,
+        "ndsc {} vs naive {}",
+        ndsc.y_at_end(),
+        naive.y_at_end()
+    );
+}
+
+/// Fig. 5: on heavy-tailed (Gaussian³) data — where the embedding's
+/// flattening matters — NDSC strictly beats naive at the sub-linear
+/// budget R = 0.5 and at R = 1.
+#[test]
+fn fig5_ndsc_beats_naive_on_heavy_tails() {
+    let series = exp::fig3::fig5(true);
+    for r in ["R0.5", "R1"] {
+        let naive = series.iter().find(|s| s.name == format!("naive-{r}")).unwrap();
+        let ndsc = series.iter().find(|s| s.name == format!("ndsc-{r}")).unwrap();
+        assert!(
+            ndsc.y_at_end() < naive.y_at_end(),
+            "{r}: ndsc {} !< naive {}",
+            ndsc.y_at_end(),
+            naive.y_at_end()
+        );
+    }
+}
+
+/// Figs. 8/9: ‖x_nd‖∞ decreases in N while ‖x_nd‖∞·√N stays ≈ flat.
+#[test]
+fn fig8_9_linf_scaling() {
+    let series = exp::appendix::fig8_9(true);
+    let inf = series.iter().find(|s| s.name == "linf-gauss3").unwrap();
+    let scaled = series.iter().find(|s| s.name == "linf*sqrtN-gauss3").unwrap();
+    assert!(inf.points.last().unwrap().1 < inf.points.first().unwrap().1 * 0.5);
+    let (min, max) = scaled
+        .points
+        .iter()
+        .fold((f32::MAX, 0.0f32), |(lo, hi), &(_, y)| (lo.min(y), hi.max(y)));
+    assert!(max / min < 3.0, "linf*sqrtN should be ~flat: [{min}, {max}]");
+}
+
+/// Figs. 11/12: DSC quantization error *increases* with N (the App. N
+/// conclusion: pick λ close to 1).
+#[test]
+fn fig12_error_increases_with_big_n() {
+    let series = exp::appendix::fig11_12(true);
+    let err = series.iter().find(|s| s.name.starts_with("DSC-quant-err")).unwrap();
+    let first = err.points.first().unwrap().1;
+    let last = err.points.last().unwrap().1;
+    assert!(last > first, "error should grow with N: {first} -> {last}");
+}

@@ -1,0 +1,164 @@
+//! Integration over the PJRT runtime: load AOT artifacts built by
+//! `make artifacts` and validate their numerics against the pure-Rust
+//! implementations. These tests **skip** (with a notice) when the
+//! artifacts directory has not been built, so `cargo test` works on a
+//! fresh checkout; CI runs `make artifacts` first.
+
+use kashinflow::linalg::fwht::fwht_normalized_inplace;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::linalg::vecops::{dist2, norm2};
+use kashinflow::runtime::artifact::{artifacts_dir, Artifact, Input};
+
+fn artifact_path(name: &str) -> Option<String> {
+    let p = format!("{}/{name}", artifacts_dir());
+    if std::path::Path::new(&p).exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: {p} not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn ndsc_embed_artifact_matches_rust_fwht() {
+    let Some(path) = artifact_path("ndsc_embed_1024.hlo.txt") else { return };
+    let art = Artifact::load(&path).expect("load/compile");
+    let n = 1024;
+    let mut rng = Rng::seed_from(1);
+    let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+    let signs: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+    let out = art
+        .run1_f32(&[Input::F32(&y, vec![1, n]), Input::F32(&signs, vec![n])])
+        .expect("execute");
+    // Rust reference: x = H (D y) normalized.
+    let mut want: Vec<f32> = y.iter().zip(&signs).map(|(&a, &s)| a * s).collect();
+    fwht_normalized_inplace(&mut want);
+    assert_eq!(out.len(), n);
+    assert!(
+        dist2(&out, &want) < 1e-3 * (1.0 + norm2(&want)),
+        "pallas-in-HLO vs rust FWHT mismatch: {}",
+        dist2(&out, &want)
+    );
+}
+
+#[test]
+fn ndsc_embed_decode_roundtrip_through_artifacts() {
+    let (Some(pe), Some(pd)) =
+        (artifact_path("ndsc_embed_1024.hlo.txt"), artifact_path("ndsc_decode_1024.hlo.txt"))
+    else {
+        return;
+    };
+    let embed = Artifact::load(&pe).unwrap();
+    let decode = Artifact::load(&pd).unwrap();
+    let n = 1024;
+    let mut rng = Rng::seed_from(2);
+    let y: Vec<f32> = (0..n).map(|_| rng.student_t(1)).collect();
+    let signs: Vec<f32> = (0..n).map(|_| rng.sign()).collect();
+    let x = embed.run1_f32(&[Input::F32(&y, vec![1, n]), Input::F32(&signs, vec![n])]).unwrap();
+    let back = decode.run1_f32(&[Input::F32(&x, vec![1, n]), Input::F32(&signs, vec![n])]).unwrap();
+    assert!(dist2(&back, &y) < 1e-3 * (1.0 + norm2(&y)));
+}
+
+#[test]
+fn model_grad_artifact_losses_are_sane() {
+    let Some(path) = artifact_path("model_grad.hlo.txt") else { return };
+    let meta = kashinflow::exp::transformer::ModelMeta::load(&artifacts_dir()).unwrap();
+    let x0 = kashinflow::exp::transformer::load_init(&artifacts_dir(), meta.n_params).unwrap();
+    let art = Artifact::load(&path).unwrap();
+    let mut rng = Rng::seed_from(3);
+    let corpus = kashinflow::data::corpus::Corpus::synthetic(20_000, &mut rng);
+    let (toks, tgts) = corpus.batch(meta.batch, meta.seq, &mut rng);
+    let outs = art
+        .run_f32(&[
+            Input::F32(&x0, vec![meta.n_params]),
+            Input::U32(&toks, vec![meta.batch, meta.seq]),
+            Input::U32(&tgts, vec![meta.batch, meta.seq]),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    let loss = outs[0][0];
+    // At init the LM should sit near uniform: log(vocab).
+    let uniform = (meta.vocab as f32).ln();
+    assert!(
+        (loss - uniform).abs() < 1.0,
+        "init loss {loss} far from log(vocab) = {uniform}"
+    );
+    // Gradient: right length, finite, non-zero.
+    let g = &outs[1];
+    assert_eq!(g.len(), meta.n_params);
+    assert!(g.iter().all(|v| v.is_finite()));
+    assert!(norm2(g) > 1e-4);
+}
+
+/// Compression quality on a *real* transformer gradient: quantifies the
+/// heavy-tailedness of the workload (printed) and checks both codecs stay
+/// within their theoretical envelopes. This is the diagnostic behind the
+/// Fig. 3b discussion in EXPERIMENTS.md.
+#[test]
+fn compression_error_on_real_gradient() {
+    use kashinflow::quant::{gain_shape::NaiveUniform, ndsc::Ndsc, Compressor};
+    let Some(path) = artifact_path("model_grad.hlo.txt") else { return };
+    let meta = kashinflow::exp::transformer::ModelMeta::load(&artifacts_dir()).unwrap();
+    let x0 = kashinflow::exp::transformer::load_init(&artifacts_dir(), meta.n_params).unwrap();
+    let art = Artifact::load(&path).unwrap();
+    let mut rng = Rng::seed_from(5);
+    let corpus = kashinflow::data::corpus::Corpus::synthetic(20_000, &mut rng);
+    let (toks, tgts) = corpus.batch(meta.batch, meta.seq, &mut rng);
+    let outs = art
+        .run_f32(&[
+            Input::F32(&x0, vec![meta.n_params]),
+            Input::U32(&toks, vec![meta.batch, meta.seq]),
+            Input::U32(&tgts, vec![meta.batch, meta.seq]),
+        ])
+        .unwrap();
+    let g = &outs[1];
+    let n = g.len();
+    // Heavy-tailedness: l_inf * sqrt(n) / l2 = 1 for flat vectors, sqrt(n)
+    // for one-hot.
+    let spikiness = kashinflow::linalg::vecops::norm_inf(g) * (n as f32).sqrt() / norm2(g);
+    let ndsc = Ndsc::hadamard(n, 4.0, &mut rng);
+    let naive = NaiveUniform::new(n, 4.0);
+    let e_ndsc = dist2(&ndsc.decompress(&ndsc.compress(g, &mut rng)), g) / norm2(g);
+    let e_naive = dist2(&naive.decompress(&naive.compress(g, &mut rng)), g) / norm2(g);
+    println!("transformer grad: spikiness {spikiness:.1}, NDSC err {e_ndsc:.4}, naive err {e_naive:.4}");
+    // Theorem 1 envelope for NDSC at R=4, lambda = N/n:
+    let big_n = kashinflow::linalg::fwht::next_pow2(n) as f32;
+    let lambda = big_n / n as f32;
+    let bound = (2.0f32).powf(2.0 - 4.0 / lambda) * (2.0 * big_n).ln().sqrt();
+    assert!(e_ndsc <= bound, "NDSC err {e_ndsc} above Thm-1 envelope {bound}");
+    // The paper's point, measured on a live gradient: NDSC preserves the
+    // signal while the naive scalar quantizer's sqrt(n) covering penalty
+    // costs ~the whole gradient at this spikiness.
+    assert!(e_ndsc < 0.5, "NDSC err {e_ndsc}");
+    assert!(e_ndsc < 0.5 * e_naive, "NDSC {e_ndsc} should dominate naive {e_naive}");
+}
+
+#[test]
+fn model_grad_descends_loss() {
+    let Some(path) = artifact_path("model_grad.hlo.txt") else { return };
+    let meta = kashinflow::exp::transformer::ModelMeta::load(&artifacts_dir()).unwrap();
+    let mut x = kashinflow::exp::transformer::load_init(&artifacts_dir(), meta.n_params).unwrap();
+    let art = Artifact::load(&path).unwrap();
+    let mut rng = Rng::seed_from(4);
+    let corpus = kashinflow::data::corpus::Corpus::synthetic(20_000, &mut rng);
+    let (toks, tgts) = corpus.batch(meta.batch, meta.seq, &mut rng);
+    let run = |x: &[f32], art: &Artifact| -> (f32, Vec<f32>) {
+        let outs = art
+            .run_f32(&[
+                Input::F32(x, vec![meta.n_params]),
+                Input::U32(&toks, vec![meta.batch, meta.seq]),
+                Input::U32(&tgts, vec![meta.batch, meta.seq]),
+            ])
+            .unwrap();
+        (outs[0][0], outs[1].clone())
+    };
+    let (loss0, _) = run(&x, &art);
+    for _ in 0..15 {
+        let (_, g) = run(&x, &art);
+        for (xi, gi) in x.iter_mut().zip(&g) {
+            *xi -= 0.1 * gi;
+        }
+    }
+    let (loss1, _) = run(&x, &art);
+    assert!(loss1 < loss0 - 0.05, "GD on the artifact failed: {loss0} -> {loss1}");
+}
