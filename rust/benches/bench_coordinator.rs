@@ -42,7 +42,14 @@ fn bench_rounds(b: &mut Bencher, scheme: SchemeKind, n: usize, workers: usize, r
 fn main() {
     let mut b = Bencher::new();
     bench_rounds(&mut b, SchemeKind::Ndsc, 30, 4, 50);
+    // m = 8: the acceptance case for the scoped-thread fan-out — below
+    // server::PARALLEL_DECODE_MIN_DIM the decode path is byte-identical to
+    // the sequential loop, so small-n rounds cannot regress; the 16384-dim
+    // rows below exercise the parallel decode itself.
+    bench_rounds(&mut b, SchemeKind::Ndsc, 30, 8, 50);
     bench_rounds(&mut b, SchemeKind::Ndsc, 30, 10, 50);
     bench_rounds(&mut b, SchemeKind::NdscDithered, 1024, 4, 20);
     bench_rounds(&mut b, SchemeKind::Naive, 1024, 4, 20);
+    bench_rounds(&mut b, SchemeKind::NdscDithered, 16384, 8, 5);
+    bench_rounds(&mut b, SchemeKind::Naive, 16384, 8, 5);
 }

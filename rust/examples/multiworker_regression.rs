@@ -55,7 +55,7 @@ fn main() {
     println!(
         "scheme={} R={}: ||x_T - x*|| = {:.4}, uplink rate {:.3} bits/dim/worker/round, \
          total payload {:.1} KB, overhead {:.1} KB, rejected {}",
-        cfg.scheme,
+        cfg.scheme_name(),
         cfg.r,
         kashinflow::linalg::vecops::dist2(&metrics.final_iterate, &x_star),
         metrics.mean_rate(cfg.n, cfg.workers),

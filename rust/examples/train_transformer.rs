@@ -36,6 +36,7 @@ fn main() {
                 cfg.workers = c.workers;
                 cfg.r = c.r;
                 cfg.scheme = c.scheme;
+                cfg.spec_override = c.spec_override;
                 cfg.rounds = c.rounds;
                 cfg.step = c.step;
                 cfg.seed = c.seed;
@@ -48,9 +49,14 @@ fn main() {
     }
     eprintln!(
         "federated transformer: scheme={} R={} workers={} rounds={} step={}",
-        cfg.scheme, cfg.r, cfg.workers, cfg.rounds, cfg.step
+        cfg.scheme_name(),
+        cfg.r,
+        cfg.workers,
+        cfg.rounds,
+        cfg.step
     );
-    match train_federated(cfg.scheme, cfg.r, cfg.workers, cfg.rounds, cfg.step, cfg.seed) {
+    match train_federated(cfg.compressor_spec(), cfg.r, cfg.workers, cfg.rounds, cfg.step, cfg.seed)
+    {
         Ok(metrics) => {
             print!("{}", metrics.to_csv());
             let first = metrics.rounds.first().map(|r| r.value).unwrap_or(f32::NAN);

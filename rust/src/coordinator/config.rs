@@ -3,6 +3,9 @@
 //! "real config system" a deployment needs without any external crates.
 
 use crate::linalg::frames::FrameKind;
+use crate::quant::registry::{CompressorSpec, FrameSpec, SparsifyKind};
+
+pub use crate::quant::registry::Fp32Passthrough;
 
 /// Compression scheme selector (the CLI surface of [`crate::quant`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,6 +62,48 @@ impl std::fmt::Display for SchemeKind {
     }
 }
 
+impl SchemeKind {
+    /// The [`CompressorSpec`] this CLI selector denotes, at a given frame.
+    /// `SchemeKind` is the stable CLI surface; the registry is the single
+    /// constructor behind it.
+    pub fn spec(self, frame: FrameKind) -> CompressorSpec {
+        use crate::quant::dsc::{CodecMode, EmbedKind};
+        let fs = FrameSpec::from_kind(frame);
+        match self {
+            SchemeKind::Ndsc => CompressorSpec::Subspace {
+                embed: EmbedKind::NearDemocratic,
+                mode: CodecMode::Deterministic,
+                frame: fs,
+            },
+            SchemeKind::NdscDithered => CompressorSpec::Subspace {
+                embed: EmbedKind::NearDemocratic,
+                mode: CodecMode::Dithered,
+                frame: fs,
+            },
+            SchemeKind::Dsc => CompressorSpec::Subspace {
+                embed: EmbedKind::Democratic,
+                mode: CodecMode::Deterministic,
+                frame: fs,
+            },
+            SchemeKind::DscDithered => CompressorSpec::Subspace {
+                embed: EmbedKind::Democratic,
+                mode: CodecMode::Dithered,
+                frame: fs,
+            },
+            SchemeKind::Naive => CompressorSpec::Naive,
+            SchemeKind::StandardDither => CompressorSpec::StandardDither,
+            SchemeKind::Qsgd => CompressorSpec::Qsgd,
+            SchemeKind::Sign => CompressorSpec::Sign,
+            SchemeKind::Ternary => CompressorSpec::Ternary,
+            SchemeKind::TopK => CompressorSpec::TopK { value_bits: 8, count_index_bits: false },
+            SchemeKind::RandK => {
+                CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }
+            }
+            SchemeKind::None => CompressorSpec::Fp32,
+        }
+    }
+}
+
 /// Full distributed-run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -69,6 +114,11 @@ pub struct RunConfig {
     /// Bit budget `R` (bits per dimension per worker per round).
     pub r: f32,
     pub scheme: SchemeKind,
+    /// Registry spec taking precedence over `scheme` when set — this is
+    /// how `scheme=<any registry name>` (e.g. `ratq`, `vqsgd`,
+    /// `topk4b-idx`, `sd+ndh`) reaches the CLI beyond the legacy
+    /// [`SchemeKind`] selectors.
+    pub spec_override: Option<CompressorSpec>,
     pub frame: FrameKind,
     /// Rounds `T`.
     pub rounds: usize,
@@ -88,6 +138,7 @@ impl Default for RunConfig {
             workers: 10,
             r: 1.0,
             scheme: SchemeKind::Ndsc,
+            spec_override: None,
             frame: FrameKind::Hadamard,
             rounds: 200,
             step: 0.05,
@@ -111,10 +162,19 @@ impl RunConfig {
                 "n" => cfg.n = v.parse().map_err(|e| format!("n: {e}"))?,
                 "workers" | "m" => cfg.workers = v.parse().map_err(|e| format!("workers: {e}"))?,
                 "r" | "bits" => cfg.r = v.parse().map_err(|e| format!("r: {e}"))?,
-                "scheme" => {
-                    cfg.scheme =
-                        SchemeKind::parse(v).ok_or_else(|| format!("unknown scheme '{v}'"))?
-                }
+                "scheme" => match SchemeKind::parse(v) {
+                    Some(s) => {
+                        cfg.scheme = s;
+                        cfg.spec_override = None;
+                    }
+                    None => {
+                        // Any registry spec name works here too.
+                        cfg.spec_override = Some(
+                            CompressorSpec::parse(v)
+                                .ok_or_else(|| format!("unknown scheme '{v}'"))?,
+                        );
+                    }
+                },
                 "frame" => {
                     cfg.frame = FrameKind::parse(v).ok_or_else(|| format!("unknown frame '{v}'"))?
                 }
@@ -145,119 +205,50 @@ impl RunConfig {
         if self.rounds == 0 {
             return Err("rounds must be positive".into());
         }
+        // Reject infeasible (scheme, n, R) upfront: without this the
+        // budget-enforcing uplink would reject the first over-budget
+        // message and panic a worker thread mid-run. scheme=none (fp32)
+        // is the unconstrained reference and is exempt.
+        let spec = self.compressor_spec();
+        if spec != CompressorSpec::Fp32 && self.r > 0.0 && !spec.is_feasible(self.n, self.r) {
+            return Err(format!(
+                "scheme '{}' cannot fit the budget ⌊n·R⌋ = {} bits at n={}, R={} \
+                 (its wire rate is fixed above R; raise r or pick a budget-adaptive scheme)",
+                spec.name(),
+                crate::quant::budget_bits(self.n, self.r),
+                self.n,
+                self.r
+            ));
+        }
         Ok(())
     }
 
-    /// Build one compressor per worker from the scheme/frame config.
-    /// Each worker draws independent frame randomness from `rng` (common
-    /// randomness with the server, established at setup).
+    /// Human-readable scheme name for run summaries (the registry name
+    /// when a spec override is active, else the legacy selector).
+    pub fn scheme_name(&self) -> String {
+        match self.spec_override {
+            Some(spec) => spec.name(),
+            None => self.scheme.to_string(),
+        }
+    }
+
+    /// The registry spec this config selects: the explicit override when
+    /// one was parsed, else the legacy `scheme`/`frame` mapping.
+    pub fn compressor_spec(&self) -> CompressorSpec {
+        self.spec_override.unwrap_or_else(|| self.scheme.spec(self.frame))
+    }
+
+    /// Build one compressor per worker through the registry. Each worker
+    /// draws independent frame randomness from `rng` (common randomness
+    /// with the server, established at setup).
     pub fn build_compressors(
         &self,
         rng: &mut crate::linalg::rng::Rng,
     ) -> Vec<std::sync::Arc<dyn crate::quant::Compressor>> {
-        use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
-        use crate::quant::gain_shape::{NaiveUniform, StandardDither};
-        use crate::quant::qsgd::Qsgd;
-        use crate::quant::randk::RandK;
-        use crate::quant::sign::SignQuantizer;
-        use crate::quant::ternary::Ternary;
-        use crate::quant::topk::TopK;
-        use std::sync::Arc;
-
-        let n = self.n;
-        let r = self.r;
+        let spec = self.compressor_spec();
         (0..self.workers)
-            .map(|_| -> std::sync::Arc<dyn crate::quant::Compressor> {
-                match self.scheme {
-                    SchemeKind::Ndsc => Arc::new(SubspaceCodec::new(
-                        self.frame.build(n, rng),
-                        EmbedKind::NearDemocratic,
-                        CodecMode::Deterministic,
-                        r,
-                    )),
-                    SchemeKind::NdscDithered => Arc::new(SubspaceCodec::new(
-                        self.frame.build(n, rng),
-                        EmbedKind::NearDemocratic,
-                        CodecMode::Dithered,
-                        r,
-                    )),
-                    SchemeKind::Dsc => Arc::new(SubspaceCodec::new(
-                        self.frame.build(n, rng),
-                        EmbedKind::Democratic,
-                        CodecMode::Deterministic,
-                        r,
-                    )),
-                    SchemeKind::DscDithered => Arc::new(SubspaceCodec::new(
-                        self.frame.build(n, rng),
-                        EmbedKind::Democratic,
-                        CodecMode::Dithered,
-                        r,
-                    )),
-                    SchemeKind::Naive => Arc::new(NaiveUniform::new(n, r)),
-                    SchemeKind::StandardDither => Arc::new(StandardDither::new(n, r)),
-                    SchemeKind::Qsgd => {
-                        Arc::new(Qsgd::new(n, (r.ceil() as usize).saturating_sub(1).max(1)))
-                    }
-                    SchemeKind::Sign => Arc::new(SignQuantizer::new(n)),
-                    SchemeKind::Ternary => Arc::new(Ternary::new(n)),
-                    SchemeKind::TopK => {
-                        let k = (crate::quant::budget_bits(n, r) / 8).clamp(1, n);
-                        Arc::new(TopK::new(n, k, 8))
-                    }
-                    SchemeKind::RandK => {
-                        let k = crate::quant::budget_bits(n, r).clamp(1, n);
-                        Arc::new(RandK::new(n, k, 1).unbiased())
-                    }
-                    SchemeKind::None => Arc::new(Fp32Passthrough { n }),
-                }
-            })
+            .map(|_| std::sync::Arc::from(spec.build(self.n, self.r, rng)))
             .collect()
-    }
-}
-
-/// Identity "compressor" for the unquantized reference runs: 32 bits per
-/// dimension of payload (so the traffic accounting stays meaningful).
-pub struct Fp32Passthrough {
-    pub n: usize,
-}
-
-impl crate::quant::Compressor for Fp32Passthrough {
-    fn name(&self) -> String {
-        "fp32".into()
-    }
-
-    fn n(&self) -> usize {
-        self.n
-    }
-
-    fn bits_per_dim(&self) -> f32 {
-        32.0
-    }
-
-    fn compress(
-        &self,
-        y: &[f32],
-        _rng: &mut crate::linalg::rng::Rng,
-    ) -> crate::quant::Compressed {
-        let mut w = crate::quant::bitpack::BitWriter::with_capacity_bits(32 * y.len());
-        for &v in y {
-            w.write_f32(v);
-        }
-        crate::quant::Compressed {
-            n: self.n,
-            bytes: w.into_bytes(),
-            payload_bits: 32 * self.n,
-            side_bits: 0,
-        }
-    }
-
-    fn decompress(&self, msg: &crate::quant::Compressed) -> Vec<f32> {
-        let mut r = crate::quant::bitpack::BitReader::new(&msg.bytes);
-        (0..self.n).map(|_| r.read_f32()).collect()
-    }
-
-    fn is_unbiased(&self) -> bool {
-        true
     }
 }
 
@@ -289,6 +280,36 @@ mod tests {
         assert!(RunConfig::parse_args(&["nope".into()]).is_err());
         assert!(RunConfig::parse_args(&["scheme=bogus".into()]).is_err());
         assert!(RunConfig::parse_args(&["n=0".into()]).is_err());
+    }
+
+    #[test]
+    fn registry_spec_names_reach_the_cli() {
+        // Any registry spec name is a valid `scheme=` value; the override
+        // drives both the summary name and the built compressors.
+        let cfg =
+            RunConfig::parse_args(&["scheme=ratq".into(), "n=64".into(), "r=3".into()]).unwrap();
+        assert_eq!(cfg.spec_override, Some(CompressorSpec::Ratq));
+        assert_eq!(cfg.scheme_name(), "ratq");
+        let mut rng = Rng::seed_from(1);
+        let comps = cfg.build_compressors(&mut rng);
+        assert_eq!(comps[0].name(), "ratq-2b");
+        // Legacy names still go through SchemeKind (no override).
+        let cfg = RunConfig::parse_args(&["scheme=ndsc".into()]).unwrap();
+        assert_eq!(cfg.spec_override, None);
+        assert_eq!(cfg.scheme, SchemeKind::Ndsc);
+    }
+
+    #[test]
+    fn validate_rejects_infeasible_budget_upfront() {
+        // sign needs R >= 1: at R = 0.5 the config must fail loudly
+        // instead of letting a worker panic on the first upload.
+        let err = RunConfig::parse_args(&["scheme=sign".into(), "n=64".into(), "r=0.5".into()])
+            .unwrap_err();
+        assert!(err.contains("cannot fit"), "{err}");
+        assert!(RunConfig::parse_args(&["scheme=sign".into(), "n=64".into(), "r=1".into()])
+            .is_ok());
+        // fp32 is the unconstrained reference: exempt from the check.
+        assert!(RunConfig::parse_args(&["scheme=none".into()]).is_ok());
     }
 
     #[test]

@@ -34,12 +34,20 @@ use metrics::RunMetrics;
 use protocol::{Broadcast, Upload};
 use worker::GradSource;
 
-/// Run a full distributed job: spawns one thread per worker, runs the
-/// server loop on the calling thread, returns the metrics log.
+/// Run a full distributed job: spawns one scoped thread per worker, runs
+/// the server loop on the calling thread, returns the metrics log.
 ///
 /// `sources[i]` is worker `i`'s private gradient source; `compressors[i]`
 /// its codec (shared by value with the server for decoding — the frame
 /// randomness is common randomness established at setup, as in the paper).
+///
+/// The per-round fan-out is fully thread-parallel: all `m` workers
+/// compute/compress/upload concurrently on their own scoped threads, and
+/// the server additionally fans the per-round *decode* out across scoped
+/// threads when the dimension makes it worthwhile (see
+/// [`server::PARALLEL_DECODE_MIN_DIM`]). `std::thread::scope` both joins
+/// the workers automatically and lifts the old `'static` requirement on
+/// gradient sources.
 pub fn run_distributed(
     cfg: &RunConfig,
     x0: Vec<f32>,
@@ -58,33 +66,33 @@ pub fn run_distributed(
     let (up_tx, up_rx) = mpsc::channel::<Upload>();
     let budget_bits = crate::quant::budget_bits(cfg.n, cfg.r);
     let uplink = AccountedSender::new(up_tx, Some(budget_bits));
-
-    // Downlinks: server -> each worker (broadcast is m sends).
-    let mut down_txs = Vec::with_capacity(m);
-    let mut handles = Vec::with_capacity(m);
     let mut root_rng = Rng::seed_from(cfg.seed ^ 0xD15C0);
-    for (i, (mut source, comp)) in sources.into_iter().zip(compressors.iter().cloned()).enumerate()
-    {
-        let (down_tx, down_rx) = mpsc::channel::<Broadcast>();
-        down_txs.push(down_tx);
-        let uplink = uplink.clone();
-        let mut wrng = root_rng.fork(i as u64);
-        handles.push(std::thread::spawn(move || {
-            worker::worker_loop(i, &mut *source, comp.as_ref(), down_rx, uplink, &mut wrng);
-        }));
-    }
 
-    // Drop the prototype sender: only worker clones remain, so a dead
-    // worker is observable as a closed channel rather than a deadlock.
-    let traffic = uplink.counter();
-    drop(uplink);
+    std::thread::scope(|scope| {
+        // Downlinks: server -> each worker (broadcast is m sends).
+        let mut down_txs = Vec::with_capacity(m);
+        for (i, (mut source, comp)) in
+            sources.into_iter().zip(compressors.iter().cloned()).enumerate()
+        {
+            let (down_tx, down_rx) = mpsc::channel::<Broadcast>();
+            down_txs.push(down_tx);
+            let uplink = uplink.clone();
+            let mut wrng = root_rng.fork(i as u64);
+            scope.spawn(move || {
+                worker::worker_loop(i, &mut *source, comp.as_ref(), down_rx, uplink, &mut wrng);
+            });
+        }
 
-    let metrics = server::server_loop(cfg, x0, &down_txs, &up_rx, &compressors, traffic, eval);
+        // Drop the prototype sender: only worker clones remain, so a dead
+        // worker is observable as a closed channel rather than a deadlock.
+        let traffic = uplink.counter();
+        drop(uplink);
 
-    // Downlink senders drop here => workers see a closed channel and exit.
-    drop(down_txs);
-    for h in handles {
-        h.join().expect("worker thread panicked");
-    }
-    metrics
+        let metrics = server::server_loop(cfg, x0, &down_txs, &up_rx, &compressors, traffic, eval);
+
+        // Downlink senders drop here => workers see a closed channel and
+        // exit; the scope joins them (propagating any worker panic).
+        drop(down_txs);
+        metrics
+    })
 }

@@ -12,6 +12,51 @@ use crate::coordinator::protocol::{Broadcast, Upload};
 use crate::opt::projection::Domain;
 use crate::quant::Compressor;
 
+/// Dimension at which the server fans the per-round decode out across
+/// scoped threads. Below this, a decode is a few microseconds of work and
+/// a thread spawn would cost more than it saves; above it (the (N)DSC
+/// decode is an `O(N log N)` FWHT plus an `O(N)` inverse transform, and
+/// the transformer workload has `n ~ 10^5`) the `m`-way fan-out is a
+/// near-linear speedup of the consensus step.
+pub const PARALLEL_DECODE_MIN_DIM: usize = 8192;
+
+/// Decode the round's uploads into the consensus average. One scoped
+/// thread per upload when `n` is large enough to amortize the spawns;
+/// worker order of accumulation is fixed either way, so the result is
+/// bit-identical to the sequential path.
+fn decode_round(
+    consensus: &mut [f32],
+    ups: &[Upload],
+    compressors: &[std::sync::Arc<dyn Compressor>],
+    n: usize,
+) {
+    let m = ups.len();
+    if m > 1 && n >= PARALLEL_DECODE_MIN_DIM {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ups
+                .iter()
+                .map(|up| {
+                    let comp = &compressors[up.worker];
+                    s.spawn(move || comp.decompress(&up.msg))
+                })
+                .collect();
+            for h in handles {
+                let q = h.join().expect("decode thread panicked");
+                for (c, &qi) in consensus.iter_mut().zip(&q) {
+                    *c += qi / m as f32;
+                }
+            }
+        });
+    } else {
+        for up in ups {
+            let q = compressors[up.worker].decompress(&up.msg);
+            for (c, &qi) in consensus.iter_mut().zip(&q) {
+                *c += qi / m as f32;
+            }
+        }
+    }
+}
+
 /// Server loop. `eval` computes the global objective value of an iterate
 /// (for metrics; pass a cheap proxy for expensive models).
 pub fn server_loop(
@@ -45,20 +90,20 @@ pub fn server_loop(
             tx.send(Broadcast { round, iterate: x.clone() }).expect("worker hung up");
         }
         // Collect exactly m uploads for this round (workers answer every
-        // broadcast exactly once; rounds cannot interleave).
+        // broadcast exactly once; rounds cannot interleave), then decode
+        // them — in parallel when the dimension warrants it.
         consensus.fill(0.0);
         let mut round_bits = 0usize;
         let mut local_sum = 0.0f64;
+        let mut ups: Vec<Upload> = Vec::with_capacity(m);
         for _ in 0..m {
             let up = uplink.recv().expect("all workers disconnected");
             assert_eq!(up.round, round, "round skew: got {} want {round}", up.round);
             round_bits += up.msg.payload_bits;
             local_sum += up.local_value as f64;
-            let q = compressors[up.worker].decompress(&up.msg);
-            for (c, &qi) in consensus.iter_mut().zip(&q) {
-                *c += qi / m as f32;
-            }
+            ups.push(up);
         }
+        decode_round(&mut consensus, &ups, compressors, n);
         // Step + project.
         for (xi, &ci) in x.iter_mut().zip(&consensus) {
             *xi -= cfg.step * ci;

@@ -9,14 +9,19 @@
 
 use crate::data::synthetic::{planted_regression, Tail};
 use crate::exp::common::{print_figure, scaled, Series};
-use crate::linalg::frames::HadamardFrame;
 use crate::linalg::rng::Rng;
 use crate::opt::dgd_def::{self, DgdDefOptions};
-use crate::quant::dqgd::DqgdRange;
-use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
-use crate::quant::gain_shape::NaiveUniform;
-use crate::quant::ndsc::Ndsc;
+use crate::quant::dsc::{CodecMode, EmbedKind};
+use crate::quant::registry::{CompressorSpec, FrameSpec};
 use crate::quant::Compressor;
+
+fn ndh_spec() -> CompressorSpec {
+    CompressorSpec::Subspace {
+        embed: EmbedKind::NearDemocratic,
+        mode: CodecMode::Deterministic,
+        frame: FrameSpec::Hadamard,
+    }
+}
 
 /// Error feedback on/off: DGD-DEF vs plain quantized GD (e ≡ 0).
 pub fn ablation_ef(quick: bool) -> Vec<Series> {
@@ -30,13 +35,13 @@ pub fn ablation_ef(quick: bool) -> Vec<Series> {
     let mut series = Vec::new();
     for &r in &[2.0f32, 4.0] {
         // With feedback: Algorithm 1.
-        let c = Ndsc::hadamard(n, r, &mut rng);
-        let tr = dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng);
+        let c = ndh_spec().build(n, r, &mut rng);
+        let tr = dgd_def::run(&obj, c.as_ref(), &vec![0.0; n], Some(&xs), opts, &mut rng);
         let mut s = Series::new(format!("EF-R{r}"));
         s.push(iters as f32, tr.records.last().unwrap().dist_to_opt);
         series.push(s);
         // Without feedback: x <- x - α·Q(∇f(x)), same codec.
-        let c2 = Ndsc::hadamard(n, r, &mut rng);
+        let c2 = ndh_spec().build(n, r, &mut rng);
         let mut x = vec![0.0f32; n];
         let mut g = vec![0.0f32; n];
         for _ in 0..iters {
@@ -65,15 +70,14 @@ pub fn ablation_lambda(quick: bool) -> Vec<Series> {
     let (l, mu) = obj.smoothness_strong_convexity();
     let opts = DgdDefOptions::optimal(l, mu, iters);
     let mut s = Series::new("final-dist");
-    for &lambda in &[1usize, 2, 4, 8] {
-        let frame = HadamardFrame::with_big_n(n, n * lambda, &mut rng);
-        let c = SubspaceCodec::new(
-            Box::new(frame),
-            EmbedKind::NearDemocratic,
-            CodecMode::Deterministic,
-            r,
-        );
-        let tr = dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng);
+    for &lambda in &[1u8, 2, 4, 8] {
+        let spec = CompressorSpec::Subspace {
+            embed: EmbedKind::NearDemocratic,
+            mode: CodecMode::Deterministic,
+            frame: FrameSpec::HadamardLambda(lambda),
+        };
+        let c = spec.build(n, r, &mut rng);
+        let tr = dgd_def::run(&obj, c.as_ref(), &vec![0.0; n], Some(&xs), opts, &mut rng);
         s.push(lambda as f32, tr.records.last().unwrap().dist_to_opt);
     }
     let series = vec![s];
@@ -98,12 +102,18 @@ pub fn ablation_dqgd(quick: bool) -> Vec<Series> {
     let mut s_sched = Series::new("dqgd-range-schedule");
     let mut s_ndsc = Series::new("ndsc");
     for &r in &[1.0f32, 2.0, 3.0, 4.0, 6.0] {
-        let c = NaiveUniform::new(n, r);
-        s_adapt.push(r, dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng).empirical_rate());
-        let c = DqgdRange::new(n, r, r0, sigma);
-        s_sched.push(r, dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng).empirical_rate());
-        let c = Ndsc::hadamard(n, r, &mut rng);
-        s_ndsc.push(r, dgd_def::run(&obj, &c, &vec![0.0; n], Some(&xs), opts, &mut rng).empirical_rate());
+        let curves: [(&mut Series, CompressorSpec); 3] = [
+            (&mut s_adapt, CompressorSpec::Naive),
+            (&mut s_sched, CompressorSpec::Dqgd { r0, gamma: sigma }),
+            (&mut s_ndsc, ndh_spec()),
+        ];
+        for (series, spec) in curves {
+            let c = spec.build(n, r, &mut rng);
+            let rate =
+                dgd_def::run(&obj, c.as_ref(), &vec![0.0; n], Some(&xs), opts, &mut rng)
+                    .empirical_rate();
+            series.push(r, rate);
+        }
     }
     let series = vec![s_adapt, s_sched, s_ndsc];
     print_figure(

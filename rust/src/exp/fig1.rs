@@ -8,6 +8,11 @@
 //!   vs dimension.
 //! * 1d: `l₂`-regularized least squares on (synthetic) MNIST with
 //!   sparsified GD at `R = 0.5` — rand-k + 1-bit, with vs without NDE.
+//!
+//! Every compressor is constructed through the registry
+//! ([`crate::quant::registry`]): each curve is a `CompressorSpec`
+//! evaluated across the budget sweep, so adding a scheme to a figure is a
+//! one-line spec change.
 
 use std::time::Instant;
 
@@ -16,18 +21,22 @@ use crate::embed::democratic::KashinSolver;
 use crate::embed::lp::{min_linf, LinfOptions};
 use crate::embed::near_democratic::nde;
 use crate::exp::common::{print_figure, scaled, thin, Series};
-use crate::linalg::frames::{HadamardFrame, OrthonormalFrame};
+use crate::linalg::frames::HadamardFrame;
 use crate::linalg::fwht::next_pow2;
 use crate::linalg::rng::Rng;
 use crate::opt::dgd_def::{self, DgdDefOptions};
 use crate::opt::gd;
-use crate::quant::compose::EmbeddedCompressor;
-use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
-use crate::quant::gain_shape::{NaiveUniform, StandardDither};
-use crate::quant::ndsc::Ndsc;
-use crate::quant::randk::RandK;
-use crate::quant::topk::TopK;
-use crate::quant::{normalized_error, Compressor};
+use crate::quant::dsc::{CodecMode, EmbedKind};
+use crate::quant::registry::{CompressorSpec, FrameSpec, InnerSpec, SparsifyKind};
+use crate::quant::normalized_error;
+
+fn ndsc_spec(frame: FrameSpec) -> CompressorSpec {
+    CompressorSpec::Subspace { embed: EmbedKind::NearDemocratic, mode: CodecMode::Deterministic, frame }
+}
+
+fn dsc_spec(frame: FrameSpec) -> CompressorSpec {
+    CompressorSpec::Subspace { embed: EmbedKind::Democratic, mode: CodecMode::Deterministic, frame }
+}
 
 /// Fig. 1a: compression error vs bit budget, with and without NDE.
 pub fn fig1a(quick: bool) -> Vec<Series> {
@@ -35,80 +44,52 @@ pub fn fig1a(quick: bool) -> Vec<Series> {
     let trials = scaled(50, quick);
     let rs: &[f32] = if quick { &[1.0, 3.0, 5.0] } else { &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
     let mut rng = Rng::seed_from(1);
-    let big_n = next_pow2(n);
     let gen = move |rng: &mut Rng| -> Vec<f32> { (0..n).map(|_| rng.gaussian_cubed()).collect() };
 
+    // (name, R ↦ spec): TopK's value bits scale with the budget so the
+    // retained fraction stays 10%, exactly as the seed harness wired it.
+    let topk = |r: f32| CompressorSpec::TopK {
+        value_bits: (r.max(1.0) as u8) * 10,
+        count_index_bits: false,
+    };
+    let curves: Vec<(&str, Box<dyn Fn(f32) -> CompressorSpec>)> = vec![
+        ("SD", Box::new(|_| CompressorSpec::StandardDither)),
+        (
+            "SD+NDH",
+            Box::new(|_| CompressorSpec::Embedded {
+                inner: InnerSpec::StandardDither,
+                frame: FrameSpec::Hadamard,
+            }),
+        ),
+        (
+            "SD+NDO",
+            Box::new(|_| CompressorSpec::Embedded {
+                inner: InnerSpec::StandardDither,
+                frame: FrameSpec::Orthonormal,
+            }),
+        ),
+        ("TopK(10%)", Box::new(move |r| topk(r))),
+        (
+            "TopK+NDH",
+            Box::new(move |r| CompressorSpec::Embedded {
+                inner: InnerSpec::TopK { value_bits: (r.max(1.0) as u8) * 10 },
+                frame: FrameSpec::Hadamard,
+            }),
+        ),
+        ("Kashin-1.5", Box::new(|_| dsc_spec(FrameSpec::OrthonormalLambda(1.5)))),
+        ("naive", Box::new(|_| CompressorSpec::Naive)),
+        ("NDH", Box::new(|_| ndsc_spec(FrameSpec::Hadamard))),
+    ];
+
     let mut series: Vec<Series> = Vec::new();
-    let eval = |name: &str, make: &mut dyn FnMut(f32, &mut Rng) -> Box<dyn Compressor>,
-                    rng: &mut Rng,
-                    series: &mut Vec<Series>| {
+    for (name, spec_at) in curves {
         let mut s = Series::new(name);
         for &r in rs {
-            let c = make(r, rng);
-            s.push(r, normalized_error(c.as_ref(), trials, rng, gen));
+            let c = spec_at(r).build(n, r, &mut rng);
+            s.push(r, normalized_error(c.as_ref(), trials, &mut rng, gen));
         }
         series.push(s);
-    };
-
-    eval("SD", &mut |r, _| Box::new(StandardDither::new(n, r)), &mut rng, &mut series);
-    eval(
-        "SD+NDH",
-        &mut |r, rng| {
-            Box::new(EmbeddedCompressor::nde(
-                Box::new(HadamardFrame::new(n, rng)),
-                Box::new(StandardDither::new(big_n, r)),
-            ))
-        },
-        &mut rng,
-        &mut series,
-    );
-    eval(
-        "SD+NDO",
-        &mut |r, rng| {
-            Box::new(EmbeddedCompressor::nde(
-                Box::new(OrthonormalFrame::with_big_n(n, n, rng)),
-                Box::new(StandardDither::new(n, r)),
-            ))
-        },
-        &mut rng,
-        &mut series,
-    );
-    eval(
-        "TopK(10%)",
-        &mut |r, _| {
-            let bits = (r.max(1.0)) as usize;
-            Box::new(TopK::new(n, n / 10, bits * 10))
-        },
-        &mut rng,
-        &mut series,
-    );
-    eval(
-        "TopK+NDH",
-        &mut |r, rng| {
-            let bits = (r.max(1.0)) as usize;
-            Box::new(EmbeddedCompressor::nde(
-                Box::new(HadamardFrame::new(n, rng)),
-                Box::new(TopK::new(big_n, big_n / 10, bits * 10)),
-            ))
-        },
-        &mut rng,
-        &mut series,
-    );
-    eval(
-        "Kashin-1.5",
-        &mut |r, rng| {
-            Box::new(SubspaceCodec::new(
-                Box::new(OrthonormalFrame::with_lambda(n, 1.5, rng)),
-                EmbedKind::Democratic,
-                CodecMode::Deterministic,
-                r,
-            ))
-        },
-        &mut rng,
-        &mut series,
-    );
-    eval("naive", &mut |r, _| Box::new(NaiveUniform::new(n, r)), &mut rng, &mut series);
-    eval("NDH", &mut |r, rng| Box::new(Ndsc::hadamard(n, r, rng)), &mut rng, &mut series);
+    }
 
     print_figure("Fig 1a: normalized compression error vs R (n=1000, Gaussian³)", "R", &series);
     series
@@ -144,32 +125,21 @@ pub fn fig1b(quick: bool) -> Vec<Series> {
     }
     series.push(s);
 
-    let mut run_scheme =
-        |name: &str, make: &mut dyn FnMut(f32, &mut Rng) -> Box<dyn Compressor>, rng: &mut Rng| {
-            let mut s = Series::new(name);
-            for &r in rs {
-                let c = make(r, rng);
-                let tr = dgd_def::run(&obj, c.as_ref(), &x0, Some(&xs), opts, rng);
-                s.push(r, tr.empirical_rate());
-            }
-            series.push(s);
-        };
-
-    run_scheme("DQGD(naive)", &mut |r, _| Box::new(NaiveUniform::new(n, r)), &mut rng);
-    run_scheme("NDE-Hadamard", &mut |r, rng| Box::new(Ndsc::hadamard(n, r, rng)), &mut rng);
-    run_scheme("NDE-Orthonormal", &mut |r, rng| Box::new(Ndsc::orthonormal(n, r, rng)), &mut rng);
-    run_scheme(
-        "DE(Kashin λ=1.5)",
-        &mut |r, rng| {
-            Box::new(SubspaceCodec::new(
-                Box::new(OrthonormalFrame::with_lambda(n, 1.5, rng)),
-                EmbedKind::Democratic,
-                CodecMode::Deterministic,
-                r,
-            ))
-        },
-        &mut rng,
-    );
+    let curves: Vec<(&str, CompressorSpec)> = vec![
+        ("DQGD(naive)", CompressorSpec::Naive),
+        ("NDE-Hadamard", ndsc_spec(FrameSpec::Hadamard)),
+        ("NDE-Orthonormal", ndsc_spec(FrameSpec::Orthonormal)),
+        ("DE(Kashin λ=1.5)", dsc_spec(FrameSpec::OrthonormalLambda(1.5))),
+    ];
+    for (name, spec) in curves {
+        let mut s = Series::new(name);
+        for &r in rs {
+            let c = spec.build(n, r, &mut rng);
+            let tr = dgd_def::run(&obj, c.as_ref(), &x0, Some(&xs), opts, &mut rng);
+            s.push(r, tr.empirical_rate());
+        }
+        series.push(s);
+    }
 
     print_figure(
         &format!("Fig 1b: DGD-DEF empirical rate vs R (n={n}, σ={sigma:.3})"),
@@ -229,36 +199,35 @@ pub fn fig1d(quick: bool) -> Vec<Series> {
     let opts = DgdDefOptions { step: 2.0 / (l + mu), iters };
     let x0 = vec![0.0f32; n];
     let xs = obj.quadratic_minimizer();
-    let _big_n = next_pow2(n);
-    let k = (n as f32 * 0.5) as usize; // R = 0.5: half the coords at 1 bit
+    let r = 0.5; // ⌊nR⌋ = n/2 coords at 1 bit — the registry derives k
 
+    let curves: Vec<(&str, CompressorSpec)> = vec![
+        (
+            "rand-k+1bit",
+            CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Deterministic },
+        ),
+        (
+            "rand-k+1bit+NDE",
+            CompressorSpec::Embedded {
+                inner: InnerSpec::RandK { value_bits: 1, kind: SparsifyKind::Deterministic },
+                frame: FrameSpec::Orthonormal,
+            },
+        ),
+        ("unquantized", CompressorSpec::Fp32),
+    ];
     let mut series = Vec::new();
-    let mut run_scheme = |name: &str, c: Box<dyn Compressor>, rng: &mut Rng| {
-        let tr = dgd_def::run(&obj, c.as_ref(), &x0, Some(&xs), opts, rng);
+    for (name, spec) in curves {
+        let eff_r = if spec == CompressorSpec::Fp32 { 32.0 } else { r };
+        let c = spec.build(n, eff_r, &mut rng);
+        let tr = dgd_def::run(&obj, c.as_ref(), &x0, Some(&xs), opts, &mut rng);
         let mut s = Series::new(name);
-        let pts: Vec<(f32, f32)> = tr
-            .records
-            .iter()
-            .enumerate()
-            .map(|(i, r)| (i as f32, r.value))
-            .collect();
+        let pts: Vec<(f32, f32)> =
+            tr.records.iter().enumerate().map(|(i, rec)| (i as f32, rec.value)).collect();
         for (x, y) in thin(&pts, 20) {
             s.push(x, y);
         }
         series.push(s);
-    };
-
-    run_scheme("rand-k+1bit", Box::new(RandK::new(n, k, 1).deterministic()), &mut rng);
-    let frame = OrthonormalFrame::with_big_n(n, n, &mut rng);
-    run_scheme(
-        "rand-k+1bit+NDE",
-        Box::new(EmbeddedCompressor::nde(
-            Box::new(frame),
-            Box::new(RandK::new(n, k, 1).deterministic()),
-        )),
-        &mut rng,
-    );
-    run_scheme("unquantized", Box::new(crate::coordinator::config::Fp32Passthrough { n }), &mut rng);
+    }
 
     print_figure(
         "Fig 1d: ridge on MNIST-like, sparsified GD at R=0.5 (objective vs iter)",

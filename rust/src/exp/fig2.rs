@@ -4,43 +4,44 @@
 //!   suboptimality gap and training classification error vs iterations.
 //! * 2c/2d: MNIST(-like) 0-vs-1, `n = 784`, `R = 0.1` — objective value
 //!   and held-out test error vs iterations.
+//!
+//! Each curve is a [`CompressorSpec`] (or `None` for the unquantized
+//! reference) built through the registry at the figure's budget — the
+//! sparsifier sizes (`k = ⌊nR⌋`, the paper's "78 coordinates × 1 bit"
+//! accounting) fall out of the spec instead of being hand-wired.
 
 use crate::data::mnist_like;
 use crate::data::synthetic::two_gaussian_svm;
 use crate::exp::common::{print_figure, scaled, thin, Series};
-use crate::linalg::frames::OrthonormalFrame;
-use crate::linalg::fwht::next_pow2;
 use crate::linalg::rng::Rng;
 use crate::opt::dq_psgd::{self, DqPsgdOptions};
 use crate::opt::objectives::DatasetObjective;
 use crate::opt::oracle::MinibatchOracle;
 use crate::opt::projection::Domain;
 use crate::opt::psgd::{self, PsgdOptions};
-use crate::quant::compose::EmbeddedCompressor;
-use crate::quant::gain_shape::StandardDither;
-use crate::quant::randk::RandK;
-use crate::quant::topk::TopK;
-use crate::quant::Compressor;
+use crate::quant::registry::{CompressorSpec, FrameSpec, InnerSpec, SparsifyKind};
 
 /// Estimate `f*` with a long unquantized PSGD run (the paper used CVX).
 fn estimate_fstar(obj: &DatasetObjective, iters: usize, seed: u64) -> f32 {
     let mut rng = Rng::seed_from(seed);
     let mut oracle = MinibatchOracle::new(obj, (obj.m / 4).max(1), Rng::seed_from(seed + 1));
-    let opts =
-        PsgdOptions { step: 0.02, iters, domain: Domain::L2Ball { radius: 20.0 } };
+    let opts = PsgdOptions { step: 0.02, iters, domain: Domain::L2Ball { radius: 20.0 } };
     let tr = psgd::run(obj, &mut oracle, &vec![0.0; obj.dim()], None, opts, &mut rng);
     tr.final_value()
 }
 
 struct SchemeSpec {
     name: &'static str,
-    make: Box<dyn FnMut(&mut Rng) -> Option<Box<dyn Compressor>>>,
+    /// `None` = unquantized PSGD reference.
+    spec: Option<CompressorSpec>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_svm_schemes(
     obj: &DatasetObjective,
     test: Option<&DatasetObjective>,
-    mut specs: Vec<SchemeSpec>,
+    specs: Vec<SchemeSpec>,
+    r: f32,
     iters: usize,
     step: f32,
     trials: usize,
@@ -51,7 +52,7 @@ fn run_svm_schemes(
     let n = obj.dim();
     let mut gap_series = Vec::new();
     let mut err_series = Vec::new();
-    for spec in specs.iter_mut() {
+    for scheme in &specs {
         // average the value trace over trials
         let mut acc: Vec<f64> = vec![0.0; iters];
         let mut errs: Vec<f64> = vec![0.0; iters];
@@ -59,13 +60,12 @@ fn run_svm_schemes(
             let mut rng = Rng::seed_from(1000 + t as u64);
             let mut oracle =
                 MinibatchOracle::new(obj, (obj.m / 10).max(1), Rng::seed_from(2000 + t as u64));
-            let opts = DqPsgdOptions {
-                step,
-                iters,
-                domain: Domain::L2Ball { radius: 20.0 },
-            };
-            let trace = match (spec.make)(&mut rng) {
-                Some(c) => dq_psgd::run(obj, &mut oracle, c.as_ref(), &vec![0.0; n], None, opts, &mut rng),
+            let opts = DqPsgdOptions { step, iters, domain: Domain::L2Ball { radius: 20.0 } };
+            let trace = match scheme.spec {
+                Some(spec) => {
+                    let c = spec.build(n, r, &mut rng);
+                    dq_psgd::run(obj, &mut oracle, c.as_ref(), &vec![0.0; n], None, opts, &mut rng)
+                }
                 None => psgd::run(
                     obj,
                     &mut oracle,
@@ -76,8 +76,8 @@ fn run_svm_schemes(
                 ),
             };
             // reconstruct the averaged-iterate trajectory values
-            for (i, r) in trace.records.iter().enumerate() {
-                acc[i] += r.value as f64 / trials as f64;
+            for (i, rec) in trace.records.iter().enumerate() {
+                acc[i] += rec.value as f64 / trials as f64;
             }
             // classification error of the final average at checkpoints:
             // cheap proxy — recompute from value trace is impossible, so
@@ -89,14 +89,14 @@ fn run_svm_schemes(
                 *v = e; // final error replicated; thinned below to last point
             }
         }
-        let mut s = Series::new(spec.name);
+        let mut s = Series::new(scheme.name);
         let pts: Vec<(f32, f32)> =
             acc.iter().enumerate().map(|(i, &v)| (i as f32, (v as f32 - fstar).max(1e-6))).collect();
         for (x, y) in thin(&pts, 16) {
             s.push(x, y);
         }
         gap_series.push(s);
-        let mut se = Series::new(spec.name);
+        let mut se = Series::new(scheme.name);
         se.push(iters as f32, errs[0] as f32);
         err_series.push(se);
     }
@@ -113,36 +113,30 @@ pub fn fig2ab(quick: bool) -> (Vec<Series>, Vec<Series>) {
     let iters = scaled(600, quick);
     let trials = scaled(10, quick);
     let fstar = estimate_fstar(&obj, scaled(3000, quick), 77);
-    let k_rand = 15; // nR = 15 bits -> 15 coords at 1 bit
+    let r = 0.5; // ⌊nR⌋ = 15 bits: rand-k keeps 15 coords, top-k 3 × 5 bits
     let specs: Vec<SchemeSpec> = vec![
-        SchemeSpec { name: "unquantized", make: Box::new(|_| None) },
-        SchemeSpec {
-            name: "SD(R=0.5)",
-            make: Box::new(move |_| Some(Box::new(StandardDither::new(n, 0.5)) as Box<dyn Compressor>)),
-        },
+        SchemeSpec { name: "unquantized", spec: None },
+        SchemeSpec { name: "SD(R=0.5)", spec: Some(CompressorSpec::StandardDither) },
         SchemeSpec {
             name: "rand50%+1b",
-            make: Box::new(move |_| Some(Box::new(RandK::new(n, k_rand, 1).unbiased()))),
+            spec: Some(CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }),
         },
         SchemeSpec {
             name: "rand50%+1b+NDE",
-            make: Box::new(move |rng| {
-                let f = OrthonormalFrame::with_big_n(n, n, rng);
-                Some(Box::new(EmbeddedCompressor::nde(
-                    Box::new(f),
-                    Box::new(RandK::new(n, k_rand, 1).unbiased()),
-                )))
+            spec: Some(CompressorSpec::Embedded {
+                inner: InnerSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased },
+                frame: FrameSpec::Orthonormal,
             }),
         },
         SchemeSpec {
             name: "top3x5b",
-            make: Box::new(move |_| Some(Box::new(TopK::new(n, 3, 5)))),
+            spec: Some(CompressorSpec::TopK { value_bits: 5, count_index_bits: false }),
         },
         SchemeSpec {
             name: "top3x5b+NDE",
-            make: Box::new(move |rng| {
-                let f = OrthonormalFrame::with_big_n(n, n, rng);
-                Some(Box::new(EmbeddedCompressor::nde(Box::new(f), Box::new(TopK::new(n, 3, 5)))))
+            spec: Some(CompressorSpec::Embedded {
+                inner: InnerSpec::TopK { value_bits: 5 },
+                frame: FrameSpec::Orthonormal,
             }),
         },
     ];
@@ -150,6 +144,7 @@ pub fn fig2ab(quick: bool) -> (Vec<Series>, Vec<Series>) {
         &obj,
         None,
         specs,
+        r,
         iters,
         0.05,
         trials,
@@ -167,38 +162,30 @@ pub fn fig2cd(quick: bool) -> (Vec<Series>, Vec<Series>) {
     let (train, test) = data.split(m * 3 / 4);
     let obj = train.svm_objective();
     let test_obj = test.svm_objective();
-    let n = mnist_like::DIM;
     let iters = scaled(400, quick);
-    let k = (n as f32 * 0.1) as usize; // 78 coords at 1 bit = nR bits
-    let big_n = next_pow2(n);
+    let r = 0.1; // ⌊784·0.1⌋ = 78 coords at 1 bit
     let specs: Vec<SchemeSpec> = vec![
-        SchemeSpec { name: "unquantized", make: Box::new(|_| None) },
+        SchemeSpec { name: "unquantized", spec: None },
         SchemeSpec {
             name: "rand78x1b",
-            make: Box::new(move |_| Some(Box::new(RandK::new(n, k, 1).unbiased()) as Box<dyn Compressor>)),
+            spec: Some(CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }),
         },
         SchemeSpec {
             name: "rand78x1b+NDE",
-            make: Box::new(move |rng| {
-                let f = crate::linalg::frames::HadamardFrame::new(n, rng);
-                Some(Box::new(EmbeddedCompressor::nde(
-                    Box::new(f),
-                    Box::new(RandK::new(big_n, k, 1).unbiased()),
-                )))
+            spec: Some(CompressorSpec::Embedded {
+                inner: InnerSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased },
+                frame: FrameSpec::Hadamard,
             }),
         },
         SchemeSpec {
             name: "top78x1b",
-            make: Box::new(move |_| Some(Box::new(TopK::new(n, k, 1)))),
+            spec: Some(CompressorSpec::TopK { value_bits: 1, count_index_bits: false }),
         },
         SchemeSpec {
             name: "top78x1b+NDE",
-            make: Box::new(move |rng| {
-                let f = crate::linalg::frames::HadamardFrame::new(n, rng);
-                Some(Box::new(EmbeddedCompressor::nde(
-                    Box::new(f),
-                    Box::new(TopK::new(big_n, k, 1)),
-                )))
+            spec: Some(CompressorSpec::Embedded {
+                inner: InnerSpec::TopK { value_bits: 1 },
+                frame: FrameSpec::Hadamard,
             }),
         },
     ];
@@ -207,6 +194,7 @@ pub fn fig2cd(quick: bool) -> (Vec<Series>, Vec<Series>) {
         &obj,
         Some(&test_obj),
         specs,
+        r,
         iters,
         1.0, // the paper's nominal α = 1
         1,   // single realization, as in the paper

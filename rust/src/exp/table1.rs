@@ -6,47 +6,42 @@
 
 use std::time::Instant;
 
-use crate::linalg::frames::HadamardFrame;
 use crate::linalg::rng::Rng;
-use crate::quant::compose::EmbeddedCompressor;
-use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
-use crate::quant::gain_shape::{NaiveUniform, StandardDither};
-use crate::quant::ndsc::Ndsc;
-use crate::quant::qsgd::Qsgd;
-use crate::quant::randk::RandK;
-use crate::quant::ratq::Ratq;
-use crate::quant::sign::SignQuantizer;
-use crate::quant::ternary::Ternary;
-use crate::quant::topk::TopK;
-use crate::quant::vqsgd::VqSgd;
+use crate::quant::dsc::{CodecMode, EmbedKind};
+use crate::quant::registry::{CompressorSpec, FrameSpec};
 use crate::quant::{normalized_error, Compressor};
 
+/// The Table-1 scheme zoo, constructed entirely through the registry.
+/// Dense-frame schemes are capped in dimension (a Haar rotation at
+/// `n = 65536` would be an `O(n²)` matrix) exactly as the seed harness
+/// did.
 pub fn schemes(n: usize, r: f32, rng: &mut Rng) -> Vec<Box<dyn Compressor>> {
-    let big_n = crate::linalg::fwht::next_pow2(n);
-    vec![
-        Box::new(SignQuantizer::new(n)),
-        Box::new(Qsgd::new(n, (r as usize).max(1))),
-        Box::new(Ternary::new(n)),
-        Box::new(VqSgd::new(n, 1)),
-        Box::new(VqSgd::new(n, 16)),
-        Box::new(TopK::new(n, n / 10, 8).counting_index_bits()),
-        Box::new(RandK::new(n, n / 10, 8).unbiased()),
-        Box::new(NaiveUniform::new(n, r)),
-        Box::new(StandardDither::new(n, r)),
-        Box::new(Ratq::new(n, r as usize, rng)),
-        Box::new(SubspaceCodec::new(
-            Box::new(HadamardFrame::with_big_n(n / 2, big_n / 2, rng)),
-            EmbedKind::Democratic,
-            CodecMode::Deterministic,
-            r,
-        )),
-        Box::new(Ndsc::hadamard(n, r, rng)),
-        Box::new(Ndsc::orthonormal(n.min(512), r, rng)),
-        Box::new(EmbeddedCompressor::nde(
-            Box::new(HadamardFrame::new(n, rng)),
-            Box::new(StandardDither::new(big_n, r)),
-        )),
-    ]
+    let mut out: Vec<Box<dyn Compressor>> = Vec::new();
+    for spec in crate::quant::registry::all_specs() {
+        // Dimension caps for dense frames; skip infeasible fixed-rate
+        // schemes rather than emit budget-violating rows.
+        let dim = crate::quant::registry::dense_frame_dim_cap(&spec, n);
+        if !spec.is_feasible(dim, r) {
+            continue;
+        }
+        out.push(spec.build(dim, r, rng));
+    }
+    // Extra row beyond the canonical zoo: a genuinely wide (λ = 2)
+    // democratic code on the half dimension — the Kashin wide-frame
+    // regime that the zoo's λ → 1 Hadamard rows cannot show (App. N).
+    // NOTE: this is a deliberate change of operating point from the seed
+    // harness, whose "half-dimension DSC" row worked out to λ = 1 for
+    // power-of-two n.
+    let half = (n / 2).max(2);
+    out.push(
+        CompressorSpec::Subspace {
+            embed: EmbedKind::Democratic,
+            mode: CodecMode::Deterministic,
+            frame: FrameSpec::HadamardLambda(2),
+        }
+        .build(half, r, rng),
+    );
+    out
 }
 
 /// Run Table 1. `quick` shrinks trial counts for CI.

@@ -9,11 +9,12 @@
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::config::{RunConfig, SchemeKind};
+use crate::coordinator::config::RunConfig;
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::worker::GradSource;
 use crate::data::corpus::Corpus;
 use crate::linalg::rng::Rng;
+use crate::quant::registry::CompressorSpec;
 use crate::runtime::artifact::{artifacts_dir, Artifact, Input};
 
 /// Metadata emitted by aot.py alongside the model artifacts.
@@ -141,9 +142,10 @@ impl PjrtEvaluator {
     }
 }
 
-/// One federated training run; returns the metrics log.
+/// One federated training run; returns the metrics log. `spec` is any
+/// registry compressor spec (see [`crate::quant::registry`]).
 pub fn train_federated(
-    scheme: SchemeKind,
+    spec: CompressorSpec,
     r: f32,
     workers: usize,
     rounds: usize,
@@ -161,7 +163,7 @@ pub fn train_federated(
         n: meta.n_params,
         workers,
         r,
-        scheme,
+        spec_override: Some(spec),
         rounds,
         step,
         batch: 0,
@@ -211,15 +213,22 @@ pub fn load_init(dir: &str, n: usize) -> Result<Vec<f32>> {
 /// the per-message diagnostic behind it).
 pub fn fig3b(quick: bool) -> Result<Vec<crate::exp::common::Series>> {
     use crate::exp::common::{print_figure, scaled, thin, Series};
+    use crate::quant::dsc::{CodecMode, EmbedKind};
+    use crate::quant::registry::FrameSpec;
+    let ndsc_dith = CompressorSpec::Subspace {
+        embed: EmbedKind::NearDemocratic,
+        mode: CodecMode::Dithered,
+        frame: FrameSpec::Hadamard,
+    };
     let workers = if quick { 2 } else { 4 };
     let rounds = scaled(100, quick);
     let mut series = Vec::new();
-    for (name, scheme, r) in [
-        ("NDSC-dith-R1", SchemeKind::NdscDithered, 1.0),
-        ("SD-R1", SchemeKind::StandardDither, 1.0),
-        ("SD-R2", SchemeKind::StandardDither, 2.0),
+    for (name, spec, r) in [
+        ("NDSC-dith-R1", ndsc_dith, 1.0),
+        ("SD-R1", CompressorSpec::StandardDither, 1.0),
+        ("SD-R2", CompressorSpec::StandardDither, 2.0),
     ] {
-        let metrics = train_federated(scheme, r, workers, rounds, 0.1, 7)?;
+        let metrics = train_federated(spec, r, workers, rounds, 0.1, 7)?;
         let pts: Vec<(f32, f32)> = metrics
             .rounds
             .iter()

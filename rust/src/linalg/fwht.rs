@@ -94,6 +94,67 @@ pub fn next_pow2(n: usize) -> usize {
 mod tests {
     use super::*;
     use crate::linalg::rng::Rng;
+    use crate::linalg::vecops::{dist2, norm2};
+    use crate::testkit::prop::{forall, Cases};
+
+    /// Property (via the in-tree harness): `H` is an involution up to the
+    /// normalization — two normalized transforms recover the input — at
+    /// every power-of-two length across random heavy-tailed inputs.
+    #[test]
+    fn prop_normalized_fwht_is_involution() {
+        forall(Cases::new("fwht involution", 60), |rng, _| {
+            let n = 1usize << rng.below(12); // 1 .. 2048
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let mut y = x.clone();
+            fwht_normalized_inplace(&mut y);
+            fwht_normalized_inplace(&mut y);
+            assert!(
+                dist2(&y, &x) <= 2e-3 * (1.0 + norm2(&x)),
+                "n={n}: H(Hx) != x, err {}",
+                dist2(&y, &x)
+            );
+        });
+    }
+
+    /// Property: the normalized transform is an isometry — `‖Hx‖₂ = ‖x‖₂`
+    /// — for every input shape the generator produces.
+    #[test]
+    fn prop_normalized_fwht_preserves_l2_norm() {
+        forall(Cases::new("fwht norm preservation", 60), |rng, _| {
+            let n = 1usize << rng.below(12);
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let before = norm2(&x);
+            let mut y = x;
+            fwht_normalized_inplace(&mut y);
+            let after = norm2(&y);
+            assert!(
+                (before - after).abs() <= 1e-3 * (1.0 + before),
+                "n={n}: ||Hx|| {after} vs ||x|| {before}"
+            );
+        });
+    }
+
+    /// Property: the transform is linear — `Ĥ(a·x + z) = a·Ĥx + Ĥz`.
+    #[test]
+    fn prop_fwht_is_linear() {
+        forall(Cases::new("fwht linearity", 40), |rng, _| {
+            let n = 1usize << (1 + rng.below(9)); // 2 .. 512
+            let a = rng.gaussian_f32();
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let z: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let mut combined: Vec<f32> = x.iter().zip(&z).map(|(&xi, &zi)| a * xi + zi).collect();
+            fwht_inplace(&mut combined);
+            let mut hx = x.clone();
+            fwht_inplace(&mut hx);
+            let mut hz = z.clone();
+            fwht_inplace(&mut hz);
+            let want: Vec<f32> = hx.iter().zip(&hz).map(|(&xi, &zi)| a * xi + zi).collect();
+            assert!(
+                dist2(&combined, &want) <= 1e-3 * (1.0 + norm2(&want)),
+                "n={n}: linearity violated"
+            );
+        });
+    }
 
     #[test]
     fn matches_naive_small() {

@@ -3,6 +3,7 @@
 //! ```text
 //! repro table1|fig1a|fig1b|fig1c|fig1d|fig2ab|fig2cd|fig3a|fig3b|fig5|fig6|fig8|fig11   [--quick]
 //! repro figures [--quick]            # everything above in sequence
+//! repro schemes [n=..] [r=..]        # print the registry zoo at (n, R)
 //! repro train  [key=value ...]       # distributed run on a planted problem
 //! repro train-transformer [key=value ...]  # federated transformer (needs artifacts)
 //! ```
@@ -17,14 +18,69 @@ use kashinflow::data::synthetic::planted_regression_shards;
 use kashinflow::exp;
 use kashinflow::linalg::rng::Rng;
 use kashinflow::opt::objectives::Loss;
+use kashinflow::quant::Compressor;
 
 fn usage() -> ! {
     eprintln!(
         "usage: repro <command> [--quick] [key=value ...]\n\
          commands: table1 fig1a fig1b fig1c fig1d fig2ab fig2cd fig3a fig3b\n\
-                   fig5 fig6 fig8 fig11 ablation-ef ablation-lambda ablation-dqgd\n                   figures train train-transformer"
+                   fig5 fig6 fig8 fig11 ablation-ef ablation-lambda ablation-dqgd\n                   schemes figures train train-transformer"
     );
     std::process::exit(2);
+}
+
+/// `repro schemes [n=..] [r=..]` — enumerate the registry at one `(n, R)`:
+/// name, feasibility under the `⌊nR⌋` wire contract, measured payload and
+/// unbiasedness flag of every spec in the zoo.
+fn run_schemes(args: &[String]) {
+    let mut n = 1024usize;
+    let mut r = 3.0f32;
+    for a in args {
+        match a.split_once('=') {
+            Some(("n", v)) => n = v.parse().unwrap_or(n),
+            Some(("r", v)) => r = v.parse().unwrap_or(r),
+            _ => {
+                eprintln!("schemes: expected n=.. or r=.., got '{a}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    let budget = kashinflow::quant::budget_bits(n, r);
+    let mut rng = Rng::seed_from(0x5EED);
+    println!("registry zoo at n={n}, R={r} (budget {budget} payload bits/message):");
+    println!(
+        "{:<16} {:>8} {:>10} {:>14} {:>12} {:>10}",
+        "spec", "dim", "feasible", "payload-bits", "bits/dim", "unbiased"
+    );
+    for spec in kashinflow::quant::registry::all_specs() {
+        // Dense-frame schemes are built at a capped dimension so that
+        // `repro schemes n=131072` (transformer scale) stays instant.
+        let dim = kashinflow::quant::registry::dense_frame_dim_cap(&spec, n);
+        if !spec.is_feasible(dim, r) {
+            println!(
+                "{:<16} {:>8} {:>10} {:>14} {:>12} {:>10}",
+                spec.name(),
+                dim,
+                "no",
+                "-",
+                "-",
+                "-"
+            );
+            continue;
+        }
+        let c = spec.build(dim, r, &mut rng);
+        let y: Vec<f32> = (0..dim).map(|_| rng.gaussian_cubed()).collect();
+        let msg = c.compress(&y, &mut rng);
+        println!(
+            "{:<16} {:>8} {:>10} {:>14} {:>12.3} {:>10}",
+            spec.name(),
+            dim,
+            "yes",
+            msg.payload_bits,
+            msg.payload_bits as f32 / dim as f32,
+            c.is_unbiased()
+        );
+    }
 }
 
 fn main() {
@@ -89,6 +145,9 @@ fn main() {
         "fig11" | "fig12" => {
             exp::appendix::fig11_12(quick);
         }
+        "schemes" => {
+            run_schemes(&args);
+        }
         "figures" => {
             exp::table1::run(quick);
             exp::fig1::fig1a(quick);
@@ -130,7 +189,7 @@ fn main() {
                 }
             };
             match exp::transformer::train_federated(
-                cfg.scheme,
+                cfg.compressor_spec(),
                 cfg.r,
                 cfg.workers,
                 cfg.rounds,
@@ -188,7 +247,7 @@ fn run_train(cfg: &RunConfig) {
     let dist: f32 = kashinflow::linalg::vecops::dist2(&metrics.final_iterate, &xs);
     eprintln!(
         "scheme={} R={} workers={}: final value {:.6}, ||x-x*||={:.4}, rate {:.3} b/dim, rejected {}",
-        cfg.scheme,
+        cfg.scheme_name(),
         cfg.r,
         cfg.workers,
         metrics.final_value(),

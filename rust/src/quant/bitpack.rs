@@ -198,6 +198,49 @@ mod tests {
         });
     }
 
+    /// Property: packing through a *fractional* budget allocation —
+    /// `⌊nR⌋` bits split into mixed widths by [`allocate_bits`], exactly
+    /// how every fixed-length scheme realizes non-integer `R` — round-trips
+    /// bit-exactly, spends exactly the budget, and pads only the final
+    /// byte.
+    #[test]
+    fn prop_fractional_budget_roundtrip_bit_exact() {
+        forall(Cases::new("fractional-width packing", 150), |rng: &mut Rng, _| {
+            let n = 1 + rng.below(300);
+            let r = [0.1f32, 0.25, 0.5, 1.0, 1.7, 2.5, 3.0, 6.3][rng.below(8)];
+            let total = crate::quant::budget_bits(n, r);
+            let alloc = allocate_bits(total, n);
+            let vals: Vec<u64> = (0..n)
+                .map(|i| {
+                    let b = alloc.bits(i);
+                    if b == 0 {
+                        0
+                    } else {
+                        rng.next_u64() & ((1u64 << b) - 1)
+                    }
+                })
+                .collect();
+            let mut w = BitWriter::with_capacity_bits(total);
+            for (i, &v) in vals.iter().enumerate() {
+                let b = alloc.bits(i);
+                if b > 0 {
+                    w.write_bits(v, b);
+                }
+            }
+            assert_eq!(w.len_bits(), total, "n={n} R={r}: budget not exactly spent");
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), total.div_ceil(8), "n={n} R={r}: slack bytes");
+            let mut rd = BitReader::new(&bytes);
+            for (i, &v) in vals.iter().enumerate() {
+                let b = alloc.bits(i);
+                if b > 0 {
+                    assert_eq!(rd.read_bits(b), v, "n={n} R={r} coord {i} width {b}");
+                }
+            }
+            assert_eq!(rd.pos_bits(), total);
+        });
+    }
+
     #[test]
     fn allocation_exactly_spends_budget() {
         forall(Cases::new("bit allocation", 300), |rng: &mut Rng, _| {

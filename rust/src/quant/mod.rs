@@ -21,6 +21,13 @@
 //! | [`vqsgd`] | vqSGD cross-polytope [17] | Table 1 |
 //! | [`ratq`] | RATQ-style rotated adaptive quantizer [7] | Table 1 |
 //! | [`compose`] | sparsify/compress *in the embedding domain* | App. H |
+//! | [`registry`] | unified spec → compressor registry over the whole zoo | §3, App. F |
+//!
+//! [`registry`] is the single place that enumerates the zoo: a
+//! [`registry::CompressorSpec`] names a scheme, `build(spec, n, R)`
+//! instantiates it with every budget-dependent knob derived from `⌊nR⌋`,
+//! and `registry::all_specs()` is the row set of the cross-scheme
+//! conformance matrix (`rust/tests/test_conformance.rs`).
 
 pub mod bitpack;
 pub mod compose;
@@ -32,6 +39,7 @@ pub mod ndsc;
 pub mod qsgd;
 pub mod randk;
 pub mod ratq;
+pub mod registry;
 pub mod sign;
 pub mod ternary;
 pub mod topk;

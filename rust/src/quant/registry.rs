@@ -1,0 +1,648 @@
+//! Unified compressor registry — every scheme in the zoo behind one
+//! constructor, so any `(scheme, n, R)` triple can be built from config,
+//! CLI or a test matrix without touching call sites.
+//!
+//! A [`CompressorSpec`] is a plain-data description of a scheme (plus its
+//! per-scheme parameters); [`CompressorSpec::build`] turns it into a live
+//! [`Compressor`] for a dimension `n` and budget `R`, deriving every
+//! budget-dependent knob (sparsifier `k`, QSGD levels, vqSGD repetitions,
+//! RATQ per-coordinate widths) from the paper's `⌊nR⌋` wire contract
+//! (§3, App. F). Schemes with a *fixed* wire rate (sign is 1 bit/dim,
+//! TernGrad ≈ log₂3, QSGD ≥ 2 bits/dim) cannot honor arbitrarily small
+//! budgets — [`CompressorSpec::is_feasible`] encodes exactly when the
+//! contract can hold, and `rust/tests/test_conformance.rs` checks both
+//! directions over the whole `all_specs() × R × n` matrix.
+//!
+//! The spec grammar accepted by [`CompressorSpec::parse`] (and printed by
+//! [`CompressorSpec::name`]):
+//!
+//! ```text
+//! ndsc | ndsc-dith | ndsc-ortho | ndsc-ortho-dith | dsc | dsc-dith
+//! naive | sd | qsgd | sign | ternary | vqsgd | ratq | dqgd | fp32
+//! topk[<V>b[-idx]]           e.g. topk1b, topk4b-idx   (k = ⌊nR⌋/bits-per-entry)
+//! randk[<V>b[-det|-plain]]   e.g. randk1b, randk1b-det (k = ⌊nR⌋/V)
+//! <inner>+<frame>            e.g. sd+ndh, randk1b+ndh, topk1b+ndo
+//!                            (App. H: compress in the embedding domain)
+//! ```
+
+use crate::linalg::frames::{Frame, FrameKind, HadamardFrame, OrthonormalFrame, SubGaussianFrame};
+use crate::linalg::fwht::next_pow2;
+use crate::linalg::rng::Rng;
+use crate::quant::compose::EmbeddedCompressor;
+use crate::quant::dqgd::DqgdRange;
+use crate::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
+use crate::quant::gain_shape::{NaiveUniform, StandardDither};
+use crate::quant::qsgd::Qsgd;
+use crate::quant::randk::RandK;
+use crate::quant::ratq::Ratq;
+use crate::quant::sign::SignQuantizer;
+use crate::quant::ternary::Ternary;
+use crate::quant::topk::TopK;
+use crate::quant::vqsgd::VqSgd;
+use crate::quant::{budget_bits, Compressed, Compressor};
+
+// ---------------------------------------------------------------------------
+// Frame specs
+// ---------------------------------------------------------------------------
+
+/// Plain-data description of the frame an embedding-based scheme uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FrameSpec {
+    /// Randomized Hadamard `S = PDH`, `N = 2^⌈log₂n⌉` (λ → 1, the default).
+    Hadamard,
+    /// Randomized Hadamard with `N = 2^⌈log₂n⌉·λ` (App. N sweeps; λ is
+    /// rounded up to a power of two).
+    HadamardLambda(u8),
+    /// Haar orthonormal with λ = 1 (a random rotation).
+    Orthonormal,
+    /// Haar orthonormal with an explicit aspect ratio λ ≥ 1.
+    OrthonormalLambda(f32),
+    /// Sub-Gaussian i.i.d. frame at λ = 2 (App. J.1).
+    SubGaussian,
+}
+
+impl FrameSpec {
+    pub fn from_kind(kind: FrameKind) -> FrameSpec {
+        match kind {
+            FrameKind::Hadamard => FrameSpec::Hadamard,
+            FrameKind::Orthonormal => FrameSpec::Orthonormal,
+            FrameKind::SubGaussian => FrameSpec::SubGaussian,
+        }
+    }
+
+    /// Embedding dimension `N` this frame will have at original dim `n`.
+    pub fn big_n(self, n: usize) -> usize {
+        match self {
+            FrameSpec::Hadamard => next_pow2(n),
+            FrameSpec::HadamardLambda(m) => {
+                next_pow2(n) * (m as usize).max(1).next_power_of_two()
+            }
+            FrameSpec::Orthonormal => n,
+            FrameSpec::OrthonormalLambda(l) => ((n as f32 * l).ceil() as usize).max(n),
+            FrameSpec::SubGaussian => (2 * n).max(n),
+        }
+    }
+
+    pub fn build(self, n: usize, rng: &mut Rng) -> Box<dyn Frame> {
+        match self {
+            FrameSpec::Hadamard => Box::new(HadamardFrame::new(n, rng)),
+            FrameSpec::HadamardLambda(_) => {
+                Box::new(HadamardFrame::with_big_n(n, self.big_n(n), rng))
+            }
+            FrameSpec::Orthonormal => Box::new(OrthonormalFrame::with_big_n(n, n, rng)),
+            FrameSpec::OrthonormalLambda(l) => Box::new(OrthonormalFrame::with_lambda(n, l, rng)),
+            FrameSpec::SubGaussian => Box::new(SubGaussianFrame::with_lambda(n, 2.0, rng)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compressor specs
+// ---------------------------------------------------------------------------
+
+/// Sparsifier flavour (random-k): plain, `n/k`-rescaled (unbiased), or
+/// nearest-neighbour values (the error-feedback variant of Fig. 1d).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparsifyKind {
+    Plain,
+    Unbiased,
+    Deterministic,
+}
+
+/// Inner compressor of an App.-H composition (`<inner>+NDE`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InnerSpec {
+    StandardDither,
+    RandK { value_bits: u8, kind: SparsifyKind },
+    TopK { value_bits: u8 },
+}
+
+/// Plain-data description of a compression scheme. `Copy` on purpose:
+/// specs are cheap values that flow through configs and test matrices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressorSpec {
+    /// (N)DSC — the paper's subspace codecs: embedding × quantizer × frame.
+    Subspace { embed: EmbedKind, mode: CodecMode, frame: FrameSpec },
+    /// Naive `‖·‖∞`-normalized uniform scalar quantizer (eq. 11).
+    Naive,
+    /// Standard dithering, no embedding (App. E / Fig. 1a "SD").
+    StandardDither,
+    /// QSGD with `2^⌊R−1⌋` levels (fixed-length variant, Table 1).
+    Qsgd,
+    /// 1-bit sign quantization.
+    Sign,
+    /// TernGrad ternary (≈1.6 bits/dim packed).
+    Ternary,
+    /// Top-k, `k = ⌊nR⌋ / bits-per-entry`; optionally charging index bits.
+    TopK { value_bits: u8, count_index_bits: bool },
+    /// Random-k over shared randomness, `k = ⌊nR⌋ / value_bits`.
+    RandK { value_bits: u8, kind: SparsifyKind },
+    /// vqSGD cross-polytope, repetitions filled from the budget.
+    VqSgd,
+    /// RATQ-style rotated adaptive quantizer, widths from the budget.
+    Ratq,
+    /// DQGD's predefined decaying dynamic range [6].
+    Dqgd { r0: f32, gamma: f32 },
+    /// Appendix-H composition: `inner` applied in the embedding domain.
+    Embedded { inner: InnerSpec, frame: FrameSpec },
+    /// Uncompressed fp32 reference (32 bits/dim).
+    Fp32,
+}
+
+/// `⌈log₂ n⌉` bits to address one of `n` items (matches `TopK`'s coding).
+fn index_bits(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+/// Bits per vqSGD vertex index: `⌈log₂ 2n⌉`.
+fn vq_index_bits(n: usize) -> usize {
+    (usize::BITS - (2 * n - 1).leading_zeros()) as usize
+}
+
+/// QSGD level bits for a budget `R`: `1 + bits ≤ R` ⇒ `bits = ⌊R⌋ − 1`,
+/// clamped to the implementable range.
+pub fn qsgd_level_bits(r: f32) -> usize {
+    ((r.floor() as i64) - 1).clamp(1, 24) as usize
+}
+
+/// Largest per-coordinate width RATQ can afford under `⌊nR⌋` once the
+/// per-group ladder bits are paid; `None` when even 1 bit does not fit.
+pub fn ratq_value_bits(n: usize, r: f32) -> Option<usize> {
+    let big_n = next_pow2(n);
+    let group = ((n as f32).ln().ceil() as usize).max(2);
+    let overhead = big_n.div_ceil(group) * 3; // ladder_bits = 3, as Ratq::new
+    let b = budget_bits(n, r);
+    if b <= overhead {
+        return None;
+    }
+    let bits = (b - overhead) / big_n;
+    if bits == 0 {
+        None
+    } else {
+        Some(bits.min(24))
+    }
+}
+
+impl CompressorSpec {
+    /// Whether this scheme can honor `payload_bits ≤ ⌊nR⌋` at `(n, R)`.
+    /// Budget-adaptive schemes are feasible whenever the budget admits one
+    /// atom (one retained value, one vertex index, …); fixed-rate schemes
+    /// (sign, ternary, QSGD, fp32) need `R` at or above their wire rate.
+    pub fn is_feasible(&self, n: usize, r: f32) -> bool {
+        if n == 0 || !(r > 0.0) {
+            return false;
+        }
+        let b = budget_bits(n, r);
+        match *self {
+            CompressorSpec::Subspace { .. }
+            | CompressorSpec::Naive
+            | CompressorSpec::StandardDither
+            | CompressorSpec::Dqgd { .. } => true,
+            CompressorSpec::Qsgd => n * (qsgd_level_bits(r) + 1) <= b,
+            CompressorSpec::Sign => n <= b,
+            CompressorSpec::Ternary => n.div_ceil(5) * 8 <= b,
+            CompressorSpec::TopK { value_bits, count_index_bits } => {
+                // Same `max(1)` floor as `build` so feasibility and the
+                // built compressor can never disagree on the wire cost.
+                let per = (value_bits as usize).max(1)
+                    + if count_index_bits { index_bits(n) } else { 0 };
+                b >= per
+            }
+            CompressorSpec::RandK { value_bits, .. } => b >= (value_bits as usize).max(1),
+            CompressorSpec::VqSgd => b >= vq_index_bits(n),
+            CompressorSpec::Ratq => ratq_value_bits(n, r).is_some(),
+            CompressorSpec::Embedded { inner, .. } => match inner {
+                InnerSpec::StandardDither => b >= 1,
+                InnerSpec::RandK { value_bits, .. } | InnerSpec::TopK { value_bits } => {
+                    b >= (value_bits as usize).max(1)
+                }
+            },
+            CompressorSpec::Fp32 => 32 * n <= b,
+        }
+    }
+
+    /// Build a live compressor for dimension `n` at budget `R`. Frame and
+    /// shared randomness are drawn from `rng` (common randomness with the
+    /// decoder, established at setup, as in the paper).
+    pub fn build(&self, n: usize, r: f32, rng: &mut Rng) -> Box<dyn Compressor> {
+        assert!(n > 0, "dimension must be positive");
+        assert!(r > 0.0, "bit budget must be positive");
+        let b = budget_bits(n, r);
+        match *self {
+            CompressorSpec::Subspace { embed, mode, frame } => {
+                Box::new(SubspaceCodec::new(frame.build(n, rng), embed, mode, r))
+            }
+            CompressorSpec::Naive => Box::new(NaiveUniform::new(n, r)),
+            CompressorSpec::StandardDither => Box::new(StandardDither::new(n, r)),
+            CompressorSpec::Qsgd => Box::new(Qsgd::new(n, qsgd_level_bits(r))),
+            CompressorSpec::Sign => Box::new(SignQuantizer::new(n)),
+            CompressorSpec::Ternary => Box::new(Ternary::new(n)),
+            CompressorSpec::TopK { value_bits, count_index_bits } => {
+                let vb = (value_bits as usize).max(1);
+                let per = vb + if count_index_bits { index_bits(n) } else { 0 };
+                let k = (b / per.max(1)).clamp(1, n);
+                let t = TopK::new(n, k, vb);
+                Box::new(if count_index_bits { t.counting_index_bits() } else { t })
+            }
+            CompressorSpec::RandK { value_bits, kind } => {
+                let vb = (value_bits as usize).max(1);
+                let k = (b / vb).clamp(1, n);
+                let c = RandK::new(n, k, vb);
+                Box::new(match kind {
+                    SparsifyKind::Plain => c,
+                    SparsifyKind::Unbiased => c.unbiased(),
+                    SparsifyKind::Deterministic => c.deterministic(),
+                })
+            }
+            CompressorSpec::VqSgd => {
+                let reps = (b / vq_index_bits(n).max(1)).max(1);
+                Box::new(VqSgd::new(n, reps))
+            }
+            CompressorSpec::Ratq => {
+                Box::new(Ratq::new(n, ratq_value_bits(n, r).unwrap_or(1), rng))
+            }
+            CompressorSpec::Dqgd { r0, gamma } => Box::new(DqgdRange::new(n, r, r0, gamma)),
+            CompressorSpec::Embedded { inner, frame } => {
+                let f = frame.build(n, rng);
+                let big_n = f.big_n();
+                // Spread the original-space budget ⌊nR⌋ over the N
+                // embedding coordinates (Theorem 1's R/λ).
+                let inner_box: Box<dyn Compressor> = match inner {
+                    InnerSpec::StandardDither => {
+                        Box::new(StandardDither::new(big_n, b.max(1) as f32 / big_n as f32))
+                    }
+                    InnerSpec::RandK { value_bits, kind } => {
+                        let vb = (value_bits as usize).max(1);
+                        let k = (b / vb).clamp(1, big_n);
+                        let c = RandK::new(big_n, k, vb);
+                        Box::new(match kind {
+                            SparsifyKind::Plain => c,
+                            SparsifyKind::Unbiased => c.unbiased(),
+                            SparsifyKind::Deterministic => c.deterministic(),
+                        })
+                    }
+                    InnerSpec::TopK { value_bits } => {
+                        let vb = (value_bits as usize).max(1);
+                        let k = (b / vb).clamp(1, big_n);
+                        Box::new(TopK::new(big_n, k, vb))
+                    }
+                };
+                Box::new(EmbeddedCompressor::new(f, EmbedKind::NearDemocratic, inner_box))
+            }
+            CompressorSpec::Fp32 => Box::new(Fp32Passthrough { n }),
+        }
+    }
+
+    /// Canonical spec name (round-trips through [`CompressorSpec::parse`]).
+    pub fn name(&self) -> String {
+        match *self {
+            CompressorSpec::Subspace { embed, mode, frame } => {
+                let base = match (embed, frame) {
+                    (EmbedKind::NearDemocratic, FrameSpec::Hadamard) => "ndsc".to_string(),
+                    (EmbedKind::NearDemocratic, FrameSpec::Orthonormal) => {
+                        "ndsc-ortho".to_string()
+                    }
+                    (EmbedKind::NearDemocratic, f) => format!("ndsc[{f:?}]"),
+                    (EmbedKind::Democratic, FrameSpec::Hadamard) => "dsc".to_string(),
+                    (EmbedKind::Democratic, f) => format!("dsc[{f:?}]"),
+                };
+                if mode == CodecMode::Dithered {
+                    format!("{base}-dith")
+                } else {
+                    base
+                }
+            }
+            CompressorSpec::Naive => "naive".into(),
+            CompressorSpec::StandardDither => "sd".into(),
+            CompressorSpec::Qsgd => "qsgd".into(),
+            CompressorSpec::Sign => "sign".into(),
+            CompressorSpec::Ternary => "ternary".into(),
+            CompressorSpec::TopK { value_bits, count_index_bits } => {
+                if count_index_bits {
+                    format!("topk{value_bits}b-idx")
+                } else {
+                    format!("topk{value_bits}b")
+                }
+            }
+            CompressorSpec::RandK { value_bits, kind } => match kind {
+                SparsifyKind::Unbiased => format!("randk{value_bits}b"),
+                SparsifyKind::Deterministic => format!("randk{value_bits}b-det"),
+                SparsifyKind::Plain => format!("randk{value_bits}b-plain"),
+            },
+            CompressorSpec::VqSgd => "vqsgd".into(),
+            CompressorSpec::Ratq => "ratq".into(),
+            CompressorSpec::Dqgd { .. } => "dqgd".into(),
+            CompressorSpec::Embedded { inner, frame } => {
+                // Only the canonical frames get parseable tags; exotic
+                // frames are named loudly un-parseable rather than
+                // silently rehydrating as a different frame.
+                let tag = match frame {
+                    FrameSpec::Hadamard => "ndh".to_string(),
+                    FrameSpec::Orthonormal => "ndo".to_string(),
+                    f => format!("nde[{f:?}]"),
+                };
+                let i = match inner {
+                    InnerSpec::StandardDither => "sd".to_string(),
+                    InnerSpec::RandK { value_bits, kind } => match kind {
+                        SparsifyKind::Unbiased => format!("randk{value_bits}b"),
+                        SparsifyKind::Deterministic => format!("randk{value_bits}b-det"),
+                        SparsifyKind::Plain => format!("randk{value_bits}b-plain"),
+                    },
+                    InnerSpec::TopK { value_bits } => format!("topk{value_bits}b"),
+                };
+                format!("{i}+{tag}")
+            }
+            CompressorSpec::Fp32 => "fp32".into(),
+        }
+    }
+
+    /// Parse the spec grammar (module docs). Accepts the legacy
+    /// `SchemeKind` aliases so existing CLI invocations keep working.
+    pub fn parse(s: &str) -> Option<CompressorSpec> {
+        use CompressorSpec as S;
+        let t = s.to_ascii_lowercase();
+        // App.-H compositions: "<inner>+<frame>".
+        if let Some((inner_s, frame_s)) = t.split_once('+') {
+            let frame = match frame_s {
+                "ndh" | "hadamard" => FrameSpec::Hadamard,
+                "ndo" | "ortho" | "orthonormal" => FrameSpec::Orthonormal,
+                _ => return None, // incl. "nde[..]" names of exotic frames
+            };
+            let inner = if inner_s == "sd" || inner_s == "dither" {
+                InnerSpec::StandardDither
+            } else if let Some(rest) = inner_s.strip_prefix("randk") {
+                let (vb, kind) = parse_sparsify_suffix(rest)?;
+                InnerSpec::RandK { value_bits: vb, kind }
+            } else if let Some(rest) = inner_s.strip_prefix("topk") {
+                let vb: u8 =
+                    if rest.is_empty() { 1 } else { rest.strip_suffix('b')?.parse().ok()? };
+                if vb == 0 {
+                    return None;
+                }
+                InnerSpec::TopK { value_bits: vb }
+            } else {
+                return None;
+            };
+            return Some(S::Embedded { inner, frame });
+        }
+        let det = |frame| S::Subspace {
+            embed: EmbedKind::NearDemocratic,
+            mode: CodecMode::Deterministic,
+            frame,
+        };
+        Some(match t.as_str() {
+            "ndsc" => det(FrameSpec::Hadamard),
+            "ndsc-dith" | "ndsc_dithered" | "ndscd" => S::Subspace {
+                embed: EmbedKind::NearDemocratic,
+                mode: CodecMode::Dithered,
+                frame: FrameSpec::Hadamard,
+            },
+            "ndsc-ortho" | "ndo" => det(FrameSpec::Orthonormal),
+            "ndsc-ortho-dith" => S::Subspace {
+                embed: EmbedKind::NearDemocratic,
+                mode: CodecMode::Dithered,
+                frame: FrameSpec::Orthonormal,
+            },
+            "dsc" => S::Subspace {
+                embed: EmbedKind::Democratic,
+                mode: CodecMode::Deterministic,
+                frame: FrameSpec::Hadamard,
+            },
+            "dsc-dith" | "dsc_dithered" | "dscd" => S::Subspace {
+                embed: EmbedKind::Democratic,
+                mode: CodecMode::Dithered,
+                frame: FrameSpec::Hadamard,
+            },
+            "naive" | "uniform" => S::Naive,
+            "sd" | "dither" | "standard-dither" => S::StandardDither,
+            "qsgd" => S::Qsgd,
+            "sign" => S::Sign,
+            "ternary" | "terngrad" => S::Ternary,
+            "vqsgd" => S::VqSgd,
+            "ratq" => S::Ratq,
+            "dqgd" => S::Dqgd { r0: 1.0, gamma: 1.0 },
+            "none" | "float" | "fp32" => S::Fp32,
+            // "topk", "topk<V>b", "topk<V>b-idx"; legacy "topk"/"top-k"
+            // defaults to 8-bit values (k = ⌊nR⌋/8, the old SchemeKind).
+            "topk" | "top-k" => S::TopK { value_bits: 8, count_index_bits: false },
+            "randk" | "rand-k" | "random" => {
+                S::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }
+            }
+            _ => {
+                if let Some(rest) = t.strip_prefix("topk") {
+                    let (core, idx) = match rest.strip_suffix("-idx") {
+                        Some(c) => (c, true),
+                        None => (rest, false),
+                    };
+                    let vb: u8 = core.strip_suffix('b')?.parse().ok()?;
+                    if vb == 0 {
+                        return None;
+                    }
+                    S::TopK { value_bits: vb, count_index_bits: idx }
+                } else if let Some(rest) = t.strip_prefix("randk") {
+                    let (vb, kind) = parse_sparsify_suffix(rest)?;
+                    S::RandK { value_bits: vb, kind }
+                } else {
+                    return None;
+                }
+            }
+        })
+    }
+}
+
+fn parse_sparsify_suffix(rest: &str) -> Option<(u8, SparsifyKind)> {
+    if rest.is_empty() {
+        return Some((1, SparsifyKind::Unbiased));
+    }
+    let (core, kind) = if let Some(c) = rest.strip_suffix("-det") {
+        (c, SparsifyKind::Deterministic)
+    } else if let Some(c) = rest.strip_suffix("-plain") {
+        (c, SparsifyKind::Plain)
+    } else {
+        (rest, SparsifyKind::Unbiased)
+    };
+    let vb: u8 = core.strip_suffix('b')?.parse().ok()?;
+    if vb == 0 {
+        return None;
+    }
+    Some((vb, kind))
+}
+
+/// Free-function form of [`CompressorSpec::build`].
+pub fn build(spec: &CompressorSpec, n: usize, r: f32, rng: &mut Rng) -> Box<dyn Compressor> {
+    spec.build(n, r, rng)
+}
+
+/// The full enumerable zoo: every scheme the paper's Table 1 and figures
+/// exercise, in canonical parameterizations. This is the conformance
+/// matrix's row set (`rust/tests/test_conformance.rs`) and what
+/// `repro schemes` prints. The fp32 passthrough is excluded — it is a
+/// reference, not a compression scheme (it needs `R ≥ 32`).
+pub fn all_specs() -> Vec<CompressorSpec> {
+    use CompressorSpec as S;
+    let ndh = FrameSpec::Hadamard;
+    vec![
+        S::Subspace { embed: EmbedKind::NearDemocratic, mode: CodecMode::Deterministic, frame: ndh },
+        S::Subspace { embed: EmbedKind::NearDemocratic, mode: CodecMode::Dithered, frame: ndh },
+        S::Subspace {
+            embed: EmbedKind::NearDemocratic,
+            mode: CodecMode::Deterministic,
+            frame: FrameSpec::Orthonormal,
+        },
+        S::Subspace { embed: EmbedKind::Democratic, mode: CodecMode::Deterministic, frame: ndh },
+        S::Subspace { embed: EmbedKind::Democratic, mode: CodecMode::Dithered, frame: ndh },
+        S::Naive,
+        S::StandardDither,
+        S::Qsgd,
+        S::Sign,
+        S::Ternary,
+        S::TopK { value_bits: 1, count_index_bits: false },
+        S::TopK { value_bits: 4, count_index_bits: true },
+        S::RandK { value_bits: 1, kind: SparsifyKind::Unbiased },
+        S::RandK { value_bits: 1, kind: SparsifyKind::Deterministic },
+        S::VqSgd,
+        S::Ratq,
+        S::Dqgd { r0: 1.0, gamma: 1.0 },
+        S::Embedded { inner: InnerSpec::StandardDither, frame: ndh },
+        S::Embedded {
+            inner: InnerSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased },
+            frame: ndh,
+        },
+        S::Embedded { inner: InnerSpec::TopK { value_bits: 1 }, frame: ndh },
+    ]
+}
+
+/// Working dimension for a spec at a nominal `n`, capping dense-frame
+/// schemes: a Haar-orthonormal (or sub-Gaussian) frame is an `O(n·N)`
+/// dense matrix with `O(n²N)` construction, so enumerating the zoo at
+/// transformer-scale `n` must not instantiate one. Harnesses that sweep
+/// the full zoo (`table1`, `repro schemes`) build such specs at
+/// `min(n, 512)` and report that dimension instead.
+pub fn dense_frame_dim_cap(spec: &CompressorSpec, n: usize) -> usize {
+    let dense = |f: &FrameSpec| {
+        matches!(
+            f,
+            FrameSpec::Orthonormal | FrameSpec::OrthonormalLambda(_) | FrameSpec::SubGaussian
+        )
+    };
+    match spec {
+        CompressorSpec::Subspace { frame, .. } | CompressorSpec::Embedded { frame, .. }
+            if dense(frame) =>
+        {
+            n.min(512)
+        }
+        _ => n,
+    }
+}
+
+/// Identity "compressor" for unquantized reference runs: 32 bits/dim of
+/// payload so the traffic accounting stays meaningful. (Formerly lived in
+/// `coordinator::config`; re-exported there for backward compatibility.)
+pub struct Fp32Passthrough {
+    pub n: usize,
+}
+
+impl Compressor for Fp32Passthrough {
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn bits_per_dim(&self) -> f32 {
+        32.0
+    }
+
+    fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
+        let mut w = crate::quant::bitpack::BitWriter::with_capacity_bits(32 * y.len());
+        for &v in y {
+            w.write_f32(v);
+        }
+        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits: 32 * self.n, side_bits: 0 }
+    }
+
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut r = crate::quant::bitpack::BitReader::new(&msg.bytes);
+        (0..self.n).map(|_| r.read_f32()).collect()
+    }
+
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for spec in all_specs() {
+            let name = spec.name();
+            let parsed = CompressorSpec::parse(&name)
+                .unwrap_or_else(|| panic!("'{name}' does not parse"));
+            assert_eq!(parsed, spec, "name '{name}' round-trip");
+        }
+        // Legacy aliases still work.
+        assert_eq!(
+            CompressorSpec::parse("topk"),
+            Some(CompressorSpec::TopK { value_bits: 8, count_index_bits: false })
+        );
+        assert_eq!(CompressorSpec::parse("fp32"), Some(CompressorSpec::Fp32));
+        assert!(CompressorSpec::parse("sd+ndh").is_some());
+        assert!(CompressorSpec::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn zoo_has_at_least_12_distinct_schemes() {
+        let specs = all_specs();
+        assert!(specs.len() >= 12, "only {} specs", specs.len());
+        let mut names: Vec<String> = specs.iter().map(|s| s.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), specs.len(), "duplicate spec names");
+    }
+
+    #[test]
+    fn budget_derived_knobs_match_hand_wiring() {
+        // The registry must reproduce the figures' hand-derived settings.
+        let mut rng = Rng::seed_from(1);
+        // Fig. 2c: n = 784, R = 0.1 → 78 coords at 1 bit.
+        let c = CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }
+            .build(784, 0.1, &mut rng);
+        let y: Vec<f32> = (0..784).map(|_| rng.gaussian_f32()).collect();
+        assert_eq!(c.compress(&y, &mut rng).payload_bits, 78);
+        // Fig. 2a: n = 30, R = 0.5, 5-bit top-k → k = 3.
+        let c = CompressorSpec::TopK { value_bits: 5, count_index_bits: false }
+            .build(30, 0.5, &mut rng);
+        let y: Vec<f32> = (0..30).map(|_| rng.gaussian_f32()).collect();
+        assert_eq!(c.compress(&y, &mut rng).payload_bits, 15);
+    }
+
+    #[test]
+    fn infeasible_fixed_rate_schemes_are_flagged() {
+        assert!(!CompressorSpec::Sign.is_feasible(64, 0.5));
+        assert!(CompressorSpec::Sign.is_feasible(64, 1.0));
+        assert!(!CompressorSpec::Ternary.is_feasible(64, 1.0));
+        assert!(CompressorSpec::Ternary.is_feasible(64, 3.0));
+        assert!(!CompressorSpec::Qsgd.is_feasible(64, 1.0));
+        assert!(CompressorSpec::Qsgd.is_feasible(64, 3.0));
+        assert!(!CompressorSpec::Fp32.is_feasible(64, 3.0));
+        assert!(CompressorSpec::Fp32.is_feasible(64, 32.0));
+    }
+
+    #[test]
+    fn fp32_passthrough_is_lossless() {
+        let mut rng = Rng::seed_from(2);
+        let c = Fp32Passthrough { n: 10 };
+        let y: Vec<f32> = (0..10).map(|_| rng.gaussian_cubed()).collect();
+        let yhat = c.decompress(&c.compress(&y, &mut rng));
+        assert_eq!(y, yhat);
+    }
+}

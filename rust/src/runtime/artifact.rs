@@ -89,7 +89,11 @@ ENTRY main.5 {
 }
 "#;
 
+    // Requires the real xla/PJRT bindings; the offline stub in
+    // rust/vendor/xla returns errors from every entry point. Run with
+    // `cargo test -- --ignored` after swapping the real bindings in.
     #[test]
+    #[ignore = "needs real xla/PJRT bindings (offline stub build)"]
     fn loads_and_runs_handwritten_hlo() {
         let dir = std::env::temp_dir().join("kashinflow_artifact_test");
         std::fs::create_dir_all(&dir).unwrap();

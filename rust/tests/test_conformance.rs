@@ -1,0 +1,191 @@
+//! Cross-scheme conformance suite over the compressor registry.
+//!
+//! For every spec in `registry::all_specs()` at `R ∈ {0.5, 1.0, 3.0}` and
+//! `n ∈ {64, 100, 1024}` this asserts the wire contract of §3 / App. F:
+//!
+//! * `payload_bits ≤ budget_bits(n, R)` — the strict `⌊nR⌋` budget —
+//!   whenever the spec is feasible at `(n, R)`, and `is_feasible` is
+//!   *honest*: a fixed-rate scheme flagged infeasible really cannot fit
+//!   (its fixed payload exceeds the budget);
+//! * `bytes.len()` is exactly consistent with `total_bits()` (the bit
+//!   writer emits no slack bytes);
+//! * `decompress(compress(y))` returns a finite vector of length `n` for
+//!   adversarial input shapes (heavy-tailed, one-hot, constant, zero);
+//! * every `is_unbiased()` claim is verified empirically via
+//!   `testkit::prop::forall`.
+
+use kashinflow::linalg::rng::Rng;
+use kashinflow::linalg::vecops::{dist2, norm2};
+use kashinflow::quant::registry::{self, CompressorSpec};
+use kashinflow::quant::{budget_bits, Compressor};
+use kashinflow::testkit::prop::{forall, Cases};
+
+const RS: [f32; 3] = [0.5, 1.0, 3.0];
+const NS: [usize; 3] = [64, 100, 1024];
+
+/// Adversarial input shapes for a dimension-`n` compressor.
+fn test_vectors(n: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let heavy: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+    let gauss: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+    let mut one_hot = vec![0.0f32; n];
+    one_hot[rng.below(n)] = 42.0;
+    let constant = vec![0.7f32; n];
+    let zero = vec![0.0f32; n];
+    vec![heavy, gauss, one_hot, constant, zero]
+}
+
+#[test]
+fn registry_enumerates_at_least_12_schemes() {
+    let specs = registry::all_specs();
+    assert!(specs.len() >= 12, "zoo has only {} schemes", specs.len());
+    let mut names: Vec<String> = specs.iter().map(|s| s.name()).collect();
+    names.sort();
+    names.dedup();
+    assert_eq!(names.len(), specs.len(), "duplicate scheme names in the zoo");
+}
+
+#[test]
+fn wire_contract_holds_for_every_spec_budget_dimension() {
+    let specs = registry::all_specs();
+    let mut rng = Rng::seed_from(0xC0DE);
+    let mut feasible_somewhere = vec![false; specs.len()];
+    for (si, spec) in specs.iter().enumerate() {
+        for &n in &NS {
+            for &r in &RS {
+                if !spec.is_feasible(n, r) {
+                    continue;
+                }
+                feasible_somewhere[si] = true;
+                let c = spec.build(n, r, &mut rng);
+                assert_eq!(c.n(), n, "{}: wrong dimension", spec.name());
+                let budget = budget_bits(n, r);
+                for y in test_vectors(n, &mut rng) {
+                    let msg = c.compress(&y, &mut rng);
+                    assert_eq!(msg.n, n, "{}: message dimension", spec.name());
+                    assert!(
+                        msg.payload_bits <= budget,
+                        "{} at (n={n}, R={r}): payload {} > budget {budget}",
+                        spec.name(),
+                        msg.payload_bits
+                    );
+                    assert_eq!(
+                        msg.bytes.len(),
+                        msg.total_bits().div_ceil(8),
+                        "{} at (n={n}, R={r}): {} wire bytes vs {} total bits",
+                        spec.name(),
+                        msg.bytes.len(),
+                        msg.total_bits()
+                    );
+                    let yhat = c.decompress(&msg);
+                    assert_eq!(yhat.len(), n, "{}: decode length", spec.name());
+                    assert!(
+                        yhat.iter().all(|v| v.is_finite()),
+                        "{} at (n={n}, R={r}): non-finite decode",
+                        spec.name()
+                    );
+                }
+            }
+        }
+    }
+    for (si, spec) in specs.iter().enumerate() {
+        assert!(
+            feasible_somewhere[si],
+            "{} is never feasible on the conformance grid — dead zoo entry",
+            spec.name()
+        );
+    }
+}
+
+/// `is_feasible` must be honest for fixed-rate schemes: when it says no,
+/// the scheme's wire format genuinely cannot fit `⌊nR⌋` (its payload at
+/// the *smallest* configuration exceeds the budget). We verify by
+/// building the scheme anyway at a feasible larger budget and checking
+/// its fixed payload exceeds the refused budget.
+#[test]
+fn infeasibility_is_honest_for_fixed_rate_schemes() {
+    let mut rng = Rng::seed_from(0xFEA5);
+    for spec in [CompressorSpec::Sign, CompressorSpec::Ternary, CompressorSpec::Qsgd] {
+        for &n in &NS {
+            for &r in &RS {
+                if spec.is_feasible(n, r) {
+                    continue;
+                }
+                // Build at a budget where the scheme does fit; its wire
+                // rate is fixed, so the same payload must overflow ⌊nR⌋.
+                let c = spec.build(n, 8.0, &mut rng);
+                let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+                let payload = c.compress(&y, &mut rng).payload_bits;
+                assert!(
+                    payload > budget_bits(n, r),
+                    "{} flagged infeasible at (n={n}, R={r}) but its payload {payload} fits",
+                    spec.name()
+                );
+            }
+        }
+    }
+}
+
+/// Every `is_unbiased() == true` claim in the zoo, verified empirically:
+/// the mean of many independent dithered encodings must converge to the
+/// input. One `forall` case per unbiased spec, each with its own seeded
+/// RNG stream so failures replay in isolation.
+#[test]
+fn unbiasedness_flags_verified_empirically() {
+    let n = 64;
+    let r = 3.0;
+    let specs: Vec<CompressorSpec> = registry::all_specs()
+        .into_iter()
+        .filter(|s| s.is_feasible(n, r))
+        .collect();
+    forall(Cases::new("is_unbiased flags", specs.len()), |rng, idx| {
+        let spec = &specs[idx];
+        let c = spec.build(n, r, rng);
+        if !c.is_unbiased() {
+            // Deterministic schemes: nothing to average. (Their bias IS
+            // their quantization error, which the error bounds cover.)
+            return;
+        }
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let trials = 2500;
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..trials {
+            let yhat = c.decompress(&c.compress(&y, rng));
+            for (m, &v) in mean.iter_mut().zip(&yhat) {
+                *m += v as f64 / trials as f64;
+            }
+        }
+        let mean_f: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+        let bias = dist2(&mean_f, &y) / norm2(&y);
+        assert!(bias < 0.2, "{} claims unbiased but bias is {bias}", spec.name());
+    });
+}
+
+/// The registry must be referentially sane: the same spec built twice
+/// from the same RNG state is the same codec (deterministic schemes
+/// produce identical wire bytes).
+#[test]
+fn deterministic_schemes_reproduce_bitstreams() {
+    let n = 100;
+    let r = 3.0;
+    for spec in registry::all_specs() {
+        if !spec.is_feasible(n, r) {
+            continue;
+        }
+        let mut rng_a = Rng::seed_from(7);
+        let mut rng_b = Rng::seed_from(7);
+        let ca = spec.build(n, r, &mut rng_a);
+        let cb = spec.build(n, r, &mut rng_b);
+        let y: Vec<f32> = {
+            let mut g = Rng::seed_from(9);
+            (0..n).map(|_| g.gaussian_cubed()).collect()
+        };
+        let ma = ca.compress(&y, &mut rng_a);
+        let mb = cb.compress(&y, &mut rng_b);
+        assert_eq!(
+            ma.bytes,
+            mb.bytes,
+            "{}: same seeds must give identical wire bytes",
+            spec.name()
+        );
+    }
+}

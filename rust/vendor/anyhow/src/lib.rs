@@ -1,0 +1,135 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this in-tree path crate
+//! provides exactly the surface `kashinflow` uses: [`Error`], [`Result`],
+//! the [`Context`] extension trait on `Result`/`Option`, and the
+//! [`ensure!`]/[`anyhow!`]/[`bail!`] macros. Error messages are flat
+//! strings with the context chain prepended (`context: cause`), matching
+//! how the callers format errors with `{e:#}`.
+
+use std::fmt;
+
+/// A type-erased error: a display message plus the chained causes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` and the alternate `{:#}` both print the full chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: like the real `anyhow::Error`, this deliberately does NOT
+// implement `std::error::Error` — that is what makes the blanket
+// `From<E: std::error::Error>` impl below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`, defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an error if the condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)+)));
+        }
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::Error::msg(format!($($arg)+)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let r = std::fs::read_to_string("/definitely/not/a/file");
+        r.with_context(|| "reading config".to_string())
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let e = io_fail().unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.starts_with("reading config: "), "{s}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        let some: Option<u32> = Some(3);
+        assert_eq!(some.context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_and_question_mark() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n > 2, "need n > 2, got {n}");
+            Ok(n)
+        }
+        assert!(check(1).is_err());
+        assert_eq!(check(5).unwrap(), 5);
+    }
+}
