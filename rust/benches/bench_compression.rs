@@ -1,13 +1,17 @@
 //! Table 1 timing column: encode+decode wall-clock for every compression
 //! scheme at n = 1024 and n = 65536 (the regimes of the paper's
-//! evaluation vs. the transformer workload).
+//! evaluation vs. the transformer workload) — through both the allocating
+//! API and the allocation-free workspace (`*_into`) API, so the hot-path
+//! win is measured per scheme.
 
 use kashinflow::exp::table1::schemes;
 use kashinflow::linalg::rng::Rng;
+use kashinflow::quant::{Compressed, Compressor, Workspace};
 use kashinflow::testkit::bench::{black_box, Bencher};
 
 fn main() {
-    let mut b = Bencher::new();
+    // BENCH_SMOKE=1 → quick CI smoke settings.
+    let mut b = Bencher::from_env();
     let mut rng = Rng::seed_from(2);
     for &n in &[1024usize, 65536] {
         let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
@@ -29,6 +33,21 @@ fn main() {
             b.run(&format!("decode/{}/{}", c.name(), dim), || {
                 black_box(c.decompress(&msg));
             });
+            // Workspace variants: warm buffers, zero steady-state allocs.
+            let mut ws = Workspace::for_compressor(c.as_ref());
+            let mut out = Compressed::empty(dim);
+            let mut dec = vec![0.0f32; dim];
+            c.compress_into(input, &mut rng, &mut ws, &mut out);
+            b.run(&format!("encode-into/{}/{}", c.name(), dim), || {
+                c.compress_into(input, &mut rng, &mut ws, &mut out);
+                black_box(out.payload_bits);
+            });
+            c.decompress_into(&out, &mut ws, &mut dec);
+            b.run(&format!("decode-into/{}/{}", c.name(), dim), || {
+                c.decompress_into(&out, &mut ws, &mut dec);
+                black_box(dec[0]);
+            });
         }
     }
+    b.save_json("BENCH_compression.json");
 }

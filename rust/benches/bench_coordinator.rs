@@ -30,8 +30,12 @@ fn bench_rounds(b: &mut Bencher, scheme: SchemeKind, n: usize, workers: usize, r
             .into_iter()
             .enumerate()
             .map(|(i, obj)| {
-                Box::new(DatasetGradSource { obj, batch: 5, rng: Rng::seed_from(i as u64) })
-                    as Box<dyn kashinflow::coordinator::worker::GradSource>
+                Box::new(DatasetGradSource {
+                    obj,
+                    batch: 5,
+                    rng: Rng::seed_from(i as u64),
+                    idx: Vec::new(),
+                }) as Box<dyn kashinflow::coordinator::worker::GradSource>
             })
             .collect();
         let metrics = run_distributed(&cfg, vec![0.0; n], sources, comps, |_| 0.0);
@@ -40,7 +44,8 @@ fn bench_rounds(b: &mut Bencher, scheme: SchemeKind, n: usize, workers: usize, r
 }
 
 fn main() {
-    let mut b = Bencher::new();
+    // BENCH_SMOKE=1 → quick CI smoke settings.
+    let mut b = Bencher::from_env();
     bench_rounds(&mut b, SchemeKind::Ndsc, 30, 4, 50);
     // m = 8: the acceptance case for the scoped-thread fan-out — below
     // server::PARALLEL_DECODE_MIN_DIM the decode path is byte-identical to
@@ -50,6 +55,11 @@ fn main() {
     bench_rounds(&mut b, SchemeKind::Ndsc, 30, 10, 50);
     bench_rounds(&mut b, SchemeKind::NdscDithered, 1024, 4, 20);
     bench_rounds(&mut b, SchemeKind::Naive, 1024, 4, 20);
+    // The allocation-free hot-path acceptance rows: per-round time at
+    // n = 4096 (sequential decode) and n = 16384 (scoped-thread decode),
+    // both running entirely on recycled buffers after round 0.
+    bench_rounds(&mut b, SchemeKind::Ndsc, 4096, 4, 10);
     bench_rounds(&mut b, SchemeKind::NdscDithered, 16384, 8, 5);
     bench_rounds(&mut b, SchemeKind::Naive, 16384, 8, 5);
+    b.save_json("BENCH_hotpath.json");
 }

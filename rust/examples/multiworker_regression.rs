@@ -35,6 +35,7 @@ fn main() {
                 obj,
                 batch: cfg.batch,
                 rng: Rng::seed_from(cfg.seed ^ (11 + i as u64)),
+                idx: Vec::new(),
             }) as Box<dyn kashinflow::coordinator::worker::GradSource>
         })
         .collect();

@@ -1,14 +1,23 @@
-//! Byte-accounted, budget-enforced channels.
+//! Byte-accounted, budget-enforced channels and buffer recycling.
 //!
-//! [`AccountedSender`] wraps an `mpsc::Sender` and (a) tallies payload and
-//! overhead bits of everything sent, (b) **rejects** any message whose
+//! [`AccountedSender`] wraps an `mpsc::SyncSender` and (a) tallies payload
+//! and overhead bits of everything sent, (b) **rejects** any message whose
 //! payload exceeds the per-message budget — making the paper's "strict
 //! budget of R bits per dimension" an enforced runtime invariant rather
-//! than a convention.
+//! than a convention. The *bounded* (`sync_channel`) flavour matters for
+//! the allocation-free hot path: its ring buffer is allocated once at
+//! channel creation, so steady-state sends touch no heap (the unbounded
+//! flavour allocates a fresh block every few dozen messages).
+//!
+//! [`ChannelPools`] closes the loop on message *payloads*: broadcast
+//! iterate buffers and uplink wire-byte buffers ping-pong between server
+//! and workers instead of being reallocated every round, which is what
+//! makes a steady-state coordinator round fully allocation-free
+//! (`rust/tests/test_alloc.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{SendError, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{SendError, SyncSender};
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::protocol::WireSize;
 
@@ -38,7 +47,7 @@ pub enum ChannelError<T> {
 
 /// Budget-enforcing, accounting sender. Cloneable; clones share counters.
 pub struct AccountedSender<T: WireSize> {
-    tx: Sender<T>,
+    tx: SyncSender<T>,
     counter: Arc<TrafficCounter>,
     /// Max payload bits per message (None = unconstrained, e.g. downlink).
     budget_bits: Option<usize>,
@@ -55,7 +64,7 @@ impl<T: WireSize> Clone for AccountedSender<T> {
 }
 
 impl<T: WireSize> AccountedSender<T> {
-    pub fn new(tx: Sender<T>, budget_bits: Option<usize>) -> Self {
+    pub fn new(tx: SyncSender<T>, budget_bits: Option<usize>) -> Self {
         AccountedSender { tx, counter: Arc::new(TrafficCounter::default()), budget_bits }
     }
 
@@ -90,6 +99,66 @@ impl<T: WireSize> AccountedSender<T> {
     }
 }
 
+/// A lock-protected free list of reusable buffers. `put` returns a spent
+/// buffer, `get_or` pops one (falling back to `make` only while the pool
+/// is still warming up). The backing stack is preallocated, so steady-state
+/// `get_or`/`put` pairs perform zero heap allocations.
+pub struct BufferPool<T> {
+    stack: Mutex<Vec<T>>,
+}
+
+impl<T> BufferPool<T> {
+    pub fn with_capacity(cap: usize) -> Self {
+        BufferPool { stack: Mutex::new(Vec::with_capacity(cap)) }
+    }
+
+    /// Pop a recycled buffer, or build a fresh one with `make`.
+    pub fn get_or(&self, make: impl FnOnce() -> T) -> T {
+        self.stack.lock().unwrap().pop().unwrap_or_else(make)
+    }
+
+    /// Return a spent buffer for reuse.
+    pub fn put(&self, buf: T) {
+        self.stack.lock().unwrap().push(buf);
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn len(&self) -> usize {
+        self.stack.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The coordinator's buffer-recycling loops (one instance per run, shared
+/// via `Arc` between the server and all workers):
+///
+/// * `iterates` — broadcast iterate buffers: the server fills one per
+///   worker per round; the worker returns it right after evaluating its
+///   gradient (and *before* uploading, so by the time the server has
+///   collected a round's uploads the pool holds `m` buffers again).
+/// * `bytes` — uplink wire-byte buffers: the worker pops a spent buffer to
+///   encode into; the server returns it after decoding.
+///
+/// Round 0 populates both pools (`m` allocations each); every later round
+/// recycles. All buffers in a run share one `(n, R)` shape, so any worker
+/// can reuse any returned buffer.
+pub struct ChannelPools {
+    pub iterates: BufferPool<Vec<f32>>,
+    pub bytes: BufferPool<Vec<u8>>,
+}
+
+impl ChannelPools {
+    pub fn new(workers: usize) -> Self {
+        ChannelPools {
+            iterates: BufferPool::with_capacity(2 * workers.max(1)),
+            bytes: BufferPool::with_capacity(2 * workers.max(1)),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,8 +181,23 @@ mod tests {
     }
 
     #[test]
+    fn buffer_pool_recycles_capacity() {
+        let pool: BufferPool<Vec<u8>> = BufferPool::with_capacity(4);
+        assert!(pool.is_empty());
+        let mut b = pool.get_or(|| Vec::with_capacity(64));
+        let ptr_cap = b.capacity();
+        b.extend_from_slice(&[1, 2, 3]);
+        pool.put(b);
+        assert_eq!(pool.len(), 1);
+        let b2 = pool.get_or(Vec::new);
+        // same buffer comes back, capacity intact
+        assert_eq!(b2.capacity(), ptr_cap);
+        assert_eq!(b2, vec![1, 2, 3]);
+    }
+
+    #[test]
     fn within_budget_passes_and_counts() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(8);
         let s = AccountedSender::new(tx, Some(100));
         s.send(upload(80)).unwrap();
         s.send(upload(100)).unwrap();
@@ -126,7 +210,7 @@ mod tests {
 
     #[test]
     fn over_budget_rejected() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(8);
         let s = AccountedSender::new(tx, Some(100));
         match s.send(upload(101)) {
             Err(ChannelError::OverBudget { payload_bits, budget_bits }) => {
@@ -141,7 +225,7 @@ mod tests {
 
     #[test]
     fn clones_share_counters() {
-        let (tx, _rx) = mpsc::channel();
+        let (tx, _rx) = mpsc::sync_channel(8);
         let s = AccountedSender::new(tx, None);
         let s2 = s.clone();
         s.send(upload(50)).unwrap();
@@ -151,7 +235,7 @@ mod tests {
 
     #[test]
     fn disconnected_receiver_reported() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(8);
         drop(rx);
         let s = AccountedSender::new(tx, None);
         assert!(matches!(s.send(upload(1)), Err(ChannelError::Disconnected(_))));

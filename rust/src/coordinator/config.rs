@@ -129,6 +129,12 @@ pub struct RunConfig {
     /// Projection-ball radius (`inf` = unconstrained).
     pub radius: f32,
     pub seed: u64,
+    /// Dimension threshold above which the server decodes uploads on
+    /// scoped threads (default
+    /// [`crate::coordinator::server::PARALLEL_DECODE_MIN_DIM`]). The
+    /// decode result is bit-identical either way (accumulation is in
+    /// worker-id order); tests override this to force both paths.
+    pub parallel_decode_min_dim: usize,
 }
 
 impl Default for RunConfig {
@@ -145,6 +151,7 @@ impl Default for RunConfig {
             batch: 5,
             radius: f32::INFINITY,
             seed: 0,
+            parallel_decode_min_dim: crate::coordinator::server::PARALLEL_DECODE_MIN_DIM,
         }
     }
 }

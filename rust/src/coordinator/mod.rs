@@ -14,6 +14,13 @@
 //! source is pluggable ([`worker::GradSource`]) so the same loop drives
 //! pure-Rust objectives and PJRT-compiled transformer workers
 //! (`examples/train_transformer.rs`).
+//!
+//! **Steady-state rounds are allocation-free**: channels are bounded
+//! (ring buffers allocated at setup), broadcast iterates and uplink wire
+//! bytes recycle through [`channel::ChannelPools`], every worker owns a
+//! warm [`crate::quant::Workspace`], and the server decodes into
+//! per-worker slots — `rust/tests/test_alloc.rs` asserts the round loop
+//! performs zero heap allocations after warm-up.
 
 pub mod channel;
 pub mod config;
@@ -28,7 +35,7 @@ use std::sync::Arc;
 use crate::linalg::rng::Rng;
 use crate::quant::Compressor;
 
-use channel::AccountedSender;
+use channel::{AccountedSender, ChannelPools};
 use config::RunConfig;
 use metrics::RunMetrics;
 use protocol::{Broadcast, Upload};
@@ -62,24 +69,47 @@ pub fn run_distributed(
         assert_eq!(c.n(), cfg.n, "compressor dim mismatch");
     }
 
-    // Uplink: workers -> server, budget-enforced + byte-accounted.
-    let (up_tx, up_rx) = mpsc::channel::<Upload>();
-    let budget_bits = crate::quant::budget_bits(cfg.n, cfg.r);
-    let uplink = AccountedSender::new(up_tx, Some(budget_bits));
+    // Uplink: workers -> server, budget-enforced + byte-accounted. The
+    // channel is *bounded* (ring buffer allocated once): workers send at
+    // most one upload per round, so 2m slots never fill, and steady-state
+    // sends touch no heap. The fp32 passthrough is the documented
+    // *unconstrained* reference (exempt from `RunConfig::validate`'s
+    // feasibility check for the same reason), so its uploads are not
+    // budget-gated — every other scheme is held to ⌊n·R⌋ exactly.
+    let (up_tx, up_rx) = mpsc::sync_channel::<Upload>(2 * m.max(1));
+    let budget = if cfg.compressor_spec() == crate::quant::registry::CompressorSpec::Fp32 {
+        None
+    } else {
+        Some(crate::quant::budget_bits(cfg.n, cfg.r))
+    };
+    let uplink = AccountedSender::new(up_tx, budget);
+    // Buffer recycling (broadcast iterates + uplink wire bytes) shared by
+    // the server and every worker thread.
+    let pools = Arc::new(ChannelPools::new(m));
     let mut root_rng = Rng::seed_from(cfg.seed ^ 0xD15C0);
 
     std::thread::scope(|scope| {
-        // Downlinks: server -> each worker (broadcast is m sends).
+        // Downlinks: server -> each worker (broadcast is m sends; at most
+        // one broadcast is in flight per worker, so 2 slots suffice).
         let mut down_txs = Vec::with_capacity(m);
         for (i, (mut source, comp)) in
             sources.into_iter().zip(compressors.iter().cloned()).enumerate()
         {
-            let (down_tx, down_rx) = mpsc::channel::<Broadcast>();
+            let (down_tx, down_rx) = mpsc::sync_channel::<Broadcast>(2);
             down_txs.push(down_tx);
             let uplink = uplink.clone();
             let mut wrng = root_rng.fork(i as u64);
+            let wpools = pools.clone();
             scope.spawn(move || {
-                worker::worker_loop(i, &mut *source, comp.as_ref(), down_rx, uplink, &mut wrng);
+                worker::worker_loop(
+                    i,
+                    &mut *source,
+                    comp.as_ref(),
+                    down_rx,
+                    uplink,
+                    &wpools,
+                    &mut wrng,
+                );
             });
         }
 
@@ -88,7 +118,8 @@ pub fn run_distributed(
         let traffic = uplink.counter();
         drop(uplink);
 
-        let metrics = server::server_loop(cfg, x0, &down_txs, &up_rx, &compressors, traffic, eval);
+        let metrics =
+            server::server_loop(cfg, x0, &down_txs, &up_rx, &compressors, &pools, traffic, eval);
 
         // Downlink senders drop here => workers see a closed channel and
         // exit; the scope joins them (propagating any worker panic).

@@ -4,6 +4,12 @@
 //! accounting uses the *serialized* sizes ([`WireSize`]) so the metrics
 //! reflect what a network deployment would move. The uplink payload is a
 //! [`crate::quant::Compressed`] — already bit-exact — plus a small header.
+//!
+//! Message buffers (the broadcast's `iterate`, the upload's `msg.bytes`)
+//! are owned `Vec`s so they can ping-pong through
+//! [`crate::coordinator::channel::ChannelPools`] instead of being
+//! reallocated per round; recycling is a transport-level concern and does
+//! not change the wire sizes reported here.
 
 use crate::quant::Compressed;
 

@@ -1,70 +1,93 @@
 //! Parameter-server loop: broadcast → collect → decode → consensus →
 //! step → project (Algorithm 3's server side).
+//!
+//! The round loop itself is allocation-free in steady state: decode
+//! scratch lives in per-worker [`DecodeSlot`]s, uploads collect into a
+//! reused vector, and broadcast/wire buffers recycle through the run's
+//! [`ChannelPools`](crate::coordinator::channel::ChannelPools) —
+//! `rust/tests/test_alloc.rs` proves this on the sequential decode path
+//! (`n <` the threshold). Above the threshold the decode deliberately
+//! spends `m` scoped-thread spawns per round to parallelize the
+//! `O(N log N)` inverse transforms — stack setup is the price of the
+//! fan-out, while the decoded data still lands in the same warm,
+//! recycled buffers. It is also
+//! *seed-deterministic*: uploads are sorted by worker id before decoding
+//! and accumulated in that order, so the consensus iterates are identical
+//! regardless of upload arrival order and of whether the decode ran
+//! sequentially or on scoped threads.
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::channel::TrafficCounter;
+use crate::coordinator::channel::{ChannelPools, TrafficCounter};
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::metrics::{RoundMetrics, RunMetrics};
 use crate::coordinator::protocol::{Broadcast, Upload};
 use crate::opt::projection::Domain;
-use crate::quant::Compressor;
+use crate::quant::{Compressor, Workspace};
 
-/// Dimension at which the server fans the per-round decode out across
-/// scoped threads. Below this, a decode is a few microseconds of work and
-/// a thread spawn would cost more than it saves; above it (the (N)DSC
-/// decode is an `O(N log N)` FWHT plus an `O(N)` inverse transform, and
-/// the transformer workload has `n ~ 10^5`) the `m`-way fan-out is a
-/// near-linear speedup of the consensus step.
+/// Default dimension at which the server fans the per-round decode out
+/// across scoped threads. Below this, a decode is a few microseconds of
+/// work and a thread spawn would cost more than it saves; above it (the
+/// (N)DSC decode is an `O(N log N)` FWHT plus an `O(N)` inverse transform,
+/// and the transformer workload has `n ~ 10^5`) the `m`-way fan-out is a
+/// near-linear speedup of the consensus step. Override per run via
+/// [`RunConfig::parallel_decode_min_dim`] (tests force both paths with it).
 pub const PARALLEL_DECODE_MIN_DIM: usize = 8192;
 
+/// Per-worker decode scratch: a codec workspace plus the decoded-output
+/// buffer, allocated once per run.
+struct DecodeSlot {
+    ws: Workspace,
+    q: Vec<f32>,
+}
+
 /// Decode the round's uploads into the consensus average. One scoped
-/// thread per upload when `n` is large enough to amortize the spawns;
-/// worker order of accumulation is fixed either way, so the result is
-/// bit-identical to the sequential path.
+/// thread per upload when `n` is large enough to amortize the spawns.
+/// Uploads are first sorted by worker id and the decoded estimates are
+/// accumulated in that order, so the result is bit-identical between the
+/// sequential and the threaded path *and* across runs (upload arrival
+/// order is scheduler-dependent; worker-id order is not).
 fn decode_round(
     consensus: &mut [f32],
-    ups: &[Upload],
-    compressors: &[std::sync::Arc<dyn Compressor>],
-    n: usize,
+    ups: &mut [Upload],
+    compressors: &[Arc<dyn Compressor>],
+    slots: &mut [DecodeSlot],
+    parallel_min_dim: usize,
 ) {
     let m = ups.len();
-    if m > 1 && n >= PARALLEL_DECODE_MIN_DIM {
+    let n = consensus.len();
+    ups.sort_unstable_by_key(|up| up.worker);
+    if m > 1 && n >= parallel_min_dim {
         std::thread::scope(|s| {
-            let handles: Vec<_> = ups
-                .iter()
-                .map(|up| {
-                    let comp = &compressors[up.worker];
-                    s.spawn(move || comp.decompress(&up.msg))
-                })
-                .collect();
-            for h in handles {
-                let q = h.join().expect("decode thread panicked");
-                for (c, &qi) in consensus.iter_mut().zip(&q) {
-                    *c += qi / m as f32;
-                }
+            for (up, slot) in ups.iter().zip(slots.iter_mut()) {
+                let comp = &compressors[up.worker];
+                s.spawn(move || comp.decompress_into(&up.msg, &mut slot.ws, &mut slot.q));
             }
         });
     } else {
-        for up in ups {
-            let q = compressors[up.worker].decompress(&up.msg);
-            for (c, &qi) in consensus.iter_mut().zip(&q) {
-                *c += qi / m as f32;
-            }
+        for (up, slot) in ups.iter().zip(slots.iter_mut()) {
+            compressors[up.worker].decompress_into(&up.msg, &mut slot.ws, &mut slot.q);
+        }
+    }
+    for slot in slots.iter() {
+        for (c, &qi) in consensus.iter_mut().zip(&slot.q) {
+            *c += qi / m as f32;
         }
     }
 }
 
 /// Server loop. `eval` computes the global objective value of an iterate
 /// (for metrics; pass a cheap proxy for expensive models).
+#[allow(clippy::too_many_arguments)]
 pub fn server_loop(
     cfg: &RunConfig,
     x0: Vec<f32>,
-    downlinks: &[Sender<Broadcast>],
+    downlinks: &[SyncSender<Broadcast>],
     uplink: &Receiver<Upload>,
     compressors: &[Arc<dyn Compressor>],
+    pools: &ChannelPools,
     traffic: Arc<TrafficCounter>,
     mut eval: impl FnMut(&[f32]) -> f32,
 ) -> RunMetrics {
@@ -79,31 +102,49 @@ pub fn server_loop(
     let mut x = x0;
     domain.project(&mut x);
     let mut consensus = vec![0.0f32; n];
-    let mut metrics = RunMetrics::default();
+    let mut metrics =
+        RunMetrics { rounds: Vec::with_capacity(cfg.rounds), ..Default::default() };
+    // Per-run preallocation: upload collection vector and per-worker
+    // decode slots. Nothing below this line allocates in steady state.
+    let mut ups: Vec<Upload> = Vec::with_capacity(m);
+    let mut slots: Vec<DecodeSlot> = compressors
+        .iter()
+        .map(|c| DecodeSlot { ws: Workspace::for_compressor(c.as_ref()), q: vec![0.0f32; n] })
+        .collect();
 
     for round in 0..cfg.rounds as u64 {
         let t0 = Instant::now();
-        // Broadcast the iterate.
+        // Broadcast the iterate: one recycled buffer per worker (fresh
+        // only during warm-up; workers return them before uploading).
         for tx in downlinks {
+            let mut it = pools.iterates.get_or(|| Vec::with_capacity(n));
+            it.clear();
+            it.extend_from_slice(&x);
             // A dead worker is fatal: the consensus average would silently
             // change semantics, so surface it.
-            tx.send(Broadcast { round, iterate: x.clone() }).expect("worker hung up");
+            tx.send(Broadcast { round, iterate: it }).expect("worker hung up");
         }
         // Collect exactly m uploads for this round (workers answer every
         // broadcast exactly once; rounds cannot interleave), then decode
         // them — in parallel when the dimension warrants it.
         consensus.fill(0.0);
         let mut round_bits = 0usize;
-        let mut local_sum = 0.0f64;
-        let mut ups: Vec<Upload> = Vec::with_capacity(m);
+        ups.clear();
         for _ in 0..m {
             let up = uplink.recv().expect("all workers disconnected");
             assert_eq!(up.round, round, "round skew: got {} want {round}", up.round);
             round_bits += up.msg.payload_bits;
-            local_sum += up.local_value as f64;
             ups.push(up);
         }
-        decode_round(&mut consensus, &ups, compressors, n);
+        decode_round(&mut consensus, &mut ups, compressors, &mut slots, cfg.parallel_decode_min_dim);
+        // `ups` is worker-id-sorted after decode_round: sum the local
+        // values in that (deterministic) order, then recycle the spent
+        // wire buffers for the workers' next round.
+        let mut local_sum = 0.0f64;
+        for up in ups.iter_mut() {
+            local_sum += up.local_value as f64;
+            pools.bytes.put(std::mem::take(&mut up.msg.bytes));
+        }
         // Step + project.
         for (xi, &ci) in x.iter_mut().zip(&consensus) {
             *xi -= cfg.step * ci;
@@ -157,8 +198,12 @@ mod tests {
             .into_iter()
             .enumerate()
             .map(|(i, obj)| {
-                Box::new(DatasetGradSource { obj, batch: 0, rng: Rng::seed_from(100 + i as u64) })
-                    as Box<dyn crate::coordinator::worker::GradSource>
+                Box::new(DatasetGradSource {
+                    obj,
+                    batch: 0,
+                    rng: Rng::seed_from(100 + i as u64),
+                    idx: Vec::new(),
+                }) as Box<dyn crate::coordinator::worker::GradSource>
             })
             .collect();
         let metrics = run_distributed(&cfg, vec![0.0; 16], sources, comps, |x| {

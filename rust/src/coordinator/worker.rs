@@ -1,12 +1,17 @@
 //! Worker loop: receive the broadcast iterate, evaluate the local
 //! (sub)gradient, encode under the bit budget, upload.
+//!
+//! The loop owns a [`Workspace`] and recycles message buffers through the
+//! run's [`ChannelPools`], so a steady-state round performs zero heap
+//! allocations: the gradient buffer, the codec scratch and the wire bytes
+//! are all reused round-over-round.
 
 use std::sync::mpsc::Receiver;
 
-use crate::coordinator::channel::{AccountedSender, ChannelError};
+use crate::coordinator::channel::{AccountedSender, ChannelError, ChannelPools};
 use crate::coordinator::protocol::{Broadcast, Upload};
 use crate::linalg::rng::Rng;
-use crate::quant::Compressor;
+use crate::quant::{Compressed, Compressor, Workspace};
 
 /// A worker's private gradient source. Implementations: pure-Rust dataset
 /// shards ([`DatasetGradSource`]) and PJRT-compiled models (the transformer
@@ -24,6 +29,9 @@ pub struct DatasetGradSource {
     /// 0 = full local gradient.
     pub batch: usize,
     pub rng: Rng,
+    /// Reused minibatch index buffer (allocation-free steady state);
+    /// start with `Vec::new()`.
+    pub idx: Vec<usize>,
 }
 
 impl GradSource for DatasetGradSource {
@@ -35,27 +43,43 @@ impl GradSource for DatasetGradSource {
         if self.batch == 0 || self.batch >= self.obj.m {
             self.obj.gradient(x, out);
         } else {
-            let batch = self.rng.sample_indices(self.obj.m, self.batch);
-            self.obj.minibatch_gradient(x, Some(&batch), out);
+            self.rng.sample_indices_into(self.obj.m, self.batch, &mut self.idx);
+            self.obj.minibatch_gradient(x, Some(&self.idx), out);
         }
         self.obj.value(x)
     }
 }
 
 /// The worker thread body: loops until the downlink closes.
+///
+/// Buffer recycling protocol: the broadcast's iterate buffer is returned to
+/// `pools.iterates` as soon as the gradient is evaluated — *before* the
+/// upload is sent — so the server is guaranteed to find `m` parked iterate
+/// buffers once it has collected a round's `m` uploads. The wire-byte
+/// buffer comes from `pools.bytes` (parked there by the server after the
+/// previous round's decode).
 pub fn worker_loop(
     id: usize,
     source: &mut dyn GradSource,
     compressor: &dyn Compressor,
     downlink: Receiver<Broadcast>,
     uplink: AccountedSender<Upload>,
+    pools: &ChannelPools,
     rng: &mut Rng,
 ) {
     let n = source.dim();
     let mut g = vec![0.0f32; n];
+    let mut ws = Workspace::for_compressor(compressor);
     while let Ok(bcast) = downlink.recv() {
         let local_value = source.grad(&bcast.iterate, &mut g);
-        let msg = compressor.compress(&g, rng);
+        pools.iterates.put(bcast.iterate);
+        let mut msg = Compressed {
+            n,
+            bytes: pools.bytes.get_or(Vec::new),
+            payload_bits: 0,
+            side_bits: 0,
+        };
+        compressor.compress_into(&g, rng, &mut ws, &mut msg);
         match uplink.send(Upload { round: bcast.round, worker: id, msg, local_value }) {
             Ok(()) => {}
             Err(ChannelError::OverBudget { payload_bits, budget_bits }) => {
@@ -82,14 +106,16 @@ mod tests {
     fn worker_responds_to_each_broadcast() {
         let mut rng = Rng::seed_from(1);
         let (obj, _) = planted_regression(20, 8, Tail::Gaussian, Tail::Gaussian, 0.0, &mut rng);
-        let mut source = DatasetGradSource { obj, batch: 0, rng: Rng::seed_from(2) };
+        let mut source =
+            DatasetGradSource { obj, batch: 0, rng: Rng::seed_from(2), idx: Vec::new() };
         let comp = Ndsc::hadamard(8, 2.0, &mut rng);
-        let (down_tx, down_rx) = mpsc::channel();
-        let (up_tx, up_rx) = mpsc::channel();
+        let (down_tx, down_rx) = mpsc::sync_channel(4);
+        let (up_tx, up_rx) = mpsc::sync_channel(4);
         let uplink = AccountedSender::new(up_tx, Some(crate::quant::budget_bits(8, 2.0)));
         let mut wrng = Rng::seed_from(3);
         let handle = std::thread::spawn(move || {
-            worker_loop(7, &mut source, &comp, down_rx, uplink, &mut wrng);
+            let pools = ChannelPools::new(1);
+            worker_loop(7, &mut source, &comp, down_rx, uplink, &pools, &mut wrng);
         });
         for round in 0..5u64 {
             down_tx.send(Broadcast { round, iterate: vec![0.1; 8] }).unwrap();
@@ -107,14 +133,20 @@ mod tests {
     fn dataset_source_full_vs_minibatch() {
         let mut rng = Rng::seed_from(4);
         let (obj, _) = planted_regression(30, 6, Tail::Gaussian, Tail::Gaussian, 0.0, &mut rng);
-        let mut full = DatasetGradSource { obj: obj.clone(), batch: 0, rng: Rng::seed_from(5) };
+        let mut full = DatasetGradSource {
+            obj: obj.clone(),
+            batch: 0,
+            rng: Rng::seed_from(5),
+            idx: Vec::new(),
+        };
         let x = vec![0.2f32; 6];
         let mut g1 = vec![0.0f32; 6];
         full.grad(&x, &mut g1);
         let mut want = vec![0.0f32; 6];
         obj.gradient(&x, &mut want);
         assert_eq!(g1, want);
-        let mut mini = DatasetGradSource { obj, batch: 10, rng: Rng::seed_from(6) };
+        let mut mini =
+            DatasetGradSource { obj, batch: 10, rng: Rng::seed_from(6), idx: Vec::new() };
         let mut g2 = vec![0.0f32; 6];
         mini.grad(&x, &mut g2);
         assert!(g2.iter().all(|v| v.is_finite()));

@@ -100,14 +100,29 @@ impl KashinSolver {
 
     /// Compute a Kashin (democratic) embedding of `y` w.r.t. `frame`.
     pub fn embed(&mut self, frame: &dyn Frame, y: &[f32]) -> KashinEmbedding {
+        let mut x = vec![0.0f32; frame.big_n()];
+        let stats = self.embed_into(frame, y, &mut x);
+        KashinEmbedding {
+            x,
+            pre_correction_residual: stats.pre_correction_residual,
+            iters: stats.iters,
+        }
+    }
+
+    /// Allocation-free form of [`KashinSolver::embed`]: writes the
+    /// representation into the caller's `x` (`len == N`, fully
+    /// overwritten) and scratches only in the solver's warm buffers.
+    /// Same iteration, same floats as the allocating form.
+    pub fn embed_into(&mut self, frame: &dyn Frame, y: &[f32], x: &mut [f32]) -> KashinStats {
         let (n, big_n) = (frame.n(), frame.big_n());
         assert_eq!(y.len(), n);
+        assert_eq!(x.len(), big_n);
         let p = self.params;
         self.scratch_a.resize(big_n, 0.0);
         self.scratch_b.resize(n, 0.0);
         self.scratch_sy.resize(n, 0.0);
 
-        let mut x = vec![0.0f32; big_n];
+        x.fill(0.0);
         let b = &mut self.scratch_b;
         b.copy_from_slice(y);
         let mut level_scale = 1.0f32;
@@ -126,7 +141,9 @@ impl KashinSolver {
                 for (xi, &ai) in x.iter_mut().zip(self.scratch_a.iter()) {
                     *xi += ai;
                 }
-                frame.apply(&self.scratch_a, &mut self.scratch_sy);
+                // scratch_a is dead until the next adjoint refills it, so
+                // the transform may destroy it (no per-iteration allocs).
+                frame.apply_inplace(&mut self.scratch_a, &mut self.scratch_sy);
                 for (bi, &si) in b.iter_mut().zip(self.scratch_sy.iter()) {
                     *bi -= si;
                 }
@@ -148,8 +165,17 @@ impl KashinSolver {
         for (xi, &ai) in x.iter_mut().zip(self.scratch_a.iter()) {
             *xi += ai;
         }
-        KashinEmbedding { x, pre_correction_residual, iters: iters_done }
+        KashinStats { pre_correction_residual, iters: iters_done }
     }
+}
+
+/// Summary of one [`KashinSolver::embed_into`] run.
+#[derive(Clone, Copy, Debug)]
+pub struct KashinStats {
+    /// Residual `‖y − Sx‖₂` *before* the final exact correction.
+    pub pre_correction_residual: f32,
+    /// Rounds actually executed.
+    pub iters: usize,
 }
 
 /// Measure the *empirical* upper Kashin constant `K̂_u` of a frame:

@@ -33,6 +33,13 @@ pub trait Frame: Send + Sync {
     /// `out = S·x` — the decoder's inverse transform. `x.len() == N`,
     /// `out.len() == n`.
     fn apply(&self, x: &[f32], out: &mut [f32]);
+    /// `out = S·x`, treating `x` as destroyable scratch — the
+    /// allocation-free twin of [`Frame::apply`]. The default delegates to
+    /// `apply` (already allocation-free for dense frames); transform-based
+    /// frames override it to run their transform in place on `x`.
+    fn apply_inplace(&self, x: &mut [f32], out: &mut [f32]) {
+        self.apply(x, out);
+    }
     /// Whether `S·Sᵀ = Iₙ` exactly (Parseval / tight with A=B=1).
     fn is_parseval(&self) -> bool {
         true
@@ -41,6 +48,13 @@ pub trait Frame: Send + Sync {
     /// Parseval frames; non-Parseval frames override.
     fn pinv_embed(&self, y: &[f32], out: &mut [f32]) {
         self.adjoint(y, out);
+    }
+    /// Minimum-norm pre-image with caller-provided scratch, so
+    /// non-Parseval frames stay allocation-free. The Parseval default
+    /// (`Sᵀy`) needs no scratch.
+    fn pinv_embed_into(&self, y: &[f32], out: &mut [f32], tmp: &mut Vec<f32>) {
+        let _ = tmp;
+        self.pinv_embed(y, out);
     }
 }
 
@@ -107,12 +121,18 @@ impl Frame for HadamardFrame {
 
     /// `Sx = P·D·H·x`: FWHT (into scratch), sign-flip + gather.
     fn apply(&self, x: &[f32], out: &mut [f32]) {
+        let mut t = x.to_vec();
+        self.apply_inplace(&mut t, out);
+    }
+
+    /// `Sx` with the FWHT run directly on `x` — zero allocations; this is
+    /// what the decode hot path uses every round.
+    fn apply_inplace(&self, x: &mut [f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.big_n);
         debug_assert_eq!(out.len(), self.n);
-        let mut t = x.to_vec();
-        fwht_normalized_inplace(&mut t);
+        fwht_normalized_inplace(x);
         for (o, &r) in out.iter_mut().zip(&self.rows) {
-            *o = self.signs[r] * t[r];
+            *o = self.signs[r] * x[r];
         }
     }
 }
@@ -263,9 +283,17 @@ impl Frame for SubGaussianFrame {
 
     /// `Sᵀ(SSᵀ)⁻¹y` via the cached Cholesky factor.
     fn pinv_embed(&self, y: &[f32], out: &mut [f32]) {
-        let mut z = y.to_vec();
-        cholesky_solve(&self.chol, self.n, &mut z);
-        matvec_t(&self.s, self.n, self.big_n, &z, out);
+        let mut z = Vec::new();
+        self.pinv_embed_into(y, out, &mut z);
+    }
+
+    /// Allocation-free pseudo-inverse embed: the Cholesky solve runs in
+    /// `tmp` (resized to `n`, capacity reused across calls).
+    fn pinv_embed_into(&self, y: &[f32], out: &mut [f32], tmp: &mut Vec<f32>) {
+        tmp.clear();
+        tmp.extend_from_slice(y);
+        cholesky_solve(&self.chol, self.n, tmp);
+        matvec_t(&self.s, self.n, self.big_n, tmp, out);
     }
 }
 
@@ -388,6 +416,32 @@ mod tests {
             assert_eq!(f.big_n(), next_pow2(n));
             check_parseval(&f, &mut rng, 1e-4);
         }
+    }
+
+    #[test]
+    fn apply_inplace_matches_apply() {
+        let mut rng = Rng::seed_from(11);
+        let f = HadamardFrame::new(100, &mut rng);
+        let x: Vec<f32> = (0..f.big_n()).map(|_| rng.gaussian_cubed()).collect();
+        let mut want = vec![0.0; 100];
+        f.apply(&x, &mut want);
+        let mut scratch = x.clone();
+        let mut got = vec![0.0; 100];
+        f.apply_inplace(&mut scratch, &mut got);
+        assert_eq!(got, want, "apply_inplace must be bit-identical to apply");
+    }
+
+    #[test]
+    fn pinv_embed_into_matches_allocating() {
+        let mut rng = Rng::seed_from(12);
+        let f = SubGaussianFrame::with_lambda(20, 2.0, &mut rng);
+        let y: Vec<f32> = (0..20).map(|_| rng.gaussian_f32()).collect();
+        let mut want = vec![0.0; f.big_n()];
+        f.pinv_embed(&y, &mut want);
+        let mut got = vec![0.0; f.big_n()];
+        let mut tmp = Vec::new();
+        f.pinv_embed_into(&y, &mut got, &mut tmp);
+        assert_eq!(got, want);
     }
 
     #[test]

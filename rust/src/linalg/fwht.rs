@@ -9,6 +9,11 @@
 //! This is the Rust twin of the Pallas kernel in
 //! `python/compile/kernels/hadamard.py`; both are checked against the same
 //! naive `O(N²)` oracle.
+//!
+//! Both transforms are **fully in place** — no scratch, no allocation —
+//! which is what lets `Frame::apply_inplace` and the whole compression hot
+//! path run allocation-free: the only heap the codec ever touches is the
+//! caller's reusable [`crate::quant::Workspace`].
 
 /// In-place **unnormalized** Walsh–Hadamard transform of `x`.
 ///

@@ -179,14 +179,24 @@ impl Rng {
     /// `k` distinct indices sampled uniformly without replacement from
     /// `0..n` (partial Fisher–Yates; O(n) memory, O(k) swaps).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.sample_indices_into(n, k, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Rng::sample_indices`]: fills `out` with
+    /// the `k` sampled indices, reusing its capacity (which grows to `n`
+    /// once, then never again). Draws the same RNG stream and produces the
+    /// same indices as the allocating form.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
         debug_assert!(k <= n);
-        let mut p: Vec<usize> = (0..n).collect();
+        out.clear();
+        out.extend(0..n);
         for i in 0..k {
             let j = i + self.below(n - i);
-            p.swap(i, j);
+            out.swap(i, j);
         }
-        p.truncate(k);
-        p
+        out.truncate(k);
     }
 }
 
@@ -275,6 +285,18 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), 30);
         assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn sample_indices_into_matches_allocating_with_reused_buffer() {
+        let mut a = Rng::seed_from(17);
+        let mut b = Rng::seed_from(17);
+        let mut buf = Vec::new();
+        for &(n, k) in &[(10usize, 3usize), (100, 100), (50, 1), (8, 0)] {
+            let want = a.sample_indices(n, k);
+            b.sample_indices_into(n, k, &mut buf);
+            assert_eq!(buf, want, "n={n} k={k}");
+        }
     }
 
     #[test]

@@ -107,19 +107,28 @@ pub fn matvec_t(a: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32])
 /// the Top-k sparsifier's kernel and beats the paper's
 /// `O(k + (n-k)log k)` heap bound for the regimes we run.
 pub fn top_k_indices(x: &[f32], k: usize) -> Vec<usize> {
+    let mut idx = Vec::new();
+    top_k_indices_into(x, k, &mut idx);
+    idx
+}
+
+/// Allocation-free form of [`top_k_indices`]: fills `out` with the result,
+/// reusing its capacity (grows to `x.len()` once). Same selection, same
+/// (unordered) output as the allocating form.
+pub fn top_k_indices_into(x: &[f32], k: usize, out: &mut Vec<usize>) {
     let n = x.len();
-    if k >= n {
-        return (0..n).collect();
-    }
+    out.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
-    let mut idx: Vec<usize> = (0..n).collect();
-    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+    out.extend(0..n);
+    if k >= n {
+        return;
+    }
+    out.select_nth_unstable_by(k - 1, |&a, &b| {
         x[b].abs().partial_cmp(&x[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
     });
-    idx.truncate(k);
-    idx
+    out.truncate(k);
 }
 
 #[cfg(test)]
@@ -159,6 +168,18 @@ mod tests {
         let mut aty = vec![0.0; cols];
         matvec_t(&a, rows, cols, &y, &mut aty);
         assert!((dot(&ax, &y) - dot(&x, &aty)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn top_k_into_matches_allocating_with_reused_buffer() {
+        let mut rng = Rng::seed_from(3);
+        let mut buf = Vec::new();
+        for &(n, k) in &[(40usize, 5usize), (7, 7), (9, 0), (64, 13)] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let want = top_k_indices(&x, k);
+            top_k_indices_into(&x, k, &mut buf);
+            assert_eq!(buf, want, "n={n} k={k}");
+        }
     }
 
     #[test]

@@ -232,6 +232,7 @@ fn run_train(cfg: &RunConfig) {
                 obj,
                 batch: cfg.batch,
                 rng: Rng::seed_from(cfg.seed ^ (7 + i as u64)),
+                idx: Vec::new(),
             }) as Box<dyn kashinflow::coordinator::worker::GradSource>
         })
         .collect();

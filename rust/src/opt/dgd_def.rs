@@ -14,7 +14,7 @@ use crate::linalg::rng::Rng;
 use crate::linalg::vecops::dist2;
 use crate::opt::objectives::DatasetObjective;
 use crate::opt::{IterRecord, Trace};
-use crate::quant::Compressor;
+use crate::quant::{Compressed, Compressor, Workspace};
 
 /// Options for a DGD-DEF run.
 #[derive(Clone, Copy, Debug)]
@@ -45,7 +45,13 @@ pub fn run(
     let mut e = vec![0.0f32; n]; // e_{-1} = 0
     let mut z = vec![0.0f32; n];
     let mut u = vec![0.0f32; n];
+    // Encode/decode scratch, owned by the loop: after the first iteration
+    // every round is allocation-free.
+    let mut ws = Workspace::for_compressor(compressor);
+    let mut msg = Compressed::empty(n);
+    let mut q = vec![0.0f32; n];
     let mut trace = Trace::default();
+    trace.records.reserve(opts.iters + 1);
     for _ in 0..opts.iters {
         trace.records.push(IterRecord {
             value: obj.value(&xhat),
@@ -63,13 +69,13 @@ pub fn run(
             *ui -= ei;
         }
         // v_t = E(u_t); q_t = D(v_t)
-        let msg = compressor.compress(&u, rng);
+        compressor.compress_into(&u, rng, &mut ws, &mut msg);
         trace.total_payload_bits += msg.payload_bits;
         trace.total_side_bits += msg.side_bits;
         if let Some(r) = trace.records.last_mut() {
             r.payload_bits = msg.payload_bits;
         }
-        let q = compressor.decompress(&msg);
+        compressor.decompress_into(&msg, &mut ws, &mut q);
         // e_t = q_t − u_t
         for ((ei, &qi), &ui) in e.iter_mut().zip(&q).zip(&u) {
             *ei = qi - ui;

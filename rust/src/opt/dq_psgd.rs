@@ -16,7 +16,7 @@ use crate::opt::objectives::DatasetObjective;
 use crate::opt::oracle::Oracle;
 use crate::opt::projection::Domain;
 use crate::opt::{IterRecord, Trace};
-use crate::quant::Compressor;
+use crate::quant::{Compressed, Compressor, Workspace};
 
 #[derive(Clone, Copy, Debug)]
 pub struct DqPsgdOptions {
@@ -51,15 +51,21 @@ pub fn run(
     opts.domain.project(&mut x);
     let mut avg = vec![0.0f32; n];
     let mut g = vec![0.0f32; n];
+    // Encode/decode scratch, owned by the loop: steady-state iterations
+    // are allocation-free.
+    let mut ws = Workspace::for_compressor(compressor);
+    let mut msg = Compressed::empty(n);
+    let mut q = vec![0.0f32; n];
     let mut trace = Trace::default();
+    trace.records.reserve(opts.iters);
     for t in 0..opts.iters {
         // Worker: noisy subgradient + dithered democratic encoding.
         oracle.query(&x, &mut g);
-        let msg = compressor.compress(&g, rng);
+        compressor.compress_into(&g, rng, &mut ws, &mut msg);
         trace.total_payload_bits += msg.payload_bits;
         trace.total_side_bits += msg.side_bits;
         // Server: decode, step, project.
-        let q = compressor.decompress(&msg);
+        compressor.decompress_into(&msg, &mut ws, &mut q);
         for (xi, &qi) in x.iter_mut().zip(&q) {
             *xi -= opts.step * qi;
         }

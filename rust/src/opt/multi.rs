@@ -18,7 +18,7 @@ use crate::linalg::vecops::dist2;
 use crate::opt::objectives::DatasetObjective;
 use crate::opt::projection::Domain;
 use crate::opt::{IterRecord, Trace};
-use crate::quant::Compressor;
+use crate::quant::{Compressed, Compressor, Workspace};
 
 /// A multi-worker problem: one objective shard per worker; the global
 /// objective is the average.
@@ -99,7 +99,15 @@ pub fn run(
     let mut consensus = vec![0.0f32; n];
     let mut g = vec![0.0f32; n];
     let mut worker_rngs: Vec<Rng> = (0..m).map(|i| rng.fork(i as u64)).collect();
+    // Shared encode/decode scratch: every compressor in the round has the
+    // same (n, R) shape, so one workspace + one message shell + one batch
+    // index buffer serve all m workers, allocation-free after warm-up.
+    let mut ws = Workspace::for_compressor(compressors[0].as_ref());
+    let mut msg = Compressed::empty(n);
+    let mut q = vec![0.0f32; n];
+    let mut batch_idx: Vec<usize> = Vec::new();
     let mut trace = Trace::default();
+    trace.records.reserve(opts.iters);
     for t in 0..opts.iters {
         consensus.fill(0.0);
         let mut round_bits = 0usize;
@@ -107,17 +115,17 @@ pub fn run(
             // Worker i: local (mini-batch) subgradient.
             match opts.batch {
                 Some(bsz) => {
-                    let batch = worker_rngs[i].sample_indices(shard.m, bsz.min(shard.m));
-                    shard.minibatch_gradient(&x, Some(&batch), &mut g);
+                    worker_rngs[i].sample_indices_into(shard.m, bsz.min(shard.m), &mut batch_idx);
+                    shard.minibatch_gradient(&x, Some(&batch_idx), &mut g);
                 }
                 None => shard.gradient(&x, &mut g),
             }
-            let msg = compressors[i].compress(&g, &mut worker_rngs[i]);
+            compressors[i].compress_into(&g, &mut worker_rngs[i], &mut ws, &mut msg);
             round_bits += msg.payload_bits;
             trace.total_payload_bits += msg.payload_bits;
             trace.total_side_bits += msg.side_bits;
             // Server: decode + consensus accumulate.
-            let q = compressors[i].decompress(&msg);
+            compressors[i].decompress_into(&msg, &mut ws, &mut q);
             for (ci, &qi) in consensus.iter_mut().zip(&q) {
                 *ci += qi / m as f32;
             }

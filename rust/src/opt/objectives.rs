@@ -89,38 +89,51 @@ impl DatasetObjective {
         assert_eq!(x.len(), self.n);
         assert_eq!(out.len(), self.n);
         out.fill(0.0);
-        let indices: Box<dyn Iterator<Item = usize>> = match batch {
-            Some(idx) => Box::new(idx.iter().copied()),
-            None => Box::new(0..self.m),
-        };
-        let mut count = 0usize;
-        for i in indices {
-            count += 1;
-            let row = self.row(i);
-            let z = dot(row, x);
-            let coef = match self.loss {
-                Loss::Square => z - self.b[i],
-                Loss::Hinge => {
-                    if self.b[i] * z < 1.0 {
-                        -self.b[i]
-                    } else {
-                        0.0
-                    }
+        // Two monomorphic loops instead of one boxed iterator: the gradient
+        // is the worker hot path and must not heap-allocate per call.
+        let count = match batch {
+            Some(idx) => {
+                for &i in idx {
+                    self.accumulate_row_grad(x, out, i);
                 }
-                Loss::Logistic => {
-                    let t = (self.b[i] * z) as f64;
-                    (-(self.b[i] as f64) / (1.0 + t.exp())) as f32
-                }
-            };
-            if coef != 0.0 {
-                for (o, &r) in out.iter_mut().zip(row) {
-                    *o += coef * r;
-                }
+                idx.len()
             }
-        }
+            None => {
+                for i in 0..self.m {
+                    self.accumulate_row_grad(x, out, i);
+                }
+                self.m
+            }
+        };
         let scale = 1.0 / count.max(1) as f32;
         for (o, &xi) in out.iter_mut().zip(x) {
             *o = *o * scale + self.reg * xi;
+        }
+    }
+
+    /// Accumulate sample `i`'s (sub)gradient contribution into `out`.
+    #[inline]
+    fn accumulate_row_grad(&self, x: &[f32], out: &mut [f32], i: usize) {
+        let row = self.row(i);
+        let z = dot(row, x);
+        let coef = match self.loss {
+            Loss::Square => z - self.b[i],
+            Loss::Hinge => {
+                if self.b[i] * z < 1.0 {
+                    -self.b[i]
+                } else {
+                    0.0
+                }
+            }
+            Loss::Logistic => {
+                let t = (self.b[i] * z) as f64;
+                (-(self.b[i] as f64) / (1.0 + t.exp())) as f32
+            }
+        };
+        if coef != 0.0 {
+            for (o, &r) in out.iter_mut().zip(row) {
+                *o += coef * r;
+            }
         }
     }
 

@@ -45,12 +45,14 @@ impl Oracle for ExactOracle<'_> {
     }
 }
 
-/// Random-minibatch stochastic subgradient oracle (unbiased).
+/// Random-minibatch stochastic subgradient oracle (unbiased). Queries are
+/// allocation-free: the batch index buffer is owned and reused.
 pub struct MinibatchOracle<'a> {
     pub obj: &'a DatasetObjective,
     pub batch: usize,
     rng: Rng,
     bound: f32,
+    idx: Vec<usize>,
 }
 
 impl<'a> MinibatchOracle<'a> {
@@ -64,7 +66,7 @@ impl<'a> MinibatchOracle<'a> {
         for i in 0..obj.m {
             max_row = max_row.max(norm2(&obj.a[i * obj.n..(i + 1) * obj.n]));
         }
-        MinibatchOracle { obj, batch, rng, bound: max_row }
+        MinibatchOracle { obj, batch, rng, bound: max_row, idx: Vec::new() }
     }
 
     pub fn with_bound(mut self, b: f32) -> Self {
@@ -79,8 +81,8 @@ impl Oracle for MinibatchOracle<'_> {
     }
 
     fn query(&mut self, x: &[f32], out: &mut [f32]) {
-        let batch = self.rng.sample_indices(self.obj.m, self.batch);
-        self.obj.minibatch_gradient(x, Some(&batch), out);
+        self.rng.sample_indices_into(self.obj.m, self.batch, &mut self.idx);
+        self.obj.minibatch_gradient(x, Some(&self.idx), out);
     }
 
     fn bound(&self) -> f32 {

@@ -6,6 +6,11 @@
 //! notional, every compressor serializes through [`BitWriter`] /
 //! [`BitReader`]: the coordinator's channel layer counts the exact payload
 //! bits of each message and rejects over-budget sends.
+//!
+//! Both halves operate fully in place: [`BitReader`] borrows the wire bytes
+//! and [`BitWriter::reuse`] rebuilds a writer on top of a spent byte buffer
+//! (cleared, capacity kept), which is how the hot path recycles wire
+//! buffers round-over-round without allocating.
 
 /// Append-only bit-level writer (LSB-first within each byte).
 #[derive(Default, Clone, Debug)]
@@ -22,6 +27,22 @@ impl BitWriter {
 
     pub fn with_capacity_bits(bits: usize) -> Self {
         BitWriter { buf: Vec::with_capacity(bits.div_ceil(8)), len_bits: 0 }
+    }
+
+    /// Rebuild a writer on top of a spent byte buffer: the buffer is
+    /// cleared but its capacity is kept, so writing a message of the same
+    /// size as the previous occupant allocates nothing.
+    pub fn reuse(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        BitWriter { buf, len_bits: 0 }
+    }
+
+    /// Ensure capacity for `bits` more bits without reallocating later.
+    pub fn reserve_bits(&mut self, bits: usize) {
+        let need = (self.len_bits + bits).div_ceil(8);
+        if need > self.buf.capacity() {
+            self.buf.reserve(need - self.buf.len());
+        }
     }
 
     /// Write the low `width` bits of `value` (`width ≤ 64`).
@@ -255,6 +276,26 @@ mod tests {
             let max = alloc.bits(0);
             assert!(max - min <= 1);
         });
+    }
+
+    #[test]
+    fn reuse_keeps_capacity_and_clears_content() {
+        let mut w = BitWriter::with_capacity_bits(256);
+        w.write_u64(0xDEAD_BEEF_0BAD_F00D);
+        w.write_bits(0b1011, 4);
+        let bytes = w.into_bytes();
+        let cap = bytes.capacity();
+        let want = bytes.clone();
+        // Recycle: identical writes must produce identical bytes with no
+        // buffer growth.
+        let mut w2 = BitWriter::reuse(bytes);
+        w2.reserve_bits(68);
+        w2.write_u64(0xDEAD_BEEF_0BAD_F00D);
+        w2.write_bits(0b1011, 4);
+        assert_eq!(w2.len_bits(), 68);
+        let bytes2 = w2.into_bytes();
+        assert_eq!(bytes2, want);
+        assert_eq!(bytes2.capacity(), cap, "reuse must not shrink capacity");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::embed::democratic::{KashinParams, KashinSolver};
 use crate::linalg::frames::Frame;
 use crate::linalg::rng::Rng;
 use crate::quant::dsc::EmbedKind;
-use crate::quant::{Compressed, Compressor};
+use crate::quant::{Compressed, Compressor, Workspace};
 
 /// `inner` compressor (of dimension `N`) applied to the embedding of `y`
 /// (dimension `n`).
@@ -61,29 +61,41 @@ impl Compressor for EmbeddedCompressor {
         self.inner.bits_per_dim() * self.frame.big_n() as f32 / self.frame.n() as f32
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    /// Embed into the workspace's dedicated composition buffer (`emb`,
+    /// taken out for the duration), compress in the embedding domain. The
+    /// inner scheme keeps full use of `a`/`b`/`c`/`idx`, so any codec can
+    /// be nested without buffer collisions or per-call allocation.
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.frame.n());
-        let mut x = vec![0.0f32; self.frame.big_n()];
+        let big_n = self.frame.big_n();
+        let mut x = std::mem::take(&mut ws.emb);
+        x.resize(big_n, 0.0);
         match self.embed {
-            EmbedKind::NearDemocratic => self.frame.pinv_embed(y, &mut x),
+            EmbedKind::NearDemocratic => self.frame.pinv_embed_into(y, &mut x, &mut ws.c),
             EmbedKind::Democratic => {
                 let mut solver = self.solver.lock().unwrap();
-                let emb = solver.embed(self.frame.as_ref(), y);
-                x.copy_from_slice(&emb.x);
+                solver.embed_into(self.frame.as_ref(), y, &mut x);
             }
         }
-        let mut msg = self.inner.compress(&x, rng);
-        msg.n = self.frame.n(); // budget accounting is per original dim
-        msg
+        self.inner.compress_into(&x, rng, ws, out);
+        out.n = self.frame.n(); // budget accounting is per original dim
+        ws.emb = x;
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
-        let mut inner_msg = msg.clone();
-        inner_msg.n = self.frame.big_n();
-        let x = self.inner.decompress(&inner_msg);
-        let mut y = vec![0.0f32; self.frame.n()];
-        self.frame.apply(&x, &mut y);
-        y
+    /// Inner-decode into the embedding buffer, then `S·x` in place. The
+    /// inner decoder reads its dimension from its own config, so the outer
+    /// `msg.n` (original-dim accounting) needs no fix-up copy.
+    fn decompress_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
+        let big_n = self.frame.big_n();
+        let mut x = std::mem::take(&mut ws.emb);
+        x.resize(big_n, 0.0);
+        self.inner.decompress_into(msg, ws, &mut x);
+        self.frame.apply_inplace(&mut x, out);
+        ws.emb = x;
+    }
+
+    fn workspace_floats(&self) -> usize {
+        self.frame.big_n().max(self.inner.workspace_floats())
     }
 
     fn is_unbiased(&self) -> bool {

@@ -5,6 +5,10 @@
 //! level `u_{r+1}` w.p. `(v − u_r)/(u_{r+1} − u_r)` and `u_r` otherwise, so
 //! `E[Q(v)] = v` for in-range inputs. Unbiasedness is what lets DQ-PSGD
 //! (Alg. 2) reach the minimax rate *without* error feedback (§4.2).
+//!
+//! [`DitheredUniform`] is a `Copy` value with scalar `encode`/`decode` —
+//! constructing one per coordinate (as the `compress_into` hot paths do)
+//! costs nothing and touches no heap.
 
 use crate::linalg::rng::Rng;
 

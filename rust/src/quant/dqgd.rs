@@ -19,7 +19,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::linalg::rng::Rng;
 use crate::quant::bitpack::{allocate_bits, BitReader, BitWriter};
 use crate::quant::uniform::{dequantize_index, quantize_index};
-use crate::quant::{budget_bits, Compressed, Compressor};
+use crate::quant::{budget_bits, Compressed, Compressor, Workspace};
 
 pub struct DqgdRange {
     n: usize,
@@ -55,13 +55,14 @@ impl Compressor for DqgdRange {
         self.r
     }
 
-    fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], _rng: &mut Rng, _ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let t = self.round.fetch_add(1, Ordering::Relaxed);
         let range = self.range_at(t).max(1e-30);
         let budget = budget_bits(self.n, self.r);
         let alloc = allocate_bits(budget, self.n);
-        let mut w = BitWriter::with_capacity_bits(budget + 32);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(budget + 32);
         w.write_bits(t & 0xFFFF_FFFF, 32); // round header
         let inv = 1.0 / range;
         for (i, &yi) in y.iter().enumerate() {
@@ -71,22 +72,21 @@ impl Compressor for DqgdRange {
                 w.write_bits(quantize_index(yi * inv, bits), bits);
             }
         }
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits: budget, side_bits: 32 }
+        out.n = self.n;
+        out.payload_bits = budget;
+        out.side_bits = 32;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, _ws: &mut Workspace, out: &mut [f32]) {
         let mut rd = BitReader::new(&msg.bytes);
         let t = rd.read_bits(32);
         let range = self.range_at(t).max(1e-30);
         let alloc = allocate_bits(budget_bits(self.n, self.r), self.n);
-        let mut y = vec![0.0f32; self.n];
-        for (i, yi) in y.iter_mut().enumerate() {
+        for (i, yi) in out.iter_mut().enumerate() {
             let bits = alloc.bits(i);
-            if bits > 0 {
-                *yi = range * dequantize_index(rd.read_bits(bits), bits);
-            }
+            *yi = if bits > 0 { range * dequantize_index(rd.read_bits(bits), bits) } else { 0.0 };
         }
-        y
     }
 }
 

@@ -31,7 +31,7 @@ use crate::linalg::vecops::{norm2, norm_inf};
 use crate::quant::bitpack::{allocate_bits, BitReader, BitWriter};
 use crate::quant::dither::DitheredUniform;
 use crate::quant::uniform::{dequantize_index, quantize_index};
-use crate::quant::{budget_bits, Compressed, Compressor};
+use crate::quant::{budget_bits, Compressed, Compressor, Workspace};
 
 /// Which embedding feeds the quantizer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,6 +53,13 @@ pub enum CodecMode {
 }
 
 /// The (N)DSC encoder/decoder over an arbitrary frame.
+///
+/// The codec itself holds **no per-call scratch** (the old
+/// `Mutex<Vec<f32>>` serialized the coordinator's scoped-thread fan-out);
+/// all hot-path buffers live in the caller's [`Workspace`], so `m` workers
+/// and `m` server-side decodes can run the same codec concurrently,
+/// allocation-free. The only interior state is the LV solver (Democratic
+/// embedding), which keeps its own warm buffers behind a mutex.
 pub struct SubspaceCodec {
     frame: Box<dyn Frame>,
     embed: EmbedKind,
@@ -61,9 +68,6 @@ pub struct SubspaceCodec {
     /// LV solver state (scratch buffers) — only touched when
     /// `embed == Democratic`.
     solver: Mutex<KashinSolver>,
-    /// Embedding scratch, reused across calls: the compress hot path is
-    /// allocation-free after warmup (§Perf iteration 2).
-    scratch: Mutex<Vec<f32>>,
     label: String,
 }
 
@@ -84,7 +88,6 @@ impl SubspaceCodec {
             mode,
             r,
             solver: Mutex::new(KashinSolver::new(params)),
-            scratch: Mutex::new(Vec::new()),
             label,
         }
     }
@@ -94,15 +97,15 @@ impl SubspaceCodec {
         self.frame.as_ref()
     }
 
-    /// Compute the configured embedding of `y` into `out` (`len = N`).
-    fn embed_into(&self, y: &[f32], out: &mut Vec<f32>) {
+    /// Compute the configured embedding of `y` into `out` (`len → N`),
+    /// scratching in `tmp` (pseudo-inverse solves of non-Parseval frames).
+    fn embed_into_buf(&self, y: &[f32], out: &mut Vec<f32>, tmp: &mut Vec<f32>) {
         out.resize(self.frame.big_n(), 0.0);
         match self.embed {
-            EmbedKind::NearDemocratic => self.frame.pinv_embed(y, out),
+            EmbedKind::NearDemocratic => self.frame.pinv_embed_into(y, out, tmp),
             EmbedKind::Democratic => {
                 let mut solver = self.solver.lock().unwrap();
-                let emb = solver.embed(self.frame.as_ref(), y);
-                out.copy_from_slice(&emb.x);
+                solver.embed_into(self.frame.as_ref(), y, out);
             }
         }
     }
@@ -120,19 +123,22 @@ impl SubspaceCodec {
         }
     }
 
-    fn compress_deterministic(&self, y: &[f32]) -> Compressed {
+    fn compress_deterministic_into(&self, y: &[f32], ws: &mut Workspace, out: &mut Compressed) {
         let n = self.frame.n();
         let big_n = self.frame.big_n();
-        let mut x = self.scratch.lock().unwrap();
-        self.embed_into(y, &mut x);
-        let s = norm_inf(&x);
+        {
+            let Workspace { a, c, .. } = ws;
+            self.embed_into_buf(y, a, c);
+        }
+        let s = norm_inf(&ws.a);
         let budget = budget_bits(n, self.r);
         let alloc = allocate_bits(budget, big_n);
-        let mut w = BitWriter::with_capacity_bits(budget + 32);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(budget + 32);
         w.write_f32(s);
         if s > 0.0 {
             let inv = 1.0 / s;
-            for (i, &xi) in x.iter().enumerate() {
+            for (i, &xi) in ws.a.iter().enumerate() {
                 let bits = alloc.bits(i);
                 if bits > 0 {
                     w.write_bits(quantize_index(xi * inv, bits), bits);
@@ -147,52 +153,69 @@ impl SubspaceCodec {
                 left -= take;
             }
         }
-        let payload_bits = w.len_bits() - 32;
-        Compressed { n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+        out.n = n;
+        out.payload_bits = w.len_bits() - 32;
+        out.side_bits = 32;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress_deterministic(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_deterministic_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
         let n = self.frame.n();
         let big_n = self.frame.big_n();
         let mut r = BitReader::new(&msg.bytes);
         let s = r.read_f32();
         let alloc = allocate_bits(budget_bits(n, self.r), big_n);
-        let mut x = vec![0.0f32; big_n];
+        ws.a.resize(big_n, 0.0);
         if s > 0.0 {
-            for (i, xi) in x.iter_mut().enumerate() {
+            for (i, xi) in ws.a.iter_mut().enumerate() {
                 let bits = alloc.bits(i);
-                if bits > 0 {
-                    *xi = s * dequantize_index(r.read_bits(bits), bits);
-                }
+                *xi = if bits > 0 { s * dequantize_index(r.read_bits(bits), bits) } else { 0.0 };
             }
+        } else {
+            ws.a.fill(0.0);
         }
-        let mut y = vec![0.0f32; n];
-        self.frame.apply(&x, &mut y);
-        y
+        self.frame.apply_inplace(&mut ws.a, out);
     }
 
-    fn compress_dithered(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_dithered_into(
+        &self,
+        y: &[f32],
+        rng: &mut Rng,
+        ws: &mut Workspace,
+        out: &mut Compressed,
+    ) {
         let n = self.frame.n();
         let big_n = self.frame.big_n();
         let gain = norm2(y);
         let budget = budget_bits(n, self.r);
-        let mut w = BitWriter::with_capacity_bits(budget + 96);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        // Worst case: gain + s headers (2×32) + subsample seed (64) + payload.
+        w.reserve_bits(budget + 128);
         w.write_f32(gain);
         if gain == 0.0 || budget == 0 {
-            let payload = 0;
-            return Compressed { n, bytes: w.into_bytes(), payload_bits: payload, side_bits: 32 };
+            out.n = n;
+            out.payload_bits = 0;
+            out.side_bits = 32;
+            out.bytes = w.into_bytes();
+            return;
         }
-        let shape: Vec<f32> = y.iter().map(|&v| v / gain).collect();
-        let mut x = self.scratch.lock().unwrap();
-        self.embed_into(&shape, &mut x);
-        let s = norm_inf(&x);
+        // shape = y / ‖y‖₂ in the secondary scratch, embedded into `a`.
+        ws.b.resize(n, 0.0);
+        for (bi, &yi) in ws.b.iter_mut().zip(y) {
+            *bi = yi / gain;
+        }
+        {
+            let Workspace { a, b, c, .. } = ws;
+            self.embed_into_buf(b, a, c);
+        }
+        let s = norm_inf(&ws.a);
         w.write_f32(s);
         let mut side_bits = 64;
         let payload_bits;
         if budget >= big_n {
             // High-budget: every coordinate gets >= 1 bit.
             let alloc = allocate_bits(budget, big_n);
-            for (i, &xi) in x.iter().enumerate() {
+            for (i, &xi) in ws.a.iter().enumerate() {
                 let bits = alloc.bits(i);
                 let q = DitheredUniform::symmetric(s, bits);
                 w.write_bits(q.encode(xi, rng), bits);
@@ -206,48 +229,53 @@ impl SubspaceCodec {
             w.write_u64(seed);
             side_bits += 64;
             let mut sel_rng = Rng::seed_from(seed);
-            let idx = sel_rng.sample_indices(big_n, budget);
+            sel_rng.sample_indices_into(big_n, budget, &mut ws.idx);
             let q = DitheredUniform::symmetric(s, 1);
-            for &i in &idx {
-                w.write_bits(q.encode(x[i], rng), 1);
+            for &i in &ws.idx {
+                w.write_bits(q.encode(ws.a[i], rng), 1);
             }
             payload_bits = budget;
         }
-        Compressed { n, bytes: w.into_bytes(), payload_bits, side_bits }
+        out.n = n;
+        out.payload_bits = payload_bits;
+        out.side_bits = side_bits;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress_dithered(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_dithered_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
         let n = self.frame.n();
         let big_n = self.frame.big_n();
         let budget = budget_bits(n, self.r);
         let mut r = BitReader::new(&msg.bytes);
         let gain = r.read_f32();
         if gain == 0.0 || budget == 0 {
-            return vec![0.0; n];
+            out.fill(0.0);
+            return;
         }
         let s = r.read_f32();
-        let mut x = vec![0.0f32; big_n];
+        ws.a.resize(big_n, 0.0);
         if budget >= big_n {
             let alloc = allocate_bits(budget, big_n);
-            for (i, xi) in x.iter_mut().enumerate() {
+            for (i, xi) in ws.a.iter_mut().enumerate() {
                 let bits = alloc.bits(i);
                 let q = DitheredUniform::symmetric(s, bits);
                 *xi = q.decode(r.read_bits(bits));
             }
         } else {
+            ws.a.fill(0.0);
             let seed = r.read_u64();
             let mut sel_rng = Rng::seed_from(seed);
-            let idx = sel_rng.sample_indices(big_n, budget);
+            sel_rng.sample_indices_into(big_n, budget, &mut ws.idx);
             let q = DitheredUniform::symmetric(s, 1);
             let rescale = big_n as f32 / budget as f32;
-            for &i in &idx {
-                x[i] = rescale * q.decode(r.read_bits(1));
+            for &i in &ws.idx {
+                ws.a[i] = rescale * q.decode(r.read_bits(1));
             }
         }
-        let mut shape = vec![0.0f32; n];
-        self.frame.apply(&x, &mut shape);
-        shape.iter_mut().for_each(|v| *v *= gain);
-        shape
+        self.frame.apply_inplace(&mut ws.a, out);
+        for v in out.iter_mut() {
+            *v *= gain;
+        }
     }
 }
 
@@ -264,19 +292,24 @@ impl Compressor for SubspaceCodec {
         self.r
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.frame.n());
         match self.mode {
-            CodecMode::Deterministic => self.compress_deterministic(y),
-            CodecMode::Dithered => self.compress_dithered(y, rng),
+            CodecMode::Deterministic => self.compress_deterministic_into(y, ws, out),
+            CodecMode::Dithered => self.compress_dithered_into(y, rng, ws, out),
         }
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
+        assert_eq!(out.len(), self.frame.n());
         match self.mode {
-            CodecMode::Deterministic => self.decompress_deterministic(msg),
-            CodecMode::Dithered => self.decompress_dithered(msg),
+            CodecMode::Deterministic => self.decompress_deterministic_into(msg, ws, out),
+            CodecMode::Dithered => self.decompress_dithered_into(msg, ws, out),
         }
+    }
+
+    fn workspace_floats(&self) -> usize {
+        self.frame.big_n()
     }
 
     fn is_unbiased(&self) -> bool {

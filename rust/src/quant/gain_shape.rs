@@ -14,7 +14,7 @@ use crate::linalg::vecops::norm_inf;
 use crate::quant::bitpack::{allocate_bits, BitReader, BitWriter};
 use crate::quant::dither::DitheredUniform;
 use crate::quant::uniform::{dequantize_index, quantize_index};
-use crate::quant::{budget_bits, Compressed, Compressor};
+use crate::quant::{budget_bits, Compressed, Compressor, Workspace};
 
 /// Naive uniform scalar quantizer: `Q(y) = ‖y‖∞ · Q_unif(y/‖y‖∞)`.
 pub struct NaiveUniform {
@@ -42,12 +42,13 @@ impl Compressor for NaiveUniform {
         self.r
     }
 
-    fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], _rng: &mut Rng, _ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let s = norm_inf(y);
         let budget = budget_bits(self.n, self.r);
         let alloc = allocate_bits(budget, self.n);
-        let mut w = BitWriter::with_capacity_bits(budget + 32);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(budget + 32);
         w.write_f32(s);
         if s > 0.0 {
             let inv = 1.0 / s;
@@ -58,24 +59,24 @@ impl Compressor for NaiveUniform {
                 }
             }
         }
-        let payload_bits = w.len_bits().saturating_sub(32);
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+        out.n = self.n;
+        out.payload_bits = w.len_bits().saturating_sub(32);
+        out.side_bits = 32;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, _ws: &mut Workspace, out: &mut [f32]) {
         let mut r = BitReader::new(&msg.bytes);
         let s = r.read_f32();
         let alloc = allocate_bits(budget_bits(self.n, self.r), self.n);
-        let mut y = vec![0.0f32; self.n];
         if s > 0.0 {
-            for (i, yi) in y.iter_mut().enumerate() {
+            for (i, yi) in out.iter_mut().enumerate() {
                 let bits = alloc.bits(i);
-                if bits > 0 {
-                    *yi = s * dequantize_index(r.read_bits(bits), bits);
-                }
+                *yi = if bits > 0 { s * dequantize_index(r.read_bits(bits), bits) } else { 0.0 };
             }
+        } else {
+            out.fill(0.0);
         }
-        y
     }
 }
 
@@ -108,11 +109,12 @@ impl Compressor for StandardDither {
         self.r
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let s = norm_inf(y);
         let budget = budget_bits(self.n, self.r);
-        let mut w = BitWriter::with_capacity_bits(budget + 96);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(budget + 96);
         w.write_f32(s);
         let mut side_bits = 32;
         let payload_bits;
@@ -132,42 +134,45 @@ impl Compressor for StandardDither {
             w.write_u64(seed);
             side_bits += 64;
             let mut sel = Rng::seed_from(seed);
-            let idx = sel.sample_indices(self.n, budget);
+            sel.sample_indices_into(self.n, budget, &mut ws.idx);
             let q = DitheredUniform::symmetric(s, 1);
-            for &i in &idx {
+            for &i in &ws.idx {
                 w.write_bits(q.encode(y[i], rng), 1);
             }
             payload_bits = budget;
         }
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits }
+        out.n = self.n;
+        out.payload_bits = payload_bits;
+        out.side_bits = side_bits;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
         let budget = budget_bits(self.n, self.r);
         let mut r = BitReader::new(&msg.bytes);
         let s = r.read_f32();
-        let mut y = vec![0.0f32; self.n];
         if s == 0.0 || budget == 0 {
-            return y;
+            out.fill(0.0);
+            return;
         }
         if budget >= self.n {
             let alloc = allocate_bits(budget, self.n);
-            for (i, yi) in y.iter_mut().enumerate() {
+            for (i, yi) in out.iter_mut().enumerate() {
                 let bits = alloc.bits(i);
                 let q = DitheredUniform::symmetric(s, bits);
                 *yi = q.decode(r.read_bits(bits));
             }
         } else {
+            out.fill(0.0);
             let seed = r.read_u64();
             let mut sel = Rng::seed_from(seed);
-            let idx = sel.sample_indices(self.n, budget);
+            sel.sample_indices_into(self.n, budget, &mut ws.idx);
             let q = DitheredUniform::symmetric(s, 1);
             let rescale = self.n as f32 / budget as f32;
-            for &i in &idx {
-                y[i] = rescale * q.decode(r.read_bits(1));
+            for &i in &ws.idx {
+                out[i] = rescale * q.decode(r.read_bits(1));
             }
         }
-        y
     }
 
     fn is_unbiased(&self) -> bool {

@@ -63,6 +63,13 @@ pub struct Compressed {
 }
 
 impl Compressed {
+    /// An empty message shell for [`Compressor::compress_into`] to fill.
+    /// Reusing one shell round-over-round reuses its byte buffer: after the
+    /// first fill the encode path performs no heap allocation.
+    pub fn empty(n: usize) -> Self {
+        Compressed { n, bytes: Vec::new(), payload_bits: 0, side_bits: 0 }
+    }
+
     /// Total wire bits.
     pub fn total_bits(&self) -> usize {
         self.payload_bits + self.side_bits
@@ -75,7 +82,77 @@ impl Compressed {
     }
 }
 
+/// Reusable scratch buffers for the allocation-free compression hot path.
+///
+/// A `Workspace` is a plain bag of growable buffers that
+/// [`Compressor::compress_into`] / [`Compressor::decompress_into`] resize
+/// and use freely; buffer *contents* carry no state between calls (every
+/// scheme fully overwrites what it reads), so one workspace can be shared
+/// across different codecs, dimensions and budgets — capacities only ever
+/// grow. Size one upfront with [`Workspace::for_compressor`] (or the
+/// [`Compressor::workspace_floats`] hint) and steady-state rounds perform
+/// zero heap allocations; `rust/tests/test_alloc.rs` enforces this.
+///
+/// Composed codecs ([`compose::EmbeddedCompressor`]) hold their embedding
+/// in the dedicated `emb` buffer (via `mem::take`), so the inner scheme is
+/// free to use `a`/`b`/`c`/`idx` without collision. (Nesting a composition
+/// inside a composition would contend for `emb` and fall back to
+/// per-call allocation; the registry never builds that shape.)
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Primary f32 scratch — embedding-domain vectors (length `N`).
+    pub a: Vec<f32>,
+    /// Secondary f32 scratch — shape vectors, normalized copies.
+    pub b: Vec<f32>,
+    /// Tertiary f32 scratch — pseudo-inverse solves and other temporaries.
+    pub c: Vec<f32>,
+    /// Index scratch — sparsifier supports, subsampling draws.
+    pub idx: Vec<usize>,
+    /// Composition scratch — the outer embedding of an
+    /// [`compose::EmbeddedCompressor`]; reserved for it alone.
+    pub emb: Vec<f32>,
+}
+
+impl Workspace {
+    /// An empty workspace; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A workspace pre-sized for `c`: the dominant f32 buffer (`a`, the
+    /// embedding-domain scratch every subspace path touches) is reserved
+    /// at the codec's [`Compressor::workspace_floats`] report. The other
+    /// buffers are touched by fewer schemes (or only one side of the
+    /// encode/decode pair) and grow once on their first use — eagerly
+    /// reserving all of them would waste O(N) per slot on codecs that
+    /// never look at them (e.g. every server decode slot would carry a
+    /// dead `b`).
+    pub fn for_compressor(c: &dyn Compressor) -> Self {
+        let floats = c.workspace_floats();
+        Workspace { a: Vec::with_capacity(floats), ..Default::default() }
+    }
+}
+
 /// A fixed-length vector compressor with budget `R` bits/dimension.
+///
+/// The encode/decode API comes in two equivalent forms:
+///
+/// * the **allocating** form ([`Compressor::compress`] /
+///   [`Compressor::decompress`]) returns fresh buffers — convenient for
+///   tests and one-shot calls;
+/// * the **workspace** form ([`Compressor::compress_into`] /
+///   [`Compressor::decompress_into`]) writes into caller-owned buffers and
+///   is allocation-free once those buffers are warm — what the coordinator
+///   and the optimizer loops use every round.
+///
+/// The two forms are **bit-identical**: given the same input and the same
+/// RNG state they produce exactly the same wire bytes and the same decoded
+/// vector (`rust/tests/test_conformance.rs` asserts this over the whole
+/// registry × budget × dimension matrix). Each pair has a default
+/// implementation in terms of the other, so an implementor must override
+/// **at least one form of each direction** (overriding neither recurses);
+/// every in-tree scheme overrides the workspace form and inherits the
+/// allocating wrappers.
 pub trait Compressor: Send + Sync {
     /// Human-readable name used in reports (e.g. `"NDSC-Hadamard"`).
     fn name(&self) -> String;
@@ -84,11 +161,50 @@ pub trait Compressor: Send + Sync {
     /// Configured budget `R` (bits per dimension); the compressor must emit
     /// `payload_bits ≤ ⌊n·R⌋` for every input.
     fn bits_per_dim(&self) -> f32;
+
     /// Encode. Stochastic schemes draw dithers / samples from `rng`;
     /// deterministic schemes ignore it.
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed;
+    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+        let mut ws = Workspace::new();
+        let mut out = Compressed::empty(self.n());
+        self.compress_into(y, rng, &mut ws, &mut out);
+        out
+    }
+
     /// Decode (the parameter-server side).
-    fn decompress(&self, msg: &Compressed) -> Vec<f32>;
+    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; self.n()];
+        self.decompress_into(msg, &mut ws, &mut out);
+        out
+    }
+
+    /// Encode into a reused message shell, scratching in `ws`. Overwrites
+    /// every field of `out` (recycling its byte buffer); draws from `rng`
+    /// exactly as [`Compressor::compress`] does, so the wire bytes are
+    /// bit-identical to the allocating path under the same RNG state.
+    /// Allocation-free once `ws` and `out.bytes` have warm capacity.
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
+        let _ = ws;
+        *out = self.compress(y, rng);
+    }
+
+    /// Decode into `out` (`out.len() == n`), scratching in `ws`. Fully
+    /// overwrites `out` — untouched coordinates are written as `0.0`, never
+    /// left stale. Bit-identical to [`Compressor::decompress`].
+    fn decompress_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
+        let _ = ws;
+        let y = self.decompress(msg);
+        out.copy_from_slice(&y);
+    }
+
+    /// Workspace sizing hint: the largest f32 scratch length this codec
+    /// touches (the embedding dimension `N` for subspace codecs, `n`
+    /// otherwise). `Workspace::for_compressor` uses it to preallocate.
+    fn workspace_floats(&self) -> usize {
+        self.n()
+    }
+
     /// Whether `E[decompress(compress(y))] = y` (needed by DQ-PSGD's
     /// analysis; deterministic nearest-neighbour schemes are biased).
     fn is_unbiased(&self) -> bool {
@@ -135,5 +251,44 @@ mod tests {
         assert_eq!(budget_bits(784, 0.1), 78);
         assert_eq!(budget_bits(30, 0.5), 15);
         assert_eq!(budget_bits(116, 3.0), 348);
+    }
+
+    /// A legacy-style implementor (only `compress`/`decompress` overridden)
+    /// must get working `_into` wrappers from the trait defaults.
+    #[test]
+    fn default_into_wrappers_serve_legacy_impls() {
+        struct Legacy;
+        impl Compressor for Legacy {
+            fn name(&self) -> String {
+                "legacy".into()
+            }
+            fn n(&self) -> usize {
+                4
+            }
+            fn bits_per_dim(&self) -> f32 {
+                32.0
+            }
+            fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
+                let mut w = crate::quant::bitpack::BitWriter::new();
+                for &v in y {
+                    w.write_f32(v);
+                }
+                Compressed { n: 4, bytes: w.into_bytes(), payload_bits: 128, side_bits: 0 }
+            }
+            fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+                let mut r = crate::quant::bitpack::BitReader::new(&msg.bytes);
+                (0..4).map(|_| r.read_f32()).collect()
+            }
+        }
+        let c = Legacy;
+        let mut rng = Rng::seed_from(1);
+        let y = [1.0f32, -2.0, 3.5, 0.25];
+        let mut ws = Workspace::new();
+        let mut msg = Compressed::empty(4);
+        c.compress_into(&y, &mut rng, &mut ws, &mut msg);
+        assert_eq!(msg.bytes, c.compress(&y, &mut rng).bytes);
+        let mut out = [0.0f32; 4];
+        c.decompress_into(&msg, &mut ws, &mut out);
+        assert_eq!(out.to_vec(), y.to_vec());
     }
 }

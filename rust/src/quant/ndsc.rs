@@ -10,6 +10,12 @@
 //! * **NDO** — NDSC with a random (Haar) orthonormal frame at λ = 1
 //!   (a random rotation; the paper notes NDSC generalizes random
 //!   rotations).
+//!
+//! The returned [`SubspaceCodec`] implements both the allocating and the
+//! workspace (`compress_into`/`decompress_into`) API; long-running loops
+//! should pair the codec with a
+//! [`Workspace::for_compressor`](crate::quant::Workspace::for_compressor)
+//! and reuse it — steady-state rounds then allocate nothing.
 
 use crate::linalg::frames::{Frame, HadamardFrame, OrthonormalFrame};
 use crate::linalg::rng::Rng;
@@ -84,6 +90,32 @@ mod tests {
         let e_h = crate::quant::normalized_error(&ndh, 15, &mut rng, gen);
         let e_o = crate::quant::normalized_error(&ndo, 15, &mut rng, gen);
         assert!(e_h < 3.0 * e_o && e_o < 3.0 * e_h, "NDH {e_h} vs NDO {e_o}");
+    }
+
+    #[test]
+    fn into_path_matches_allocating_path_bitwise() {
+        use crate::quant::{Compressed, Workspace};
+        // Twin codecs from identical seeds (same frame draw), one driven
+        // through the allocating API and one through the workspace API:
+        // wire bytes and decodes must agree bit-for-bit.
+        let mut rng_a = Rng::seed_from(9);
+        let mut rng_b = Rng::seed_from(9);
+        let ca = Ndsc::hadamard_dithered(100, 2.0, &mut rng_a);
+        let cb = Ndsc::hadamard_dithered(100, 2.0, &mut rng_b);
+        let mut ws = Workspace::for_compressor(&cb);
+        let mut msg_b = Compressed::empty(100);
+        let mut dec_b = vec![0.0f32; 100];
+        let mut gen = Rng::seed_from(1);
+        for _ in 0..4 {
+            let y: Vec<f32> = (0..100).map(|_| gen.gaussian_cubed()).collect();
+            let msg_a = ca.compress(&y, &mut rng_a);
+            cb.compress_into(&y, &mut rng_b, &mut ws, &mut msg_b);
+            assert_eq!(msg_a.bytes, msg_b.bytes);
+            assert_eq!(msg_a.payload_bits, msg_b.payload_bits);
+            let dec_a = ca.decompress(&msg_a);
+            cb.decompress_into(&msg_b, &mut ws, &mut dec_b);
+            assert_eq!(dec_a, dec_b);
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use crate::linalg::rng::Rng;
 use crate::linalg::vecops::norm2;
 use crate::quant::bitpack::{BitReader, BitWriter};
-use crate::quant::{Compressed, Compressor};
+use crate::quant::{Compressed, Compressor, Workspace};
 
 pub struct Qsgd {
     n: usize,
@@ -43,11 +43,12 @@ impl Compressor for Qsgd {
         (self.bits + 1) as f32
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, _ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let g = norm2(y);
         let s = self.levels() - 1; // s intervals
-        let mut w = BitWriter::with_capacity_bits(self.n * (self.bits + 1) + 32);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(self.n * (self.bits + 1) + 32);
         w.write_f32(g);
         if g > 0.0 {
             for &v in y {
@@ -58,24 +59,25 @@ impl Compressor for Qsgd {
                 w.write_bits(idx.min(s), self.bits);
             }
         }
-        let payload_bits = if g > 0.0 { self.n * (self.bits + 1) } else { 0 };
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+        out.n = self.n;
+        out.payload_bits = if g > 0.0 { self.n * (self.bits + 1) } else { 0 };
+        out.side_bits = 32;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, _ws: &mut Workspace, out: &mut [f32]) {
         let mut r = BitReader::new(&msg.bytes);
         let g = r.read_f32();
         let s = self.levels() - 1;
-        let mut y = vec![0.0f32; self.n];
         if g == 0.0 {
-            return y;
+            out.fill(0.0);
+            return;
         }
-        for v in y.iter_mut() {
+        for v in out.iter_mut() {
             let sign = if r.read_bits(1) == 1 { 1.0 } else { -1.0 };
             let idx = r.read_bits(self.bits);
             *v = sign * g * idx as f32 / s as f32;
         }
-        y
     }
 
     fn is_unbiased(&self) -> bool {

@@ -11,7 +11,7 @@ use crate::linalg::rng::Rng;
 use crate::linalg::vecops::norm_inf;
 use crate::quant::bitpack::{BitReader, BitWriter};
 use crate::quant::dither::DitheredUniform;
-use crate::quant::{Compressed, Compressor};
+use crate::quant::{Compressed, Compressor, Workspace};
 
 pub struct RandK {
     n: usize,
@@ -55,18 +55,19 @@ impl Compressor for RandK {
         (self.k * self.value_bits) as f32 / self.n as f32
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let s = norm_inf(y);
         let seed = rng.next_u64();
-        let mut w = BitWriter::with_capacity_bits(self.k * self.value_bits + 96);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(self.k * self.value_bits + 96);
         w.write_f32(s);
         w.write_u64(seed);
         let mut sel = Rng::seed_from(seed);
-        let idx = sel.sample_indices(self.n, self.k);
+        sel.sample_indices_into(self.n, self.k, &mut ws.idx);
         let q = DitheredUniform::symmetric(s.max(1e-30), self.value_bits);
         let inv = 1.0 / s.max(1e-30);
-        for &i in &idx {
+        for &i in &ws.idx {
             let code = if self.deterministic {
                 crate::quant::uniform::quantize_index(y[i] * inv, self.value_bits)
             } else {
@@ -74,33 +75,30 @@ impl Compressor for RandK {
             };
             w.write_bits(code, self.value_bits);
         }
-        Compressed {
-            n: self.n,
-            bytes: w.into_bytes(),
-            payload_bits: self.k * self.value_bits,
-            side_bits: 32 + 64,
-        }
+        out.n = self.n;
+        out.payload_bits = self.k * self.value_bits;
+        out.side_bits = 32 + 64;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
         let mut r = BitReader::new(&msg.bytes);
         let s = r.read_f32();
         let seed = r.read_u64();
         let mut sel = Rng::seed_from(seed);
-        let idx = sel.sample_indices(self.n, self.k);
+        sel.sample_indices_into(self.n, self.k, &mut ws.idx);
         let q = DitheredUniform::symmetric(s.max(1e-30), self.value_bits);
         let gain = if self.rescale { self.n as f32 / self.k as f32 } else { 1.0 };
-        let mut y = vec![0.0f32; self.n];
-        for &i in &idx {
+        out.fill(0.0);
+        for &i in &ws.idx {
             let code = r.read_bits(self.value_bits);
-            y[i] = gain
+            out[i] = gain
                 * if self.deterministic {
                     s * crate::quant::uniform::dequantize_index(code, self.value_bits)
                 } else {
                     q.decode(code)
                 };
         }
-        y
     }
 
     fn is_unbiased(&self) -> bool {

@@ -22,7 +22,7 @@ use crate::linalg::rng::Rng;
 use crate::linalg::vecops::norm2;
 use crate::quant::bitpack::{BitReader, BitWriter};
 use crate::quant::dither::DitheredUniform;
-use crate::quant::{Compressed, Compressor};
+use crate::quant::{Compressed, Compressor, Workspace};
 
 pub struct Ratq {
     n: usize,
@@ -52,22 +52,25 @@ impl Ratq {
         base * (2.0f32).powi(j as i32 + 1)
     }
 
-    fn rotate(&self, y: &[f32]) -> Vec<f32> {
-        let mut x = vec![0.0f32; self.big_n];
+    /// `x ← H·D·[y; 0]` into the caller's buffer (resized to `N`).
+    fn rotate_into(&self, y: &[f32], x: &mut Vec<f32>) {
+        x.resize(self.big_n, 0.0);
+        x.fill(0.0);
         x[..self.n].copy_from_slice(y);
         for (xi, s) in x.iter_mut().zip(&self.signs) {
             *xi *= s;
         }
-        fwht_normalized_inplace(&mut x);
-        x
+        fwht_normalized_inplace(x);
     }
 
-    fn unrotate(&self, x: &mut [f32]) -> Vec<f32> {
+    /// Inverse rotation, destroying `x`; the first `n` coordinates land in
+    /// `out`.
+    fn unrotate_into(&self, x: &mut [f32], out: &mut [f32]) {
         fwht_normalized_inplace(x);
         for (xi, s) in x.iter_mut().zip(&self.signs) {
             *xi *= s;
         }
-        x[..self.n].to_vec()
+        out.copy_from_slice(&x[..self.n]);
     }
 }
 
@@ -86,17 +89,18 @@ impl Compressor for Ratq {
             / self.n as f32
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let g2 = norm2(y);
-        let mut w = BitWriter::with_capacity_bits(self.big_n * self.bits + 64);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(self.big_n * self.bits + 64);
         w.write_f32(g2);
         let mut payload_bits = 0;
         if g2 > 0.0 {
-            let x = self.rotate(y);
+            self.rotate_into(y, &mut ws.a);
             let base = g2 / (self.big_n as f32).sqrt();
             let max_level = (1u64 << self.ladder_bits) - 1;
-            for chunk in x.chunks(self.group) {
+            for chunk in ws.a.chunks(self.group) {
                 let m = chunk.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
                 // smallest ladder level covering m
                 let mut j = 0u64;
@@ -112,25 +116,33 @@ impl Compressor for Ratq {
                 }
             }
         }
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+        out.n = self.n;
+        out.payload_bits = payload_bits;
+        out.side_bits = 32;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
         let mut r = BitReader::new(&msg.bytes);
         let g2 = r.read_f32();
         if g2 == 0.0 {
-            return vec![0.0; self.n];
+            out.fill(0.0);
+            return;
         }
         let base = g2 / (self.big_n as f32).sqrt();
-        let mut x = vec![0.0f32; self.big_n];
-        for chunk in x.chunks_mut(self.group) {
+        ws.a.resize(self.big_n, 0.0);
+        for chunk in ws.a.chunks_mut(self.group) {
             let j = r.read_bits(self.ladder_bits);
             let q = DitheredUniform::symmetric(self.ladder(base, j), self.bits);
             for v in chunk.iter_mut() {
                 *v = q.decode(r.read_bits(self.bits));
             }
         }
-        self.unrotate(&mut x)
+        self.unrotate_into(&mut ws.a, out);
+    }
+
+    fn workspace_floats(&self) -> usize {
+        self.big_n
     }
 
     fn is_unbiased(&self) -> bool {

@@ -13,6 +13,10 @@
 //! contract can hold, and `rust/tests/test_conformance.rs` checks both
 //! directions over the whole `all_specs() × R × n` matrix.
 //!
+//! For the allocation-free hot path, [`build_with_workspace`] returns the
+//! codec together with a pre-sized [`Workspace`] (from the codec's
+//! [`Compressor::workspace_floats`] report), so callers preallocate once.
+//!
 //! The spec grammar accepted by [`CompressorSpec::parse`] (and printed by
 //! [`CompressorSpec::name`]):
 //!
@@ -39,7 +43,7 @@ use crate::quant::sign::SignQuantizer;
 use crate::quant::ternary::Ternary;
 use crate::quant::topk::TopK;
 use crate::quant::vqsgd::VqSgd;
-use crate::quant::{budget_bits, Compressed, Compressor};
+use crate::quant::{budget_bits, Compressed, Compressor, Workspace};
 
 // ---------------------------------------------------------------------------
 // Frame specs
@@ -477,6 +481,21 @@ pub fn build(spec: &CompressorSpec, n: usize, r: f32, rng: &mut Rng) -> Box<dyn 
     spec.build(n, r, rng)
 }
 
+/// Build a compressor together with a [`Workspace`] pre-sized for it (via
+/// the codec's [`Compressor::workspace_floats`] report), so long-running
+/// callers — the coordinator, the optimizer loops — preallocate once and
+/// run every subsequent `compress_into`/`decompress_into` allocation-free.
+pub fn build_with_workspace(
+    spec: &CompressorSpec,
+    n: usize,
+    r: f32,
+    rng: &mut Rng,
+) -> (Box<dyn Compressor>, Workspace) {
+    let c = spec.build(n, r, rng);
+    let ws = Workspace::for_compressor(c.as_ref());
+    (c, ws)
+}
+
 /// The full enumerable zoo: every scheme the paper's Table 1 and figures
 /// exercise, in canonical parameterizations. This is the conformance
 /// matrix's row set (`rust/tests/test_conformance.rs`) and what
@@ -559,17 +578,29 @@ impl Compressor for Fp32Passthrough {
         32.0
     }
 
-    fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
-        let mut w = crate::quant::bitpack::BitWriter::with_capacity_bits(32 * y.len());
+    fn compress_into(
+        &self,
+        y: &[f32],
+        _rng: &mut Rng,
+        _ws: &mut Workspace,
+        out: &mut Compressed,
+    ) {
+        let mut w = crate::quant::bitpack::BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(32 * y.len());
         for &v in y {
             w.write_f32(v);
         }
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits: 32 * self.n, side_bits: 0 }
+        out.n = self.n;
+        out.payload_bits = 32 * self.n;
+        out.side_bits = 0;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, _ws: &mut Workspace, out: &mut [f32]) {
         let mut r = crate::quant::bitpack::BitReader::new(&msg.bytes);
-        (0..self.n).map(|_| r.read_f32()).collect()
+        for v in out.iter_mut() {
+            *v = r.read_f32();
+        }
     }
 
     fn is_unbiased(&self) -> bool {

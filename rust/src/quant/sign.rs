@@ -6,7 +6,7 @@
 
 use crate::linalg::rng::Rng;
 use crate::quant::bitpack::{BitReader, BitWriter};
-use crate::quant::{Compressed, Compressor};
+use crate::quant::{Compressed, Compressor, Workspace};
 
 pub struct SignQuantizer {
     n: usize,
@@ -31,21 +31,27 @@ impl Compressor for SignQuantizer {
         1.0
     }
 
-    fn compress(&self, y: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], _rng: &mut Rng, _ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let scale = y.iter().map(|v| v.abs() as f64).sum::<f64>() as f32 / self.n as f32;
-        let mut w = BitWriter::with_capacity_bits(self.n + 32);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(self.n + 32);
         w.write_f32(scale);
         for &v in y {
             w.write_bits(u64::from(v >= 0.0), 1);
         }
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits: self.n, side_bits: 32 }
+        out.n = self.n;
+        out.payload_bits = self.n;
+        out.side_bits = 32;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, _ws: &mut Workspace, out: &mut [f32]) {
         let mut r = BitReader::new(&msg.bytes);
         let scale = r.read_f32();
-        (0..self.n).map(|_| if r.read_bits(1) == 1 { scale } else { -scale }).collect()
+        for v in out.iter_mut() {
+            *v = if r.read_bits(1) == 1 { scale } else { -scale };
+        }
     }
 }
 

@@ -8,7 +8,7 @@
 use crate::linalg::rng::Rng;
 use crate::linalg::vecops::norm_inf;
 use crate::quant::bitpack::{BitReader, BitWriter};
-use crate::quant::{Compressed, Compressor};
+use crate::quant::{Compressed, Compressor, Workspace};
 
 pub struct Ternary {
     n: usize,
@@ -36,10 +36,11 @@ impl Compressor for Ternary {
         GROUP_BITS as f32 / 5.0
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, _ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let s = norm_inf(y);
-        let mut w = BitWriter::with_capacity_bits(self.n * 2 + 32);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(self.n * 2 + 32);
         w.write_f32(s);
         let mut payload_bits = 0;
         if s > 0.0 {
@@ -73,15 +74,18 @@ impl Compressor for Ternary {
                 payload_bits += GROUP_BITS;
             }
         }
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+        out.n = self.n;
+        out.payload_bits = payload_bits;
+        out.side_bits = 32;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, _ws: &mut Workspace, out: &mut [f32]) {
         let mut r = BitReader::new(&msg.bytes);
         let s = r.read_f32();
-        let mut y = vec![0.0f32; self.n];
         if s == 0.0 {
-            return y;
+            out.fill(0.0);
+            return;
         }
         let mut i = 0;
         while i < self.n {
@@ -93,7 +97,7 @@ impl Compressor for Ternary {
                 g /= 3;
             }
             for &t in trits.iter().take((self.n - i).min(5)) {
-                y[i] = match t {
+                out[i] = match t {
                     0 => -s,
                     1 => 0.0,
                     _ => s,
@@ -101,7 +105,6 @@ impl Compressor for Ternary {
                 i += 1;
             }
         }
-        y
     }
 
     fn is_unbiased(&self) -> bool {

@@ -11,10 +11,10 @@
 //! to `false` there.
 
 use crate::linalg::rng::Rng;
-use crate::linalg::vecops::{norm_inf, top_k_indices};
+use crate::linalg::vecops::{norm_inf, top_k_indices_into};
 use crate::quant::bitpack::{BitReader, BitWriter};
 use crate::quant::dither::DitheredUniform;
-use crate::quant::{Compressed, Compressor};
+use crate::quant::{Compressed, Compressor, Workspace};
 
 pub struct TopK {
     n: usize,
@@ -54,16 +54,17 @@ impl Compressor for TopK {
         (self.k * (self.value_bits + idx)) as f32 / self.n as f32
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let s = norm_inf(y);
         let ib = self.index_bits();
-        let mut w = BitWriter::with_capacity_bits(self.k * (ib + self.value_bits) + 32);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(self.k * (ib + self.value_bits) + 32);
         w.write_f32(s);
-        let mut idx = top_k_indices(y, self.k);
-        idx.sort_unstable();
+        top_k_indices_into(y, self.k, &mut ws.idx);
+        ws.idx.sort_unstable();
         let q = DitheredUniform::symmetric(s.max(1e-30), self.value_bits);
-        for &i in &idx {
+        for &i in &ws.idx {
             w.write_bits(i as u64, ib);
             w.write_bits(q.encode(y[i], rng), self.value_bits);
         }
@@ -74,20 +75,22 @@ impl Compressor for TopK {
         } else {
             (value_payload, 32 + index_payload)
         };
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits }
+        out.n = self.n;
+        out.payload_bits = payload_bits;
+        out.side_bits = side_bits;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, _ws: &mut Workspace, out: &mut [f32]) {
         let mut r = BitReader::new(&msg.bytes);
         let s = r.read_f32();
         let ib = self.index_bits();
         let q = DitheredUniform::symmetric(s.max(1e-30), self.value_bits);
-        let mut y = vec![0.0f32; self.n];
+        out.fill(0.0);
         for _ in 0..self.k {
             let i = r.read_bits(ib) as usize;
-            y[i] = q.decode(r.read_bits(self.value_bits));
+            out[i] = q.decode(r.read_bits(self.value_bits));
         }
-        y
     }
 }
 

@@ -3,6 +3,10 @@
 //! With `b` bits a coordinate in `[-1, 1]` maps to one of `M = 2^b` points
 //! `v_i = −1 + (2i−1)Δ/2`, `Δ = 2/M`; the worst-case per-coordinate error
 //! is `Δ/2 = 2^{−b}`. Coordinates allotted 0 bits decode to the midpoint 0.
+//!
+//! Every helper here is a pure scalar function — no state, no heap — so
+//! the schemes built on top ((N)DSC, the naive baseline, DQGD) quantize
+//! entire vectors inside the allocation-free `compress_into` hot path.
 
 /// Nearest-neighbour index of `x ∈ [−1,1]` among the `M = 2^bits` points.
 #[inline]

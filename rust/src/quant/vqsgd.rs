@@ -11,7 +11,7 @@
 use crate::linalg::rng::Rng;
 use crate::linalg::vecops::{norm1, norm2};
 use crate::quant::bitpack::{BitReader, BitWriter};
-use crate::quant::{Compressed, Compressor};
+use crate::quant::{Compressed, Compressor, Workspace};
 
 pub struct VqSgd {
     n: usize,
@@ -43,19 +43,24 @@ impl Compressor for VqSgd {
         (self.reps * self.index_bits()) as f32 / self.n as f32
     }
 
-    fn compress(&self, y: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.n);
         let g = norm2(y);
         let ib = self.index_bits();
-        let mut w = BitWriter::with_capacity_bits(self.reps * ib + 32);
+        let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
+        w.reserve_bits(self.reps * ib + 32);
         w.write_f32(g);
         if g > 0.0 {
             let sqrt_n = (self.n as f32).sqrt();
             // λ_i = |v_i| / √n for the vertex sign(v_i)·√n·e_i; the slack
             // 1 − ‖v‖₁/√n is split evenly across all 2n vertices (their
             // contributions cancel in expectation).
-            let v: Vec<f32> = y.iter().map(|&x| x / g).collect();
-            let slack = (1.0 - norm1(&v) / sqrt_n).max(0.0);
+            ws.b.resize(self.n, 0.0);
+            for (vi, &yi) in ws.b.iter_mut().zip(y) {
+                *vi = yi / g;
+            }
+            let v = &ws.b;
+            let slack = (1.0 - norm1(v) / sqrt_n).max(0.0);
             let slack_each = slack / (2 * self.n) as f32;
             for _ in 0..self.reps {
                 // Sample from the categorical distribution over 2n vertices.
@@ -81,16 +86,18 @@ impl Compressor for VqSgd {
                 w.write_bits(chosen as u64, ib);
             }
         }
-        let payload_bits = if g > 0.0 { self.reps * ib } else { 0 };
-        Compressed { n: self.n, bytes: w.into_bytes(), payload_bits, side_bits: 32 }
+        out.n = self.n;
+        out.payload_bits = if g > 0.0 { self.reps * ib } else { 0 };
+        out.side_bits = 32;
+        out.bytes = w.into_bytes();
     }
 
-    fn decompress(&self, msg: &Compressed) -> Vec<f32> {
+    fn decompress_into(&self, msg: &Compressed, _ws: &mut Workspace, out: &mut [f32]) {
         let mut r = BitReader::new(&msg.bytes);
         let g = r.read_f32();
-        let mut y = vec![0.0f32; self.n];
+        out.fill(0.0);
         if g == 0.0 {
-            return y;
+            return;
         }
         let ib = self.index_bits();
         let sqrt_n = (self.n as f32).sqrt();
@@ -100,10 +107,9 @@ impl Compressor for VqSgd {
             let coord = idx / 2;
             let sign = if idx % 2 == 0 { 1.0 } else { -1.0 };
             if coord < self.n {
-                y[coord] += sign * scale;
+                out[coord] += sign * scale;
             }
         }
-        y
     }
 
     fn is_unbiased(&self) -> bool {

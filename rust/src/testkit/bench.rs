@@ -4,6 +4,11 @@
 //! [`Bencher::run`] per case. The harness warms up, collects wall-clock
 //! samples, and prints `name  median  mean  p95  [throughput]` rows plus a
 //! machine-readable `BENCH\t...` line consumed by `EXPERIMENTS.md` tooling.
+//!
+//! [`Bencher::from_env`] selects smoke settings when `BENCH_SMOKE` is set
+//! (what the CI bench job uses), and [`Bencher::save_json`] dumps the
+//! collected stats as a JSON array (e.g. `BENCH_hotpath.json`) so
+//! regressions diff mechanically across PRs.
 
 use std::time::{Duration, Instant};
 
@@ -57,6 +62,16 @@ impl Bencher {
             warmup_time: Duration::from_millis(30),
             max_samples: 64,
             results: Vec::new(),
+        }
+    }
+
+    /// [`Bencher::quick`] when the `BENCH_SMOKE` env var is set (CI),
+    /// full settings otherwise.
+    pub fn from_env() -> Self {
+        if std::env::var_os("BENCH_SMOKE").is_some() {
+            Self::quick()
+        } else {
+            Self::new()
         }
     }
 
@@ -120,6 +135,42 @@ impl Bencher {
     pub fn results(&self) -> &[Stats] {
         &self.results
     }
+
+    /// Serialize every collected case as a JSON array (no external crates:
+    /// names are escaped manually, durations reported in nanoseconds).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, r) in self.results.iter().enumerate() {
+            let name: String = r
+                .name
+                .chars()
+                .flat_map(|c| match c {
+                    '"' | '\\' => vec!['\\', c],
+                    _ => vec![c],
+                })
+                .collect();
+            s.push_str(&format!(
+                "  {{\"name\": \"{}\", \"median_ns\": {}, \"mean_ns\": {}, \"p95_ns\": {}, \"samples\": {}}}{}\n",
+                name,
+                r.median.as_nanos(),
+                r.mean.as_nanos(),
+                r.p95.as_nanos(),
+                r.samples,
+                if i + 1 == self.results.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("]\n");
+        s
+    }
+
+    /// Write [`Bencher::to_json`] to `path` (best-effort: benches must not
+    /// fail on a read-only checkout; the error is printed, not raised).
+    pub fn save_json(&self, path: &str) {
+        match std::fs::write(path, self.to_json()) {
+            Ok(()) => println!("wrote {path} ({} cases)", self.results.len()),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +186,19 @@ mod tests {
         });
         assert!(s.median < Duration::from_millis(1));
         assert!(s.samples > 0);
+    }
+
+    #[test]
+    fn json_dump_is_well_formed() {
+        let mut b = Bencher::quick();
+        b.run("case \"a\"", || {
+            black_box(1 + 1);
+        });
+        let j = b.to_json();
+        assert!(j.trim_start().starts_with('['));
+        assert!(j.trim_end().ends_with(']'));
+        assert!(j.contains("\"median_ns\""));
+        assert!(j.contains("case \\\"a\\\""));
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use kashinflow::linalg::rng::Rng;
 use kashinflow::linalg::vecops::{dist2, norm2};
 use kashinflow::quant::registry::{self, CompressorSpec};
-use kashinflow::quant::{budget_bits, Compressor};
+use kashinflow::quant::{budget_bits, Compressed, Compressor, Workspace};
 use kashinflow::testkit::prop::{forall, Cases};
 
 const RS: [f32; 3] = [0.5, 1.0, 3.0];
@@ -158,6 +158,71 @@ fn unbiasedness_flags_verified_empirically() {
         let bias = dist2(&mean_f, &y) / norm2(&y);
         assert!(bias < 0.2, "{} claims unbiased but bias is {bias}", spec.name());
     });
+}
+
+/// The workspace hot path is **bit-identical** to the allocating path:
+/// for every spec × R × n on the conformance grid, twin codecs built from
+/// identical RNG states — one driven through `compress`/`decompress`
+/// (fresh buffers every call), one through `compress_into`/
+/// `decompress_into` with a single `Workspace` and message shell reused
+/// across the *entire* matrix (dirty-buffer stress) — must produce the
+/// same wire bytes, the same bit accounting and the same decoded floats
+/// for every input shape.
+#[test]
+fn into_path_bit_identical_to_allocating_path() {
+    let specs = registry::all_specs();
+    // One workspace + shell reused across all specs, budgets, dimensions
+    // and inputs: any state leaking between calls shows up as a byte or
+    // float mismatch somewhere on the grid.
+    let mut ws = Workspace::new();
+    let mut msg_b = Compressed::empty(1);
+    let mut dec_b: Vec<f32> = Vec::new();
+    for spec in &specs {
+        for &n in &NS {
+            for &r in &RS {
+                if !spec.is_feasible(n, r) {
+                    continue;
+                }
+                // Twin builds: same seed ⇒ same frame/shared randomness.
+                let mut rng_a = Rng::seed_from(0xA11C ^ n as u64);
+                let mut rng_b = Rng::seed_from(0xA11C ^ n as u64);
+                let ca = spec.build(n, r, &mut rng_a);
+                let cb = spec.build(n, r, &mut rng_b);
+                let mut gen = Rng::seed_from(0x5EED ^ (n as u64) << 8);
+                dec_b.resize(n, 0.0);
+                for y in test_vectors(n, &mut gen) {
+                    let msg_a = ca.compress(&y, &mut rng_a);
+                    cb.compress_into(&y, &mut rng_b, &mut ws, &mut msg_b);
+                    assert_eq!(
+                        msg_a.bytes,
+                        msg_b.bytes,
+                        "{} at (n={n}, R={r}): wire bytes diverge between paths",
+                        spec.name()
+                    );
+                    assert_eq!(msg_a.n, msg_b.n, "{}: message n", spec.name());
+                    assert_eq!(
+                        msg_a.payload_bits,
+                        msg_b.payload_bits,
+                        "{}: payload accounting",
+                        spec.name()
+                    );
+                    assert_eq!(
+                        msg_a.side_bits,
+                        msg_b.side_bits,
+                        "{}: side accounting",
+                        spec.name()
+                    );
+                    let dec_a = ca.decompress(&msg_a);
+                    cb.decompress_into(&msg_b, &mut ws, &mut dec_b);
+                    assert!(
+                        dec_a.iter().zip(&dec_b).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{} at (n={n}, R={r}): decoded floats diverge between paths",
+                        spec.name()
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// The registry must be referentially sane: the same spec built twice

@@ -20,8 +20,12 @@ fn sources_for(
         .into_iter()
         .enumerate()
         .map(|(i, obj)| {
-            Box::new(DatasetGradSource { obj, batch, rng: Rng::seed_from(seed + i as u64) })
-                as Box<dyn GradSource>
+            Box::new(DatasetGradSource {
+                obj,
+                batch,
+                rng: Rng::seed_from(seed + i as u64),
+                idx: Vec::new(),
+            }) as Box<dyn GradSource>
         })
         .collect()
 }
@@ -43,8 +47,11 @@ fn every_scheme_completes_a_distributed_run() {
         let mut rng = Rng::seed_from(1);
         let (shards, _) = planted_regression_shards(3, 8, 16, Loss::Square, &mut rng, false);
         // Schemes with fixed wire rates need a budget that admits them.
+        // fp32 runs at a *low* nominal r on purpose: it is the documented
+        // unconstrained reference, so the uplink must waive its budget
+        // (regression: it used to panic the worker on the first upload).
         let r = match scheme {
-            SchemeKind::None => 32.0,
+            SchemeKind::None => 1.0,
             SchemeKind::Qsgd => 4.0,
             SchemeKind::Ternary | SchemeKind::Sign => 2.0,
             _ => 2.0,

@@ -126,6 +126,119 @@ fn theorem3_unbiasedness_everywhere() {
     });
 }
 
+/// Theorem 2 rate regression: on a planted least-squares instance,
+/// DGD-DEF's *measured* linear rate must sit at or below the theorem's
+/// `max{ν, β}` (ν = σ = (L−μ)/(L+μ) at the optimal step, β the codec's
+/// Theorem-1 error factor), up to a small empirical tolerance. Run across
+/// several budgets so both regimes (β-dominated and ν-dominated) are
+/// exercised.
+#[test]
+fn theorem2_dgd_def_rate_at_most_max_nu_beta() {
+    let mut rng = Rng::seed_from(21);
+    let n = 64;
+    let (obj, _) = kashinflow::data::synthetic::planted_regression(
+        128,
+        n,
+        kashinflow::data::synthetic::Tail::Gaussian,
+        kashinflow::data::synthetic::Tail::Gaussian,
+        0.05,
+        &mut rng,
+    );
+    let xs = obj.quadratic_minimizer();
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let nu = kashinflow::opt::gd::sigma(l, mu);
+    let opts = kashinflow::opt::dgd_def::DgdDefOptions::optimal(l, mu, 150);
+    for r in [4.0f32, 6.0, 8.0] {
+        let frame = HadamardFrame::new(n, &mut rng);
+        let codec = SubspaceCodec::new(
+            Box::new(frame),
+            EmbedKind::NearDemocratic,
+            CodecMode::Deterministic,
+            r,
+        );
+        let beta = codec.beta();
+        let trace =
+            kashinflow::opt::dgd_def::run(&obj, &codec, &vec![0.0; n], Some(&xs), opts, &mut rng);
+        let rate = trace.empirical_rate();
+        let bound = nu.max(beta);
+        assert!(
+            rate <= bound + 0.05,
+            "R={r}: empirical rate {rate} exceeds max(ν={nu}, β={beta}) + 0.05"
+        );
+        assert!(rate < 1.0, "R={r}: DGD-DEF failed to converge (rate {rate})");
+    }
+}
+
+/// Theorem 3 rate regression: with the theorem's `α ∝ √(min{R,1}/T)`
+/// step, DQ-PSGD's optimality gap must decay consistently with
+/// `O(1/√T)` across T ∈ {200, 800, 3200} — the gap shrinks as T grows,
+/// and the √T-normalized constant `gap·√T` stays within a narrow band
+/// (a linear-rate or a stalled method would both leave the band).
+#[test]
+fn theorem3_dq_psgd_gap_decays_like_inv_sqrt_t() {
+    use kashinflow::opt::dq_psgd::{self, DqPsgdOptions};
+    use kashinflow::opt::oracle::{MinibatchOracle, Oracle};
+    use kashinflow::opt::projection::Domain;
+
+    let mut rng = Rng::seed_from(31);
+    let n = 30;
+    let (obj, _) = kashinflow::data::synthetic::planted_regression(
+        120,
+        n,
+        kashinflow::data::synthetic::Tail::Gaussian,
+        kashinflow::data::synthetic::Tail::Gaussian,
+        0.05,
+        &mut rng,
+    );
+    let xs = obj.quadratic_minimizer();
+    let f_star = obj.value(&xs);
+    let radius = 2.0 * norm2(&xs).max(1.0);
+    let domain = Domain::L2Ball { radius };
+    // Crude empirical subgradient bound B over the ball (Theorem 3 takes
+    // it as given; only the constant in C/√T depends on it).
+    let b_est = {
+        let mut probe_rng = Rng::seed_from(32);
+        let mut oracle = MinibatchOracle::new(&obj, 10, Rng::seed_from(33));
+        let mut g = vec![0.0f32; n];
+        let mut worst = 1e-3f32;
+        for _ in 0..50 {
+            let x: Vec<f32> =
+                (0..n).map(|_| probe_rng.gaussian_f32() * radius / (n as f32).sqrt()).collect();
+            oracle.query(&x, &mut g);
+            worst = worst.max(norm2(&g));
+        }
+        worst
+    };
+    let r = 1.0f32;
+    let ts = [200usize, 800, 3200];
+    let mut gaps = Vec::new();
+    for &t in &ts {
+        let mut run_rng = Rng::seed_from(41);
+        let codec = kashinflow::quant::ndsc::Ndsc::hadamard_dithered(n, r, &mut run_rng);
+        let mut oracle = MinibatchOracle::new(&obj, 10, Rng::seed_from(43));
+        let opts = DqPsgdOptions::theory(2.0 * radius, b_est, r, 1.0, t, domain);
+        let trace =
+            dq_psgd::run(&obj, &mut oracle, &codec, &vec![0.0; n], Some(&xs), opts, &mut run_rng);
+        let gap = (trace.final_value() - f_star).max(1e-7);
+        gaps.push(gap);
+    }
+    // Decay: more iterations (with the matched smaller step) never hurts
+    // by more than noise, and 16x iterations must show real progress.
+    assert!(gaps[1] < gaps[0] * 1.15, "gap(800) {} vs gap(200) {}", gaps[1], gaps[0]);
+    assert!(gaps[2] < gaps[1] * 1.15, "gap(3200) {} vs gap(800) {}", gaps[2], gaps[1]);
+    assert!(gaps[2] < gaps[0] * 0.75, "no 1/√T-scale progress: {gaps:?}");
+    // √T-normalized constants within a factor-8 band.
+    let cs: Vec<f32> =
+        gaps.iter().zip(&ts).map(|(&g, &t)| g * (t as f32).sqrt()).collect();
+    let cmax = cs.iter().fold(0.0f32, |a, &b| a.max(b));
+    let cmin = cs.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+    assert!(
+        cmax / cmin < 8.0,
+        "gap·√T drifts by {}x across T — inconsistent with O(1/√T): gaps {gaps:?}",
+        cmax / cmin
+    );
+}
+
 /// DGD-DEF threshold budget (Thm 2 / Fig. 1b): against the paper's actual
 /// DQGD baseline (a predefined decaying dynamic-range schedule, [6]),
 /// NDSC converges strictly faster at low budgets, and the gap shrinks as
