@@ -42,7 +42,12 @@ fn main() {
             &cd,
             &vec![0.0; 784],
             None,
-            DqPsgdOptions { step: 0.05, iters: 10, domain: Domain::L2Ball { radius: 10.0 } },
+            DqPsgdOptions {
+                step: 0.05,
+                iters: 10,
+                domain: Domain::L2Ball { radius: 10.0 },
+                drop_prob: 0.0,
+            },
             &mut rng,
         );
         black_box(tr.final_x[0]);

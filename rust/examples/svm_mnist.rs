@@ -52,6 +52,7 @@ fn main() {
             step: 1.0, // the paper's nominal α = 1 for this experiment
             iters: rounds,
             domain: Domain::L2Ball { radius: 50.0 },
+            drop_prob: 0.0,
         };
         let trace =
             dq_psgd::run(&obj, &mut oracle, compressor.as_ref(), &vec![0.0; n], None, opts, &mut rng);

@@ -68,6 +68,17 @@ impl<T: WireSize> AccountedSender<T> {
         AccountedSender { tx, counter: Arc::new(TrafficCounter::default()), budget_bits }
     }
 
+    /// A sender sharing an existing counter — how the transport layer
+    /// gives every worker its *own* per-message budget (heterogeneous
+    /// `⌊n·R_i⌋`) while tallying all uplink traffic in one place.
+    pub fn with_counter(
+        tx: SyncSender<T>,
+        counter: Arc<TrafficCounter>,
+        budget_bits: Option<usize>,
+    ) -> Self {
+        AccountedSender { tx, counter, budget_bits }
+    }
+
     /// Send with budget enforcement and accounting.
     pub fn send(&self, msg: T) -> Result<(), ChannelError<T>> {
         let payload = msg.payload_bits();
@@ -120,6 +131,12 @@ impl<T> BufferPool<T> {
     /// Return a spent buffer for reuse.
     pub fn put(&self, buf: T) {
         self.stack.lock().unwrap().push(buf);
+    }
+
+    /// Pop a recycled buffer if one is parked; `None` when the pool is
+    /// empty (unlike [`BufferPool::get_or`], never builds a fresh one).
+    pub fn try_get(&self) -> Option<T> {
+        self.stack.lock().unwrap().pop()
     }
 
     /// Buffers currently parked in the pool.

@@ -2,10 +2,22 @@
 //! `key=value` CLI arguments or a config file of the same lines — the
 //! "real config system" a deployment needs without any external crates.
 
+use crate::coordinator::transport::{LinkModel, SimNetConfig, Topology};
 use crate::linalg::frames::FrameKind;
 use crate::quant::registry::{CompressorSpec, FrameSpec, SparsifyKind};
 
+pub use crate::coordinator::transport::{Participation, TransportKind};
 pub use crate::quant::registry::Fp32Passthrough;
+
+/// Default dimension at which the server fans the per-round decode out
+/// across scoped threads. Below this, a decode is a few microseconds of
+/// work and a thread spawn would cost more than it saves; above it (the
+/// (N)DSC decode is an `O(N log N)` FWHT plus an `O(N)` inverse transform,
+/// and the transformer workload has `n ~ 10^5`) the `m`-way fan-out is a
+/// near-linear speedup of the consensus step. This constant is the single
+/// source of truth — [`RunConfig::parallel_decode_min_dim`] defaults to it
+/// and is the per-run override (tests force both paths with it).
+pub const PARALLEL_DECODE_MIN_DIM: usize = 8192;
 
 /// Compression scheme selector (the CLI surface of [`crate::quant`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -111,8 +123,22 @@ pub struct RunConfig {
     pub n: usize,
     /// Number of workers `m`.
     pub workers: usize,
-    /// Bit budget `R` (bits per dimension per worker per round).
+    /// Bit budget `R` (bits per dimension per worker per round). When
+    /// `budgets` is set this is the mean budget, kept for summaries; the
+    /// per-worker truth is [`RunConfig::budget_for`].
     pub r: f32,
+    /// Heterogeneous per-worker budgets `R_i` (`None` = uniform `r`).
+    /// CLI grammar: `r=0.5,1,2,4` — a comma-separated list, one entry per
+    /// worker. Every `R_i` must be feasible for the scheme on its own.
+    pub budgets: Option<Vec<f32>>,
+    /// Which uploads the server aggregates each round: all delivered
+    /// (`full`), the `k` earliest (`k:<count>`), or those within a
+    /// simulated deadline (`deadline:<µs>`).
+    pub participation: Participation,
+    /// Wire transport: in-process channels, the deterministic SimNet
+    /// model, or a recording wrapper (`transport=inproc|sim|recorded:<path>`;
+    /// SimNet knobs: `topo=`, `lat=`, `jitter=`, `drop=`, `bw=`, `net-seed=`).
+    pub transport: TransportKind,
     pub scheme: SchemeKind,
     /// Registry spec taking precedence over `scheme` when set — this is
     /// how `scheme=<any registry name>` (e.g. `ratq`, `vqsgd`,
@@ -130,10 +156,9 @@ pub struct RunConfig {
     pub radius: f32,
     pub seed: u64,
     /// Dimension threshold above which the server decodes uploads on
-    /// scoped threads (default
-    /// [`crate::coordinator::server::PARALLEL_DECODE_MIN_DIM`]). The
-    /// decode result is bit-identical either way (accumulation is in
-    /// worker-id order); tests override this to force both paths.
+    /// scoped threads (default [`PARALLEL_DECODE_MIN_DIM`]). The decode
+    /// result is bit-identical either way (accumulation is in worker-id
+    /// order); tests override this to force both paths.
     pub parallel_decode_min_dim: usize,
 }
 
@@ -143,6 +168,9 @@ impl Default for RunConfig {
             n: 30,
             workers: 10,
             r: 1.0,
+            budgets: None,
+            participation: Participation::Full,
+            transport: TransportKind::InProc,
             scheme: SchemeKind::Ndsc,
             spec_override: None,
             frame: FrameKind::Hadamard,
@@ -151,16 +179,25 @@ impl Default for RunConfig {
             batch: 5,
             radius: f32::INFINITY,
             seed: 0,
-            parallel_decode_min_dim: crate::coordinator::server::PARALLEL_DECODE_MIN_DIM,
+            parallel_decode_min_dim: PARALLEL_DECODE_MIN_DIM,
         }
     }
 }
 
 impl RunConfig {
     /// Parse `key=value` tokens, e.g.
-    /// `n=116 workers=4 r=0.5 scheme=ndsc frame=hadamard rounds=300`.
+    /// `n=116 workers=4 r=0.5 scheme=ndsc frame=hadamard rounds=300`,
+    /// `r=0.5,1,2,4` (per-worker budgets), `part=k:3`,
+    /// `transport=sim topo=chain lat=200 jitter=50 drop=0.1 bw=8`.
     pub fn parse_args(args: &[String]) -> Result<RunConfig, String> {
         let mut cfg = RunConfig::default();
+        // SimNet knobs accumulate here; `transport=sim` (or touching any
+        // knob without naming a transport) assembles them at the end.
+        let mut link = LinkModel::IDEAL;
+        let mut topology = Topology::Star;
+        let mut net_seed = 0u64;
+        let mut net_touched = false;
+        let mut transport_arg: Option<String> = None;
         for a in args {
             let (k, v) = a
                 .split_once('=')
@@ -168,7 +205,50 @@ impl RunConfig {
             match k {
                 "n" => cfg.n = v.parse().map_err(|e| format!("n: {e}"))?,
                 "workers" | "m" => cfg.workers = v.parse().map_err(|e| format!("workers: {e}"))?,
-                "r" | "bits" => cfg.r = v.parse().map_err(|e| format!("r: {e}"))?,
+                "r" | "bits" => {
+                    if v.contains(',') {
+                        let list = v
+                            .split(',')
+                            .map(|t| t.parse::<f32>().map_err(|e| format!("r: '{t}': {e}")))
+                            .collect::<Result<Vec<f32>, String>>()?;
+                        cfg.r = list.iter().sum::<f32>() / list.len() as f32;
+                        cfg.budgets = Some(list);
+                    } else {
+                        cfg.r = v.parse().map_err(|e| format!("r: {e}"))?;
+                        cfg.budgets = None;
+                    }
+                }
+                "part" | "participation" => {
+                    cfg.participation = Participation::parse(v).ok_or_else(|| {
+                        format!("unknown participation '{v}' (full|k:<n>|deadline:<µs>)")
+                    })?
+                }
+                "transport" => transport_arg = Some(v.to_string()),
+                "topo" | "topology" => {
+                    topology = Topology::parse(v)
+                        .ok_or_else(|| format!("unknown topology '{v}' (star|chain|tree:<f>)"))?;
+                    net_touched = true;
+                }
+                "lat" | "latency" => {
+                    link.base_latency_us = v.parse().map_err(|e| format!("lat: {e}"))?;
+                    net_touched = true;
+                }
+                "jitter" => {
+                    link.jitter_us = v.parse().map_err(|e| format!("jitter: {e}"))?;
+                    net_touched = true;
+                }
+                "drop" => {
+                    link.drop_prob = v.parse().map_err(|e| format!("drop: {e}"))?;
+                    net_touched = true;
+                }
+                "bw" | "bandwidth" => {
+                    link.bandwidth_bits_per_us = v.parse().map_err(|e| format!("bw: {e}"))?;
+                    net_touched = true;
+                }
+                "net-seed" | "netseed" => {
+                    net_seed = v.parse().map_err(|e| format!("net-seed: {e}"))?;
+                    net_touched = true;
+                }
                 "scheme" => match SchemeKind::parse(v) {
                     Some(s) => {
                         cfg.scheme = s;
@@ -195,6 +275,40 @@ impl RunConfig {
                 _ => return Err(format!("unknown config key '{k}'")),
             }
         }
+        let net = SimNetConfig { seed: net_seed, topology, links: vec![link] };
+        match transport_arg.as_deref() {
+            None => {
+                if net_touched {
+                    cfg.transport = TransportKind::SimNet(net);
+                }
+            }
+            Some("inproc") => {
+                // Silently ignoring latency/drop knobs would let a user
+                // believe they simulated a network they didn't.
+                if net_touched {
+                    return Err(
+                        "transport=inproc conflicts with SimNet knobs \
+                         (topo/lat/jitter/drop/bw/net-seed); drop them or use transport=sim"
+                            .into(),
+                    );
+                }
+                cfg.transport = TransportKind::InProc;
+            }
+            Some("sim") | Some("simnet") => cfg.transport = TransportKind::SimNet(net),
+            Some(t) => match t.strip_prefix("recorded:") {
+                Some(path) if !path.is_empty() => {
+                    cfg.transport = TransportKind::Recorded {
+                        path: path.to_string(),
+                        net: if net_touched { Some(net) } else { None },
+                    }
+                }
+                _ => {
+                    return Err(format!(
+                        "unknown transport '{t}' (inproc|sim|recorded:<path>)"
+                    ))
+                }
+            },
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -212,22 +326,86 @@ impl RunConfig {
         if self.rounds == 0 {
             return Err("rounds must be positive".into());
         }
-        // Reject infeasible (scheme, n, R) upfront: without this the
-        // budget-enforcing uplink would reject the first over-budget
-        // message and panic a worker thread mid-run. scheme=none (fp32)
-        // is the unconstrained reference and is exempt.
+        if let Some(budgets) = &self.budgets {
+            if budgets.len() != self.workers {
+                return Err(format!(
+                    "r lists one budget per worker: got {} entries for {} workers",
+                    budgets.len(),
+                    self.workers
+                ));
+            }
+            if budgets.iter().any(|&b| !(b > 0.0)) {
+                return Err("every per-worker budget R_i must be positive".into());
+            }
+        }
+        match self.participation {
+            Participation::KofM { k } if k == 0 || k > self.workers => {
+                return Err(format!(
+                    "participation k:{k} out of range (1..={} workers)",
+                    self.workers
+                ));
+            }
+            _ => {}
+        }
+        let links: &[LinkModel] = match &self.transport {
+            TransportKind::SimNet(net) | TransportKind::Recorded { net: Some(net), .. } => {
+                &net.links
+            }
+            _ => &[],
+        };
+        for l in links {
+            if !(0.0..1.0).contains(&l.drop_prob) {
+                return Err(format!("drop probability {} not in [0, 1)", l.drop_prob));
+            }
+            if !l.bandwidth_bits_per_us.is_finite() || l.bandwidth_bits_per_us < 0.0 {
+                return Err("bandwidth must be a finite non-negative bits/µs".into());
+            }
+        }
+        // Reject infeasible (scheme, n, R_i) upfront — for every worker's
+        // own budget: without this the budget-enforcing uplink would
+        // reject the first over-budget message and panic a worker thread
+        // mid-run. scheme=none (fp32) is the unconstrained reference and
+        // is exempt.
         let spec = self.compressor_spec();
-        if spec != CompressorSpec::Fp32 && self.r > 0.0 && !spec.is_feasible(self.n, self.r) {
-            return Err(format!(
-                "scheme '{}' cannot fit the budget ⌊n·R⌋ = {} bits at n={}, R={} \
-                 (its wire rate is fixed above R; raise r or pick a budget-adaptive scheme)",
-                spec.name(),
-                crate::quant::budget_bits(self.n, self.r),
-                self.n,
-                self.r
-            ));
+        for i in 0..self.workers {
+            let r_i = self.budget_for(i);
+            if spec != CompressorSpec::Fp32 && r_i > 0.0 && !spec.is_feasible(self.n, r_i) {
+                return Err(format!(
+                    "scheme '{}' cannot fit worker {i}'s budget ⌊n·R_i⌋ = {} bits at n={}, R_i={} \
+                     (its wire rate is fixed above R; raise r or pick a budget-adaptive scheme)",
+                    spec.name(),
+                    crate::quant::budget_bits(self.n, r_i),
+                    self.n,
+                    r_i
+                ));
+            }
         }
         Ok(())
+    }
+
+    /// Worker `i`'s bit budget `R_i` (the uniform `r` unless a per-worker
+    /// list is set; short lists cycle defensively, though
+    /// [`RunConfig::validate`] requires one entry per worker).
+    pub fn budget_for(&self, worker: usize) -> f32 {
+        match &self.budgets {
+            Some(b) if !b.is_empty() => b[worker % b.len()],
+            _ => self.r,
+        }
+    }
+
+    /// Per-worker uplink payload caps in bits (`⌊n·R_i⌋`; `None` = the
+    /// unconstrained fp32 reference) — what the transport layer enforces.
+    pub fn uplink_budgets(&self) -> Vec<Option<usize>> {
+        let spec = self.compressor_spec();
+        (0..self.workers)
+            .map(|i| {
+                if spec == CompressorSpec::Fp32 {
+                    None
+                } else {
+                    Some(crate::quant::budget_bits(self.n, self.budget_for(i)))
+                }
+            })
+            .collect()
     }
 
     /// Human-readable scheme name for run summaries (the registry name
@@ -245,16 +423,17 @@ impl RunConfig {
         self.spec_override.unwrap_or_else(|| self.scheme.spec(self.frame))
     }
 
-    /// Build one compressor per worker through the registry. Each worker
-    /// draws independent frame randomness from `rng` (common randomness
-    /// with the server, established at setup).
+    /// Build one compressor per worker through the registry, each at its
+    /// own budget `R_i`. Each worker draws independent frame randomness
+    /// from `rng` (common randomness with the server, established at
+    /// setup).
     pub fn build_compressors(
         &self,
         rng: &mut crate::linalg::rng::Rng,
     ) -> Vec<std::sync::Arc<dyn crate::quant::Compressor>> {
         let spec = self.compressor_spec();
         (0..self.workers)
-            .map(|_| std::sync::Arc::from(spec.build(self.n, self.r, rng)))
+            .map(|i| std::sync::Arc::from(spec.build(self.n, self.budget_for(i), rng)))
             .collect()
     }
 }
@@ -317,6 +496,81 @@ mod tests {
             .is_ok());
         // fp32 is the unconstrained reference: exempt from the check.
         assert!(RunConfig::parse_args(&["scheme=none".into()]).is_ok());
+    }
+
+    #[test]
+    fn per_worker_budget_list_parses_and_validates() {
+        let cfg = RunConfig::parse_args(&[
+            "n=64".into(),
+            "workers=4".into(),
+            "r=0.5,1,2,4".into(),
+            "scheme=ndsc".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.budgets, Some(vec![0.5, 1.0, 2.0, 4.0]));
+        assert!((cfg.r - 1.875).abs() < 1e-6, "r is the mean budget, got {}", cfg.r);
+        assert_eq!(cfg.budget_for(0), 0.5);
+        assert_eq!(cfg.budget_for(3), 4.0);
+        let caps = cfg.uplink_budgets();
+        assert_eq!(caps, vec![Some(32), Some(64), Some(128), Some(256)]);
+        // Compressors honor their own R_i: worker 0 at 0.5 b/dim spends
+        // at most 32 payload bits, worker 3 at 4 b/dim up to 256.
+        let mut rng = Rng::seed_from(3);
+        let comps = cfg.build_compressors(&mut rng);
+        let y: Vec<f32> = (0..64).map(|i| i as f32 - 32.0).collect();
+        let m0 = comps[0].compress(&y, &mut rng);
+        let m3 = comps[3].compress(&y, &mut rng);
+        assert!(m0.payload_bits <= 32, "{}", m0.payload_bits);
+        assert!(m3.payload_bits > 32 && m3.payload_bits <= 256, "{}", m3.payload_bits);
+        // List length must match the worker count.
+        assert!(RunConfig::parse_args(&["workers=3".into(), "r=1,2".into()]).is_err());
+        // Every entry is feasibility-checked on its own: sign needs R ≥ 1.
+        let err = RunConfig::parse_args(&[
+            "n=64".into(),
+            "workers=2".into(),
+            "r=0.5,2".into(),
+            "scheme=sign".into(),
+        ])
+        .unwrap_err();
+        assert!(err.contains("cannot fit"), "{err}");
+    }
+
+    #[test]
+    fn participation_and_transport_parse() {
+        let cfg = RunConfig::parse_args(&[
+            "workers=4".into(),
+            "part=k:3".into(),
+            "transport=sim".into(),
+            "topo=chain".into(),
+            "lat=200".into(),
+            "drop=0.1".into(),
+        ])
+        .unwrap();
+        assert_eq!(cfg.participation, Participation::KofM { k: 3 });
+        match &cfg.transport {
+            TransportKind::SimNet(net) => {
+                assert_eq!(net.topology, Topology::Chain);
+                assert_eq!(net.links[0].base_latency_us, 200);
+                assert!((net.links[0].drop_prob - 0.1).abs() < 1e-6);
+            }
+            other => panic!("expected SimNet, got {other:?}"),
+        }
+        // Touching a net knob without transport= selects SimNet.
+        let cfg = RunConfig::parse_args(&["jitter=5".into()]).unwrap();
+        assert!(matches!(cfg.transport, TransportKind::SimNet(_)));
+        // ...but combining net knobs with an explicit inproc is a
+        // contradiction, not something to silently ignore.
+        let err =
+            RunConfig::parse_args(&["transport=inproc".into(), "drop=0.1".into()]).unwrap_err();
+        assert!(err.contains("conflicts"), "{err}");
+        // Recorded wants a path.
+        let cfg = RunConfig::parse_args(&["transport=recorded:/tmp/t.kft".into()]).unwrap();
+        assert!(matches!(cfg.transport, TransportKind::Recorded { .. }));
+        assert!(RunConfig::parse_args(&["transport=recorded:".into()]).is_err());
+        assert!(RunConfig::parse_args(&["transport=carrier-pigeon".into()]).is_err());
+        // Participation bounds are validated.
+        assert!(RunConfig::parse_args(&["workers=2".into(), "part=k:3".into()]).is_err());
+        assert!(RunConfig::parse_args(&["drop=1.5".into()]).is_err());
     }
 
     #[test]

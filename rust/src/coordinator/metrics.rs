@@ -14,6 +14,10 @@ pub struct RoundMetrics {
     pub mean_local_value: f32,
     /// Total uplink payload bits this round (all workers).
     pub payload_bits: usize,
+    /// Uploads the server actually aggregated this round (`= workers`
+    /// under full participation; fewer under k-of-m / deadline policies
+    /// or lossy links).
+    pub participants: usize,
     pub wall: Duration,
 }
 
@@ -40,16 +44,28 @@ impl RunMetrics {
         self.total_payload_bits as f32 / (n * workers * self.rounds.len()) as f32
     }
 
-    /// CSV dump: `round,value,mean_local_value,payload_bits,wall_us`.
+    /// Mean participants per round (the effective `k` of the run).
+    pub fn mean_participants(&self) -> f32 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.participants).sum::<usize>() as f32
+            / self.rounds.len() as f32
+    }
+
+    /// CSV dump:
+    /// `round,value,mean_local_value,payload_bits,participants,wall_us`.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("round,value,mean_local_value,payload_bits,wall_us\n");
+        let mut s =
+            String::from("round,value,mean_local_value,payload_bits,participants,wall_us\n");
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{}\n",
+                "{},{},{},{},{},{}\n",
                 r.round,
                 r.value,
                 r.mean_local_value,
                 r.payload_bits,
+                r.participants,
                 r.wall.as_micros()
             ));
         }
@@ -70,6 +86,7 @@ mod tests {
                 value: 1.0 / (i + 1) as f32,
                 mean_local_value: 0.0,
                 payload_bits: 100,
+                participants: 2,
                 wall: Duration::from_micros(5),
             });
         }
@@ -79,6 +96,8 @@ mod tests {
         let csv = m.to_csv();
         assert_eq!(csv.lines().count(), 5);
         assert!(csv.starts_with("round,"));
+        assert!(csv.lines().next().unwrap().contains("participants"));
         assert!((m.final_value() - 0.25).abs() < 1e-6);
+        assert!((m.mean_participants() - 2.0).abs() < 1e-6);
     }
 }

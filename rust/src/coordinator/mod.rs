@@ -1,59 +1,69 @@
 //! L3 distributed runtime: a parameter server and `m` workers exchanging
-//! bit-budgeted gradient messages over byte-accounted channels (§4.3,
-//! Fig. 4 of the paper).
+//! bit-budgeted gradient messages over a pluggable, byte-accounted
+//! [`transport`] (§4.3, Fig. 4 of the paper).
 //!
-//! The topology is the paper's: per round the server broadcasts the
-//! iterate, every worker computes a local (mini-batch) subgradient from its
-//! private shard, encodes it with its own `(E, D)` pair under the strict
-//! `⌊nR⌋`-bit budget, and the server decodes, averages (consensus step),
-//! steps and projects. The uplink — the constrained direction in the paper
-//! — flows through [`channel::AccountedChannel`]s that reject over-budget
-//! payloads and tally every byte.
+//! The topology is the paper's star: per round the server broadcasts the
+//! iterate, every worker computes a local (mini-batch) subgradient from
+//! its private shard, encodes it with its own `(E, D)` pair under its own
+//! strict `⌊n·R_i⌋`-bit budget, and the server decodes, averages the
+//! [`transport::Participation`]-selected subset (consensus step), steps
+//! and projects. The uplink — the constrained direction in the paper —
+//! flows through budget-enforcing, byte-tallying channels that reject
+//! over-budget payloads.
+//!
+//! Delivery itself is owned by the [`transport`] layer: in-process
+//! channels ([`transport::inproc`], bit-identical to the classic path),
+//! a deterministic seeded latency/jitter/drop/topology model
+//! ([`transport::simnet`] — stragglers and lossy links), or a recording
+//! wrapper whose traces [`replay_distributed`] re-runs to identical
+//! server iterates ([`transport::recorded`]).
 //!
 //! Workers run on `std::thread` (this image has no tokio); the gradient
 //! source is pluggable ([`worker::GradSource`]) so the same loop drives
 //! pure-Rust objectives and PJRT-compiled transformer workers
 //! (`examples/train_transformer.rs`).
 //!
-//! **Steady-state rounds are allocation-free**: channels are bounded
-//! (ring buffers allocated at setup), broadcast iterates and uplink wire
-//! bytes recycle through [`channel::ChannelPools`], every worker owns a
-//! warm [`crate::quant::Workspace`], and the server decodes into
-//! per-worker slots — `rust/tests/test_alloc.rs` asserts the round loop
-//! performs zero heap allocations after warm-up.
+//! **Steady-state rounds are allocation-free** on the in-process
+//! transport: channels are bounded (ring buffers allocated at setup),
+//! broadcast iterates and uplink wire bytes recycle through
+//! [`channel::ChannelPools`], every worker owns a warm
+//! [`crate::quant::Workspace`], and the server decodes into per-worker
+//! slots — `rust/tests/test_alloc.rs` asserts the round loop performs
+//! zero heap allocations after warm-up.
 
 pub mod channel;
 pub mod config;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
+pub mod transport;
 pub mod worker;
 
-use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::linalg::rng::Rng;
 use crate::quant::Compressor;
 
-use channel::{AccountedSender, ChannelPools};
 use config::RunConfig;
 use metrics::RunMetrics;
-use protocol::{Broadcast, Upload};
+use transport::ServerTransport;
 use worker::GradSource;
 
-/// Run a full distributed job: spawns one scoped thread per worker, runs
-/// the server loop on the calling thread, returns the metrics log.
+/// Run a full distributed job: builds the configured transport, spawns
+/// one scoped thread per worker, runs the server loop on the calling
+/// thread, returns the metrics log.
 ///
 /// `sources[i]` is worker `i`'s private gradient source; `compressors[i]`
-/// its codec (shared by value with the server for decoding — the frame
-/// randomness is common randomness established at setup, as in the paper).
+/// its codec at its own budget `R_i` (shared by value with the server for
+/// decoding — the frame randomness is common randomness established at
+/// setup, as in the paper).
 ///
 /// The per-round fan-out is fully thread-parallel: all `m` workers
 /// compute/compress/upload concurrently on their own scoped threads, and
 /// the server additionally fans the per-round *decode* out across scoped
 /// threads when the dimension makes it worthwhile (see
-/// [`server::PARALLEL_DECODE_MIN_DIM`]). `std::thread::scope` both joins
-/// the workers automatically and lifts the old `'static` requirement on
+/// [`config::PARALLEL_DECODE_MIN_DIM`]). `std::thread::scope` both joins
+/// the workers automatically and lifts any `'static` requirement on
 /// gradient sources.
 pub fn run_distributed(
     cfg: &RunConfig,
@@ -69,61 +79,66 @@ pub fn run_distributed(
         assert_eq!(c.n(), cfg.n, "compressor dim mismatch");
     }
 
-    // Uplink: workers -> server, budget-enforced + byte-accounted. The
-    // channel is *bounded* (ring buffer allocated once): workers send at
-    // most one upload per round, so 2m slots never fill, and steady-state
-    // sends touch no heap. The fp32 passthrough is the documented
-    // *unconstrained* reference (exempt from `RunConfig::validate`'s
-    // feasibility check for the same reason), so its uploads are not
-    // budget-gated — every other scheme is held to ⌊n·R⌋ exactly.
-    let (up_tx, up_rx) = mpsc::sync_channel::<Upload>(2 * m.max(1));
-    let budget = if cfg.compressor_spec() == crate::quant::registry::CompressorSpec::Fp32 {
-        None
-    } else {
-        Some(crate::quant::budget_bits(cfg.n, cfg.r))
-    };
-    let uplink = AccountedSender::new(up_tx, budget);
-    // Buffer recycling (broadcast iterates + uplink wire bytes) shared by
-    // the server and every worker thread.
-    let pools = Arc::new(ChannelPools::new(m));
-    let mut root_rng = Rng::seed_from(cfg.seed ^ 0xD15C0);
-
     std::thread::scope(|scope| {
-        // Downlinks: server -> each worker (broadcast is m sends; at most
-        // one broadcast is in flight per worker, so 2 slots suffice).
-        let mut down_txs = Vec::with_capacity(m);
-        for (i, (mut source, comp)) in
-            sources.into_iter().zip(compressors.iter().cloned()).enumerate()
+        // Built *inside* the scope closure on purpose: if the server loop
+        // panics (dead worker, round skew), unwinding drops the transport
+        // — and with it every downlink sender — so blocked workers see a
+        // closed channel and exit, the scope's join completes, and the
+        // panic propagates instead of deadlocking the join.
+        let (mut server_tp, worker_tps) =
+            transport::build(&cfg.transport, &cfg.uplink_budgets());
+        let mut root_rng = Rng::seed_from(cfg.seed ^ 0xD15C0);
+        for (i, ((mut source, comp), mut wtp)) in sources
+            .into_iter()
+            .zip(compressors.iter().cloned())
+            .zip(worker_tps)
+            .enumerate()
         {
-            let (down_tx, down_rx) = mpsc::sync_channel::<Broadcast>(2);
-            down_txs.push(down_tx);
-            let uplink = uplink.clone();
             let mut wrng = root_rng.fork(i as u64);
-            let wpools = pools.clone();
+            let wpools = server_tp.pools().clone();
             scope.spawn(move || {
                 worker::worker_loop(
                     i,
                     &mut *source,
                     comp.as_ref(),
-                    down_rx,
-                    uplink,
+                    wtp.as_mut(),
                     &wpools,
                     &mut wrng,
                 );
             });
         }
 
-        // Drop the prototype sender: only worker clones remain, so a dead
-        // worker is observable as a closed channel rather than a deadlock.
-        let traffic = uplink.counter();
-        drop(uplink);
+        let metrics = server::server_loop(cfg, x0, server_tp.as_mut(), &compressors, eval);
 
-        let metrics =
-            server::server_loop(cfg, x0, &down_txs, &up_rx, &compressors, &pools, traffic, eval);
-
-        // Downlink senders drop here => workers see a closed channel and
-        // exit; the scope joins them (propagating any worker panic).
-        drop(down_txs);
+        // Close the downlinks (and flush any trace file): workers see a
+        // closed channel and exit; the scope joins them (propagating any
+        // worker panic).
+        server_tp.finish();
         metrics
     })
+}
+
+/// Re-run the server side of a recorded job from its trace file alone:
+/// no workers, no gradient sources — `recv` hands back the recorded wire
+/// frames in order. With the same `cfg` and the same compressors (same
+/// setup seed ⇒ same common randomness) the replay reproduces the
+/// original run's server iterates bit-for-bit
+/// (`rust/tests/test_transport.rs`).
+pub fn replay_distributed(
+    cfg: &RunConfig,
+    x0: Vec<f32>,
+    compressors: &[Arc<dyn Compressor>],
+    path: &str,
+    eval: impl FnMut(&[f32]) -> f32,
+) -> RunMetrics {
+    let mut tp = transport::replay(path)
+        .unwrap_or_else(|e| panic!("cannot load trace '{path}': {e}"));
+    assert_eq!(
+        tp.workers(),
+        cfg.workers,
+        "trace was recorded with {} workers, config says {}",
+        tp.workers(),
+        cfg.workers
+    );
+    server::server_loop(cfg, x0, &mut tp, compressors, eval)
 }

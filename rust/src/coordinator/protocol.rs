@@ -1,4 +1,6 @@
-//! Wire messages between the parameter server and workers.
+//! Wire messages between the parameter server and workers, their
+//! serialized sizes, and the trace-frame format the `Recorded` transport
+//! writes.
 //!
 //! The in-process transport passes these structs directly, but byte
 //! accounting uses the *serialized* sizes ([`WireSize`]) so the metrics
@@ -10,6 +12,15 @@
 //! [`crate::coordinator::channel::ChannelPools`] instead of being
 //! reallocated per round; recycling is a transport-level concern and does
 //! not change the wire sizes reported here.
+//!
+//! The **trace format** (`write_*_frame` / [`read_trace_frame`]) is what
+//! [`crate::coordinator::transport::recorded`] serializes: a fixed magic
+//! header, then length-prefixed little-endian records — broadcasts with
+//! their full fp32 iterate, uploads with their exact wire bytes, bit
+//! accounting, and simulated arrival tag. A recorded run replays to
+//! bit-identical server iterates (`rust/tests/test_transport.rs`).
+
+use std::io::{self, Read, Write};
 
 use crate::quant::Compressed;
 
@@ -31,6 +42,17 @@ pub struct Upload {
     /// Local objective value at the broadcast iterate (f32 side channel,
     /// used for metrics only).
     pub local_value: f32,
+}
+
+/// Header bits of one upload frame: round (u64) + worker id (u32) +
+/// local value (f32). Side-information bits are accounted separately.
+pub const UPLOAD_HEADER_BITS: usize = 64 + 32 + 32;
+
+/// Exact uplink wire bytes a [`Compressed`] message occupies once framed:
+/// `⌈(payload + side + header) / 8⌉`. This is what `repro schemes` prints
+/// next to each registry entry.
+pub fn upload_wire_bytes(msg: &Compressed) -> usize {
+    (msg.payload_bits + msg.side_bits + UPLOAD_HEADER_BITS).div_ceil(8)
 }
 
 /// Serialized size of a message, in bits, as it would cross a network.
@@ -57,9 +79,146 @@ impl WireSize for Upload {
     }
 
     fn overhead_bits(&self) -> usize {
-        // round + worker id + side info + local value
-        64 + 32 + self.msg.side_bits + 32
+        UPLOAD_HEADER_BITS + self.msg.side_bits
     }
+}
+
+// ---------------------------------------------------------------------------
+// Trace-frame (de)serialization — the `Recorded` transport's disk format.
+// ---------------------------------------------------------------------------
+
+/// Magic bytes opening every trace file (version-tagged).
+pub const TRACE_MAGIC: &[u8; 8] = b"KFTRACE1";
+
+const TAG_BROADCAST: u8 = 0;
+const TAG_UPLOAD: u8 = 1;
+/// Sentinel arrival meaning "the link dropped this frame".
+const DROPPED: u64 = u64::MAX;
+/// Sanity cap on any single frame's payload (1 GiB of bytes / 256M f32):
+/// trace files are offline artifacts where corruption is an expected
+/// failure mode, so a flipped bit in a length field must surface as
+/// `InvalidData`, not as a 2^60-byte allocation aborting the process.
+const MAX_FRAME_LEN: u64 = 1 << 30;
+
+fn checked_len(raw: u64, what: &str) -> io::Result<usize> {
+    if raw > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("corrupt trace: {what} length {raw} exceeds the {MAX_FRAME_LEN} cap"),
+        ));
+    }
+    Ok(raw as usize)
+}
+
+/// One parsed trace record.
+#[derive(Debug)]
+pub enum TraceFrame {
+    Broadcast { round: u64, worker: usize, iterate: Vec<f32> },
+    Upload { up: Upload, at: Option<u64> },
+}
+
+/// Write the trace header (magic + worker count).
+pub fn write_trace_header(w: &mut impl Write, workers: usize) -> io::Result<()> {
+    w.write_all(TRACE_MAGIC)?;
+    w.write_all(&(workers as u64).to_le_bytes())
+}
+
+/// Read and validate the trace header; returns the worker count.
+pub fn read_trace_header(r: &mut impl Read) -> io::Result<usize> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != TRACE_MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "not a KFTRACE1 trace file"));
+    }
+    Ok(read_u64(r)? as usize)
+}
+
+/// Serialize one broadcast frame (full fp32 iterate).
+pub fn write_broadcast_frame(w: &mut impl Write, worker: usize, b: &Broadcast) -> io::Result<()> {
+    w.write_all(&[TAG_BROADCAST])?;
+    w.write_all(&b.round.to_le_bytes())?;
+    w.write_all(&(worker as u32).to_le_bytes())?;
+    w.write_all(&(b.iterate.len() as u64).to_le_bytes())?;
+    for &v in &b.iterate {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Serialize one upload frame (exact wire bytes + accounting + arrival).
+pub fn write_upload_frame(w: &mut impl Write, up: &Upload, at: Option<u64>) -> io::Result<()> {
+    w.write_all(&[TAG_UPLOAD])?;
+    w.write_all(&up.round.to_le_bytes())?;
+    w.write_all(&(up.worker as u32).to_le_bytes())?;
+    w.write_all(&at.unwrap_or(DROPPED).to_le_bytes())?;
+    w.write_all(&up.local_value.to_le_bytes())?;
+    w.write_all(&(up.msg.n as u64).to_le_bytes())?;
+    w.write_all(&(up.msg.payload_bits as u64).to_le_bytes())?;
+    w.write_all(&(up.msg.side_bits as u64).to_le_bytes())?;
+    w.write_all(&(up.msg.bytes.len() as u64).to_le_bytes())?;
+    w.write_all(&up.msg.bytes)
+}
+
+/// Read the next record; `Ok(None)` at clean end-of-trace.
+pub fn read_trace_frame(r: &mut impl Read) -> io::Result<Option<TraceFrame>> {
+    let mut tag = [0u8; 1];
+    match r.read_exact(&mut tag) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    match tag[0] {
+        TAG_BROADCAST => {
+            let round = read_u64(r)?;
+            let worker = read_u32(r)? as usize;
+            let len = checked_len(read_u64(r)?, "broadcast iterate")?;
+            let mut iterate = Vec::with_capacity(len);
+            for _ in 0..len {
+                iterate.push(read_f32(r)?);
+            }
+            Ok(Some(TraceFrame::Broadcast { round, worker, iterate }))
+        }
+        TAG_UPLOAD => {
+            let round = read_u64(r)?;
+            let worker = read_u32(r)? as usize;
+            let at_raw = read_u64(r)?;
+            let local_value = read_f32(r)?;
+            let n = checked_len(read_u64(r)?, "upload dimension")?;
+            let payload_bits = read_u64(r)? as usize;
+            let side_bits = read_u64(r)? as usize;
+            let nbytes = checked_len(read_u64(r)?, "upload bytes")?;
+            let mut bytes = vec![0u8; nbytes];
+            r.read_exact(&mut bytes)?;
+            Ok(Some(TraceFrame::Upload {
+                up: Upload {
+                    round,
+                    worker,
+                    msg: Compressed { n, bytes, payload_bits, side_bits },
+                    local_value,
+                },
+                at: if at_raw == DROPPED { None } else { Some(at_raw) },
+            }))
+        }
+        t => Err(io::Error::new(io::ErrorKind::InvalidData, format!("unknown trace tag {t}"))),
+    }
+}
+
+fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32(r: &mut impl Read) -> io::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -76,6 +235,7 @@ mod tests {
         };
         assert_eq!(up.payload_bits(), 200);
         assert_eq!(up.overhead_bits(), 64 + 32 + 32 + 32);
+        assert_eq!(upload_wire_bytes(&up.msg), (200 + 32 + UPLOAD_HEADER_BITS).div_ceil(8));
     }
 
     #[test]
@@ -83,5 +243,81 @@ mod tests {
         let b = Broadcast { round: 0, iterate: vec![0.0; 10] };
         assert_eq!(b.payload_bits(), 0);
         assert_eq!(b.overhead_bits(), 64 + 320);
+    }
+
+    #[test]
+    fn trace_frames_roundtrip() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_trace_header(&mut buf, 3).unwrap();
+        let b = Broadcast { round: 7, iterate: vec![1.0, -2.5, 0.0] };
+        write_broadcast_frame(&mut buf, 2, &b).unwrap();
+        let up = Upload {
+            round: 7,
+            worker: 2,
+            msg: Compressed { n: 16, bytes: vec![0xAB, 0xCD], payload_bits: 12, side_bits: 32 },
+            local_value: 3.25,
+        };
+        write_upload_frame(&mut buf, &up, Some(450)).unwrap();
+        write_upload_frame(&mut buf, &up, None).unwrap();
+
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_trace_header(&mut r).unwrap(), 3);
+        match read_trace_frame(&mut r).unwrap().unwrap() {
+            TraceFrame::Broadcast { round, worker, iterate } => {
+                assert_eq!((round, worker), (7, 2));
+                assert_eq!(iterate, vec![1.0, -2.5, 0.0]);
+            }
+            other => panic!("expected broadcast, got {other:?}"),
+        }
+        match read_trace_frame(&mut r).unwrap().unwrap() {
+            TraceFrame::Upload { up, at } => {
+                assert_eq!(at, Some(450));
+                assert_eq!(up.round, 7);
+                assert_eq!(up.worker, 2);
+                assert_eq!(up.msg.bytes, vec![0xAB, 0xCD]);
+                assert_eq!(up.msg.payload_bits, 12);
+                assert_eq!(up.local_value, 3.25);
+            }
+            other => panic!("expected upload, got {other:?}"),
+        }
+        match read_trace_frame(&mut r).unwrap().unwrap() {
+            TraceFrame::Upload { at, .. } => assert_eq!(at, None),
+            other => panic!("expected upload, got {other:?}"),
+        }
+        assert!(read_trace_frame(&mut r).unwrap().is_none(), "clean EOF expected");
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut r: &[u8] = b"NOTATRACE.......";
+        assert!(read_trace_header(&mut r).is_err());
+    }
+
+    #[test]
+    fn corrupt_length_fields_are_rejected_not_allocated() {
+        // An upload frame whose nbytes field is garbage must come back
+        // as InvalidData, not as a giant allocation.
+        let mut buf: Vec<u8> = Vec::new();
+        buf.push(1u8); // upload tag
+        buf.extend_from_slice(&0u64.to_le_bytes()); // round
+        buf.extend_from_slice(&0u32.to_le_bytes()); // worker
+        buf.extend_from_slice(&0u64.to_le_bytes()); // arrival
+        buf.extend_from_slice(&0f32.to_le_bytes()); // local value
+        buf.extend_from_slice(&8u64.to_le_bytes()); // n
+        buf.extend_from_slice(&8u64.to_le_bytes()); // payload bits
+        buf.extend_from_slice(&0u64.to_le_bytes()); // side bits
+        buf.extend_from_slice(&(u64::MAX / 2).to_le_bytes()); // corrupt nbytes
+        let mut r: &[u8] = &buf;
+        let err = read_trace_frame(&mut r).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Same for a broadcast frame's iterate length.
+        let mut buf: Vec<u8> = Vec::new();
+        buf.push(0u8); // broadcast tag
+        buf.extend_from_slice(&0u64.to_le_bytes()); // round
+        buf.extend_from_slice(&0u32.to_le_bytes()); // worker
+        buf.extend_from_slice(&u64::MAX.to_le_bytes()); // corrupt len
+        let mut r: &[u8] = &buf;
+        let err = read_trace_frame(&mut r).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
     }
 }

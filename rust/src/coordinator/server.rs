@@ -1,40 +1,40 @@
-//! Parameter-server loop: broadcast → collect → decode → consensus →
-//! step → project (Algorithm 3's server side).
+//! Parameter-server loop: broadcast → collect → select participants →
+//! decode → consensus → step → project (Algorithm 3's server side, over
+//! any [`ServerTransport`]).
 //!
-//! The round loop itself is allocation-free in steady state: decode
-//! scratch lives in per-worker [`DecodeSlot`]s, uploads collect into a
-//! reused vector, and broadcast/wire buffers recycle through the run's
+//! The round loop itself is allocation-free in steady state on the
+//! in-process transport: decode scratch lives in per-worker
+//! [`DecodeSlot`]s, arrivals collect into a reused vector, participant
+//! selection is an in-place sort, and broadcast/wire buffers recycle
+//! through the run's
 //! [`ChannelPools`](crate::coordinator::channel::ChannelPools) —
 //! `rust/tests/test_alloc.rs` proves this on the sequential decode path
 //! (`n <` the threshold). Above the threshold the decode deliberately
-//! spends `m` scoped-thread spawns per round to parallelize the
-//! `O(N log N)` inverse transforms — stack setup is the price of the
+//! spends participant-many scoped-thread spawns per round to parallelize
+//! the `O(N log N)` inverse transforms — stack setup is the price of the
 //! fan-out, while the decoded data still lands in the same warm,
-//! recycled buffers. It is also
-//! *seed-deterministic*: uploads are sorted by worker id before decoding
-//! and accumulated in that order, so the consensus iterates are identical
-//! regardless of upload arrival order and of whether the decode ran
-//! sequentially or on scoped threads.
+//! recycled buffers.
+//!
+//! It is also *seed-deterministic*: the server always collects exactly
+//! `m` frames per round (the transport marks lost frames instead of
+//! withholding them), the participation policy picks a subset as a pure
+//! function of `(arrival times, seed, round)`, participants are sorted
+//! by worker id before decoding, and the consensus accumulates in that
+//! order — so the iterates are identical regardless of upload arrival
+//! order and of whether the decode ran sequentially or on scoped
+//! threads.
 
-use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::channel::{ChannelPools, TrafficCounter};
 use crate::coordinator::config::RunConfig;
 use crate::coordinator::metrics::{RoundMetrics, RunMetrics};
-use crate::coordinator::protocol::{Broadcast, Upload};
+use crate::coordinator::protocol::Broadcast;
+use crate::coordinator::transport::{select_participants, Arrival, ServerTransport};
 use crate::opt::projection::Domain;
 use crate::quant::{Compressor, Workspace};
 
-/// Default dimension at which the server fans the per-round decode out
-/// across scoped threads. Below this, a decode is a few microseconds of
-/// work and a thread spawn would cost more than it saves; above it (the
-/// (N)DSC decode is an `O(N log N)` FWHT plus an `O(N)` inverse transform,
-/// and the transformer workload has `n ~ 10^5`) the `m`-way fan-out is a
-/// near-linear speedup of the consensus step. Override per run via
-/// [`RunConfig::parallel_decode_min_dim`] (tests force both paths with it).
-pub const PARALLEL_DECODE_MIN_DIM: usize = 8192;
+pub use crate::coordinator::config::PARALLEL_DECODE_MIN_DIM;
 
 /// Per-worker decode scratch: a codec workspace plus the decoded-output
 /// buffer, allocated once per run.
@@ -43,55 +43,62 @@ struct DecodeSlot {
     q: Vec<f32>,
 }
 
-/// Decode the round's uploads into the consensus average. One scoped
-/// thread per upload when `n` is large enough to amortize the spawns.
-/// Uploads are first sorted by worker id and the decoded estimates are
-/// accumulated in that order, so the result is bit-identical between the
-/// sequential and the threaded path *and* across runs (upload arrival
-/// order is scheduler-dependent; worker-id order is not).
+/// Decode the round's participating uploads into the consensus average
+/// (mean over the participants). One scoped thread per upload when `n`
+/// is large enough to amortize the spawns.
+///
+/// Precondition: `participants` is sorted by worker id —
+/// [`select_participants`]' documented postcondition — and the decoded
+/// estimates are accumulated in that order, so the result is
+/// bit-identical between the sequential and the threaded path *and*
+/// across runs (upload arrival order is scheduler-dependent; worker-id
+/// order is not).
 fn decode_round(
     consensus: &mut [f32],
-    ups: &mut [Upload],
+    participants: &[Arrival],
     compressors: &[Arc<dyn Compressor>],
     slots: &mut [DecodeSlot],
     parallel_min_dim: usize,
 ) {
-    let m = ups.len();
+    let p = participants.len();
+    if p == 0 {
+        return;
+    }
     let n = consensus.len();
-    ups.sort_unstable_by_key(|up| up.worker);
-    if m > 1 && n >= parallel_min_dim {
+    debug_assert!(
+        participants.windows(2).all(|w| w[0].up.worker <= w[1].up.worker),
+        "decode_round requires worker-id-sorted participants"
+    );
+    if p > 1 && n >= parallel_min_dim {
         std::thread::scope(|s| {
-            for (up, slot) in ups.iter().zip(slots.iter_mut()) {
-                let comp = &compressors[up.worker];
-                s.spawn(move || comp.decompress_into(&up.msg, &mut slot.ws, &mut slot.q));
+            for (a, slot) in participants.iter().zip(slots.iter_mut()) {
+                let comp = &compressors[a.up.worker];
+                s.spawn(move || comp.decompress_into(&a.up.msg, &mut slot.ws, &mut slot.q));
             }
         });
     } else {
-        for (up, slot) in ups.iter().zip(slots.iter_mut()) {
-            compressors[up.worker].decompress_into(&up.msg, &mut slot.ws, &mut slot.q);
+        for (a, slot) in participants.iter().zip(slots.iter_mut()) {
+            compressors[a.up.worker].decompress_into(&a.up.msg, &mut slot.ws, &mut slot.q);
         }
     }
-    for slot in slots.iter() {
+    for slot in slots[..p].iter() {
         for (c, &qi) in consensus.iter_mut().zip(&slot.q) {
-            *c += qi / m as f32;
+            *c += qi / p as f32;
         }
     }
 }
 
-/// Server loop. `eval` computes the global objective value of an iterate
-/// (for metrics; pass a cheap proxy for expensive models).
-#[allow(clippy::too_many_arguments)]
+/// Server loop over an abstract transport. `eval` computes the global
+/// objective value of an iterate (for metrics; pass a cheap proxy for
+/// expensive models).
 pub fn server_loop(
     cfg: &RunConfig,
     x0: Vec<f32>,
-    downlinks: &[SyncSender<Broadcast>],
-    uplink: &Receiver<Upload>,
+    transport: &mut dyn ServerTransport,
     compressors: &[Arc<dyn Compressor>],
-    pools: &ChannelPools,
-    traffic: Arc<TrafficCounter>,
     mut eval: impl FnMut(&[f32]) -> f32,
 ) -> RunMetrics {
-    let m = downlinks.len();
+    let m = transport.workers();
     let n = cfg.n;
     assert_eq!(x0.len(), n, "x0 dimension mismatch");
     let domain = if cfg.radius.is_finite() {
@@ -104,9 +111,10 @@ pub fn server_loop(
     let mut consensus = vec![0.0f32; n];
     let mut metrics =
         RunMetrics { rounds: Vec::with_capacity(cfg.rounds), ..Default::default() };
-    // Per-run preallocation: upload collection vector and per-worker
-    // decode slots. Nothing below this line allocates in steady state.
-    let mut ups: Vec<Upload> = Vec::with_capacity(m);
+    // Per-run preallocation: arrival collection vector and per-worker
+    // decode slots. Nothing below this line allocates in steady state
+    // (on the in-process transport).
+    let mut arrivals: Vec<Arrival> = Vec::with_capacity(m);
     let mut slots: Vec<DecodeSlot> = compressors
         .iter()
         .map(|c| DecodeSlot { ws: Workspace::for_compressor(c.as_ref()), q: vec![0.0f32; n] })
@@ -116,36 +124,62 @@ pub fn server_loop(
         let t0 = Instant::now();
         // Broadcast the iterate: one recycled buffer per worker (fresh
         // only during warm-up; workers return them before uploading).
-        for tx in downlinks {
-            let mut it = pools.iterates.get_or(|| Vec::with_capacity(n));
+        for w in 0..m {
+            let mut it = transport.pools().iterates.get_or(|| Vec::with_capacity(n));
             it.clear();
             it.extend_from_slice(&x);
-            // A dead worker is fatal: the consensus average would silently
-            // change semantics, so surface it.
-            tx.send(Broadcast { round, iterate: it }).expect("worker hung up");
+            // A dead worker (or a failed trace write) is fatal: the
+            // consensus average would silently change semantics, so
+            // surface it — with the transport's own diagnosis, since
+            // "worker hung up" and "disk full" need different fixes.
+            transport
+                .broadcast(w, Broadcast { round, iterate: it })
+                .unwrap_or_else(|e| panic!("broadcast to worker {w} failed at round {round}: {e}"));
         }
-        // Collect exactly m uploads for this round (workers answer every
-        // broadcast exactly once; rounds cannot interleave), then decode
-        // them — in parallel when the dimension warrants it.
-        consensus.fill(0.0);
+        // Collect exactly m frames for this round (workers answer every
+        // broadcast exactly once — lost frames arrive *marked*, not
+        // missing — so rounds cannot interleave)...
         let mut round_bits = 0usize;
-        ups.clear();
+        arrivals.clear();
         for _ in 0..m {
-            let up = uplink.recv().expect("all workers disconnected");
-            assert_eq!(up.round, round, "round skew: got {} want {round}", up.round);
-            round_bits += up.msg.payload_bits;
-            ups.push(up);
+            let a = transport
+                .recv()
+                .unwrap_or_else(|e| panic!("uplink failed at round {round}: {e}"));
+            assert_eq!(a.up.round, round, "round skew: got {} want {round}", a.up.round);
+            assert_eq!(
+                a.up.msg.n, n,
+                "dimension skew: frame carries n={}, config says {n} \
+                 (replaying a trace recorded at a different dimension?)",
+                a.up.msg.n
+            );
+            round_bits += a.up.msg.payload_bits;
+            arrivals.push(a);
         }
-        decode_round(&mut consensus, &mut ups, compressors, &mut slots, cfg.parallel_decode_min_dim);
-        // `ups` is worker-id-sorted after decode_round: sum the local
-        // values in that (deterministic) order, then recycle the spent
-        // wire buffers for the workers' next round.
+        // ...then let the participation policy pick which delivered
+        // frames join the consensus, and decode those — in parallel when
+        // the dimension warrants it.
+        let p = select_participants(&mut arrivals, cfg.participation, round, cfg.seed);
+        consensus.fill(0.0);
+        decode_round(
+            &mut consensus,
+            &arrivals[..p],
+            compressors,
+            &mut slots,
+            cfg.parallel_decode_min_dim,
+        );
+        // Participants are worker-id-sorted after decode_round: sum the
+        // local values in that (deterministic) order, then recycle every
+        // frame's wire buffer — non-participants' too — for the workers'
+        // next round.
         let mut local_sum = 0.0f64;
-        for up in ups.iter_mut() {
-            local_sum += up.local_value as f64;
-            pools.bytes.put(std::mem::take(&mut up.msg.bytes));
+        for a in arrivals[..p].iter() {
+            local_sum += a.up.local_value as f64;
         }
-        // Step + project.
+        for a in arrivals.iter_mut() {
+            transport.pools().bytes.put(std::mem::take(&mut a.up.msg.bytes));
+        }
+        // Step + project (a zero-participant round leaves x unchanged —
+        // the consensus estimate is zero).
         for (xi, &ci) in x.iter_mut().zip(&consensus) {
             *xi -= cfg.step * ci;
         }
@@ -153,11 +187,13 @@ pub fn server_loop(
         metrics.rounds.push(RoundMetrics {
             round,
             value: eval(&x),
-            mean_local_value: (local_sum / m as f64) as f32,
+            mean_local_value: if p > 0 { (local_sum / p as f64) as f32 } else { f32::NAN },
             payload_bits: round_bits,
+            participants: p,
             wall: t0.elapsed(),
         });
     }
+    let traffic = transport.traffic();
     metrics.total_payload_bits = traffic.payload_bits.load(std::sync::atomic::Ordering::Relaxed);
     metrics.total_overhead_bits = traffic.overhead_bits.load(std::sync::atomic::Ordering::Relaxed);
     metrics.rejected_messages = traffic.rejected.load(std::sync::atomic::Ordering::Relaxed);
@@ -211,6 +247,7 @@ mod tests {
         });
         assert_eq!(metrics.rounds.len(), 150);
         assert_eq!(metrics.rejected_messages, 0);
+        assert!(metrics.rounds.iter().all(|r| r.participants == 4));
         let first = metrics.rounds[0].value;
         let last = metrics.final_value();
         assert!(last < 0.1 * first, "loss {first} -> {last}");

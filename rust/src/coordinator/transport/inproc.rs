@@ -1,0 +1,161 @@
+//! In-process transport: bounded, budget-enforced `sync_channel`s with
+//! pooled buffer recycling — exactly the pre-transport coordinator path,
+//! now behind the [`ServerTransport`]/[`WorkerTransport`] seam.
+//!
+//! Channels are *bounded* (ring buffers allocated once at setup): workers
+//! send at most one upload per round, so `2m` uplink slots and 2 downlink
+//! slots per worker never fill, and steady-state sends touch no heap.
+//! Every frame is delivered instantly (`at = Some(0)`), so under
+//! [`Participation::Full`](crate::coordinator::transport::Participation)
+//! the behavior — and the bits — are identical to the legacy coordinator;
+//! `rust/tests/test_alloc.rs` holds this transport to zero steady-state
+//! allocations per round.
+
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+
+use crate::coordinator::channel::{AccountedSender, ChannelError, ChannelPools, TrafficCounter};
+use crate::coordinator::protocol::{Broadcast, Upload};
+
+use super::{demote_err, Arrival, ServerTransport, TransportError, WorkerTransport};
+
+/// Server half of the channel transport (shared by InProc, SimNet and
+/// Recorded — they differ only in what the *worker* side stamps on each
+/// frame and in what gets written to disk).
+pub(crate) struct ChannelServer {
+    down_txs: Vec<SyncSender<Broadcast>>,
+    up_rx: Receiver<Arrival>,
+    pools: Arc<ChannelPools>,
+    traffic: Arc<TrafficCounter>,
+}
+
+impl ServerTransport for ChannelServer {
+    fn workers(&self) -> usize {
+        self.down_txs.len()
+    }
+
+    fn broadcast(&mut self, worker: usize, b: Broadcast) -> Result<(), TransportError> {
+        self.down_txs[worker].send(b).map_err(|_| TransportError::Disconnected)
+    }
+
+    fn recv(&mut self) -> Result<Arrival, TransportError> {
+        self.up_rx.recv().map_err(|_| TransportError::Disconnected)
+    }
+
+    fn pools(&self) -> &Arc<ChannelPools> {
+        &self.pools
+    }
+
+    fn traffic(&self) -> Arc<TrafficCounter> {
+        self.traffic.clone()
+    }
+
+    fn finish(&mut self) {
+        // Dropping the downlink senders closes every worker's receive
+        // loop; the scoped-thread join in `run_distributed` does the rest.
+        self.down_txs.clear();
+    }
+}
+
+/// Worker half: instant, reliable delivery (`at = 0`).
+pub struct InProcWorker {
+    pub(crate) down_rx: Receiver<Broadcast>,
+    pub(crate) up_tx: AccountedSender<Arrival>,
+}
+
+impl WorkerTransport for InProcWorker {
+    fn recv_broadcast(&mut self) -> Option<Broadcast> {
+        self.down_rx.recv().ok()
+    }
+
+    fn upload(&mut self, up: Upload) -> Result<(), ChannelError<Upload>> {
+        self.up_tx.send(Arrival { up, at: Some(0) }).map_err(demote_err)
+    }
+}
+
+/// Wire up the shared channel fabric: one bounded downlink per worker,
+/// one shared bounded uplink, per-worker budget enforcement, one traffic
+/// counter and one set of buffer pools for the whole run.
+pub(crate) fn channel_fabric(
+    budgets: &[Option<usize>],
+) -> (ChannelServer, Vec<InProcWorker>) {
+    let m = budgets.len();
+    // Workers send at most one upload per round: 2m slots never fill.
+    let (up_tx, up_rx) = mpsc::sync_channel::<Arrival>(2 * m.max(1));
+    let traffic = Arc::new(TrafficCounter::default());
+    let pools = Arc::new(ChannelPools::new(m));
+    let mut down_txs = Vec::with_capacity(m);
+    let mut workers = Vec::with_capacity(m);
+    for &budget in budgets {
+        // At most one broadcast is in flight per worker: 2 slots suffice.
+        let (down_tx, down_rx) = mpsc::sync_channel::<Broadcast>(2);
+        down_txs.push(down_tx);
+        workers.push(InProcWorker {
+            down_rx,
+            up_tx: AccountedSender::with_counter(up_tx.clone(), traffic.clone(), budget),
+        });
+    }
+    // The prototype sender drops here: only worker-held clones remain, so
+    // a dead worker set is observable as a closed channel, not a deadlock.
+    drop(up_tx);
+    (ChannelServer { down_txs, up_rx, pools, traffic }, workers)
+}
+
+/// Build the in-process transport for `budgets.len()` workers.
+pub fn build(
+    budgets: &[Option<usize>],
+) -> (Box<dyn ServerTransport>, Vec<Box<dyn WorkerTransport>>) {
+    let (server, workers) = channel_fabric(budgets);
+    (
+        Box::new(server),
+        workers.into_iter().map(|w| Box::new(w) as Box<dyn WorkerTransport>).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Compressed;
+
+    fn upload(worker: usize, payload_bits: usize) -> Upload {
+        Upload {
+            round: 0,
+            worker,
+            msg: Compressed {
+                n: 8,
+                bytes: vec![0; payload_bits.div_ceil(8)],
+                payload_bits,
+                side_bits: 0,
+            },
+            local_value: 0.0,
+        }
+    }
+
+    #[test]
+    fn per_worker_budgets_are_enforced_independently() {
+        let (mut server, mut workers) = channel_fabric(&[Some(8), Some(64)]);
+        // Worker 0 (8-bit cap) rejects a 16-bit payload; worker 1 accepts.
+        match workers[0].upload(upload(0, 16)) {
+            Err(ChannelError::OverBudget { payload_bits, budget_bits }) => {
+                assert_eq!((payload_bits, budget_bits), (16, 8));
+            }
+            other => panic!("expected OverBudget, got {other:?}"),
+        }
+        workers[1].upload(upload(1, 16)).unwrap();
+        let a = server.recv().unwrap();
+        assert_eq!(a.up.worker, 1);
+        assert_eq!(a.at, Some(0));
+        let t = server.traffic();
+        assert_eq!(t.payload_bits.load(std::sync::atomic::Ordering::Relaxed), 16);
+        assert_eq!(t.rejected.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn finish_closes_worker_downlinks() {
+        let (mut server, mut workers) = channel_fabric(&[None]);
+        server.broadcast(0, Broadcast { round: 0, iterate: vec![0.0; 4] }).unwrap();
+        assert!(workers[0].recv_broadcast().is_some());
+        server.finish();
+        assert!(workers[0].recv_broadcast().is_none());
+    }
+}

@@ -1,0 +1,362 @@
+//! Pluggable wire transport for the coordinator — the seam between the
+//! paper's *algorithm* (what crosses the wire: `⌊n·R_i⌋`-bit quantized
+//! descent directions) and the *network* that carries it.
+//!
+//! A transport owns message delivery, byte accounting and buffer
+//! recycling on both sides of the star:
+//!
+//! ```text
+//!            ┌────────────────────── server thread ─────────────────────┐
+//!            │ server_loop ── broadcast(w, ·) ─┐   ┌─ recv() → Arrival  │
+//!            └─────────────────────────────────┼───┼────────────────────┘
+//!                                    [`ServerTransport`]
+//!                                              │   │
+//!                     InProc │ SimNet │ Recorded │ Replay
+//!                                              │   │
+//!            ┌─────────────────────────────────┼───┼────────────────────┐
+//!            │ worker_loop ←─ recv_broadcast() ─┘   └── upload(Upload)  │
+//!            └────────────────────── worker threads ────────────────────┘
+//! ```
+//!
+//! Three live implementations plus a replay source:
+//!
+//! * [`inproc`] — today's pooled, bounded `sync_channel`s; bit-identical
+//!   to the pre-transport coordinator and allocation-free in steady state.
+//! * [`simnet`] — a deterministic, seeded network model: per-link base
+//!   latency, jitter, drop probability and bandwidth, composed over a
+//!   [`Topology`] (star / chain / tree) that multiplies hops. Arrival
+//!   times are *simulated* (virtual µs) and computed from
+//!   `(seed, round, worker)` alone, so every straggler/lossy-link
+//!   schedule is exactly reproducible regardless of thread scheduling.
+//! * [`recorded`] — wraps the channel transport and serializes every wire
+//!   frame (broadcasts and uploads) to a trace file; [`recorded::replay`]
+//!   re-feeds a trace into a server loop with no workers at all and
+//!   reproduces the original server iterates bit-for-bit.
+//!
+//! **Lockstep with logical stragglers.** Every worker answers every
+//! broadcast exactly once, so the server always collects `m` frames per
+//! round and the buffer-recycling protocol of
+//! [`ChannelPools`](crate::coordinator::channel::ChannelPools) is
+//! preserved. Straggling and loss are *logical*: each frame carries a
+//! simulated arrival tag ([`Arrival::at`]; `None` = lost by the link),
+//! and the [`Participation`] policy decides which delivered frames the
+//! server actually aggregates. This keeps rounds deadlock-free and
+//! deterministic while still modeling k-of-m and deadline aggregation.
+
+pub mod inproc;
+pub mod recorded;
+pub mod simnet;
+
+use std::sync::mpsc::SendError;
+use std::sync::Arc;
+
+use crate::coordinator::channel::{ChannelError, ChannelPools, TrafficCounter};
+use crate::coordinator::protocol::{Broadcast, Upload, WireSize};
+
+pub use recorded::replay;
+pub use simnet::{LinkModel, SimNetConfig, Topology};
+
+/// Simulated network time, in microseconds. Virtual — no wall clock is
+/// ever consulted, which is what makes SimNet schedules reproducible.
+pub type SimTime = u64;
+
+/// One uplink frame as the server receives it: the payload plus the
+/// transport's delivery verdict.
+#[derive(Debug)]
+pub struct Arrival {
+    pub up: Upload,
+    /// Simulated arrival time at the server; `None` = the link lost the
+    /// frame (the bits were still spent — they are counted at send).
+    pub at: Option<SimTime>,
+}
+
+impl WireSize for Arrival {
+    fn payload_bits(&self) -> usize {
+        self.up.payload_bits()
+    }
+
+    fn overhead_bits(&self) -> usize {
+        // The arrival tag is simulation metadata, not wire data.
+        self.up.overhead_bits()
+    }
+}
+
+/// Transport-level failure.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The peer(s) hung up.
+    Disconnected,
+    /// Trace-file I/O failed (Recorded/Replay only).
+    Io(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Disconnected => write!(f, "transport peer disconnected"),
+            TransportError::Io(e) => write!(f, "transport I/O error: {e}"),
+        }
+    }
+}
+
+/// Server-side endpoint: broadcast delivery, upload collection, and the
+/// run's shared buffer pools / traffic counters.
+pub trait ServerTransport: Send {
+    /// Number of workers this transport was built for.
+    fn workers(&self) -> usize;
+
+    /// Deliver the round's broadcast to worker `w`. The iterate buffer
+    /// inside `b` comes from [`ServerTransport::pools`] and is returned
+    /// there by the worker.
+    fn broadcast(&mut self, worker: usize, b: Broadcast) -> Result<(), TransportError>;
+
+    /// Block for the next uplink frame (delivered or dropped — the server
+    /// receives exactly one frame per worker per round).
+    fn recv(&mut self) -> Result<Arrival, TransportError>;
+
+    /// The run's buffer-recycling pools, shared with every worker.
+    fn pools(&self) -> &Arc<ChannelPools>;
+
+    /// Shared uplink traffic counters (payload/overhead/messages/rejects).
+    fn traffic(&self) -> Arc<TrafficCounter>;
+
+    /// End the run: close downlinks so workers exit, flush trace files.
+    fn finish(&mut self) {}
+}
+
+/// Worker-side endpoint.
+pub trait WorkerTransport: Send {
+    /// Block for the next broadcast; `None` = server closed the downlink.
+    fn recv_broadcast(&mut self) -> Option<Broadcast>;
+
+    /// Send one uplink frame. Budget enforcement (this worker's
+    /// `⌊n·R_i⌋`) happens here; an over-budget payload is rejected.
+    fn upload(&mut self, up: Upload) -> Result<(), ChannelError<Upload>>;
+}
+
+/// Which of a round's delivered uploads the server aggregates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Participation {
+    /// Every delivered upload (classic full participation).
+    Full,
+    /// The `k` earliest-arriving delivered uploads (count-triggered
+    /// k-of-m; ties broken by a seeded per-round ranking, so on a
+    /// zero-latency transport this is a uniformly random k-subset).
+    KofM { k: usize },
+    /// Delivered uploads arriving within `us` simulated microseconds
+    /// (deadline-triggered). On a zero-latency transport everything
+    /// arrives at t = 0, so any deadline degrades to full participation.
+    Deadline { us: SimTime },
+}
+
+impl Participation {
+    /// Parse `full`, `k:<count>` or `deadline:<µs>`.
+    pub fn parse(s: &str) -> Option<Participation> {
+        let t = s.to_ascii_lowercase();
+        if t == "full" {
+            return Some(Participation::Full);
+        }
+        if let Some(v) = t.strip_prefix("k:") {
+            return v.parse().ok().map(|k| Participation::KofM { k });
+        }
+        if let Some(v) = t.strip_prefix("deadline:").or_else(|| t.strip_prefix("dl:")) {
+            return v.parse().ok().map(|us| Participation::Deadline { us });
+        }
+        None
+    }
+}
+
+impl std::fmt::Display for Participation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Participation::Full => write!(f, "full"),
+            Participation::KofM { k } => write!(f, "k:{k}"),
+            Participation::Deadline { us } => write!(f, "deadline:{us}"),
+        }
+    }
+}
+
+/// Which transport a run uses (the config surface of this module).
+#[derive(Clone, Debug)]
+pub enum TransportKind {
+    /// In-process bounded channels (bit-identical to the legacy path).
+    InProc,
+    /// Deterministic seeded latency/jitter/drop/bandwidth model.
+    SimNet(SimNetConfig),
+    /// Record every wire frame to `path` while running over in-process
+    /// channels (`net: None`) or the given network model.
+    Recorded { path: String, net: Option<SimNetConfig> },
+}
+
+impl TransportKind {
+    /// Short human-readable tag for run summaries.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::SimNet(_) => "simnet",
+            TransportKind::Recorded { .. } => "recorded",
+        }
+    }
+}
+
+/// SplitMix64-style mix of `(seed, round, worker)` — an allocation-free
+/// stand-in for a per-round random permutation: distinct workers get
+/// distinct pseudo-random ranks, so sorting by rank yields a uniformly
+/// random order among equal arrival times.
+pub(crate) fn round_rank(seed: u64, round: u64, worker: usize) -> u64 {
+    let mut z = seed
+        ^ round.wrapping_mul(0x9E3779B97F4A7C15)
+        ^ (worker as u64).wrapping_mul(0xA24BAED4963EE407);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Apply the participation policy to one round's `m` arrivals.
+///
+/// Reorders `arrivals` in place (no allocation) so that the selected
+/// participants occupy the prefix, **sorted by worker id** — the
+/// deterministic accumulation order the decode step requires — and
+/// returns the participant count. Dropped frames always sort to the
+/// back; ties in arrival time are broken by [`round_rank`], making
+/// `KofM` on a zero-latency transport a uniformly random k-subset.
+pub fn select_participants(
+    arrivals: &mut [Arrival],
+    policy: Participation,
+    round: u64,
+    seed: u64,
+) -> usize {
+    arrivals.sort_unstable_by_key(|a| match a.at {
+        Some(at) => (0u8, at, round_rank(seed, round, a.up.worker)),
+        None => (1u8, 0, 0),
+    });
+    let delivered = arrivals.iter().take_while(|a| a.at.is_some()).count();
+    let p = match policy {
+        Participation::Full => delivered,
+        Participation::KofM { k } => delivered.min(k),
+        Participation::Deadline { us } => arrivals[..delivered]
+            .iter()
+            .take_while(|a| a.at.unwrap_or(SimTime::MAX) <= us)
+            .count(),
+    };
+    arrivals[..p].sort_unstable_by_key(|a| a.up.worker);
+    p
+}
+
+/// Build the server endpoint plus one worker endpoint per budget entry.
+///
+/// `budgets[i]` is worker `i`'s per-message payload cap in bits
+/// (`⌊n·R_i⌋`; `None` = unconstrained, the fp32 reference). All workers
+/// share one traffic counter and one set of buffer pools.
+pub fn build(
+    kind: &TransportKind,
+    budgets: &[Option<usize>],
+) -> (Box<dyn ServerTransport>, Vec<Box<dyn WorkerTransport>>) {
+    match kind {
+        TransportKind::InProc => inproc::build(budgets),
+        TransportKind::SimNet(net) => simnet::build(net, budgets),
+        TransportKind::Recorded { path, net } => recorded::build(path, net.as_ref(), budgets),
+    }
+}
+
+/// Map a channel-layer error on an [`Arrival`] back to the [`Upload`] the
+/// worker handed in (the worker loop matches on `ChannelError<Upload>`).
+pub(crate) fn demote_err(e: ChannelError<Arrival>) -> ChannelError<Upload> {
+    match e {
+        ChannelError::OverBudget { payload_bits, budget_bits } => {
+            ChannelError::OverBudget { payload_bits, budget_bits }
+        }
+        ChannelError::Disconnected(SendError(arr)) => {
+            ChannelError::Disconnected(SendError(arr.up))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Compressed;
+
+    fn arrival(worker: usize, at: Option<SimTime>) -> Arrival {
+        Arrival {
+            up: Upload {
+                round: 0,
+                worker,
+                msg: Compressed { n: 4, bytes: vec![0; 2], payload_bits: 10, side_bits: 0 },
+                local_value: 0.0,
+            },
+            at,
+        }
+    }
+
+    #[test]
+    fn full_selects_all_delivered_in_worker_order() {
+        let mut arr =
+            vec![arrival(3, Some(5)), arrival(0, Some(1)), arrival(2, None), arrival(1, Some(9))];
+        let p = select_participants(&mut arr, Participation::Full, 0, 42);
+        assert_eq!(p, 3);
+        let ids: Vec<usize> = arr[..p].iter().map(|a| a.up.worker).collect();
+        assert_eq!(ids, vec![0, 1, 3]);
+        assert_eq!(arr[3].up.worker, 2); // dropped frame parked at the back
+    }
+
+    #[test]
+    fn kofm_takes_earliest_arrivals() {
+        let mut arr = vec![
+            arrival(0, Some(100)),
+            arrival(1, Some(1)),
+            arrival(2, Some(50)),
+            arrival(3, Some(2)),
+        ];
+        let p = select_participants(&mut arr, Participation::KofM { k: 2 }, 0, 7);
+        assert_eq!(p, 2);
+        let ids: Vec<usize> = arr[..p].iter().map(|a| a.up.worker).collect();
+        assert_eq!(ids, vec![1, 3]); // earliest two, re-sorted by worker id
+    }
+
+    #[test]
+    fn kofm_tie_break_is_seeded_and_round_dependent() {
+        // All arrivals at t = 0: the k-subset must be a deterministic
+        // function of (seed, round) and actually vary with the round.
+        let select = |round: u64, seed: u64| -> Vec<usize> {
+            let mut arr: Vec<Arrival> = (0..8).map(|w| arrival(w, Some(0))).collect();
+            let p = select_participants(&mut arr, Participation::KofM { k: 3 }, round, seed);
+            arr[..p].iter().map(|a| a.up.worker).collect()
+        };
+        assert_eq!(select(0, 1), select(0, 1), "same (round, seed) must repeat");
+        let distinct: std::collections::BTreeSet<Vec<usize>> =
+            (0..16).map(|r| select(r, 1)).collect();
+        assert!(distinct.len() > 1, "selection never varied across rounds");
+    }
+
+    #[test]
+    fn deadline_filters_by_sim_time() {
+        let mut arr = vec![
+            arrival(0, Some(100)),
+            arrival(1, Some(10)),
+            arrival(2, None),
+            arrival(3, Some(11)),
+        ];
+        let p = select_participants(&mut arr, Participation::Deadline { us: 50 }, 3, 9);
+        assert_eq!(p, 2);
+        let ids: Vec<usize> = arr[..p].iter().map(|a| a.up.worker).collect();
+        assert_eq!(ids, vec![1, 3]);
+    }
+
+    #[test]
+    fn participation_parse_roundtrip() {
+        assert_eq!(Participation::parse("full"), Some(Participation::Full));
+        assert_eq!(Participation::parse("k:3"), Some(Participation::KofM { k: 3 }));
+        assert_eq!(
+            Participation::parse("deadline:500"),
+            Some(Participation::Deadline { us: 500 })
+        );
+        assert_eq!(Participation::parse("dl:500"), Some(Participation::Deadline { us: 500 }));
+        assert_eq!(Participation::parse("bogus"), None);
+        let all =
+            [Participation::Full, Participation::KofM { k: 4 }, Participation::Deadline { us: 9 }];
+        for p in all {
+            assert_eq!(Participation::parse(&p.to_string()), Some(p));
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Recorded transport + trace replay.
+//!
+//! [`build`] wraps the channel fabric (ideal, or a
+//! [`SimNetConfig`](super::SimNetConfig) model on the worker side) and
+//! serializes the run's wire frames — one broadcast per round with its
+//! full fp32 iterate (the downlink content is identical for all `m`
+//! workers, so one copy is the complete record), and **every** upload
+//! with its exact wire bytes, bit accounting, and simulated arrival
+//! tag — to a trace file in the
+//! [`protocol`](crate::coordinator::protocol) trace format.
+//!
+//! [`replay`] is the other half: it loads a trace and acts as a
+//! [`ServerTransport`] with *no workers at all* — `recv` hands back the
+//! recorded uploads in their recorded order, `broadcast` is a sink — so
+//! running the ordinary server loop over it reproduces the original
+//! server iterates bit-for-bit (`rust/tests/test_transport.rs`). That
+//! makes a trace file a complete, inspectable witness of a distributed
+//! run: what crossed the wire is sufficient to re-derive every iterate.
+//!
+//! Recording buffers through a `BufWriter` and is explicitly *not*
+//! allocation-free; the zero-allocation contract applies to the InProc
+//! hot path only.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Write};
+use std::sync::Arc;
+
+use crate::coordinator::channel::{ChannelPools, TrafficCounter};
+use crate::coordinator::protocol::{
+    read_trace_frame, read_trace_header, write_broadcast_frame, write_trace_header,
+    write_upload_frame, Broadcast, TraceFrame, WireSize,
+};
+
+use super::inproc::{channel_fabric, ChannelServer};
+use super::simnet::SimNetConfig;
+use super::{Arrival, ServerTransport, TransportError, WorkerTransport};
+
+/// Server endpoint that forwards to the channel fabric while writing
+/// every frame it touches to the trace file.
+struct RecordedServer {
+    inner: ChannelServer,
+    writer: BufWriter<File>,
+    path: String,
+}
+
+impl ServerTransport for RecordedServer {
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn broadcast(&mut self, worker: usize, b: Broadcast) -> Result<(), TransportError> {
+        // The round's iterate is identical for every worker, so one
+        // broadcast frame per round carries the full downlink content —
+        // recording all m copies would multiply the trace by m (~1 GB at
+        // transformer scale) for bytes the replay discards anyway.
+        if worker == 0 {
+            write_broadcast_frame(&mut self.writer, worker, &b)
+                .map_err(|e| TransportError::Io(format!("{}: {e}", self.path)))?;
+        }
+        self.inner.broadcast(worker, b)
+    }
+
+    fn recv(&mut self) -> Result<Arrival, TransportError> {
+        let a = self.inner.recv()?;
+        write_upload_frame(&mut self.writer, &a.up, a.at)
+            .map_err(|e| TransportError::Io(format!("{}: {e}", self.path)))?;
+        Ok(a)
+    }
+
+    fn pools(&self) -> &Arc<ChannelPools> {
+        self.inner.pools()
+    }
+
+    fn traffic(&self) -> Arc<TrafficCounter> {
+        self.inner.traffic()
+    }
+
+    fn finish(&mut self) {
+        if let Err(e) = self.writer.flush() {
+            eprintln!("recorded transport: could not flush {}: {e}", self.path);
+        }
+        self.inner.finish();
+    }
+}
+
+/// Build a recording transport writing to `path`. Worker endpoints come
+/// from `net` when given (record a straggler/lossy scenario) and are
+/// plain in-process endpoints otherwise. Panics if the trace file cannot
+/// be created — a run that silently records nothing would be worse.
+pub fn build(
+    path: &str,
+    net: Option<&SimNetConfig>,
+    budgets: &[Option<usize>],
+) -> (Box<dyn ServerTransport>, Vec<Box<dyn WorkerTransport>>) {
+    let file = File::create(path)
+        .unwrap_or_else(|e| panic!("recorded transport: cannot create '{path}': {e}"));
+    let mut writer = BufWriter::new(file);
+    write_trace_header(&mut writer, budgets.len())
+        .unwrap_or_else(|e| panic!("recorded transport: cannot write '{path}': {e}"));
+
+    let (inner, inproc_workers) = channel_fabric(budgets);
+    let workers: Vec<Box<dyn WorkerTransport>> = match net {
+        None => inproc_workers
+            .into_iter()
+            .map(|w| Box::new(w) as Box<dyn WorkerTransport>)
+            .collect(),
+        Some(cfg) => inproc_workers
+            .into_iter()
+            .enumerate()
+            .map(|(i, inner)| super::simnet::wrap_worker(inner, i, cfg))
+            .collect(),
+    };
+    (Box::new(RecordedServer { inner, writer, path: path.to_string() }), workers)
+}
+
+/// Replay server: a [`ServerTransport`] whose "network" is a recorded
+/// trace. No workers exist; broadcasts return their buffer to the pool,
+/// and `recv` streams the recorded uploads in order straight off the
+/// reader — O(1) residency even for transformer-scale traces (the
+/// uploads are consumed strictly in recorded order, so nothing needs to
+/// be buffered).
+pub struct ReplayServer {
+    workers: usize,
+    reader: BufReader<File>,
+    path: String,
+    pools: Arc<ChannelPools>,
+    traffic: Arc<TrafficCounter>,
+}
+
+impl ServerTransport for ReplayServer {
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn broadcast(&mut self, _worker: usize, b: Broadcast) -> Result<(), TransportError> {
+        // Return the iterate buffer straight to the pool: the recycling
+        // protocol expects the "worker" to hand it back each round.
+        self.pools.iterates.put(b.iterate);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Arrival, TransportError> {
+        loop {
+            match read_trace_frame(&mut self.reader) {
+                Ok(Some(TraceFrame::Broadcast { .. })) => continue, // re-derived by the server
+                Ok(Some(TraceFrame::Upload { up, at })) => {
+                    // No workers exist to drain the bytes pool the server
+                    // refills after each decode; discard one parked
+                    // buffer per streamed frame so replay residency stays
+                    // O(m) instead of growing by rounds × m buffers.
+                    drop(self.pools.bytes.try_get());
+                    let a = Arrival { up, at };
+                    // Mirror the live accounting (counted at worker
+                    // send): replayed totals must match the recorded
+                    // run's.
+                    self.traffic
+                        .payload_bits
+                        .fetch_add(a.payload_bits(), std::sync::atomic::Ordering::Relaxed);
+                    self.traffic
+                        .overhead_bits
+                        .fetch_add(a.overhead_bits(), std::sync::atomic::Ordering::Relaxed);
+                    self.traffic.messages.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    return Ok(a);
+                }
+                // Clean EOF gets its own diagnosis: "all workers
+                // disconnected" would be nonsense for a run with no
+                // workers — the trace simply has fewer rounds than the
+                // replaying config asked for.
+                Ok(None) => {
+                    return Err(TransportError::Io(format!(
+                        "{}: trace exhausted (recorded run had fewer rounds than cfg.rounds)",
+                        self.path
+                    )))
+                }
+                Err(e) => return Err(TransportError::Io(format!("{}: {e}", self.path))),
+            }
+        }
+    }
+
+    fn pools(&self) -> &Arc<ChannelPools> {
+        &self.pools
+    }
+
+    fn traffic(&self) -> Arc<TrafficCounter> {
+        self.traffic.clone()
+    }
+}
+
+/// Open a trace for (streaming) replay. Broadcast records are skipped on
+/// the fly (the replaying server re-derives every iterate itself —
+/// matching them bit-for-bit is exactly what the replay test asserts).
+pub fn replay(path: &str) -> std::io::Result<ReplayServer> {
+    let mut reader = BufReader::new(File::open(path)?);
+    let workers = read_trace_header(&mut reader)?;
+    Ok(ReplayServer {
+        workers,
+        reader,
+        path: path.to_string(),
+        pools: Arc::new(ChannelPools::new(workers)),
+        traffic: Arc::new(TrafficCounter::default()),
+    })
+}

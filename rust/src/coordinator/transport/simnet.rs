@@ -1,0 +1,324 @@
+//! SimNet: a deterministic, seeded network model over the in-process
+//! channel fabric.
+//!
+//! Physically every frame still crosses a bounded `sync_channel`
+//! (workers stay in lockstep; no real packet is ever lost), but each
+//! uplink frame is stamped with a *simulated* delivery verdict computed
+//! purely from `(seed, round, worker)` and the link/topology parameters:
+//!
+//! * **latency** — per-hop base latency plus seeded uniform jitter plus a
+//!   serialization delay of `wire_bits / bandwidth`;
+//! * **loss** — an independent per-hop Bernoulli drop;
+//! * **topology** — [`Topology`] maps a worker to its hop count to the
+//!   server (star = 1, chain = `i + 1`, tree = depth), so latency adds up
+//!   and loss compounds exactly as a multi-hop route would.
+//!
+//! Because no wall clock and no cross-round RNG state are involved, a
+//! SimNet schedule is bitwise reproducible from its seed regardless of
+//! thread scheduling — `rust/tests/test_transport.rs` asserts this — and
+//! the **ideal** configuration (zero latency, zero jitter, zero drops,
+//! infinite bandwidth) consumes no randomness at all, making it
+//! bit-identical to [`super::inproc`] (`rust/tests/test_determinism.rs`).
+//!
+//! Only the uplink — the budget-constrained direction in the paper — is
+//! modeled; broadcasts stay instant and reliable (a lost broadcast would
+//! stall the lockstep round structure, which is a liveness concern, not a
+//! quantization one).
+
+use crate::coordinator::channel::ChannelError;
+use crate::coordinator::protocol::{Broadcast, Upload, WireSize};
+use crate::linalg::rng::Rng;
+
+use super::inproc::{channel_fabric, InProcWorker};
+use super::{demote_err, round_rank, Arrival, ServerTransport, SimTime, WorkerTransport};
+
+/// One (directed) link's delay/loss model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Fixed propagation delay per hop, in simulated µs.
+    pub base_latency_us: u64,
+    /// Per-hop jitter: uniform in `[0, jitter_us]` simulated µs.
+    pub jitter_us: u64,
+    /// Per-hop frame loss probability in `[0, 1)`.
+    pub drop_prob: f32,
+    /// Link bandwidth in bits per simulated µs (`0` = infinite, no
+    /// serialization delay).
+    pub bandwidth_bits_per_us: f32,
+}
+
+impl LinkModel {
+    /// Instant, reliable, infinite-bandwidth link (the InProc-equivalent).
+    pub const IDEAL: LinkModel = LinkModel {
+        base_latency_us: 0,
+        jitter_us: 0,
+        drop_prob: 0.0,
+        bandwidth_bits_per_us: 0.0,
+    };
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel::IDEAL
+    }
+}
+
+/// Network shape: how many hops worker `i`'s uplink traffic traverses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Server star: every worker one hop from the server.
+    Star,
+    /// Daisy chain: worker `i` relays through all earlier workers
+    /// (`i + 1` hops) — the worst-case straggler shape.
+    Chain,
+    /// Complete `fanout`-ary tree rooted at the server; hops = the
+    /// worker's depth (`fanout` is clamped to ≥ 2).
+    Tree { fanout: usize },
+}
+
+impl Topology {
+    /// Hop count from worker `worker` to the server.
+    pub fn hops(self, worker: usize) -> u32 {
+        match self {
+            Topology::Star => 1,
+            Topology::Chain => worker as u32 + 1,
+            Topology::Tree { fanout } => {
+                let f = fanout.max(2) as u64;
+                let mut depth = 1u32;
+                let mut level_start = 0u64;
+                let mut level_size = f;
+                let w = worker as u64;
+                while w >= level_start + level_size {
+                    level_start += level_size;
+                    level_size = level_size.saturating_mul(f);
+                    depth += 1;
+                }
+                depth
+            }
+        }
+    }
+
+    /// Parse `star`, `chain`, `tree` (fanout 2) or `tree:<fanout>`.
+    pub fn parse(s: &str) -> Option<Topology> {
+        let t = s.to_ascii_lowercase();
+        match t.as_str() {
+            "star" => Some(Topology::Star),
+            "chain" => Some(Topology::Chain),
+            "tree" => Some(Topology::Tree { fanout: 2 }),
+            _ => {
+                let f: usize = t.strip_prefix("tree:")?.parse().ok()?;
+                Some(Topology::Tree { fanout: f.max(2) })
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Topology::Star => write!(f, "star"),
+            Topology::Chain => write!(f, "chain"),
+            Topology::Tree { fanout } => write!(f, "tree:{fanout}"),
+        }
+    }
+}
+
+/// Full SimNet description: seed, shape, and per-worker uplink models.
+#[derive(Clone, Debug)]
+pub struct SimNetConfig {
+    /// Schedule seed — two runs with equal seeds see identical latency,
+    /// jitter and drop schedules.
+    pub seed: u64,
+    pub topology: Topology,
+    /// Per-worker uplink models, cycled by worker index (`links[i % len]`)
+    /// so a single entry means a uniform network and a short list encodes
+    /// a repeating heterogeneity pattern. Empty = all-ideal.
+    pub links: Vec<LinkModel>,
+}
+
+impl SimNetConfig {
+    /// Zero-latency, zero-drop star — the InProc-equivalent baseline.
+    pub fn ideal() -> Self {
+        SimNetConfig { seed: 0, topology: Topology::Star, links: vec![LinkModel::IDEAL] }
+    }
+
+    /// Worker `w`'s uplink model.
+    pub fn link(&self, w: usize) -> LinkModel {
+        if self.links.is_empty() {
+            LinkModel::IDEAL
+        } else {
+            self.links[w % self.links.len()]
+        }
+    }
+}
+
+/// Compute worker `worker`'s delivery verdict for one frame of `wire_bits`
+/// bits in `round`: `None` if any hop drops it, else the summed simulated
+/// arrival time. Pure in `(seed, round, worker, hops, link, wire_bits)`.
+pub fn delivery(
+    seed: u64,
+    round: u64,
+    worker: usize,
+    hops: u32,
+    link: &LinkModel,
+    wire_bits: usize,
+) -> Option<SimTime> {
+    let transmit = if link.bandwidth_bits_per_us > 0.0 {
+        (wire_bits as f64 / link.bandwidth_bits_per_us as f64).ceil() as u64
+    } else {
+        0
+    };
+    // A fresh per-(round, worker) stream: no cross-round RNG state, so
+    // schedules cannot depend on thread interleaving. The ideal link
+    // consumes no randomness at all.
+    let mut lrng = Rng::seed_from(round_rank(seed, round, worker));
+    let mut at: SimTime = 0;
+    let mut lost = false;
+    for _ in 0..hops {
+        if link.drop_prob > 0.0 && lrng.uniform_f32() < link.drop_prob {
+            lost = true;
+        }
+        // saturating_add: jitter_us = u64::MAX must not overflow into a
+        // remainder-by-zero (the knob is CLI-exposed and unclamped).
+        let jitter = if link.jitter_us > 0 {
+            lrng.next_u64() % link.jitter_us.saturating_add(1)
+        } else {
+            0
+        };
+        at = at
+            .saturating_add(link.base_latency_us)
+            .saturating_add(jitter)
+            .saturating_add(transmit);
+    }
+    if lost {
+        None
+    } else {
+        Some(at)
+    }
+}
+
+/// Worker endpoint: the in-process channel pair plus this worker's link
+/// parameters; every upload gets its simulated delivery verdict stamped
+/// before it enters the (budget-enforcing) channel.
+pub struct SimNetWorker {
+    inner: InProcWorker,
+    worker: usize,
+    seed: u64,
+    hops: u32,
+    link: LinkModel,
+}
+
+impl WorkerTransport for SimNetWorker {
+    fn recv_broadcast(&mut self) -> Option<Broadcast> {
+        self.inner.recv_broadcast()
+    }
+
+    fn upload(&mut self, up: Upload) -> Result<(), ChannelError<Upload>> {
+        let wire_bits = up.payload_bits() + up.overhead_bits();
+        let at = delivery(self.seed, up.round, self.worker, self.hops, &self.link, wire_bits);
+        self.inner.up_tx.send(Arrival { up, at }).map_err(demote_err)
+    }
+}
+
+/// Attach SimNet link semantics to an in-process worker endpoint (used
+/// here and by the `Recorded` transport when it records a simulated net).
+pub(crate) fn wrap_worker(
+    inner: InProcWorker,
+    worker: usize,
+    net: &SimNetConfig,
+) -> Box<dyn WorkerTransport> {
+    Box::new(SimNetWorker {
+        inner,
+        worker,
+        seed: net.seed,
+        hops: net.topology.hops(worker),
+        link: net.link(worker),
+    })
+}
+
+/// Build the SimNet transport for `budgets.len()` workers.
+pub fn build(
+    net: &SimNetConfig,
+    budgets: &[Option<usize>],
+) -> (Box<dyn ServerTransport>, Vec<Box<dyn WorkerTransport>>) {
+    let (server, workers) = channel_fabric(budgets);
+    let workers = workers
+        .into_iter()
+        .enumerate()
+        .map(|(i, inner)| wrap_worker(inner, i, net))
+        .collect();
+    (Box::new(server), workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_hop_counts() {
+        assert_eq!(Topology::Star.hops(0), 1);
+        assert_eq!(Topology::Star.hops(9), 1);
+        assert_eq!(Topology::Chain.hops(0), 1);
+        assert_eq!(Topology::Chain.hops(3), 4);
+        let t = Topology::Tree { fanout: 2 };
+        // Workers 0-1 are children of the server (depth 1), 2-5 depth 2,
+        // 6-13 depth 3.
+        assert_eq!(t.hops(0), 1);
+        assert_eq!(t.hops(1), 1);
+        assert_eq!(t.hops(2), 2);
+        assert_eq!(t.hops(5), 2);
+        assert_eq!(t.hops(6), 3);
+        assert_eq!(t.hops(13), 3);
+    }
+
+    #[test]
+    fn topology_parse_roundtrip() {
+        for t in [Topology::Star, Topology::Chain, Topology::Tree { fanout: 4 }] {
+            assert_eq!(Topology::parse(&t.to_string()), Some(t));
+        }
+        assert_eq!(Topology::parse("tree"), Some(Topology::Tree { fanout: 2 }));
+        assert_eq!(Topology::parse("mesh"), None);
+    }
+
+    #[test]
+    fn ideal_link_is_instant_and_reliable() {
+        for round in 0..50 {
+            for w in 0..8 {
+                assert_eq!(delivery(123, round, w, 3, &LinkModel::IDEAL, 10_000), Some(0));
+            }
+        }
+    }
+
+    #[test]
+    fn delivery_is_deterministic_and_seed_sensitive() {
+        let link = LinkModel {
+            base_latency_us: 100,
+            jitter_us: 50,
+            drop_prob: 0.3,
+            bandwidth_bits_per_us: 8.0,
+        };
+        let schedule = |seed: u64| -> Vec<Option<SimTime>> {
+            (0..200).map(|r| delivery(seed, r, 2, 2, &link, 1000)).collect()
+        };
+        assert_eq!(schedule(1), schedule(1), "same seed must reproduce the schedule");
+        assert_ne!(schedule(1), schedule(2), "different seeds must differ");
+        let drops = schedule(1).iter().filter(|a| a.is_none()).count();
+        // Two hops at p = 0.3: loss rate 1-(0.7)^2 = 51%, so ~102/200.
+        assert!((80..=125).contains(&drops), "implausible drop count {drops}/200");
+    }
+
+    #[test]
+    fn latency_grows_with_hops_and_payload() {
+        let link = LinkModel {
+            base_latency_us: 10,
+            jitter_us: 0,
+            drop_prob: 0.0,
+            bandwidth_bits_per_us: 1.0,
+        };
+        let one_hop = delivery(0, 0, 0, 1, &link, 100).unwrap();
+        let two_hops = delivery(0, 0, 0, 2, &link, 100).unwrap();
+        assert_eq!(one_hop, 10 + 100);
+        assert_eq!(two_hops, 2 * (10 + 100));
+        let fat = delivery(0, 0, 0, 1, &link, 1000).unwrap();
+        assert_eq!(fat, 10 + 1000);
+    }
+}

@@ -1,15 +1,15 @@
 //! Worker loop: receive the broadcast iterate, evaluate the local
-//! (sub)gradient, encode under the bit budget, upload.
+//! (sub)gradient, encode under the worker's own bit budget `⌊n·R_i⌋`,
+//! upload through the run's [`WorkerTransport`].
 //!
 //! The loop owns a [`Workspace`] and recycles message buffers through the
 //! run's [`ChannelPools`], so a steady-state round performs zero heap
 //! allocations: the gradient buffer, the codec scratch and the wire bytes
 //! are all reused round-over-round.
 
-use std::sync::mpsc::Receiver;
-
-use crate::coordinator::channel::{AccountedSender, ChannelError, ChannelPools};
-use crate::coordinator::protocol::{Broadcast, Upload};
+use crate::coordinator::channel::{ChannelError, ChannelPools};
+use crate::coordinator::protocol::Upload;
+use crate::coordinator::transport::WorkerTransport;
 use crate::linalg::rng::Rng;
 use crate::quant::{Compressed, Compressor, Workspace};
 
@@ -24,6 +24,8 @@ pub trait GradSource: Send {
 }
 
 /// Minibatch gradient source over a private [`DatasetObjective`] shard.
+///
+/// [`DatasetObjective`]: crate::opt::objectives::DatasetObjective
 pub struct DatasetGradSource {
     pub obj: crate::opt::objectives::DatasetObjective,
     /// 0 = full local gradient.
@@ -55,22 +57,21 @@ impl GradSource for DatasetGradSource {
 /// Buffer recycling protocol: the broadcast's iterate buffer is returned to
 /// `pools.iterates` as soon as the gradient is evaluated — *before* the
 /// upload is sent — so the server is guaranteed to find `m` parked iterate
-/// buffers once it has collected a round's `m` uploads. The wire-byte
+/// buffers once it has collected a round's `m` frames. The wire-byte
 /// buffer comes from `pools.bytes` (parked there by the server after the
 /// previous round's decode).
 pub fn worker_loop(
     id: usize,
     source: &mut dyn GradSource,
     compressor: &dyn Compressor,
-    downlink: Receiver<Broadcast>,
-    uplink: AccountedSender<Upload>,
+    transport: &mut dyn WorkerTransport,
     pools: &ChannelPools,
     rng: &mut Rng,
 ) {
     let n = source.dim();
     let mut g = vec![0.0f32; n];
     let mut ws = Workspace::for_compressor(compressor);
-    while let Ok(bcast) = downlink.recv() {
+    while let Some(bcast) = transport.recv_broadcast() {
         let local_value = source.grad(&bcast.iterate, &mut g);
         pools.iterates.put(bcast.iterate);
         let mut msg = Compressed {
@@ -80,7 +81,7 @@ pub fn worker_loop(
             side_bits: 0,
         };
         compressor.compress_into(&g, rng, &mut ws, &mut msg);
-        match uplink.send(Upload { round: bcast.round, worker: id, msg, local_value }) {
+        match transport.upload(Upload { round: bcast.round, worker: id, msg, local_value }) {
             Ok(()) => {}
             Err(ChannelError::OverBudget { payload_bits, budget_bits }) => {
                 // A correct compressor never trips this; it is the runtime
@@ -98,9 +99,10 @@ pub fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::protocol::Broadcast;
+    use crate::coordinator::transport::{self, ServerTransport, TransportKind};
     use crate::data::synthetic::{planted_regression, Tail};
     use crate::quant::ndsc::Ndsc;
-    use std::sync::mpsc;
 
     #[test]
     fn worker_responds_to_each_broadcast() {
@@ -109,23 +111,24 @@ mod tests {
         let mut source =
             DatasetGradSource { obj, batch: 0, rng: Rng::seed_from(2), idx: Vec::new() };
         let comp = Ndsc::hadamard(8, 2.0, &mut rng);
-        let (down_tx, down_rx) = mpsc::sync_channel(4);
-        let (up_tx, up_rx) = mpsc::sync_channel(4);
-        let uplink = AccountedSender::new(up_tx, Some(crate::quant::budget_bits(8, 2.0)));
+        let (mut server, mut workers) =
+            transport::build(&TransportKind::InProc, &[Some(crate::quant::budget_bits(8, 2.0))]);
+        let mut wtp = workers.pop().unwrap();
+        let pools = server.pools().clone();
         let mut wrng = Rng::seed_from(3);
         let handle = std::thread::spawn(move || {
-            let pools = ChannelPools::new(1);
-            worker_loop(7, &mut source, &comp, down_rx, uplink, &pools, &mut wrng);
+            worker_loop(7, &mut source, &comp, wtp.as_mut(), &pools, &mut wrng);
         });
         for round in 0..5u64 {
-            down_tx.send(Broadcast { round, iterate: vec![0.1; 8] }).unwrap();
-            let up = up_rx.recv().unwrap();
-            assert_eq!(up.round, round);
-            assert_eq!(up.worker, 7);
-            assert!(up.msg.payload_bits <= 16);
-            assert!(up.local_value.is_finite());
+            server.broadcast(0, Broadcast { round, iterate: vec![0.1; 8] }).unwrap();
+            let a = server.recv().unwrap();
+            assert_eq!(a.at, Some(0), "in-process delivery is instant");
+            assert_eq!(a.up.round, round);
+            assert_eq!(a.up.worker, 7);
+            assert!(a.up.msg.payload_bits <= 16);
+            assert!(a.up.local_value.is_finite());
         }
-        drop(down_tx);
+        server.finish();
         handle.join().unwrap();
     }
 

@@ -60,7 +60,12 @@ fn run_svm_schemes(
             let mut rng = Rng::seed_from(1000 + t as u64);
             let mut oracle =
                 MinibatchOracle::new(obj, (obj.m / 10).max(1), Rng::seed_from(2000 + t as u64));
-            let opts = DqPsgdOptions { step, iters, domain: Domain::L2Ball { radius: 20.0 } };
+            let opts = DqPsgdOptions {
+                step,
+                iters,
+                domain: Domain::L2Ball { radius: 20.0 },
+                drop_prob: 0.0,
+            };
             let trace = match scheme.spec {
                 Some(spec) => {
                     let c = spec.build(n, r, &mut rng);

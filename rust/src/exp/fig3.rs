@@ -6,6 +6,7 @@
 //! * 3b: the non-convex federated run (transformer; see
 //!   [`crate::exp::transformer`] and `examples/train_transformer.rs`).
 
+use crate::coordinator::transport::Participation;
 use crate::data::synthetic::planted_regression_shards;
 use crate::exp::common::{print_figure, scaled, thin, Series};
 use crate::linalg::rng::Rng;
@@ -60,6 +61,7 @@ pub fn multiworker_sweep(
                     iters: rounds,
                     domain: Domain::Unconstrained,
                     batch: Some(5),
+                    participation: Participation::Full,
                 };
                 let tr = multi::run(&problem, &comps, &vec![0.0; n], Some(&xs), opts, &mut rng);
                 for (i, rec) in tr.records.iter().enumerate() {

@@ -13,5 +13,6 @@ pub mod common;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
+pub mod net;
 pub mod table1;
 pub mod transformer;

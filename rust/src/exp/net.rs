@@ -1,0 +1,239 @@
+//! `repro net` — transport-layer sweeps over the deterministic SimNet
+//! model: **topology × budget-mix × drop-rate** grids on the planted
+//! multi-worker regression, with k-of-m partial participation.
+//!
+//! Each cell runs the full threaded coordinator over a
+//! [`SimNetConfig`] (per-link latency/jitter/bandwidth, per-hop loss
+//! compounded by the topology's hop counts) with heterogeneous
+//! per-worker budgets `R_i`, and reports the final objective value, the
+//! achieved uplink rate and the effective participation. The grid is
+//! printed as a table and saved to `BENCH_transport.json` so transport
+//! regressions diff mechanically across PRs (same convention as
+//! `BENCH_hotpath.json`).
+//!
+//! ```text
+//! repro net [--quick] [n=64] [workers=8] [rounds=200] [seed=7] [part=k:6]
+//! ```
+
+use crate::coordinator::config::{RunConfig, SchemeKind};
+use crate::coordinator::run_distributed;
+use crate::coordinator::transport::{
+    LinkModel, Participation, SimNetConfig, Topology, TransportKind,
+};
+use crate::coordinator::worker::{DatasetGradSource, GradSource};
+use crate::data::synthetic::planted_regression_shards;
+use crate::linalg::rng::Rng;
+use crate::opt::multi::ShardedProblem;
+use crate::opt::objectives::Loss;
+
+/// One grid cell's summary.
+struct NetCell {
+    topology: Topology,
+    mix_name: &'static str,
+    drop: f32,
+    participation: Participation,
+    first_value: f32,
+    final_value: f32,
+    mean_rate: f32,
+    mean_participants: f32,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    n: usize,
+    m: usize,
+    rounds: usize,
+    seed: u64,
+    topology: Topology,
+    mix_name: &'static str,
+    mix: &[f32],
+    drop: f32,
+    participation: Participation,
+) -> NetCell {
+    let budgets: Vec<f32> = (0..m).map(|i| mix[i % mix.len()]).collect();
+    let r_mean = budgets.iter().sum::<f32>() / m as f32;
+    let mut rng = Rng::seed_from(seed);
+    let (shards, _xs) = planted_regression_shards(m, 10, n, Loss::Square, &mut rng, false);
+    let problem = ShardedProblem::new(shards.clone());
+    let step = problem.stable_step();
+    let cfg = RunConfig {
+        n,
+        workers: m,
+        r: r_mean,
+        budgets: Some(budgets),
+        scheme: SchemeKind::NdscDithered,
+        participation,
+        transport: TransportKind::SimNet(SimNetConfig {
+            seed: seed ^ 0x5E7,
+            topology,
+            links: vec![LinkModel {
+                base_latency_us: 200,
+                jitter_us: 100,
+                drop_prob: drop,
+                bandwidth_bits_per_us: 8.0,
+            }],
+        }),
+        rounds,
+        step,
+        batch: 0,
+        seed,
+        ..Default::default()
+    };
+    // One source of truth for invariants (k range, per-R_i feasibility,
+    // drop-probability range): the same validation the CLI path runs.
+    cfg.validate().unwrap_or_else(|e| {
+        eprintln!("net: invalid configuration: {e}");
+        std::process::exit(2);
+    });
+    let comps = cfg.build_compressors(&mut rng);
+    let sources: Vec<Box<dyn GradSource>> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, obj)| {
+            Box::new(DatasetGradSource {
+                obj,
+                batch: 0,
+                rng: Rng::seed_from(seed ^ (31 + i as u64)),
+                idx: Vec::new(),
+            }) as Box<dyn GradSource>
+        })
+        .collect();
+    let metrics =
+        run_distributed(&cfg, vec![0.0; n], sources, comps, move |x| problem.value(x));
+    NetCell {
+        topology,
+        mix_name,
+        drop,
+        participation,
+        first_value: metrics.rounds.first().map(|r| r.value).unwrap_or(f32::NAN),
+        final_value: metrics.final_value(),
+        mean_rate: metrics.mean_rate(n, m),
+        mean_participants: metrics.mean_participants(),
+    }
+}
+
+fn cells_to_json(cells: &[NetCell]) -> String {
+    let mut s = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"topology\": \"{}\", \"budget_mix\": \"{}\", \"drop\": {}, \
+             \"participation\": \"{}\", \"first_value\": {}, \"final_value\": {}, \
+             \"mean_rate\": {}, \"mean_participants\": {}}}{}\n",
+            c.topology,
+            c.mix_name,
+            c.drop,
+            c.participation,
+            c.first_value,
+            c.final_value,
+            c.mean_rate,
+            c.mean_participants,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// Run the sweep. `args` accepts `n=`, `workers=`/`m=`, `rounds=`,
+/// `seed=` and `part=` overrides.
+pub fn run(quick: bool, args: &[String]) {
+    let mut n = 64usize;
+    let mut m = 8usize;
+    let mut rounds = if quick { 60 } else { 200 };
+    let mut seed = 7u64;
+    let mut part_arg: Option<Participation> = None;
+    // Malformed values abort just like unknown keys do: silently keeping
+    // a default would run the whole sweep on the wrong parameters.
+    fn bail(key: &str, v: &str) -> ! {
+        eprintln!("net: bad value '{v}' for {key}=");
+        std::process::exit(2);
+    }
+    for a in args {
+        match a.split_once('=') {
+            Some(("n", v)) => n = v.parse().unwrap_or_else(|_| bail("n", v)),
+            Some(("workers", v)) | Some(("m", v)) => {
+                m = v.parse().unwrap_or_else(|_| bail("workers", v))
+            }
+            Some(("rounds", v)) => rounds = v.parse().unwrap_or_else(|_| bail("rounds", v)),
+            Some(("seed", v)) => seed = v.parse().unwrap_or_else(|_| bail("seed", v)),
+            Some(("part", v)) | Some(("participation", v)) => {
+                part_arg = Some(Participation::parse(v).unwrap_or_else(|| bail("part", v)))
+            }
+            _ => {
+                eprintln!("net: expected n=|workers=|rounds=|seed=|part=, got '{a}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    // Default: aggregate the earliest three quarters of the fleet.
+    // Range checking is RunConfig::validate's job (run_cell calls it on
+    // the assembled config), not re-implemented here.
+    let participation =
+        part_arg.unwrap_or(Participation::KofM { k: ((3 * m).div_ceil(4)).clamp(1, m) });
+
+    let topologies = [Topology::Star, Topology::Chain, Topology::Tree { fanout: 2 }];
+    let mixes: [(&'static str, &[f32]); 3] = [
+        ("uniform-1", &[1.0]),
+        ("lo-hi", &[0.5, 4.0]),
+        ("spread", &[0.5, 1.0, 2.0, 4.0]),
+    ];
+    let drops = [0.0f32, 0.05, 0.2];
+
+    println!(
+        "=== repro net: SimNet sweep (n={n}, m={m}, rounds={rounds}, part={participation}) ==="
+    );
+    println!(
+        "{:<10} {:<10} {:>6} {:>12} {:>12} {:>10} {:>8}",
+        "topology", "budgets", "drop", "f(x_0)", "f(x_T)", "bits/dim", "mean-k"
+    );
+    let mut cells = Vec::new();
+    for topology in topologies {
+        for (mix_name, mix) in mixes {
+            for drop in drops {
+                let cell =
+                    run_cell(n, m, rounds, seed, topology, mix_name, mix, drop, participation);
+                println!(
+                    "{:<10} {:<10} {:>6} {:>12.5} {:>12.5} {:>10.3} {:>8.2}",
+                    cell.topology.to_string(),
+                    cell.mix_name,
+                    cell.drop,
+                    cell.first_value,
+                    cell.final_value,
+                    cell.mean_rate,
+                    cell.mean_participants
+                );
+                cells.push(cell);
+            }
+        }
+    }
+    let json = cells_to_json(&cells);
+    match std::fs::write("BENCH_transport.json", &json) {
+        Ok(()) => println!("wrote BENCH_transport.json ({} cells)", cells.len()),
+        Err(e) => eprintln!("could not write BENCH_transport.json: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_cell_runs_and_serializes() {
+        let cell = run_cell(
+            16,
+            4,
+            15,
+            3,
+            Topology::Chain,
+            "lo-hi",
+            &[0.5, 4.0],
+            0.1,
+            Participation::KofM { k: 3 },
+        );
+        assert!(cell.final_value.is_finite());
+        assert!(cell.mean_participants <= 3.0 + 1e-6);
+        let json = cells_to_json(&[cell]);
+        assert!(json.contains("\"topology\": \"chain\""));
+        assert!(json.trim_end().ends_with(']'));
+    }
+}

@@ -21,8 +21,11 @@
 //!   general convex non-smooth), with unquantized GD / projected SGD
 //!   references and the objective/oracle zoo used in the evaluation.
 //! * **Distributed runtime** ([`coordinator`]) — a parameter-server with
-//!   `m` workers over byte-accounted channels enforcing the bit budget,
-//!   running the multi-worker consensus loop of §4.3.
+//!   `m` workers over a pluggable transport (in-process channels, a
+//!   deterministic SimNet latency/jitter/drop/topology model, recorded
+//!   traces with bit-exact replay), byte-accounted and budget-enforced
+//!   per worker (`⌊n·R_i⌋`), with full / k-of-m / deadline participation —
+//!   the multi-worker consensus loop of §4.3.
 //! * **PJRT runtime** ([`runtime`]) — loads AOT-compiled JAX/Pallas HLO
 //!   artifacts (built once by `python/compile/aot.py`) and executes them
 //!   from the Rust hot path; Python is never on the request path.

@@ -4,13 +4,18 @@
 //! repro table1|fig1a|fig1b|fig1c|fig1d|fig2ab|fig2cd|fig3a|fig3b|fig5|fig6|fig8|fig11   [--quick]
 //! repro figures [--quick]            # everything above in sequence
 //! repro schemes [n=..] [r=..]        # print the registry zoo at (n, R)
+//! repro net    [--quick] [key=value ...]   # SimNet topology x budget x drop sweep
 //! repro train  [key=value ...]       # distributed run on a planted problem
 //! repro train-transformer [key=value ...]  # federated transformer (needs artifacts)
 //! ```
 //!
-//! `train` keys: n, workers, r, scheme, frame, rounds, step, batch, radius,
-//! seed (see coordinator::config). Example:
-//! `repro train n=116 workers=4 r=0.5 scheme=ndsc-dith rounds=300`
+//! `train` keys: n, workers, r (scalar or per-worker `r=0.5,1,2,4`),
+//! scheme, frame, rounds, step, batch, radius, seed, part
+//! (full|k:<n>|deadline:<µs>), transport (inproc|sim|recorded:<path>) and
+//! the SimNet knobs topo/lat/jitter/drop/bw/net-seed (see
+//! coordinator::config). Example:
+//! `repro train n=116 workers=4 r=0.5 scheme=ndsc-dith rounds=300 \
+//!    transport=sim topo=chain drop=0.1 part=k:3`
 
 use kashinflow::coordinator::config::RunConfig;
 use kashinflow::coordinator::worker::DatasetGradSource;
@@ -24,14 +29,16 @@ fn usage() -> ! {
     eprintln!(
         "usage: repro <command> [--quick] [key=value ...]\n\
          commands: table1 fig1a fig1b fig1c fig1d fig2ab fig2cd fig3a fig3b\n\
-                   fig5 fig6 fig8 fig11 ablation-ef ablation-lambda ablation-dqgd\n                   schemes figures train train-transformer"
+                   fig5 fig6 fig8 fig11 ablation-ef ablation-lambda ablation-dqgd\n                   schemes net figures train train-transformer"
     );
     std::process::exit(2);
 }
 
 /// `repro schemes [n=..] [r=..]` — enumerate the registry at one `(n, R)`:
-/// name, feasibility under the `⌊nR⌋` wire contract, measured payload and
-/// unbiasedness flag of every spec in the zoo.
+/// name, feasibility under the `⌊nR⌋` wire contract, measured payload,
+/// the **exact uplink wire bytes** one framed message occupies
+/// (payload + side info + upload header, from the same accounting the
+/// budget enforcement uses), and unbiasedness flag of every spec.
 fn run_schemes(args: &[String]) {
     let mut n = 1024usize;
     let mut r = 3.0f32;
@@ -49,8 +56,8 @@ fn run_schemes(args: &[String]) {
     let mut rng = Rng::seed_from(0x5EED);
     println!("registry zoo at n={n}, R={r} (budget {budget} payload bits/message):");
     println!(
-        "{:<16} {:>8} {:>10} {:>14} {:>12} {:>10}",
-        "spec", "dim", "feasible", "payload-bits", "bits/dim", "unbiased"
+        "{:<16} {:>8} {:>10} {:>14} {:>12} {:>10} {:>10}",
+        "spec", "dim", "feasible", "payload-bits", "bits/dim", "wire-bytes", "unbiased"
     );
     for spec in kashinflow::quant::registry::all_specs() {
         // Dense-frame schemes are built at a capped dimension so that
@@ -58,10 +65,11 @@ fn run_schemes(args: &[String]) {
         let dim = kashinflow::quant::registry::dense_frame_dim_cap(&spec, n);
         if !spec.is_feasible(dim, r) {
             println!(
-                "{:<16} {:>8} {:>10} {:>14} {:>12} {:>10}",
+                "{:<16} {:>8} {:>10} {:>14} {:>12} {:>10} {:>10}",
                 spec.name(),
                 dim,
                 "no",
+                "-",
                 "-",
                 "-",
                 "-"
@@ -72,12 +80,13 @@ fn run_schemes(args: &[String]) {
         let y: Vec<f32> = (0..dim).map(|_| rng.gaussian_cubed()).collect();
         let msg = c.compress(&y, &mut rng);
         println!(
-            "{:<16} {:>8} {:>10} {:>14} {:>12.3} {:>10}",
+            "{:<16} {:>8} {:>10} {:>14} {:>12.3} {:>10} {:>10}",
             spec.name(),
             dim,
             "yes",
             msg.payload_bits,
             msg.payload_bits as f32 / dim as f32,
+            kashinflow::coordinator::protocol::upload_wire_bytes(&msg),
             c.is_unbiased()
         );
     }
@@ -147,6 +156,9 @@ fn main() {
         }
         "schemes" => {
             run_schemes(&args);
+        }
+        "net" => {
+            exp::net::run(quick, &args);
         }
         "figures" => {
             exp::table1::run(quick);
@@ -247,13 +259,17 @@ fn run_train(cfg: &RunConfig) {
     print!("{}", metrics.to_csv());
     let dist: f32 = kashinflow::linalg::vecops::dist2(&metrics.final_iterate, &xs);
     eprintln!(
-        "scheme={} R={} workers={}: final value {:.6}, ||x-x*||={:.4}, rate {:.3} b/dim, rejected {}",
+        "scheme={} R={} workers={} transport={} part={}: final value {:.6}, ||x-x*||={:.4}, \
+         rate {:.3} b/dim, mean participants {:.2}, rejected {}",
         cfg.scheme_name(),
         cfg.r,
         cfg.workers,
+        cfg.transport.name(),
+        cfg.participation,
         metrics.final_value(),
         dist,
         metrics.mean_rate(cfg.n, cfg.workers),
+        metrics.mean_participants(),
         metrics.rejected_messages
     );
 }

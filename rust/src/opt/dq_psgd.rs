@@ -23,6 +23,12 @@ pub struct DqPsgdOptions {
     pub step: f32,
     pub iters: usize,
     pub domain: Domain,
+    /// Lossy-uplink model (the `m = 1` case of the coordinator's SimNet
+    /// links): each round's codeword is lost independently with this
+    /// probability — the bits are still spent, but the server takes no
+    /// step that round. `0.0` = reliable link, and draws no randomness,
+    /// so legacy traces are unchanged.
+    pub drop_prob: f32,
 }
 
 impl DqPsgdOptions {
@@ -30,7 +36,7 @@ impl DqPsgdOptions {
     /// empirical `K_u ≈ 1` for NDSC at λ = 1 (App. N).
     pub fn theory(d: f32, b: f32, r: f32, ku: f32, iters: usize, domain: Domain) -> Self {
         let step = d / (b * ku) * (r.min(1.0) / iters as f32).sqrt();
-        DqPsgdOptions { step, iters, domain }
+        DqPsgdOptions { step, iters, domain, drop_prob: 0.0 }
     }
 }
 
@@ -64,12 +70,18 @@ pub fn run(
         compressor.compress_into(&g, rng, &mut ws, &mut msg);
         trace.total_payload_bits += msg.payload_bits;
         trace.total_side_bits += msg.side_bits;
-        // Server: decode, step, project.
-        compressor.decompress_into(&msg, &mut ws, &mut q);
-        for (xi, &qi) in x.iter_mut().zip(&q) {
-            *xi -= opts.step * qi;
+        // Lossy uplink: the codeword may never reach the server (bits
+        // already spent). The running average still advances — wall-clock
+        // rounds pass whether or not the step happens.
+        let delivered = opts.drop_prob <= 0.0 || rng.uniform_f32() >= opts.drop_prob;
+        if delivered {
+            // Server: decode, step, project.
+            compressor.decompress_into(&msg, &mut ws, &mut q);
+            for (xi, &qi) in x.iter_mut().zip(&q) {
+                *xi -= opts.step * qi;
+            }
+            opts.domain.project(&mut x);
         }
-        opts.domain.project(&mut x);
         let w = 1.0 / (t + 1) as f32;
         for (ai, &xi) in avg.iter_mut().zip(&x) {
             *ai += w * (xi - *ai);
@@ -113,8 +125,12 @@ mod tests {
         let mut rng = Rng::seed_from(2);
         let c = Ndsc::hadamard_dithered(30, 0.5, &mut rng);
         let mut oracle = MinibatchOracle::new(&obj, 10, Rng::seed_from(3));
-        let opts =
-            DqPsgdOptions { step: 0.05, iters: 600, domain: Domain::L2Ball { radius: 10.0 } };
+        let opts = DqPsgdOptions {
+            step: 0.05,
+            iters: 600,
+            domain: Domain::L2Ball { radius: 10.0 },
+            drop_prob: 0.0,
+        };
         let trace = run(&obj, &mut oracle, &c, &vec![0.0; 30], None, opts, &mut rng);
         let early = trace.records[10].value;
         let late = trace.final_value();
@@ -123,6 +139,30 @@ mod tests {
         // subgradient (zero subgradients send an empty payload).
         assert!(trace.records.iter().all(|r| r.payload_bits == 0 || r.payload_bits == 15));
         assert!(trace.records.iter().any(|r| r.payload_bits == 15));
+    }
+
+    #[test]
+    fn lossy_uplink_still_makes_progress() {
+        // 30% frame loss: slower, but the unbiased dithered steps that do
+        // land must still drive the objective down; the bits are spent on
+        // every round (sent-then-lost frames are charged).
+        let obj = two_gaussian_svm(100, 30, 8);
+        let mut rng = Rng::seed_from(9);
+        let c = Ndsc::hadamard_dithered(30, 1.0, &mut rng);
+        let mut oracle = MinibatchOracle::new(&obj, 10, Rng::seed_from(10));
+        let opts = DqPsgdOptions {
+            step: 0.05,
+            iters: 800,
+            domain: Domain::L2Ball { radius: 10.0 },
+            drop_prob: 0.3,
+        };
+        let trace = run(&obj, &mut oracle, &c, &vec![0.0; 30], None, opts, &mut rng);
+        let early = trace.records[10].value;
+        let late = trace.final_value();
+        assert!(late < 0.9 * early, "no progress at 30% loss: {early} -> {late}");
+        assert_eq!(trace.records.len(), 800);
+        // Payload accounting is per *send*, not per delivery.
+        assert!(trace.records.iter().filter(|r| r.payload_bits > 0).count() > 700);
     }
 
     fn heavy_tailed_svm(m: usize, n: usize, seed: u64) -> DatasetObjective {
@@ -151,8 +191,12 @@ mod tests {
             let mut rng = Rng::seed_from(100 + seed);
             let ndsc = Ndsc::hadamard_dithered(30, 0.5, &mut rng);
             let plain = StandardDither::new(30, 0.5);
-            let opts =
-                DqPsgdOptions { step: 0.05, iters: 400, domain: Domain::L2Ball { radius: 10.0 } };
+            let opts = DqPsgdOptions {
+                step: 0.05,
+                iters: 400,
+                domain: Domain::L2Ball { radius: 10.0 },
+                drop_prob: 0.0,
+            };
             let mut o1 = MinibatchOracle::new(&obj, 10, Rng::seed_from(200 + seed));
             let t1 = run(&obj, &mut o1, &ndsc, &vec![0.0; 30], None, opts, &mut rng);
             let mut o2 = MinibatchOracle::new(&obj, 10, Rng::seed_from(200 + seed));
@@ -171,7 +215,7 @@ mod tests {
         let c = Ndsc::hadamard_dithered(16, 2.0, &mut rng);
         let mut oracle = MinibatchOracle::new(&obj, 8, Rng::seed_from(7));
         let dom = Domain::L2Ball { radius: 2.0 };
-        let opts = DqPsgdOptions { step: 0.1, iters: 100, domain: dom };
+        let opts = DqPsgdOptions { step: 0.1, iters: 100, domain: dom, drop_prob: 0.0 };
         let trace = run(&obj, &mut oracle, &c, &vec![0.0; 16], None, opts, &mut rng);
         assert!(dom.contains(&trace.final_x));
         // Zero subgradients (fully separated batches) legitimately send an

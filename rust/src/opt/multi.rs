@@ -13,6 +13,7 @@
 //! [`crate::coordinator`]; this module is deterministic and cheap, used by
 //! the figure harness (Figs. 3a, 5, 6).
 
+use crate::coordinator::transport::Participation;
 use crate::linalg::rng::Rng;
 use crate::linalg::vecops::dist2;
 use crate::opt::objectives::DatasetObjective;
@@ -75,10 +76,20 @@ pub struct MultiOptions {
     pub domain: Domain,
     /// Worker minibatch size (`None` = full local gradient).
     pub batch: Option<usize>,
+    /// Partial participation: `KofM` draws a uniformly random k-subset of
+    /// workers per round (the randomized-participation model of the
+    /// quantized coordinate-descent literature); only they compute,
+    /// compress and join the consensus average. `Deadline` degrades to
+    /// `Full` here — this single-process reference loop has no network,
+    /// so every "arrival" is instant (the coordinator's SimNet transport
+    /// is where deadlines bite).
+    pub participation: Participation,
 }
 
 /// Run Algorithm 3: one compressor instance **per worker** (each worker
-/// draws its own frame randomness), consensus averaging at the server.
+/// draws its own frame randomness), consensus averaging at the server
+/// over the round's participant set (all workers under full
+/// participation; a seeded random k-subset under `KofM`).
 pub fn run(
     problem: &ShardedProblem,
     compressors: &[Box<dyn Compressor>],
@@ -106,12 +117,29 @@ pub fn run(
     let mut msg = Compressed::empty(n);
     let mut q = vec![0.0f32; n];
     let mut batch_idx: Vec<usize> = Vec::new();
+    let mut participants: Vec<usize> = Vec::with_capacity(m);
     let mut trace = Trace::default();
     trace.records.reserve(opts.iters);
     for t in 0..opts.iters {
         consensus.fill(0.0);
         let mut round_bits = 0usize;
-        for (i, shard) in problem.shards.iter().enumerate() {
+        // Participant set for this round. Full participation draws no
+        // randomness, so legacy traces are unchanged; KofM samples a
+        // uniform k-subset from the shared rng (seed-deterministic) and
+        // processes it in worker-id order.
+        match opts.participation {
+            Participation::KofM { k } => {
+                rng.sample_indices_into(m, k.min(m), &mut participants);
+                participants.sort_unstable();
+            }
+            Participation::Full | Participation::Deadline { .. } => {
+                participants.clear();
+                participants.extend(0..m);
+            }
+        }
+        let p = participants.len().max(1);
+        for &i in &participants {
+            let shard = &problem.shards[i];
             // Worker i: local (mini-batch) subgradient.
             match opts.batch {
                 Some(bsz) => {
@@ -124,10 +152,11 @@ pub fn run(
             round_bits += msg.payload_bits;
             trace.total_payload_bits += msg.payload_bits;
             trace.total_side_bits += msg.side_bits;
-            // Server: decode + consensus accumulate.
+            // Server: decode + consensus accumulate (mean over the
+            // participants).
             compressors[i].decompress_into(&msg, &mut ws, &mut q);
             for (ci, &qi) in consensus.iter_mut().zip(&q) {
-                *ci += qi / m as f32;
+                *ci += qi / p as f32;
             }
         }
         // Server: subgradient step + projection.
@@ -153,6 +182,7 @@ pub fn run(
 mod tests {
     use super::*;
     use crate::data::synthetic::planted_regression_shards;
+    use crate::opt::objectives::Loss;
     use crate::quant::gain_shape::StandardDither;
     use crate::quant::ndsc::Ndsc;
     use crate::quant::Compressor;
@@ -179,7 +209,8 @@ mod tests {
     fn multiworker_regression_converges_with_ndsc() {
         // Fig. 3a setup: n=30, m=10 workers, s=10 local points.
         let mut rng = Rng::seed_from(1);
-        let (shards, xs) = planted_regression_shards(10, 10, 30, super::super::objectives::Loss::Square, &mut rng, false);
+        let (shards, xs) =
+            planted_regression_shards(10, 10, 30, Loss::Square, &mut rng, false);
         let problem = ShardedProblem::new(shards);
         let comps = make_compressors(10, 30, 1.0, true, &mut rng);
         let opts = MultiOptions {
@@ -187,6 +218,7 @@ mod tests {
             iters: 300,
             domain: Domain::Unconstrained,
             batch: Some(5),
+            participation: Participation::Full,
         };
         let trace = run(&problem, &comps, &vec![0.0; 30], Some(&xs), opts, &mut rng);
         let first = trace.records[3].value;
@@ -195,11 +227,45 @@ mod tests {
     }
 
     #[test]
+    fn partial_participation_still_converges() {
+        // k-of-m randomized participation with heterogeneous budgets:
+        // 4-of-10 workers per round, R_i ∈ {0.5, 1, 2, 4} cycled; the
+        // quadratic objective must still make clear progress.
+        let mut rng = Rng::seed_from(21);
+        let (shards, xs) =
+            planted_regression_shards(10, 10, 30, Loss::Square, &mut rng, false);
+        let problem = ShardedProblem::new(shards);
+        let budgets = [0.5f32, 1.0, 2.0, 4.0];
+        let comps: Vec<Box<dyn Compressor>> = (0..10)
+            .map(|i| {
+                Box::new(Ndsc::hadamard_dithered(30, budgets[i % 4], &mut rng))
+                    as Box<dyn Compressor>
+            })
+            .collect();
+        let opts = MultiOptions {
+            step: problem.stable_step(),
+            iters: 400,
+            domain: Domain::Unconstrained,
+            batch: Some(5),
+            participation: Participation::KofM { k: 4 },
+        };
+        let trace = run(&problem, &comps, &vec![0.0; 30], Some(&xs), opts, &mut rng);
+        let first = trace.records[3].value;
+        let last = trace.final_value();
+        assert!(last < 0.5 * first, "no convergence under 4-of-10: {first} -> {last}");
+        // Per-round payload varies with the drawn subset but never
+        // exceeds the sum of the k largest budgets.
+        let max_round = (0..4).map(|_| (30.0f32 * 4.0) as usize).sum::<usize>();
+        assert!(trace.records.iter().all(|r| r.payload_bits <= max_round));
+    }
+
+    #[test]
     fn consensus_is_mean_of_decoded() {
         // With lossless-ish budgets the consensus step approaches the true
         // average gradient: check the round-0 consensus against it.
         let mut rng = Rng::seed_from(2);
-        let (shards, _) = planted_regression_shards(4, 20, 10, super::super::objectives::Loss::Square, &mut rng, false);
+        let (shards, _) =
+            planted_regression_shards(4, 20, 10, Loss::Square, &mut rng, false);
         let problem = ShardedProblem::new(shards);
         let x = vec![0.1f32; 10];
         let mut want = vec![0.0f32; 10];

@@ -8,6 +8,7 @@
 //! is exact for smooth strongly-convex sums and recovers single-worker
 //! DGD-DEF at m = 1 (tested).
 
+use crate::coordinator::transport::Participation;
 use crate::linalg::rng::Rng;
 use crate::linalg::vecops::dist2;
 use crate::opt::multi::ShardedProblem;
@@ -18,6 +19,11 @@ use crate::quant::Compressor;
 pub struct MultiDefOptions {
     pub step: f32,
     pub iters: usize,
+    /// Partial participation: under `KofM` only a seeded random k-subset
+    /// computes each round; a non-participant's error term `e_i` simply
+    /// carries over unchanged (its feedback loop pauses). `Deadline`
+    /// degrades to `Full` in this network-free reference loop.
+    pub participation: Participation,
 }
 
 /// Run multi-worker DGD-DEF: worker `i` holds `e_i`, computes
@@ -39,6 +45,7 @@ pub fn run(
     let mut z = vec![0.0f32; n];
     let mut g = vec![0.0f32; n];
     let mut consensus = vec![0.0f32; n];
+    let mut participants: Vec<usize> = Vec::with_capacity(m);
     let mut trace = Trace::default();
     for _ in 0..opts.iters {
         trace.records.push(IterRecord {
@@ -48,7 +55,19 @@ pub fn run(
         });
         consensus.fill(0.0);
         let mut round_bits = 0;
-        for (i, shard) in problem.shards.iter().enumerate() {
+        match opts.participation {
+            Participation::KofM { k } => {
+                rng.sample_indices_into(m, k.min(m), &mut participants);
+                participants.sort_unstable();
+            }
+            Participation::Full | Participation::Deadline { .. } => {
+                participants.clear();
+                participants.extend(0..m);
+            }
+        }
+        let p = participants.len().max(1);
+        for &i in &participants {
+            let shard = &problem.shards[i];
             let e = &mut errs[i];
             for ((zi, &xi), &ei) in z.iter_mut().zip(&xhat).zip(e.iter()) {
                 *zi = xi + opts.step * ei;
@@ -66,7 +85,7 @@ pub fn run(
                 *ei = qi - ui;
             }
             for (ci, &qi) in consensus.iter_mut().zip(&q) {
-                *ci += qi / m as f32;
+                *ci += qi / p as f32;
             }
         }
         for (xi, &ci) in xhat.iter_mut().zip(&consensus) {
@@ -104,11 +123,34 @@ mod tests {
         let mut rng = Rng::seed_from(2);
         let comps: Vec<Box<dyn Compressor>> =
             (0..5).map(|_| Box::new(Ndsc::hadamard(16, 4.0, &mut rng)) as _).collect();
-        let opts = MultiDefOptions { step: problem.stable_step(), iters: 200 };
+        let opts = MultiDefOptions {
+            step: problem.stable_step(),
+            iters: 200,
+            participation: Participation::Full,
+        };
         let tr = run(&problem, &comps, &vec![0.0; 16], Some(&xs), opts, &mut rng);
         let d0 = tr.records[0].dist_to_opt;
         let dt = tr.records.last().unwrap().dist_to_opt;
         assert!(dt < 1e-2 * d0, "no linear convergence: {d0} -> {dt}");
+    }
+
+    #[test]
+    fn partial_participation_pauses_feedback_but_converges() {
+        // 3-of-5 per round: each worker's error loop advances only when
+        // it participates; the quadratic sum must still contract.
+        let (problem, xs) = setup(5, 7);
+        let mut rng = Rng::seed_from(8);
+        let comps: Vec<Box<dyn Compressor>> =
+            (0..5).map(|_| Box::new(Ndsc::hadamard(16, 4.0, &mut rng)) as _).collect();
+        let opts = MultiDefOptions {
+            step: problem.stable_step(),
+            iters: 400,
+            participation: Participation::KofM { k: 3 },
+        };
+        let tr = run(&problem, &comps, &vec![0.0; 16], Some(&xs), opts, &mut rng);
+        let d0 = tr.records[0].dist_to_opt;
+        let dt = tr.records.last().unwrap().dist_to_opt;
+        assert!(dt < 0.1 * d0, "no convergence under 3-of-5: {d0} -> {dt}");
     }
 
     #[test]
@@ -127,7 +169,7 @@ mod tests {
             &[Box::new(c_a)],
             &vec![0.0; 12],
             Some(&xs),
-            MultiDefOptions { step, iters: 40 },
+            MultiDefOptions { step, iters: 40, participation: Participation::Full },
             &mut Rng::seed_from(11),
         );
         let mut rng_b = Rng::seed_from(10);
@@ -160,7 +202,7 @@ mod tests {
             &with,
             &vec![0.0; 16],
             Some(&xs),
-            MultiDefOptions { step, iters: 150 },
+            MultiDefOptions { step, iters: 150, participation: Participation::Full },
             &mut rng,
         );
         // No feedback: same codec through the plain consensus loop.
@@ -176,6 +218,7 @@ mod tests {
                 iters: 150,
                 domain: crate::opt::projection::Domain::Unconstrained,
                 batch: None,
+                participation: Participation::Full,
             },
             &mut rng,
         );

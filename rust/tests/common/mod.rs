@@ -1,0 +1,43 @@
+//! Shared oracles for the coordinator integration suites.
+
+use kashinflow::coordinator::metrics::RunMetrics;
+
+/// Bit-exact run-trace equality: every per-round metric (objective bits,
+/// mean local value bits, payload, participants), the final iterate and
+/// the traffic totals. One definition on purpose — when `RunMetrics`
+/// grows a field (as `participants` did), add it here and every suite
+/// that claims bitwise identity starts covering it at once.
+pub fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, label: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{label}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            ra.value.to_bits(),
+            rb.value.to_bits(),
+            "{label}: round {} objective diverged ({} vs {})",
+            ra.round,
+            ra.value,
+            rb.value
+        );
+        assert_eq!(
+            ra.mean_local_value.to_bits(),
+            rb.mean_local_value.to_bits(),
+            "{label}: round {} mean local value diverged",
+            ra.round
+        );
+        assert_eq!(ra.payload_bits, rb.payload_bits, "{label}: round {} bits", ra.round);
+        assert_eq!(
+            ra.participants, rb.participants,
+            "{label}: round {} participants diverged",
+            ra.round
+        );
+    }
+    assert_eq!(a.final_iterate.len(), b.final_iterate.len(), "{label}: iterate length");
+    for (i, (xa, xb)) in a.final_iterate.iter().zip(&b.final_iterate).enumerate() {
+        assert_eq!(
+            xa.to_bits(),
+            xb.to_bits(),
+            "{label}: final iterate coordinate {i} diverged ({xa} vs {xb})"
+        );
+    }
+    assert_eq!(a.total_payload_bits, b.total_payload_bits, "{label}: traffic");
+}

@@ -254,3 +254,107 @@ fn deterministic_schemes_reproduce_bitstreams() {
         );
     }
 }
+
+/// Satellite: `is_feasible` at the contract's edges — `n = 1`, budgets
+/// driven toward `R → 0⁺` (sub-linear, down to a 1-bit wire), and `R`
+/// large enough that the wire budget exceeds fp32. Each accept/reject is
+/// asserted against the scheme's documented contract (fixed-rate schemes
+/// need their wire rate; budget-adaptive schemes need one atom; fp32
+/// needs all 32 bits/dim).
+#[test]
+fn feasibility_edge_cases_match_documented_contract() {
+    use kashinflow::quant::dsc::{CodecMode, EmbedKind};
+    use kashinflow::quant::registry::{FrameSpec, InnerSpec, SparsifyKind};
+    let subspace = CompressorSpec::Subspace {
+        embed: EmbedKind::NearDemocratic,
+        mode: CodecMode::Dithered,
+        frame: FrameSpec::Hadamard,
+    };
+
+    // --- n = 1, R = 1 ⇒ budget is a single bit. -------------------------
+    let (n, r) = (1usize, 1.0f32);
+    assert_eq!(budget_bits(n, r), 1);
+    assert!(subspace.is_feasible(n, r), "subspace codecs adapt to any positive budget");
+    assert!(CompressorSpec::Naive.is_feasible(n, r));
+    assert!(CompressorSpec::StandardDither.is_feasible(n, r));
+    assert!(CompressorSpec::Sign.is_feasible(n, r), "sign needs exactly n bits");
+    assert!(!CompressorSpec::Qsgd.is_feasible(n, r), "QSGD needs >= 2 bits/dim");
+    assert!(!CompressorSpec::Ternary.is_feasible(n, r), "ternary packs 5 dims per 8 bits");
+    assert!(
+        CompressorSpec::TopK { value_bits: 1, count_index_bits: false }.is_feasible(n, r),
+        "one 1-bit entry fits (index_bits(1) = 0)"
+    );
+    assert!(
+        !CompressorSpec::TopK { value_bits: 4, count_index_bits: true }.is_feasible(n, r),
+        "a 4-bit entry cannot fit in 1 bit"
+    );
+    assert!(CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }
+        .is_feasible(n, r));
+    assert!(
+        CompressorSpec::VqSgd.is_feasible(n, r),
+        "vqSGD at n = 1 needs ceil(log2(2)) = 1 bit per vertex index"
+    );
+    assert!(
+        !CompressorSpec::Ratq.is_feasible(n, r),
+        "RATQ's per-group ladder overhead (3 bits) exceeds the 1-bit budget"
+    );
+    assert!(!CompressorSpec::Fp32.is_feasible(n, r));
+
+    // --- R → 0⁺: a sub-linear budget with exactly one wire bit. ---------
+    let (n, r) = (1024usize, 0.001f32);
+    assert_eq!(budget_bits(n, r), 1);
+    assert!(subspace.is_feasible(n, r), "the paper's regime: R < 1 is first-class");
+    assert!(CompressorSpec::StandardDither.is_feasible(n, r));
+    assert!(CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }
+        .is_feasible(n, r));
+    assert!(CompressorSpec::TopK { value_bits: 1, count_index_bits: false }.is_feasible(n, r));
+    assert!(
+        !CompressorSpec::TopK { value_bits: 1, count_index_bits: true }.is_feasible(n, r),
+        "charging index bits needs 1 + log2(1024) = 11 bits"
+    );
+    assert!(!CompressorSpec::Sign.is_feasible(n, r));
+    assert!(!CompressorSpec::Qsgd.is_feasible(n, r));
+    assert!(!CompressorSpec::Ternary.is_feasible(n, r));
+    assert!(
+        !CompressorSpec::VqSgd.is_feasible(n, r),
+        "one vertex index is ceil(log2(2048)) = 11 bits"
+    );
+    assert!(!CompressorSpec::Ratq.is_feasible(n, r));
+    assert!(!CompressorSpec::Fp32.is_feasible(n, r));
+    assert!(
+        CompressorSpec::Embedded { inner: InnerSpec::StandardDither, frame: FrameSpec::Hadamard }
+            .is_feasible(n, r)
+    );
+    // And R small enough that even the 1-bit atom no longer fits:
+    // ⌊64 · 0.001⌋ = 0 wire bits.
+    let (n, r) = (64usize, 0.001f32);
+    assert_eq!(budget_bits(n, r), 0);
+    assert!(!CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }
+        .is_feasible(n, r));
+    assert!(!CompressorSpec::TopK { value_bits: 1, count_index_bits: false }.is_feasible(n, r));
+    assert!(!CompressorSpec::VqSgd.is_feasible(n, r));
+
+    // --- R beyond fp32: every fixed-rate baseline fits, fp32 included. --
+    let (n, r) = (64usize, 40.0f32);
+    assert!(budget_bits(n, r) > 32 * n, "the wire budget exceeds an fp32 vector");
+    for spec in registry::all_specs() {
+        assert!(
+            spec.is_feasible(n, r),
+            "{} claims infeasible at the super-fp32 budget R = {r}",
+            spec.name()
+        );
+    }
+    assert!(CompressorSpec::Fp32.is_feasible(n, r));
+    assert!(
+        !CompressorSpec::Fp32.is_feasible(n, 31.99),
+        "fp32 needs the full 32 bits per dimension"
+    );
+    // Feasible edge specs really honor the contract when built: the
+    // 1-bit-budget sparsifier spends exactly its single bit.
+    let mut rng = Rng::seed_from(0xED6E);
+    let c = CompressorSpec::RandK { value_bits: 1, kind: SparsifyKind::Unbiased }
+        .build(1024, 0.001, &mut rng);
+    let y: Vec<f32> = (0..1024).map(|_| rng.gaussian_f32()).collect();
+    let msg = c.compress(&y, &mut rng);
+    assert_eq!(msg.payload_bits, 1);
+}

@@ -9,8 +9,12 @@
 //! is forced at small `n` through the test-only threshold override
 //! `RunConfig::parallel_decode_min_dim`.
 
+mod common;
+
+use common::assert_bit_identical;
 use kashinflow::coordinator::config::{RunConfig, SchemeKind};
 use kashinflow::coordinator::metrics::RunMetrics;
+use kashinflow::coordinator::transport::{LinkModel, SimNetConfig, Topology, TransportKind};
 use kashinflow::coordinator::run_distributed;
 use kashinflow::coordinator::worker::{DatasetGradSource, GradSource};
 use kashinflow::data::synthetic::planted_regression_shards;
@@ -18,6 +22,14 @@ use kashinflow::linalg::rng::Rng;
 use kashinflow::opt::objectives::Loss;
 
 fn run_once(scheme: SchemeKind, parallel_decode_min_dim: usize) -> RunMetrics {
+    run_once_over(scheme, parallel_decode_min_dim, TransportKind::InProc)
+}
+
+fn run_once_over(
+    scheme: SchemeKind,
+    parallel_decode_min_dim: usize,
+    transport: TransportKind,
+) -> RunMetrics {
     let n = 32;
     let m = 4;
     let mut rng = Rng::seed_from(11);
@@ -33,6 +45,7 @@ fn run_once(scheme: SchemeKind, parallel_decode_min_dim: usize) -> RunMetrics {
         batch: 0,
         seed: 123,
         parallel_decode_min_dim,
+        transport,
         ..Default::default()
     };
     let comps = cfg.build_compressors(&mut rng);
@@ -51,36 +64,6 @@ fn run_once(scheme: SchemeKind, parallel_decode_min_dim: usize) -> RunMetrics {
     run_distributed(&cfg, vec![0.0; n], sources, comps, move |x| {
         global.iter().map(|s| s.value(x)).sum::<f32>() / m as f32
     })
-}
-
-fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, label: &str) {
-    assert_eq!(a.rounds.len(), b.rounds.len(), "{label}: round count");
-    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
-        assert_eq!(
-            ra.value.to_bits(),
-            rb.value.to_bits(),
-            "{label}: round {} objective diverged ({} vs {})",
-            ra.round,
-            ra.value,
-            rb.value
-        );
-        assert_eq!(
-            ra.mean_local_value.to_bits(),
-            rb.mean_local_value.to_bits(),
-            "{label}: round {} mean local value diverged",
-            ra.round
-        );
-        assert_eq!(ra.payload_bits, rb.payload_bits, "{label}: round {} bits", ra.round);
-    }
-    assert_eq!(a.final_iterate.len(), b.final_iterate.len(), "{label}: iterate length");
-    for (i, (xa, xb)) in a.final_iterate.iter().zip(&b.final_iterate).enumerate() {
-        assert_eq!(
-            xa.to_bits(),
-            xb.to_bits(),
-            "{label}: final iterate coordinate {i} diverged ({xa} vs {xb})"
-        );
-    }
-    assert_eq!(a.total_payload_bits, b.total_payload_bits, "{label}: traffic");
 }
 
 /// Same seed ⇒ identical trace, run-over-run, with the default
@@ -112,4 +95,32 @@ fn dithered_codec_is_seed_deterministic_across_decode_paths() {
     let seq = run_once(SchemeKind::NdscDithered, usize::MAX);
     let par = run_once(SchemeKind::NdscDithered, 1);
     assert_bit_identical(&seq, &par, "dithered sequential vs scoped-threads");
+}
+
+/// An ideal SimNet (zero latency, zero jitter, zero drops, infinite
+/// bandwidth) must be **bitwise identical** to InProc: the network model
+/// consumes no randomness and stamps every frame `at = 0`, so selection,
+/// decode order and accumulation cannot differ — over any topology.
+#[test]
+fn inproc_and_zero_simnet_runs_are_bitwise_identical() {
+    for scheme in [SchemeKind::Ndsc, SchemeKind::NdscDithered] {
+        let inproc = run_once_over(scheme, usize::MAX, TransportKind::InProc);
+        let ideal = run_once_over(
+            scheme,
+            usize::MAX,
+            TransportKind::SimNet(SimNetConfig::ideal()),
+        );
+        assert_bit_identical(&inproc, &ideal, "inproc vs ideal simnet (star)");
+        // Hops multiply latency — and any multiple of zero is zero.
+        let chain = run_once_over(
+            scheme,
+            usize::MAX,
+            TransportKind::SimNet(SimNetConfig {
+                seed: 987,
+                topology: Topology::Chain,
+                links: vec![LinkModel::IDEAL],
+            }),
+        );
+        assert_bit_identical(&inproc, &chain, "inproc vs ideal simnet (chain)");
+    }
 }

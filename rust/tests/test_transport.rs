@@ -1,0 +1,217 @@
+//! Transport-layer acceptance: heterogeneous per-worker budgets with
+//! k-of-m partial participation, seed-deterministic SimNet schedules
+//! (stragglers + lossy links), and Recorded-trace replay fidelity.
+
+mod common;
+
+use common::assert_bit_identical;
+use kashinflow::coordinator::config::{RunConfig, SchemeKind};
+use kashinflow::coordinator::metrics::RunMetrics;
+use kashinflow::coordinator::transport::{
+    LinkModel, Participation, SimNetConfig, Topology, TransportKind,
+};
+use kashinflow::coordinator::worker::{DatasetGradSource, GradSource};
+use kashinflow::coordinator::{replay_distributed, run_distributed};
+use kashinflow::data::synthetic::planted_regression_shards;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::opt::objectives::Loss;
+
+/// Build the standard planted-regression job: shards, eval closure data,
+/// compressors — all deterministic in `cfg.seed` and `data_seed`.
+fn job(
+    cfg: &RunConfig,
+    data_seed: u64,
+) -> (
+    Vec<Box<dyn GradSource>>,
+    Vec<std::sync::Arc<dyn kashinflow::quant::Compressor>>,
+    Vec<kashinflow::opt::objectives::DatasetObjective>,
+) {
+    let mut rng = Rng::seed_from(data_seed);
+    let (shards, _) =
+        planted_regression_shards(cfg.workers, 10, cfg.n, Loss::Square, &mut rng, false);
+    let global = shards.clone();
+    let comps = cfg.build_compressors(&mut rng);
+    let sources: Vec<Box<dyn GradSource>> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, obj)| {
+            Box::new(DatasetGradSource {
+                obj,
+                batch: 0,
+                rng: Rng::seed_from(300 + i as u64),
+                idx: Vec::new(),
+            }) as Box<dyn GradSource>
+        })
+        .collect();
+    (sources, comps, global)
+}
+
+fn run_job(cfg: &RunConfig, data_seed: u64) -> RunMetrics {
+    let (sources, comps, global) = job(cfg, data_seed);
+    let m = cfg.workers;
+    run_distributed(cfg, vec![0.0; cfg.n], sources, comps, move |x| {
+        global.iter().map(|s| s.value(x)).sum::<f32>() / m as f32
+    })
+}
+
+/// (a) k-of-m partial participation with heterogeneous `R_i` still
+/// converges on the quadratic objective, every worker held to its own
+/// exact budget.
+#[test]
+fn kofm_with_heterogeneous_budgets_converges() {
+    let n = 32;
+    let cfg = RunConfig {
+        n,
+        workers: 4,
+        r: 1.875,
+        budgets: Some(vec![0.5, 1.0, 2.0, 4.0]),
+        scheme: SchemeKind::NdscDithered,
+        participation: Participation::KofM { k: 3 },
+        rounds: 300,
+        step: 0.02,
+        batch: 0,
+        seed: 11,
+        ..Default::default()
+    };
+    let metrics = run_job(&cfg, 1);
+    assert_eq!(metrics.rejected_messages, 0, "no worker may trip its budget");
+    assert!(metrics.rounds.iter().all(|r| r.participants == 3), "k-of-m must hold every round");
+    let first = metrics.rounds[0].value;
+    let last = metrics.final_value();
+    assert!(last < 0.3 * first, "no convergence under 3-of-4: {first} -> {last}");
+    // Lockstep: all four workers still *send* every round, each spending
+    // exactly its own ⌊n·R_i⌋ on a nonzero gradient. Round 0 is far from
+    // the optimum, so the exact per-round spend is 16+32+64+128 bits.
+    let per_round: usize = [0.5f32, 1.0, 2.0, 4.0]
+        .iter()
+        .map(|&r| kashinflow::quant::budget_bits(n, r))
+        .sum();
+    assert_eq!(per_round, 240);
+    assert_eq!(metrics.rounds[0].payload_bits, per_round);
+    assert!(metrics.rounds.iter().all(|r| r.payload_bits <= per_round));
+}
+
+/// (b) SimNet drop/latency schedules are seed-deterministic: same seed ⇒
+/// bit-identical traces (values, participants, traffic); different net
+/// seed ⇒ a different straggler/loss schedule.
+#[test]
+fn simnet_schedules_are_seed_deterministic() {
+    let lossy = |net_seed: u64| SimNetConfig {
+        seed: net_seed,
+        topology: Topology::Chain,
+        links: vec![LinkModel {
+            base_latency_us: 100,
+            jitter_us: 50,
+            drop_prob: 0.15,
+            bandwidth_bits_per_us: 8.0,
+        }],
+    };
+    let run_with = |net_seed: u64| {
+        let cfg = RunConfig {
+            n: 24,
+            workers: 4,
+            r: 2.0,
+            scheme: SchemeKind::NdscDithered,
+            participation: Participation::KofM { k: 3 },
+            transport: TransportKind::SimNet(lossy(net_seed)),
+            rounds: 60,
+            step: 0.01,
+            batch: 0,
+            seed: 5,
+            ..Default::default()
+        };
+        run_job(&cfg, 2)
+    };
+    let a = run_with(77);
+    let b = run_with(77);
+    assert_bit_identical(&a, &b, "same net seed");
+    // With 15% per-hop loss on a chain some rounds must degrade below k.
+    assert!(
+        a.rounds.iter().any(|r| r.participants < 3),
+        "lossy chain never lost a frame — drop model inert?"
+    );
+    let c = run_with(78);
+    let schedule = |m: &RunMetrics| -> Vec<(u32, usize)> {
+        m.rounds.iter().map(|r| (r.value.to_bits(), r.participants)).collect()
+    };
+    assert_ne!(schedule(&a), schedule(&c), "different net seeds must differ");
+}
+
+/// Deadline-triggered aggregation over a zero-jitter chain is exactly
+/// predictable: worker `i` arrives at `(i+1) * base_latency`, so a 250µs
+/// deadline admits precisely workers 0 and 1.
+#[test]
+fn deadline_cuts_off_chain_stragglers_exactly() {
+    let cfg = RunConfig {
+        n: 16,
+        workers: 4,
+        r: 2.0,
+        scheme: SchemeKind::Ndsc,
+        participation: Participation::Deadline { us: 250 },
+        transport: TransportKind::SimNet(SimNetConfig {
+            seed: 1,
+            topology: Topology::Chain,
+            links: vec![LinkModel {
+                base_latency_us: 100,
+                jitter_us: 0,
+                drop_prob: 0.0,
+                bandwidth_bits_per_us: 0.0,
+            }],
+        }),
+        rounds: 10,
+        step: 0.01,
+        batch: 0,
+        seed: 3,
+        ..Default::default()
+    };
+    let metrics = run_job(&cfg, 3);
+    assert!(
+        metrics.rounds.iter().all(|r| r.participants == 2),
+        "exactly workers 0 and 1 beat a 250µs deadline on a 100µs/hop chain"
+    );
+}
+
+/// (c) Recorded traces replay to identical server iterates — including a
+/// lossy SimNet schedule and partial participation: the trace alone
+/// carries enough (wire bytes + arrival tags) to re-derive every iterate.
+#[test]
+fn recorded_trace_replays_to_identical_iterates() {
+    let path = std::env::temp_dir()
+        .join(format!("kf_replay_{}.kftrace", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let net = SimNetConfig {
+        seed: 13,
+        topology: Topology::Tree { fanout: 2 },
+        links: vec![LinkModel {
+            base_latency_us: 50,
+            jitter_us: 20,
+            drop_prob: 0.1,
+            bandwidth_bits_per_us: 16.0,
+        }],
+    };
+    let cfg = RunConfig {
+        n: 20,
+        workers: 5,
+        r: 2.0,
+        scheme: SchemeKind::NdscDithered,
+        participation: Participation::KofM { k: 4 },
+        transport: TransportKind::Recorded { path: path.clone(), net: Some(net) },
+        rounds: 40,
+        step: 0.015,
+        batch: 0,
+        seed: 17,
+        ..Default::default()
+    };
+    let live = run_job(&cfg, 4);
+
+    // Replay: same config, same setup seed ⇒ same codecs (common
+    // randomness), but no workers — the trace is the only input.
+    let (_, comps, global) = job(&cfg, 4);
+    let m = cfg.workers;
+    let replayed = replay_distributed(&cfg, vec![0.0; cfg.n], &comps, &path, move |x| {
+        global.iter().map(|s| s.value(x)).sum::<f32>() / m as f32
+    });
+    assert_bit_identical(&live, &replayed, "live vs replay");
+    let _ = std::fs::remove_file(&path);
+}
