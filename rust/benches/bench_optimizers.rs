@@ -1,18 +1,28 @@
 //! Optimizer-loop benches: per-iteration cost of DGD-DEF and DQ-PSGD at
 //! the paper's problem sizes (Fig. 1b / Fig. 2 regimes) — L3 must not be
-//! the bottleneck relative to the oracle call.
+//! the bottleneck relative to the oracle call. Every case executes on
+//! the unified `opt::engine` round driver (the legacy entry points are
+//! spec-builders over it), so a regression in the engine hot path
+//! surfaces here; results land in `BENCH_optimizers.json` (the CI
+//! bench-smoke job uploads it alongside `BENCH_hotpath.json`).
 
-use kashinflow::data::synthetic::{planted_regression, two_gaussian_svm, Tail};
+use kashinflow::coordinator::transport::Participation;
+use kashinflow::data::synthetic::{
+    planted_regression, planted_regression_shards, two_gaussian_svm, Tail,
+};
 use kashinflow::linalg::rng::Rng;
 use kashinflow::opt::dgd_def::{self, DgdDefOptions};
 use kashinflow::opt::dq_psgd::{self, DqPsgdOptions};
+use kashinflow::opt::multi::{self, MultiOptions, ShardedProblem};
+use kashinflow::opt::objectives::Loss;
 use kashinflow::opt::oracle::MinibatchOracle;
 use kashinflow::opt::projection::Domain;
 use kashinflow::quant::ndsc::Ndsc;
+use kashinflow::quant::Compressor;
 use kashinflow::testkit::bench::{black_box, Bencher};
 
 fn main() {
-    let mut b = Bencher::new();
+    let mut b = Bencher::from_env();
     let mut rng = Rng::seed_from(4);
 
     // DGD-DEF per-iteration (10 iters per measurement), n = 116.
@@ -53,6 +63,35 @@ fn main() {
         black_box(tr.final_x[0]);
     });
 
+    // The engine's multi-worker consensus round: m = 8 ShardOracles +
+    // per-worker codecs + k-of-m participation, inline driver — the
+    // unified hot path the coordinator mirrors (10 rounds/measurement).
+    let mut data_rng = Rng::seed_from(6);
+    let (shards, _) =
+        planted_regression_shards(8, 10, 256, Loss::Square, &mut data_rng, false);
+    let problem = ShardedProblem::new(shards);
+    let comps: Vec<Box<dyn Compressor>> = (0..8)
+        .map(|_| Box::new(Ndsc::hadamard_dithered(256, 1.0, &mut data_rng)) as Box<dyn Compressor>)
+        .collect();
+    let step = problem.stable_step();
+    b.run("engine_multi/n256_m8_k6/10round", || {
+        let tr = multi::run(
+            &problem,
+            &comps,
+            &vec![0.0; 256],
+            None,
+            MultiOptions {
+                step,
+                iters: 10,
+                domain: Domain::Unconstrained,
+                batch: Some(5),
+                participation: Participation::KofM { k: 6 },
+            },
+            &mut rng,
+        );
+        black_box(tr.final_x[0]);
+    });
+
     // Raw compress/decompress at transformer scale (n = 2^17).
     let n = 1 << 17;
     let big = Ndsc::hadamard(n, 4.0, &mut rng);
@@ -60,4 +99,6 @@ fn main() {
     b.run_throughput("ndsc_compress/n131072", n, || {
         black_box(kashinflow::quant::Compressor::compress(&big, &y, &mut rng));
     });
+
+    b.save_json("BENCH_optimizers.json");
 }

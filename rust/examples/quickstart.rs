@@ -44,6 +44,7 @@ fn main() {
     let (l, mu) = obj.smoothness_strong_convexity();
     println!("\nleast squares n=116: L={l:.1} mu={mu:.3} sigma={:.4}", gd::sigma(l, mu));
     let opts = DgdDefOptions::optimal(l, mu, 150);
+    let mut last_trace = None;
     for r in [1.0f32, 3.0, 6.0] {
         let c = Ndsc::hadamard(116, r, &mut rng);
         let tr = dgd_def::run(&obj, &c, &vec![0.0; 116], Some(&xs), opts, &mut rng);
@@ -53,6 +54,16 @@ fn main() {
             tr.records.last().unwrap().dist_to_opt,
             kashinflow::quant::budget_bits(116, r),
         );
+        last_trace = Some(tr);
+    }
+
+    // Engine traces speak the same per-round CSV schema as the
+    // distributed coordinator (round,value,...,participants,wall_us) —
+    // one writer for both runtimes.
+    let csv = last_trace.expect("loop ran").to_csv();
+    println!("\nper-round CSV (first 3 rows of the R=6 run):");
+    for line in csv.lines().take(3) {
+        println!("  {line}");
     }
     println!("\n(see `repro figures` for the full paper reproduction)");
 }

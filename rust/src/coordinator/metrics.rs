@@ -1,7 +1,29 @@
 //! Run metrics: per-round loss, traffic, wall-clock; CSV export for the
 //! figure harness and EXPERIMENTS.md.
+//!
+//! The CSV schema lives here **once**: [`CSV_HEADER`] + [`csv_row`] are
+//! shared by every per-round consumer — [`RunMetrics::to_csv`] for
+//! coordinator runs and [`crate::opt::Trace::to_csv`] for inline engine
+//! runs — so a new column (as `participants` was) lands everywhere at
+//! the same time.
 
 use std::time::Duration;
+
+/// Header of the shared per-round CSV schema.
+pub const CSV_HEADER: &str = "round,value,mean_local_value,payload_bits,participants,wall_us\n";
+
+/// Format one per-round CSV row of the shared schema. Consumers that do
+/// not track a column pass `NaN` (local values) or `0` (wall-clock).
+pub fn csv_row(
+    round: u64,
+    value: f32,
+    mean_local_value: f32,
+    payload_bits: usize,
+    participants: usize,
+    wall_us: u128,
+) -> String {
+    format!("{round},{value},{mean_local_value},{payload_bits},{participants},{wall_us}\n")
+}
 
 /// One consensus round.
 #[derive(Clone, Debug)]
@@ -56,17 +78,15 @@ impl RunMetrics {
     /// CSV dump:
     /// `round,value,mean_local_value,payload_bits,participants,wall_us`.
     pub fn to_csv(&self) -> String {
-        let mut s =
-            String::from("round,value,mean_local_value,payload_bits,participants,wall_us\n");
+        let mut s = String::from(CSV_HEADER);
         for r in &self.rounds {
-            s.push_str(&format!(
-                "{},{},{},{},{},{}\n",
+            s.push_str(&csv_row(
                 r.round,
                 r.value,
                 r.mean_local_value,
                 r.payload_bits,
                 r.participants,
-                r.wall.as_micros()
+                r.wall.as_micros(),
             ));
         }
         s

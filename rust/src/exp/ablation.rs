@@ -11,6 +11,9 @@ use crate::data::synthetic::{planted_regression, Tail};
 use crate::exp::common::{print_figure, scaled, Series};
 use crate::linalg::rng::Rng;
 use crate::opt::dgd_def::{self, DgdDefOptions};
+use crate::opt::engine::oracle::ExactGrad;
+use crate::opt::engine::schedule::Schedule;
+use crate::opt::engine::{Codecs, Engine, Problem};
 use crate::quant::dsc::{CodecMode, EmbedKind};
 use crate::quant::registry::{CompressorSpec, FrameSpec};
 use crate::quant::Compressor;
@@ -40,19 +43,16 @@ pub fn ablation_ef(quick: bool) -> Vec<Series> {
         let mut s = Series::new(format!("EF-R{r}"));
         s.push(iters as f32, tr.records.last().unwrap().dist_to_opt);
         series.push(s);
-        // Without feedback: x <- x - α·Q(∇f(x)), same codec.
+        // Without feedback: x <- x - α·Q(∇f(x)), same codec — the same
+        // engine spec minus the `DefFeedback` component (what used to be
+        // a hand-written seventh loop is a one-line composition change).
         let c2 = ndh_spec().build(n, r, &mut rng);
-        let mut x = vec![0.0f32; n];
-        let mut g = vec![0.0f32; n];
-        for _ in 0..iters {
-            obj.gradient(&x, &mut g);
-            let q = c2.decompress(&c2.compress(&g, &mut rng));
-            for (xi, &qi) in x.iter_mut().zip(&q) {
-                *xi -= opts.step * qi;
-            }
-        }
+        let tr_plain = Engine::new(Problem::Single(&obj), Schedule::Constant(opts.step), iters)
+            .with_oracle(ExactGrad { obj: &obj })
+            .with_codecs(Codecs::Shared(c2.as_ref()))
+            .run(&vec![0.0; n], Some(&xs), &mut rng);
         let mut s = Series::new(format!("noEF-R{r}"));
-        s.push(iters as f32, crate::linalg::vecops::dist2(&x, &xs));
+        s.push(iters as f32, tr_plain.records.last().unwrap().dist_to_opt);
         series.push(s);
     }
     print_figure("Ablation: error feedback on/off, final ||x−x*||", "iters", &series);

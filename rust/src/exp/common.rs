@@ -1,5 +1,13 @@
 //! Shared plumbing for the experiment harness: series printing, trial
 //! averaging, and quick-mode scaling.
+//!
+//! Per-round metrics come out of the optimizer engine as one stream
+//! ([`crate::opt::Trace`], convertible to coordinator
+//! [`crate::coordinator::metrics::RunMetrics`]); this module is the glue
+//! from that stream to figure curves ([`value_series`]) — CSV export
+//! goes through the single writer in [`crate::coordinator::metrics`].
+
+use crate::opt::Trace;
 
 /// A named series of (x, y) points — one curve of a figure.
 #[derive(Clone, Debug)]
@@ -73,6 +81,18 @@ pub fn scaled(full: usize, quick: bool) -> usize {
     }
 }
 
+/// One value-vs-iteration curve from an optimizer trace, thinned to ~`k`
+/// points — the standard engine-trace → figure glue.
+pub fn value_series(name: impl Into<String>, trace: &Trace, k: usize) -> Series {
+    let mut s = Series::new(name);
+    let pts: Vec<(f32, f32)> =
+        trace.records.iter().enumerate().map(|(i, rec)| (i as f32, rec.value)).collect();
+    for (x, y) in thin(&pts, k) {
+        s.push(x, y);
+    }
+    s
+}
+
 /// Thin down a trace to ~`k` evenly spaced points for printing.
 pub fn thin(points: &[(f32, f32)], k: usize) -> Vec<(f32, f32)> {
     if points.len() <= k {
@@ -107,5 +127,19 @@ mod tests {
         assert_eq!(scaled(50, true), 10);
         assert_eq!(scaled(50, false), 50);
         assert_eq!(scaled(4, true), 2);
+    }
+
+    #[test]
+    fn value_series_thins_trace_records() {
+        use crate::opt::IterRecord;
+        let trace = Trace {
+            records: (0..100)
+                .map(|i| IterRecord { value: i as f32, ..Default::default() })
+                .collect(),
+            ..Default::default()
+        };
+        let s = value_series("v", &trace, 10);
+        assert_eq!(s.points.len(), 10);
+        assert_eq!(s.points[0], (0.0, 0.0));
     }
 }

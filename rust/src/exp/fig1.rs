@@ -12,7 +12,9 @@
 //! Every compressor is constructed through the registry
 //! ([`crate::quant::registry`]): each curve is a `CompressorSpec`
 //! evaluated across the budget sweep, so adding a scheme to a figure is a
-//! one-line spec change.
+//! one-line spec change. Every optimizer run executes on the unified
+//! [`crate::opt::engine`] round driver via the `dgd_def` / `gd` spec
+//! builders.
 
 use std::time::Instant;
 
@@ -20,7 +22,7 @@ use crate::data::mnist_like;
 use crate::embed::democratic::KashinSolver;
 use crate::embed::lp::{min_linf, LinfOptions};
 use crate::embed::near_democratic::nde;
-use crate::exp::common::{print_figure, scaled, thin, Series};
+use crate::exp::common::{print_figure, scaled, value_series, Series};
 use crate::linalg::frames::HadamardFrame;
 use crate::linalg::fwht::next_pow2;
 use crate::linalg::rng::Rng;
@@ -220,13 +222,7 @@ pub fn fig1d(quick: bool) -> Vec<Series> {
         let eff_r = if spec == CompressorSpec::Fp32 { 32.0 } else { r };
         let c = spec.build(n, eff_r, &mut rng);
         let tr = dgd_def::run(&obj, c.as_ref(), &x0, Some(&xs), opts, &mut rng);
-        let mut s = Series::new(name);
-        let pts: Vec<(f32, f32)> =
-            tr.records.iter().enumerate().map(|(i, rec)| (i as f32, rec.value)).collect();
-        for (x, y) in thin(&pts, 20) {
-            s.push(x, y);
-        }
-        series.push(s);
+        series.push(value_series(name, &tr, 20));
     }
 
     print_figure(

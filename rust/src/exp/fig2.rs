@@ -8,7 +8,9 @@
 //! Each curve is a [`CompressorSpec`] (or `None` for the unquantized
 //! reference) built through the registry at the figure's budget — the
 //! sparsifier sizes (`k = ⌊nR⌋`, the paper's "78 coordinates × 1 bit"
-//! accounting) fall out of the spec instead of being hand-wired.
+//! accounting) fall out of the spec instead of being hand-wired. The
+//! runs themselves execute on the unified [`crate::opt::engine`] round
+//! driver via the `dq_psgd` / `psgd` spec builders.
 
 use crate::data::mnist_like;
 use crate::data::synthetic::two_gaussian_svm;

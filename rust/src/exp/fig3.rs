@@ -5,6 +5,10 @@
 //! * 5/6: the Appendix-I sweeps (Gaussian³ / Student-t, R ∈ {0.5, 1}).
 //! * 3b: the non-convex federated run (transformer; see
 //!   [`crate::exp::transformer`] and `examples/train_transformer.rs`).
+//!
+//! Every sweep cell executes the `multi` spec (per-worker `ShardOracle`
+//! + codec, Polyak average) on the unified [`crate::opt::engine`] round
+//! driver.
 
 use crate::coordinator::transport::Participation;
 use crate::data::synthetic::planted_regression_shards;

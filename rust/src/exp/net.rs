@@ -16,15 +16,18 @@
 //! ```
 
 use crate::coordinator::config::{RunConfig, SchemeKind};
-use crate::coordinator::run_distributed;
 use crate::coordinator::transport::{
     LinkModel, Participation, SimNetConfig, Topology, TransportKind,
 };
-use crate::coordinator::worker::{DatasetGradSource, GradSource};
 use crate::data::synthetic::planted_regression_shards;
 use crate::linalg::rng::Rng;
+use crate::opt::engine::driver::run_config;
 use crate::opt::multi::ShardedProblem;
 use crate::opt::objectives::Loss;
+
+/// Per-worker gradient-noise salt for this harness (kept distinct from
+/// the CLI's so `repro net` traces stay byte-stable across PRs).
+const WORKER_SEED_SALT: u64 = 31;
 
 /// One grid cell's summary.
 struct NetCell {
@@ -85,21 +88,12 @@ fn run_cell(
         eprintln!("net: invalid configuration: {e}");
         std::process::exit(2);
     });
-    let comps = cfg.build_compressors(&mut rng);
-    let sources: Vec<Box<dyn GradSource>> = shards
-        .into_iter()
-        .enumerate()
-        .map(|(i, obj)| {
-            Box::new(DatasetGradSource {
-                obj,
-                batch: 0,
-                rng: Rng::seed_from(seed ^ (31 + i as u64)),
-                idx: Vec::new(),
-            }) as Box<dyn GradSource>
-        })
-        .collect();
-    let metrics =
-        run_distributed(&cfg, vec![0.0; n], sources, comps, move |x| problem.value(x));
+    // The engine's distributed driver owns the fleet plumbing: one
+    // budget-R_i codec and one gradient source per shard, over the
+    // configured transport.
+    let metrics = run_config(&cfg, vec![0.0; n], shards, WORKER_SEED_SALT, &mut rng, move |x| {
+        problem.value(x)
+    });
     NetCell {
         topology,
         mix_name,

@@ -2,7 +2,10 @@
 //! dimension, normalized `l₂` error on heavy-tailed inputs, and encode
 //! wall-clock. The paper's table lists asymptotic orders; this harness
 //! prints the corresponding *measured* values at `n = 1024` so the
-//! ordering claims can be checked directly.
+//! ordering claims can be checked directly. (Pure codec measurements —
+//! the only experiment with no optimizer run, hence nothing routed
+//! through [`crate::opt::engine`]; every scheme still comes from the
+//! registry.)
 
 use std::time::Instant;
 

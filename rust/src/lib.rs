@@ -16,10 +16,13 @@
 //!   vqSGD cross-polytope, RATQ-style adaptive ranges) and an exact-width
 //!   bit-packed wire format that respects the budget of `R` bits/dimension
 //!   for any `R ∈ (0, ∞)`.
-//! * **Optimizers** ([`opt`]) — `DGD-DEF` (Alg. 1, error feedback, smooth
-//!   strongly-convex) and `DQ-PSGD` (Alg. 2/3, dithered gain–shape,
-//!   general convex non-smooth), with unquantized GD / projected SGD
-//!   references and the objective/oracle zoo used in the evaluation.
+//! * **Optimizers** ([`opt`]) — one composable round engine
+//!   ([`opt::engine`]: pluggable oracles, step schedules, feedback
+//!   memories and drivers) behind every algorithm: `DGD-DEF` (Alg. 1,
+//!   error feedback, smooth strongly-convex), `DQ-PSGD` (Alg. 2/3,
+//!   dithered gain–shape, general convex non-smooth), the multi-worker
+//!   consensus loops, and the unquantized GD / projected SGD references,
+//!   plus the objective/oracle zoo used in the evaluation.
 //! * **Distributed runtime** ([`coordinator`]) — a parameter-server with
 //!   `m` workers over a pluggable transport (in-process channels, a
 //!   deterministic SimNet latency/jitter/drop/topology model, recorded

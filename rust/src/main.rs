@@ -1,13 +1,15 @@
 //! `repro` — the kashinflow CLI.
 //!
 //! ```text
-//! repro table1|fig1a|fig1b|fig1c|fig1d|fig2ab|fig2cd|fig3a|fig3b|fig5|fig6|fig8|fig11   [--quick]
-//! repro figures [--quick]            # everything above in sequence
-//! repro schemes [n=..] [r=..]        # print the registry zoo at (n, R)
-//! repro net    [--quick] [key=value ...]   # SimNet topology x budget x drop sweep
-//! repro train  [key=value ...]       # distributed run on a planted problem
-//! repro train-transformer [key=value ...]  # federated transformer (needs artifacts)
+//! repro <command> [--quick] [key=value ...]
+//! repro help     # the full subcommand list (the `COMMANDS` const — the
+//!                # single source the usage text and this doc defer to)
 //! ```
+//!
+//! Highlights: `figures` regenerates every table/figure, `schemes`
+//! prints the registry zoo at one `(n, R)`, `net` sweeps SimNet
+//! topology × budget × drop, `train` runs the distributed coordinator
+//! on a planted problem.
 //!
 //! `train` keys: n, workers, r (scalar or per-worker `r=0.5,1,2,4`),
 //! scheme, frame, rounds, step, batch, radius, seed, part
@@ -17,20 +19,42 @@
 //! `repro train n=116 workers=4 r=0.5 scheme=ndsc-dith rounds=300 \
 //!    transport=sim topo=chain drop=0.1 part=k:3`
 
+use std::io::Write;
+
 use kashinflow::coordinator::config::RunConfig;
-use kashinflow::coordinator::worker::DatasetGradSource;
 use kashinflow::data::synthetic::planted_regression_shards;
 use kashinflow::exp;
 use kashinflow::linalg::rng::Rng;
+use kashinflow::opt::engine::driver::run_config;
+use kashinflow::opt::multi::ShardedProblem;
 use kashinflow::opt::objectives::Loss;
 use kashinflow::quant::Compressor;
 
+/// Every subcommand, in `usage`/help order — one list so the help text
+/// and the unknown-command error can never go stale against `main`'s
+/// dispatch again. (A plain multi-line literal: `\`-continuations would
+/// strip the indentation.)
+const COMMANDS: &str = "  figures                 every table/figure below in sequence
+  table1                  measured scheme comparison (bits, error, time)
+  fig1a fig1b fig1c fig1d smooth & strongly-convex experiments
+  fig2ab fig2cd           DQ-PSGD SVM experiments
+  fig3a fig3b fig5 fig6   multi-worker experiments (3b needs artifacts)
+  fig8|fig9 fig11|fig12   Appendix-N lambda studies
+  ablation-ef ablation-lambda ablation-dqgd
+  schemes                 print the registry zoo at (n, R)
+  net                     SimNet topology x budget x drop sweep
+  train                   distributed run on a planted problem
+  train-transformer       federated transformer (needs artifacts)
+  help                    this text";
+
+fn print_usage(out: &mut dyn std::io::Write) {
+    let _ = writeln!(out, "usage: repro <command> [--quick] [key=value ...]");
+    let _ = writeln!(out, "commands:\n{COMMANDS}");
+    let _ = writeln!(out, "see `rust/src/main.rs` docs for the train/net key=value grammar");
+}
+
 fn usage() -> ! {
-    eprintln!(
-        "usage: repro <command> [--quick] [key=value ...]\n\
-         commands: table1 fig1a fig1b fig1c fig1d fig2ab fig2cd fig3a fig3b\n\
-                   fig5 fig6 fig8 fig11 ablation-ef ablation-lambda ablation-dqgd\n                   schemes net figures train train-transformer"
-    );
+    print_usage(&mut std::io::stderr());
     std::process::exit(2);
 }
 
@@ -105,6 +129,10 @@ fn main() {
         false
     };
     match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print_usage(&mut std::io::stdout());
+            return;
+        }
         "table1" => exp::table1::run(quick),
         "fig1a" => {
             exp::fig1::fig1a(quick);
@@ -223,39 +251,25 @@ fn main() {
                 }
             }
         }
-        _ => usage(),
+        _ => {
+            eprintln!("repro: unknown command '{cmd}'");
+            usage();
+        }
     }
 }
 
 /// Distributed training on a planted regression problem (the `train`
-/// subcommand): the quickest way to exercise the full coordinator.
+/// subcommand): the quickest way to exercise the full coordinator, via
+/// the engine's distributed driver plumbing
+/// ([`kashinflow::opt::engine::driver::run_config`]).
 fn run_train(cfg: &RunConfig) {
     let mut rng = Rng::seed_from(cfg.seed);
     let s_local = 10;
     let (shards, xs) =
         planted_regression_shards(cfg.workers, s_local, cfg.n, Loss::Square, &mut rng, false);
-    let global = shards.clone();
-    let comps = cfg.build_compressors(&mut rng);
-    let sources: Vec<Box<dyn kashinflow::coordinator::worker::GradSource>> = shards
-        .into_iter()
-        .enumerate()
-        .map(|(i, obj)| {
-            Box::new(DatasetGradSource {
-                obj,
-                batch: cfg.batch,
-                rng: Rng::seed_from(cfg.seed ^ (7 + i as u64)),
-                idx: Vec::new(),
-            }) as Box<dyn kashinflow::coordinator::worker::GradSource>
-        })
-        .collect();
-    let m = cfg.workers;
-    let metrics = kashinflow::coordinator::run_distributed(
-        cfg,
-        vec![0.0; cfg.n],
-        sources,
-        comps,
-        move |x| global.iter().map(|s| s.value(x)).sum::<f32>() / m as f32,
-    );
+    let global = ShardedProblem::new(shards.clone());
+    let metrics =
+        run_config(cfg, vec![0.0; cfg.n], shards, 7, &mut rng, |x| global.value(x));
     print!("{}", metrics.to_csv());
     let dist: f32 = kashinflow::linalg::vecops::dist2(&metrics.final_iterate, &xs);
     eprintln!(

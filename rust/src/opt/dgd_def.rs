@@ -9,12 +9,18 @@
 //! converge linearly at rate `max{ν, β}` with `β = 2^{1−R/λ}K_u` (DSC) or
 //! `2^{2−R/λ}√log(2N)` (NDSC) — dimension-free, matching the
 //! `max{σ, 2^{−R}}` lower bound up to constants.
+//!
+//! Engine spec: `ExactGrad` oracle, constant step, shared codec,
+//! [`DefFeedback`] memory, last-iterate output with trailing record.
 
 use crate::linalg::rng::Rng;
-use crate::linalg::vecops::dist2;
+use crate::opt::engine::feedback::DefFeedback;
+use crate::opt::engine::oracle::ExactGrad;
+use crate::opt::engine::schedule::{optimal_sc_step, Schedule};
+use crate::opt::engine::{Codecs, Engine, Problem};
 use crate::opt::objectives::DatasetObjective;
-use crate::opt::{IterRecord, Trace};
-use crate::quant::{Compressed, Compressor, Workspace};
+use crate::opt::Trace;
+use crate::quant::Compressor;
 
 /// Options for a DGD-DEF run.
 #[derive(Clone, Copy, Debug)]
@@ -25,8 +31,10 @@ pub struct DgdDefOptions {
 }
 
 impl DgdDefOptions {
+    /// Thm. 2's optimal step — single-sourced in
+    /// [`crate::opt::engine::schedule`].
     pub fn optimal(l: f32, mu: f32, iters: usize) -> Self {
-        DgdDefOptions { step: 2.0 / (l + mu), iters }
+        DgdDefOptions { step: optimal_sc_step(l, mu), iters }
     }
 }
 
@@ -39,66 +47,18 @@ pub fn run(
     opts: DgdDefOptions,
     rng: &mut Rng,
 ) -> Trace {
-    let n = obj.dim();
-    assert_eq!(compressor.n(), n);
-    let mut xhat = x0.to_vec();
-    let mut e = vec![0.0f32; n]; // e_{-1} = 0
-    let mut z = vec![0.0f32; n];
-    let mut u = vec![0.0f32; n];
-    // Encode/decode scratch, owned by the loop: after the first iteration
-    // every round is allocation-free.
-    let mut ws = Workspace::for_compressor(compressor);
-    let mut msg = Compressed::empty(n);
-    let mut q = vec![0.0f32; n];
-    let mut trace = Trace::default();
-    trace.records.reserve(opts.iters + 1);
-    for _ in 0..opts.iters {
-        trace.records.push(IterRecord {
-            value: obj.value(&xhat),
-            dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
-            payload_bits: 0,
-        });
-        // Worker:
-        // z_t = x̂_t + α e_{t−1}
-        for ((zi, &xi), &ei) in z.iter_mut().zip(&xhat).zip(&e) {
-            *zi = xi + opts.step * ei;
-        }
-        // u_t = ∇f(z_t) − e_{t−1}
-        obj.gradient(&z, &mut u);
-        for (ui, &ei) in u.iter_mut().zip(&e) {
-            *ui -= ei;
-        }
-        // v_t = E(u_t); q_t = D(v_t)
-        compressor.compress_into(&u, rng, &mut ws, &mut msg);
-        trace.total_payload_bits += msg.payload_bits;
-        trace.total_side_bits += msg.side_bits;
-        if let Some(r) = trace.records.last_mut() {
-            r.payload_bits = msg.payload_bits;
-        }
-        compressor.decompress_into(&msg, &mut ws, &mut q);
-        // e_t = q_t − u_t
-        for ((ei, &qi), &ui) in e.iter_mut().zip(&q).zip(&u) {
-            *ei = qi - ui;
-        }
-        // Server: x̂_{t+1} = x̂_t − α q_t
-        for (xi, &qi) in xhat.iter_mut().zip(&q) {
-            *xi -= opts.step * qi;
-        }
-    }
-    trace.records.push(IterRecord {
-        value: obj.value(&xhat),
-        dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
-        payload_bits: 0,
-    });
-    trace.final_x = xhat;
-    trace
+    Engine::new(Problem::Single(obj), Schedule::Constant(opts.step), opts.iters)
+        .with_oracle(ExactGrad { obj })
+        .with_codecs(Codecs::Shared(compressor))
+        .with_feedback(DefFeedback::new(1, obj.dim()))
+        .run(x0, x_star, rng)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::frames::HadamardFrame;
-    use crate::linalg::vecops::matvec;
+    use crate::linalg::vecops::{dist2, matvec};
     use crate::opt::gd::sigma;
     use crate::opt::objectives::Loss;
     use crate::quant::gain_shape::NaiveUniform;

@@ -9,14 +9,19 @@
 //! `K_u·D·B/√(T·min{1,R})` — minimax-optimal for every `R ∈ (0, ∞)`,
 //! sub-linear budgets included, with **no error feedback needed** (the
 //! dither's unbiasedness substitutes for it).
+//!
+//! Engine spec: `OwnNoise` oracle adapter, constant step, shared dithered
+//! codec, no feedback, lossy uplink (`drop_prob`), Polyak-average output.
 
 use crate::linalg::rng::Rng;
-use crate::linalg::vecops::dist2;
+use crate::opt::engine::oracle::OwnNoise;
+use crate::opt::engine::schedule::{dq_psgd_theory_step, Schedule};
+use crate::opt::engine::{Codecs, Engine, OutputMode, Problem};
 use crate::opt::objectives::DatasetObjective;
 use crate::opt::oracle::Oracle;
 use crate::opt::projection::Domain;
-use crate::opt::{IterRecord, Trace};
-use crate::quant::{Compressed, Compressor, Workspace};
+use crate::opt::Trace;
+use crate::quant::Compressor;
 
 #[derive(Clone, Copy, Debug)]
 pub struct DqPsgdOptions {
@@ -32,10 +37,11 @@ pub struct DqPsgdOptions {
 }
 
 impl DqPsgdOptions {
-    /// Theorem 3's step size `α = D/(B·K_u)·√(min{R,1}/T)`; we take the
-    /// empirical `K_u ≈ 1` for NDSC at λ = 1 (App. N).
+    /// Theorem 3's step size `α = D/(B·K_u)·√(min{R,1}/T)` (single-sourced
+    /// in [`crate::opt::engine::schedule`]); we take the empirical
+    /// `K_u ≈ 1` for NDSC at λ = 1 (App. N).
     pub fn theory(d: f32, b: f32, r: f32, ku: f32, iters: usize, domain: Domain) -> Self {
-        let step = d / (b * ku) * (r.min(1.0) / iters as f32).sqrt();
+        let step = dq_psgd_theory_step(d, b, r, ku, iters);
         DqPsgdOptions { step, iters, domain, drop_prob: 0.0 }
     }
 }
@@ -51,49 +57,13 @@ pub fn run(
     opts: DqPsgdOptions,
     rng: &mut Rng,
 ) -> Trace {
-    let n = obj.dim();
-    assert_eq!(compressor.n(), n);
-    let mut x = x0.to_vec();
-    opts.domain.project(&mut x);
-    let mut avg = vec![0.0f32; n];
-    let mut g = vec![0.0f32; n];
-    // Encode/decode scratch, owned by the loop: steady-state iterations
-    // are allocation-free.
-    let mut ws = Workspace::for_compressor(compressor);
-    let mut msg = Compressed::empty(n);
-    let mut q = vec![0.0f32; n];
-    let mut trace = Trace::default();
-    trace.records.reserve(opts.iters);
-    for t in 0..opts.iters {
-        // Worker: noisy subgradient + dithered democratic encoding.
-        oracle.query(&x, &mut g);
-        compressor.compress_into(&g, rng, &mut ws, &mut msg);
-        trace.total_payload_bits += msg.payload_bits;
-        trace.total_side_bits += msg.side_bits;
-        // Lossy uplink: the codeword may never reach the server (bits
-        // already spent). The running average still advances — wall-clock
-        // rounds pass whether or not the step happens.
-        let delivered = opts.drop_prob <= 0.0 || rng.uniform_f32() >= opts.drop_prob;
-        if delivered {
-            // Server: decode, step, project.
-            compressor.decompress_into(&msg, &mut ws, &mut q);
-            for (xi, &qi) in x.iter_mut().zip(&q) {
-                *xi -= opts.step * qi;
-            }
-            opts.domain.project(&mut x);
-        }
-        let w = 1.0 / (t + 1) as f32;
-        for (ai, &xi) in avg.iter_mut().zip(&x) {
-            *ai += w * (xi - *ai);
-        }
-        trace.records.push(IterRecord {
-            value: obj.value(&avg),
-            dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
-            payload_bits: msg.payload_bits,
-        });
-    }
-    trace.final_x = avg;
-    trace
+    Engine::new(Problem::Single(obj), Schedule::Constant(opts.step), opts.iters)
+        .with_oracle(OwnNoise(oracle))
+        .with_codecs(Codecs::Shared(compressor))
+        .with_domain(opts.domain)
+        .with_drop_prob(opts.drop_prob)
+        .with_output(OutputMode::PolyakAverage)
+        .run(x0, x_star, rng)
 }
 
 #[cfg(test)]

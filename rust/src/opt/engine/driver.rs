@@ -1,0 +1,257 @@
+//! Drivers — where an engine spec's rounds execute.
+//!
+//! * [`InlineDriver`] — every round runs in the calling thread; the
+//!   deterministic reference used by the figure harness and the theory
+//!   tests. This is [`Engine::run`] behind a `Driver` face.
+//! * [`CoordinatorDriver`] — rounds run on the threaded parameter server
+//!   over a pluggable transport (in-process channels, SimNet, recorded
+//!   traces), with per-worker budget enforcement and full / k-of-m /
+//!   deadline participation from the [`RunConfig`]. The declarative side
+//!   of the spec (scheme, budgets, participation, transport, rounds,
+//!   step) lives in the config — the PR 3 transport layer owns delivery —
+//!   while the [`Engine`] contributes the sharded problem and the
+//!   initial iterate.
+//!
+//! [`run_config`] is the shared plumbing both the CLI (`repro train`) and
+//! the sweep harness (`repro net`) call: it builds one gradient source
+//! and one budget-`R_i` compressor per shard and drives
+//! [`crate::coordinator::run_distributed`].
+
+use crate::coordinator::config::RunConfig;
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::run_distributed;
+use crate::coordinator::worker::{DatasetGradSource, GradSource};
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::dist2;
+use crate::opt::engine::{Engine, Problem};
+use crate::opt::objectives::DatasetObjective;
+use crate::opt::{IterRecord, Trace};
+
+/// Executes an engine spec end to end.
+pub trait Driver {
+    /// Driver name for run summaries.
+    fn name(&self) -> &'static str;
+    /// Run `spec` from `x0`; `x_star` (when known) populates
+    /// distance-to-optimum metrics where the driver can compute them.
+    fn drive(
+        &mut self,
+        spec: Engine<'_>,
+        x0: &[f32],
+        x_star: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Trace;
+}
+
+/// The single-node inline driver.
+pub struct InlineDriver;
+
+impl Driver for InlineDriver {
+    fn name(&self) -> &'static str {
+        "inline"
+    }
+
+    fn drive(
+        &mut self,
+        spec: Engine<'_>,
+        x0: &[f32],
+        x_star: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Trace {
+        spec.run(x0, x_star, rng)
+    }
+}
+
+/// The distributed driver: re-hosts a sharded spec on the threaded
+/// coordinator. Requires [`Problem::Sharded`] with one shard per
+/// configured worker.
+///
+/// **The [`RunConfig`] is authoritative for the fleet**: codecs at
+/// per-worker budgets `R_i`, batching, participation, transport, step.
+/// The [`Engine`] contributes the problem, the initial iterate and the
+/// round count — inline-only components of the spec (oracles, codecs,
+/// schedule, feedback, drop-prob) are **not** translated onto the wire
+/// and must be expressed through the config instead; `drive` asserts the
+/// shapes that can be checked (`n`, `workers`, `rounds`) so a spec/config
+/// mismatch fails loudly rather than running the wrong experiment.
+pub struct CoordinatorDriver<'c> {
+    pub cfg: &'c RunConfig,
+    /// Per-worker gradient-noise salt: worker `i` samples minibatches
+    /// from `Rng::seed_from(cfg.seed ^ (salt + i))`.
+    pub worker_seed_salt: u64,
+    /// Full metrics of the most recent [`Driver::drive`] call — wall
+    /// clock, participants, budget rejections — beyond what a [`Trace`]
+    /// carries.
+    pub last_metrics: Option<RunMetrics>,
+}
+
+impl<'c> CoordinatorDriver<'c> {
+    pub fn new(cfg: &'c RunConfig) -> Self {
+        CoordinatorDriver { cfg, worker_seed_salt: 7, last_metrics: None }
+    }
+}
+
+impl Driver for CoordinatorDriver<'_> {
+    fn name(&self) -> &'static str {
+        "coordinator"
+    }
+
+    fn drive(
+        &mut self,
+        spec: Engine<'_>,
+        x0: &[f32],
+        x_star: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Trace {
+        let problem = match spec.problem() {
+            Problem::Sharded(p) => p,
+            Problem::Single(_) => {
+                panic!("CoordinatorDriver needs a sharded problem (one shard per worker)")
+            }
+        };
+        assert_eq!(self.cfg.n, problem.n, "config n != problem dimension");
+        assert_eq!(self.cfg.workers, problem.m(), "config workers != shard count");
+        assert_eq!(
+            self.cfg.rounds,
+            spec.rounds(),
+            "config rounds != spec rounds (the coordinator runs the config's fleet; \
+             build the spec with cfg.rounds)"
+        );
+        let metrics = run_config(
+            self.cfg,
+            x0.to_vec(),
+            problem.shards.clone(),
+            self.worker_seed_salt,
+            rng,
+            |x| problem.value(x),
+        );
+        let mut trace = trace_from_metrics(&metrics);
+        if let (Some(xs), Some(last)) = (x_star, trace.records.last_mut()) {
+            last.dist_to_opt = dist2(&metrics.final_iterate, xs);
+        }
+        self.last_metrics = Some(metrics);
+        trace
+    }
+}
+
+/// Drive the threaded coordinator from a [`RunConfig`] and a set of
+/// dataset shards: builds one compressor per worker at its own budget
+/// `R_i` (frame randomness drawn from `rng` — the common randomness
+/// established at setup) and one minibatch gradient source per shard
+/// (noise stream `cfg.seed ^ (worker_seed_salt + i)`), then runs the
+/// full transport-backed parameter server.
+pub fn run_config(
+    cfg: &RunConfig,
+    x0: Vec<f32>,
+    shards: Vec<DatasetObjective>,
+    worker_seed_salt: u64,
+    rng: &mut Rng,
+    eval: impl FnMut(&[f32]) -> f32,
+) -> RunMetrics {
+    assert_eq!(shards.len(), cfg.workers, "one shard per configured worker");
+    let compressors = cfg.build_compressors(rng);
+    let sources: Vec<Box<dyn GradSource>> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, obj)| {
+            Box::new(DatasetGradSource {
+                obj,
+                batch: cfg.batch,
+                rng: Rng::seed_from(cfg.seed ^ (worker_seed_salt + i as u64)),
+                idx: Vec::new(),
+            }) as Box<dyn GradSource>
+        })
+        .collect();
+    run_distributed(cfg, x0, sources, compressors, eval)
+}
+
+/// View coordinator metrics as an optimizer [`Trace`] so both drivers
+/// feed one consumer surface. Per-round distance-to-optimum is unknown
+/// to the coordinator (records carry `NaN`); the final iterate and the
+/// traffic totals transfer exactly.
+pub fn trace_from_metrics(metrics: &RunMetrics) -> Trace {
+    let mut trace = Trace {
+        records: Vec::with_capacity(metrics.rounds.len()),
+        final_x: metrics.final_iterate.clone(),
+        total_payload_bits: metrics.total_payload_bits,
+        total_side_bits: metrics.total_overhead_bits,
+    };
+    for r in &metrics.rounds {
+        trace.records.push(IterRecord {
+            value: r.value,
+            dist_to_opt: f32::NAN,
+            payload_bits: r.payload_bits,
+            participants: r.participants,
+        });
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::SchemeKind;
+    use crate::data::synthetic::planted_regression_shards;
+    use crate::opt::engine::schedule::Schedule;
+    use crate::opt::engine::oracle::ShardOracle;
+    use crate::opt::engine::{OutputMode, RngPolicy};
+    use crate::opt::multi::ShardedProblem;
+    use crate::opt::objectives::Loss;
+
+    #[test]
+    fn coordinator_driver_runs_a_sharded_spec() {
+        let n = 16;
+        let m = 3;
+        let mut rng = Rng::seed_from(9);
+        let (shards, _) = planted_regression_shards(m, 8, n, Loss::Square, &mut rng, false);
+        let problem = ShardedProblem::new(shards);
+        let cfg = RunConfig {
+            n,
+            workers: m,
+            r: 2.0,
+            scheme: SchemeKind::Ndsc,
+            rounds: 12,
+            step: 1e-3,
+            batch: 0,
+            seed: 5,
+            ..Default::default()
+        };
+        let spec = Engine::new(Problem::Sharded(&problem), Schedule::Constant(cfg.step), cfg.rounds)
+            .with_output(OutputMode::PolyakAverage);
+        let mut driver = CoordinatorDriver::new(&cfg);
+        let xs = vec![0.0f32; n];
+        let trace = driver.drive(spec, &vec![0.0; n], Some(&xs), &mut rng);
+        assert_eq!(driver.name(), "coordinator");
+        assert_eq!(trace.records.len(), 12);
+        assert!(trace.final_x.iter().all(|v| v.is_finite()));
+        assert!(trace.total_payload_bits > 0);
+        assert!(trace.records.iter().all(|r| r.participants == m));
+        assert!(trace.records.last().unwrap().dist_to_opt.is_finite());
+        let metrics = driver.last_metrics.as_ref().expect("metrics stashed");
+        assert_eq!(metrics.rounds.len(), 12);
+        assert_eq!(metrics.total_payload_bits, trace.total_payload_bits);
+    }
+
+    #[test]
+    fn inline_driver_is_engine_run() {
+        let mut rng_a = Rng::seed_from(3);
+        let mut rng_b = Rng::seed_from(3);
+        let (shards, _) = {
+            let mut data_rng = Rng::seed_from(1);
+            planted_regression_shards(2, 6, 8, Loss::Square, &mut data_rng, false)
+        };
+        let problem = ShardedProblem::new(shards);
+        let build = || {
+            let mut e = Engine::new(Problem::Sharded(&problem), Schedule::Constant(1e-3), 10)
+                .with_output(OutputMode::PolyakAverage)
+                .with_rng_policy(RngPolicy::ForkPerWorker);
+            for shard in &problem.shards {
+                e = e.with_oracle(ShardOracle::new(shard, None));
+            }
+            e
+        };
+        let a = build().run(&vec![0.0; 8], None, &mut rng_a);
+        let b = InlineDriver.drive(build(), &vec![0.0; 8], None, &mut rng_b);
+        assert_eq!(a.final_x, b.final_x);
+        assert_eq!(a.records.len(), b.records.len());
+    }
+}

@@ -1,0 +1,118 @@
+//! Feedback memory — the per-worker state an algorithm threads between
+//! rounds on the worker side.
+//!
+//! DGD-DEF (Alg. 1) keeps the quantization error `e_i` and uses it three
+//! ways per round: shift the oracle query point (`z = x̂ + α·e_i`, the
+//! App. D invariant that makes `z` track the unquantized trajectory),
+//! pre-correct the gradient before encoding (`u = g − e_i`), and update
+//! from the decoded estimate (`e_i = q − u`). DQ-PSGD needs none of this
+//! — the dither's unbiasedness substitutes for feedback — so its memory
+//! is [`NoFeedback`].
+
+/// Per-worker feedback memory, called by the engine at three points of
+/// each participant's round. A worker that does not participate in a
+/// round (or whose frame is dropped by a lossy uplink) gets **no** calls:
+/// its memory carries over unchanged — the feedback loop pauses, exactly
+/// as the legacy multi-DEF loop behaved under k-of-m participation.
+pub trait FeedbackMemory {
+    /// Compute worker `i`'s oracle query point from the broadcast iterate
+    /// `x` and the round's step `α`, writing into `z`. Return `true` if
+    /// `z` was written (the engine queries the oracle at `z`), `false`
+    /// to query at `x` directly.
+    fn shift_point(&self, i: usize, x: &[f32], step: f32, z: &mut [f32]) -> bool;
+    /// Transform the raw gradient (in `g`) into the vector to encode.
+    fn pre_encode(&mut self, i: usize, g: &mut [f32]);
+    /// Observe the decoded estimate `q` of the encoded vector `u`;
+    /// update the memory. Only called when the frame was delivered.
+    fn post_decode(&mut self, i: usize, q: &[f32], u: &[f32]);
+}
+
+/// No memory: plain (dithered) quantized descent.
+pub struct NoFeedback;
+
+impl FeedbackMemory for NoFeedback {
+    fn shift_point(&self, _i: usize, _x: &[f32], _step: f32, _z: &mut [f32]) -> bool {
+        false
+    }
+
+    fn pre_encode(&mut self, _i: usize, _g: &mut [f32]) {}
+
+    fn post_decode(&mut self, _i: usize, _q: &[f32], _u: &[f32]) {}
+}
+
+/// Democratically-encoded error feedback (Alg. 1; per-worker in the
+/// §4.3 extension): worker `i` owns `e_i`, initialized to zero.
+pub struct DefFeedback {
+    errs: Vec<Vec<f32>>,
+}
+
+impl DefFeedback {
+    /// One zeroed error vector per worker (`e_{−1} = 0`).
+    pub fn new(workers: usize, n: usize) -> Self {
+        DefFeedback { errs: vec![vec![0.0f32; n]; workers] }
+    }
+
+    /// Worker `i`'s current error term (tests / invariant checks).
+    pub fn error(&self, i: usize) -> &[f32] {
+        &self.errs[i]
+    }
+}
+
+impl FeedbackMemory for DefFeedback {
+    fn shift_point(&self, i: usize, x: &[f32], step: f32, z: &mut [f32]) -> bool {
+        // z = x̂ + α·e_i
+        for ((zi, &xi), &ei) in z.iter_mut().zip(x).zip(&self.errs[i]) {
+            *zi = xi + step * ei;
+        }
+        true
+    }
+
+    fn pre_encode(&mut self, i: usize, g: &mut [f32]) {
+        // u = ∇f(z) − e_i
+        for (gi, &ei) in g.iter_mut().zip(&self.errs[i]) {
+            *gi -= ei;
+        }
+    }
+
+    fn post_decode(&mut self, i: usize, q: &[f32], u: &[f32]) {
+        // e_i = q − u
+        for ((ei, &qi), &ui) in self.errs[i].iter_mut().zip(q).zip(u) {
+            *ei = qi - ui;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_feedback_never_shifts() {
+        let f = NoFeedback;
+        let mut z = vec![9.0f32; 3];
+        assert!(!f.shift_point(0, &[1.0, 2.0, 3.0], 0.5, &mut z));
+        assert_eq!(z, vec![9.0; 3], "z must be untouched");
+    }
+
+    #[test]
+    fn def_round_trip_updates_error() {
+        let mut f = DefFeedback::new(2, 3);
+        let x = [1.0f32, 2.0, 3.0];
+        let mut z = vec![0.0f32; 3];
+        // e = 0 ⇒ z == x.
+        assert!(f.shift_point(1, &x, 0.5, &mut z));
+        assert_eq!(z, x.to_vec());
+        // Encode u = g − e = g; decode q; e = q − u.
+        let mut g = vec![2.0f32, -1.0, 0.5];
+        f.pre_encode(1, &mut g);
+        let u = g.clone();
+        let q = vec![1.5f32, -1.0, 1.0];
+        f.post_decode(1, &q, &u);
+        assert_eq!(f.error(1).to_vec(), vec![-0.5, 0.0, 0.5]);
+        // Worker 0's memory is untouched.
+        assert_eq!(f.error(0).to_vec(), vec![0.0, 0.0, 0.0]);
+        // Next shift uses the updated error: z = x + 2·e.
+        f.shift_point(1, &x, 2.0, &mut z);
+        assert_eq!(z, vec![0.0, 2.0, 4.0]);
+    }
+}

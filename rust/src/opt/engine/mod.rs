@@ -1,0 +1,510 @@
+//! The optimizer engine — one round driver behind every algorithm.
+//!
+//! The paper's algorithms share a single round skeleton: *oracle call →
+//! (feedback-corrected) compress → wire → decode → consensus → step*.
+//! The engine implements that skeleton **once**, parameterized by four
+//! pluggable pieces:
+//!
+//! | Trait | What it decides | Implementations |
+//! |---|---|---|
+//! | [`oracle::Oracle`] | worker-side gradient access | [`oracle::ExactGrad`], [`oracle::ShardOracle`], [`oracle::OwnNoise`] |
+//! | [`schedule::StepSchedule`] | the step size `α_t` | [`schedule::Schedule`] (constant / `1/√t` / harmonic) |
+//! | [`feedback::FeedbackMemory`] | per-worker round-to-round state | [`feedback::NoFeedback`], [`feedback::DefFeedback`] |
+//! | [`driver::Driver`] | where rounds execute | [`driver::InlineDriver`], [`driver::CoordinatorDriver`] |
+//!
+//! The six legacy entry points are spec-builders over the engine — each
+//! is one composition (`rust/tests/test_engine.rs` proves every one
+//! bit-identical to its pre-engine loop):
+//!
+//! | Legacy `run()` | Composition |
+//! |---|---|
+//! | [`crate::opt::gd`] | `ExactGrad + Constant + NoFeedback`, no codec, last-iterate |
+//! | [`crate::opt::psgd`] | `OwnNoise + Constant + NoFeedback`, no codec, Polyak average |
+//! | [`crate::opt::dgd_def`] | `ExactGrad + Constant + DefFeedback`, shared codec, last-iterate |
+//! | [`crate::opt::dq_psgd`] | `OwnNoise + Constant + NoFeedback`, shared dithered codec, drop-prob uplink, Polyak average |
+//! | [`crate::opt::multi`] | `ShardOracle × m + Constant + NoFeedback`, per-worker codecs, forked RNGs, participation, Polyak average |
+//! | [`crate::opt::multi_def`] | `ExactGrad × m + Constant + DefFeedback`, per-worker codecs, participation, last-iterate |
+//!
+//! A new algorithm is a new combination, not a new file: e.g. adaptive
+//! precision is `with_schedule(Schedule::InvSqrt { .. })` on any spec,
+//! and a lossy multi-worker uplink is `with_drop_prob(p)` on the `multi`
+//! spec. This is the codebase's standing invariant.
+//!
+//! Determinism contract: the engine consumes randomness in a fixed order
+//! — participation draw (shared RNG), then per participant in worker-id
+//! order: batch draw, codec dither, drop verdict (worker RNG per
+//! [`RngPolicy`]) — so traces are seed-deterministic and bit-stable
+//! across refactors. Steady-state rounds are allocation-free
+//! (`rust/tests/test_engine.rs` proves it with a counting allocator).
+
+pub mod driver;
+pub mod feedback;
+pub mod oracle;
+pub mod schedule;
+
+use crate::coordinator::transport::Participation;
+use crate::linalg::rng::Rng;
+use crate::linalg::vecops::dist2;
+use crate::opt::multi::ShardedProblem;
+use crate::opt::objectives::DatasetObjective;
+use crate::opt::projection::Domain;
+use crate::opt::{IterRecord, Trace};
+use crate::quant::{Compressed, Compressor, Workspace};
+
+use self::feedback::{FeedbackMemory, NoFeedback};
+use self::oracle::Oracle;
+use self::schedule::StepSchedule;
+
+/// What the engine optimizes: one objective, or one private shard per
+/// worker with the global objective their average.
+#[derive(Clone, Copy)]
+pub enum Problem<'a> {
+    Single(&'a DatasetObjective),
+    Sharded(&'a ShardedProblem),
+}
+
+impl<'a> Problem<'a> {
+    pub fn dim(&self) -> usize {
+        match *self {
+            Problem::Single(obj) => obj.dim(),
+            Problem::Sharded(p) => p.n,
+        }
+    }
+
+    /// Global objective value (the quantity every record reports).
+    pub fn value(&self, x: &[f32]) -> f32 {
+        match *self {
+            Problem::Single(obj) => obj.value(x),
+            Problem::Sharded(p) => p.value(x),
+        }
+    }
+}
+
+/// The uplink codec layout.
+#[derive(Clone, Copy)]
+pub enum Codecs<'a> {
+    /// Unquantized: the decoded estimate is the gradient itself and the
+    /// payload is zero (the GD / PSGD references).
+    None,
+    /// Every worker encodes through one codec instance (single-worker
+    /// algorithms).
+    Shared(&'a dyn Compressor),
+    /// Worker `i` owns `codecs[i]` — each with its own frame randomness
+    /// and budget `R_i`.
+    PerWorker(&'a [Box<dyn Compressor>]),
+}
+
+impl<'a> Codecs<'a> {
+    fn get(&self, i: usize) -> Option<&'a dyn Compressor> {
+        match *self {
+            Codecs::None => None,
+            Codecs::Shared(c) => Some(c),
+            Codecs::PerWorker(v) => Some(v[i].as_ref()),
+        }
+    }
+}
+
+/// Which RNG stream a worker's batch draw / codec dither / drop verdict
+/// come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RngPolicy {
+    /// The run's shared RNG, consumed in participant order — the
+    /// single-worker loops' (and multi-DEF's) convention.
+    Shared,
+    /// Worker `i` draws from `rng.fork(i)`, forked once at startup — the
+    /// multi-worker convention matching the threaded coordinator, where
+    /// scheduling must not reorder draws.
+    ForkPerWorker,
+}
+
+/// Trace shape: what each record reports and what `final_x` is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputMode {
+    /// Record `f(x_t)` **before** each step; optionally append a trailing
+    /// record after the final step. `final_x = x_T`. (GD, DGD-DEF,
+    /// multi-DEF — the smooth strongly-convex algorithms.)
+    LastIterate { trailing: bool },
+    /// Polyak–Ruppert: maintain the running average of the projected
+    /// iterates and record `f(x̄_t)` **after** each step;
+    /// `final_x = x̄_T`. (PSGD, DQ-PSGD, multi — the averaged outputs.)
+    PolyakAverage,
+}
+
+/// An engine spec: problem + the four pluggable components + round knobs.
+/// Build with [`Engine::new`] and the `with_*` methods, then [`Engine::run`]
+/// (the inline driver) or hand it to a [`driver::Driver`].
+pub struct Engine<'a> {
+    problem: Problem<'a>,
+    oracles: Vec<Box<dyn Oracle + 'a>>,
+    codecs: Codecs<'a>,
+    schedule: Box<dyn StepSchedule + 'a>,
+    feedback: Box<dyn FeedbackMemory + 'a>,
+    domain: Domain,
+    participation: Participation,
+    drop_prob: f32,
+    rng_policy: RngPolicy,
+    output: OutputMode,
+    rounds: usize,
+    probe: Option<Box<dyn FnMut(usize) + 'a>>,
+}
+
+impl<'a> Engine<'a> {
+    /// A spec with defaults: no oracles yet, no codec, no feedback,
+    /// unconstrained domain, full participation, reliable uplink, shared
+    /// RNG, last-iterate output with trailing record.
+    pub fn new(problem: Problem<'a>, schedule: impl StepSchedule + 'a, rounds: usize) -> Self {
+        Engine {
+            problem,
+            oracles: Vec::new(),
+            codecs: Codecs::None,
+            schedule: Box::new(schedule),
+            feedback: Box::new(NoFeedback),
+            domain: Domain::Unconstrained,
+            participation: Participation::Full,
+            drop_prob: 0.0,
+            rng_policy: RngPolicy::Shared,
+            output: OutputMode::LastIterate { trailing: true },
+            rounds,
+            probe: None,
+        }
+    }
+
+    /// Append one worker's oracle (worker ids follow insertion order).
+    pub fn with_oracle(mut self, o: impl Oracle + 'a) -> Self {
+        self.oracles.push(Box::new(o));
+        self
+    }
+
+    pub fn with_codecs(mut self, c: Codecs<'a>) -> Self {
+        self.codecs = c;
+        self
+    }
+
+    pub fn with_feedback(mut self, f: impl FeedbackMemory + 'a) -> Self {
+        self.feedback = Box::new(f);
+        self
+    }
+
+    pub fn with_domain(mut self, d: Domain) -> Self {
+        self.domain = d;
+        self
+    }
+
+    pub fn with_participation(mut self, p: Participation) -> Self {
+        self.participation = p;
+        self
+    }
+
+    /// Lossy uplink: each participant's frame is lost independently with
+    /// this probability (bits still charged; the feedback memory of a
+    /// lost frame pauses). Legacy open-range semantics: `p ≤ 0` is a
+    /// reliable link and draws no randomness, `p ≥ 1` loses every frame
+    /// (the all-drops degenerate case is a valid experiment).
+    pub fn with_drop_prob(mut self, p: f32) -> Self {
+        self.drop_prob = p;
+        self
+    }
+
+    pub fn with_rng_policy(mut self, p: RngPolicy) -> Self {
+        self.rng_policy = p;
+        self
+    }
+
+    pub fn with_output(mut self, o: OutputMode) -> Self {
+        self.output = o;
+        self
+    }
+
+    /// Called after every completed round with the round index —
+    /// progress reporting, allocation probes. Must not itself allocate if
+    /// the run is measured for allocation-freedom.
+    pub fn with_probe(mut self, p: impl FnMut(usize) + 'a) -> Self {
+        self.probe = Some(Box::new(p));
+        self
+    }
+
+    /// The spec's problem (drivers that re-host the run need it).
+    pub fn problem(&self) -> Problem<'a> {
+        self.problem
+    }
+
+    /// Configured round count.
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Worker count (= registered oracles).
+    pub fn workers(&self) -> usize {
+        self.oracles.len()
+    }
+
+    /// Run the spec on the inline driver: every round executes in the
+    /// calling thread, deterministically. See the module docs for the
+    /// RNG-consumption contract; after warm-up, rounds are
+    /// allocation-free.
+    pub fn run(mut self, x0: &[f32], x_star: Option<&[f32]>, rng: &mut Rng) -> Trace {
+        let n = self.problem.dim();
+        let m = self.oracles.len();
+        assert!(m >= 1, "engine spec has no worker oracle");
+        assert_eq!(x0.len(), n, "x0 dimension mismatch");
+        if let Codecs::PerWorker(v) = self.codecs {
+            assert_eq!(v.len(), m, "one codec per worker");
+        }
+        for i in 0..m {
+            assert_eq!(self.oracles[i].dim(), n, "oracle {i} dimension mismatch");
+            if let Some(c) = self.codecs.get(i) {
+                assert_eq!(c.n(), n, "codec {i} dimension mismatch");
+            }
+        }
+        let averaging = self.output == OutputMode::PolyakAverage;
+
+        let mut x = x0.to_vec();
+        self.domain.project(&mut x);
+        let mut avg = vec![0.0f32; if averaging { n } else { 0 }];
+        let mut consensus = vec![0.0f32; n];
+        let mut g = vec![0.0f32; n];
+        let mut z = vec![0.0f32; n];
+        let mut q = vec![0.0f32; n];
+        let mut participants: Vec<usize> = Vec::with_capacity(m);
+        // Forked per-worker streams are derived once, up front, in worker
+        // id order (the coordinator's convention).
+        let mut worker_rngs: Vec<Rng> = match self.rng_policy {
+            RngPolicy::ForkPerWorker => (0..m).map(|i| rng.fork(i as u64)).collect(),
+            RngPolicy::Shared => Vec::new(),
+        };
+        // One workspace + message shell + decode buffer serve all m
+        // workers (every codec of a round has the same dimension), so
+        // steady-state rounds allocate nothing.
+        let mut ws = match self.codecs.get(0) {
+            Some(c) => Workspace::for_compressor(c),
+            None => Workspace::new(),
+        };
+        let mut msg = Compressed::empty(n);
+
+        let mut trace = Trace::default();
+        trace.records.reserve(self.rounds + 1);
+        for t in 0..self.rounds {
+            let step = self.schedule.step(t);
+            if !averaging {
+                trace.records.push(IterRecord {
+                    value: self.problem.value(&x),
+                    dist_to_opt: x_star.map(|xs| dist2(&x, xs)).unwrap_or(f32::NAN),
+                    payload_bits: 0,
+                    participants: 0,
+                });
+            }
+            // Participant set. Full participation draws no randomness;
+            // KofM samples a uniform k-subset from the shared RNG and
+            // processes it in worker-id order. Deadline degrades to Full
+            // inline — there is no network here; the coordinator driver
+            // is where deadlines bite.
+            match self.participation {
+                Participation::KofM { k } => {
+                    rng.sample_indices_into(m, k.min(m), &mut participants);
+                    participants.sort_unstable();
+                }
+                Participation::Full | Participation::Deadline { .. } => {
+                    participants.clear();
+                    participants.extend(0..m);
+                }
+            }
+            let p = participants.len().max(1);
+            consensus.fill(0.0);
+            let mut round_bits = 0usize;
+            let mut delivered = 0usize;
+            for &i in &participants {
+                let shifted = self.feedback.shift_point(i, &x, step, &mut z);
+                let wrng: &mut Rng = match self.rng_policy {
+                    RngPolicy::Shared => &mut *rng,
+                    RngPolicy::ForkPerWorker => &mut worker_rngs[i],
+                };
+                let point: &[f32] = if shifted { &z } else { &x };
+                self.oracles[i].query(point, wrng, &mut g);
+                self.feedback.pre_encode(i, &mut g);
+                let codec = self.codecs.get(i);
+                if let Some(c) = codec {
+                    c.compress_into(&g, wrng, &mut ws, &mut msg);
+                    round_bits += msg.payload_bits;
+                    trace.total_payload_bits += msg.payload_bits;
+                    trace.total_side_bits += msg.side_bits;
+                }
+                // The frame may never reach the server — bits are charged
+                // on send, not delivery. One verdict for both the
+                // quantized and the unquantized (lossless-codec) path.
+                let arrived = self.drop_prob <= 0.0 || wrng.uniform_f32() >= self.drop_prob;
+                if arrived {
+                    let estimate: &[f32] = match codec {
+                        Some(c) => {
+                            c.decompress_into(&msg, &mut ws, &mut q);
+                            &q
+                        }
+                        None => &g, // lossless: q ≡ u, zero payload
+                    };
+                    self.feedback.post_decode(i, estimate, &g);
+                    delivered += 1;
+                    for (ci, &ei) in consensus.iter_mut().zip(estimate) {
+                        *ci += ei / p as f32;
+                    }
+                }
+            }
+            // Server: step on the consensus mean, then project. A round
+            // with nothing delivered takes no step (and no projection —
+            // re-projecting can perturb a boundary iterate by an ulp).
+            if delivered > 0 {
+                for (xi, &ci) in x.iter_mut().zip(&consensus) {
+                    *xi -= step * ci;
+                }
+                self.domain.project(&mut x);
+            }
+            if averaging {
+                let w = 1.0 / (t + 1) as f32;
+                for (ai, &xi) in avg.iter_mut().zip(&x) {
+                    *ai += w * (xi - *ai);
+                }
+                trace.records.push(IterRecord {
+                    value: self.problem.value(&avg),
+                    dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
+                    payload_bits: round_bits,
+                    participants: delivered,
+                });
+            } else if let Some(r) = trace.records.last_mut() {
+                r.payload_bits = round_bits;
+                r.participants = delivered;
+            }
+            if let Some(probe) = self.probe.as_mut() {
+                probe(t);
+            }
+        }
+        if let OutputMode::LastIterate { trailing: true } = self.output {
+            trace.records.push(IterRecord {
+                value: self.problem.value(&x),
+                dist_to_opt: x_star.map(|xs| dist2(&x, xs)).unwrap_or(f32::NAN),
+                payload_bits: 0,
+                participants: 0,
+            });
+        }
+        trace.final_x = if averaging { avg } else { x };
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::oracle::ExactGrad;
+    use super::schedule::Schedule;
+    use super::*;
+    use crate::linalg::vecops::matvec;
+    use crate::opt::objectives::Loss;
+    use crate::quant::ndsc::Ndsc;
+
+    fn planted_lsq(m: usize, n: usize, seed: u64) -> (DatasetObjective, Vec<f32>) {
+        let mut rng = Rng::seed_from(seed);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.gaussian_f32()).collect();
+        let xs: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut b = vec![0.0f32; m];
+        matvec(&a, m, n, &xs, &mut b);
+        (DatasetObjective::new(a, b, m, n, Loss::Square, 0.0), xs)
+    }
+
+    #[test]
+    fn unquantized_spec_converges_like_gd() {
+        let (obj, xs) = planted_lsq(60, 10, 1);
+        let (l, mu) = obj.smoothness_strong_convexity();
+        let mut rng = Rng::seed_from(2);
+        let tr = Engine::new(
+            Problem::Single(&obj),
+            Schedule::Constant(schedule::optimal_sc_step(l, mu)),
+            121,
+        )
+        .with_oracle(ExactGrad { obj: &obj })
+        .with_output(OutputMode::LastIterate { trailing: false })
+        .run(&vec![0.0; 10], Some(&xs), &mut rng);
+        assert_eq!(tr.records.len(), 121);
+        assert!(tr.records.last().unwrap().dist_to_opt < 1e-2);
+        assert_eq!(tr.total_payload_bits, 0);
+        assert!(tr.records.iter().all(|r| r.participants <= 1));
+    }
+
+    #[test]
+    fn quantized_feedback_spec_converges() {
+        // The DGD-DEF composition, built directly on the engine API.
+        let (obj, _) = planted_lsq(80, 16, 3);
+        let xs = obj.quadratic_minimizer();
+        let (l, mu) = obj.smoothness_strong_convexity();
+        let mut rng = Rng::seed_from(4);
+        let c = Ndsc::hadamard(16, 6.0, &mut rng);
+        let tr = Engine::new(
+            Problem::Single(&obj),
+            Schedule::Constant(schedule::optimal_sc_step(l, mu)),
+            150,
+        )
+        .with_oracle(ExactGrad { obj: &obj })
+        .with_codecs(Codecs::Shared(&c))
+        .with_feedback(feedback::DefFeedback::new(1, 16))
+        .run(&vec![0.0; 16], Some(&xs), &mut rng);
+        let d0 = tr.records[0].dist_to_opt;
+        let dt = tr.records.last().unwrap().dist_to_opt;
+        assert!(dt < 1e-2 * d0, "no convergence: {d0} -> {dt}");
+        assert_eq!(tr.records.len(), 151, "150 pre-step records + trailing");
+        assert!(tr.total_payload_bits > 0);
+    }
+
+    #[test]
+    fn decaying_schedule_is_a_one_line_change() {
+        // The composition the engine unlocks: DGD-DEF machinery with an
+        // O(1/√t) schedule — no new loop file required.
+        let (obj, xs) = planted_lsq(60, 8, 5);
+        let (l, _) = obj.smoothness_strong_convexity();
+        let mut rng = Rng::seed_from(6);
+        let tr = Engine::new(
+            Problem::Single(&obj),
+            Schedule::InvSqrt { c: 1.0 / l },
+            200,
+        )
+        .with_oracle(ExactGrad { obj: &obj })
+        .with_output(OutputMode::LastIterate { trailing: false })
+        .run(&vec![0.0; 8], Some(&xs), &mut rng);
+        let d0 = tr.records[0].dist_to_opt;
+        let dt = tr.records.last().unwrap().dist_to_opt;
+        assert!(dt < 0.5 * d0, "decaying-step run made no progress: {d0} -> {dt}");
+    }
+
+    #[test]
+    fn lossy_uplink_applies_to_unquantized_specs_too() {
+        // drop ≥ 1 is the all-drops degenerate case (legacy open-range
+        // semantics): no upload ever lands, so no step is ever taken —
+        // on the unquantized path as much as on the quantized one.
+        let (obj, _) = planted_lsq(20, 6, 9);
+        let mut rng = Rng::seed_from(10);
+        let tr = Engine::new(Problem::Single(&obj), Schedule::Constant(0.1), 8)
+            .with_oracle(ExactGrad { obj: &obj })
+            .with_drop_prob(1.0)
+            .with_output(OutputMode::LastIterate { trailing: false })
+            .run(&vec![0.5; 6], None, &mut rng);
+        assert!(tr.records.iter().all(|r| r.participants == 0));
+        assert_eq!(tr.final_x, vec![0.5; 6]);
+        // A partially lossy unquantized link: some rounds must drop.
+        let mut rng = Rng::seed_from(11);
+        let tr = Engine::new(Problem::Single(&obj), Schedule::Constant(1e-3), 40)
+            .with_oracle(ExactGrad { obj: &obj })
+            .with_drop_prob(0.5)
+            .with_output(OutputMode::LastIterate { trailing: false })
+            .run(&vec![0.5; 6], None, &mut rng);
+        assert!(tr.records.iter().any(|r| r.participants == 0));
+        assert!(tr.records.iter().any(|r| r.participants == 1));
+    }
+
+    #[test]
+    fn probe_sees_every_round() {
+        let (obj, _) = planted_lsq(20, 4, 7);
+        let mut rng = Rng::seed_from(8);
+        let mut seen = Vec::new();
+        let tr = Engine::new(Problem::Single(&obj), Schedule::Constant(1e-3), 5)
+            .with_oracle(ExactGrad { obj: &obj })
+            .with_output(OutputMode::LastIterate { trailing: false })
+            .with_probe(|t| seen.push(t))
+            .run(&vec![0.0; 4], None, &mut rng);
+        drop(tr);
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+}

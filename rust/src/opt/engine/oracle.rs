@@ -1,0 +1,149 @@
+//! Oracle adapters — the worker-side gradient access of an engine round.
+//!
+//! The engine passes every oracle query the worker's *round randomness*
+//! (the shared run RNG or the worker's forked stream, per
+//! [`crate::opt::engine::RngPolicy`]); adapters either draw their batch
+//! from it (the multi-worker convention, where batch draw and codec
+//! dither come from one per-worker stream) or ignore it because they own
+//! their noise source (the legacy [`crate::opt::oracle`] types).
+
+use crate::linalg::rng::Rng;
+use crate::opt::objectives::DatasetObjective;
+
+/// Worker-side gradient access for one engine round.
+pub trait Oracle {
+    /// Problem dimension `n`.
+    fn dim(&self) -> usize;
+    /// Write a (sub)gradient estimate at `x` into `out`. `rng` is the
+    /// worker's round randomness; oracles with their own noise source
+    /// ignore it.
+    fn query(&mut self, x: &[f32], rng: &mut Rng, out: &mut [f32]);
+}
+
+/// Exact full-gradient oracle over a (shard) objective — setting (i),
+/// §4.1. Draws no randomness.
+pub struct ExactGrad<'a> {
+    pub obj: &'a DatasetObjective,
+}
+
+impl Oracle for ExactGrad<'_> {
+    fn dim(&self) -> usize {
+        self.obj.dim()
+    }
+
+    fn query(&mut self, x: &[f32], _rng: &mut Rng, out: &mut [f32]) {
+        self.obj.gradient(x, out);
+    }
+}
+
+/// Sharded-minibatch oracle: worker `i`'s view of its private shard.
+/// `batch = None` is the full local gradient; `Some(b)` samples `b` rows
+/// from the worker's round RNG (so traces are independent of worker
+/// scheduling, exactly as the legacy multi-worker loop drew them).
+/// Queries are allocation-free: the index buffer is owned and reused.
+pub struct ShardOracle<'a> {
+    obj: &'a DatasetObjective,
+    batch: Option<usize>,
+    idx: Vec<usize>,
+}
+
+impl<'a> ShardOracle<'a> {
+    pub fn new(obj: &'a DatasetObjective, batch: Option<usize>) -> Self {
+        ShardOracle { obj, batch, idx: Vec::new() }
+    }
+}
+
+impl Oracle for ShardOracle<'_> {
+    fn dim(&self) -> usize {
+        self.obj.dim()
+    }
+
+    fn query(&mut self, x: &[f32], rng: &mut Rng, out: &mut [f32]) {
+        match self.batch {
+            Some(bsz) => {
+                rng.sample_indices_into(self.obj.m, bsz.min(self.obj.m), &mut self.idx);
+                self.obj.minibatch_gradient(x, Some(&self.idx), out);
+            }
+            None => self.obj.gradient(x, out),
+        }
+    }
+}
+
+/// Adapter over the legacy [`crate::opt::oracle::Oracle`] trait (which
+/// owns its noise source, e.g. [`crate::opt::oracle::MinibatchOracle`]):
+/// the engine's round RNG is ignored, so a run driven through this
+/// adapter consumes exactly the RNG streams the legacy loops did.
+pub struct OwnNoise<'a>(pub &'a mut dyn crate::opt::oracle::Oracle);
+
+impl Oracle for OwnNoise<'_> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+
+    fn query(&mut self, x: &[f32], _rng: &mut Rng, out: &mut [f32]) {
+        self.0.query(x, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::objectives::Loss;
+
+    fn lsq(m: usize, n: usize, seed: u64) -> DatasetObjective {
+        let mut rng = Rng::seed_from(seed);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.gaussian_f32()).collect();
+        let b: Vec<f32> = (0..m).map(|_| rng.gaussian_f32()).collect();
+        DatasetObjective::new(a, b, m, n, Loss::Square, 0.0)
+    }
+
+    #[test]
+    fn exact_grad_matches_objective() {
+        let obj = lsq(20, 6, 1);
+        let mut o = ExactGrad { obj: &obj };
+        let x = vec![0.2f32; 6];
+        let mut g1 = vec![0.0f32; 6];
+        let mut g2 = vec![0.0f32; 6];
+        let mut rng = Rng::seed_from(2);
+        o.query(&x, &mut rng, &mut g1);
+        obj.gradient(&x, &mut g2);
+        assert_eq!(g1, g2);
+        assert_eq!(o.dim(), 6);
+    }
+
+    #[test]
+    fn shard_oracle_full_and_batched() {
+        let obj = lsq(20, 6, 3);
+        let x = vec![0.1f32; 6];
+        // Full gradient: identical to the objective, no rng consumed.
+        let mut full = ShardOracle::new(&obj, None);
+        let mut rng = Rng::seed_from(4);
+        let before = rng.next_u64();
+        let mut rng = Rng::seed_from(4);
+        let mut g = vec![0.0f32; 6];
+        full.query(&x, &mut rng, &mut g);
+        assert_eq!(rng.next_u64(), before, "full gradient must not draw");
+        // Batched: draws the same indices as a bare sample_indices_into.
+        let mut batched = ShardOracle::new(&obj, Some(5));
+        let mut rng_a = Rng::seed_from(5);
+        let mut gb = vec![0.0f32; 6];
+        batched.query(&x, &mut rng_a, &mut gb);
+        let mut rng_b = Rng::seed_from(5);
+        let mut idx = Vec::new();
+        rng_b.sample_indices_into(20, 5, &mut idx);
+        let mut want = vec![0.0f32; 6];
+        obj.minibatch_gradient(&x, Some(&idx), &mut want);
+        assert_eq!(gb, want);
+    }
+
+    #[test]
+    fn own_noise_wraps_legacy_oracle() {
+        let obj = lsq(20, 6, 6);
+        let mut inner = crate::opt::oracle::MinibatchOracle::new(&obj, 4, Rng::seed_from(7));
+        let mut o = OwnNoise(&mut inner);
+        let mut rng = Rng::seed_from(8);
+        let mut g = vec![0.0f32; 6];
+        o.query(&vec![0.0; 6], &mut rng, &mut g);
+        assert!(g.iter().all(|v| v.is_finite()));
+    }
+}

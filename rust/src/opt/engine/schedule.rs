@@ -1,0 +1,101 @@
+//! Step-size schedules — the paper's step rules, single-sourced.
+//!
+//! Before the engine, the `optimal(l, mu, iters)` / `theory(...)`
+//! constructions lived as near-copies inside the per-loop option structs
+//! (`GdOptions`, `DgdDefOptions`, `PsgdOptions`, `DqPsgdOptions`). They
+//! now live here; the legacy option structs delegate to these functions,
+//! so the constants of Thm. 2 / Thm. 3 have exactly one definition.
+
+/// The optimal smooth/strongly-convex step `α* = 2/(L+μ)` (Thm. 2) —
+/// the step at which unquantized GD contracts at `σ = (L−μ)/(L+μ)`.
+pub fn optimal_sc_step(l: f32, mu: f32) -> f32 {
+    2.0 / (l + mu)
+}
+
+/// The unquantized PSGD theory step `α = D/(B·√T)` for the `D·B/√T`
+/// suboptimality guarantee (general convex, non-smooth).
+pub fn psgd_theory_step(d: f32, b: f32, iters: usize) -> f32 {
+    d / (b * (iters as f32).sqrt())
+}
+
+/// Theorem 3's DQ-PSGD step `α = D/(B·K_u)·√(min{R,1}/T)` — optimal for
+/// every bit budget `R ∈ (0, ∞)`, sub-linear budgets included.
+pub fn dq_psgd_theory_step(d: f32, b: f32, r: f32, ku: f32, iters: usize) -> f32 {
+    d / (b * ku) * (r.min(1.0) / iters as f32).sqrt()
+}
+
+/// A per-round step-size rule `t ↦ α_t`.
+///
+/// The engine queries the schedule once per round, so adaptive-precision
+/// and decaying-step runs are one-line compositions instead of new loop
+/// files. All six legacy algorithms use [`Schedule::Constant`] (their
+/// theory steps are horizon-dependent constants, computed by the
+/// functions above).
+pub trait StepSchedule {
+    /// Step size for round `t` (0-based).
+    fn step(&self, t: usize) -> f32;
+}
+
+/// The built-in schedule zoo.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    /// Fixed `α` for the whole run.
+    Constant(f32),
+    /// Anytime `O(1/√T)` decay: `α_t = c/√(t+1)` (the horizon-free
+    /// variant of Thm. 3's step).
+    InvSqrt { c: f32 },
+    /// Strongly-convex decay `α_t = c/(t₀ + t)`.
+    Harmonic { c: f32, t0: f32 },
+}
+
+impl StepSchedule for Schedule {
+    fn step(&self, t: usize) -> f32 {
+        match *self {
+            Schedule::Constant(s) => s,
+            Schedule::InvSqrt { c } => c / ((t + 1) as f32).sqrt(),
+            Schedule::Harmonic { c, t0 } => c / (t0 + t as f32),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant(0.25);
+        assert_eq!(s.step(0), 0.25);
+        assert_eq!(s.step(1000), 0.25);
+    }
+
+    #[test]
+    fn inv_sqrt_decays() {
+        let s = Schedule::InvSqrt { c: 1.0 };
+        assert_eq!(s.step(0), 1.0);
+        assert!((s.step(3) - 0.5).abs() < 1e-6);
+        assert!(s.step(100) < s.step(10));
+    }
+
+    #[test]
+    fn harmonic_decays() {
+        let s = Schedule::Harmonic { c: 2.0, t0: 1.0 };
+        assert_eq!(s.step(0), 2.0);
+        assert_eq!(s.step(1), 1.0);
+    }
+
+    #[test]
+    fn theory_steps_match_legacy_formulas() {
+        // The exact expressions the option structs used before the
+        // dedup — changing these changes every experiment.
+        let (l, mu) = (10.0f32, 2.0f32);
+        assert_eq!(optimal_sc_step(l, mu), 2.0 / (l + mu));
+        let (d, b, iters) = (4.0f32, 3.0f32, 400usize);
+        assert_eq!(psgd_theory_step(d, b, iters), d / (b * (iters as f32).sqrt()));
+        let (r, ku) = (0.5f32, 1.0f32);
+        assert_eq!(
+            dq_psgd_theory_step(d, b, r, ku, iters),
+            d / (b * ku) * (r.min(1.0) / iters as f32).sqrt()
+        );
+    }
+}

@@ -1,9 +1,17 @@
 //! Unquantized gradient descent — the `σ = (L−μ)/(L+μ)` reference of
 //! Fig. 1b and the inner trajectory DGD-DEF tracks.
+//!
+//! Engine spec: `ExactGrad` oracle, constant step, no codec, no
+//! feedback, last-iterate output. (The historical loop recorded **and**
+//! stepped `iters + 1` times, so the spec runs `iters + 1` rounds with
+//! no trailing record — bit-identical, see `rust/tests/test_engine.rs`.)
 
-use crate::linalg::vecops::dist2;
+use crate::linalg::rng::Rng;
+use crate::opt::engine::oracle::ExactGrad;
+use crate::opt::engine::schedule::{optimal_sc_step, Schedule};
+use crate::opt::engine::{Engine, OutputMode, Problem};
 use crate::opt::objectives::DatasetObjective;
-use crate::opt::{IterRecord, Trace};
+use crate::opt::Trace;
 
 /// Options for plain GD.
 #[derive(Clone, Copy, Debug)]
@@ -13,9 +21,10 @@ pub struct GdOptions {
 }
 
 impl GdOptions {
-    /// The paper's optimal step `α* = 2/(L+μ)` (Thm. 2).
+    /// The paper's optimal step `α* = 2/(L+μ)` (Thm. 2) — single-sourced
+    /// in [`crate::opt::engine::schedule`].
     pub fn optimal(l: f32, mu: f32, iters: usize) -> Self {
-        GdOptions { step: 2.0 / (l + mu), iters }
+        GdOptions { step: optimal_sc_step(l, mu), iters }
     }
 }
 
@@ -26,23 +35,12 @@ pub fn run(
     x_star: Option<&[f32]>,
     opts: GdOptions,
 ) -> Trace {
-    let n = obj.dim();
-    let mut x = x0.to_vec();
-    let mut g = vec![0.0f32; n];
-    let mut trace = Trace::default();
-    for _ in 0..=opts.iters {
-        trace.records.push(IterRecord {
-            value: obj.value(&x),
-            dist_to_opt: x_star.map(|xs| dist2(&x, xs)).unwrap_or(f32::NAN),
-            payload_bits: 0,
-        });
-        obj.gradient(&x, &mut g);
-        for (xi, &gi) in x.iter_mut().zip(&g) {
-            *xi -= opts.step * gi;
-        }
-    }
-    trace.final_x = x;
-    trace
+    // GD is deterministic: the spec draws nothing from this throwaway rng.
+    let mut rng = Rng::seed_from(0);
+    Engine::new(Problem::Single(obj), Schedule::Constant(opts.step), opts.iters + 1)
+        .with_oracle(ExactGrad { obj })
+        .with_output(OutputMode::LastIterate { trailing: false })
+        .run(x0, x_star, &mut rng)
 }
 
 /// Worst-case linear rate of unquantized GD over `F_{μ,L}` with the
@@ -54,7 +52,6 @@ pub fn sigma(l: f32, mu: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::rng::Rng;
     use crate::linalg::vecops::matvec;
     use crate::opt::objectives::Loss;
 
@@ -87,5 +84,14 @@ mod tests {
         for w in trace.records.windows(2) {
             assert!(w[1].value <= w[0].value + 1e-5);
         }
+    }
+
+    #[test]
+    fn record_and_step_count_match_the_legacy_loop() {
+        // The legacy loop ran `0..=iters`: iters+1 records, iters+1 steps.
+        let (obj, _) = planted_lsq(20, 5, 3);
+        let trace = run(&obj, &vec![0.1; 5], None, GdOptions { step: 1e-3, iters: 10 });
+        assert_eq!(trace.records.len(), 11);
+        assert!(trace.records.iter().all(|r| r.payload_bits == 0));
     }
 }

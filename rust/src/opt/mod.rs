@@ -1,21 +1,34 @@
 //! First-order optimization under a bit budget — §4 of the paper.
 //!
+//! All algorithms execute on **one round driver**, [`engine`]: oracle
+//! call → (feedback-corrected) compress → wire → decode → consensus →
+//! step, parameterized by pluggable oracles, step schedules, feedback
+//! memories and drivers. The historical per-algorithm modules remain as
+//! the stable entry points, each a thin spec-builder over the engine:
+//!
 //! * [`objectives`] — the objective zoo of the evaluation: least squares,
 //!   ridge, hinge-loss SVM, logistic regression, with smoothness/strong
 //!   convexity constants and closed-form minimizers where they exist.
-//! * [`oracle`] — exact-gradient and stochastic-subgradient oracles.
-//! * [`gd`] — unquantized gradient descent (the `σ = (L−μ)/(L+μ)` baseline).
-//! * [`dgd_def`] — **DGD-DEF** (Alg. 1): quantized GD with democratically
-//!   encoded error feedback; linear convergence at rate `max{ν, β}`.
-//! * [`psgd`] / [`dq_psgd`] — projected stochastic subgradient descent and
-//!   its democratically-quantized version **DQ-PSGD** (Alg. 2).
-//! * [`multi`] — the multi-worker consensus loop (Alg. 3) in its
-//!   single-process algorithmic form (the threaded runtime lives in
-//!   [`crate::coordinator`]).
+//! * [`oracle`] — exact-gradient and stochastic-subgradient oracles
+//!   (adapted into engine oracles by [`engine::oracle`]).
+//! * [`gd`] — unquantized gradient descent (the `σ = (L−μ)/(L+μ)`
+//!   baseline): `ExactGrad`, no codec, last-iterate output.
+//! * [`dgd_def`] — **DGD-DEF** (Alg. 1): the `ExactGrad + DefFeedback`
+//!   composition over a shared codec; linear convergence at `max{ν, β}`.
+//! * [`psgd`] / [`dq_psgd`] — projected stochastic subgradient descent
+//!   and its democratically-quantized version **DQ-PSGD** (Alg. 2):
+//!   `OwnNoise + NoFeedback` with Polyak averaging, the latter over a
+//!   dithered codec with an optional lossy uplink.
+//! * [`multi`] / [`multi_def`] — the multi-worker consensus loops
+//!   (Alg. 3 / §4.3): per-worker `ShardOracle`s or `ExactGrad`s, one
+//!   codec per worker, k-of-m participation. The threaded runtime for
+//!   the same specs is [`engine::driver::CoordinatorDriver`] /
+//!   [`crate::coordinator`].
 //! * [`projection`] — Euclidean-ball projection `Γ_X`.
 
 pub mod dgd_def;
 pub mod dq_psgd;
+pub mod engine;
 pub mod gd;
 pub mod multi;
 pub mod multi_def;
@@ -33,6 +46,9 @@ pub struct IterRecord {
     pub dist_to_opt: f32,
     /// Quantized payload bits sent this iteration (0 for unquantized).
     pub payload_bits: usize,
+    /// Workers whose uploads reached the consensus this round (0 on
+    /// records that precede any step, e.g. trailing records).
+    pub participants: usize,
 }
 
 /// Result of an optimizer run.
@@ -64,5 +80,81 @@ impl Trace {
 
     pub fn final_value(&self) -> f32 {
         self.records.last().map(|r| r.value).unwrap_or(f32::NAN)
+    }
+
+    /// Per-round CSV in the shared schema of
+    /// [`crate::coordinator::metrics`] (one writer for both runtimes).
+    /// Inline runs have no worker-local losses or wall clock: those
+    /// columns carry `NaN` / `0`. Cold path, so it simply goes through
+    /// the [`Trace::to_run_metrics`] view.
+    pub fn to_csv(&self) -> String {
+        self.to_run_metrics().to_csv()
+    }
+
+    /// View this trace as coordinator-style [`RunMetrics`] so engine runs
+    /// feed the same downstream consumers (rate summaries, CSV) as
+    /// distributed runs.
+    ///
+    /// [`RunMetrics`]: crate::coordinator::metrics::RunMetrics
+    pub fn to_run_metrics(&self) -> crate::coordinator::metrics::RunMetrics {
+        use crate::coordinator::metrics::{RoundMetrics, RunMetrics};
+        let mut m = RunMetrics {
+            rounds: Vec::with_capacity(self.records.len()),
+            total_payload_bits: self.total_payload_bits,
+            total_overhead_bits: self.total_side_bits,
+            rejected_messages: 0,
+            final_iterate: self.final_x.clone(),
+        };
+        for (t, r) in self.records.iter().enumerate() {
+            m.rounds.push(RoundMetrics {
+                round: t as u64,
+                value: r.value,
+                mean_local_value: f32::NAN,
+                payload_bits: r.payload_bits,
+                participants: r.participants,
+                wall: std::time::Duration::ZERO,
+            });
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_trace() -> Trace {
+        Trace {
+            records: vec![
+                IterRecord { value: 2.0, dist_to_opt: 1.0, payload_bits: 64, participants: 4 },
+                IterRecord { value: 1.0, dist_to_opt: 0.5, payload_bits: 64, participants: 3 },
+            ],
+            final_x: vec![1.0, 2.0],
+            total_payload_bits: 128,
+            total_side_bits: 8,
+        }
+    }
+
+    #[test]
+    fn trace_csv_shares_the_coordinator_schema() {
+        let t = demo_trace();
+        let csv = t.to_csv();
+        // One writer, one schema: the engine trace emits exactly the
+        // coordinator header and row shape (participants included).
+        assert!(csv.starts_with(crate::coordinator::metrics::CSV_HEADER));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(1).unwrap().starts_with("0,2,NaN,"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(",64,4,0"));
+    }
+
+    #[test]
+    fn run_metrics_roundtrip_preserves_totals() {
+        let t = demo_trace();
+        let m = t.to_run_metrics();
+        assert_eq!(m.total_payload_bits, 128);
+        assert_eq!(m.total_overhead_bits, 8);
+        assert_eq!(m.final_iterate, vec![1.0, 2.0]);
+        assert_eq!(m.rounds.len(), 2);
+        assert!((m.mean_participants() - 3.5).abs() < 1e-6);
     }
 }

@@ -9,17 +9,22 @@
 //! `σ_q² = n·B²/(2^R−1)²` for the naive quantizer vs `K_u²/(2^R−1)²`
 //! (DSC) / `log n/(2^R−1)²` (NDSC) — the `n`-free rates of (24)/(25).
 //!
-//! The threaded, byte-accounted runtime version of the same loop lives in
-//! [`crate::coordinator`]; this module is deterministic and cheap, used by
-//! the figure harness (Figs. 3a, 5, 6).
+//! Engine spec: one [`ShardOracle`] per worker (batch draw from the
+//! worker's forked RNG stream), per-worker codecs, no feedback, k-of-m
+//! participation, Polyak-average output. The threaded, byte-accounted
+//! runtime for the same spec is
+//! [`crate::opt::engine::driver::CoordinatorDriver`]; this inline form is
+//! deterministic and cheap, used by the figure harness (Figs. 3a, 5, 6).
 
 use crate::coordinator::transport::Participation;
 use crate::linalg::rng::Rng;
-use crate::linalg::vecops::dist2;
+use crate::opt::engine::oracle::ShardOracle;
+use crate::opt::engine::schedule::Schedule;
+use crate::opt::engine::{Codecs, Engine, OutputMode, Problem, RngPolicy};
 use crate::opt::objectives::DatasetObjective;
 use crate::opt::projection::Domain;
-use crate::opt::{IterRecord, Trace};
-use crate::quant::{Compressed, Compressor, Workspace};
+use crate::opt::Trace;
+use crate::quant::Compressor;
 
 /// A multi-worker problem: one objective shard per worker; the global
 /// objective is the average.
@@ -98,90 +103,27 @@ pub fn run(
     opts: MultiOptions,
     rng: &mut Rng,
 ) -> Trace {
-    let n = problem.n;
-    let m = problem.m();
-    assert_eq!(compressors.len(), m);
-    for c in compressors {
-        assert_eq!(c.n(), n);
+    let mut spec = Engine::new(
+        Problem::Sharded(problem),
+        Schedule::Constant(opts.step),
+        opts.iters,
+    )
+    .with_codecs(Codecs::PerWorker(compressors))
+    .with_rng_policy(RngPolicy::ForkPerWorker)
+    .with_participation(opts.participation)
+    .with_domain(opts.domain)
+    .with_output(OutputMode::PolyakAverage);
+    for shard in &problem.shards {
+        spec = spec.with_oracle(ShardOracle::new(shard, opts.batch));
     }
-    let mut x = x0.to_vec();
-    opts.domain.project(&mut x);
-    let mut avg = vec![0.0f32; n];
-    let mut consensus = vec![0.0f32; n];
-    let mut g = vec![0.0f32; n];
-    let mut worker_rngs: Vec<Rng> = (0..m).map(|i| rng.fork(i as u64)).collect();
-    // Shared encode/decode scratch: every compressor in the round has the
-    // same (n, R) shape, so one workspace + one message shell + one batch
-    // index buffer serve all m workers, allocation-free after warm-up.
-    let mut ws = Workspace::for_compressor(compressors[0].as_ref());
-    let mut msg = Compressed::empty(n);
-    let mut q = vec![0.0f32; n];
-    let mut batch_idx: Vec<usize> = Vec::new();
-    let mut participants: Vec<usize> = Vec::with_capacity(m);
-    let mut trace = Trace::default();
-    trace.records.reserve(opts.iters);
-    for t in 0..opts.iters {
-        consensus.fill(0.0);
-        let mut round_bits = 0usize;
-        // Participant set for this round. Full participation draws no
-        // randomness, so legacy traces are unchanged; KofM samples a
-        // uniform k-subset from the shared rng (seed-deterministic) and
-        // processes it in worker-id order.
-        match opts.participation {
-            Participation::KofM { k } => {
-                rng.sample_indices_into(m, k.min(m), &mut participants);
-                participants.sort_unstable();
-            }
-            Participation::Full | Participation::Deadline { .. } => {
-                participants.clear();
-                participants.extend(0..m);
-            }
-        }
-        let p = participants.len().max(1);
-        for &i in &participants {
-            let shard = &problem.shards[i];
-            // Worker i: local (mini-batch) subgradient.
-            match opts.batch {
-                Some(bsz) => {
-                    worker_rngs[i].sample_indices_into(shard.m, bsz.min(shard.m), &mut batch_idx);
-                    shard.minibatch_gradient(&x, Some(&batch_idx), &mut g);
-                }
-                None => shard.gradient(&x, &mut g),
-            }
-            compressors[i].compress_into(&g, &mut worker_rngs[i], &mut ws, &mut msg);
-            round_bits += msg.payload_bits;
-            trace.total_payload_bits += msg.payload_bits;
-            trace.total_side_bits += msg.side_bits;
-            // Server: decode + consensus accumulate (mean over the
-            // participants).
-            compressors[i].decompress_into(&msg, &mut ws, &mut q);
-            for (ci, &qi) in consensus.iter_mut().zip(&q) {
-                *ci += qi / p as f32;
-            }
-        }
-        // Server: subgradient step + projection.
-        for (xi, &ci) in x.iter_mut().zip(&consensus) {
-            *xi -= opts.step * ci;
-        }
-        opts.domain.project(&mut x);
-        let w = 1.0 / (t + 1) as f32;
-        for (ai, &xi) in avg.iter_mut().zip(&x) {
-            *ai += w * (xi - *ai);
-        }
-        trace.records.push(IterRecord {
-            value: problem.value(&avg),
-            dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
-            payload_bits: round_bits,
-        });
-    }
-    trace.final_x = avg;
-    trace
+    spec.run(x0, x_star, rng)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic::planted_regression_shards;
+    use crate::linalg::vecops::dist2;
     use crate::opt::objectives::Loss;
     use crate::quant::gain_shape::StandardDither;
     use crate::quant::ndsc::Ndsc;
@@ -254,9 +196,11 @@ mod tests {
         let last = trace.final_value();
         assert!(last < 0.5 * first, "no convergence under 4-of-10: {first} -> {last}");
         // Per-round payload varies with the drawn subset but never
-        // exceeds the sum of the k largest budgets.
+        // exceeds the sum of the k largest budgets; the participants
+        // column reports the drawn k everywhere.
         let max_round = (0..4).map(|_| (30.0f32 * 4.0) as usize).sum::<usize>();
         assert!(trace.records.iter().all(|r| r.payload_bits <= max_round));
+        assert!(trace.records.iter().all(|r| r.participants == 4));
     }
 
     #[test]

@@ -7,12 +7,21 @@
 //! module implements the per-worker-feedback variant it points to, which
 //! is exact for smooth strongly-convex sums and recovers single-worker
 //! DGD-DEF at m = 1 (tested).
+//!
+//! Engine spec: one `ExactGrad` per shard, per-worker codecs,
+//! [`DefFeedback`] with one error vector per worker (a non-participant's
+//! loop pauses), k-of-m participation, last-iterate output. Codec dither
+//! draws from the shared run RNG in participant order — the historical
+//! convention of this loop, preserved bit-for-bit.
 
 use crate::coordinator::transport::Participation;
 use crate::linalg::rng::Rng;
-use crate::linalg::vecops::dist2;
+use crate::opt::engine::feedback::DefFeedback;
+use crate::opt::engine::oracle::ExactGrad;
+use crate::opt::engine::schedule::Schedule;
+use crate::opt::engine::{Codecs, Engine, Problem};
 use crate::opt::multi::ShardedProblem;
-use crate::opt::{IterRecord, Trace};
+use crate::opt::Trace;
 use crate::quant::Compressor;
 
 #[derive(Clone, Copy, Debug)]
@@ -37,77 +46,25 @@ pub fn run(
     opts: MultiDefOptions,
     rng: &mut Rng,
 ) -> Trace {
-    let n = problem.n;
-    let m = problem.m();
-    assert_eq!(compressors.len(), m);
-    let mut xhat = x0.to_vec();
-    let mut errs = vec![vec![0.0f32; n]; m];
-    let mut z = vec![0.0f32; n];
-    let mut g = vec![0.0f32; n];
-    let mut consensus = vec![0.0f32; n];
-    let mut participants: Vec<usize> = Vec::with_capacity(m);
-    let mut trace = Trace::default();
-    for _ in 0..opts.iters {
-        trace.records.push(IterRecord {
-            value: problem.value(&xhat),
-            dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
-            payload_bits: 0,
-        });
-        consensus.fill(0.0);
-        let mut round_bits = 0;
-        match opts.participation {
-            Participation::KofM { k } => {
-                rng.sample_indices_into(m, k.min(m), &mut participants);
-                participants.sort_unstable();
-            }
-            Participation::Full | Participation::Deadline { .. } => {
-                participants.clear();
-                participants.extend(0..m);
-            }
-        }
-        let p = participants.len().max(1);
-        for &i in &participants {
-            let shard = &problem.shards[i];
-            let e = &mut errs[i];
-            for ((zi, &xi), &ei) in z.iter_mut().zip(&xhat).zip(e.iter()) {
-                *zi = xi + opts.step * ei;
-            }
-            shard.gradient(&z, &mut g);
-            for (gi, &ei) in g.iter_mut().zip(e.iter()) {
-                *gi -= ei; // u_i
-            }
-            let msg = compressors[i].compress(&g, rng);
-            round_bits += msg.payload_bits;
-            trace.total_payload_bits += msg.payload_bits;
-            trace.total_side_bits += msg.side_bits;
-            let q = compressors[i].decompress(&msg);
-            for ((ei, &qi), &ui) in e.iter_mut().zip(&q).zip(&g) {
-                *ei = qi - ui;
-            }
-            for (ci, &qi) in consensus.iter_mut().zip(&q) {
-                *ci += qi / p as f32;
-            }
-        }
-        for (xi, &ci) in xhat.iter_mut().zip(&consensus) {
-            *xi -= opts.step * ci;
-        }
-        if let Some(r) = trace.records.last_mut() {
-            r.payload_bits = round_bits;
-        }
+    let mut spec = Engine::new(
+        Problem::Sharded(problem),
+        Schedule::Constant(opts.step),
+        opts.iters,
+    )
+    .with_codecs(Codecs::PerWorker(compressors))
+    .with_feedback(DefFeedback::new(problem.m(), problem.n))
+    .with_participation(opts.participation);
+    for shard in &problem.shards {
+        spec = spec.with_oracle(ExactGrad { obj: shard });
     }
-    trace.records.push(IterRecord {
-        value: problem.value(&xhat),
-        dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
-        payload_bits: 0,
-    });
-    trace.final_x = xhat;
-    trace
+    spec.run(x0, x_star, rng)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic::planted_regression_shards;
+    use crate::linalg::vecops::dist2;
     use crate::opt::objectives::Loss;
     use crate::quant::ndsc::Ndsc;
 

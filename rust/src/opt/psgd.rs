@@ -1,13 +1,18 @@
 //! Projected stochastic subgradient descent — the unquantized reference for
 //! the general convex non-smooth setting (§4.2), with Polyak–Ruppert
 //! averaging (`x_T = (1/T)Σ x̂_t`, the output of Alg. 2 with `Q = id`).
+//!
+//! Engine spec: `OwnNoise` adapter over the caller's oracle, constant
+//! step, no codec, no feedback, Polyak-average output.
 
 use crate::linalg::rng::Rng;
-use crate::linalg::vecops::dist2;
+use crate::opt::engine::oracle::OwnNoise;
+use crate::opt::engine::schedule::{psgd_theory_step, Schedule};
+use crate::opt::engine::{Engine, OutputMode, Problem};
 use crate::opt::objectives::DatasetObjective;
 use crate::opt::oracle::Oracle;
 use crate::opt::projection::Domain;
-use crate::opt::{IterRecord, Trace};
+use crate::opt::Trace;
 
 #[derive(Clone, Copy, Debug)]
 pub struct PsgdOptions {
@@ -17,9 +22,10 @@ pub struct PsgdOptions {
 }
 
 impl PsgdOptions {
-    /// The theory step for suboptimality `DB/√T`: `α = D/(B√T)`.
+    /// The theory step for suboptimality `DB/√T`: `α = D/(B√T)` —
+    /// single-sourced in [`crate::opt::engine::schedule`].
     pub fn theory(d: f32, b: f32, iters: usize, domain: Domain) -> Self {
-        PsgdOptions { step: d / (b * (iters as f32).sqrt()), iters, domain }
+        PsgdOptions { step: psgd_theory_step(d, b, iters), iters, domain }
     }
 }
 
@@ -31,33 +37,13 @@ pub fn run(
     x0: &[f32],
     x_star: Option<&[f32]>,
     opts: PsgdOptions,
-    _rng: &mut Rng,
+    rng: &mut Rng,
 ) -> Trace {
-    let n = obj.dim();
-    let mut x = x0.to_vec();
-    opts.domain.project(&mut x);
-    let mut avg = vec![0.0f32; n];
-    let mut g = vec![0.0f32; n];
-    let mut trace = Trace::default();
-    for t in 0..opts.iters {
-        oracle.query(&x, &mut g);
-        for (xi, &gi) in x.iter_mut().zip(&g) {
-            *xi -= opts.step * gi;
-        }
-        opts.domain.project(&mut x);
-        // running average over x̂_1..x̂_t
-        let w = 1.0 / (t + 1) as f32;
-        for (ai, &xi) in avg.iter_mut().zip(&x) {
-            *ai += w * (xi - *ai);
-        }
-        trace.records.push(IterRecord {
-            value: obj.value(&avg),
-            dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
-            payload_bits: 0,
-        });
-    }
-    trace.final_x = avg;
-    trace
+    Engine::new(Problem::Single(obj), Schedule::Constant(opts.step), opts.iters)
+        .with_oracle(OwnNoise(oracle))
+        .with_domain(opts.domain)
+        .with_output(OutputMode::PolyakAverage)
+        .run(x0, x_star, rng)
 }
 
 #[cfg(test)]

@@ -1,12 +1,16 @@
-//! Shared oracles for the coordinator integration suites.
+//! Shared bit-identity oracles for the integration suites. Each suite
+//! binary uses the oracle for its own runtime (coordinator `RunMetrics`
+//! vs engine `Trace`), so both carry `allow(dead_code)`.
 
 use kashinflow::coordinator::metrics::RunMetrics;
+use kashinflow::opt::Trace;
 
 /// Bit-exact run-trace equality: every per-round metric (objective bits,
 /// mean local value bits, payload, participants), the final iterate and
 /// the traffic totals. One definition on purpose — when `RunMetrics`
 /// grows a field (as `participants` did), add it here and every suite
 /// that claims bitwise identity starts covering it at once.
+#[allow(dead_code)]
 pub fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, label: &str) {
     assert_eq!(a.rounds.len(), b.rounds.len(), "{label}: round count");
     for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
@@ -40,4 +44,42 @@ pub fn assert_bit_identical(a: &RunMetrics, b: &RunMetrics, label: &str) {
         );
     }
     assert_eq!(a.total_payload_bits, b.total_payload_bits, "{label}: traffic");
+}
+
+/// Bit-exact optimizer-trace equality: every per-record metric (value
+/// bits, distance bits, payload, participants), the final iterate, and
+/// the traffic totals. Same single-definition policy as
+/// [`assert_bit_identical`]: when `IterRecord` grows a field, add it
+/// here and every engine golden-trace suite covers it at once.
+#[allow(dead_code)]
+pub fn assert_trace_bit_identical(a: &Trace, b: &Trace, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (t, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(
+            ra.value.to_bits(),
+            rb.value.to_bits(),
+            "{label}: record {t} value diverged ({} vs {})",
+            ra.value,
+            rb.value
+        );
+        assert_eq!(
+            ra.dist_to_opt.to_bits(),
+            rb.dist_to_opt.to_bits(),
+            "{label}: record {t} dist_to_opt diverged ({} vs {})",
+            ra.dist_to_opt,
+            rb.dist_to_opt
+        );
+        assert_eq!(ra.payload_bits, rb.payload_bits, "{label}: record {t} payload bits");
+        assert_eq!(ra.participants, rb.participants, "{label}: record {t} participants");
+    }
+    assert_eq!(a.final_x.len(), b.final_x.len(), "{label}: final_x length");
+    for (i, (xa, xb)) in a.final_x.iter().zip(&b.final_x).enumerate() {
+        assert_eq!(
+            xa.to_bits(),
+            xb.to_bits(),
+            "{label}: final_x coordinate {i} diverged ({xa} vs {xb})"
+        );
+    }
+    assert_eq!(a.total_payload_bits, b.total_payload_bits, "{label}: payload total");
+    assert_eq!(a.total_side_bits, b.total_side_bits, "{label}: side-info total");
 }

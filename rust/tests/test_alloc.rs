@@ -1,7 +1,7 @@
 //! Allocation-counting proof of the allocation-free hot path.
 //!
 //! A counting `#[global_allocator]` wrapper tallies every `alloc`,
-//! `alloc_zeroed` and `realloc` in the process. Two claims are enforced:
+//! `alloc_zeroed` and `realloc` in the process. Three claims are enforced:
 //!
 //! 1. **Codec level** — after one warm-up call, `compress_into` /
 //!    `decompress_into` with a reused [`Workspace`] and message shell
@@ -11,6 +11,11 @@
 //!    channel wakers and lazy runtime init) performs exactly zero heap
 //!    allocations across *all* threads: gradients, codec scratch,
 //!    broadcast iterates and wire bytes are all recycled.
+//! 3. **Engine level** — an inline `opt::engine` run (the DGD-DEF spec:
+//!    exact oracle + shared codec + error feedback) performs exactly
+//!    zero heap allocations per steady-state round, sampled via the
+//!    engine's round probe: buffers, workspace, message shell and the
+//!    reserved trace all warm up once.
 //!
 //! Everything lives in ONE `#[test]` so the libtest harness cannot run a
 //! second counter-touching test concurrently and pollute the tallies.
@@ -142,10 +147,48 @@ fn coordinator_level_zero_allocs() {
     }
 }
 
-/// One test fn on purpose: both phases read the global counter, and the
+fn engine_level_zero_allocs() {
+    use kashinflow::opt::engine::feedback::DefFeedback;
+    use kashinflow::opt::engine::oracle::ExactGrad;
+    use kashinflow::opt::engine::schedule::Schedule;
+    use kashinflow::opt::engine::{Codecs, Engine, Problem};
+
+    let n = 1024;
+    let rounds = 60usize;
+    let warmup = 10usize;
+    let mut rng = Rng::seed_from(21);
+    let (shards, _) = planted_regression_shards(1, 10, n, Loss::Square, &mut rng, false);
+    let obj = shards.into_iter().next().unwrap();
+    let codec = Ndsc::hadamard_dithered(n, 2.0, &mut rng);
+    let (l, mu) = obj.smoothness_strong_convexity();
+    // Sample the counter from the engine's round probe; the vector is
+    // preallocated so the push itself cannot allocate.
+    let mut counts: Vec<usize> = Vec::with_capacity(rounds);
+    let trace = Engine::new(Problem::Single(&obj), Schedule::Constant(2.0 / (l + mu)), rounds)
+        .with_oracle(ExactGrad { obj: &obj })
+        .with_codecs(Codecs::Shared(&codec))
+        .with_feedback(DefFeedback::new(1, n))
+        .with_probe(|_| counts.push(alloc_count()))
+        .run(&vec![0.0; n], None, &mut rng);
+    assert_eq!(trace.records.len(), rounds + 1);
+    assert!(trace.final_x.iter().all(|v| v.is_finite()));
+    assert_eq!(counts.len(), rounds);
+    for i in warmup..rounds {
+        let grew = counts[i] - counts[i - 1];
+        assert_eq!(
+            grew,
+            0,
+            "engine round {i} performed {grew} heap allocations \
+             (allocation-free contract violated; warm-up window = {warmup} rounds)"
+        );
+    }
+}
+
+/// One test fn on purpose: all phases read the global counter, and the
 /// libtest harness runs separate `#[test]`s on concurrent threads.
 #[test]
 fn zero_steady_state_allocations() {
     codec_level_zero_allocs();
     coordinator_level_zero_allocs();
+    engine_level_zero_allocs();
 }

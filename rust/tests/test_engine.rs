@@ -1,0 +1,678 @@
+//! Golden-trace equivalence for the unified optimizer engine.
+//!
+//! The six legacy `run()` entry points are now thin spec-builders over
+//! `opt::engine`. This suite keeps **reference implementations of the
+//! pre-refactor loop bodies** (verbatim float-op and RNG ordering,
+//! using the allocating codec API — proven bit-identical to the
+//! workspace API by the conformance suite) and asserts that every entry
+//! point produces a **bitwise-identical** trace: every record's value /
+//! distance bits, payload, participants, the final iterate, and the
+//! traffic totals (`tests/common::assert_trace_bit_identical`).
+//!
+//! The engine's distributed driver is additionally checked for seed
+//! determinism with the coordinator bit-identity oracle, and a
+//! **per-thread** counting allocator proves zero steady-state
+//! allocations per engine round without serializing the suite (the
+//! process-wide proof across all threads lives in `test_alloc.rs`,
+//! phase 3, whose single-test binary keeps its global counter clean).
+
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use common::{assert_bit_identical, assert_trace_bit_identical};
+use kashinflow::coordinator::config::{RunConfig, SchemeKind};
+use kashinflow::coordinator::transport::Participation;
+use kashinflow::data::synthetic::{
+    planted_regression, planted_regression_shards, two_gaussian_svm, Tail,
+};
+use kashinflow::linalg::rng::Rng;
+use kashinflow::linalg::vecops::dist2;
+use kashinflow::opt::dgd_def::{self, DgdDefOptions};
+use kashinflow::opt::dq_psgd::{self, DqPsgdOptions};
+use kashinflow::opt::engine::driver::{CoordinatorDriver, Driver};
+use kashinflow::opt::engine::schedule::Schedule;
+use kashinflow::opt::engine::{Engine, OutputMode, Problem};
+use kashinflow::opt::gd::{self, GdOptions};
+use kashinflow::opt::multi::{self, MultiOptions, ShardedProblem};
+use kashinflow::opt::multi_def::{self, MultiDefOptions};
+use kashinflow::opt::objectives::{DatasetObjective, Loss};
+use kashinflow::opt::oracle::{MinibatchOracle, Oracle};
+use kashinflow::opt::projection::Domain;
+use kashinflow::opt::psgd::{self, PsgdOptions};
+use kashinflow::opt::{IterRecord, Trace};
+use kashinflow::quant::ndsc::Ndsc;
+use kashinflow::quant::Compressor;
+
+// ---------------------------------------------------------------------
+// Per-thread allocation counter: concurrent tests in this binary tally
+// on their own threads, so one thread's steady-state measurement stays
+// clean under the parallel libtest harness.
+// ---------------------------------------------------------------------
+
+struct ThreadCountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for ThreadCountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: ThreadCountingAlloc = ThreadCountingAlloc;
+
+fn thread_allocs() -> usize {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn engine_round_is_allocation_free_in_steady_state() {
+    use kashinflow::opt::engine::feedback::DefFeedback;
+    use kashinflow::opt::engine::oracle::ExactGrad;
+    use kashinflow::opt::engine::Codecs;
+    let n = 512;
+    let rounds = 50usize;
+    let warmup = 10usize;
+    let mut data_rng = Rng::seed_from(30);
+    let (obj, _) =
+        planted_regression(40, n, Tail::GaussianCubed, Tail::Gaussian, 0.1, &mut data_rng);
+    let codec = Ndsc::hadamard_dithered(n, 2.0, &mut Rng::seed_from(31));
+    let (l, mu) = obj.smoothness_strong_convexity();
+    // Sampled from the engine's round probe into a preallocated vector
+    // (the push itself must not allocate).
+    let mut counts: Vec<usize> = Vec::with_capacity(rounds);
+    let trace = Engine::new(Problem::Single(&obj), Schedule::Constant(2.0 / (l + mu)), rounds)
+        .with_oracle(ExactGrad { obj: &obj })
+        .with_codecs(Codecs::Shared(&codec))
+        .with_feedback(DefFeedback::new(1, n))
+        .with_probe(|_| counts.push(thread_allocs()))
+        .run(&vec![0.0; n], None, &mut Rng::seed_from(32));
+    assert_eq!(trace.records.len(), rounds + 1);
+    assert!(trace.final_x.iter().all(|v| v.is_finite()));
+    assert_eq!(counts.len(), rounds);
+    for i in warmup..rounds {
+        let grew = counts[i] - counts[i - 1];
+        assert_eq!(
+            grew, 0,
+            "engine round {i} performed {grew} heap allocations on this thread \
+             (warm-up window = {warmup} rounds)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reference implementations: the pre-engine loop bodies, preserved here
+// as the golden standard. `participants` mirrors the engine's
+// delivered-uploads semantics so the whole record is comparable.
+// ---------------------------------------------------------------------
+
+fn ref_gd(
+    obj: &DatasetObjective,
+    x0: &[f32],
+    x_star: Option<&[f32]>,
+    step: f32,
+    iters: usize,
+) -> Trace {
+    let n = obj.dim();
+    let mut x = x0.to_vec();
+    let mut g = vec![0.0f32; n];
+    let mut trace = Trace::default();
+    for _ in 0..=iters {
+        trace.records.push(IterRecord {
+            value: obj.value(&x),
+            dist_to_opt: x_star.map(|xs| dist2(&x, xs)).unwrap_or(f32::NAN),
+            payload_bits: 0,
+            participants: 1,
+        });
+        obj.gradient(&x, &mut g);
+        for (xi, &gi) in x.iter_mut().zip(&g) {
+            *xi -= step * gi;
+        }
+    }
+    trace.final_x = x;
+    trace
+}
+
+fn ref_psgd(
+    obj: &DatasetObjective,
+    oracle: &mut dyn Oracle,
+    x0: &[f32],
+    x_star: Option<&[f32]>,
+    step: f32,
+    iters: usize,
+    domain: Domain,
+) -> Trace {
+    let n = obj.dim();
+    let mut x = x0.to_vec();
+    domain.project(&mut x);
+    let mut avg = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut trace = Trace::default();
+    for t in 0..iters {
+        oracle.query(&x, &mut g);
+        for (xi, &gi) in x.iter_mut().zip(&g) {
+            *xi -= step * gi;
+        }
+        domain.project(&mut x);
+        let w = 1.0 / (t + 1) as f32;
+        for (ai, &xi) in avg.iter_mut().zip(&x) {
+            *ai += w * (xi - *ai);
+        }
+        trace.records.push(IterRecord {
+            value: obj.value(&avg),
+            dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
+            payload_bits: 0,
+            participants: 1,
+        });
+    }
+    trace.final_x = avg;
+    trace
+}
+
+fn ref_dgd_def(
+    obj: &DatasetObjective,
+    compressor: &dyn Compressor,
+    x0: &[f32],
+    x_star: Option<&[f32]>,
+    step: f32,
+    iters: usize,
+    rng: &mut Rng,
+) -> Trace {
+    let n = obj.dim();
+    let mut xhat = x0.to_vec();
+    let mut e = vec![0.0f32; n]; // e_{-1} = 0
+    let mut z = vec![0.0f32; n];
+    let mut u = vec![0.0f32; n];
+    let mut trace = Trace::default();
+    for _ in 0..iters {
+        trace.records.push(IterRecord {
+            value: obj.value(&xhat),
+            dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
+            payload_bits: 0,
+            participants: 0,
+        });
+        // z_t = x̂_t + α e_{t−1}
+        for ((zi, &xi), &ei) in z.iter_mut().zip(&xhat).zip(&e) {
+            *zi = xi + step * ei;
+        }
+        // u_t = ∇f(z_t) − e_{t−1}
+        obj.gradient(&z, &mut u);
+        for (ui, &ei) in u.iter_mut().zip(&e) {
+            *ui -= ei;
+        }
+        // v_t = E(u_t); q_t = D(v_t)
+        let msg = compressor.compress(&u, rng);
+        trace.total_payload_bits += msg.payload_bits;
+        trace.total_side_bits += msg.side_bits;
+        let q = compressor.decompress(&msg);
+        // e_t = q_t − u_t
+        for ((ei, &qi), &ui) in e.iter_mut().zip(&q).zip(&u) {
+            *ei = qi - ui;
+        }
+        // Server: x̂_{t+1} = x̂_t − α q_t
+        for (xi, &qi) in xhat.iter_mut().zip(&q) {
+            *xi -= step * qi;
+        }
+        if let Some(r) = trace.records.last_mut() {
+            r.payload_bits = msg.payload_bits;
+            r.participants = 1;
+        }
+    }
+    trace.records.push(IterRecord {
+        value: obj.value(&xhat),
+        dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
+        payload_bits: 0,
+        participants: 0,
+    });
+    trace.final_x = xhat;
+    trace
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ref_dq_psgd(
+    obj: &DatasetObjective,
+    oracle: &mut dyn Oracle,
+    compressor: &dyn Compressor,
+    x0: &[f32],
+    x_star: Option<&[f32]>,
+    step: f32,
+    iters: usize,
+    domain: Domain,
+    drop_prob: f32,
+    rng: &mut Rng,
+) -> Trace {
+    let n = obj.dim();
+    let mut x = x0.to_vec();
+    domain.project(&mut x);
+    let mut avg = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut trace = Trace::default();
+    for t in 0..iters {
+        oracle.query(&x, &mut g);
+        let msg = compressor.compress(&g, rng);
+        trace.total_payload_bits += msg.payload_bits;
+        trace.total_side_bits += msg.side_bits;
+        let delivered = drop_prob <= 0.0 || rng.uniform_f32() >= drop_prob;
+        if delivered {
+            let q = compressor.decompress(&msg);
+            for (xi, &qi) in x.iter_mut().zip(&q) {
+                *xi -= step * qi;
+            }
+            domain.project(&mut x);
+        }
+        let w = 1.0 / (t + 1) as f32;
+        for (ai, &xi) in avg.iter_mut().zip(&x) {
+            *ai += w * (xi - *ai);
+        }
+        trace.records.push(IterRecord {
+            value: obj.value(&avg),
+            dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
+            payload_bits: msg.payload_bits,
+            participants: usize::from(delivered),
+        });
+    }
+    trace.final_x = avg;
+    trace
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ref_multi(
+    problem: &ShardedProblem,
+    compressors: &[Box<dyn Compressor>],
+    x0: &[f32],
+    x_star: Option<&[f32]>,
+    opts: MultiOptions,
+    rng: &mut Rng,
+) -> Trace {
+    let n = problem.n;
+    let m = problem.m();
+    let mut x = x0.to_vec();
+    opts.domain.project(&mut x);
+    let mut avg = vec![0.0f32; n];
+    let mut consensus = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut worker_rngs: Vec<Rng> = (0..m).map(|i| rng.fork(i as u64)).collect();
+    let mut batch_idx: Vec<usize> = Vec::new();
+    let mut participants: Vec<usize> = Vec::with_capacity(m);
+    let mut trace = Trace::default();
+    for t in 0..opts.iters {
+        consensus.fill(0.0);
+        let mut round_bits = 0usize;
+        match opts.participation {
+            Participation::KofM { k } => {
+                rng.sample_indices_into(m, k.min(m), &mut participants);
+                participants.sort_unstable();
+            }
+            Participation::Full | Participation::Deadline { .. } => {
+                participants.clear();
+                participants.extend(0..m);
+            }
+        }
+        let p = participants.len().max(1);
+        for &i in &participants {
+            let shard = &problem.shards[i];
+            match opts.batch {
+                Some(bsz) => {
+                    worker_rngs[i].sample_indices_into(shard.m, bsz.min(shard.m), &mut batch_idx);
+                    shard.minibatch_gradient(&x, Some(&batch_idx), &mut g);
+                }
+                None => shard.gradient(&x, &mut g),
+            }
+            let msg = compressors[i].compress(&g, &mut worker_rngs[i]);
+            round_bits += msg.payload_bits;
+            trace.total_payload_bits += msg.payload_bits;
+            trace.total_side_bits += msg.side_bits;
+            let q = compressors[i].decompress(&msg);
+            for (ci, &qi) in consensus.iter_mut().zip(&q) {
+                *ci += qi / p as f32;
+            }
+        }
+        for (xi, &ci) in x.iter_mut().zip(&consensus) {
+            *xi -= opts.step * ci;
+        }
+        opts.domain.project(&mut x);
+        let w = 1.0 / (t + 1) as f32;
+        for (ai, &xi) in avg.iter_mut().zip(&x) {
+            *ai += w * (xi - *ai);
+        }
+        trace.records.push(IterRecord {
+            value: problem.value(&avg),
+            dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
+            payload_bits: round_bits,
+            participants: participants.len(),
+        });
+    }
+    trace.final_x = avg;
+    trace
+}
+
+fn ref_multi_def(
+    problem: &ShardedProblem,
+    compressors: &[Box<dyn Compressor>],
+    x0: &[f32],
+    x_star: Option<&[f32]>,
+    opts: MultiDefOptions,
+    rng: &mut Rng,
+) -> Trace {
+    let n = problem.n;
+    let m = problem.m();
+    let mut xhat = x0.to_vec();
+    let mut errs = vec![vec![0.0f32; n]; m];
+    let mut z = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let mut consensus = vec![0.0f32; n];
+    let mut participants: Vec<usize> = Vec::with_capacity(m);
+    let mut trace = Trace::default();
+    for _ in 0..opts.iters {
+        trace.records.push(IterRecord {
+            value: problem.value(&xhat),
+            dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
+            payload_bits: 0,
+            participants: 0,
+        });
+        consensus.fill(0.0);
+        let mut round_bits = 0;
+        match opts.participation {
+            Participation::KofM { k } => {
+                rng.sample_indices_into(m, k.min(m), &mut participants);
+                participants.sort_unstable();
+            }
+            Participation::Full | Participation::Deadline { .. } => {
+                participants.clear();
+                participants.extend(0..m);
+            }
+        }
+        let p = participants.len().max(1);
+        for &i in &participants {
+            let shard = &problem.shards[i];
+            let e = &mut errs[i];
+            for ((zi, &xi), &ei) in z.iter_mut().zip(&xhat).zip(e.iter()) {
+                *zi = xi + opts.step * ei;
+            }
+            shard.gradient(&z, &mut g);
+            for (gi, &ei) in g.iter_mut().zip(e.iter()) {
+                *gi -= ei; // u_i
+            }
+            let msg = compressors[i].compress(&g, rng);
+            round_bits += msg.payload_bits;
+            trace.total_payload_bits += msg.payload_bits;
+            trace.total_side_bits += msg.side_bits;
+            let q = compressors[i].decompress(&msg);
+            for ((ei, &qi), &ui) in e.iter_mut().zip(&q).zip(&g) {
+                *ei = qi - ui;
+            }
+            for (ci, &qi) in consensus.iter_mut().zip(&q) {
+                *ci += qi / p as f32;
+            }
+        }
+        for (xi, &ci) in xhat.iter_mut().zip(&consensus) {
+            *xi -= opts.step * ci;
+        }
+        if let Some(r) = trace.records.last_mut() {
+            r.payload_bits = round_bits;
+            r.participants = participants.len();
+        }
+    }
+    trace.records.push(IterRecord {
+        value: problem.value(&xhat),
+        dist_to_opt: x_star.map(|xs| dist2(&xhat, xs)).unwrap_or(f32::NAN),
+        payload_bits: 0,
+        participants: 0,
+    });
+    trace.final_x = xhat;
+    trace
+}
+
+// ---------------------------------------------------------------------
+// Golden-trace equivalence: one test per legacy entry point.
+// ---------------------------------------------------------------------
+
+#[test]
+fn gd_is_bit_identical_to_legacy() {
+    let mut data_rng = Rng::seed_from(1);
+    let (obj, _) =
+        planted_regression(100, 20, Tail::Gaussian, Tail::Gaussian, 0.1, &mut data_rng);
+    let xs = obj.quadratic_minimizer();
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let opts = GdOptions::optimal(l, mu, 80);
+    let x0 = vec![0.0f32; 20];
+    let want = ref_gd(&obj, &x0, Some(&xs), opts.step, opts.iters);
+    let got = gd::run(&obj, &x0, Some(&xs), opts);
+    assert_trace_bit_identical(&want, &got, "gd");
+}
+
+#[test]
+fn psgd_is_bit_identical_to_legacy() {
+    let mut data_rng = Rng::seed_from(2);
+    let obj = two_gaussian_svm(80, 24, 0.8, &mut data_rng);
+    let domain = Domain::L2Ball { radius: 5.0 };
+    let x0 = vec![0.0f32; 24];
+    let mut oracle_a = MinibatchOracle::new(&obj, 8, Rng::seed_from(3));
+    let want = ref_psgd(&obj, &mut oracle_a, &x0, None, 0.05, 120, domain);
+    let mut oracle_b = MinibatchOracle::new(&obj, 8, Rng::seed_from(3));
+    let got = psgd::run(
+        &obj,
+        &mut oracle_b,
+        &x0,
+        None,
+        PsgdOptions { step: 0.05, iters: 120, domain },
+        &mut Rng::seed_from(4),
+    );
+    assert_trace_bit_identical(&want, &got, "psgd");
+}
+
+#[test]
+fn dgd_def_is_bit_identical_to_legacy() {
+    let mut data_rng = Rng::seed_from(5);
+    let (obj, _) =
+        planted_regression(80, 24, Tail::GaussianCubed, Tail::Gaussian, 0.1, &mut data_rng);
+    let xs = obj.quadratic_minimizer();
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let step = GdOptions::optimal(l, mu, 0).step;
+    let codec = Ndsc::hadamard(24, 3.0, &mut Rng::seed_from(6));
+    let x0 = vec![0.0f32; 24];
+    let want = ref_dgd_def(&obj, &codec, &x0, Some(&xs), step, 60, &mut Rng::seed_from(7));
+    let got = dgd_def::run(
+        &obj,
+        &codec,
+        &x0,
+        Some(&xs),
+        DgdDefOptions { step, iters: 60 },
+        &mut Rng::seed_from(7),
+    );
+    assert_trace_bit_identical(&want, &got, "dgd_def");
+}
+
+#[test]
+fn dq_psgd_is_bit_identical_to_legacy_including_drops() {
+    let mut data_rng = Rng::seed_from(8);
+    let obj = two_gaussian_svm(80, 30, 0.8, &mut data_rng);
+    let domain = Domain::L2Ball { radius: 8.0 };
+    let codec = Ndsc::hadamard_dithered(30, 0.5, &mut Rng::seed_from(9));
+    let x0 = vec![0.0f32; 30];
+    for drop_prob in [0.0f32, 0.3] {
+        let mut oracle_a = MinibatchOracle::new(&obj, 10, Rng::seed_from(10));
+        let want = ref_dq_psgd(
+            &obj,
+            &mut oracle_a,
+            &codec,
+            &x0,
+            None,
+            0.05,
+            150,
+            domain,
+            drop_prob,
+            &mut Rng::seed_from(11),
+        );
+        let mut oracle_b = MinibatchOracle::new(&obj, 10, Rng::seed_from(10));
+        let got = dq_psgd::run(
+            &obj,
+            &mut oracle_b,
+            &codec,
+            &x0,
+            None,
+            DqPsgdOptions { step: 0.05, iters: 150, domain, drop_prob },
+            &mut Rng::seed_from(11),
+        );
+        assert_trace_bit_identical(&want, &got, &format!("dq_psgd drop={drop_prob}"));
+        if drop_prob > 0.0 {
+            // Lossy rounds are visible: some records report 0 delivered
+            // uploads while still charging the payload bits.
+            assert!(got.records.iter().any(|r| r.participants == 0 && r.payload_bits > 0));
+        }
+    }
+}
+
+fn dithered_fleet(m: usize, n: usize, seed: u64) -> Vec<Box<dyn Compressor>> {
+    let budgets = [0.5f32, 1.0, 2.0, 4.0];
+    let mut rng = Rng::seed_from(seed);
+    (0..m)
+        .map(|i| {
+            Box::new(Ndsc::hadamard_dithered(n, budgets[i % budgets.len()], &mut rng))
+                as Box<dyn Compressor>
+        })
+        .collect()
+}
+
+#[test]
+fn multi_is_bit_identical_to_legacy() {
+    let mut data_rng = Rng::seed_from(12);
+    let (shards, xs) = planted_regression_shards(6, 10, 20, Loss::Square, &mut data_rng, false);
+    let problem = ShardedProblem::new(shards);
+    let opts = MultiOptions {
+        step: problem.stable_step(),
+        iters: 80,
+        domain: Domain::L2Ball { radius: 50.0 },
+        batch: Some(5),
+        participation: Participation::KofM { k: 4 },
+    };
+    let x0 = vec![0.0f32; 20];
+    let comps_a = dithered_fleet(6, 20, 13);
+    let want = ref_multi(&problem, &comps_a, &x0, Some(&xs), opts, &mut Rng::seed_from(14));
+    let comps_b = dithered_fleet(6, 20, 13);
+    let got = multi::run(&problem, &comps_b, &x0, Some(&xs), opts, &mut Rng::seed_from(14));
+    assert_trace_bit_identical(&want, &got, "multi k-of-m");
+    // Full participation, full local gradients.
+    let opts_full = MultiOptions {
+        batch: None,
+        participation: Participation::Full,
+        ..opts
+    };
+    let comps_a = dithered_fleet(6, 20, 15);
+    let want = ref_multi(&problem, &comps_a, &x0, Some(&xs), opts_full, &mut Rng::seed_from(16));
+    let comps_b = dithered_fleet(6, 20, 15);
+    let got = multi::run(&problem, &comps_b, &x0, Some(&xs), opts_full, &mut Rng::seed_from(16));
+    assert_trace_bit_identical(&want, &got, "multi full");
+}
+
+#[test]
+fn multi_def_is_bit_identical_to_legacy() {
+    let mut data_rng = Rng::seed_from(17);
+    let (shards, xs) = planted_regression_shards(5, 12, 16, Loss::Square, &mut data_rng, false);
+    let problem = ShardedProblem::new(shards);
+    let step = problem.stable_step();
+    let x0 = vec![0.0f32; 16];
+    for participation in [Participation::Full, Participation::KofM { k: 3 }] {
+        let opts = MultiDefOptions { step, iters: 60, participation };
+        let mut rng = Rng::seed_from(18);
+        let comps_a: Vec<Box<dyn Compressor>> =
+            (0..5).map(|_| Box::new(Ndsc::hadamard(16, 4.0, &mut rng)) as _).collect();
+        let want = ref_multi_def(&problem, &comps_a, &x0, Some(&xs), opts, &mut Rng::seed_from(19));
+        let mut rng = Rng::seed_from(18);
+        let comps_b: Vec<Box<dyn Compressor>> =
+            (0..5).map(|_| Box::new(Ndsc::hadamard(16, 4.0, &mut rng)) as _).collect();
+        let got = multi_def::run(&problem, &comps_b, &x0, Some(&xs), opts, &mut Rng::seed_from(19));
+        assert_trace_bit_identical(&want, &got, &format!("multi_def {participation}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Driver-level checks.
+// ---------------------------------------------------------------------
+
+#[test]
+fn coordinator_driver_is_seed_deterministic() {
+    let n = 24;
+    let m = 4;
+    let cfg = RunConfig {
+        n,
+        workers: m,
+        r: 2.0,
+        scheme: SchemeKind::NdscDithered,
+        participation: Participation::KofM { k: 3 },
+        rounds: 25,
+        step: 1e-3,
+        batch: 0,
+        seed: 77,
+        ..Default::default()
+    };
+    let run_once = || {
+        let mut rng = Rng::seed_from(20);
+        let (shards, _) = planted_regression_shards(m, 8, n, Loss::Square, &mut rng, false);
+        let problem = ShardedProblem::new(shards);
+        let spec = Engine::new(Problem::Sharded(&problem), Schedule::Constant(cfg.step), cfg.rounds)
+            .with_output(OutputMode::PolyakAverage);
+        let mut driver = CoordinatorDriver::new(&cfg);
+        let trace = driver.drive(spec, &vec![0.0; n], None, &mut rng);
+        (trace, driver.last_metrics.expect("metrics recorded"))
+    };
+    let (trace_a, metrics_a) = run_once();
+    let (trace_b, metrics_b) = run_once();
+    assert_bit_identical(&metrics_a, &metrics_b, "coordinator driver x2");
+    assert_trace_bit_identical(&trace_a, &trace_b, "coordinator driver traces x2");
+    // The trace view carries the metrics content: payloads, participants
+    // (k = 3 every round), final iterate.
+    assert!(trace_a.records.iter().all(|r| r.participants == 3));
+    assert_eq!(trace_a.final_x, metrics_a.final_iterate);
+}
+
+#[test]
+fn engine_spec_equals_wrapper_composition() {
+    // The worked README example: DGD-DEF as an explicit engine
+    // composition must equal the dgd_def spec-builder bit-for-bit.
+    use kashinflow::opt::engine::feedback::DefFeedback;
+    use kashinflow::opt::engine::oracle::ExactGrad;
+    use kashinflow::opt::engine::Codecs;
+    let mut data_rng = Rng::seed_from(21);
+    let (obj, _) =
+        planted_regression(60, 16, Tail::GaussianCubed, Tail::Gaussian, 0.1, &mut data_rng);
+    let xs = obj.quadratic_minimizer();
+    let (l, mu) = obj.smoothness_strong_convexity();
+    let step = 2.0 / (l + mu);
+    let codec = Ndsc::hadamard(16, 4.0, &mut Rng::seed_from(22));
+    let x0 = vec![0.0f32; 16];
+    let via_engine = Engine::new(Problem::Single(&obj), Schedule::Constant(step), 50)
+        .with_oracle(ExactGrad { obj: &obj })
+        .with_codecs(Codecs::Shared(&codec))
+        .with_feedback(DefFeedback::new(1, 16))
+        .run(&x0, Some(&xs), &mut Rng::seed_from(23));
+    let via_wrapper = dgd_def::run(
+        &obj,
+        &codec,
+        &x0,
+        Some(&xs),
+        DgdDefOptions { step, iters: 50 },
+        &mut Rng::seed_from(23),
+    );
+    assert_trace_bit_identical(&via_engine, &via_wrapper, "engine vs wrapper");
+}
