@@ -1,0 +1,124 @@
+//! Serving-layer benchmarks: fleet-round throughput with 8 concurrent
+//! heterogeneous jobs under both scheduler policies, plus the
+//! checkpoint save/restore round-trip. Saves `BENCH_serve.json` with the
+//! per-case stats **and** the measured aggregate job-rounds/sec (the
+//! serving layer's headline throughput number), so regressions diff
+//! mechanically across PRs.
+
+use std::time::Instant;
+
+use kashinflow::exp::serve::job_mix;
+use kashinflow::serve::{checkpoint, Job, JobServer, Policy};
+use kashinflow::testkit::bench::{black_box, Bencher};
+
+const JOBS: usize = 8;
+const N: usize = 256;
+/// Long horizon so jobs never finish inside a measurement window (the
+/// trace reserve is `rounds + 1` records, so keep this moderate).
+const JOB_ROUNDS: usize = 200_000;
+
+fn fresh_server(policy: Policy) -> JobServer {
+    // Ample budget: throughput of the serve path itself, not of idling.
+    let mut srv = JobServer::new(1 << 30, policy);
+    for spec in job_mix(JOBS, N, JOB_ROUNDS, 7) {
+        srv.submit(spec).expect("ample budget admits the whole mix");
+    }
+    srv
+}
+
+struct ThroughputRow {
+    case: String,
+    policy: Policy,
+    jobs: usize,
+    rounds_per_sec: f64,
+    median_ns: u128,
+}
+
+// `BENCH_serve.json` has two producers by design — this bench (CI's
+// smoke artifact, written in `rust/`) and the `repro serve` sweep
+// (written in the invocation cwd). Rows carry a `source` discriminator
+// so a mixed diff is always attributable to its writer.
+fn rows_to_json(rows: &[ThroughputRow]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"source\": \"bench\", \"case\": \"{}\", \"policy\": \"{}\", \"jobs\": {}, \
+             \"rounds_per_sec\": {}, \"median_ns\": {}}}{}\n",
+            r.case,
+            r.policy,
+            r.jobs,
+            r.rounds_per_sec,
+            r.median_ns,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rows = Vec::new();
+
+    for policy in [Policy::Drr, Policy::DrrAdaptive] {
+        let mut srv = fresh_server(policy);
+        let case = format!("serve/{policy}-{JOBS}jobs-n{N}");
+        let stats = b.run(&case, || {
+            if srv.live_jobs() == 0 {
+                srv = fresh_server(policy);
+            }
+            black_box(srv.run_round());
+        });
+        // Aggregate throughput over a dedicated timed window (the
+        // Bencher measures per-fleet-round latency; the serving headline
+        // is engine rounds served per second across all tenants).
+        let mut srv = fresh_server(policy);
+        let window = if std::env::var_os("BENCH_SMOKE").is_some() { 0.2 } else { 1.0 };
+        let t0 = Instant::now();
+        let mut served = 0u64;
+        while t0.elapsed().as_secs_f64() < window {
+            if srv.live_jobs() == 0 {
+                srv = fresh_server(policy);
+            }
+            served += srv.run_round() as u64;
+        }
+        let rps = served as f64 / t0.elapsed().as_secs_f64();
+        println!("{case:<48} aggregate {rps:>12.0} job-rounds/s ({JOBS} concurrent jobs)");
+        rows.push(ThroughputRow {
+            case,
+            policy,
+            jobs: JOBS,
+            rounds_per_sec: rps,
+            median_ns: stats.median.as_nanos(),
+        });
+    }
+
+    // Checkpoint round-trip: save + restore of a warm DEF-feedback job.
+    let mut job = Job::build(
+        job_mix(5, 1024, 1000, 7)
+            .into_iter()
+            .nth(4)
+            .expect("mix slot 4 is the DEF tenant"),
+    )
+    .expect("mix specs build");
+    for _ in 0..50 {
+        job.step_round(0);
+    }
+    let stats = b.run("serve/checkpoint-roundtrip-n1024", || {
+        let bytes = checkpoint::save(&job).expect("resumable jobs snapshot cleanly");
+        let restored = checkpoint::restore(&bytes).expect("clean snapshot restores");
+        black_box(restored.rounds_done());
+    });
+    rows.push(ThroughputRow {
+        case: "serve/checkpoint-roundtrip-n1024".into(),
+        policy: Policy::Drr,
+        jobs: 1,
+        rounds_per_sec: 0.0,
+        median_ns: stats.median.as_nanos(),
+    });
+
+    match std::fs::write("BENCH_serve.json", rows_to_json(&rows)) {
+        Ok(()) => println!("wrote BENCH_serve.json ({} cases)", rows.len()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

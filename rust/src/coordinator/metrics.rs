@@ -93,9 +93,107 @@ impl RunMetrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multi-job fleet accounting (the serving layer's view of the budget).
+// ---------------------------------------------------------------------------
+
+/// Header of the per-job fleet accounting CSV
+/// ([`FleetMetrics::to_csv`]).
+pub const FLEET_CSV_HEADER: &str = "job,name,rounds_served,payload_bits,side_bits,bits_per_round\n";
+
+/// Uplink accounting for one job of a multi-job serve fleet
+/// ([`crate::serve::fleet::JobServer`]): how many engine rounds the
+/// scheduler granted it and what it actually put on the wire. Rows are
+/// updated in place every fleet round (plain integer adds — the serve
+/// steady state is allocation-free).
+#[derive(Clone, Debug, Default)]
+pub struct JobBits {
+    /// Fleet-assigned job id.
+    pub job: u64,
+    /// The job's submitted name.
+    pub name: String,
+    /// Engine rounds the scheduler granted this job.
+    pub rounds_served: u64,
+    /// Measured uplink payload bits across all served rounds (all the
+    /// job's workers).
+    pub payload_bits: u64,
+    /// Measured side-information bits across all served rounds.
+    pub side_bits: u64,
+}
+
+/// Aggregate accounting of a serve fleet: the global budget, how much of
+/// it was spent, and one [`JobBits`] row per submitted job (parallel to
+/// the fleet's slot order; rows persist after a job finishes or is
+/// cancelled).
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    /// The arbitrated global budget (payload bits per fleet round).
+    pub budget_bits_per_round: usize,
+    /// Fleet rounds executed (scheduler passes, not job rounds).
+    pub fleet_rounds: u64,
+    /// Total measured payload bits across all jobs and rounds.
+    pub spent_payload_bits: u64,
+    /// Per-job accounting rows.
+    pub jobs: Vec<JobBits>,
+}
+
+impl FleetMetrics {
+    /// Total engine rounds served across all jobs.
+    pub fn served_job_rounds(&self) -> u64 {
+        self.jobs.iter().map(|j| j.rounds_served).sum()
+    }
+
+    /// Fraction of the cumulative budget actually spent (measured payload
+    /// over `budget × fleet_rounds`); 0 when no round has run. Under
+    /// deficit-round-robin this is also the scheduler's work-conservation
+    /// proxy.
+    pub fn utilization(&self) -> f32 {
+        let offered = self.budget_bits_per_round as u64 * self.fleet_rounds;
+        if offered == 0 {
+            return 0.0;
+        }
+        self.spent_payload_bits as f32 / offered as f32
+    }
+
+    /// Per-job CSV in the [`FLEET_CSV_HEADER`] schema.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(FLEET_CSV_HEADER);
+        for j in &self.jobs {
+            let per_round =
+                if j.rounds_served == 0 { 0.0 } else { j.payload_bits as f64 / j.rounds_served as f64 };
+            s.push_str(&format!(
+                "{},{},{},{},{},{per_round}\n",
+                j.job, j.name, j.rounds_served, j.payload_bits, j.side_bits
+            ));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_csv_and_utilization() {
+        let m = FleetMetrics {
+            budget_bits_per_round: 100,
+            fleet_rounds: 4,
+            spent_payload_bits: 300,
+            jobs: vec![
+                JobBits { job: 0, name: "a".into(), rounds_served: 3, payload_bits: 240, side_bits: 12 },
+                JobBits { job: 1, name: "b".into(), rounds_served: 2, payload_bits: 60, side_bits: 4 },
+            ],
+        };
+        assert_eq!(m.served_job_rounds(), 5);
+        assert!((m.utilization() - 0.75).abs() < 1e-6);
+        let csv = m.to_csv();
+        assert!(csv.starts_with(FLEET_CSV_HEADER));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("0,a,3,240,12,80"));
+        // No rounds offered yet: utilization is defined (0), not NaN.
+        assert_eq!(FleetMetrics::default().utilization(), 0.0);
+    }
 
     #[test]
     fn csv_and_rate() {

@@ -100,14 +100,23 @@ const DROPPED: u64 = u64::MAX;
 /// `InvalidData`, not as a 2^60-byte allocation aborting the process.
 const MAX_FRAME_LEN: u64 = 1 << 30;
 
-fn checked_len(raw: u64, what: &str) -> io::Result<usize> {
-    if raw > MAX_FRAME_LEN {
+/// Guard a deserialized length field against a caller-chosen cap,
+/// surfacing overruns as `InvalidData`. Shared hardening for every
+/// length-prefixed on-disk format in the crate — the trace frames here
+/// and the job snapshots of [`crate::serve::checkpoint`]: a flipped bit
+/// in a length field must become an error, never a giant allocation.
+pub fn checked_len_capped(raw: u64, what: &str, cap: u64) -> io::Result<usize> {
+    if raw > cap {
         return Err(io::Error::new(
             io::ErrorKind::InvalidData,
-            format!("corrupt trace: {what} length {raw} exceeds the {MAX_FRAME_LEN} cap"),
+            format!("corrupt input: {what} length {raw} exceeds the {cap} cap"),
         ));
     }
     Ok(raw as usize)
+}
+
+fn checked_len(raw: u64, what: &str) -> io::Result<usize> {
+    checked_len_capped(raw, what, MAX_FRAME_LEN)
 }
 
 /// One parsed trace record.
@@ -203,19 +212,23 @@ pub fn read_trace_frame(r: &mut impl Read) -> io::Result<Option<TraceFrame>> {
     }
 }
 
-fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+/// Read one little-endian `u64` (shared by the trace and checkpoint
+/// readers).
+pub fn read_u64(r: &mut impl Read) -> io::Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+/// Read one little-endian `u32`.
+pub fn read_u32(r: &mut impl Read) -> io::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_f32(r: &mut impl Read) -> io::Result<f32> {
+/// Read one little-endian `f32`.
+pub fn read_f32(r: &mut impl Read) -> io::Result<f32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(f32::from_le_bytes(b))

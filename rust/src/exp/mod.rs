@@ -14,5 +14,6 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod net;
+pub mod serve;
 pub mod table1;
 pub mod transformer;

@@ -1,0 +1,315 @@
+//! `repro serve` — the serving-layer load driver: **jobs × budget ×
+//! scheduler-policy** sweeps over a heterogeneous tenant mix, plus a
+//! lifecycle drill that pauses, resumes and cancels jobs mid-run.
+//!
+//! Each cell builds a mixed fleet (subspace / dithered / sparsified /
+//! fixed-rate tenants at budgets from 0.25 to 4 bits/dim, single- and
+//! multi-worker), arbitrates it under a global bits-per-round budget set
+//! as a fraction of the aggregate demand, runs it to completion and
+//! reports per-job convergence plus aggregate throughput. The grid is
+//! printed as a table and saved to `BENCH_serve.json` (same convention
+//! as `BENCH_transport.json`) so serving regressions diff mechanically
+//! across PRs.
+//!
+//! ```text
+//! repro serve [--quick] [jobs=8] [n=64] [rounds=150] [seed=7] [policy=drr|adaptive|both]
+//! ```
+
+use std::time::Instant;
+
+use crate::quant::budget_bits;
+use crate::quant::registry::CompressorSpec;
+use crate::serve::{JobServer, JobSpec, Policy};
+
+/// One row of the tenant-mix template the sweep cycles through:
+/// `(scheme, R, workers, error-feedback)`.
+const MIX: [(&str, f32, usize, bool); 8] = [
+    ("ndsc-dith", 1.0, 1, false),
+    ("sd", 0.5, 1, false),
+    ("topk1b", 2.0, 1, false),
+    ("qsgd", 4.0, 2, false),
+    ("ndsc", 1.0, 1, true),
+    ("randk1b", 0.25, 1, false),
+    ("dsc-dith", 1.0, 2, false),
+    ("vqsgd", 0.5, 1, false),
+];
+
+/// The heterogeneous job mix the sweep (and `bench_serve`) submits:
+/// `count` specs cycled from the eight-row tenant template above
+/// (subspace / dithered / sparsified / fixed-rate schemes, budgets from
+/// 0.25 to 4 bits/dim, single- and multi-worker, with one DEF-feedback
+/// tenant), seeded `base_seed + index`.
+pub fn job_mix(count: usize, n: usize, rounds: usize, base_seed: u64) -> Vec<JobSpec> {
+    (0..count)
+        .map(|i| {
+            let (scheme, r, workers, def) = MIX[i % MIX.len()];
+            let mut s = JobSpec::new(
+                format!("job{i}-{scheme}"),
+                CompressorSpec::parse(scheme).expect("mix schemes are canonical"),
+                r,
+                n,
+                rounds,
+                base_seed + i as u64,
+            )
+            .with_workers(workers);
+            if def {
+                s = s.with_def_feedback();
+            }
+            s
+        })
+        .collect()
+}
+
+/// Aggregate per-round demand of a spec list at their requested budgets.
+fn demand_bits(specs: &[JobSpec]) -> usize {
+    specs.iter().map(|s| s.workers * budget_bits(s.n, s.r)).sum()
+}
+
+struct ServeCell {
+    jobs: usize,
+    policy: Policy,
+    budget_frac: f32,
+    budget_bits: usize,
+    admitted: usize,
+    rejected: usize,
+    fleet_rounds: usize,
+    served_job_rounds: u64,
+    rounds_per_sec: f64,
+    utilization: f32,
+    mean_final_value: f32,
+}
+
+fn run_cell(jobs: usize, n: usize, rounds: usize, seed: u64, policy: Policy, frac: f32) -> ServeCell {
+    let specs = job_mix(jobs, n, rounds, seed);
+    let budget = ((demand_bits(&specs) as f32 * frac) as usize).max(1);
+    let mut srv = JobServer::new(budget, policy);
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    for spec in specs {
+        match srv.submit(spec) {
+            Ok(_) => admitted += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    // Under a tight budget a job is served every few fleet rounds, so
+    // completion needs a comfortable multiple of the per-job horizon.
+    let cap = rounds * (jobs.max(1)) * 8;
+    let t0 = Instant::now();
+    let fleet_rounds = srv.run(cap);
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let m = srv.metrics();
+    let finals: Vec<f32> = srv
+        .job_ids()
+        .filter_map(|id| srv.job(id))
+        .filter(|j| j.is_complete())
+        .map(|j| j.trace().final_value())
+        .collect();
+    let mean_final_value = if finals.is_empty() {
+        f32::NAN
+    } else {
+        finals.iter().sum::<f32>() / finals.len() as f32
+    };
+    ServeCell {
+        jobs,
+        policy,
+        budget_frac: frac,
+        budget_bits: budget,
+        admitted,
+        rejected,
+        fleet_rounds,
+        served_job_rounds: m.served_job_rounds(),
+        rounds_per_sec: m.served_job_rounds() as f64 / secs,
+        utilization: m.utilization(),
+        mean_final_value,
+    }
+}
+
+fn cells_to_json(cells: &[ServeCell]) -> String {
+    let mut s = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        // JSON has no NaN literal: a cell with no finished job (e.g. all
+        // tenants rejected under a starvation budget) reports `null`.
+        let mean_final = if c.mean_final_value.is_finite() {
+            c.mean_final_value.to_string()
+        } else {
+            "null".to_string()
+        };
+        s.push_str(&format!(
+            "  {{\"source\": \"repro-serve\", \"jobs\": {}, \"policy\": \"{}\", \
+             \"budget_frac\": {}, \"budget_bits\": {}, \
+             \"admitted\": {}, \"rejected\": {}, \"fleet_rounds\": {}, \
+             \"served_job_rounds\": {}, \"rounds_per_sec\": {}, \"utilization\": {}, \
+             \"mean_final_value\": {mean_final}}}{}\n",
+            c.jobs,
+            c.policy,
+            c.budget_frac,
+            c.budget_bits,
+            c.admitted,
+            c.rejected,
+            c.fleet_rounds,
+            c.served_job_rounds,
+            c.rounds_per_sec,
+            c.utilization,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+fn usage_and_exit() -> ! {
+    eprintln!(
+        "usage: repro serve [--quick] [jobs=8] [n=64] [rounds=150] [seed=7] \
+         [policy=drr|adaptive|both]"
+    );
+    std::process::exit(2);
+}
+
+/// The lifecycle drill: pause, resume and cancel tenants mid-run on a
+/// live fleet, proving the serving API under churn. Prints one summary
+/// line per job.
+fn lifecycle_drill(n: usize, rounds: usize, seed: u64) {
+    let specs = job_mix(4, n, rounds, seed ^ 0xD411);
+    let budget = demand_bits(&specs);
+    let mut srv = JobServer::new(budget, Policy::Drr);
+    let ids: Vec<_> = specs.into_iter().map(|s| srv.submit(s).expect("ample budget")).collect();
+    let third = rounds / 3;
+    for _ in 0..third {
+        srv.run_round();
+    }
+    srv.pause(ids[0]).expect("pause running job");
+    let paused_at = srv.job(ids[0]).map(|j| j.rounds_done()).unwrap_or(0);
+    for _ in 0..third {
+        srv.run_round();
+    }
+    srv.resume(ids[0]).expect("resume paused job");
+    srv.cancel(ids[3]).expect("cancel running job");
+    srv.run(rounds * 16);
+    println!("--- lifecycle drill (4 jobs, pause/resume/cancel mid-run) ---");
+    for &id in &ids {
+        let job = srv.job(id).expect("job stays registered");
+        println!(
+            "  job {id} [{}] {:>10}: {:>4} rounds, final value {:.6}",
+            job.spec().name,
+            srv.state(id).expect("state known").to_string(),
+            job.rounds_done(),
+            job.trace().final_value(),
+        );
+    }
+    println!(
+        "  (job {} held at round {paused_at} while paused; cancelled job {} kept its partial trace)",
+        ids[0], ids[3]
+    );
+}
+
+/// Run the sweep. `args` accepts `jobs=`, `n=`, `rounds=`, `seed=` and
+/// `policy=` overrides; anything else prints usage and exits 2.
+pub fn run(quick: bool, args: &[String]) {
+    let mut jobs = 8usize;
+    let mut n = 64usize;
+    let mut rounds = if quick { 40 } else { 150 };
+    let mut seed = 7u64;
+    let mut policies: Vec<Policy> = vec![Policy::Drr, Policy::DrrAdaptive];
+    // Malformed values abort just like unknown keys do: silently keeping
+    // a default would run the whole sweep on the wrong parameters.
+    fn bail(key: &str, v: &str) -> ! {
+        eprintln!("serve: bad value '{v}' for {key}=");
+        usage_and_exit()
+    }
+    for a in args {
+        match a.split_once('=') {
+            Some(("jobs", v)) => jobs = v.parse().unwrap_or_else(|_| bail("jobs", v)),
+            Some(("n", v)) => n = v.parse().unwrap_or_else(|_| bail("n", v)),
+            Some(("rounds", v)) => rounds = v.parse().unwrap_or_else(|_| bail("rounds", v)),
+            Some(("seed", v)) => seed = v.parse().unwrap_or_else(|_| bail("seed", v)),
+            Some(("policy", v)) => {
+                policies = match v {
+                    "both" => vec![Policy::Drr, Policy::DrrAdaptive],
+                    p => vec![Policy::parse(p).unwrap_or_else(|| bail("policy", v))],
+                }
+            }
+            _ => {
+                eprintln!("serve: expected jobs=|n=|rounds=|seed=|policy=, got '{a}'");
+                usage_and_exit()
+            }
+        }
+    }
+    if jobs == 0 || n == 0 || rounds == 0 {
+        eprintln!("serve: jobs, n and rounds must be positive");
+        usage_and_exit()
+    }
+    let job_counts: Vec<usize> = if jobs <= 2 { vec![jobs] } else { vec![2, jobs / 2, jobs] };
+    let fracs = [0.25f32, 0.5, 1.0];
+    println!("=== repro serve: jobs x budget x policy sweep (n={n}, rounds={rounds}) ===");
+    println!(
+        "{:<10} {:>5} {:>8} {:>12} {:>9} {:>8} {:>14} {:>12} {:>8} {:>12}",
+        "policy", "jobs", "budget%", "budget-bits", "admitted", "fleet-T", "job-rounds", "rounds/s", "util", "mean-f(x_T)"
+    );
+    let mut cells = Vec::new();
+    for &policy in &policies {
+        for &jc in &job_counts {
+            for &frac in &fracs {
+                let cell = run_cell(jc, n, rounds, seed, policy, frac);
+                println!(
+                    "{:<10} {:>5} {:>8} {:>12} {:>9} {:>8} {:>14} {:>12.0} {:>8.3} {:>12.5}",
+                    cell.policy.to_string(),
+                    cell.jobs,
+                    format!("{:.0}%", cell.budget_frac * 100.0),
+                    cell.budget_bits,
+                    format!("{}/{}", cell.admitted, cell.admitted + cell.rejected),
+                    cell.fleet_rounds,
+                    cell.served_job_rounds,
+                    cell.rounds_per_sec,
+                    cell.utilization,
+                    cell.mean_final_value
+                );
+                cells.push(cell);
+            }
+        }
+    }
+    lifecycle_drill(n, rounds, seed);
+    let json = cells_to_json(&cells);
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json ({} cells)", cells.len()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_is_heterogeneous_and_buildable() {
+        let specs = job_mix(8, 32, 10, 3);
+        assert_eq!(specs.len(), 8);
+        let schemes: std::collections::BTreeSet<String> =
+            specs.iter().map(|s| s.scheme.name()).collect();
+        assert!(schemes.len() >= 6, "mix must span many schemes, got {schemes:?}");
+        assert!(specs.iter().any(|s| s.workers > 1), "mix must include multi-worker jobs");
+        assert!(demand_bits(&specs) > 0);
+    }
+
+    #[test]
+    fn one_cell_runs_and_serializes() {
+        let cell = run_cell(4, 16, 8, 3, Policy::DrrAdaptive, 0.5);
+        assert!(cell.admitted >= 1);
+        assert!(cell.served_job_rounds > 0);
+        assert!(cell.rounds_per_sec > 0.0);
+        let json = cells_to_json(&[cell]);
+        assert!(json.contains("\"rounds_per_sec\""));
+        assert!(json.contains("\"policy\": \"adaptive\""));
+        assert!(json.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn empty_cells_serialize_null_not_nan() {
+        // A starvation budget rejects every tenant: the JSON must stay
+        // parseable (`null`), never emit a bare `NaN` token.
+        let cell = run_cell(2, 64, 8, 3, Policy::Drr, 0.05);
+        assert_eq!(cell.admitted, 0);
+        let json = cells_to_json(&[cell]);
+        assert!(json.contains("\"mean_final_value\": null"), "got: {json}");
+        assert!(!json.contains("NaN"));
+    }
+}

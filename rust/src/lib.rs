@@ -29,6 +29,11 @@
 //!   traces with bit-exact replay), byte-accounted and budget-enforced
 //!   per worker (`⌊n·R_i⌋`), with full / k-of-m / deadline participation —
 //!   the multi-worker consensus loop of §4.3.
+//! * **Serving layer** ([`serve`]) — N concurrent jobs (any engine
+//!   composition) multiplexed over one **global** bits-per-round budget:
+//!   job registry with lifecycle, deficit-round-robin arbitration with
+//!   effective-`R_i` degradation, and versioned binary checkpoints that
+//!   resume a suspended job bit-for-bit.
 //! * **PJRT runtime** ([`runtime`]) — loads AOT-compiled JAX/Pallas HLO
 //!   artifacts (built once by `python/compile/aot.py`) and executes them
 //!   from the Rust hot path; Python is never on the request path.
@@ -43,4 +48,5 @@ pub mod linalg;
 pub mod opt;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;

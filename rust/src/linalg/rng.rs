@@ -55,6 +55,19 @@ impl Rng {
         Rng { s, gauss_spare: None }
     }
 
+    /// Full generator state — the four xoshiro words plus the cached
+    /// Box–Muller spare — for checkpointing ([`crate::serve::checkpoint`]).
+    /// [`Rng::from_state`] rebuilds a generator that continues the exact
+    /// output stream, bit for bit.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from [`Rng::state`] output.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Rng { s, gauss_spare }
+    }
+
     /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -307,6 +320,21 @@ mod tests {
         // Cauchy: P(|X| > 10) = 2/pi * atan(1/10) ~ 0.0635.
         let frac = big as f64 / n as f64;
         assert!((frac - 0.0635).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn state_roundtrip_is_bit_exact() {
+        let mut a = Rng::seed_from(5);
+        // Populate the Box–Muller spare so the snapshot carries it.
+        a.gaussian();
+        let (s, spare) = a.state();
+        assert!(spare.is_some(), "odd gaussian draw must leave a spare");
+        let mut b = Rng::from_state(s, spare);
+        for _ in 0..16 {
+            assert_eq!(a.gaussian().to_bits(), b.gaussian().to_bits());
+            assert_eq!(a.next_u64(), b.next_u64());
+            assert_eq!(a.uniform_f32().to_bits(), b.uniform_f32().to_bits());
+        }
     }
 
     #[test]

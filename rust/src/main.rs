@@ -8,7 +8,9 @@
 //!
 //! Highlights: `figures` regenerates every table/figure, `schemes`
 //! prints the registry zoo at one `(n, R)`, `net` sweeps SimNet
-//! topology × budget × drop, `train` runs the distributed coordinator
+//! topology × budget × drop, `serve` sweeps the multi-job serving layer
+//! (jobs × global budget × scheduler policy, with a mid-run
+//! pause/resume/cancel drill), `train` runs the distributed coordinator
 //! on a planted problem.
 //!
 //! `train` keys: n, workers, r (scalar or per-worker `r=0.5,1,2,4`),
@@ -43,6 +45,7 @@ const COMMANDS: &str = "  figures                 every table/figure below in se
   ablation-ef ablation-lambda ablation-dqgd
   schemes                 print the registry zoo at (n, R)
   net                     SimNet topology x budget x drop sweep
+  serve                   multi-job serving sweep (jobs x budget x policy)
   train                   distributed run on a planted problem
   train-transformer       federated transformer (needs artifacts)
   help                    this text";
@@ -187,6 +190,9 @@ fn main() {
         }
         "net" => {
             exp::net::run(quick, &args);
+        }
+        "serve" => {
+            exp::serve::run(quick, &args);
         }
         "figures" => {
             exp::table1::run(quick);

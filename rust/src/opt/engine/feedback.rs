@@ -25,6 +25,21 @@ pub trait FeedbackMemory {
     /// Observe the decoded estimate `q` of the encoded vector `u`;
     /// update the memory. Only called when the frame was delivered.
     fn post_decode(&mut self, i: usize, q: &[f32], u: &[f32]);
+
+    /// Append this memory's checkpointable state to `out` as a flat f32
+    /// stream ([`crate::serve::checkpoint`] serializes it). Stateless
+    /// memories append nothing.
+    fn save_state(&self, out: &mut Vec<f32>) {
+        let _ = out;
+    }
+
+    /// Restore from exactly the floats [`FeedbackMemory::save_state`]
+    /// wrote. Returns `false` on a shape mismatch (corrupt snapshot) —
+    /// the memory is left unspecified in that case and the caller must
+    /// discard it.
+    fn restore_state(&mut self, data: &[f32]) -> bool {
+        data.is_empty()
+    }
 }
 
 /// No memory: plain (dithered) quantized descent.
@@ -80,6 +95,23 @@ impl FeedbackMemory for DefFeedback {
             *ei = qi - ui;
         }
     }
+
+    fn save_state(&self, out: &mut Vec<f32>) {
+        for e in &self.errs {
+            out.extend_from_slice(e);
+        }
+    }
+
+    fn restore_state(&mut self, data: &[f32]) -> bool {
+        let per = self.errs.first().map(|e| e.len()).unwrap_or(0);
+        if data.len() != per * self.errs.len() {
+            return false;
+        }
+        for (i, e) in self.errs.iter_mut().enumerate() {
+            e.copy_from_slice(&data[i * per..(i + 1) * per]);
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -114,5 +146,25 @@ mod tests {
         // Next shift uses the updated error: z = x + 2·e.
         f.shift_point(1, &x, 2.0, &mut z);
         assert_eq!(z, vec![0.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn def_state_roundtrips_and_rejects_bad_shapes() {
+        let mut f = DefFeedback::new(2, 3);
+        f.post_decode(0, &[1.0, 2.0, 3.0], &[0.5, 0.5, 0.5]);
+        f.post_decode(1, &[-1.0, 0.0, 1.0], &[0.0, 0.0, 0.0]);
+        let mut saved = Vec::new();
+        f.save_state(&mut saved);
+        assert_eq!(saved.len(), 6);
+        let mut g = DefFeedback::new(2, 3);
+        assert!(g.restore_state(&saved));
+        assert_eq!(g.error(0), f.error(0));
+        assert_eq!(g.error(1), f.error(1));
+        assert!(!g.restore_state(&saved[..5]), "short state must be rejected");
+        // The stateless memory accepts only the empty stream.
+        let mut none = NoFeedback;
+        none.save_state(&mut Vec::new());
+        assert!(none.restore_state(&[]));
+        assert!(!none.restore_state(&[1.0]));
     }
 }

@@ -36,6 +36,21 @@
 //! [`RngPolicy`]) — so traces are seed-deterministic and bit-stable
 //! across refactors. Steady-state rounds are allocation-free
 //! (`rust/tests/test_engine.rs` proves it with a counting allocator).
+//!
+//! **Re-entrancy.** A run is not a black box: [`Engine::start`] returns
+//! an [`EngineRun`] that advances **one round per `step` call** and can
+//! be suspended indefinitely between rounds — [`Engine::run`] is just
+//! `start` + `step` to exhaustion + `finish`, bit-identical by
+//! construction. One level lower, [`RunState`] owns every between-round
+//! mutable buffer (iterate, Polyak average, scratch, forked worker RNGs,
+//! trace) while [`RoundCtx`] borrows the pluggable components for the
+//! duration of a single round. This split is what the multi-job serving
+//! layer ([`crate::serve`]) is built on: a job owns its components and a
+//! `RunState`, assembles a `RoundCtx` on the stack whenever the
+//! scheduler grants it a round, and checkpoints by serializing the
+//! `RunState` (plus RNG and feedback state) — rounds are
+//! interleaving-independent because all cross-round state lives in the
+//! job.
 
 pub mod driver;
 pub mod feedback;
@@ -241,8 +256,19 @@ impl<'a> Engine<'a> {
     /// Run the spec on the inline driver: every round executes in the
     /// calling thread, deterministically. See the module docs for the
     /// RNG-consumption contract; after warm-up, rounds are
-    /// allocation-free.
-    pub fn run(mut self, x0: &[f32], x_star: Option<&[f32]>, rng: &mut Rng) -> Trace {
+    /// allocation-free. Equivalent to [`Engine::start`] + [`EngineRun::step`]
+    /// to exhaustion + [`EngineRun::finish`].
+    pub fn run(self, x0: &[f32], x_star: Option<&[f32]>, rng: &mut Rng) -> Trace {
+        let mut run = self.start(x0, x_star, rng);
+        while run.step(rng) {}
+        run.finish()
+    }
+
+    /// Validate the spec shapes and set up a re-entrant [`EngineRun`]:
+    /// the buffers are allocated, the per-worker RNG streams forked (this
+    /// consumes `rng` exactly as the first moments of [`Engine::run`]
+    /// do), and no round has executed yet.
+    pub fn start(self, x0: &[f32], x_star: Option<&[f32]>, rng: &mut Rng) -> EngineRun<'a> {
         let n = self.problem.dim();
         let m = self.oracles.len();
         assert!(m >= 1, "engine spec has no worker oracle");
@@ -256,135 +282,357 @@ impl<'a> Engine<'a> {
                 assert_eq!(c.n(), n, "codec {i} dimension mismatch");
             }
         }
-        let averaging = self.output == OutputMode::PolyakAverage;
+        let st = RunState::new(
+            x0,
+            m,
+            self.rounds,
+            self.domain,
+            self.rng_policy,
+            self.output,
+            self.codecs.get(0),
+            rng,
+        );
+        EngineRun { x_star: x_star.map(|v| v.to_vec()), spec: self, st }
+    }
+}
 
+// ---------------------------------------------------------------------------
+// The re-entrant round machinery: RunState × RoundCtx.
+// ---------------------------------------------------------------------------
+
+/// The engine's view of "worker `i`'s oracle" for one round. The spec's
+/// `Vec<Box<dyn Oracle>>` implements it; so does any structure that can
+/// produce a gradient per worker index without owning trait objects —
+/// the serving layer's jobs assemble one on the stack per round.
+pub trait OracleBank {
+    /// Number of workers in the bank.
+    fn workers(&self) -> usize;
+    /// Write worker `i`'s (sub)gradient estimate at `x` into `out`,
+    /// drawing any batch randomness from `rng`. The bank guarantees the
+    /// gradient dimension matches the run's (callers validate at setup:
+    /// [`Engine::start`] asserts per-oracle dims, and a serve job's
+    /// shards share one dimension by [`crate::opt::multi::ShardedProblem`]
+    /// construction).
+    fn query(&mut self, i: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]);
+}
+
+impl<'a> OracleBank for Vec<Box<dyn Oracle + 'a>> {
+    fn workers(&self) -> usize {
+        self.len()
+    }
+
+    fn query(&mut self, i: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) {
+        self[i].query(x, rng, out)
+    }
+}
+
+/// Borrowed view of the pluggable components for **one** round — built on
+/// the stack by whoever owns the components ([`EngineRun::step`], or a
+/// serving-layer job), handed to [`RunState::step`], and dropped when the
+/// round completes. Nothing in here carries state between rounds; all of
+/// that lives in [`RunState`].
+pub struct RoundCtx<'c> {
+    /// The objective the round reports values against.
+    pub problem: Problem<'c>,
+    /// Worker-side gradient access.
+    pub oracles: &'c mut (dyn OracleBank + 'c),
+    /// The uplink codec layout.
+    pub codecs: Codecs<'c>,
+    /// Step-size rule.
+    pub schedule: &'c (dyn StepSchedule + 'c),
+    /// Per-worker feedback memory.
+    pub feedback: &'c mut (dyn FeedbackMemory + 'c),
+    /// Projection domain.
+    pub domain: Domain,
+    /// Participant selection per round.
+    pub participation: Participation,
+    /// Lossy-uplink probability (see [`Engine::with_drop_prob`]).
+    pub drop_prob: f32,
+    /// Which RNG stream worker draws come from.
+    pub rng_policy: RngPolicy,
+    /// Total configured rounds (the run refuses to step past this).
+    pub rounds: usize,
+    /// Known minimizer for distance-to-optimum records.
+    pub x_star: Option<&'c [f32]>,
+}
+
+/// Every between-round mutable buffer of an engine run: the iterate, the
+/// Polyak average, per-round scratch, forked worker RNG streams, and the
+/// accumulated [`Trace`]. A `RunState` plus the job RNG plus the feedback
+/// memory is the **complete** resumable state of a run — which is exactly
+/// what [`crate::serve::checkpoint`] serializes.
+pub struct RunState {
+    pub(crate) t: usize,
+    pub(crate) x: Vec<f32>,
+    pub(crate) avg: Vec<f32>,
+    consensus: Vec<f32>,
+    g: Vec<f32>,
+    z: Vec<f32>,
+    q: Vec<f32>,
+    participants: Vec<usize>,
+    pub(crate) worker_rngs: Vec<Rng>,
+    ws: Workspace,
+    msg: Compressed,
+    pub(crate) trace: Trace,
+    averaging: bool,
+    finalized: bool,
+}
+
+impl RunState {
+    /// Allocate the run buffers and fork the per-worker RNG streams (in
+    /// worker-id order, consuming `rng` — the coordinator's convention).
+    /// `codec0` sizes the shared workspace; one workspace + message shell
+    /// + decode buffer serve all workers (every codec of a round has the
+    /// same dimension), so steady-state rounds allocate nothing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        x0: &[f32],
+        workers: usize,
+        rounds: usize,
+        domain: Domain,
+        rng_policy: RngPolicy,
+        output: OutputMode,
+        codec0: Option<&dyn Compressor>,
+        rng: &mut Rng,
+    ) -> RunState {
+        let n = x0.len();
+        let averaging = output == OutputMode::PolyakAverage;
         let mut x = x0.to_vec();
-        self.domain.project(&mut x);
-        let mut avg = vec![0.0f32; if averaging { n } else { 0 }];
-        let mut consensus = vec![0.0f32; n];
-        let mut g = vec![0.0f32; n];
-        let mut z = vec![0.0f32; n];
-        let mut q = vec![0.0f32; n];
-        let mut participants: Vec<usize> = Vec::with_capacity(m);
-        // Forked per-worker streams are derived once, up front, in worker
-        // id order (the coordinator's convention).
-        let mut worker_rngs: Vec<Rng> = match self.rng_policy {
-            RngPolicy::ForkPerWorker => (0..m).map(|i| rng.fork(i as u64)).collect(),
+        domain.project(&mut x);
+        let worker_rngs: Vec<Rng> = match rng_policy {
+            RngPolicy::ForkPerWorker => (0..workers).map(|i| rng.fork(i as u64)).collect(),
             RngPolicy::Shared => Vec::new(),
         };
-        // One workspace + message shell + decode buffer serve all m
-        // workers (every codec of a round has the same dimension), so
-        // steady-state rounds allocate nothing.
-        let mut ws = match self.codecs.get(0) {
+        let ws = match codec0 {
             Some(c) => Workspace::for_compressor(c),
             None => Workspace::new(),
         };
-        let mut msg = Compressed::empty(n);
-
         let mut trace = Trace::default();
-        trace.records.reserve(self.rounds + 1);
-        for t in 0..self.rounds {
-            let step = self.schedule.step(t);
-            if !averaging {
-                trace.records.push(IterRecord {
-                    value: self.problem.value(&x),
-                    dist_to_opt: x_star.map(|xs| dist2(&x, xs)).unwrap_or(f32::NAN),
-                    payload_bits: 0,
-                    participants: 0,
-                });
-            }
-            // Participant set. Full participation draws no randomness;
-            // KofM samples a uniform k-subset from the shared RNG and
-            // processes it in worker-id order. Deadline degrades to Full
-            // inline — there is no network here; the coordinator driver
-            // is where deadlines bite.
-            match self.participation {
-                Participation::KofM { k } => {
-                    rng.sample_indices_into(m, k.min(m), &mut participants);
-                    participants.sort_unstable();
-                }
-                Participation::Full | Participation::Deadline { .. } => {
-                    participants.clear();
-                    participants.extend(0..m);
-                }
-            }
-            let p = participants.len().max(1);
-            consensus.fill(0.0);
-            let mut round_bits = 0usize;
-            let mut delivered = 0usize;
-            for &i in &participants {
-                let shifted = self.feedback.shift_point(i, &x, step, &mut z);
-                let wrng: &mut Rng = match self.rng_policy {
-                    RngPolicy::Shared => &mut *rng,
-                    RngPolicy::ForkPerWorker => &mut worker_rngs[i],
-                };
-                let point: &[f32] = if shifted { &z } else { &x };
-                self.oracles[i].query(point, wrng, &mut g);
-                self.feedback.pre_encode(i, &mut g);
-                let codec = self.codecs.get(i);
-                if let Some(c) = codec {
-                    c.compress_into(&g, wrng, &mut ws, &mut msg);
-                    round_bits += msg.payload_bits;
-                    trace.total_payload_bits += msg.payload_bits;
-                    trace.total_side_bits += msg.side_bits;
-                }
-                // The frame may never reach the server — bits are charged
-                // on send, not delivery. One verdict for both the
-                // quantized and the unquantized (lossless-codec) path.
-                let arrived = self.drop_prob <= 0.0 || wrng.uniform_f32() >= self.drop_prob;
-                if arrived {
-                    let estimate: &[f32] = match codec {
-                        Some(c) => {
-                            c.decompress_into(&msg, &mut ws, &mut q);
-                            &q
-                        }
-                        None => &g, // lossless: q ≡ u, zero payload
-                    };
-                    self.feedback.post_decode(i, estimate, &g);
-                    delivered += 1;
-                    for (ci, &ei) in consensus.iter_mut().zip(estimate) {
-                        *ci += ei / p as f32;
-                    }
-                }
-            }
-            // Server: step on the consensus mean, then project. A round
-            // with nothing delivered takes no step (and no projection —
-            // re-projecting can perturb a boundary iterate by an ulp).
-            if delivered > 0 {
-                for (xi, &ci) in x.iter_mut().zip(&consensus) {
-                    *xi -= step * ci;
-                }
-                self.domain.project(&mut x);
-            }
-            if averaging {
-                let w = 1.0 / (t + 1) as f32;
-                for (ai, &xi) in avg.iter_mut().zip(&x) {
-                    *ai += w * (xi - *ai);
-                }
-                trace.records.push(IterRecord {
-                    value: self.problem.value(&avg),
-                    dist_to_opt: x_star.map(|xs| dist2(&avg, xs)).unwrap_or(f32::NAN),
-                    payload_bits: round_bits,
-                    participants: delivered,
-                });
-            } else if let Some(r) = trace.records.last_mut() {
-                r.payload_bits = round_bits;
-                r.participants = delivered;
-            }
-            if let Some(probe) = self.probe.as_mut() {
-                probe(t);
-            }
+        trace.records.reserve(rounds + 1);
+        RunState {
+            t: 0,
+            x,
+            avg: vec![0.0f32; if averaging { n } else { 0 }],
+            consensus: vec![0.0f32; n],
+            g: vec![0.0f32; n],
+            z: vec![0.0f32; n],
+            q: vec![0.0f32; n],
+            participants: Vec::with_capacity(workers),
+            worker_rngs,
+            ws,
+            msg: Compressed::empty(n),
+            trace,
+            averaging,
+            finalized: false,
         }
-        if let OutputMode::LastIterate { trailing: true } = self.output {
-            trace.records.push(IterRecord {
-                value: self.problem.value(&x),
-                dist_to_opt: x_star.map(|xs| dist2(&x, xs)).unwrap_or(f32::NAN),
+    }
+
+    /// Rounds executed so far.
+    pub fn round(&self) -> usize {
+        self.t
+    }
+
+    /// The trace accumulated so far (`final_x` is unset until
+    /// [`RunState::finalize`]).
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// The current iterate `x_t`.
+    pub fn iterate(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Whether [`RunState::finalize`] has run.
+    pub fn is_finalized(&self) -> bool {
+        self.finalized
+    }
+
+    /// Execute round `t` (0-based) and advance. Returns `false` — without
+    /// touching any state or RNG — once `ctx.rounds` rounds have executed
+    /// or the run was finalized. The RNG-consumption order is the module
+    /// docs' determinism contract.
+    pub fn step(&mut self, ctx: &mut RoundCtx<'_>, rng: &mut Rng) -> bool {
+        if self.t >= ctx.rounds || self.finalized {
+            return false;
+        }
+        let t = self.t;
+        let m = ctx.oracles.workers();
+        let step = ctx.schedule.step(t);
+        if !self.averaging {
+            self.trace.records.push(IterRecord {
+                value: ctx.problem.value(&self.x),
+                dist_to_opt: ctx.x_star.map(|xs| dist2(&self.x, xs)).unwrap_or(f32::NAN),
                 payload_bits: 0,
                 participants: 0,
             });
         }
-        trace.final_x = if averaging { avg } else { x };
-        trace
+        // Participant set. Full participation draws no randomness;
+        // KofM samples a uniform k-subset from the shared RNG and
+        // processes it in worker-id order. Deadline degrades to Full
+        // inline — there is no network here; the coordinator driver
+        // is where deadlines bite.
+        match ctx.participation {
+            Participation::KofM { k } => {
+                rng.sample_indices_into(m, k.min(m), &mut self.participants);
+                self.participants.sort_unstable();
+            }
+            Participation::Full | Participation::Deadline { .. } => {
+                self.participants.clear();
+                self.participants.extend(0..m);
+            }
+        }
+        let p = self.participants.len().max(1);
+        self.consensus.fill(0.0);
+        let mut round_bits = 0usize;
+        let mut delivered = 0usize;
+        for &i in &self.participants {
+            let shifted = ctx.feedback.shift_point(i, &self.x, step, &mut self.z);
+            let wrng: &mut Rng = match ctx.rng_policy {
+                RngPolicy::Shared => &mut *rng,
+                RngPolicy::ForkPerWorker => &mut self.worker_rngs[i],
+            };
+            let point: &[f32] = if shifted { &self.z } else { &self.x };
+            ctx.oracles.query(i, point, wrng, &mut self.g);
+            ctx.feedback.pre_encode(i, &mut self.g);
+            let codec = ctx.codecs.get(i);
+            if let Some(c) = codec {
+                c.compress_into(&self.g, wrng, &mut self.ws, &mut self.msg);
+                round_bits += self.msg.payload_bits;
+                self.trace.total_payload_bits += self.msg.payload_bits;
+                self.trace.total_side_bits += self.msg.side_bits;
+            }
+            // The frame may never reach the server — bits are charged
+            // on send, not delivery. One verdict for both the
+            // quantized and the unquantized (lossless-codec) path.
+            let arrived = ctx.drop_prob <= 0.0 || wrng.uniform_f32() >= ctx.drop_prob;
+            if arrived {
+                let estimate: &[f32] = match codec {
+                    Some(c) => {
+                        c.decompress_into(&self.msg, &mut self.ws, &mut self.q);
+                        &self.q
+                    }
+                    None => &self.g, // lossless: q ≡ u, zero payload
+                };
+                ctx.feedback.post_decode(i, estimate, &self.g);
+                delivered += 1;
+                for (ci, &ei) in self.consensus.iter_mut().zip(estimate) {
+                    *ci += ei / p as f32;
+                }
+            }
+        }
+        // Server: step on the consensus mean, then project. A round
+        // with nothing delivered takes no step (and no projection —
+        // re-projecting can perturb a boundary iterate by an ulp).
+        if delivered > 0 {
+            for (xi, &ci) in self.x.iter_mut().zip(&self.consensus) {
+                *xi -= step * ci;
+            }
+            ctx.domain.project(&mut self.x);
+        }
+        if self.averaging {
+            let w = 1.0 / (t + 1) as f32;
+            for (ai, &xi) in self.avg.iter_mut().zip(&self.x) {
+                *ai += w * (xi - *ai);
+            }
+            self.trace.records.push(IterRecord {
+                value: ctx.problem.value(&self.avg),
+                dist_to_opt: ctx.x_star.map(|xs| dist2(&self.avg, xs)).unwrap_or(f32::NAN),
+                payload_bits: round_bits,
+                participants: delivered,
+            });
+        } else if let Some(r) = self.trace.records.last_mut() {
+            r.payload_bits = round_bits;
+            r.participants = delivered;
+        }
+        self.t += 1;
+        true
+    }
+
+    /// Close the trace: push the trailing record (when the output mode
+    /// carries one) and set `final_x`. Idempotent — finalizing twice is a
+    /// no-op, and a finalized state refuses further [`RunState::step`]s.
+    pub fn finalize(&mut self, problem: Problem<'_>, output: OutputMode, x_star: Option<&[f32]>) {
+        if self.finalized {
+            return;
+        }
+        if let OutputMode::LastIterate { trailing: true } = output {
+            self.trace.records.push(IterRecord {
+                value: problem.value(&self.x),
+                dist_to_opt: x_star.map(|xs| dist2(&self.x, xs)).unwrap_or(f32::NAN),
+                payload_bits: 0,
+                participants: 0,
+            });
+        }
+        self.trace.final_x = if self.averaging { self.avg.clone() } else { self.x.clone() };
+        self.finalized = true;
+    }
+}
+
+/// A suspended-and-resumable engine run: the spec plus its [`RunState`].
+/// Produced by [`Engine::start`]; each [`EngineRun::step`] executes one
+/// round, so callers (drivers, the serving layer's harnesses, tests) can
+/// interleave rounds of many runs or park a run indefinitely.
+pub struct EngineRun<'a> {
+    spec: Engine<'a>,
+    st: RunState,
+    x_star: Option<Vec<f32>>,
+}
+
+impl<'a> EngineRun<'a> {
+    /// Execute the next round. Returns `false` (consuming no randomness)
+    /// once all configured rounds have run. The spec's probe fires after
+    /// each executed round, exactly as under [`Engine::run`].
+    pub fn step(&mut self, rng: &mut Rng) -> bool {
+        {
+            let mut ctx = RoundCtx {
+                problem: self.spec.problem,
+                oracles: &mut self.spec.oracles,
+                codecs: self.spec.codecs,
+                schedule: self.spec.schedule.as_ref(),
+                feedback: self.spec.feedback.as_mut(),
+                domain: self.spec.domain,
+                participation: self.spec.participation,
+                drop_prob: self.spec.drop_prob,
+                rng_policy: self.spec.rng_policy,
+                rounds: self.spec.rounds,
+                x_star: self.x_star.as_deref(),
+            };
+            if !self.st.step(&mut ctx, rng) {
+                return false;
+            }
+        }
+        if let Some(probe) = self.spec.probe.as_mut() {
+            probe(self.st.t - 1);
+        }
+        true
+    }
+
+    /// Rounds executed so far.
+    pub fn round(&self) -> usize {
+        self.st.round()
+    }
+
+    /// Whether every configured round has executed.
+    pub fn is_done(&self) -> bool {
+        self.st.t >= self.spec.rounds
+    }
+
+    /// The trace accumulated so far.
+    pub fn trace(&self) -> &Trace {
+        self.st.trace()
+    }
+
+    /// The current iterate.
+    pub fn iterate(&self) -> &[f32] {
+        self.st.iterate()
+    }
+
+    /// Finalize and return the trace (trailing record + `final_x`), as
+    /// [`Engine::run`] would have.
+    pub fn finish(mut self) -> Trace {
+        self.st.finalize(self.spec.problem, self.spec.output, self.x_star.as_deref());
+        std::mem::take(&mut self.st.trace)
     }
 }
 
@@ -492,6 +740,52 @@ mod tests {
             .run(&vec![0.5; 6], None, &mut rng);
         assert!(tr.records.iter().any(|r| r.participants == 0));
         assert!(tr.records.iter().any(|r| r.participants == 1));
+    }
+
+    #[test]
+    fn stepped_run_is_bit_identical_to_run_to_completion() {
+        // The re-entrancy contract: start + step-at-a-time + finish must
+        // reproduce Engine::run exactly — including when the run is
+        // parked between rounds (nothing here draws RNG while parked).
+        let (obj, xs) = planted_lsq(80, 16, 13);
+        let (l, mu) = obj.smoothness_strong_convexity();
+        let c_a = Ndsc::hadamard_dithered(16, 3.0, &mut Rng::seed_from(14));
+        let c_b = Ndsc::hadamard_dithered(16, 3.0, &mut Rng::seed_from(14));
+        let mk = |c| {
+            Engine::new(
+                Problem::Single(&obj),
+                Schedule::Constant(schedule::optimal_sc_step(l, mu)),
+                40,
+            )
+            .with_oracle(ExactGrad { obj: &obj })
+            .with_codecs(Codecs::Shared(c))
+            .with_feedback(feedback::DefFeedback::new(1, 16))
+        };
+        let mut rng_a = Rng::seed_from(15);
+        let whole = mk(&c_a).run(&vec![0.0; 16], Some(&xs), &mut rng_a);
+        let mut rng_b = Rng::seed_from(15);
+        let mut run = mk(&c_b).start(&vec![0.0; 16], Some(&xs), &mut rng_b);
+        let mut steps = 0;
+        while run.step(&mut rng_b) {
+            steps += 1;
+            assert_eq!(run.round(), steps);
+        }
+        assert!(run.is_done());
+        assert_eq!(steps, 40);
+        assert!(!run.step(&mut rng_b), "a done run must refuse further steps");
+        let stepped = run.finish();
+        assert_eq!(whole.records.len(), stepped.records.len());
+        for (a, b) in whole.records.iter().zip(&stepped.records) {
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+            assert_eq!(a.dist_to_opt.to_bits(), b.dist_to_opt.to_bits());
+            assert_eq!(a.payload_bits, b.payload_bits);
+        }
+        assert_eq!(
+            whole.final_x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            stepped.final_x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(whole.total_payload_bits, stepped.total_payload_bits);
+        assert_eq!(whole.total_side_bits, stepped.total_side_bits);
     }
 
     #[test]

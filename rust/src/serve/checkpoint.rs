@@ -1,0 +1,523 @@
+//! Versioned binary job snapshots: save a running job, restore it in a
+//! fresh process, continue the uninterrupted trace **bit for bit**.
+//!
+//! A snapshot carries two sections:
+//!
+//! | Section | Contents |
+//! |---|---|
+//! | spec    | name, scheme (canonical registry string), `R`, `n`, workers, problem, rounds, schedule, feedback kind, batch, drop-prob, domain, output mode, seed |
+//! | state   | round index `t`, iterate `x`, Polyak average, job RNG, per-worker RNG streams, feedback memory, accumulated trace + traffic totals |
+//!
+//! Static artifacts (dataset, frames/codecs, workspace) are **not**
+//! serialized: [`restore`] rebuilds them deterministically from the spec
+//! seed via [`crate::serve::job::Job::build`], then overlays the dynamic
+//! state. That keeps snapshots small (KBs, independent of dataset size)
+//! and makes the format a statement of exactly which state matters.
+//!
+//! Hardening follows [`crate::coordinator::protocol`]: little-endian
+//! length-prefixed fields, every length checked against a sanity cap
+//! ([`protocol::checked_len_capped`]) before allocation, truncation
+//! mapped to [`io::ErrorKind::InvalidData`] — a corrupt snapshot is an
+//! error, never a panic or a giant allocation
+//! (`rust/tests/test_serve.rs` fuzzes truncations and corruptions).
+
+use std::io::{self, Read};
+
+use crate::coordinator::protocol::{self, checked_len_capped};
+use crate::linalg::rng::Rng;
+use crate::opt::engine::schedule::Schedule;
+use crate::opt::engine::OutputMode;
+use crate::opt::projection::Domain;
+use crate::opt::{IterRecord, Trace};
+use crate::quant::registry::CompressorSpec;
+use crate::serve::job::{FeedbackKind, Job, JobSpec, ProblemSpec};
+
+/// Magic bytes opening every snapshot (version-tagged family).
+pub const CHECKPOINT_MAGIC: &[u8; 8] = b"KFCKPT01";
+/// Format version this build writes and accepts.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// Sanity caps: generous for every real configuration (transformer-scale
+/// `n`, thousands of workers, millions of rounds), low enough that a
+/// flipped bit in any size field cannot turn the deterministic rebuild
+/// into a giant allocation before the cross-checks run. **Enforced at
+/// [`Job::build`] too**, so every job a fleet admits is guaranteed to
+/// round-trip through its own snapshot — a spec the reader would reject
+/// never starts running in the first place.
+pub(crate) const MAX_STR: usize = 4096;
+pub(crate) const MAX_DIM: usize = 1 << 20;
+pub(crate) const MAX_WORKERS: usize = 1 << 12;
+pub(crate) const MAX_ROWS: usize = 1 << 16;
+pub(crate) const MAX_ROUNDS: usize = 1 << 22;
+const MAX_VEC: u64 = 1 << 26;
+
+// ---------------------------------------------------------------------------
+// Writers.
+// ---------------------------------------------------------------------------
+
+fn w_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn w_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_str(out: &mut Vec<u8>, s: &str) {
+    w_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn w_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    w_u64(out, v.len() as u64);
+    for &x in v {
+        w_f32(out, x);
+    }
+}
+
+fn w_rng(out: &mut Vec<u8>, rng: &Rng) {
+    let (s, spare) = rng.state();
+    for w in s {
+        w_u64(out, w);
+    }
+    match spare {
+        Some(g) => {
+            w_u8(out, 1);
+            w_u64(out, g.to_bits());
+        }
+        None => {
+            w_u8(out, 0);
+            w_u64(out, 0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Readers (truncation ⇒ InvalidData).
+// ---------------------------------------------------------------------------
+
+fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Map a short read to `InvalidData`: a truncated snapshot is corrupt
+/// input, not an I/O condition the caller can retry.
+fn ck<T>(r: io::Result<T>) -> io::Result<T> {
+    r.map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            invalid("truncated checkpoint")
+        } else {
+            e
+        }
+    })
+}
+
+fn r_u8(r: &mut impl Read) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    ck(r.read_exact(&mut b))?;
+    Ok(b[0])
+}
+
+fn r_u32(r: &mut impl Read) -> io::Result<u32> {
+    ck(protocol::read_u32(r))
+}
+
+fn r_u64(r: &mut impl Read) -> io::Result<u64> {
+    ck(protocol::read_u64(r))
+}
+
+fn r_f32(r: &mut impl Read) -> io::Result<f32> {
+    ck(protocol::read_f32(r))
+}
+
+fn r_str(r: &mut impl Read, what: &str) -> io::Result<String> {
+    let len = checked_len_capped(r_u64(r)?, what, MAX_STR as u64)?;
+    let mut buf = vec![0u8; len];
+    ck(r.read_exact(&mut buf))?;
+    String::from_utf8(buf).map_err(|_| invalid(format!("{what} is not valid UTF-8")))
+}
+
+fn r_f32s(r: &mut impl Read, what: &str) -> io::Result<Vec<f32>> {
+    let len = checked_len_capped(r_u64(r)?, what, MAX_VEC)?;
+    // Bounded initial reserve: a corrupt length field under the cap must
+    // hit the truncation error, not a cap-sized upfront allocation.
+    let mut out = Vec::with_capacity(len.min(1 << 16));
+    for _ in 0..len {
+        out.push(r_f32(r)?);
+    }
+    Ok(out)
+}
+
+fn r_rng(r: &mut impl Read) -> io::Result<Rng> {
+    let mut s = [0u64; 4];
+    for w in &mut s {
+        *w = r_u64(r)?;
+    }
+    let spare = match r_u8(r)? {
+        0 => {
+            r_u64(r)?; // reserved slot, ignored
+            None
+        }
+        1 => Some(f64::from_bits(r_u64(r)?)),
+        t => return Err(invalid(format!("bad RNG spare flag {t}"))),
+    };
+    Ok(Rng::from_state(s, spare))
+}
+
+// ---------------------------------------------------------------------------
+// Enum tags.
+// ---------------------------------------------------------------------------
+
+fn schedule_tag(s: Schedule) -> (u8, f32, f32) {
+    match s {
+        Schedule::Constant(c) => (0, c, 0.0),
+        Schedule::InvSqrt { c } => (1, c, 0.0),
+        Schedule::Harmonic { c, t0 } => (2, c, t0),
+    }
+}
+
+fn schedule_from_tag(tag: u8, a: f32, b: f32) -> io::Result<Schedule> {
+    Ok(match tag {
+        0 => Schedule::Constant(a),
+        1 => Schedule::InvSqrt { c: a },
+        2 => Schedule::Harmonic { c: a, t0: b },
+        t => return Err(invalid(format!("bad schedule tag {t}"))),
+    })
+}
+
+fn domain_tag(d: Domain) -> (u8, f32, f32) {
+    match d {
+        Domain::Unconstrained => (0, 0.0, 0.0),
+        Domain::L2Ball { radius } => (1, radius, 0.0),
+        Domain::Box { lo, hi } => (2, lo, hi),
+    }
+}
+
+fn domain_from_tag(tag: u8, a: f32, b: f32) -> io::Result<Domain> {
+    Ok(match tag {
+        0 => Domain::Unconstrained,
+        1 => Domain::L2Ball { radius: a },
+        2 => Domain::Box { lo: a, hi: b },
+        t => return Err(invalid(format!("bad domain tag {t}"))),
+    })
+}
+
+fn output_tag(o: OutputMode) -> u8 {
+    match o {
+        OutputMode::LastIterate { trailing: false } => 0,
+        OutputMode::LastIterate { trailing: true } => 1,
+        OutputMode::PolyakAverage => 2,
+    }
+}
+
+fn output_from_tag(tag: u8) -> io::Result<OutputMode> {
+    Ok(match tag {
+        0 => OutputMode::LastIterate { trailing: false },
+        1 => OutputMode::LastIterate { trailing: true },
+        2 => OutputMode::PolyakAverage,
+        t => return Err(invalid(format!("bad output-mode tag {t}"))),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Save / restore.
+// ---------------------------------------------------------------------------
+
+/// Serialize a resumable snapshot of `job` (see the module docs for the
+/// layout). Refuses a finalized job: snapshots exist to resume
+/// running/paused jobs, and a finalized trace (trailing record appended,
+/// `final_x` set) would restore into a double-finalized, diverged trace.
+pub fn save(job: &Job) -> io::Result<Vec<u8>> {
+    if job.run.is_finalized() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "cannot checkpoint a finalized job; snapshots resume running/paused jobs",
+        ));
+    }
+    let spec = job.spec();
+    let mut out = Vec::with_capacity(4096);
+    out.extend_from_slice(CHECKPOINT_MAGIC);
+    w_u32(&mut out, CHECKPOINT_VERSION);
+    // --- spec ---
+    w_str(&mut out, &spec.name);
+    w_str(&mut out, &spec.scheme.name());
+    w_f32(&mut out, spec.r);
+    w_u64(&mut out, spec.n as u64);
+    w_u64(&mut out, spec.workers as u64);
+    let ProblemSpec::PlantedRegression { rows_per_shard, student_t } = spec.problem;
+    w_u64(&mut out, rows_per_shard as u64);
+    w_u8(&mut out, student_t as u8);
+    w_u64(&mut out, spec.rounds as u64);
+    let (stag, sa, sb) = schedule_tag(spec.schedule);
+    w_u8(&mut out, stag);
+    w_f32(&mut out, sa);
+    w_f32(&mut out, sb);
+    w_u8(&mut out, matches!(spec.feedback, FeedbackKind::Def) as u8);
+    w_u64(&mut out, spec.batch.map(|b| b as u64).unwrap_or(0));
+    w_f32(&mut out, spec.drop_prob);
+    let (dtag, da, db) = domain_tag(spec.domain);
+    w_u8(&mut out, dtag);
+    w_f32(&mut out, da);
+    w_f32(&mut out, db);
+    w_u8(&mut out, output_tag(spec.output));
+    w_u64(&mut out, spec.seed);
+    // --- dynamic state ---
+    w_u64(&mut out, job.run.round() as u64);
+    w_f32s(&mut out, &job.run.x);
+    w_f32s(&mut out, &job.run.avg);
+    w_rng(&mut out, &job.rng);
+    w_u64(&mut out, job.run.worker_rngs.len() as u64);
+    for wr in &job.run.worker_rngs {
+        w_rng(&mut out, wr);
+    }
+    let mut fb = Vec::new();
+    job.save_feedback(&mut fb);
+    w_f32s(&mut out, &fb);
+    let trace = job.trace();
+    w_u64(&mut out, trace.records.len() as u64);
+    for rec in &trace.records {
+        w_f32(&mut out, rec.value);
+        w_f32(&mut out, rec.dist_to_opt);
+        w_u64(&mut out, rec.payload_bits as u64);
+        w_u64(&mut out, rec.participants as u64);
+    }
+    w_u64(&mut out, trace.total_payload_bits as u64);
+    w_u64(&mut out, trace.total_side_bits as u64);
+    Ok(out)
+}
+
+/// Rebuild a job from a snapshot. The static artifacts are regrown from
+/// the spec seed (identical by the derivation discipline of
+/// [`crate::serve::job`]); the dynamic state is overlaid and
+/// cross-checked against the spec — any inconsistency, unknown tag,
+/// out-of-cap length, truncation or trailing garbage is
+/// [`io::ErrorKind::InvalidData`].
+pub fn restore(bytes: &[u8]) -> io::Result<Job> {
+    let mut r: &[u8] = bytes;
+    let mut magic = [0u8; 8];
+    ck(r.read_exact(&mut magic))?;
+    if &magic != CHECKPOINT_MAGIC {
+        return Err(invalid("not a KFCKPT01 job checkpoint"));
+    }
+    let version = r_u32(&mut r)?;
+    if version != CHECKPOINT_VERSION {
+        return Err(invalid(format!(
+            "unsupported checkpoint version {version} (this build reads {CHECKPOINT_VERSION})"
+        )));
+    }
+    // --- spec ---
+    let name = r_str(&mut r, "job name")?;
+    let scheme_name = r_str(&mut r, "scheme name")?;
+    let scheme = CompressorSpec::parse(&scheme_name)
+        .ok_or_else(|| invalid(format!("unknown scheme '{scheme_name}' in checkpoint")))?;
+    let r_budget = r_f32(&mut r)?;
+    let n = checked_len_capped(r_u64(&mut r)?, "dimension", MAX_DIM as u64)?;
+    let workers = checked_len_capped(r_u64(&mut r)?, "worker count", MAX_WORKERS as u64)?;
+    let rows_per_shard = checked_len_capped(r_u64(&mut r)?, "rows per shard", MAX_ROWS as u64)?;
+    let student_t = match r_u8(&mut r)? {
+        0 => false,
+        1 => true,
+        t => return Err(invalid(format!("bad student-t flag {t}"))),
+    };
+    let rounds = checked_len_capped(r_u64(&mut r)?, "round count", MAX_ROUNDS as u64)?;
+    let (stag, sa, sb) = (r_u8(&mut r)?, r_f32(&mut r)?, r_f32(&mut r)?);
+    let schedule = schedule_from_tag(stag, sa, sb)?;
+    let feedback = match r_u8(&mut r)? {
+        0 => FeedbackKind::None,
+        1 => FeedbackKind::Def,
+        t => return Err(invalid(format!("bad feedback tag {t}"))),
+    };
+    let batch = match r_u64(&mut r)? {
+        0 => None,
+        b => Some(checked_len_capped(b, "batch size", MAX_VEC)?),
+    };
+    let drop_prob = r_f32(&mut r)?;
+    let (dtag, da, db) = (r_u8(&mut r)?, r_f32(&mut r)?, r_f32(&mut r)?);
+    let domain = domain_from_tag(dtag, da, db)?;
+    let output = output_from_tag(r_u8(&mut r)?)?;
+    let seed = r_u64(&mut r)?;
+    let spec = JobSpec {
+        name,
+        scheme,
+        r: r_budget,
+        n,
+        workers,
+        problem: ProblemSpec::PlantedRegression { rows_per_shard, student_t },
+        rounds,
+        schedule,
+        feedback,
+        batch,
+        drop_prob,
+        domain,
+        output,
+        seed,
+    };
+    let mut job =
+        Job::build(spec).map_err(|e| invalid(format!("checkpoint spec rejected: {e}")))?;
+    // --- dynamic state ---
+    let t = checked_len_capped(r_u64(&mut r)?, "round index", MAX_ROUNDS as u64)?;
+    if t > rounds {
+        return Err(invalid(format!("round index {t} exceeds configured rounds {rounds}")));
+    }
+    let x = r_f32s(&mut r, "iterate")?;
+    if x.len() != n {
+        return Err(invalid(format!("iterate length {} != dimension {n}", x.len())));
+    }
+    let avg = r_f32s(&mut r, "Polyak average")?;
+    let want_avg = if output == OutputMode::PolyakAverage { n } else { 0 };
+    if avg.len() != want_avg {
+        return Err(invalid(format!(
+            "Polyak average length {} != expected {want_avg}",
+            avg.len()
+        )));
+    }
+    let rng = r_rng(&mut r)?;
+    let n_wr = checked_len_capped(r_u64(&mut r)?, "worker RNG count", MAX_WORKERS as u64)?;
+    if n_wr != workers {
+        return Err(invalid(format!("worker RNG count {n_wr} != workers {workers}")));
+    }
+    let mut worker_rngs = Vec::with_capacity(n_wr);
+    for _ in 0..n_wr {
+        worker_rngs.push(r_rng(&mut r)?);
+    }
+    let fb = r_f32s(&mut r, "feedback state")?;
+    if !job.restore_feedback(&fb) {
+        return Err(invalid(format!("feedback state has wrong shape ({} floats)", fb.len())));
+    }
+    let n_rec = checked_len_capped(r_u64(&mut r)?, "trace record count", MAX_ROUNDS as u64 + 1)?;
+    if n_rec > rounds + 1 {
+        return Err(invalid(format!("{n_rec} trace records for a {rounds}-round job")));
+    }
+    let mut trace = Trace::default();
+    trace.records.reserve(rounds + 1);
+    for _ in 0..n_rec {
+        trace.records.push(IterRecord {
+            value: r_f32(&mut r)?,
+            dist_to_opt: r_f32(&mut r)?,
+            payload_bits: r_u64(&mut r)? as usize,
+            participants: r_u64(&mut r)? as usize,
+        });
+    }
+    trace.total_payload_bits = r_u64(&mut r)? as usize;
+    trace.total_side_bits = r_u64(&mut r)? as usize;
+    if !r.is_empty() {
+        return Err(invalid(format!("{} trailing bytes after checkpoint", r.len())));
+    }
+    // Overlay onto the freshly built job.
+    job.run.t = t;
+    job.run.x.copy_from_slice(&x);
+    job.run.avg.copy_from_slice(&avg);
+    job.run.worker_rngs = worker_rngs;
+    job.run.trace = trace;
+    job.rng = rng;
+    Ok(job)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        let spec = JobSpec::new(
+            "ckpt-unit",
+            CompressorSpec::parse("ndsc-dith").unwrap(),
+            1.0,
+            16,
+            10,
+            7,
+        )
+        .with_workers(2)
+        .with_def_feedback();
+        Job::build(spec).unwrap()
+    }
+
+    #[test]
+    fn snapshot_roundtrips_mid_run() {
+        let mut a = job();
+        for _ in 0..4 {
+            a.step_round(0);
+        }
+        let bytes = save(&a).unwrap();
+        let b = restore(&bytes).unwrap();
+        assert_eq!(b.rounds_done(), 4);
+        assert_eq!(b.spec().name, "ckpt-unit");
+        assert_eq!(b.trace().records.len(), a.trace().records.len());
+        assert_eq!(b.trace().total_payload_bits, a.trace().total_payload_bits);
+        // A second snapshot of the restored job is byte-identical.
+        assert_eq!(save(&b).unwrap(), bytes);
+    }
+
+    #[test]
+    fn finalized_jobs_are_not_checkpointable() {
+        let mut a = job();
+        while !a.is_complete() {
+            a.step_round(0);
+        }
+        // Complete but not yet finalized: still snapshotable (restore +
+        // fleet admission will finalize it exactly once).
+        assert!(save(&a).is_ok());
+        a.finalize();
+        let err = save(&a).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+    }
+
+    #[test]
+    fn build_caps_match_the_reader_caps() {
+        // Anything Job::build admits must survive its own snapshot; the
+        // reader's caps are therefore admission rules (no spec can be
+        // served-but-unrestorable).
+        let mut s = JobSpec::new(
+            "caps",
+            CompressorSpec::parse("ndsc-dith").unwrap(),
+            1.0,
+            16,
+            8,
+            1,
+        );
+        s.rounds = super::MAX_ROUNDS + 1;
+        assert!(Job::build(s.clone()).is_err(), "rounds beyond the reader cap");
+        s.rounds = 8;
+        s.name = "x".repeat(super::MAX_STR + 1);
+        assert!(Job::build(s.clone()).is_err(), "name beyond the reader cap");
+        s.name = "caps".into();
+        s.problem =
+            ProblemSpec::PlantedRegression { rows_per_shard: super::MAX_ROWS + 1, student_t: false };
+        assert!(Job::build(s).is_err(), "rows beyond the reader cap");
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut a = job();
+        a.step_round(0);
+        let good = save(&a).unwrap();
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(restore(&bad).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        let mut bad = good.clone();
+        bad[8] = 99; // version word
+        assert_eq!(restore(&bad).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn corrupt_length_fields_error_not_allocate() {
+        let a = job();
+        let good = save(&a).unwrap();
+        // The job-name length field sits right after magic + version.
+        let mut bad = good.clone();
+        bad[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = restore(&bad).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Trailing garbage is rejected.
+        let mut bad = good.clone();
+        bad.extend_from_slice(&[0u8; 3]);
+        assert_eq!(restore(&bad).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+}

@@ -1,0 +1,417 @@
+//! The job server: registry, lifecycle, and the per-round serve loop.
+//!
+//! A [`JobServer`] hosts any number of [`Job`]s over one global
+//! bits-per-round budget. [`JobServer::run_round`] executes one fleet
+//! round: deficit accrual, rotation, level selection and at most one
+//! engine round per granted job — all allocation-free once warm
+//! (`rust/tests/test_alloc.rs`, phase 4). Lifecycle transitions
+//! (`submit`/`pause`/`resume`/`cancel`) take effect between fleet
+//! rounds; a paused job's state is untouched until resume, so its trace
+//! continues exactly where it stopped.
+
+use std::io;
+
+use crate::coordinator::metrics::{FleetMetrics, JobBits};
+use crate::serve::checkpoint;
+use crate::serve::job::{Job, JobSpec};
+use crate::serve::scheduler::{self, Deficit, Policy};
+
+/// Fleet-assigned job handle.
+pub type JobId = u64;
+
+/// Lifecycle state of a submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Eligible for scheduling.
+    Running,
+    /// Parked: not scheduled, state frozen, resumable.
+    Paused,
+    /// All configured rounds executed; trace finalized.
+    Finished,
+    /// Terminated early by the operator; partial trace finalized.
+    Cancelled,
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            JobState::Running => "running",
+            JobState::Paused => "paused",
+            JobState::Finished => "finished",
+            JobState::Cancelled => "cancelled",
+        })
+    }
+}
+
+/// Errors of the serving API.
+#[derive(Debug)]
+pub enum ServeError {
+    /// No job with that id was ever submitted.
+    UnknownJob(JobId),
+    /// The spec failed [`Job::build`] validation.
+    InvalidSpec(String),
+    /// Admission control: the job's cheapest grantable round exceeds the
+    /// global per-round budget, so the scheduler could never serve it.
+    Infeasible {
+        /// Cheapest per-round cost the policy could grant.
+        needed_bits: u64,
+        /// The fleet's global budget.
+        budget_bits: usize,
+    },
+    /// The operation is not valid in the job's current lifecycle state.
+    BadState {
+        /// The job.
+        id: JobId,
+        /// Its current state.
+        state: JobState,
+        /// The rejected operation.
+        op: &'static str,
+    },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownJob(id) => write!(f, "unknown job {id}"),
+            ServeError::InvalidSpec(e) => write!(f, "invalid job spec: {e}"),
+            ServeError::Infeasible { needed_bits, budget_bits } => write!(
+                f,
+                "admission rejected: cheapest grantable round needs {needed_bits} bits but the \
+                 global budget is {budget_bits} bits/round"
+            ),
+            ServeError::BadState { id, state, op } => {
+                write!(f, "cannot {op} job {id} in state {state}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+struct JobSlot {
+    id: JobId,
+    state: JobState,
+    deficit: Deficit,
+    job: Job,
+}
+
+/// The multi-job server (see the [module docs](self)).
+pub struct JobServer {
+    policy: Policy,
+    budget_bits: usize,
+    slots: Vec<JobSlot>,
+    metrics: FleetMetrics,
+    cursor: usize,
+    next_id: JobId,
+}
+
+impl JobServer {
+    /// A fleet offering `budget_bits_per_round` payload bits per fleet
+    /// round, arbitrated by `policy`.
+    pub fn new(budget_bits_per_round: usize, policy: Policy) -> Self {
+        JobServer {
+            policy,
+            budget_bits: budget_bits_per_round,
+            slots: Vec::new(),
+            metrics: FleetMetrics {
+                budget_bits_per_round,
+                ..Default::default()
+            },
+            cursor: 0,
+            next_id: 0,
+        }
+    }
+
+    /// The fleet's arbitration policy.
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// The global per-round budget.
+    pub fn budget_bits(&self) -> usize {
+        self.budget_bits
+    }
+
+    /// Fleet rounds executed so far.
+    pub fn round(&self) -> u64 {
+        self.metrics.fleet_rounds
+    }
+
+    /// Jobs currently eligible for scheduling.
+    pub fn live_jobs(&self) -> usize {
+        self.slots.iter().filter(|s| s.state == JobState::Running).count()
+    }
+
+    /// All submitted job ids, in submission order.
+    pub fn job_ids(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.slots.iter().map(|s| s.id)
+    }
+
+    /// Aggregate + per-job accounting.
+    pub fn metrics(&self) -> &FleetMetrics {
+        &self.metrics
+    }
+
+    /// Validate, build and admit a job. Admission requires the cheapest
+    /// round the policy could ever grant to fit the global budget —
+    /// otherwise the job could never transmit and would starve by
+    /// construction.
+    pub fn submit(&mut self, spec: JobSpec) -> Result<JobId, ServeError> {
+        let job = Job::build(spec).map_err(ServeError::InvalidSpec)?;
+        let needed = job.min_cost_bits(self.policy);
+        if needed > self.budget_bits as u64 {
+            return Err(ServeError::Infeasible { needed_bits: needed, budget_bits: self.budget_bits });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.metrics.jobs.push(JobBits { job: id, name: job.spec().name.clone(), ..Default::default() });
+        self.slots.push(JobSlot { id, state: JobState::Running, deficit: Deficit::default(), job });
+        Ok(id)
+    }
+
+    /// Restore a checkpointed job into this fleet (a fresh id is
+    /// assigned; accounting rows are seeded from the snapshot's trace
+    /// totals so per-job bits stay cumulative across restores). The
+    /// restored job is admitted like any submission.
+    pub fn restore(&mut self, bytes: &[u8]) -> io::Result<JobId> {
+        let job = checkpoint::restore(bytes)?;
+        let needed = job.min_cost_bits(self.policy);
+        if needed > self.budget_bits as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "restored job needs {needed} bits/round but the fleet budget is {} bits/round",
+                    self.budget_bits
+                ),
+            ));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.metrics.jobs.push(JobBits {
+            job: id,
+            name: job.spec().name.clone(),
+            rounds_served: job.rounds_done() as u64,
+            payload_bits: job.trace().total_payload_bits as u64,
+            side_bits: job.trace().total_side_bits as u64,
+        });
+        let state = if job.is_complete() { JobState::Finished } else { JobState::Running };
+        let mut slot = JobSlot { id, state, deficit: Deficit::default(), job };
+        if slot.state == JobState::Finished {
+            slot.job.finalize();
+        }
+        self.slots.push(slot);
+        Ok(id)
+    }
+
+    /// Serialize a resumable snapshot of a `Running`/`Paused` job.
+    pub fn checkpoint(&self, id: JobId) -> Result<Vec<u8>, ServeError> {
+        let slot = self.slot(id)?;
+        match slot.state {
+            // A Running/Paused job is never finalized (the fleet
+            // finalizes and marks Finished in the same round), so the
+            // writer's finalized-job refusal is unreachable here; map it
+            // to BadState defensively rather than panicking.
+            JobState::Running | JobState::Paused => checkpoint::save(&slot.job)
+                .map_err(|_| ServeError::BadState { id, state: slot.state, op: "checkpoint" }),
+            state => Err(ServeError::BadState { id, state, op: "checkpoint" }),
+        }
+    }
+
+    /// Park a running job: it keeps its place in the registry but is
+    /// skipped by the scheduler until [`JobServer::resume`].
+    pub fn pause(&mut self, id: JobId) -> Result<(), ServeError> {
+        let slot = self.slot_mut(id)?;
+        match slot.state {
+            JobState::Running => {
+                slot.state = JobState::Paused;
+                Ok(())
+            }
+            state => Err(ServeError::BadState { id, state, op: "pause" }),
+        }
+    }
+
+    /// Unpark a paused job.
+    pub fn resume(&mut self, id: JobId) -> Result<(), ServeError> {
+        let slot = self.slot_mut(id)?;
+        match slot.state {
+            JobState::Paused => {
+                slot.state = JobState::Running;
+                Ok(())
+            }
+            state => Err(ServeError::BadState { id, state, op: "resume" }),
+        }
+    }
+
+    /// Terminate a running or paused job. Its partial trace is finalized
+    /// and remains readable via [`JobServer::job`].
+    pub fn cancel(&mut self, id: JobId) -> Result<(), ServeError> {
+        let slot = self.slot_mut(id)?;
+        match slot.state {
+            JobState::Running | JobState::Paused => {
+                slot.job.finalize();
+                slot.state = JobState::Cancelled;
+                Ok(())
+            }
+            state => Err(ServeError::BadState { id, state, op: "cancel" }),
+        }
+    }
+
+    /// A job's lifecycle state.
+    pub fn state(&self, id: JobId) -> Option<JobState> {
+        self.slots.iter().find(|s| s.id == id).map(|s| s.state)
+    }
+
+    /// Read access to a submitted job (trace, spec, progress).
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.slots.iter().find(|s| s.id == id).map(|s| &s.job)
+    }
+
+    /// A job's current deficit counter (invariant checks / debugging).
+    pub fn deficit_bits(&self, id: JobId) -> Option<u64> {
+        self.slots.iter().find(|s| s.id == id).map(|s| s.deficit.bits)
+    }
+
+    /// Execute one fleet round (see the [scheduler docs]). Returns the
+    /// number of jobs granted an engine round. A fleet with no live job
+    /// is idle: nothing runs and the round counter does not advance.
+    ///
+    /// [scheduler docs]: crate::serve::scheduler
+    pub fn run_round(&mut self) -> usize {
+        let live = self.live_jobs();
+        if live == 0 {
+            return 0;
+        }
+        let quantum = scheduler::quantum(self.budget_bits, live);
+        let mut remaining = self.budget_bits as u64;
+        let mut served = 0usize;
+        let nslots = self.slots.len();
+        for k in 0..nslots {
+            let j = (self.cursor + k) % nslots;
+            let slot = &mut self.slots[j];
+            if slot.state != JobState::Running {
+                continue;
+            }
+            slot.deficit.accrue(quantum, slot.job.requested_cost_bits());
+            let afford = slot.deficit.bits.min(remaining);
+            if let Some(lvl) = slot.job.pick_level(self.policy, afford) {
+                let cost = slot.job.level_cost(lvl);
+                let (payload, side) = slot.job.step_round(lvl);
+                slot.deficit.charge(cost);
+                remaining -= cost;
+                served += 1;
+                if slot.job.is_complete() {
+                    slot.job.finalize();
+                    slot.state = JobState::Finished;
+                }
+                let row = &mut self.metrics.jobs[j];
+                row.rounds_served += 1;
+                row.payload_bits += payload;
+                row.side_bits += side;
+                self.metrics.spent_payload_bits += payload;
+            }
+        }
+        self.cursor = (self.cursor + 1) % nslots;
+        self.metrics.fleet_rounds += 1;
+        served
+    }
+
+    /// Run fleet rounds until no job is live or `max_fleet_rounds` have
+    /// executed; returns how many ran.
+    pub fn run(&mut self, max_fleet_rounds: usize) -> usize {
+        let mut ran = 0;
+        while ran < max_fleet_rounds && self.live_jobs() > 0 {
+            self.run_round();
+            ran += 1;
+        }
+        ran
+    }
+
+    fn slot(&self, id: JobId) -> Result<&JobSlot, ServeError> {
+        self.slots.iter().find(|s| s.id == id).ok_or(ServeError::UnknownJob(id))
+    }
+
+    fn slot_mut(&mut self, id: JobId) -> Result<&mut JobSlot, ServeError> {
+        self.slots.iter_mut().find(|s| s.id == id).ok_or(ServeError::UnknownJob(id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::registry::CompressorSpec;
+
+    fn spec(name: &str, scheme: &str, r: f32, rounds: usize, seed: u64) -> JobSpec {
+        JobSpec::new(name, CompressorSpec::parse(scheme).unwrap(), r, 16, rounds, seed)
+    }
+
+    #[test]
+    fn lifecycle_transitions_are_enforced() {
+        let mut srv = JobServer::new(1 << 20, Policy::Drr);
+        let id = srv.submit(spec("a", "ndsc-dith", 1.0, 8, 1)).unwrap();
+        assert_eq!(srv.state(id), Some(JobState::Running));
+        srv.pause(id).unwrap();
+        assert_eq!(srv.state(id), Some(JobState::Paused));
+        assert!(matches!(srv.pause(id), Err(ServeError::BadState { .. })));
+        srv.resume(id).unwrap();
+        assert!(matches!(srv.resume(id), Err(ServeError::BadState { .. })));
+        srv.run(64);
+        assert_eq!(srv.state(id), Some(JobState::Finished));
+        assert!(matches!(srv.cancel(id), Err(ServeError::BadState { .. })));
+        assert!(matches!(srv.pause(99), Err(ServeError::UnknownJob(99))));
+        assert!(srv.job(id).unwrap().trace().final_x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn paused_jobs_are_skipped_cancelled_jobs_keep_their_trace() {
+        let mut srv = JobServer::new(1 << 20, Policy::Drr);
+        let a = srv.submit(spec("a", "ndsc-dith", 1.0, 50, 1)).unwrap();
+        let b = srv.submit(spec("b", "sd", 0.5, 50, 2)).unwrap();
+        srv.run_round();
+        srv.pause(a).unwrap();
+        let a_rounds = srv.job(a).unwrap().rounds_done();
+        for _ in 0..5 {
+            srv.run_round();
+        }
+        assert_eq!(srv.job(a).unwrap().rounds_done(), a_rounds, "paused job must not advance");
+        assert_eq!(srv.job(b).unwrap().rounds_done(), 6);
+        srv.cancel(b).unwrap();
+        assert_eq!(srv.state(b), Some(JobState::Cancelled));
+        let tb = srv.job(b).unwrap().trace();
+        assert!(!tb.final_x.is_empty(), "cancelled job's partial trace is finalized");
+        srv.resume(a).unwrap();
+        srv.run(256);
+        assert_eq!(srv.state(a), Some(JobState::Finished));
+    }
+
+    #[test]
+    fn admission_rejects_what_the_budget_cannot_serve() {
+        // qsgd at R=4, n=16 costs 64 bits/round; a 10-bit fleet can never
+        // grant it under strict DRR.
+        let mut srv = JobServer::new(10, Policy::Drr);
+        match srv.submit(spec("greedy", "qsgd", 4.0, 8, 1)) {
+            Err(ServeError::Infeasible { needed_bits, budget_bits }) => {
+                assert_eq!(needed_bits, 64);
+                assert_eq!(budget_bits, 10);
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+        // An idle fleet does not advance its round counter.
+        assert_eq!(srv.run_round(), 0);
+        assert_eq!(srv.round(), 0);
+    }
+
+    #[test]
+    fn accounting_tracks_measured_bits_per_job() {
+        let mut srv = JobServer::new(1 << 20, Policy::Drr);
+        let a = srv.submit(spec("a", "ndsc-dith", 1.0, 10, 1)).unwrap();
+        srv.run(64);
+        let m = srv.metrics();
+        assert_eq!(m.jobs.len(), 1);
+        assert_eq!(m.jobs[0].rounds_served, 10);
+        let tr = srv.job(a).unwrap().trace();
+        assert_eq!(m.jobs[0].payload_bits, tr.total_payload_bits as u64);
+        assert_eq!(m.jobs[0].side_bits, tr.total_side_bits as u64);
+        assert_eq!(m.spent_payload_bits, tr.total_payload_bits as u64);
+        assert!(m.utilization() > 0.0);
+    }
+}

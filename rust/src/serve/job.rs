@@ -1,0 +1,573 @@
+//! A served job: one engine run's components, owned, steppable one round
+//! at a time, and checkpointable.
+//!
+//! A [`Job`] owns everything a run needs across rounds — the (seeded)
+//! problem data, the codec ladder, the feedback memory, the
+//! [`RunState`], and the job RNG. When the scheduler grants it a round,
+//! [`Job::step_round`] assembles a [`RoundCtx`] on the stack over those
+//! owned components and advances the engine by exactly one round. No
+//! state leaks outside the job, so its trace is independent of how its
+//! rounds interleave with other tenants'.
+//!
+//! **Derivation discipline:** every random artifact is derived from
+//! `spec.seed` through a fixed salt ([`DATA_SALT`], [`FRAME_SALT`],
+//! [`RUN_SALT`]), so a job rebuilt from its spec — at submit, or during
+//! [`crate::serve::checkpoint::restore`] in a fresh process — regrows
+//! identical data and frames; only the dynamic state (iterate, RNGs,
+//! feedback, trace) needs to travel in a snapshot.
+
+use crate::coordinator::transport::Participation;
+use crate::data::synthetic::planted_regression_shards;
+use crate::linalg::rng::Rng;
+use crate::opt::engine::feedback::{DefFeedback, FeedbackMemory, NoFeedback};
+use crate::opt::engine::schedule::Schedule;
+use crate::opt::engine::{Codecs, OracleBank, OutputMode, Problem, RngPolicy, RoundCtx, RunState};
+use crate::opt::multi::ShardedProblem;
+use crate::opt::objectives::{DatasetObjective, Loss};
+use crate::opt::projection::Domain;
+use crate::opt::Trace;
+use crate::quant::registry::CompressorSpec;
+use crate::quant::{budget_bits, Compressor};
+use crate::serve::scheduler::Policy;
+
+/// Salt for the problem-data RNG stream (`seed ^ DATA_SALT`).
+pub const DATA_SALT: u64 = 0xDA7A_5EED;
+/// Salt for the frame/common-randomness RNG stream (`seed ^ FRAME_SALT`);
+/// ladder level `l`'s codecs are built from `fork(l)` of that stream.
+pub const FRAME_SALT: u64 = 0xF4A3_5EED;
+/// Salt for the run RNG stream (`seed ^ RUN_SALT`) that the engine
+/// consumes (worker forks, participation, dither, drop verdicts).
+pub const RUN_SALT: u64 = 0x4B1D_5EED;
+
+/// Dyadic effective-budget ladder: level 0 is the requested `R`, deeper
+/// levels are fallbacks the adaptive scheduler may grant under
+/// contention. Infeasible levels (per `CompressorSpec::is_feasible`) are
+/// skipped at build.
+const LADDER_FRACTIONS: [f32; 4] = [1.0, 0.5, 0.25, 0.125];
+
+/// The data a job optimizes over. Self-contained by construction —
+/// regenerated from the job seed — so a checkpoint never has to carry
+/// the dataset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProblemSpec {
+    /// Worker-sharded planted least-squares regression
+    /// ([`planted_regression_shards`]): `rows_per_shard` rows per worker,
+    /// heavy-tailed (`student_t`) or Gaussian³ data.
+    PlantedRegression {
+        /// Rows in each worker's private shard.
+        rows_per_shard: usize,
+        /// Student-t(1) planted model (Fig. 3a) instead of Gaussian³.
+        student_t: bool,
+    },
+}
+
+/// The worker-side feedback memory a job runs with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeedbackKind {
+    /// No memory (dithered/unbiased schemes).
+    None,
+    /// DGD-DEF error feedback ([`DefFeedback`], one error vector per
+    /// worker).
+    Def,
+}
+
+/// Plain-data description of a job: what to optimize, with which
+/// compressor at which requested budget, for how many rounds, under
+/// which seed. Everything a checkpoint needs to rebuild the job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Human-readable job name (reported in fleet metrics).
+    pub name: String,
+    /// Compression scheme (must round-trip through
+    /// [`CompressorSpec::parse`] so snapshots can name it).
+    pub scheme: CompressorSpec,
+    /// Requested uplink budget in bits/dimension.
+    pub r: f32,
+    /// Problem dimension.
+    pub n: usize,
+    /// Worker count (one shard and one codec per worker).
+    pub workers: usize,
+    /// Problem data description.
+    pub problem: ProblemSpec,
+    /// Engine rounds this job runs for.
+    pub rounds: usize,
+    /// Step-size rule. `Schedule::Constant(f32::NAN)` (see
+    /// [`JobSpec::auto_step`]) derives the shard-stable step at build.
+    pub schedule: Schedule,
+    /// Worker feedback memory.
+    pub feedback: FeedbackKind,
+    /// Minibatch size per oracle query (`None` = full local gradient).
+    pub batch: Option<usize>,
+    /// Lossy-uplink probability in `[0, 1]`.
+    pub drop_prob: f32,
+    /// Projection domain.
+    pub domain: Domain,
+    /// Trace shape.
+    pub output: OutputMode,
+    /// Master seed; every stream is salted off it.
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// A single-worker spec with defaults: 10-row planted regression,
+    /// auto-derived stable constant step, no feedback, full batch,
+    /// reliable uplink, unconstrained domain, Polyak-average output.
+    pub fn new(name: impl Into<String>, scheme: CompressorSpec, r: f32, n: usize, rounds: usize, seed: u64) -> Self {
+        JobSpec {
+            name: name.into(),
+            scheme,
+            r,
+            n,
+            workers: 1,
+            problem: ProblemSpec::PlantedRegression { rows_per_shard: 10, student_t: false },
+            rounds,
+            schedule: Schedule::Constant(f32::NAN),
+            feedback: FeedbackKind::None,
+            batch: None,
+            drop_prob: 0.0,
+            domain: Domain::Unconstrained,
+            output: OutputMode::PolyakAverage,
+            seed,
+        }
+    }
+
+    /// Set the worker count (shards, codecs and feedback slots follow).
+    pub fn with_workers(mut self, m: usize) -> Self {
+        self.workers = m;
+        self
+    }
+
+    /// Set the problem data description.
+    pub fn with_problem(mut self, p: ProblemSpec) -> Self {
+        self.problem = p;
+        self
+    }
+
+    /// Set an explicit step schedule.
+    pub fn with_schedule(mut self, s: Schedule) -> Self {
+        self.schedule = s;
+        self
+    }
+
+    /// Derive the shard-stable constant step at build time (the default):
+    /// encoded as `Schedule::Constant(NaN)` so the derivation — which
+    /// depends only on the seeded data — re-runs identically on restore.
+    pub fn auto_step(mut self) -> Self {
+        self.schedule = Schedule::Constant(f32::NAN);
+        self
+    }
+
+    /// Run with DGD-DEF error feedback and last-iterate output (the
+    /// smooth strongly-convex composition).
+    pub fn with_def_feedback(mut self) -> Self {
+        self.feedback = FeedbackKind::Def;
+        self.output = OutputMode::LastIterate { trailing: true };
+        self
+    }
+
+    /// Set the per-query minibatch size (`None` = full local gradient).
+    pub fn with_batch(mut self, b: Option<usize>) -> Self {
+        self.batch = b;
+        self
+    }
+
+    /// Set the lossy-uplink probability.
+    pub fn with_drop_prob(mut self, p: f32) -> Self {
+        self.drop_prob = p;
+        self
+    }
+
+    /// Set the trace shape.
+    pub fn with_output(mut self, o: OutputMode) -> Self {
+        self.output = o;
+        self
+    }
+}
+
+/// One rung of a job's effective-budget ladder.
+pub struct LadderLevel {
+    /// Effective budget (bits/dimension) at this level.
+    pub r: f32,
+    /// Nominal per-round cost the scheduler charges: `workers · ⌊n·r⌋`
+    /// payload bits — the wire-contract **upper bound** on what the level
+    /// can emit, so admission can never under-charge.
+    pub cost_bits: u64,
+    /// One codec per worker, built at this level's budget.
+    pub codecs: Vec<Box<dyn Compressor>>,
+}
+
+/// A live job: spec + owned components + resumable run state. Built by
+/// [`Job::build`]; stepped by the fleet via [`Job::step_round`].
+pub struct Job {
+    pub(crate) spec: JobSpec,
+    problem: ShardedProblem,
+    x_star: Vec<f32>,
+    /// The schedule actually queried each round (auto-step resolved).
+    sched_eff: Schedule,
+    ladder: Vec<LadderLevel>,
+    feedback: FeedbackSlot,
+    pub(crate) run: RunState,
+    pub(crate) rng: Rng,
+    /// Minibatch index scratch, reused across rounds (zero-alloc).
+    idx: Vec<usize>,
+}
+
+impl Job {
+    /// Validate the spec and build the job: problem data from
+    /// `seed ^ DATA_SALT`, codec ladder from `seed ^ FRAME_SALT`
+    /// (level `l` forks stream `l`), run state + worker RNG forks from
+    /// `seed ^ RUN_SALT`. Deterministic: two builds of the same spec are
+    /// identical, which is what makes snapshots spec + dynamic-state only.
+    pub fn build(spec: JobSpec) -> Result<Job, String> {
+        use crate::serve::checkpoint::{MAX_DIM, MAX_ROUNDS, MAX_ROWS, MAX_STR, MAX_WORKERS};
+        // The checkpoint reader's sanity caps are admission rules too:
+        // a job the snapshot format could not restore must never be
+        // accepted — otherwise a running job's own checkpoint would be
+        // rejected exactly when the operator needs it.
+        if spec.n == 0 || spec.n > MAX_DIM {
+            return Err(format!("job dimension n must be in 1..={MAX_DIM}, got {}", spec.n));
+        }
+        if spec.workers == 0 || spec.workers > MAX_WORKERS {
+            return Err(format!(
+                "worker count must be in 1..={MAX_WORKERS}, got {}",
+                spec.workers
+            ));
+        }
+        if spec.rounds == 0 || spec.rounds > MAX_ROUNDS {
+            return Err(format!("rounds must be in 1..={MAX_ROUNDS}, got {}", spec.rounds));
+        }
+        if spec.name.len() > MAX_STR {
+            return Err(format!(
+                "job name is {} bytes; the checkpoint format caps names at {MAX_STR}",
+                spec.name.len()
+            ));
+        }
+        if let Some(b) = spec.batch {
+            if b > MAX_ROWS {
+                return Err(format!("batch size must be at most {MAX_ROWS}, got {b}"));
+            }
+        }
+        // The upper bound keeps `workers · ⌊nR⌋` cost arithmetic far from
+        // overflow even for corrupt checkpoint specs (fp32 is R = 32; no
+        // scheme in the zoo asks for more than 64 bits/dimension).
+        if !(spec.r > 0.0) || !(spec.r <= 64.0) {
+            return Err(format!("bit budget R must be in (0, 64], got {}", spec.r));
+        }
+        if !(0.0..=1.0).contains(&spec.drop_prob) {
+            return Err(format!("drop probability must be in [0, 1], got {}", spec.drop_prob));
+        }
+        if let Some(0) = spec.batch {
+            return Err("batch size must be at least 1 (use None for full gradients)".into());
+        }
+        if !spec.scheme.is_feasible(spec.n, spec.r) {
+            return Err(format!(
+                "scheme {} cannot honor the ⌊nR⌋ wire contract at n={}, R={}",
+                spec.scheme.name(),
+                spec.n,
+                spec.r
+            ));
+        }
+        // Snapshots name the scheme by its canonical string; a spec that
+        // does not round-trip would silently rehydrate as something else.
+        if CompressorSpec::parse(&spec.scheme.name()) != Some(spec.scheme) {
+            return Err(format!(
+                "scheme name '{}' does not round-trip through the registry parser; \
+                 such specs are not checkpointable and cannot be served",
+                spec.scheme.name()
+            ));
+        }
+        let ProblemSpec::PlantedRegression { rows_per_shard, student_t } = spec.problem;
+        if rows_per_shard == 0 || rows_per_shard > MAX_ROWS {
+            return Err(format!(
+                "rows per shard must be in 1..={MAX_ROWS}, got {rows_per_shard}"
+            ));
+        }
+        let mut data_rng = Rng::seed_from(spec.seed ^ DATA_SALT);
+        let (shards, x_star) = planted_regression_shards(
+            spec.workers,
+            rows_per_shard,
+            spec.n,
+            Loss::Square,
+            &mut data_rng,
+            student_t,
+        );
+        let problem = ShardedProblem::new(shards);
+        let sched_eff = match spec.schedule {
+            Schedule::Constant(c) if c.is_nan() => Schedule::Constant(problem.stable_step()),
+            s => s,
+        };
+        let mut frame_rng = Rng::seed_from(spec.seed ^ FRAME_SALT);
+        let mut ladder = Vec::new();
+        for (lvl, &frac) in LADDER_FRACTIONS.iter().enumerate() {
+            // Fork unconditionally so each level's frame stream is fixed
+            // regardless of which levels turn out to be feasible.
+            let mut level_rng = frame_rng.fork(lvl as u64);
+            let r_l = spec.r * frac;
+            if lvl > 0 && !spec.scheme.is_feasible(spec.n, r_l) {
+                continue;
+            }
+            let codecs: Vec<Box<dyn Compressor>> =
+                (0..spec.workers).map(|_| spec.scheme.build(spec.n, r_l, &mut level_rng)).collect();
+            ladder.push(LadderLevel {
+                r: r_l,
+                cost_bits: (spec.workers * budget_bits(spec.n, r_l)) as u64,
+                codecs,
+            });
+        }
+        let feedback = match spec.feedback {
+            FeedbackKind::None => FeedbackSlot::None(NoFeedback),
+            FeedbackKind::Def => FeedbackSlot::Def(DefFeedback::new(spec.workers, spec.n)),
+        };
+        let mut rng = Rng::seed_from(spec.seed ^ RUN_SALT);
+        let x0 = vec![0.0f32; spec.n];
+        let run = RunState::new(
+            &x0,
+            spec.workers,
+            spec.rounds,
+            spec.domain,
+            RngPolicy::ForkPerWorker,
+            spec.output,
+            ladder[0].codecs.first().map(|c| c.as_ref()),
+            &mut rng,
+        );
+        Ok(Job { spec, problem, x_star, sched_eff, ladder, feedback, run, rng, idx: Vec::new() })
+    }
+
+    /// The job's spec.
+    pub fn spec(&self) -> &JobSpec {
+        &self.spec
+    }
+
+    /// The job's effective-budget ladder (level 0 = requested `R`).
+    pub fn ladder(&self) -> &[LadderLevel] {
+        &self.ladder
+    }
+
+    /// The schedule the job actually runs (auto-step resolved).
+    pub fn effective_schedule(&self) -> Schedule {
+        self.sched_eff
+    }
+
+    /// The planted minimizer (distance-to-optimum reference).
+    pub fn x_star(&self) -> &[f32] {
+        &self.x_star
+    }
+
+    /// Engine rounds executed so far.
+    pub fn rounds_done(&self) -> usize {
+        self.run.round()
+    }
+
+    /// Whether every configured engine round has executed.
+    pub fn is_complete(&self) -> bool {
+        self.run.round() >= self.spec.rounds
+    }
+
+    /// The trace so far (`final_x` populated once finalized).
+    pub fn trace(&self) -> &Trace {
+        self.run.trace()
+    }
+
+    /// Nominal per-round cost at the requested budget (ladder level 0).
+    pub fn requested_cost_bits(&self) -> u64 {
+        self.ladder[0].cost_bits
+    }
+
+    /// Nominal cost of ladder level `lvl`.
+    pub fn level_cost(&self, lvl: usize) -> u64 {
+        self.ladder[lvl].cost_bits
+    }
+
+    /// Cheapest level the policy may ever grant — the admission bound:
+    /// a fleet whose budget cannot cover this can never serve the job.
+    pub fn min_cost_bits(&self, policy: Policy) -> u64 {
+        match policy {
+            Policy::Drr => self.ladder[0].cost_bits,
+            Policy::DrrAdaptive => self.ladder.last().map(|l| l.cost_bits).unwrap_or(0),
+        }
+    }
+
+    /// Highest (most precise) ladder level affordable within
+    /// `afford_bits`, per policy: strict DRR only ever grants the
+    /// requested budget; adaptive DRR may downgrade to a deeper rung.
+    pub fn pick_level(&self, policy: Policy, afford_bits: u64) -> Option<usize> {
+        match policy {
+            Policy::Drr => (self.ladder[0].cost_bits <= afford_bits).then_some(0),
+            Policy::DrrAdaptive => self.ladder.iter().position(|l| l.cost_bits <= afford_bits),
+        }
+    }
+
+    /// Execute one engine round at ladder level `lvl`. Returns the
+    /// measured `(payload_bits, side_bits)` the round put on the wire.
+    /// Allocation-free once warm.
+    pub fn step_round(&mut self, lvl: usize) -> (u64, u64) {
+        let before_payload = self.run.trace().total_payload_bits;
+        let before_side = self.run.trace().total_side_bits;
+        let mut bank =
+            ShardBank { shards: &self.problem.shards, batch: self.spec.batch, idx: &mut self.idx };
+        let mut ctx = RoundCtx {
+            problem: Problem::Sharded(&self.problem),
+            oracles: &mut bank,
+            codecs: Codecs::PerWorker(&self.ladder[lvl].codecs),
+            schedule: &self.sched_eff,
+            feedback: self.feedback.as_dyn_mut(),
+            domain: self.spec.domain,
+            participation: Participation::Full,
+            drop_prob: self.spec.drop_prob,
+            rng_policy: RngPolicy::ForkPerWorker,
+            rounds: self.spec.rounds,
+            x_star: Some(&self.x_star),
+        };
+        let stepped = self.run.step(&mut ctx, &mut self.rng);
+        debug_assert!(stepped, "step_round called on a completed job");
+        (
+            (self.run.trace().total_payload_bits - before_payload) as u64,
+            (self.run.trace().total_side_bits - before_side) as u64,
+        )
+    }
+
+    /// Close the trace (trailing record + `final_x`). Idempotent.
+    pub fn finalize(&mut self) {
+        self.run.finalize(Problem::Sharded(&self.problem), self.spec.output, Some(&self.x_star));
+    }
+
+    /// Append the feedback memory's checkpoint state to `out`.
+    pub(crate) fn save_feedback(&self, out: &mut Vec<f32>) {
+        self.feedback.save(out);
+    }
+
+    /// Restore the feedback memory; `false` on shape mismatch.
+    pub(crate) fn restore_feedback(&mut self, data: &[f32]) -> bool {
+        self.feedback.restore(data)
+    }
+}
+
+/// Owned feedback memory, concrete enough to checkpoint.
+enum FeedbackSlot {
+    None(NoFeedback),
+    Def(DefFeedback),
+}
+
+impl FeedbackSlot {
+    fn as_dyn_mut(&mut self) -> &mut dyn FeedbackMemory {
+        match self {
+            FeedbackSlot::None(f) => f,
+            FeedbackSlot::Def(f) => f,
+        }
+    }
+
+    fn save(&self, out: &mut Vec<f32>) {
+        match self {
+            FeedbackSlot::None(f) => f.save_state(out),
+            FeedbackSlot::Def(f) => f.save_state(out),
+        }
+    }
+
+    fn restore(&mut self, data: &[f32]) -> bool {
+        match self {
+            FeedbackSlot::None(f) => f.restore_state(data),
+            FeedbackSlot::Def(f) => f.restore_state(data),
+        }
+    }
+}
+
+/// Stack-assembled oracle bank over the job's owned shards: worker `i`
+/// queries its shard's full or minibatch gradient, drawing batch indices
+/// from the worker's round RNG into the job's reusable index buffer —
+/// exactly the draws [`crate::opt::engine::oracle::ShardOracle`] makes,
+/// so serve traces match inline-engine traces bit for bit.
+struct ShardBank<'a> {
+    shards: &'a [DatasetObjective],
+    batch: Option<usize>,
+    idx: &'a mut Vec<usize>,
+}
+
+impl OracleBank for ShardBank<'_> {
+    fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn query(&mut self, i: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) {
+        let obj = &self.shards[i];
+        match self.batch {
+            Some(b) => {
+                rng.sample_indices_into(obj.m, b.min(obj.m), self.idx);
+                obj.minibatch_gradient(x, Some(self.idx), out);
+            }
+            None => obj.gradient(x, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> JobSpec {
+        JobSpec::new("t", CompressorSpec::parse("ndsc-dith").unwrap(), 1.0, 16, 12, 3)
+    }
+
+    #[test]
+    fn build_validates_spec() {
+        assert!(Job::build(small_spec()).is_ok());
+        let mut s = small_spec();
+        s.r = 0.0;
+        assert!(Job::build(s).is_err());
+        let mut s = small_spec();
+        s.workers = 0;
+        assert!(Job::build(s).is_err());
+        let mut s = small_spec();
+        s.batch = Some(0);
+        assert!(Job::build(s).is_err());
+        // Fixed-rate scheme below its wire rate: infeasible.
+        let mut s = small_spec();
+        s.scheme = CompressorSpec::parse("qsgd").unwrap();
+        s.r = 1.0;
+        assert!(Job::build(s).is_err());
+    }
+
+    #[test]
+    fn ladder_is_dyadic_and_costed() {
+        let job = Job::build(small_spec().with_workers(2)).unwrap();
+        let ladder = job.ladder();
+        assert!(!ladder.is_empty());
+        assert_eq!(ladder[0].r, 1.0);
+        assert_eq!(ladder[0].codecs.len(), 2);
+        assert_eq!(ladder[0].cost_bits, 2 * 16);
+        for w in ladder.windows(2) {
+            assert!(w[1].r < w[0].r, "ladder must be strictly decreasing");
+            assert!(w[1].cost_bits <= w[0].cost_bits);
+        }
+        assert_eq!(job.min_cost_bits(Policy::Drr), ladder[0].cost_bits);
+        assert_eq!(job.min_cost_bits(Policy::DrrAdaptive), ladder.last().unwrap().cost_bits);
+        // Level picking honors affordability.
+        assert_eq!(job.pick_level(Policy::Drr, ladder[0].cost_bits), Some(0));
+        assert_eq!(job.pick_level(Policy::Drr, ladder[0].cost_bits - 1), None);
+        assert_eq!(job.pick_level(Policy::DrrAdaptive, ladder[0].cost_bits - 1), Some(1));
+    }
+
+    #[test]
+    fn step_round_advances_and_charges_measured_bits() {
+        let mut job = Job::build(small_spec()).unwrap();
+        assert_eq!(job.rounds_done(), 0);
+        let (pay, _side) = job.step_round(0);
+        assert_eq!(job.rounds_done(), 1);
+        assert!(pay > 0);
+        assert!(pay <= job.level_cost(0), "wire contract: measured ≤ nominal");
+        while !job.is_complete() {
+            job.step_round(0);
+        }
+        job.finalize();
+        assert_eq!(job.trace().records.len(), 12);
+        assert!(job.trace().final_x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn auto_step_resolves_to_stable_step() {
+        let job = Job::build(small_spec()).unwrap();
+        match job.effective_schedule() {
+            Schedule::Constant(c) => assert!(c.is_finite() && c > 0.0),
+            s => panic!("expected constant schedule, got {s:?}"),
+        }
+    }
+}

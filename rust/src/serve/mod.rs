@@ -1,0 +1,61 @@
+//! Multi-job serving layer: many concurrent optimization jobs over one
+//! shared fleet, arbitrated by a **global** per-round bit budget.
+//!
+//! The paper's algorithms assume one run owning the whole channel; in a
+//! served deployment the bit budget `R` is exactly the resource many
+//! tenants contend for. This layer multiplexes N engine runs — each an
+//! arbitrary oracle × schedule × feedback × compressor composition —
+//! over a single communication budget:
+//!
+//! ```text
+//!  submit / pause / resume / cancel             (lifecycle, fleet.rs)
+//!        │
+//!        ▼
+//!  ┌───────────┐  per-round grants (job, level R_i)  ┌───────────────┐
+//!  │ JobServer │ ───────────────────────────────────▶│ engine round   │
+//!  │  registry │  deficit round robin over a global  │ (RunState +    │
+//!  │  + DRR    │  bits/round budget (scheduler.rs)   │  RoundCtx)     │
+//!  └───────────┘                                     └───────────────┘
+//!        │                                                   │
+//!        ▼                                                   ▼
+//!  checkpoint.rs — versioned binary snapshots         per-job Trace +
+//!  (resume bit-for-bit, corrupt input ⇒ InvalidData)  FleetMetrics
+//! ```
+//!
+//! Design invariants:
+//!
+//! * **Isolation** — all cross-round state (iterate, feedback memory,
+//!   RNG streams, accounting) lives inside the [`job::Job`]; the
+//!   scheduler only decides *when* a job's next round runs, never *how*.
+//!   A job's trace is therefore bit-identical whether it runs solo,
+//!   interleaved with any mix of tenants, or suspended and resumed —
+//!   `rust/tests/test_serve.rs` proves all three.
+//! * **Budget arbitration** — each fleet round, deficit round robin
+//!   ([`scheduler::Policy`]) picks which jobs transmit and at what
+//!   effective `R_i` (a dyadic ladder of feasible budgets per
+//!   [`crate::quant::registry::CompressorSpec::is_feasible`]), with
+//!   bounded deficit counters guaranteeing starvation-freedom.
+//! * **Resumability** — [`checkpoint::save`] serializes the complete
+//!   resumable state; [`checkpoint::restore`] rebuilds the job in a
+//!   fresh context and continues the uninterrupted trace bit-for-bit.
+//!   Corrupt or truncated snapshots surface as
+//!   [`std::io::ErrorKind::InvalidData`], never as a panic (the
+//!   [`crate::coordinator::protocol`] hardening rules).
+//! * **Zero-allocation steady state** — a fleet round performs no heap
+//!   allocation per job once warm (`rust/tests/test_alloc.rs`, phase 4).
+//!
+//! The CLI load-driver is `repro serve` ([`crate::exp::serve`]); the
+//! throughput benchmark is `rust/benches/bench_serve.rs`
+//! (`BENCH_serve.json`).
+//!
+//! [`Trace`]: crate::opt::Trace
+//! [`FleetMetrics`]: crate::coordinator::metrics::FleetMetrics
+
+pub mod checkpoint;
+pub mod fleet;
+pub mod job;
+pub mod scheduler;
+
+pub use fleet::{JobId, JobServer, JobState, ServeError};
+pub use job::{FeedbackKind, Job, JobSpec, ProblemSpec};
+pub use scheduler::{Deficit, Policy};

@@ -16,6 +16,12 @@
 //!    zero heap allocations per steady-state round, sampled via the
 //!    engine's round probe: buffers, workspace, message shell and the
 //!    reserved trace all warm up once.
+//! 4. **Serve level** — a multi-job `serve::JobServer` round (deficit
+//!    accrual + rotation + one engine round per granted job, across a
+//!    heterogeneous three-tenant mix incl. error feedback) performs
+//!    exactly zero heap allocations per steady-state fleet round: the
+//!    scheduler is integer arithmetic over preallocated slots and the
+//!    per-job accounting updates rows in place.
 //!
 //! Everything lives in ONE `#[test]` so the libtest harness cannot run a
 //! second counter-touching test concurrently and pollute the tallies.
@@ -184,6 +190,51 @@ fn engine_level_zero_allocs() {
     }
 }
 
+fn serve_level_zero_allocs() {
+    use kashinflow::quant::registry::CompressorSpec;
+    use kashinflow::serve::{JobServer, JobSpec, Policy};
+
+    let n = 1024;
+    let job_rounds = 200usize;
+    let measured = 60usize;
+    let warmup = 20usize;
+    // Three heterogeneous tenants: dithered subspace, scalar dither, and
+    // a DEF-feedback subspace job — the serve hot path must stay
+    // allocation-free across all of them at once.
+    let specs = vec![
+        JobSpec::new("a-ndsc-dith", CompressorSpec::parse("ndsc-dith").unwrap(), 1.0, n, job_rounds, 1),
+        JobSpec::new("b-sd", CompressorSpec::parse("sd").unwrap(), 0.5, n, job_rounds, 2),
+        JobSpec::new("c-ndsc-def", CompressorSpec::parse("ndsc").unwrap(), 2.0, n, job_rounds, 3)
+            .with_def_feedback(),
+    ];
+    // Ample budget: every tenant is granted a round every fleet round,
+    // so the window measures the full serve path, not idling.
+    let mut srv = JobServer::new(1 << 24, Policy::Drr);
+    for s in specs {
+        srv.submit(s).expect("ample budget admits all tenants");
+    }
+    for _ in 0..warmup {
+        srv.run_round();
+    }
+    // The vector is preallocated: the push itself must not allocate.
+    let mut counts: Vec<usize> = Vec::with_capacity(measured);
+    for _ in 0..measured {
+        let before = alloc_count();
+        let served = srv.run_round();
+        assert_eq!(served, 3, "every tenant must be granted a round");
+        counts.push(alloc_count() - before);
+    }
+    for (i, &grew) in counts.iter().enumerate() {
+        assert_eq!(
+            grew,
+            0,
+            "steady-state fleet round {i} performed {grew} heap allocations \
+             (allocation-free serve contract violated; warm-up window = {warmup} rounds)"
+        );
+    }
+    assert!(warmup + measured < job_rounds, "no job may finalize inside the window");
+}
+
 /// One test fn on purpose: all phases read the global counter, and the
 /// libtest harness runs separate `#[test]`s on concurrent threads.
 #[test]
@@ -191,4 +242,5 @@ fn zero_steady_state_allocations() {
     codec_level_zero_allocs();
     coordinator_level_zero_allocs();
     engine_level_zero_allocs();
+    serve_level_zero_allocs();
 }

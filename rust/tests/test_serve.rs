@@ -1,0 +1,335 @@
+//! Serving-layer integration suite: isolation, resumability, fairness.
+//!
+//! * **Isolation** — a job's trace is bit-identical whether it runs
+//!   solo, interleaved with three other tenants under an ample budget,
+//!   or starved under a scarce budget (strict DRR): the scheduler may
+//!   only decide *when* rounds run, never *what* they compute.
+//! * **Engine parity** — the serve path *is* the engine: a served job's
+//!   trace equals a hand-built `Engine::run` of the same composition
+//!   under the job's derived seeds.
+//! * **Resumability** — a job checkpointed mid-run and restored into a
+//!   fresh fleet finishes with exactly the uninterrupted trace, for both
+//!   DEF-feedback and no-feedback jobs; corrupt/truncated snapshots are
+//!   `InvalidData`, never a panic.
+//! * **Fairness** — deficit counters stay within their cap and every
+//!   live job is served within the starvation bound under an adversarial
+//!   tiny-R + greedy high-R mix.
+
+mod common;
+
+use std::collections::HashMap;
+use std::io;
+
+use common::assert_trace_bit_identical;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::opt::engine::oracle::ShardOracle;
+use kashinflow::opt::engine::{Codecs, Engine, OutputMode, Problem, RngPolicy};
+use kashinflow::opt::multi::ShardedProblem;
+use kashinflow::opt::objectives::Loss;
+use kashinflow::opt::Trace;
+use kashinflow::quant::registry::CompressorSpec;
+use kashinflow::quant::Compressor;
+use kashinflow::serve::checkpoint;
+use kashinflow::serve::job::{DATA_SALT, FRAME_SALT, RUN_SALT};
+use kashinflow::serve::scheduler::Deficit;
+use kashinflow::serve::{Job, JobServer, JobSpec, JobState, Policy};
+
+fn spec(name: &str, scheme: &str, r: f32, n: usize, rounds: usize, seed: u64) -> JobSpec {
+    JobSpec::new(name, CompressorSpec::parse(scheme).unwrap(), r, n, rounds, seed)
+}
+
+/// Four heterogeneous tenants (schemes, budgets, feedback, worker
+/// counts) used by the isolation and checkpoint tests.
+fn four_tenants(n: usize, rounds: usize) -> Vec<JobSpec> {
+    vec![
+        spec("a-ndsc-dith", "ndsc-dith", 1.0, n, rounds, 11),
+        spec("b-sd", "sd", 0.5, n, rounds, 22).with_workers(2),
+        spec("c-ndsc-def", "ndsc", 2.0, n, rounds, 33).with_def_feedback(),
+        spec("d-topk", "topk1b", 2.0, n, rounds, 44),
+    ]
+}
+
+/// Run one spec to completion in its own single-tenant fleet and return
+/// its finalized trace.
+fn solo_trace(s: JobSpec) -> Trace {
+    let rounds = s.rounds;
+    let mut srv = JobServer::new(1 << 24, Policy::Drr);
+    let id = srv.submit(s).unwrap();
+    srv.run(rounds + 4);
+    assert_eq!(srv.state(id), Some(JobState::Finished));
+    srv.job(id).unwrap().trace().clone()
+}
+
+#[test]
+fn served_job_matches_hand_built_engine_run() {
+    // The serve path must be the engine, not a reimplementation: rebuild
+    // the job's exact composition by hand from its salted seed streams
+    // and compare whole traces bitwise.
+    let n = 32;
+    let rounds = 25;
+    let s = spec("parity", "ndsc-dith", 1.0, n, rounds, 77).with_workers(2);
+    let seed = s.seed;
+    let served = solo_trace(s);
+
+    // Hand-built baseline under the job's derivation discipline.
+    let mut data_rng = Rng::seed_from(seed ^ DATA_SALT);
+    let (shards, x_star) = kashinflow::data::synthetic::planted_regression_shards(
+        2,
+        10,
+        n,
+        Loss::Square,
+        &mut data_rng,
+        false,
+    );
+    let problem = ShardedProblem::new(shards);
+    let step = problem.stable_step();
+    let mut frame_rng = Rng::seed_from(seed ^ FRAME_SALT);
+    let mut level0_rng = frame_rng.fork(0);
+    let scheme = CompressorSpec::parse("ndsc-dith").unwrap();
+    let codecs: Vec<Box<dyn Compressor>> =
+        (0..2).map(|_| scheme.build(n, 1.0, &mut level0_rng)).collect();
+    let mut run_rng = Rng::seed_from(seed ^ RUN_SALT);
+    let mut engine = Engine::new(
+        Problem::Sharded(&problem),
+        kashinflow::opt::engine::schedule::Schedule::Constant(step),
+        rounds,
+    )
+    .with_codecs(Codecs::PerWorker(&codecs))
+    .with_rng_policy(RngPolicy::ForkPerWorker)
+    .with_output(OutputMode::PolyakAverage);
+    for shard in &problem.shards {
+        engine = engine.with_oracle(ShardOracle::new(shard, None));
+    }
+    let baseline = engine.run(&vec![0.0; n], Some(&x_star), &mut run_rng);
+    assert_trace_bit_identical(&served, &baseline, "serve vs hand-built engine");
+}
+
+#[test]
+fn interleaved_four_job_serve_is_isolated() {
+    let n = 24;
+    let rounds = 30;
+    let solos: Vec<Trace> = four_tenants(n, rounds).into_iter().map(solo_trace).collect();
+
+    // Ample budget: every tenant is served every fleet round.
+    let mut ample = JobServer::new(1 << 24, Policy::Drr);
+    let ids: Vec<_> =
+        four_tenants(n, rounds).into_iter().map(|s| ample.submit(s).unwrap()).collect();
+    ample.run(rounds * 8);
+    for (i, &id) in ids.iter().enumerate() {
+        assert_eq!(ample.state(id), Some(JobState::Finished));
+        assert_trace_bit_identical(
+            ample.job(id).unwrap().trace(),
+            &solos[i],
+            &format!("ample-budget job {i}"),
+        );
+    }
+
+    // Scarce budget (≈40% of aggregate demand): jobs are time-sliced in
+    // a completely different interleaving — traces must not notice.
+    let demand: u64 = {
+        let mut srv = JobServer::new(1 << 24, Policy::Drr);
+        four_tenants(n, rounds)
+            .into_iter()
+            .map(|s| {
+                let id = srv.submit(s).unwrap();
+                srv.job(id).unwrap().requested_cost_bits()
+            })
+            .sum()
+    };
+    let mut scarce = JobServer::new(((demand as f32 * 0.4) as usize).max(1), Policy::Drr);
+    let ids: Vec<_> =
+        four_tenants(n, rounds).into_iter().map(|s| scarce.submit(s).unwrap()).collect();
+    scarce.run(rounds * 64);
+    for (i, &id) in ids.iter().enumerate() {
+        assert_eq!(scarce.state(id), Some(JobState::Finished), "job {i} must finish");
+        assert_trace_bit_identical(
+            scarce.job(id).unwrap().trace(),
+            &solos[i],
+            &format!("scarce-budget job {i}"),
+        );
+    }
+    // The interleavings really did differ: under scarcity not every
+    // fleet round served all four tenants.
+    assert!(
+        scarce.round() > ample.round(),
+        "scarce fleet should need more rounds ({} vs {})",
+        scarce.round(),
+        ample.round()
+    );
+}
+
+#[test]
+fn paused_and_resumed_job_trace_is_uninterrupted() {
+    let n = 24;
+    let rounds = 30;
+    let straight = solo_trace(spec("p", "ndsc-dith", 1.0, n, rounds, 5));
+    let mut srv = JobServer::new(1 << 24, Policy::Drr);
+    let id = srv.submit(spec("p", "ndsc-dith", 1.0, n, rounds, 5)).unwrap();
+    for _ in 0..10 {
+        srv.run_round();
+    }
+    srv.pause(id).unwrap();
+    for _ in 0..25 {
+        srv.run_round(); // idle: nothing live
+    }
+    assert_eq!(srv.job(id).unwrap().rounds_done(), 10);
+    srv.resume(id).unwrap();
+    srv.run(rounds * 4);
+    assert_eq!(srv.state(id), Some(JobState::Finished));
+    assert_trace_bit_identical(srv.job(id).unwrap().trace(), &straight, "pause/resume");
+}
+
+#[test]
+fn checkpoint_restore_resumes_bit_for_bit() {
+    // Both memory shapes: a DEF-feedback job (per-worker error state must
+    // travel in the snapshot) and a no-feedback dithered job (RNG streams
+    // must travel). Snapshot at round t, restore into a *fresh* fleet —
+    // the process-restart stand-in — and finish.
+    let n = 24;
+    let rounds = 30;
+    let cases = [
+        spec("def", "ndsc", 2.0, n, rounds, 61).with_workers(2).with_def_feedback(),
+        spec("nofb", "ndsc-dith", 1.0, n, rounds, 62).with_workers(2),
+    ];
+    for s in cases {
+        let label = s.name.clone();
+        let uninterrupted = solo_trace(s.clone());
+        let mut srv = JobServer::new(1 << 24, Policy::Drr);
+        let id = srv.submit(s).unwrap();
+        for _ in 0..13 {
+            srv.run_round();
+        }
+        let bytes = srv.checkpoint(id).unwrap();
+        srv.cancel(id).unwrap(); // the original is killed mid-run
+        let mut fresh = JobServer::new(1 << 24, Policy::Drr);
+        let rid = fresh.restore(&bytes).unwrap();
+        assert_eq!(fresh.job(rid).unwrap().rounds_done(), 13, "{label}: resumes at round t");
+        fresh.run(rounds * 4);
+        assert_eq!(fresh.state(rid), Some(JobState::Finished));
+        assert_trace_bit_identical(
+            fresh.job(rid).unwrap().trace(),
+            &uninterrupted,
+            &format!("checkpoint round-trip ({label})"),
+        );
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_checkpoints_surface_invalid_data() {
+    let mut job = Job::build(
+        spec("ckpt", "ndsc-dith", 1.0, 16, 8, 9).with_workers(2).with_def_feedback(),
+    )
+    .unwrap();
+    for _ in 0..3 {
+        job.step_round(0);
+    }
+    let good = checkpoint::save(&job).unwrap();
+    assert!(checkpoint::restore(&good).is_ok());
+    // Every truncation point must be a clean InvalidData error — the
+    // short read can land inside any field.
+    for cut in 0..good.len() {
+        let err = checkpoint::restore(&good[..cut])
+            .expect_err(&format!("truncation at {cut}/{} must fail", good.len()));
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData, "truncation at byte {cut}");
+    }
+    // Single-byte corruptions must never panic: either the reader
+    // rejects them (InvalidData) or the flip landed in a value field and
+    // restores to a (different) well-formed job.
+    for pos in 0..good.len() {
+        let mut bad = good.clone();
+        bad[pos] ^= 0xA5;
+        if let Err(e) = checkpoint::restore(&bad) {
+            assert_eq!(
+                e.kind(),
+                io::ErrorKind::InvalidData,
+                "corruption at byte {pos} must be InvalidData, got {e:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn deficit_counters_stay_bounded_and_no_job_starves() {
+    // Adversarial mix: a tiny-R tenant, a greedy high-R multi-worker
+    // tenant, and two mid-size tenants, under a budget that fits the
+    // greedy job only barely (so it must bank several quanta per grant).
+    let n = 64;
+    let rounds = 400;
+    let specs = vec![
+        spec("tiny", "randk1b", 0.25, n, rounds, 1),
+        spec("greedy", "qsgd", 4.0, n, rounds, 2).with_workers(2),
+        spec("mid-a", "ndsc-dith", 1.0, n, rounds, 3),
+        spec("mid-b", "sd", 1.0, n, rounds, 4),
+    ];
+    let greedy_cost = 2 * 4 * n as u64; // workers · ⌊nR⌋
+    let budget = greedy_cost as usize + 64;
+    let mut srv = JobServer::new(budget, Policy::Drr);
+    let ids: Vec<_> = specs.into_iter().map(|s| srv.submit(s).unwrap()).collect();
+    let jobs = ids.len() as u64;
+    let quantum = (budget as u64 / jobs).max(1);
+    // Starvation bound: once first in rotation with a full-budget round,
+    // a job transmits as soon as its deficit covers its cost; accrual is
+    // one quantum per round.
+    let k_bound = jobs * (greedy_cost.div_ceil(quantum) + 1);
+
+    let mut last_served: HashMap<u64, (u64, u64)> =
+        ids.iter().map(|&id| (id, (0u64, 0u64))).collect(); // (rounds_served, fleet round)
+    let window = 240u64;
+    for fleet_round in 1..=window {
+        srv.run_round();
+        for (slot, &id) in ids.iter().enumerate() {
+            if srv.state(id) != Some(JobState::Running) {
+                continue;
+            }
+            let job = srv.job(id).unwrap();
+            // Bounded deficit: never beyond the accrual cap.
+            let deficit = srv.deficit_bits(id).unwrap();
+            let cap = Deficit::cap(quantum, job.requested_cost_bits());
+            assert!(
+                deficit <= cap,
+                "job {slot} deficit {deficit} exceeds cap {cap} at fleet round {fleet_round}"
+            );
+            // Starvation-freedom: every live job transmits within K.
+            let served_now = srv.metrics().jobs[slot].rounds_served;
+            let (served_before, since) = last_served[&id];
+            if served_now > served_before {
+                last_served.insert(id, (served_now, fleet_round));
+            } else {
+                assert!(
+                    fleet_round - since <= k_bound,
+                    "job {slot} not served for {} fleet rounds (bound {k_bound})",
+                    fleet_round - since
+                );
+            }
+        }
+    }
+    // Everyone made real progress, greedy included.
+    for (slot, &id) in ids.iter().enumerate() {
+        let served = srv.metrics().jobs[slot].rounds_served;
+        assert!(served >= window / k_bound, "job {slot} served only {served} rounds");
+    }
+}
+
+#[test]
+fn adaptive_policy_admits_and_downgrades_what_strict_drr_cannot() {
+    let n = 64;
+    // Greedy tenant at R=4 costs 256 bits/round; offer only 160.
+    let s = || spec("greedy", "qsgd", 4.0, n, 60, 8);
+    let mut strict = JobServer::new(160, Policy::Drr);
+    assert!(strict.submit(s()).is_err(), "strict DRR cannot admit a 256-bit job on 160 bits");
+    let mut adaptive = JobServer::new(160, Policy::DrrAdaptive);
+    let id = adaptive.submit(s()).unwrap();
+    adaptive.run(400);
+    assert_eq!(adaptive.state(id), Some(JobState::Finished));
+    let job = adaptive.job(id).unwrap();
+    // Every served round fits the deeper rung: measured payload per
+    // round is bounded by the downgraded level's nominal cost.
+    let per_round_max =
+        job.trace().records.iter().map(|r| r.payload_bits).max().unwrap_or(0) as u64;
+    assert!(per_round_max > 0);
+    assert!(
+        per_round_max <= job.ladder()[1].cost_bits,
+        "served rounds must fit the downgraded budget ({per_round_max} vs {})",
+        job.ladder()[1].cost_bits
+    );
+}
