@@ -45,12 +45,19 @@ impl BitWriter {
         }
     }
 
-    /// Write the low `width` bits of `value` (`width ≤ 64`).
+    /// Write the low `width` bits of `value` (`width ≤ 64`, enforced in
+    /// every build profile).
+    ///
+    /// Bits of `value` above `width` are **masked off up front**: the wire
+    /// stream is always exactly `width` bits of `value & ((1 << width) - 1)`
+    /// regardless of build profile. A quantizer that hands over an
+    /// over-wide value therefore produces the same (truncated) bytes in
+    /// debug and release — it cannot corrupt stream *accounting*, only its
+    /// own payload, and the adversarial tests below pin that contract.
     pub fn write_bits(&mut self, value: u64, width: usize) {
-        debug_assert!(width <= 64);
-        debug_assert!(width == 64 || value < (1u64 << width), "value {value} overflows {width} bits");
+        assert!(width <= 64, "write_bits width {width} > 64");
         let mut remaining = width;
-        let mut v = value;
+        let mut v = if width == 64 { value } else { value & ((1u64 << width) - 1) };
         while remaining > 0 {
             let bit_in_byte = self.len_bits % 8;
             if bit_in_byte == 0 {
@@ -99,9 +106,10 @@ impl<'a> BitReader<'a> {
         BitReader { buf, pos_bits: 0 }
     }
 
-    /// Read `width` bits (`≤ 64`). Panics past end of buffer.
+    /// Read `width` bits (`≤ 64`, enforced in every build profile).
+    /// Panics past end of buffer.
     pub fn read_bits(&mut self, width: usize) -> u64 {
-        debug_assert!(width <= 64);
+        assert!(width <= 64, "read_bits width {width} > 64");
         let mut out = 0u64;
         let mut got = 0usize;
         while got < width {
@@ -296,6 +304,91 @@ mod tests {
         let bytes2 = w2.into_bytes();
         assert_eq!(bytes2, want);
         assert_eq!(bytes2.capacity(), cap, "reuse must not shrink capacity");
+    }
+
+    /// Edge widths {0, 1, 63, 64} round-trip exactly, in release builds
+    /// too (none of these rely on `debug_assert!`).
+    #[test]
+    fn edge_widths_roundtrip_release_mode() {
+        let cases: &[(u64, usize)] = &[
+            (0, 0), // width-0 write is a no-op
+            (1, 1),
+            (0, 1),
+            ((1u64 << 63) - 1, 63),
+            (1u64 << 62, 63),
+            (u64::MAX, 64),
+            (0, 64),
+            (0x8000_0000_0000_0001, 64),
+        ];
+        let mut w = BitWriter::new();
+        for &(v, width) in cases {
+            w.write_bits(v, width);
+        }
+        let total: usize = cases.iter().map(|c| c.1).sum();
+        assert_eq!(w.len_bits(), total);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, width) in cases {
+            assert_eq!(r.read_bits(width), v, "width {width}");
+        }
+        assert_eq!(r.pos_bits(), total);
+    }
+
+    /// Over-wide values are masked up front: the wire bytes and the bit
+    /// accounting are identical to writing the pre-masked value, in every
+    /// build profile.
+    #[test]
+    fn overwide_values_truncate_to_masked_wire_bytes() {
+        for &(value, width) in
+            &[(u64::MAX, 3usize), (0xABCD, 7), (1u64 << 40, 13), (u64::MAX, 1), (0b100, 2)]
+        {
+            let masked = value & ((1u64 << width) - 1);
+            let mut dirty = BitWriter::new();
+            dirty.write_bits(0b1, 5); // unaligned start so masking must not smear
+            dirty.write_bits(value, width);
+            dirty.write_bits(0x55, 8);
+            let mut clean = BitWriter::new();
+            clean.write_bits(0b1, 5);
+            clean.write_bits(masked, width);
+            clean.write_bits(0x55, 8);
+            assert_eq!(dirty.len_bits(), clean.len_bits(), "width {width}");
+            let (db, cb) = (dirty.into_bytes(), clean.into_bytes());
+            assert_eq!(db, cb, "value {value:#x} width {width}");
+            let mut r = BitReader::new(&db);
+            assert_eq!(r.read_bits(5), 0b1);
+            assert_eq!(r.read_bits(width), masked);
+            assert_eq!(r.read_bits(8), 0x55);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "width 65 > 64")]
+    fn writer_rejects_width_over_64_in_release() {
+        let mut w = BitWriter::new();
+        w.write_bits(0, 65);
+    }
+
+    #[test]
+    #[should_panic(expected = "width 65 > 64")]
+    fn reader_rejects_width_over_64_in_release() {
+        let bytes = vec![0u8; 16];
+        let mut r = BitReader::new(&bytes);
+        r.read_bits(65);
+    }
+
+    /// Width-0 reads/writes are no-ops even at a dirty, unaligned cursor.
+    #[test]
+    fn width_zero_is_noop_mid_stream() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(u64::MAX, 0); // value ignored entirely at width 0
+        w.write_bits(0b11, 2);
+        assert_eq!(w.len_bits(), 5);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_bits(0), 0);
+        assert_eq!(r.read_bits(2), 0b11);
     }
 
     #[test]
