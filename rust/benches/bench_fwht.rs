@@ -1,20 +1,40 @@
 //! FWHT micro-benchmarks — the L3 hot-path kernel (and the §Perf target).
 //! Run with `cargo bench --bench bench_fwht`.
+//!
+//! Covers the three kernels side by side: the textbook scalar reference
+//! (`fwht_reference_inplace`), the blocked/SIMD single-threaded kernel
+//! (`fwht_inplace`), and the scoped-thread kernel (`fwht_inplace_mt`).
+//! All three are bit-identical (see `linalg::fwht` tests); the only
+//! difference measured here is speed. The bytes/s column counts the
+//! in-place buffer once (`n * 4`).
 
-use kashinflow::linalg::fwht::fwht_inplace;
+use kashinflow::linalg::fwht::{fwht_inplace, fwht_inplace_mt, fwht_reference_inplace};
 use kashinflow::linalg::rng::Rng;
 use kashinflow::testkit::bench::{black_box, Bencher};
 
 fn main() {
-    let mut b = Bencher::new();
+    let mut b = Bencher::from_env();
     let mut rng = Rng::seed_from(1);
     for &n in &[1024usize, 4096, 16384, 65536, 262144, 1048576] {
         let base: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
         let mut buf = base.clone();
-        b.run_throughput(&format!("fwht/{n}"), n, || {
+        b.run_bytes(&format!("fwht/reference/{n}"), n * 4, || {
+            buf.copy_from_slice(&base);
+            fwht_reference_inplace(&mut buf);
+            black_box(buf[0]);
+        });
+        b.run_bytes(&format!("fwht/blocked/{n}"), n * 4, || {
             buf.copy_from_slice(&base);
             fwht_inplace(&mut buf);
             black_box(buf[0]);
         });
+        // MT only pays off above MT_FWHT_MIN_DIM; benching it across the
+        // whole range shows where the crossover sits.
+        b.run_bytes(&format!("fwht/mt8/{n}"), n * 4, || {
+            buf.copy_from_slice(&base);
+            fwht_inplace_mt(&mut buf, 8);
+            black_box(buf[0]);
+        });
     }
+    b.save_json("BENCH_fwht.json");
 }

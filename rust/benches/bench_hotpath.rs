@@ -1,0 +1,91 @@
+//! The compression hot path, kernel by kernel — writes `BENCH_hotpath.json`.
+//! Run with `cargo bench --bench bench_hotpath` (`BENCH_SMOKE=1` for the CI
+//! smoke settings).
+//!
+//! Two families of rows, every one carrying the bytes/s column:
+//!
+//! * `fwht/<kernel>/<n>` — the transform alone at n up to 2^20, for the
+//!   scalar reference, the blocked/SIMD kernel, the scoped-thread kernel
+//!   and the `fwht_inplace_auto` dispatcher the codecs actually call.
+//! * `ndsc/<op>/<path>/<n>` — the full codec round: `reference` is the
+//!   unfused scalar pipeline (`compress_reference_into`, three sweeps:
+//!   embed → normalize → quantize), `fused` is the production fast path
+//!   (`compress_into`, one sweep with the 1/√N scale deferred into the
+//!   quantizer). Both run in the SAME process invocation, so the
+//!   fused-vs-reference ratio in one `BENCH_hotpath.json` is the
+//!   apples-to-apples speedup of this PR's fusion — the acceptance
+//!   criterion is fused ≥ 2× reference on `ndsc/compress/*/65536`.
+//!
+//! Byte accounting: transforms touch `n * 4` bytes in place; codec rows
+//! charge the uncompressed input (`n * 4`), i.e. the rate at which raw
+//! gradient bytes are consumed (compress) or reproduced (decompress).
+
+use kashinflow::linalg::fwht::{
+    fwht_inplace, fwht_inplace_auto, fwht_inplace_mt, fwht_reference_inplace,
+};
+use kashinflow::linalg::rng::Rng;
+use kashinflow::quant::ndsc::Ndsc;
+use kashinflow::quant::{Compressed, Compressor, Workspace};
+use kashinflow::testkit::bench::{black_box, Bencher};
+
+fn bench_fwht(b: &mut Bencher) {
+    let mut rng = Rng::seed_from(1);
+    for &n in &[1usize << 12, 1 << 16, 1 << 18, 1 << 20] {
+        let base: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut buf = base.clone();
+        let mut case = |name: &str, f: &mut dyn FnMut(&mut [f32])| {
+            b.run_bytes(&format!("fwht/{name}/{n}"), n * 4, || {
+                buf.copy_from_slice(&base);
+                f(&mut buf);
+                black_box(buf[0]);
+            });
+        };
+        case("reference", &mut fwht_reference_inplace);
+        case("blocked", &mut fwht_inplace);
+        case("mt8", &mut |x| fwht_inplace_mt(x, 8));
+        case("auto", &mut fwht_inplace_auto);
+    }
+}
+
+fn bench_ndsc(b: &mut Bencher, dithered: bool) {
+    let tag = if dithered { "ndsc-dith" } else { "ndsc" };
+    for &n in &[1usize << 16, 1 << 20] {
+        let mut rng = Rng::seed_from(2);
+        let codec = if dithered {
+            Ndsc::hadamard_dithered(n, 2.0, &mut rng)
+        } else {
+            Ndsc::hadamard(n, 2.0, &mut rng)
+        };
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+        let mut ws = Workspace::for_compressor(&codec);
+        let mut msg = Compressed::empty(n);
+        let mut dec = vec![0.0f32; n];
+        // Same-run baseline first, fused second: the ratio between the two
+        // rows is the PR's measured speedup.
+        let mut enc_rng = Rng::seed_from(3);
+        b.run_bytes(&format!("{tag}/compress/reference/{n}"), n * 4, || {
+            codec.compress_reference_into(&y, &mut enc_rng, &mut ws, &mut msg);
+            black_box(msg.payload_bits);
+        });
+        b.run_bytes(&format!("{tag}/compress/fused/{n}"), n * 4, || {
+            codec.compress_into(&y, &mut enc_rng, &mut ws, &mut msg);
+            black_box(msg.payload_bits);
+        });
+        b.run_bytes(&format!("{tag}/decompress/reference/{n}"), n * 4, || {
+            codec.decompress_reference_into(&msg, &mut ws, &mut dec);
+            black_box(dec[0]);
+        });
+        b.run_bytes(&format!("{tag}/decompress/fused/{n}"), n * 4, || {
+            codec.decompress_into(&msg, &mut ws, &mut dec);
+            black_box(dec[0]);
+        });
+    }
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    bench_fwht(&mut b);
+    bench_ndsc(&mut b, false);
+    bench_ndsc(&mut b, true);
+    b.save_json("BENCH_hotpath.json");
+}

@@ -19,6 +19,19 @@ pub use crate::quant::registry::Fp32Passthrough;
 /// and is the per-run override (tests force both paths with it).
 pub const PARALLEL_DECODE_MIN_DIM: usize = 8192;
 
+/// Dimension at which [`crate::linalg::fwht::fwht_inplace_auto`] switches
+/// from the single-threaded cache-blocked kernel to the rayon-free
+/// `std::thread::scope` multi-threaded transform. Below this a transform
+/// is well under a millisecond and thread spawns would dominate; above it
+/// the butterfly stages are memory-bandwidth-bound and the column-panel
+/// fan-out is a near-linear speedup. Deliberately set well above
+/// [`PARALLEL_DECODE_MIN_DIM`]: the server's per-participant decode
+/// fan-out and the in-transform fan-out would otherwise nest and
+/// oversubscribe cores at moderate `n`. This constant is the single
+/// source of truth for every caller (kernel, server decode, benches,
+/// threshold-boundary tests).
+pub const MT_FWHT_MIN_DIM: usize = 1 << 18;
+
 /// Compression scheme selector (the CLI surface of [`crate::quant`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SchemeKind {

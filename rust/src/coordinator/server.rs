@@ -13,7 +13,12 @@
 //! spends participant-many scoped-thread spawns per round to parallelize
 //! the `O(N log N)` inverse transforms — stack setup is the price of the
 //! fan-out, while the decoded data still lands in the same warm,
-//! recycled buffers.
+//! recycled buffers. At very large `n` the transform *inside* each decode
+//! additionally goes multi-threaded (the FWHT dispatches through
+//! [`fwht_inplace_auto`](crate::linalg::fwht::fwht_inplace_auto) above
+//! [`MT_FWHT_MIN_DIM`](crate::coordinator::config::MT_FWHT_MIN_DIM));
+//! that threshold sits deliberately above [`PARALLEL_DECODE_MIN_DIM`] so
+//! the two fan-outs do not nest at moderate dimensions.
 //!
 //! It is also *seed-deterministic*: the server always collects exactly
 //! `m` frames per round (the transport marks lost frames instead of

@@ -13,7 +13,9 @@
 //! All three implement [`Frame`]; the embedding and quantization layers are
 //! generic over it.
 
-use crate::linalg::fwht::{fwht_normalized_inplace, next_pow2};
+use crate::linalg::fwht::{
+    fwht_inplace_auto, fwht_normalized_inplace, fwht_normalized_reference_inplace, next_pow2,
+};
 use crate::linalg::rng::Rng;
 use crate::linalg::vecops::{dot, matvec, matvec_t};
 
@@ -55,6 +57,33 @@ pub trait Frame: Send + Sync {
     fn pinv_embed_into(&self, y: &[f32], out: &mut [f32], tmp: &mut Vec<f32>) {
         let _ = tmp;
         self.pinv_embed(y, out);
+    }
+    /// Deferred-scale minimum-norm pre-image: fill `out` with the embed
+    /// *without* its final uniform scaling and return the scale constant
+    /// `c > 0`, such that `pinv_embed(y)[i] == out[i] * c` **bitwise**
+    /// for every `i` (one IEEE multiply by `c`, exactly the multiply the
+    /// unfused path performs in its scaling sweep). Frames whose embed
+    /// ends in such a sweep (Hadamard: the FWHT's `1/√N`) return
+    /// `Some(c)` so the codec can fold that multiply into its quantize
+    /// pass and skip one full sweep over `N` floats; the default returns
+    /// `None` and callers fall back to [`Frame::pinv_embed_into`].
+    fn pinv_embed_deferred(&self, y: &[f32], out: &mut [f32]) -> Option<f32> {
+        let _ = (y, out);
+        None
+    }
+    /// Reference (unfused, scalar-kernel) twin of
+    /// [`Frame::pinv_embed_into`]: bit-identical output via the
+    /// pre-optimization code path — kept so the fused-kernel equivalence
+    /// tier and the hot-path bench have a same-run baseline. The default
+    /// (dense frames, which have no fused path) just delegates.
+    fn pinv_embed_reference_into(&self, y: &[f32], out: &mut [f32], tmp: &mut Vec<f32>) {
+        self.pinv_embed_into(y, out, tmp);
+    }
+    /// Reference twin of [`Frame::apply_inplace`] — same contract, same
+    /// bits, pre-optimization code path (separate transform, scale and
+    /// gather sweeps for transform-based frames).
+    fn apply_inplace_reference(&self, x: &mut [f32], out: &mut [f32]) {
+        self.apply_inplace(x, out);
     }
 }
 
@@ -127,10 +156,56 @@ impl Frame for HadamardFrame {
 
     /// `Sx` with the FWHT run directly on `x` — zero allocations; this is
     /// what the decode hot path uses every round.
+    ///
+    /// **Fused:** the unnormalized transform runs first and the `1/√N`
+    /// scaling folds into the gather, so only the `n` sampled coordinates
+    /// pay the scale multiply instead of a full `N`-sweep. Per gathered
+    /// element the op sequence (`(x[r]·scale)` then `signs[r]·…`) is
+    /// identical to the unfused transform-scale-gather path, so the
+    /// result is bit-identical to [`Frame::apply_inplace_reference`] —
+    /// the conformance equivalence tier enforces it.
     fn apply_inplace(&self, x: &mut [f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.big_n);
         debug_assert_eq!(out.len(), self.n);
-        fwht_normalized_inplace(x);
+        fwht_inplace_auto(x);
+        let scale = 1.0 / (x.len() as f32).sqrt();
+        for (o, &r) in out.iter_mut().zip(&self.rows) {
+            *o = self.signs[r] * (x[r] * scale);
+        }
+    }
+
+    /// Deferred-scale embed: scatter + sign + **unnormalized** FWHT, with
+    /// the `1/√N` returned for the caller's own per-element pass.
+    fn pinv_embed_deferred(&self, y: &[f32], out: &mut [f32]) -> Option<f32> {
+        debug_assert_eq!(y.len(), self.n);
+        debug_assert_eq!(out.len(), self.big_n);
+        out.fill(0.0);
+        for (i, &r) in self.rows.iter().enumerate() {
+            out[r] = self.signs[r] * y[i];
+        }
+        fwht_inplace_auto(out);
+        Some(1.0 / (out.len() as f32).sqrt())
+    }
+
+    /// Pre-fusion embed: scatter + sign + scalar-kernel normalized FWHT
+    /// (full scaling sweep).
+    fn pinv_embed_reference_into(&self, y: &[f32], out: &mut [f32], tmp: &mut Vec<f32>) {
+        let _ = tmp;
+        debug_assert_eq!(y.len(), self.n);
+        debug_assert_eq!(out.len(), self.big_n);
+        out.fill(0.0);
+        for (i, &r) in self.rows.iter().enumerate() {
+            out[r] = self.signs[r] * y[i];
+        }
+        fwht_normalized_reference_inplace(out);
+    }
+
+    /// Pre-fusion decode: scalar-kernel normalized FWHT (its own scaling
+    /// sweep), then the plain gather.
+    fn apply_inplace_reference(&self, x: &mut [f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.big_n);
+        debug_assert_eq!(out.len(), self.n);
+        fwht_normalized_reference_inplace(x);
         for (o, &r) in out.iter_mut().zip(&self.rows) {
             *o = self.signs[r] * x[r];
         }
@@ -429,6 +504,39 @@ mod tests {
         let mut got = vec![0.0; 100];
         f.apply_inplace(&mut scratch, &mut got);
         assert_eq!(got, want, "apply_inplace must be bit-identical to apply");
+    }
+
+    /// The fused decode (scale folded into the gather) and the deferred
+    /// embed (scale returned, not applied) must be bit-identical to the
+    /// unfused reference sweeps: `|a|·c == |a·c|` and max-monotonicity of
+    /// the positive scale make the fusion exact, not approximate.
+    #[test]
+    fn hadamard_fused_paths_bit_identical_to_reference() {
+        let mut rng = Rng::seed_from(21);
+        for &n in &[37usize, 100, 1024] {
+            let f = HadamardFrame::new(n, &mut rng);
+            let big_n = f.big_n();
+            let x: Vec<f32> = (0..big_n).map(|_| rng.gaussian_cubed()).collect();
+            let mut s1 = x.clone();
+            let mut want = vec![0.0; n];
+            f.apply_inplace_reference(&mut s1, &mut want);
+            let mut s2 = x.clone();
+            let mut got = vec![0.0; n];
+            f.apply_inplace(&mut s2, &mut got);
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "fused apply differs at n={n}"
+            );
+            let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let mut full = vec![0.0; big_n];
+            f.adjoint(&y, &mut full);
+            let mut raw = vec![0.0; big_n];
+            let c = f.pinv_embed_deferred(&y, &mut raw).expect("hadamard frames defer the scale");
+            assert!(
+                raw.iter().map(|&v| v * c).zip(&full).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "deferred embed × c differs from full embed at n={n}"
+            );
+        }
     }
 
     #[test]

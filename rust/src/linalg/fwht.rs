@@ -10,19 +10,29 @@
 //! `python/compile/kernels/hadamard.py`; both are checked against the same
 //! naive `O(N²)` oracle.
 //!
-//! Both transforms are **fully in place** — no scratch, no allocation —
-//! which is what lets `Frame::apply_inplace` and the whole compression hot
-//! path run allocation-free: the only heap the codec ever touches is the
-//! caller's reusable [`crate::quant::Workspace`].
+//! The single-threaded transforms are **fully in place** — no scratch, no
+//! allocation — which is what lets `Frame::apply_inplace` and the whole
+//! compression hot path run allocation-free: the only heap the codec ever
+//! touches is the caller's reusable [`crate::quant::Workspace`]. The
+//! multi-threaded path ([`fwht_inplace_mt`]) spawns scoped threads and a
+//! few small panel Vecs per call; it only engages above
+//! [`crate::coordinator::config::MT_FWHT_MIN_DIM`], far past the sizes the
+//! `test_alloc.rs` zero-allocation proofs pin down.
+//!
+//! Kernel structure (measurement protocol and current numbers:
+//! `EXPERIMENTS.md` §Perf, regenerated from `BENCH_hotpath.json` each CI
+//! run): stages 1/2/4 fuse into a radix-8 register kernel (`fwht8`);
+//! stages 8..BLOCK/2 run [`LANES`]-wide on one cache-resident chunk;
+//! global stages pass-fuse over `PANEL`-wide column windows so `x` is
+//! swept once, not `log2(n/BLOCK)` times. Every optimized path is
+//! bit-exact against [`fwht_reference_inplace`] — butterflies within a
+//! stage are independent, so re-blocking or threading only reorders
+//! identical f32 ops.
 
 /// In-place **unnormalized** Walsh–Hadamard transform of `x`.
 ///
 /// After the call `x = Ĥ·x₀` where `Ĥ` is the ±1 Hadamard matrix (no `1/√N`
 /// factor). `x.len()` must be a power of two.
-///
-/// The loop is cache-blocked: for small strides the butterflies of several
-/// stages are executed on one cache-resident chunk before moving on, which
-/// is what the §Perf pass settled on (see `EXPERIMENTS.md` §Perf).
 /// Cache block: 16 KiB of f32 — fits comfortably in L1/L2. Local stages
 /// (stride < `BLOCK`) run to completion on one cache-resident chunk
 /// before the next chunk is touched.
@@ -31,45 +41,272 @@ pub const BLOCK: usize = 4096;
 pub fn fwht_inplace(x: &mut [f32]) {
     let n = x.len();
     assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
-    // Process strides 1..=n/2. For cache friendliness run "local" stages
-    // (within a block of size BLOCK) fully per block, then the global ones.
-    // Butterflies use split_at_mut + zip so LLVM drops the bounds checks
-    // and autovectorizes (measured 2.4x over indexed loops — §Perf).
+    // Local stages (stride < BLOCK), one cache-resident chunk at a time.
     let local = n.min(BLOCK);
-    // Local stages, one block at a time.
     for chunk in x.chunks_mut(local) {
-        let mut h = 1;
-        while h < chunk.len() {
-            butterfly_stage(chunk, h);
-            h *= 2;
+        fwht_local(chunk);
+    }
+    // Global stages (stride >= BLOCK), pass-fused over column panels.
+    if n > BLOCK {
+        global_stages(x, BLOCK);
+    }
+}
+
+/// Explicit SIMD lane width of the butterfly kernels: 8 f32 lanes (one
+/// AVX2 register / two NEON registers). The fixed-size-array inner loops
+/// below compile to full-width vector add/sub without `target-feature`
+/// gates — the shapes are exact, so LLVM's autovectorizer has no scalar
+/// prologue or epilogue to emit (checked on the generated asm: one
+/// `vaddps` + one `vsubps` per 8 lanes on x86-64 with default codegen).
+pub const LANES: usize = 8;
+
+/// Column-panel width for the pass-fused global stages: 256 columns of
+/// f32 = 1 KiB per row touched, so a full panel (all `n/BLOCK` rows) sits
+/// in L1/L2 while *every* global stage runs over it — one memory pass
+/// over `x` instead of `log2(n/BLOCK)` passes.
+const PANEL: usize = 256;
+
+/// Radix-8 micro-kernel: stages h = 1, 2, 4 fused in registers. The op
+/// sequence per element is identical to running the three stages
+/// separately (each pair still computes the same `(a+b, a−b)` in stage
+/// order), so the result is bit-exact vs [`fwht_reference_inplace`].
+#[inline(always)]
+fn fwht8(v: &mut [f32; LANES]) {
+    for i in [0, 2, 4, 6] {
+        let (s, d) = (v[i] + v[i + 1], v[i] - v[i + 1]);
+        v[i] = s;
+        v[i + 1] = d;
+    }
+    for i in [0, 1, 4, 5] {
+        let (s, d) = (v[i] + v[i + 2], v[i] - v[i + 2]);
+        v[i] = s;
+        v[i + 2] = d;
+    }
+    for i in 0..4 {
+        let (s, d) = (v[i] + v[i + 4], v[i] - v[i + 4]);
+        v[i] = s;
+        v[i + 4] = d;
+    }
+}
+
+/// One butterfly stage over two equal-length disjoint halves at the same
+/// stride: `(a, b) ← (a+b, a−b)` lane-wise. The body runs on `[f32; LANES]`
+/// chunks so the adds/subs vectorize at full width; the remainder loop
+/// only fires for lengths < LANES (n ∈ {1, 2, 4} after the radix-8
+/// kernel, i.e. never for h ≥ 8).
+#[inline]
+fn butterfly_arrays(a: &mut [f32], b: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ac = a.chunks_exact_mut(LANES);
+    let mut bc = b.chunks_exact_mut(LANES);
+    for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
+        let av: &mut [f32; LANES] = av.try_into().unwrap();
+        let bv: &mut [f32; LANES] = bv.try_into().unwrap();
+        for i in 0..LANES {
+            let (s, d) = (av[i] + bv[i], av[i] - bv[i]);
+            av[i] = s;
+            bv[i] = d;
         }
     }
-    // Global stages (stride >= BLOCK).
-    let mut h = local;
+    for (ai, bi) in ac.into_remainder().iter_mut().zip(bc.into_remainder()) {
+        let (s, d) = (*ai + *bi, *ai - *bi);
+        *ai = s;
+        *bi = d;
+    }
+}
+
+/// Full transform of one cache-resident chunk (`len ≤ BLOCK`, power of
+/// two): radix-8 micro-kernels for stages 1/2/4, then wide butterflies
+/// for stages 8..len/2.
+fn fwht_local(chunk: &mut [f32]) {
+    let n = chunk.len();
+    if n < LANES {
+        // n ∈ {1, 2, 4}: too short for the radix-8 kernel.
+        let mut h = 1;
+        while h < n {
+            for block in chunk.chunks_exact_mut(2 * h) {
+                let (a, b) = block.split_at_mut(h);
+                butterfly_arrays(a, b);
+            }
+            h *= 2;
+        }
+        return;
+    }
+    for v in chunk.chunks_exact_mut(LANES) {
+        fwht8(v.try_into().unwrap());
+    }
+    let mut h = LANES;
     while h < n {
-        butterfly_stage(x, h);
+        for block in chunk.chunks_exact_mut(2 * h) {
+            let (a, b) = block.split_at_mut(h);
+            butterfly_arrays(a, b);
+        }
         h *= 2;
     }
 }
 
-/// One butterfly stage at stride `h` over the whole slice.
-#[inline]
-fn butterfly_stage(x: &mut [f32], h: usize) {
-    for block in x.chunks_exact_mut(2 * h) {
-        let (a, b) = block.split_at_mut(h);
-        for (ai, bi) in a.iter_mut().zip(b.iter_mut()) {
-            let s = *ai + *bi;
-            let d = *ai - *bi;
-            *ai = s;
-            *bi = d;
+/// All global stages (stride = `rowlen`, 2·rowlen, …, n/2) viewed as a
+/// `(n/rowlen) × rowlen` matrix: an element at row `r`, column `c` only
+/// ever pairs with column `c` of row `r ± h/rowlen`, so **columns are
+/// independent across every global stage**. That buys two things:
+/// pass-fusion (run all stages on one PANEL-wide column window while it
+/// is cache-resident — the `mt` path's phase 2 partitions the same
+/// windows across threads) and the bit-identity proof (any column
+/// partition executes the identical f32 op sequence per element).
+fn global_stages(x: &mut [f32], rowlen: usize) {
+    let n = x.len();
+    let rows = n / rowlen;
+    let mut col0 = 0;
+    while col0 < rowlen {
+        let colw = PANEL.min(rowlen - col0);
+        let mut rs = 1; // row stride = h / rowlen
+        while rs < rows {
+            let mut g = 0;
+            while g < rows {
+                for ra in g..g + rs {
+                    let rb = ra + rs;
+                    let (lo, hi) = x.split_at_mut(rb * rowlen);
+                    butterfly_arrays(
+                        &mut lo[ra * rowlen + col0..ra * rowlen + col0 + colw],
+                        &mut hi[col0..col0 + colw],
+                    );
+                }
+                g += 2 * rs;
+            }
+            rs *= 2;
         }
+        col0 += colw;
     }
 }
 
-/// In-place **orthonormal** Walsh–Hadamard transform: `x ← H·x` with
-/// `H = Ĥ/√N`, so `H·H = I`.
-pub fn fwht_normalized_inplace(x: &mut [f32]) {
+/// Largest power of two `≤ v` (`v ≥ 1`).
+fn prev_pow2(v: usize) -> usize {
+    debug_assert!(v >= 1);
+    1 << (usize::BITS - 1 - v.leading_zeros())
+}
+
+/// Multi-threaded in-place FWHT over `std::thread::scope` (rayon-free).
+///
+/// Phase 1 splits `x` into `T` contiguous chunks (T = largest power of
+/// two ≤ `threads` with chunks no smaller than [`BLOCK`]) and runs the
+/// full single-threaded transform on each — exactly the stages with
+/// stride < n/T. Phase 2 runs the remaining cross-chunk stages
+/// partitioned by column windows of the `T × (n/T)` matrix view, which
+/// are independent (see `global_stages`). Both phases execute the
+/// identical `(a+b, a−b)` f32 ops per element in the same stage order as
+/// [`fwht_inplace`], so the result is **bit-identical** to the
+/// single-threaded transform — the threshold-boundary tests enforce it.
+///
+/// Unlike the single-threaded paths this spawns threads and builds
+/// per-thread row-slice panels (a few small Vecs per call); callers on
+/// the allocation-free hot path only reach it via [`fwht_inplace_auto`]
+/// above [`crate::coordinator::config::MT_FWHT_MIN_DIM`], where the
+/// transform itself dwarfs that overhead.
+pub fn fwht_inplace_mt(x: &mut [f32], threads: usize) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let t = prev_pow2(threads.clamp(1, (n / BLOCK).max(1)).min(64));
+    if t <= 1 || n <= BLOCK {
+        return fwht_inplace(x);
+    }
+    let l = n / t; // per-thread chunk length: power of two, >= BLOCK
+    // Phase 1: stages with stride < l, each chunk fully local to a thread.
+    std::thread::scope(|s| {
+        for chunk in x.chunks_mut(l) {
+            s.spawn(move || {
+                for c in chunk.chunks_mut(BLOCK) {
+                    fwht_local(c);
+                }
+                if l > BLOCK {
+                    global_stages(chunk, BLOCK);
+                }
+            });
+        }
+    });
+    // Phase 2: stages with stride l..n/2 — rows of length l, one thread
+    // per disjoint column range (t ranges of width l/t ≥ BLOCK/t).
+    let w = l / t;
+    let mut panels: Vec<Vec<&mut [f32]>> = (0..t).map(|_| Vec::with_capacity(t)).collect();
+    for row in x.chunks_mut(l) {
+        let mut rest = row;
+        for panel in panels.iter_mut() {
+            let (head, tail) = rest.split_at_mut(w);
+            panel.push(head);
+            rest = tail;
+        }
+    }
+    std::thread::scope(|s| {
+        for mut panel in panels {
+            s.spawn(move || cross_chunk_stages(&mut panel));
+        }
+    });
+}
+
+/// Phase-2 worker: all butterfly stages across the given row slices
+/// (stride doubling from one row upward), pass-fused over PANEL-wide
+/// column windows exactly like [`global_stages`].
+fn cross_chunk_stages(rows: &mut [&mut [f32]]) {
+    let w = rows[0].len();
+    let nrows = rows.len();
+    let mut off = 0;
+    while off < w {
+        let cw = PANEL.min(w - off);
+        let mut rs = 1;
+        while rs < nrows {
+            let mut g = 0;
+            while g < nrows {
+                for ra in g..g + rs {
+                    let rb = ra + rs;
+                    let (lo, hi) = rows.split_at_mut(rb);
+                    butterfly_arrays(&mut lo[ra][off..off + cw], &mut hi[0][off..off + cw]);
+                }
+                g += 2 * rs;
+            }
+            rs *= 2;
+        }
+        off += cw;
+    }
+}
+
+/// Worker thread count for [`fwht_inplace_auto`], probed once.
+fn auto_threads() -> usize {
+    use std::sync::OnceLock;
+    static T: OnceLock<usize> = OnceLock::new();
+    *T.get_or_init(|| std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1).min(16))
+}
+
+/// Size-dispatched transform: multi-threaded at or above
+/// [`crate::coordinator::config::MT_FWHT_MIN_DIM`] (the single source of
+/// truth for the threshold), single-threaded below. Bit-identical either
+/// way.
+pub fn fwht_inplace_auto(x: &mut [f32]) {
+    if x.len() >= crate::coordinator::config::MT_FWHT_MIN_DIM {
+        let t = auto_threads();
+        if t > 1 {
+            return fwht_inplace_mt(x, t);
+        }
+    }
     fwht_inplace(x);
+}
+
+/// In-place **orthonormal** Walsh–Hadamard transform: `x ← H·x` with
+/// `H = Ĥ/√N`, so `H·H = I`. Dispatches through [`fwht_inplace_auto`],
+/// so the server decode path picks up the multi-threaded kernel for
+/// free above the threshold.
+pub fn fwht_normalized_inplace(x: &mut [f32]) {
+    fwht_inplace_auto(x);
+    let scale = 1.0 / (x.len() as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Reference twin of [`fwht_normalized_inplace`] built on the textbook
+/// scalar kernel — the unfused pre-optimization code path kept for the
+/// equivalence tier and as the same-run perf baseline in the hot-path
+/// bench.
+pub fn fwht_normalized_reference_inplace(x: &mut [f32]) {
+    fwht_reference_inplace(x);
     let scale = 1.0 / (x.len() as f32).sqrt();
     for v in x.iter_mut() {
         *v *= scale;
@@ -270,6 +507,66 @@ mod tests {
         fwht_normalized_inplace(&mut y);
         let after: f32 = y.iter().map(|v| v * v).sum();
         assert!((before - after).abs() < 1e-2 * before);
+    }
+
+    /// The multi-threaded transform is bitwise-equal to single-threaded at
+    /// the `MT_FWHT_MIN_DIM` threshold boundaries. `n = threshold ± one
+    /// block` is not a power of two (FWHT lengths must be), so the
+    /// boundary is bracketed at the nearest admissible sizes instead:
+    /// threshold/2 (below — `fwht_inplace_auto` stays single-threaded),
+    /// threshold (at — auto goes multi-threaded), and 2×threshold.
+    #[test]
+    fn mt_bitwise_equal_to_st_at_threshold_boundaries() {
+        use crate::coordinator::config::MT_FWHT_MIN_DIM;
+        let mut rng = Rng::seed_from(7);
+        for &n in &[MT_FWHT_MIN_DIM / 2, MT_FWHT_MIN_DIM, 2 * MT_FWHT_MIN_DIM] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let mut want = x.clone();
+            fwht_inplace(&mut want);
+            // Non-power-of-two and over-subscribed thread counts must clamp,
+            // not corrupt.
+            for t in [2usize, 3, 8] {
+                let mut got = x.clone();
+                fwht_inplace_mt(&mut got, t);
+                let mism =
+                    got.iter().zip(&want).filter(|(a, b)| a.to_bits() != b.to_bits()).count();
+                assert_eq!(mism, 0, "n={n} threads={t}: {mism} coordinates differ bitwise");
+            }
+            let mut auto = x.clone();
+            fwht_inplace_auto(&mut auto);
+            assert!(
+                auto.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "auto-dispatched transform differs at n={n}"
+            );
+        }
+    }
+
+    /// Below/at one block the MT entry point must fall back to the
+    /// single-threaded kernel (no cross-chunk stages exist).
+    #[test]
+    fn mt_falls_back_below_block() {
+        let mut rng = Rng::seed_from(8);
+        for &n in &[8usize, 256, BLOCK] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let mut want = x.clone();
+            fwht_inplace(&mut want);
+            let mut got = x;
+            fwht_inplace_mt(&mut got, 8);
+            assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn normalized_reference_matches_normalized() {
+        let mut rng = Rng::seed_from(9);
+        for &n in &[64usize, BLOCK, 2 * BLOCK] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+            let mut want = x.clone();
+            fwht_normalized_reference_inplace(&mut want);
+            let mut got = x;
+            fwht_normalized_inplace(&mut got);
+            assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()), "n={n}");
+        }
     }
 
     #[test]

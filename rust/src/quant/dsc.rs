@@ -99,15 +99,39 @@ impl SubspaceCodec {
 
     /// Compute the configured embedding of `y` into `out` (`len → N`),
     /// scratching in `tmp` (pseudo-inverse solves of non-Parseval frames).
-    fn embed_into_buf(&self, y: &[f32], out: &mut Vec<f32>, tmp: &mut Vec<f32>) {
+    ///
+    /// Returns the **deferred scale** `c`: the true embedding is
+    /// `out[i] * c` per element (see [`Frame::pinv_embed_deferred`]), and
+    /// the quantize pass must apply that multiply itself. On every path
+    /// that applies the scale eagerly (reference, dense-frame fallback,
+    /// Democratic/LV) `c == 1.0` — and `v * 1.0` is an IEEE identity — so
+    /// one downstream code path serves fused and unfused alike,
+    /// bit-identically.
+    fn embed_into_buf(
+        &self,
+        y: &[f32],
+        out: &mut Vec<f32>,
+        tmp: &mut Vec<f32>,
+        fused: bool,
+    ) -> f32 {
         out.resize(self.frame.big_n(), 0.0);
         match self.embed {
-            EmbedKind::NearDemocratic => self.frame.pinv_embed_into(y, out, tmp),
+            EmbedKind::NearDemocratic => {
+                if fused {
+                    if let Some(c) = self.frame.pinv_embed_deferred(y, out) {
+                        return c;
+                    }
+                    self.frame.pinv_embed_into(y, out, tmp);
+                } else {
+                    self.frame.pinv_embed_reference_into(y, out, tmp);
+                }
+            }
             EmbedKind::Democratic => {
                 let mut solver = self.solver.lock().unwrap();
                 solver.embed_into(self.frame.as_ref(), y, out);
             }
         }
+        1.0
     }
 
     /// Theorem-1 error factor `β` for this codec: `2^{1−R/λ}·K̂` (DSC) or
@@ -123,14 +147,32 @@ impl SubspaceCodec {
         }
     }
 
-    fn compress_deterministic_into(&self, y: &[f32], ws: &mut Workspace, out: &mut Compressed) {
+    /// Deterministic encode. `fused = true` is the hot path: deferred-scale
+    /// embed (one unnormalized FWHT, no scaling sweep) with the scale
+    /// folded into the quantize loop — **one** pass over the `N` floats
+    /// after the transform instead of three (scale sweep, `‖·‖∞` sweep,
+    /// quantize/bitpack sweep); only the irreducible `‖·‖∞` reduction
+    /// remains separate, since `s` must be known before the first
+    /// quantization. `fused = false` is the pre-fusion reference path.
+    /// Both produce bit-identical wire bytes: `s = max|aᵢ|·c` equals
+    /// `max|aᵢ·c|` exactly (`|a·c| = |a|·c` for `c > 0`, and a positive
+    /// scale is monotone so it commutes with the max), and the quantizer
+    /// input `(aᵢ·c)·s⁻¹` performs the same two multiplies in the same
+    /// order as scale-sweep-then-quantize.
+    fn compress_deterministic_impl(
+        &self,
+        y: &[f32],
+        ws: &mut Workspace,
+        out: &mut Compressed,
+        fused: bool,
+    ) {
         let n = self.frame.n();
         let big_n = self.frame.big_n();
-        {
-            let Workspace { a, c, .. } = ws;
-            self.embed_into_buf(y, a, c);
-        }
-        let s = norm_inf(&ws.a);
+        let c = {
+            let Workspace { a, c: tmp, .. } = ws;
+            self.embed_into_buf(y, a, tmp, fused)
+        };
+        let s = norm_inf(&ws.a) * c;
         let budget = budget_bits(n, self.r);
         let alloc = allocate_bits(budget, big_n);
         let mut w = BitWriter::reuse(std::mem::take(&mut out.bytes));
@@ -141,7 +183,9 @@ impl SubspaceCodec {
             for (i, &xi) in ws.a.iter().enumerate() {
                 let bits = alloc.bits(i);
                 if bits > 0 {
-                    w.write_bits(quantize_index(xi * inv, bits), bits);
+                    // (xi·c)·inv, never xi·(c·inv): preserve the unfused
+                    // two-multiply order so the quantizer sees identical bits.
+                    w.write_bits(quantize_index((xi * c) * inv, bits), bits);
                 }
             }
         } else {
@@ -159,7 +203,13 @@ impl SubspaceCodec {
         out.bytes = w.into_bytes();
     }
 
-    fn decompress_deterministic_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
+    fn decompress_deterministic_impl(
+        &self,
+        msg: &Compressed,
+        ws: &mut Workspace,
+        out: &mut [f32],
+        fused: bool,
+    ) {
         let n = self.frame.n();
         let big_n = self.frame.big_n();
         let mut r = BitReader::new(&msg.bytes);
@@ -174,15 +224,24 @@ impl SubspaceCodec {
         } else {
             ws.a.fill(0.0);
         }
-        self.frame.apply_inplace(&mut ws.a, out);
+        if fused {
+            self.frame.apply_inplace(&mut ws.a, out);
+        } else {
+            self.frame.apply_inplace_reference(&mut ws.a, out);
+        }
     }
 
-    fn compress_dithered_into(
+    /// Dithered encode; same fusion contract as
+    /// [`SubspaceCodec::compress_deterministic_impl`]. The dither RNG
+    /// consumption is also bit-identical across paths: encode inputs match
+    /// bitwise, so every Bernoulli draw takes the same branch.
+    fn compress_dithered_impl(
         &self,
         y: &[f32],
         rng: &mut Rng,
         ws: &mut Workspace,
         out: &mut Compressed,
+        fused: bool,
     ) {
         let n = self.frame.n();
         let big_n = self.frame.big_n();
@@ -204,11 +263,11 @@ impl SubspaceCodec {
         for (bi, &yi) in ws.b.iter_mut().zip(y) {
             *bi = yi / gain;
         }
-        {
-            let Workspace { a, b, c, .. } = ws;
-            self.embed_into_buf(b, a, c);
-        }
-        let s = norm_inf(&ws.a);
+        let c = {
+            let Workspace { a, b, c: tmp, .. } = ws;
+            self.embed_into_buf(b, a, tmp, fused)
+        };
+        let s = norm_inf(&ws.a) * c;
         w.write_f32(s);
         let mut side_bits = 64;
         let payload_bits;
@@ -218,7 +277,7 @@ impl SubspaceCodec {
             for (i, &xi) in ws.a.iter().enumerate() {
                 let bits = alloc.bits(i);
                 let q = DitheredUniform::symmetric(s, bits);
-                w.write_bits(q.encode(xi, rng), bits);
+                w.write_bits(q.encode(xi * c, rng), bits);
             }
             payload_bits = alloc.total();
         } else {
@@ -232,7 +291,7 @@ impl SubspaceCodec {
             sel_rng.sample_indices_into(big_n, budget, &mut ws.idx);
             let q = DitheredUniform::symmetric(s, 1);
             for &i in &ws.idx {
-                w.write_bits(q.encode(ws.a[i], rng), 1);
+                w.write_bits(q.encode(ws.a[i] * c, rng), 1);
             }
             payload_bits = budget;
         }
@@ -242,7 +301,13 @@ impl SubspaceCodec {
         out.bytes = w.into_bytes();
     }
 
-    fn decompress_dithered_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
+    fn decompress_dithered_impl(
+        &self,
+        msg: &Compressed,
+        ws: &mut Workspace,
+        out: &mut [f32],
+        fused: bool,
+    ) {
         let n = self.frame.n();
         let big_n = self.frame.big_n();
         let budget = budget_bits(n, self.r);
@@ -272,9 +337,45 @@ impl SubspaceCodec {
                 ws.a[i] = rescale * q.decode(r.read_bits(1));
             }
         }
-        self.frame.apply_inplace(&mut ws.a, out);
+        if fused {
+            self.frame.apply_inplace(&mut ws.a, out);
+        } else {
+            self.frame.apply_inplace_reference(&mut ws.a, out);
+        }
         for v in out.iter_mut() {
             *v *= gain;
+        }
+    }
+
+    /// Unfused scalar-reference compress: full-sweep embed over the
+    /// textbook scalar FWHT kernel, then the quantize/bitpack loop — the
+    /// pre-fusion code path, kept as the bit-exactness oracle for
+    /// [`Compressor::compress_into`] and as the same-run baseline the
+    /// hot-path bench records. Wire bytes, bit accounting and RNG
+    /// consumption are bit-identical to the fused path (the equivalence
+    /// tier in `tests/test_kernels.rs` enforces it on dirty shared
+    /// workspaces).
+    pub fn compress_reference_into(
+        &self,
+        y: &[f32],
+        rng: &mut Rng,
+        ws: &mut Workspace,
+        out: &mut Compressed,
+    ) {
+        assert_eq!(y.len(), self.frame.n());
+        match self.mode {
+            CodecMode::Deterministic => self.compress_deterministic_impl(y, ws, out, false),
+            CodecMode::Dithered => self.compress_dithered_impl(y, rng, ws, out, false),
+        }
+    }
+
+    /// Unfused scalar-reference decompress — see
+    /// [`SubspaceCodec::compress_reference_into`].
+    pub fn decompress_reference_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
+        assert_eq!(out.len(), self.frame.n());
+        match self.mode {
+            CodecMode::Deterministic => self.decompress_deterministic_impl(msg, ws, out, false),
+            CodecMode::Dithered => self.decompress_dithered_impl(msg, ws, out, false),
         }
     }
 }
@@ -295,16 +396,16 @@ impl Compressor for SubspaceCodec {
     fn compress_into(&self, y: &[f32], rng: &mut Rng, ws: &mut Workspace, out: &mut Compressed) {
         assert_eq!(y.len(), self.frame.n());
         match self.mode {
-            CodecMode::Deterministic => self.compress_deterministic_into(y, ws, out),
-            CodecMode::Dithered => self.compress_dithered_into(y, rng, ws, out),
+            CodecMode::Deterministic => self.compress_deterministic_impl(y, ws, out, true),
+            CodecMode::Dithered => self.compress_dithered_impl(y, rng, ws, out, true),
         }
     }
 
     fn decompress_into(&self, msg: &Compressed, ws: &mut Workspace, out: &mut [f32]) {
         assert_eq!(out.len(), self.frame.n());
         match self.mode {
-            CodecMode::Deterministic => self.decompress_deterministic_into(msg, ws, out),
-            CodecMode::Dithered => self.decompress_dithered_into(msg, ws, out),
+            CodecMode::Deterministic => self.decompress_deterministic_impl(msg, ws, out, true),
+            CodecMode::Dithered => self.decompress_dithered_impl(msg, ws, out, true),
         }
     }
 

@@ -16,6 +16,14 @@
 //! should pair the codec with a
 //! [`Workspace::for_compressor`](crate::quant::Workspace::for_compressor)
 //! and reuse it — steady-state rounds then allocate nothing.
+//!
+//! With a Hadamard frame the workspace API runs the **fused** hot path:
+//! one unnormalized FWHT with the `1/√N` scale folded into the quantize
+//! (encode) or gather (decode) pass, multi-threaded above
+//! [`MT_FWHT_MIN_DIM`](crate::coordinator::config::MT_FWHT_MIN_DIM) — and
+//! bit-identical to the scalar reference pipeline
+//! ([`SubspaceCodec::compress_reference_into`]), which
+//! `rust/tests/test_kernels.rs` enforces.
 
 use crate::linalg::frames::{Frame, HadamardFrame, OrthonormalFrame};
 use crate::linalg::rng::Rng;

@@ -20,6 +20,9 @@ pub struct Stats {
     pub mean: Duration,
     pub p95: Duration,
     pub samples: usize,
+    /// Sustained throughput (bytes processed per second, from the median
+    /// sample); `None` unless the case was run via [`Bencher::run_bytes`].
+    pub bytes_per_sec: Option<f64>,
 }
 
 /// Micro-benchmark runner.
@@ -106,8 +109,14 @@ impl Bencher {
         let median = samples[samples.len() / 2];
         let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
         let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
-        let stats =
-            Stats { name: name.to_string(), median, mean, p95, samples: samples.len() };
+        let stats = Stats {
+            name: name.to_string(),
+            median,
+            mean,
+            p95,
+            samples: samples.len(),
+            bytes_per_sec: None,
+        };
         println!(
             "{:<48} median {:>12?}  mean {:>12?}  p95 {:>12?}  ({} samples)",
             stats.name, stats.median, stats.mean, stats.p95, stats.samples
@@ -131,6 +140,23 @@ impl Bencher {
         stats
     }
 
+    /// Like [`run`] but records a bytes/second throughput column for the
+    /// case, where `bytes` is the data volume one call of `f` touches
+    /// (e.g. `n * 4` for one in-place f32 transform). The figure is stored
+    /// on the [`Stats`] and emitted by [`Bencher::to_json`], so
+    /// `BENCH_hotpath.json` carries an absolute bandwidth column that is
+    /// comparable across vector sizes.
+    pub fn run_bytes<F: FnMut()>(&mut self, name: &str, bytes: usize, f: F) -> Stats {
+        let mut stats = self.run(name, f);
+        let bps = bytes as f64 / stats.median.as_secs_f64().max(f64::MIN_POSITIVE);
+        stats.bytes_per_sec = Some(bps);
+        if let Some(last) = self.results.last_mut() {
+            last.bytes_per_sec = Some(bps);
+        }
+        println!("{:<48} throughput {:>12.3e} bytes/s", name, bps);
+        stats
+    }
+
     /// All collected results.
     pub fn results(&self) -> &[Stats] {
         &self.results
@@ -149,13 +175,18 @@ impl Bencher {
                     _ => vec![c],
                 })
                 .collect();
+            let bps = match r.bytes_per_sec {
+                Some(b) => format!("{b:.1}"),
+                None => "null".to_string(),
+            };
             s.push_str(&format!(
-                "  {{\"name\": \"{}\", \"median_ns\": {}, \"mean_ns\": {}, \"p95_ns\": {}, \"samples\": {}}}{}\n",
+                "  {{\"name\": \"{}\", \"median_ns\": {}, \"mean_ns\": {}, \"p95_ns\": {}, \"samples\": {}, \"bytes_per_sec\": {}}}{}\n",
                 name,
                 r.median.as_nanos(),
                 r.mean.as_nanos(),
                 r.p95.as_nanos(),
                 r.samples,
+                bps,
                 if i + 1 == self.results.len() { "" } else { "," }
             ));
         }
@@ -199,6 +230,22 @@ mod tests {
         assert!(j.trim_end().ends_with(']'));
         assert!(j.contains("\"median_ns\""));
         assert!(j.contains("case \\\"a\\\""));
+    }
+
+    #[test]
+    fn bytes_column_recorded_and_serialized() {
+        let mut b = Bencher::quick();
+        let s = b.run_bytes("copy-4k", 4096, || {
+            black_box(1 + 1);
+        });
+        assert!(s.bytes_per_sec.unwrap() > 0.0);
+        assert_eq!(s.bytes_per_sec, b.results()[0].bytes_per_sec);
+        b.run("no-bytes", || {
+            black_box(2 + 2);
+        });
+        let j = b.to_json();
+        assert!(j.contains("\"bytes_per_sec\""));
+        assert!(j.contains("\"bytes_per_sec\": null")); // the run() case
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Fused-kernel equivalence tier (ISSUE 6).
+//!
+//! For every scheme with a fused fast path — the Hadamard-frame
+//! `SubspaceCodec` family (`dsc`/`ndsc`, deterministic and dithered) —
+//! the fused workspace API must be **bit-for-bit** identical to the
+//! unfused scalar reference (`compress_reference_into` /
+//! `decompress_reference_into`): wire bytes, bit accounting, RNG
+//! consumption and decoded floats. All calls share ONE dirty workspace
+//! and message shells that are never cleared between grid points, so any
+//! hidden dependence on pre-zeroed scratch shows up as a byte mismatch.
+//!
+//! The multi-threaded-FWHT ↔ single-threaded bitwise equality at the
+//! `MT_FWHT_MIN_DIM` boundaries lives in the `linalg::fwht` module tests;
+//! here the threshold crossing is exercised end-to-end through a codec
+//! whose embedding dimension sits exactly at the threshold.
+
+use kashinflow::coordinator::config::MT_FWHT_MIN_DIM;
+use kashinflow::linalg::frames::HadamardFrame;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::quant::dsc::{CodecMode, EmbedKind, SubspaceCodec};
+use kashinflow::quant::{Compressed, Compressor, Workspace};
+
+fn codec(n: usize, embed: EmbedKind, mode: CodecMode, r: f32, seed: u64) -> SubspaceCodec {
+    let mut rng = Rng::seed_from(seed);
+    SubspaceCodec::new(Box::new(HadamardFrame::new(n, &mut rng)), embed, mode, r)
+}
+
+/// The equivalence test vectors: heavy-tailed, Gaussian, one-hot
+/// (worst case for quantizers), constant, and all-zero (the gain-0
+/// early-out).
+fn vectors(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from(seed);
+    let heavy: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+    let gauss: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+    let mut one_hot = vec![0.0f32; n];
+    one_hot[n / 3] = 7.5;
+    vec![heavy, gauss, one_hot, vec![1.0; n], vec![0.0; n]]
+}
+
+fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+    let mism = a.iter().zip(b).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+    assert_eq!(mism, 0, "{what}: {mism} coordinates differ bitwise");
+}
+
+/// One round-trip through both paths on the shared dirty state; panics on
+/// any bit-level divergence.
+#[allow(clippy::too_many_arguments)]
+fn check_equivalence(
+    c: &SubspaceCodec,
+    y: &[f32],
+    seed: u64,
+    ws: &mut Workspace,
+    msg_ref: &mut Compressed,
+    msg_fused: &mut Compressed,
+    dec_ref: &mut Vec<f32>,
+    dec_fused: &mut Vec<f32>,
+    label: &str,
+) {
+    // Twin RNGs: the dither draws must consume identically on both paths.
+    let mut rng_ref = Rng::seed_from(seed);
+    let mut rng_fused = Rng::seed_from(seed);
+    c.compress_reference_into(y, &mut rng_ref, ws, msg_ref);
+    c.compress_into(y, &mut rng_fused, ws, msg_fused);
+    assert_eq!(msg_ref.bytes, msg_fused.bytes, "{label}: wire bytes diverge");
+    assert_eq!(msg_ref.payload_bits, msg_fused.payload_bits, "{label}: payload accounting");
+    assert_eq!(msg_ref.side_bits, msg_fused.side_bits, "{label}: side accounting");
+    assert_eq!(rng_ref.state(), rng_fused.state(), "{label}: RNG consumption diverges");
+    let n = y.len();
+    dec_ref.resize(n, 0.0);
+    dec_fused.resize(n, 0.0);
+    c.decompress_reference_into(msg_ref, ws, dec_ref);
+    c.decompress_into(msg_fused, ws, dec_fused);
+    assert_bitwise_eq(dec_ref, dec_fused, label);
+    // Cross-decode: the fused decoder on reference bytes (and vice versa)
+    // must also agree — the wire format carries no path fingerprint.
+    c.decompress_into(msg_ref, ws, dec_fused);
+    assert_bitwise_eq(dec_ref, dec_fused, &format!("{label} (cross-decode)"));
+}
+
+#[test]
+fn fused_paths_bit_identical_to_reference_on_dirty_shared_workspace() {
+    // ONE workspace + shells for the whole grid: never cleared, resized
+    // up and down as n changes — deliberately dirty.
+    let mut ws = Workspace::default();
+    let mut msg_ref = Compressed::empty(1);
+    let mut msg_fused = Compressed::empty(1);
+    let (mut dec_ref, mut dec_fused) = (Vec::new(), Vec::new());
+    let mut case = 0u64;
+    for embed in [EmbedKind::NearDemocratic, EmbedKind::Democratic] {
+        for mode in [CodecMode::Deterministic, CodecMode::Dithered] {
+            for &n in &[64usize, 100, 1024, 4096] {
+                if embed == EmbedKind::Democratic && n > 1024 {
+                    // The LV iteration is O(rounds·N log N); cap it to keep
+                    // tier-1 fast. The frame/quantizer fusion under test is
+                    // identical across embeds.
+                    continue;
+                }
+                for &r in &[0.5f32, 2.0] {
+                    let c = codec(n, embed, mode, r, 40 + case);
+                    for (vi, y) in vectors(n, 90 + case).iter().enumerate() {
+                        let label = format!("{embed:?}/{mode:?} n={n} R={r} vec#{vi}");
+                        check_equivalence(
+                            &c,
+                            y,
+                            7000 + case * 16 + vi as u64,
+                            &mut ws,
+                            &mut msg_ref,
+                            &mut msg_fused,
+                            &mut dec_ref,
+                            &mut dec_fused,
+                            &label,
+                        );
+                    }
+                    case += 1;
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end threshold crossing: a codec whose embedding dimension N is
+/// exactly `MT_FWHT_MIN_DIM`, so the fused path's transforms dispatch to
+/// the multi-threaded kernel while the reference path stays scalar — the
+/// wire bytes must still match bit-for-bit.
+#[test]
+fn fused_mt_codec_bit_identical_to_scalar_reference_at_threshold() {
+    let n = MT_FWHT_MIN_DIM; // power of two => N == n == the threshold
+    let c = codec(n, EmbedKind::NearDemocratic, CodecMode::Deterministic, 0.5, 3);
+    let mut ws = Workspace::for_compressor(&c);
+    let mut msg_ref = Compressed::empty(n);
+    let mut msg_fused = Compressed::empty(n);
+    let (mut dec_ref, mut dec_fused) = (Vec::new(), Vec::new());
+    let mut gen = Rng::seed_from(11);
+    let y: Vec<f32> = (0..n).map(|_| gen.gaussian_cubed()).collect();
+    check_equivalence(
+        &c,
+        &y,
+        77,
+        &mut ws,
+        &mut msg_ref,
+        &mut msg_fused,
+        &mut dec_ref,
+        &mut dec_fused,
+        "ndsc-det at MT threshold",
+    );
+}
