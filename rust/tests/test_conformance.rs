@@ -358,3 +358,91 @@ fn feasibility_edge_cases_match_documented_contract() {
     let msg = c.compress(&y, &mut rng);
     assert_eq!(msg.payload_bits, 1);
 }
+
+/// Satellite: the sparsifiers at budgets so large their derived `k`
+/// overshoots `n` — `build` must clamp `k` to `n` (a top-`n` / rand-`n`
+/// selection is the whole vector) and the built codec's exact wire
+/// accounting must match the clamp, never the unclamped `⌊nR⌋/per`.
+#[test]
+fn sparsifier_k_clamps_to_n_at_huge_budgets() {
+    use kashinflow::quant::registry::SparsifyKind;
+    let (n, r) = (64usize, 40.0f32);
+    let budget = budget_bits(n, r);
+    assert_eq!(budget, 2560, "⌊64·40⌋");
+    let mut rng = Rng::seed_from(0xB16);
+    let y: Vec<f32> = (0..n).map(|_| rng.gaussian_cubed()).collect();
+
+    // RandK, 1-bit values: unclamped k would be 2560 > n = 64.
+    for kind in [SparsifyKind::Plain, SparsifyKind::Unbiased, SparsifyKind::Deterministic] {
+        let spec = CompressorSpec::RandK { value_bits: 1, kind };
+        assert!(spec.is_feasible(n, r));
+        let c = spec.build(n, r, &mut rng);
+        let msg = c.compress(&y, &mut rng);
+        assert_eq!(msg.payload_bits, n, "{}: k must clamp to n=64 at 1 bit each", spec.name());
+        assert_eq!(msg.bytes.len(), msg.total_bits().div_ceil(8), "{}", spec.name());
+        let yhat = c.decompress(&msg);
+        assert!(yhat.iter().all(|v| v.is_finite()), "{}", spec.name());
+    }
+
+    // TopK, free indices: per-entry cost 4 bits ⇒ unclamped k = 640.
+    let spec = CompressorSpec::TopK { value_bits: 4, count_index_bits: false };
+    let c = spec.build(n, r, &mut rng);
+    let msg = c.compress(&y, &mut rng);
+    assert_eq!(msg.payload_bits, n * 4, "top-n keeps all 64 entries at 4 bits");
+    // Free indices still ride along as side information: 32-bit norm
+    // header + log2(64) bits per kept index.
+    assert_eq!(msg.side_bits, 32 + n * 6);
+    assert!(msg.payload_bits <= budget);
+
+    // TopK, charged indices: per-entry cost 4 + 6 ⇒ unclamped k = 256.
+    let spec = CompressorSpec::TopK { value_bits: 4, count_index_bits: true };
+    let c = spec.build(n, r, &mut rng);
+    let msg = c.compress(&y, &mut rng);
+    assert_eq!(msg.payload_bits, n * (4 + 6));
+    assert_eq!(msg.side_bits, 32);
+    assert!(msg.payload_bits <= budget);
+}
+
+/// Satellite: the wire contract at super-fp32 budgets (`R > 32`), where
+/// the conformance grid above never reaches. Every zoo spec must be
+/// feasible, build, respect `⌊nR⌋`, keep the byte length exact and
+/// decode finite — in particular the schemes whose per-coordinate widths
+/// are *derived* from `R` (QSGD levels, RATQ ladders, subspace bit
+/// allocation) must not overflow their bit-packing at 40–64 bits/dim.
+#[test]
+fn wire_contract_holds_at_super_fp32_budgets() {
+    let mut rng = Rng::seed_from(0xB165);
+    for &(n, r) in &[(64usize, 40.0f32), (100, 40.0), (64, 64.0)] {
+        let budget = budget_bits(n, r);
+        for spec in registry::all_specs() {
+            assert!(
+                spec.is_feasible(n, r),
+                "{} infeasible at the super-fp32 budget (n={n}, R={r})",
+                spec.name()
+            );
+            let c = spec.build(n, r, &mut rng);
+            for y in test_vectors(n, &mut rng) {
+                let msg = c.compress(&y, &mut rng);
+                assert!(
+                    msg.payload_bits <= budget,
+                    "{} at (n={n}, R={r}): payload {} > budget {budget}",
+                    spec.name(),
+                    msg.payload_bits
+                );
+                assert_eq!(
+                    msg.bytes.len(),
+                    msg.total_bits().div_ceil(8),
+                    "{} at (n={n}, R={r}): slack wire bytes",
+                    spec.name()
+                );
+                let yhat = c.decompress(&msg);
+                assert_eq!(yhat.len(), n);
+                assert!(
+                    yhat.iter().all(|v| v.is_finite()),
+                    "{} at (n={n}, R={r}): non-finite decode",
+                    spec.name()
+                );
+            }
+        }
+    }
+}
