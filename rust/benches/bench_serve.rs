@@ -1,14 +1,18 @@
 //! Serving-layer benchmarks: fleet-round throughput with 8 concurrent
-//! heterogeneous jobs under both scheduler policies, plus the
-//! checkpoint save/restore round-trip. Saves `BENCH_serve.json` with the
-//! per-case stats **and** the measured aggregate job-rounds/sec (the
-//! serving layer's headline throughput number), so regressions diff
-//! mechanically across PRs.
+//! heterogeneous jobs under both scheduler policies, the checkpoint
+//! save/restore round-trip, and a multi-fleet cluster drill (1024
+//! tenants sharded over 4 fleets, with mid-run migrations and the
+//! served/queued/rejected/migrated breakdown). Saves `BENCH_serve.json`
+//! with the per-case stats **and** the measured aggregate
+//! job-rounds/sec (the serving layer's headline throughput number), so
+//! regressions diff mechanically across PRs.
 
 use std::time::Instant;
 
 use kashinflow::exp::serve::job_mix;
-use kashinflow::serve::{checkpoint, Job, JobServer, Policy};
+use kashinflow::quant::budget_bits;
+use kashinflow::quant::registry::CompressorSpec;
+use kashinflow::serve::{checkpoint, FleetCluster, Job, JobServer, JobSpec, Policy};
 use kashinflow::testkit::bench::{black_box, Bencher};
 
 const JOBS: usize = 8;
@@ -16,6 +20,11 @@ const N: usize = 256;
 /// Long horizon so jobs never finish inside a measurement window (the
 /// trace reserve is `rounds + 1` records, so keep this moderate).
 const JOB_ROUNDS: usize = 200_000;
+
+/// Multi-fleet drill shape: ≥1000 tenants over ≥4 fleets is the
+/// contract `BENCH_serve.json` keeps for the jobs axis.
+const FLEETS: usize = 4;
+const TENANTS: usize = 1024;
 
 fn fresh_server(policy: Policy) -> JobServer {
     // Ample budget: throughput of the serve path itself, not of idling.
@@ -32,6 +41,9 @@ struct ThroughputRow {
     jobs: usize,
     rounds_per_sec: f64,
     median_ns: u128,
+    /// Pre-rendered extra JSON fields (`, "k": v` fragments) for cases
+    /// with a wider schema (the cluster breakdown); empty otherwise.
+    extra: String,
 }
 
 // `BENCH_serve.json` has two producers by design — this bench (CI's
@@ -43,12 +55,13 @@ fn rows_to_json(rows: &[ThroughputRow]) -> String {
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "  {{\"source\": \"bench\", \"case\": \"{}\", \"policy\": \"{}\", \"jobs\": {}, \
-             \"rounds_per_sec\": {}, \"median_ns\": {}}}{}\n",
+             \"rounds_per_sec\": {}, \"median_ns\": {}{}}}{}\n",
             r.case,
             r.policy,
             r.jobs,
             r.rounds_per_sec,
             r.median_ns,
+            r.extra,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -90,6 +103,7 @@ fn main() {
             jobs: JOBS,
             rounds_per_sec: rps,
             median_ns: stats.median.as_nanos(),
+            extra: String::new(),
         });
     }
 
@@ -115,7 +129,68 @@ fn main() {
         jobs: 1,
         rounds_per_sec: 0.0,
         median_ns: stats.median.as_nanos(),
+        extra: String::new(),
     });
+
+    // Multi-fleet cluster drill: shard TENANTS short-horizon jobs over
+    // FLEETS threaded fleets under a scarce (half-demand) budget, reject
+    // a handful of oversized tenants, live-migrate a slice mid-run, and
+    // report the full served/queued/rejected/migrated breakdown. One
+    // timed end-to-end pass (not a Bencher window): the number that
+    // matters is cluster-wide job-rounds/sec at four-digit tenancy.
+    {
+        let specs = job_mix(TENANTS, 16, 2, 7);
+        let demand: usize = specs.iter().map(|s| s.workers * budget_bits(s.n, s.r)).sum();
+        let budget = (demand / 2 / FLEETS).max(1);
+        let mut cluster = FleetCluster::new(FLEETS, budget, Policy::Drr);
+        let t0 = Instant::now();
+        let mut gids = Vec::with_capacity(TENANTS);
+        for spec in specs {
+            if let Ok(gid) = cluster.submit(spec) {
+                gids.push(gid);
+            }
+        }
+        for i in 0..4u64 {
+            let wide = JobSpec::new(
+                format!("wide{i}-qsgd"),
+                CompressorSpec::parse("qsgd").expect("canonical"),
+                4.0,
+                16,
+                2,
+                7 ^ (0xB16 + i),
+            )
+            .with_workers(1024);
+            let _ = cluster.submit(wide); // counted in the rejected breakdown
+        }
+        cluster.run_round();
+        let queued_mid = cluster.metrics().queued_jobs;
+        for &gid in gids.iter().step_by(127) {
+            let from = cluster.fleet_of(gid).unwrap_or(0);
+            let _ = cluster.migrate(gid, (from + 1) % FLEETS);
+        }
+        cluster.run(2 * TENANTS * 8);
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let m = cluster.metrics();
+        let case = format!("serve/cluster-{FLEETS}fleets-{TENANTS}tenants-n16");
+        let rps = m.served_job_rounds as f64 / secs;
+        println!(
+            "{case:<48} aggregate {rps:>12.0} job-rounds/s \
+             (served {} queued@mid {queued_mid} rejected {} migrated {})",
+            m.served_jobs, m.rejected_jobs, m.migrated_jobs
+        );
+        rows.push(ThroughputRow {
+            case,
+            policy: Policy::Drr,
+            jobs: TENANTS,
+            rounds_per_sec: rps,
+            median_ns: 0,
+            extra: format!(
+                ", \"fleets\": {FLEETS}, \"served\": {}, \"queued_mid\": {queued_mid}, \
+                 \"rejected\": {}, \"migrated\": {}",
+                m.served_jobs, m.rejected_jobs, m.migrated_jobs
+            ),
+        });
+    }
 
     match std::fs::write("BENCH_serve.json", rows_to_json(&rows)) {
         Ok(()) => println!("wrote BENCH_serve.json ({} cases)", rows.len()),

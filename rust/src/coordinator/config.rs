@@ -32,6 +32,49 @@ pub const PARALLEL_DECODE_MIN_DIM: usize = 8192;
 /// threshold-boundary tests).
 pub const MT_FWHT_MIN_DIM: usize = 1 << 18;
 
+/// Fleet-wide cap on concurrently live worker threads across **all**
+/// coordinator fleets of one process — the multi-fleet extension of the
+/// "never nest" invariant above. A [`crate::serve::cluster::FleetCluster`]
+/// runs its fleets' rounds on one scoped thread each, and every fleet may
+/// fan a granted job's worker phase out over that job's workers; with `k`
+/// fleets the process would otherwise run up to `k · m` worker threads at
+/// once. [`fleet_fanout_threads`] divides this cap by the number of
+/// active fleets, so total fan-out stays bounded no matter how many
+/// fleets the cluster hosts. Single-sourced here (with the two
+/// thresholds above) because the hazard spans layers: serve, coordinator
+/// decode, and the in-transform FWHT fan-out.
+pub const FLEET_MAX_WORKER_THREADS: usize = 64;
+
+/// How many worker threads one fleet may spend on a granted job's round,
+/// or `None` to run the round inline (single-threaded). This is the
+/// single gate every serve-layer fan-out goes through, and it encodes
+/// the "never nest" invariant end to end:
+///
+/// * `workers < 2` — nothing to fan out;
+/// * `n >= MT_FWHT_MIN_DIM` — the FWHT inside each encode/decode will
+///   itself go multi-threaded ([`crate::linalg::fwht::fwht_inplace_auto`]),
+///   and nesting a per-worker fan-out around a per-transform fan-out
+///   oversubscribes cores: the job runs inline and lets the transform
+///   own the parallelism;
+/// * per-fleet allowance `FLEET_MAX_WORKER_THREADS / active_fleets < 2`
+///   — with many fleets live, each fleet's share of the thread budget
+///   rounds down to "inline".
+///
+/// The thread count only ever affects wall-clock, never results: the
+/// threaded executor ([`crate::opt::engine::RunState::step_mt`]) is
+/// bit-identical to the inline path for any thread count, so this gate
+/// is free to be dynamic.
+pub fn fleet_fanout_threads(workers: usize, n: usize, active_fleets: usize) -> Option<usize> {
+    if workers < 2 || n >= MT_FWHT_MIN_DIM {
+        return None;
+    }
+    let allowance = FLEET_MAX_WORKER_THREADS / active_fleets.max(1);
+    if allowance < 2 {
+        return None;
+    }
+    Some(workers.min(allowance))
+}
+
 /// Compression scheme selector (the CLI surface of [`crate::quant`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SchemeKind {
@@ -612,6 +655,30 @@ mod tests {
             let yhat = comps[0].decompress(&msg);
             assert_eq!(yhat.len(), 32, "{scheme:?}");
         }
+    }
+
+    #[test]
+    fn fleet_fanout_never_nests_at_boundary_dims() {
+        // Below the MT-FWHT threshold a 2+-worker job fans out...
+        assert_eq!(fleet_fanout_threads(4, MT_FWHT_MIN_DIM - 1, 1), Some(4));
+        assert_eq!(fleet_fanout_threads(4, PARALLEL_DECODE_MIN_DIM, 1), Some(4));
+        // ...and exactly at (or past) it the transform owns the threads:
+        // the fan-out gate must refuse, or the two levels would nest.
+        assert_eq!(fleet_fanout_threads(4, MT_FWHT_MIN_DIM, 1), None);
+        assert_eq!(fleet_fanout_threads(4, MT_FWHT_MIN_DIM + 1, 4), None);
+        // Single-worker jobs have nothing to fan out.
+        assert_eq!(fleet_fanout_threads(1, 1024, 1), None);
+        assert_eq!(fleet_fanout_threads(0, 1024, 1), None);
+        // The fleet-wide cap splits across active fleets: the per-fleet
+        // allowance clamps wide jobs, and at 33+ fleets the share rounds
+        // below 2 so every fleet degrades to inline.
+        assert_eq!(fleet_fanout_threads(100, 1024, 1), Some(FLEET_MAX_WORKER_THREADS));
+        assert_eq!(fleet_fanout_threads(100, 1024, 4), Some(FLEET_MAX_WORKER_THREADS / 4));
+        assert_eq!(fleet_fanout_threads(8, 1024, 8), Some(8));
+        assert_eq!(fleet_fanout_threads(8, 1024, FLEET_MAX_WORKER_THREADS / 2), Some(2));
+        assert_eq!(fleet_fanout_threads(8, 1024, FLEET_MAX_WORKER_THREADS / 2 + 1), None);
+        // active_fleets = 0 is treated as 1 defensively, not a panic.
+        assert_eq!(fleet_fanout_threads(4, 1024, 0), Some(4));
     }
 
     #[test]

@@ -170,9 +170,76 @@ impl FleetMetrics {
     }
 }
 
+/// Header of the per-fleet cluster accounting CSV
+/// ([`ClusterMetrics::to_csv`]).
+pub const CLUSTER_CSV_HEADER: &str =
+    "fleet,jobs,served_job_rounds,spent_payload_bits,utilization\n";
+
+/// Aggregate accounting of a multi-fleet cluster
+/// ([`crate::serve::cluster::FleetCluster`]): the tenant population
+/// broken down by outcome — served (all rounds complete), queued (admitted,
+/// still live), rejected (admission refused) and migrated (moved between
+/// fleets mid-run) — plus the per-fleet [`FleetMetrics`] snapshots.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    /// Cluster rounds executed (one concurrent round across all fleets).
+    pub cluster_rounds: u64,
+    /// Jobs that completed every configured engine round.
+    pub served_jobs: u64,
+    /// Jobs admitted and still live (running or paused).
+    pub queued_jobs: u64,
+    /// Submissions refused at admission (invalid or infeasible specs).
+    pub rejected_jobs: u64,
+    /// Fleet-to-fleet migrations performed.
+    pub migrated_jobs: u64,
+    /// Engine rounds granted across the whole cluster.
+    pub served_job_rounds: u64,
+    /// Measured payload bits spent across the whole cluster.
+    pub spent_payload_bits: u64,
+    /// One accounting snapshot per member fleet.
+    pub fleets: Vec<FleetMetrics>,
+}
+
+impl ClusterMetrics {
+    /// Per-fleet CSV in the [`CLUSTER_CSV_HEADER`] schema (`jobs`
+    /// counts that fleet's accounting rows, finished ones included).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(CLUSTER_CSV_HEADER);
+        for (i, f) in self.fleets.iter().enumerate() {
+            s.push_str(&format!(
+                "{i},{},{},{},{}\n",
+                f.jobs.len(),
+                f.served_job_rounds(),
+                f.spent_payload_bits,
+                f.utilization()
+            ));
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cluster_csv_has_one_row_per_fleet() {
+        let m = ClusterMetrics {
+            cluster_rounds: 7,
+            served_jobs: 3,
+            queued_jobs: 1,
+            rejected_jobs: 2,
+            migrated_jobs: 1,
+            served_job_rounds: 9,
+            spent_payload_bits: 400,
+            fleets: vec![FleetMetrics::default(), FleetMetrics::default()],
+        };
+        let csv = m.to_csv();
+        assert!(csv.starts_with(CLUSTER_CSV_HEADER));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(1).unwrap().starts_with("0,"));
+        assert!(csv.lines().nth(2).unwrap().starts_with("1,"));
+    }
 
     #[test]
     fn fleet_csv_and_utilization() {

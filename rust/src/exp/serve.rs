@@ -11,38 +11,46 @@
 //! as `BENCH_transport.json`) so serving regressions diff mechanically
 //! across PRs.
 //!
+//! A multi-fleet cluster pass then shards a ≥1000-tenant population over
+//! `fleets=` concurrent fleets (hash placement + load-aware rebalance,
+//! threaded worker fan-out, a burst of mid-run migrations and a few
+//! deliberately oversized tenants) and reports the
+//! served/queued/rejected/migrated breakdown.
+//!
 //! ```text
-//! repro serve [--quick] [jobs=8] [n=64] [rounds=150] [seed=7] [policy=drr|adaptive|both]
+//! repro serve [--quick] [jobs=8] [n=64] [rounds=150] [seed=7] [fleets=4]
+//!             [policy=drr|adaptive|both]
 //! ```
 
 use std::time::Instant;
 
 use crate::quant::budget_bits;
 use crate::quant::registry::CompressorSpec;
-use crate::serve::{JobServer, JobSpec, Policy};
+use crate::serve::{FleetCluster, JobServer, JobSpec, Policy, QosClass};
 
 /// One row of the tenant-mix template the sweep cycles through:
-/// `(scheme, R, workers, error-feedback)`.
-const MIX: [(&str, f32, usize, bool); 8] = [
-    ("ndsc-dith", 1.0, 1, false),
-    ("sd", 0.5, 1, false),
-    ("topk1b", 2.0, 1, false),
-    ("qsgd", 4.0, 2, false),
-    ("ndsc", 1.0, 1, true),
-    ("randk1b", 0.25, 1, false),
-    ("dsc-dith", 1.0, 2, false),
-    ("vqsgd", 0.5, 1, false),
+/// `(scheme, R, workers, error-feedback, qos)`. QoS names follow the
+/// CLI grammar: `gold` | `silver` | `bronze`.
+const MIX: [(&str, f32, usize, bool, &str); 8] = [
+    ("ndsc-dith", 1.0, 1, false, "gold"),
+    ("sd", 0.5, 1, false, "silver"),
+    ("topk1b", 2.0, 1, false, "bronze"),
+    ("qsgd", 4.0, 2, false, "gold"),
+    ("ndsc", 1.0, 1, true, "silver"),
+    ("randk1b", 0.25, 1, false, "bronze"),
+    ("dsc-dith", 1.0, 2, false, "silver"),
+    ("vqsgd", 0.5, 1, false, "silver"),
 ];
 
 /// The heterogeneous job mix the sweep (and `bench_serve`) submits:
 /// `count` specs cycled from the eight-row tenant template above
 /// (subspace / dithered / sparsified / fixed-rate schemes, budgets from
-/// 0.25 to 4 bits/dim, single- and multi-worker, with one DEF-feedback
-/// tenant), seeded `base_seed + index`.
+/// 0.25 to 4 bits/dim, single- and multi-worker, one DEF-feedback
+/// tenant, and all three QoS classes), seeded `base_seed + index`.
 pub fn job_mix(count: usize, n: usize, rounds: usize, base_seed: u64) -> Vec<JobSpec> {
     (0..count)
         .map(|i| {
-            let (scheme, r, workers, def) = MIX[i % MIX.len()];
+            let (scheme, r, workers, def, qos) = MIX[i % MIX.len()];
             let mut s = JobSpec::new(
                 format!("job{i}-{scheme}"),
                 CompressorSpec::parse(scheme).expect("mix schemes are canonical"),
@@ -51,7 +59,8 @@ pub fn job_mix(count: usize, n: usize, rounds: usize, base_seed: u64) -> Vec<Job
                 rounds,
                 base_seed + i as u64,
             )
-            .with_workers(workers);
+            .with_workers(workers)
+            .with_qos(QosClass::parse(qos).expect("mix classes are canonical"));
             if def {
                 s = s.with_def_feedback();
             }
@@ -124,43 +133,160 @@ fn run_cell(jobs: usize, n: usize, rounds: usize, seed: u64, policy: Policy, fra
     }
 }
 
-fn cells_to_json(cells: &[ServeCell]) -> String {
-    let mut s = String::from("[\n");
-    for (i, c) in cells.iter().enumerate() {
-        // JSON has no NaN literal: a cell with no finished job (e.g. all
-        // tenants rejected under a starvation budget) reports `null`.
-        let mean_final = if c.mean_final_value.is_finite() {
-            c.mean_final_value.to_string()
-        } else {
-            "null".to_string()
-        };
-        s.push_str(&format!(
-            "  {{\"source\": \"repro-serve\", \"jobs\": {}, \"policy\": \"{}\", \
-             \"budget_frac\": {}, \"budget_bits\": {}, \
-             \"admitted\": {}, \"rejected\": {}, \"fleet_rounds\": {}, \
-             \"served_job_rounds\": {}, \"rounds_per_sec\": {}, \"utilization\": {}, \
-             \"mean_final_value\": {mean_final}}}{}\n",
-            c.jobs,
-            c.policy,
-            c.budget_frac,
-            c.budget_bits,
-            c.admitted,
-            c.rejected,
-            c.fleet_rounds,
-            c.served_job_rounds,
-            c.rounds_per_sec,
-            c.utilization,
-            if i + 1 == cells.len() { "" } else { "," }
-        ));
+/// One multi-fleet cluster pass: `tenants` jobs sharded over `fleets`
+/// concurrent fleets, with the mid-horizon queue depth and the
+/// admission / migration breakdowns the single-fleet sweep cannot show.
+struct ClusterCell {
+    policy: Policy,
+    fleets: usize,
+    tenants: usize,
+    budget_bits_per_fleet: usize,
+    served: u64,
+    queued_mid: u64,
+    rejected: u64,
+    migrated: u64,
+    cluster_rounds: u64,
+    served_job_rounds: u64,
+    rounds_per_sec: f64,
+    utilization: f32,
+}
+
+fn run_cluster_cell(
+    fleets: usize,
+    tenants: usize,
+    n: usize,
+    rounds: usize,
+    seed: u64,
+    policy: Policy,
+    frac: f32,
+) -> ClusterCell {
+    let specs = job_mix(tenants, n, rounds, seed);
+    let budget = ((demand_bits(&specs) as f32 * frac / fleets as f32) as usize).max(1);
+    let mut cluster = FleetCluster::new(fleets, budget, policy);
+    let mut gids = Vec::with_capacity(tenants);
+    for spec in specs {
+        if let Ok(gid) = cluster.submit(spec) {
+            gids.push(gid);
+        }
     }
-    s.push_str("]\n");
+    // A few deliberately oversized tenants exercise admission control:
+    // 1024 workers at 4 bits/dim dwarfs any per-fleet fraction of the
+    // mix's demand, so each one lands in the rejected breakdown.
+    for i in 0..4u64 {
+        let wide = JobSpec::new(
+            format!("wide{i}-qsgd"),
+            CompressorSpec::parse("qsgd").expect("canonical"),
+            4.0,
+            n,
+            rounds,
+            seed ^ (0xB16 + i),
+        )
+        .with_workers(1024);
+        let _ = cluster.submit(wide);
+    }
+    let t0 = Instant::now();
+    cluster.run_round();
+    // Mid-horizon snapshot: after one cluster round no multi-round job
+    // can have finished, so the queue depth here is the live backlog —
+    // and migration below moves real in-flight scheduler state.
+    let queued_mid = cluster.metrics().queued_jobs;
+    for &gid in gids.iter().step_by(101) {
+        let from = cluster.fleet_of(gid).unwrap_or(0);
+        cluster
+            .migrate(gid, (from + 1) % fleets)
+            .expect("mid-run migration of a live job");
+    }
+    cluster.run(rounds * tenants.max(1) * 8);
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let m = cluster.metrics();
+    let offered: u64 = m.fleets.iter().map(|f| budget as u64 * f.fleet_rounds).sum();
+    ClusterCell {
+        policy,
+        fleets,
+        tenants: gids.len() + m.rejected_jobs as usize,
+        budget_bits_per_fleet: budget,
+        served: m.served_jobs,
+        queued_mid,
+        rejected: m.rejected_jobs,
+        migrated: m.migrated_jobs,
+        cluster_rounds: m.cluster_rounds,
+        served_job_rounds: m.served_job_rounds,
+        rounds_per_sec: m.served_job_rounds as f64 / secs,
+        utilization: if offered == 0 {
+            0.0
+        } else {
+            m.spent_payload_bits as f32 / offered as f32
+        },
+    }
+}
+
+fn sweep_row(c: &ServeCell) -> String {
+    // JSON has no NaN literal: a cell with no finished job (e.g. all
+    // tenants rejected under a starvation budget) reports `null`.
+    let mean_final = if c.mean_final_value.is_finite() {
+        c.mean_final_value.to_string()
+    } else {
+        "null".to_string()
+    };
+    format!(
+        "  {{\"source\": \"repro-serve\", \"kind\": \"sweep\", \"jobs\": {}, \
+         \"policy\": \"{}\", \"budget_frac\": {}, \"budget_bits\": {}, \
+         \"admitted\": {}, \"rejected\": {}, \"fleet_rounds\": {}, \
+         \"served_job_rounds\": {}, \"rounds_per_sec\": {}, \"utilization\": {}, \
+         \"mean_final_value\": {mean_final}}}",
+        c.jobs,
+        c.policy,
+        c.budget_frac,
+        c.budget_bits,
+        c.admitted,
+        c.rejected,
+        c.fleet_rounds,
+        c.served_job_rounds,
+        c.rounds_per_sec,
+        c.utilization,
+    )
+}
+
+fn cluster_row(c: &ClusterCell) -> String {
+    format!(
+        "  {{\"source\": \"repro-serve\", \"kind\": \"cluster\", \"policy\": \"{}\", \
+         \"fleets\": {}, \"tenants\": {}, \"budget_bits_per_fleet\": {}, \
+         \"served\": {}, \"queued_mid\": {}, \"rejected\": {}, \"migrated\": {}, \
+         \"cluster_rounds\": {}, \"served_job_rounds\": {}, \
+         \"rounds_per_sec\": {}, \"utilization\": {}}}",
+        c.policy,
+        c.fleets,
+        c.tenants,
+        c.budget_bits_per_fleet,
+        c.served,
+        c.queued_mid,
+        c.rejected,
+        c.migrated,
+        c.cluster_rounds,
+        c.served_job_rounds,
+        c.rounds_per_sec,
+        c.utilization,
+    )
+}
+
+/// One JSON array holding both the single-fleet sweep rows and the
+/// multi-fleet cluster rows (`"kind"` discriminates).
+fn cells_to_json(cells: &[ServeCell], clusters: &[ClusterCell]) -> String {
+    let rows: Vec<String> = cells
+        .iter()
+        .map(sweep_row)
+        .chain(clusters.iter().map(cluster_row))
+        .collect();
+    let mut s = String::from("[\n");
+    s.push_str(&rows.join(",\n"));
+    s.push_str("\n]\n");
     s
 }
 
 fn usage_and_exit() -> ! {
     eprintln!(
         "usage: repro serve [--quick] [jobs=8] [n=64] [rounds=150] [seed=7] \
-         [policy=drr|adaptive|both]"
+         [fleets=4] [policy=drr|adaptive|both]"
     );
     std::process::exit(2);
 }
@@ -202,13 +328,15 @@ fn lifecycle_drill(n: usize, rounds: usize, seed: u64) {
     );
 }
 
-/// Run the sweep. `args` accepts `jobs=`, `n=`, `rounds=`, `seed=` and
-/// `policy=` overrides; anything else prints usage and exits 2.
+/// Run the sweep. `args` accepts `jobs=`, `n=`, `rounds=`, `seed=`,
+/// `fleets=` and `policy=` overrides; anything else prints usage and
+/// exits 2.
 pub fn run(quick: bool, args: &[String]) {
     let mut jobs = 8usize;
     let mut n = 64usize;
     let mut rounds = if quick { 40 } else { 150 };
     let mut seed = 7u64;
+    let mut fleets = 4usize;
     let mut policies: Vec<Policy> = vec![Policy::Drr, Policy::DrrAdaptive];
     // Malformed values abort just like unknown keys do: silently keeping
     // a default would run the whole sweep on the wrong parameters.
@@ -222,6 +350,7 @@ pub fn run(quick: bool, args: &[String]) {
             Some(("n", v)) => n = v.parse().unwrap_or_else(|_| bail("n", v)),
             Some(("rounds", v)) => rounds = v.parse().unwrap_or_else(|_| bail("rounds", v)),
             Some(("seed", v)) => seed = v.parse().unwrap_or_else(|_| bail("seed", v)),
+            Some(("fleets", v)) => fleets = v.parse().unwrap_or_else(|_| bail("fleets", v)),
             Some(("policy", v)) => {
                 policies = match v {
                     "both" => vec![Policy::Drr, Policy::DrrAdaptive],
@@ -229,13 +358,13 @@ pub fn run(quick: bool, args: &[String]) {
                 }
             }
             _ => {
-                eprintln!("serve: expected jobs=|n=|rounds=|seed=|policy=, got '{a}'");
+                eprintln!("serve: expected jobs=|n=|rounds=|seed=|fleets=|policy=, got '{a}'");
                 usage_and_exit()
             }
         }
     }
-    if jobs == 0 || n == 0 || rounds == 0 {
-        eprintln!("serve: jobs, n and rounds must be positive");
+    if jobs == 0 || n == 0 || rounds == 0 || fleets == 0 {
+        eprintln!("serve: jobs, n, rounds and fleets must be positive");
         usage_and_exit()
     }
     let job_counts: Vec<usize> = if jobs <= 2 { vec![jobs] } else { vec![2, jobs / 2, jobs] };
@@ -268,9 +397,43 @@ pub fn run(quick: bool, args: &[String]) {
         }
     }
     lifecycle_drill(n, rounds, seed);
-    let json = cells_to_json(&cells);
+
+    // The multi-fleet cluster pass: ≥1000 tenants sharded over the fleet
+    // count, short per-job horizons (the point is placement, migration
+    // and the queue/reject breakdowns, not per-job convergence).
+    let tenants = if quick { 1000 } else { 1024 };
+    let cluster_rounds_per_job = if quick { 2 } else { 3 };
+    println!("--- multi-fleet cluster ({tenants} tenants over {fleets} fleets, n=16) ---");
+    println!(
+        "{:<10} {:>7} {:>12} {:>8} {:>10} {:>9} {:>9} {:>14} {:>12} {:>8}",
+        "policy", "tenants", "budget/fleet", "served", "queued@mid", "rejected", "migrated", "job-rounds", "rounds/s", "util"
+    );
+    let mut clusters = Vec::new();
+    for &policy in &policies {
+        let cell = run_cluster_cell(fleets, tenants, 16, cluster_rounds_per_job, seed, policy, 0.5);
+        println!(
+            "{:<10} {:>7} {:>12} {:>8} {:>10} {:>9} {:>9} {:>14} {:>12.0} {:>8.3}",
+            cell.policy.to_string(),
+            cell.tenants,
+            cell.budget_bits_per_fleet,
+            cell.served,
+            cell.queued_mid,
+            cell.rejected,
+            cell.migrated,
+            cell.served_job_rounds,
+            cell.rounds_per_sec,
+            cell.utilization,
+        );
+        clusters.push(cell);
+    }
+
+    let json = cells_to_json(&cells, &clusters);
     match std::fs::write("BENCH_serve.json", &json) {
-        Ok(()) => println!("wrote BENCH_serve.json ({} cells)", cells.len()),
+        Ok(()) => println!(
+            "wrote BENCH_serve.json ({} sweep cells + {} cluster cells)",
+            cells.len(),
+            clusters.len()
+        ),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
     }
 }
@@ -296,7 +459,7 @@ mod tests {
         assert!(cell.admitted >= 1);
         assert!(cell.served_job_rounds > 0);
         assert!(cell.rounds_per_sec > 0.0);
-        let json = cells_to_json(&[cell]);
+        let json = cells_to_json(&[cell], &[]);
         assert!(json.contains("\"rounds_per_sec\""));
         assert!(json.contains("\"policy\": \"adaptive\""));
         assert!(json.trim_end().ends_with(']'));
@@ -308,8 +471,26 @@ mod tests {
         // parseable (`null`), never emit a bare `NaN` token.
         let cell = run_cell(2, 64, 8, 3, Policy::Drr, 0.05);
         assert_eq!(cell.admitted, 0);
-        let json = cells_to_json(&[cell]);
+        let json = cells_to_json(&[cell], &[]);
         assert!(json.contains("\"mean_final_value\": null"), "got: {json}");
         assert!(!json.contains("NaN"));
+    }
+
+    #[test]
+    fn cluster_cell_reports_every_breakdown() {
+        // A scaled-down cluster pass (40 tenants over 4 fleets) must
+        // still exercise every breakdown: backlog at mid-horizon,
+        // oversized-tenant rejections, and at least one live migration.
+        let cell = run_cluster_cell(4, 40, 16, 2, 3, Policy::Drr, 0.5);
+        assert_eq!(cell.fleets, 4);
+        assert_eq!(cell.served, 40, "every feasible tenant must finish");
+        assert_eq!(cell.queued_mid, 40, "no 2-round job can finish in one cluster round");
+        assert_eq!(cell.rejected, 4, "the oversized tenants must all be rejected");
+        assert!(cell.migrated >= 1, "the mid-run migration slice must move jobs");
+        assert!(cell.served_job_rounds == 80);
+        let json = cells_to_json(&[], &[cell]);
+        assert!(json.contains("\"kind\": \"cluster\""), "got: {json}");
+        assert!(json.contains("\"queued_mid\": 40"), "got: {json}");
+        assert!(json.trim_end().ends_with(']'));
     }
 }

@@ -9,8 +9,9 @@
 //! Highlights: `figures` regenerates every table/figure, `schemes`
 //! prints the registry zoo at one `(n, R)`, `net` sweeps SimNet
 //! topology × budget × drop, `serve` sweeps the multi-job serving layer
-//! (jobs × global budget × scheduler policy, with a mid-run
-//! pause/resume/cancel drill), `train` runs the distributed coordinator
+//! (jobs × global budget × scheduler policy, a mid-run
+//! pause/resume/cancel drill, and a ≥1000-tenant multi-fleet cluster
+//! pass with live migration), `train` runs the distributed coordinator
 //! on a planted problem.
 //!
 //! `train` keys: n, workers, r (scalar or per-worker `r=0.5,1,2,4`),
@@ -45,7 +46,7 @@ const COMMANDS: &str = "  figures                 every table/figure below in se
   ablation-ef ablation-lambda ablation-dqgd
   schemes                 print the registry zoo at (n, R)
   net                     SimNet topology x budget x drop sweep
-  serve                   multi-job serving sweep (jobs x budget x policy)
+  serve                   multi-job serving sweep (jobs x budget x policy x fleets)
   train                   distributed run on a planted problem
   train-transformer       federated transformer (needs artifacts)
   help                    this text";

@@ -78,6 +78,17 @@ pub struct CoordinatorDriver<'c> {
     /// Per-worker gradient-noise salt: worker `i` samples minibatches
     /// from `Rng::seed_from(cfg.seed ^ (salt + i))`.
     pub worker_seed_salt: u64,
+    /// How many serve fleets are live in this process (1 = solo run).
+    /// When more than one fleet shares the process, [`Driver::drive`]
+    /// disables the server's scoped-thread decode fan-out (the config is
+    /// cloned with `parallel_decode_min_dim = usize::MAX`): the cluster
+    /// already spends the process's thread budget on fleet and worker
+    /// threads, and nesting a per-participant decode fan-out inside them
+    /// would oversubscribe cores — the never-nest rule
+    /// ([`crate::coordinator::config::FLEET_MAX_WORKER_THREADS`]).
+    /// Decode results are bit-identical either way (accumulation is in
+    /// worker-id order), so this only ever affects wall-clock.
+    pub active_fleets: usize,
     /// Full metrics of the most recent [`Driver::drive`] call — wall
     /// clock, participants, budget rejections — beyond what a [`Trace`]
     /// carries.
@@ -86,7 +97,14 @@ pub struct CoordinatorDriver<'c> {
 
 impl<'c> CoordinatorDriver<'c> {
     pub fn new(cfg: &'c RunConfig) -> Self {
-        CoordinatorDriver { cfg, worker_seed_salt: 7, last_metrics: None }
+        CoordinatorDriver { cfg, worker_seed_salt: 7, active_fleets: 1, last_metrics: None }
+    }
+
+    /// Declare how many serve fleets share this process (see
+    /// [`CoordinatorDriver::active_fleets`]).
+    pub fn with_active_fleets(mut self, fleets: usize) -> Self {
+        self.active_fleets = fleets.max(1);
+        self
     }
 }
 
@@ -116,8 +134,17 @@ impl Driver for CoordinatorDriver<'_> {
             "config rounds != spec rounds (the coordinator runs the config's fleet; \
              build the spec with cfg.rounds)"
         );
+        // Never-nest: with other fleets live in the process, keep the
+        // decode single-threaded (bit-identical; see `active_fleets`).
+        let clamped;
+        let cfg = if self.active_fleets > 1 {
+            clamped = RunConfig { parallel_decode_min_dim: usize::MAX, ..self.cfg.clone() };
+            &clamped
+        } else {
+            self.cfg
+        };
         let metrics = run_config(
-            self.cfg,
+            cfg,
             x0.to_vec(),
             problem.shards.clone(),
             self.worker_seed_salt,
@@ -229,6 +256,46 @@ mod tests {
         let metrics = driver.last_metrics.as_ref().expect("metrics stashed");
         assert_eq!(metrics.rounds.len(), 12);
         assert_eq!(metrics.total_payload_bits, trace.total_payload_bits);
+    }
+
+    #[test]
+    fn active_fleets_clamp_is_trace_neutral() {
+        // Force the threaded decode path on (min_dim 1), then check that
+        // the never-nest clamp (active_fleets > 1 ⇒ inline decode)
+        // changes nothing but the thread layout.
+        let n = 16;
+        let m = 3;
+        let mut rng = Rng::seed_from(9);
+        let (shards, _) = planted_regression_shards(m, 8, n, Loss::Square, &mut rng, false);
+        let problem = ShardedProblem::new(shards);
+        let cfg = RunConfig {
+            n,
+            workers: m,
+            r: 2.0,
+            scheme: SchemeKind::Ndsc,
+            rounds: 8,
+            step: 1e-3,
+            batch: 0,
+            seed: 5,
+            parallel_decode_min_dim: 1,
+            ..Default::default()
+        };
+        let run = |fleets: usize| {
+            let spec =
+                Engine::new(Problem::Sharded(&problem), Schedule::Constant(cfg.step), cfg.rounds)
+                    .with_output(OutputMode::PolyakAverage);
+            let mut d = CoordinatorDriver::new(&cfg).with_active_fleets(fleets);
+            let mut r = Rng::seed_from(42);
+            d.drive(spec, &vec![0.0; n], None, &mut r)
+        };
+        let solo = run(1);
+        let clustered = run(4);
+        assert_eq!(solo.final_x, clustered.final_x);
+        assert_eq!(solo.total_payload_bits, clustered.total_payload_bits);
+        assert_eq!(solo.records.len(), clustered.records.len());
+        for (a, b) in solo.records.iter().zip(&clustered.records) {
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
     }
 
     #[test]

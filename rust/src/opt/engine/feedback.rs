@@ -14,14 +14,29 @@
 /// round (or whose frame is dropped by a lossy uplink) gets **no** calls:
 /// its memory carries over unchanged — the feedback loop pauses, exactly
 /// as the legacy multi-DEF loop behaved under k-of-m participation.
-pub trait FeedbackMemory {
+///
+/// **Cross-worker independence contract.** `shift_point(i, ..)` and
+/// `pre_encode(i, ..)` must depend only on worker `i`'s slice of the
+/// memory, and `post_decode(i, ..)` must write only worker `i`'s slice.
+/// The threaded round executor
+/// ([`RunState::step_mt`](super::RunState::step_mt)) relies on this: it
+/// runs every participant's shift/query/pre-encode phase concurrently
+/// (through `&self`) before any `post_decode` runs, which is
+/// order-equivalent to the inline interleaving *only* under this
+/// contract. Both memories here satisfy it (`DefFeedback` keeps one
+/// `e_i` per worker; `NoFeedback` has no state at all). The `Send +
+/// Sync` supertraits are what let the executor share the memory across
+/// scoped worker threads.
+pub trait FeedbackMemory: Send + Sync {
     /// Compute worker `i`'s oracle query point from the broadcast iterate
     /// `x` and the round's step `α`, writing into `z`. Return `true` if
     /// `z` was written (the engine queries the oracle at `z`), `false`
     /// to query at `x` directly.
     fn shift_point(&self, i: usize, x: &[f32], step: f32, z: &mut [f32]) -> bool;
     /// Transform the raw gradient (in `g`) into the vector to encode.
-    fn pre_encode(&mut self, i: usize, g: &mut [f32]);
+    /// Takes `&self` (reading only worker `i`'s state) so the threaded
+    /// executor can run all participants' encode phases concurrently.
+    fn pre_encode(&self, i: usize, g: &mut [f32]);
     /// Observe the decoded estimate `q` of the encoded vector `u`;
     /// update the memory. Only called when the frame was delivered.
     fn post_decode(&mut self, i: usize, q: &[f32], u: &[f32]);
@@ -50,7 +65,7 @@ impl FeedbackMemory for NoFeedback {
         false
     }
 
-    fn pre_encode(&mut self, _i: usize, _g: &mut [f32]) {}
+    fn pre_encode(&self, _i: usize, _g: &mut [f32]) {}
 
     fn post_decode(&mut self, _i: usize, _q: &[f32], _u: &[f32]) {}
 }
@@ -82,8 +97,9 @@ impl FeedbackMemory for DefFeedback {
         true
     }
 
-    fn pre_encode(&mut self, i: usize, g: &mut [f32]) {
-        // u = ∇f(z) − e_i
+    fn pre_encode(&self, i: usize, g: &mut [f32]) {
+        // u = ∇f(z) − e_i (reads only worker i's slice — see the trait's
+        // cross-worker independence contract)
         for (gi, &ei) in g.iter_mut().zip(&self.errs[i]) {
             *gi -= ei;
         }

@@ -51,12 +51,27 @@
 //! `RunState` (plus RNG and feedback state) — rounds are
 //! interleaving-independent because all cross-round state lives in the
 //! job.
+//!
+//! **Threaded rounds.** [`RunState::step_mt`] is the scoped-thread twin
+//! of [`RunState::step`] for the full-participation, forked-RNG
+//! composition: the worker phase (shift → query → pre-encode → encode →
+//! drop verdict → decode) fans out over worker threads with every
+//! mutable value confined to a per-worker [`ChannelPools`]-recycled
+//! slot, while the server phase (feedback `post_decode`, consensus
+//! accumulation, step, projection) stays sequential in worker-id order —
+//! so the result is bit-identical to the inline path for any thread
+//! count (proven by `threaded_step_mt_is_bit_identical_to_inline_step`
+//! and the serve suite's fleet-vs-solo oracles). The multi-fleet serving
+//! layer ([`crate::serve::cluster`]) is its main client.
 
 pub mod driver;
 pub mod feedback;
 pub mod oracle;
 pub mod schedule;
 
+use std::sync::Arc;
+
+use crate::coordinator::channel::ChannelPools;
 use crate::coordinator::transport::Participation;
 use crate::linalg::rng::Rng;
 use crate::linalg::vecops::dist2;
@@ -326,6 +341,22 @@ impl<'a> OracleBank for Vec<Box<dyn Oracle + 'a>> {
     }
 }
 
+/// An oracle bank whose queries can run **concurrently** — one scoped
+/// worker thread per participant in [`RunState::step_mt`]. The bank is
+/// shared (`&self`) across the threads, so implementors must keep all
+/// per-query mutable state in the caller-provided scratch (`idx` for the
+/// batch draw, `out` for the gradient): two threads querying different
+/// workers must never race on bank-internal state. The serving layer's
+/// `ShardBank` is the canonical implementation — the shards themselves
+/// are read-only per round.
+pub trait SharedOracleBank: OracleBank + Sync {
+    /// Write worker `i`'s (sub)gradient at `x` into `out`, drawing batch
+    /// randomness from `rng` with `idx` as index scratch. Must consume
+    /// `rng` exactly as [`OracleBank::query`] does — `step_mt`'s
+    /// bit-identity to `step` rests on it.
+    fn query_shared(&self, i: usize, x: &[f32], rng: &mut Rng, idx: &mut Vec<usize>, out: &mut [f32]);
+}
+
 /// Borrowed view of the pluggable components for **one** round — built on
 /// the stack by whoever owns the components ([`EngineRun::step`], or a
 /// serving-layer job), handed to [`RunState::step`], and dropped when the
@@ -356,6 +387,59 @@ pub struct RoundCtx<'c> {
     pub x_star: Option<&'c [f32]>,
 }
 
+/// [`RoundCtx`]'s threaded sibling: the component view
+/// [`RunState::step_mt`] needs to run one round's worker phase on scoped
+/// threads. Narrower on purpose — the threaded executor supports exactly
+/// the multi-worker serving composition: **full** participation (every
+/// worker, every round; no participation draw from the shared RNG, so
+/// there is nothing to reorder) and **forked** per-worker RNG streams
+/// ([`RngPolicy::ForkPerWorker`]; asserted at `step_mt` entry). The
+/// oracle bank is shared (`Sync`), and the feedback memory is threaded
+/// through under the cross-worker independence contract documented on
+/// [`FeedbackMemory`].
+pub struct MtRoundCtx<'c> {
+    /// The objective the round reports values against.
+    pub problem: Problem<'c>,
+    /// Worker-side gradient access, shared across worker threads.
+    pub oracles: &'c (dyn SharedOracleBank + 'c),
+    /// The uplink codec layout.
+    pub codecs: Codecs<'c>,
+    /// Step-size rule.
+    pub schedule: &'c (dyn StepSchedule + 'c),
+    /// Per-worker feedback memory (worker phase borrows it shared; the
+    /// sequential server phase gets it back mutably for `post_decode`).
+    pub feedback: &'c mut (dyn FeedbackMemory + 'c),
+    /// Projection domain.
+    pub domain: Domain,
+    /// Lossy-uplink probability (see [`Engine::with_drop_prob`]).
+    pub drop_prob: f32,
+    /// Total configured rounds (the run refuses to step past this).
+    pub rounds: usize,
+    /// Known minimizer for distance-to-optimum records.
+    pub x_star: Option<&'c [f32]>,
+}
+
+/// Per-worker scratch for the threaded round executor: gradient / shift
+/// / decode buffers, batch-index scratch, codec workspace and wire
+/// message. Allocated once per run (the f32 buffers come from the
+/// fleet's recycled [`ChannelPools`]) and reused every round, so
+/// threaded steady-state rounds allocate nothing — the inline path's
+/// standing invariant, per worker. Never serialized: a checkpoint
+/// restores a run with no slots, and the first threaded round rebuilds
+/// them.
+struct WorkerSlot {
+    g: Vec<f32>,
+    z: Vec<f32>,
+    q: Vec<f32>,
+    idx: Vec<usize>,
+    ws: Workspace,
+    msg: Compressed,
+    /// Whether this round's frame went through a codec (`msg` is live).
+    encoded: bool,
+    /// This round's drop verdict: did the frame reach the server?
+    arrived: bool,
+}
+
 /// Every between-round mutable buffer of an engine run: the iterate, the
 /// Polyak average, per-round scratch, forked worker RNG streams, and the
 /// accumulated [`Trace`]. A `RunState` plus the job RNG plus the feedback
@@ -373,6 +457,9 @@ pub struct RunState {
     pub(crate) worker_rngs: Vec<Rng>,
     ws: Workspace,
     msg: Compressed,
+    /// Threaded-executor scratch (one slot per worker); empty until the
+    /// first [`RunState::step_mt`] and excluded from checkpoints.
+    mt_slots: Vec<WorkerSlot>,
     pub(crate) trace: Trace,
     averaging: bool,
     finalized: bool,
@@ -421,6 +508,7 @@ impl RunState {
             worker_rngs,
             ws,
             msg: Compressed::empty(n),
+            mt_slots: Vec::new(),
             trace,
             averaging,
             finalized: false,
@@ -459,14 +547,7 @@ impl RunState {
         let t = self.t;
         let m = ctx.oracles.workers();
         let step = ctx.schedule.step(t);
-        if !self.averaging {
-            self.trace.records.push(IterRecord {
-                value: ctx.problem.value(&self.x),
-                dist_to_opt: ctx.x_star.map(|xs| dist2(&self.x, xs)).unwrap_or(f32::NAN),
-                payload_bits: 0,
-                participants: 0,
-            });
-        }
+        self.open_round(ctx.problem, ctx.x_star);
         // Participant set. Full participation draws no randomness;
         // KofM samples a uniform k-subset from the shared RNG and
         // processes it in worker-id order. Deadline degrades to Full
@@ -521,14 +602,44 @@ impl RunState {
                 }
             }
         }
-        // Server: step on the consensus mean, then project. A round
-        // with nothing delivered takes no step (and no projection —
-        // re-projecting can perturb a boundary iterate by an ulp).
+        self.close_round(ctx.problem, ctx.domain, ctx.x_star, step, round_bits, delivered);
+        true
+    }
+
+    /// The round preamble shared by [`RunState::step`] and
+    /// [`RunState::step_mt`]: push the pre-step record when the output
+    /// mode reports `f(x_t)` before stepping.
+    fn open_round(&mut self, problem: Problem<'_>, x_star: Option<&[f32]>) {
+        if !self.averaging {
+            self.trace.records.push(IterRecord {
+                value: problem.value(&self.x),
+                dist_to_opt: x_star.map(|xs| dist2(&self.x, xs)).unwrap_or(f32::NAN),
+                payload_bits: 0,
+                participants: 0,
+            });
+        }
+    }
+
+    /// The round tail shared by [`RunState::step`] and
+    /// [`RunState::step_mt`]: server step on the consensus mean, then
+    /// project. A round with nothing delivered takes no step (and no
+    /// projection — re-projecting can perturb a boundary iterate by an
+    /// ulp). Then record (Polyak) or backfill (last-iterate) and advance.
+    fn close_round(
+        &mut self,
+        problem: Problem<'_>,
+        domain: Domain,
+        x_star: Option<&[f32]>,
+        step: f32,
+        round_bits: usize,
+        delivered: usize,
+    ) {
+        let t = self.t;
         if delivered > 0 {
             for (xi, &ci) in self.x.iter_mut().zip(&self.consensus) {
                 *xi -= step * ci;
             }
-            ctx.domain.project(&mut self.x);
+            domain.project(&mut self.x);
         }
         if self.averaging {
             let w = 1.0 / (t + 1) as f32;
@@ -536,8 +647,8 @@ impl RunState {
                 *ai += w * (xi - *ai);
             }
             self.trace.records.push(IterRecord {
-                value: ctx.problem.value(&self.avg),
-                dist_to_opt: ctx.x_star.map(|xs| dist2(&self.avg, xs)).unwrap_or(f32::NAN),
+                value: problem.value(&self.avg),
+                dist_to_opt: x_star.map(|xs| dist2(&self.avg, xs)).unwrap_or(f32::NAN),
                 payload_bits: round_bits,
                 participants: delivered,
             });
@@ -546,7 +657,170 @@ impl RunState {
             r.participants = delivered;
         }
         self.t += 1;
+    }
+
+    /// Execute round `t` with the worker phase fanned out over at most
+    /// `threads` scoped threads, **bit-identical** to [`RunState::step`]
+    /// on the same state. Requires the threaded-executor composition:
+    /// full participation (implied by [`MtRoundCtx`]) and
+    /// [`RngPolicy::ForkPerWorker`] (asserted — worker RNG streams are
+    /// what make per-worker draws scheduling-independent).
+    ///
+    /// Why the result cannot differ from the inline path:
+    /// * every per-worker draw (batch, dither, drop verdict) comes from
+    ///   that worker's own forked RNG, in the same in-stream order;
+    /// * the shared job RNG is untouched (full participation draws
+    ///   nothing from it — same as inline);
+    /// * `shift_point`/`pre_encode` read only worker-local feedback
+    ///   state (the [`FeedbackMemory`] contract), so running them before
+    ///   any `post_decode` is order-equivalent to the interleaving;
+    /// * the server phase — bit accounting, `post_decode`, the consensus
+    ///   sum `Σ eᵢ/p` — runs sequentially in worker-id order, so the
+    ///   float accumulation order is exactly the inline loop's.
+    ///
+    /// Workers are split into contiguous chunks of `⌈m/threads⌉`, so the
+    /// thread *count* only changes which OS thread runs a worker, never
+    /// what the worker computes. `threads ≤ 1` still goes through the
+    /// slot machinery (one chunk, current thread) — same code path, no
+    /// spawns.
+    pub fn step_mt(
+        &mut self,
+        ctx: &mut MtRoundCtx<'_>,
+        threads: usize,
+        pools: &Arc<ChannelPools>,
+    ) -> bool {
+        if self.t >= ctx.rounds || self.finalized {
+            return false;
+        }
+        let m = ctx.oracles.workers();
+        assert_eq!(
+            self.worker_rngs.len(),
+            m,
+            "step_mt requires RngPolicy::ForkPerWorker (one RNG stream per worker)"
+        );
+        let t = self.t;
+        let step = ctx.schedule.step(t);
+        self.open_round(ctx.problem, ctx.x_star);
+        self.ensure_mt_slots(m, ctx.codecs, pools);
+
+        // Worker phase: shift → query → pre-encode → encode → drop
+        // verdict → decode, each worker confined to its own slot + RNG.
+        {
+            let x = &self.x;
+            let slots = &mut self.mt_slots[..m];
+            let rngs = &mut self.worker_rngs[..m];
+            let bank = ctx.oracles;
+            let codecs = ctx.codecs;
+            let fb: &(dyn FeedbackMemory) = &*ctx.feedback;
+            let drop_prob = ctx.drop_prob;
+            let per = m.div_ceil(threads.clamp(1, m));
+            if per >= m {
+                for (i, (slot, wrng)) in slots.iter_mut().zip(rngs.iter_mut()).enumerate() {
+                    mt_worker_phase(fb, bank, codecs, drop_prob, i, x, step, slot, wrng);
+                }
+            } else {
+                std::thread::scope(|s| {
+                    for (c, (slot_chunk, rng_chunk)) in
+                        slots.chunks_mut(per).zip(rngs.chunks_mut(per)).enumerate()
+                    {
+                        let base = c * per;
+                        s.spawn(move || {
+                            for (k, (slot, wrng)) in
+                                slot_chunk.iter_mut().zip(rng_chunk.iter_mut()).enumerate()
+                            {
+                                mt_worker_phase(
+                                    fb,
+                                    bank,
+                                    codecs,
+                                    drop_prob,
+                                    base + k,
+                                    x,
+                                    step,
+                                    slot,
+                                    wrng,
+                                );
+                            }
+                        });
+                    }
+                });
+            }
+        }
+
+        // Server phase, sequential in worker-id order: bit accounting,
+        // feedback post_decode, consensus accumulation — float-for-float
+        // the inline loop.
+        let p = m.max(1);
+        self.consensus.fill(0.0);
+        let mut round_bits = 0usize;
+        let mut delivered = 0usize;
+        {
+            let slots = &self.mt_slots[..m];
+            let consensus = &mut self.consensus;
+            let trace = &mut self.trace;
+            for (i, slot) in slots.iter().enumerate() {
+                if slot.encoded {
+                    round_bits += slot.msg.payload_bits;
+                    trace.total_payload_bits += slot.msg.payload_bits;
+                    trace.total_side_bits += slot.msg.side_bits;
+                }
+                if slot.arrived {
+                    let estimate: &[f32] = if slot.encoded { &slot.q } else { &slot.g };
+                    ctx.feedback.post_decode(i, estimate, &slot.g);
+                    delivered += 1;
+                    for (ci, &ei) in consensus.iter_mut().zip(estimate) {
+                        *ci += ei / p as f32;
+                    }
+                }
+            }
+        }
+        self.close_round(ctx.problem, ctx.domain, ctx.x_star, step, round_bits, delivered);
         true
+    }
+
+    /// Build (or rebuild after a worker-count change) the per-worker
+    /// threaded-executor slots, drawing the f32 buffers from the fleet's
+    /// recycled pools. Dirty reuse is safe: `g`/`z`/`q` are fully
+    /// overwritten before they are read each round.
+    fn ensure_mt_slots(&mut self, m: usize, codecs: Codecs<'_>, pools: &Arc<ChannelPools>) {
+        let n = self.x.len();
+        if self.mt_slots.len() == m && self.mt_slots.iter().all(|s| s.g.len() == n) {
+            return;
+        }
+        self.release_mt_slots(pools);
+        let mut grab = || {
+            let mut v = pools.iterates.get_or(|| Vec::with_capacity(n));
+            v.clear();
+            v.resize(n, 0.0);
+            v
+        };
+        self.mt_slots = (0..m)
+            .map(|i| WorkerSlot {
+                g: grab(),
+                z: grab(),
+                q: grab(),
+                idx: Vec::new(),
+                ws: match codecs.get(i) {
+                    Some(c) => Workspace::for_compressor(c),
+                    None => Workspace::new(),
+                },
+                msg: Compressed::empty(n),
+                encoded: false,
+                arrived: false,
+            })
+            .collect();
+    }
+
+    /// Return the threaded-executor buffers to the fleet pools (job
+    /// eviction / migration hands its warm buffers to the tenants that
+    /// stay). Idempotent; a run that never stepped threaded has nothing
+    /// to release.
+    pub(crate) fn release_mt_slots(&mut self, pools: &Arc<ChannelPools>) {
+        for mut slot in self.mt_slots.drain(..) {
+            pools.iterates.put(std::mem::take(&mut slot.g));
+            pools.iterates.put(std::mem::take(&mut slot.z));
+            pools.iterates.put(std::mem::take(&mut slot.q));
+            pools.bytes.put(std::mem::take(&mut slot.msg.bytes));
+        }
     }
 
     /// Close the trace: push the trailing record (when the output mode
@@ -566,6 +840,43 @@ impl RunState {
         }
         self.trace.final_x = if self.averaging { self.avg.clone() } else { self.x.clone() };
         self.finalized = true;
+    }
+}
+
+/// One worker's share of a threaded round: the same shift → query →
+/// pre-encode → encode → drop-verdict sequence as the inline loop, with
+/// every mutable touched value confined to the worker's own slot and
+/// forked RNG stream. The decode also runs here — it is deterministic
+/// (no RNG), so moving it off the server phase changes wall-clock, not
+/// results.
+#[allow(clippy::too_many_arguments)]
+fn mt_worker_phase(
+    fb: &dyn FeedbackMemory,
+    bank: &dyn SharedOracleBank,
+    codecs: Codecs<'_>,
+    drop_prob: f32,
+    i: usize,
+    x: &[f32],
+    step: f32,
+    slot: &mut WorkerSlot,
+    wrng: &mut Rng,
+) {
+    let shifted = fb.shift_point(i, x, step, &mut slot.z);
+    let point: &[f32] = if shifted { &slot.z } else { x };
+    bank.query_shared(i, point, wrng, &mut slot.idx, &mut slot.g);
+    fb.pre_encode(i, &mut slot.g);
+    let codec = codecs.get(i);
+    slot.encoded = codec.is_some();
+    if let Some(c) = codec {
+        c.compress_into(&slot.g, wrng, &mut slot.ws, &mut slot.msg);
+    }
+    // Same verdict draw, same stream position as the inline path: bits
+    // are charged on send, not delivery.
+    slot.arrived = drop_prob <= 0.0 || wrng.uniform_f32() >= drop_prob;
+    if slot.arrived {
+        if let Some(c) = codec {
+            c.decompress_into(&slot.msg, &mut slot.ws, &mut slot.q);
+        }
     }
 }
 
@@ -786,6 +1097,158 @@ mod tests {
         );
         assert_eq!(whole.total_payload_bits, stepped.total_payload_bits);
         assert_eq!(whole.total_side_bits, stepped.total_side_bits);
+    }
+
+    #[test]
+    fn threaded_step_mt_is_bit_identical_to_inline_step() {
+        // The serving composition (sharded problem, per-worker dithered
+        // codecs, DEF feedback, lossy uplink, forked RNGs) stepped three
+        // ways: inline, step_mt with one chunk, step_mt fanned out. All
+        // three must agree bit-for-bit — trace, iterate, totals, and the
+        // feedback memories left behind.
+        let n = 16;
+        let m = 3;
+        let rounds = 17;
+        let mut rng = Rng::seed_from(21);
+        let shards: Vec<DatasetObjective> = (0..m)
+            .map(|_| {
+                let a: Vec<f32> = (0..10 * n).map(|_| rng.gaussian_f32()).collect();
+                let b: Vec<f32> = (0..10).map(|_| rng.gaussian_f32()).collect();
+                DatasetObjective::new(a, b, 10, n, Loss::Square, 0.0)
+            })
+            .collect();
+        let problem = ShardedProblem::new(shards);
+
+        struct Bank<'a> {
+            shards: &'a [DatasetObjective],
+            batch: usize,
+            idx: Vec<usize>,
+        }
+        impl OracleBank for Bank<'_> {
+            fn workers(&self) -> usize {
+                self.shards.len()
+            }
+            fn query(&mut self, i: usize, x: &[f32], rng: &mut Rng, out: &mut [f32]) {
+                let obj = &self.shards[i];
+                rng.sample_indices_into(obj.m, self.batch.min(obj.m), &mut self.idx);
+                obj.minibatch_gradient(x, Some(&self.idx), out);
+            }
+        }
+        impl SharedOracleBank for Bank<'_> {
+            fn query_shared(
+                &self,
+                i: usize,
+                x: &[f32],
+                rng: &mut Rng,
+                idx: &mut Vec<usize>,
+                out: &mut [f32],
+            ) {
+                let obj = &self.shards[i];
+                rng.sample_indices_into(obj.m, self.batch.min(obj.m), idx);
+                obj.minibatch_gradient(x, Some(idx), out);
+            }
+        }
+
+        let codecs: Vec<Box<dyn Compressor>> = (0..m)
+            .map(|i| {
+                Box::new(Ndsc::hadamard_dithered(n, 2.0, &mut Rng::seed_from(30 + i as u64)))
+                    as Box<dyn Compressor>
+            })
+            .collect();
+        let sched = Schedule::Constant(0.05);
+        let domain = Domain::L2Ball { radius: 8.0 };
+        let drop_prob = 0.3;
+        let x0 = vec![0.0f32; n];
+
+        let run_inline = || {
+            let mut bank = Bank { shards: &problem.shards, batch: 4, idx: Vec::new() };
+            let mut fb = feedback::DefFeedback::new(m, n);
+            let mut rng = Rng::seed_from(99);
+            let mut st = RunState::new(
+                &x0,
+                m,
+                rounds,
+                domain,
+                RngPolicy::ForkPerWorker,
+                OutputMode::PolyakAverage,
+                Some(codecs[0].as_ref()),
+                &mut rng,
+            );
+            let mut ctx = RoundCtx {
+                problem: Problem::Sharded(&problem),
+                oracles: &mut bank,
+                codecs: Codecs::PerWorker(&codecs),
+                schedule: &sched,
+                feedback: &mut fb,
+                domain,
+                participation: Participation::Full,
+                drop_prob,
+                rng_policy: RngPolicy::ForkPerWorker,
+                rounds,
+                x_star: None,
+            };
+            while st.step(&mut ctx, &mut rng) {}
+            st.finalize(Problem::Sharded(&problem), OutputMode::PolyakAverage, None);
+            let mut fb_state = Vec::new();
+            fb.save_state(&mut fb_state);
+            (std::mem::take(&mut st.trace), fb_state)
+        };
+        let run_mt = |threads: usize| {
+            let bank = Bank { shards: &problem.shards, batch: 4, idx: Vec::new() };
+            let mut fb = feedback::DefFeedback::new(m, n);
+            let mut rng = Rng::seed_from(99);
+            let mut st = RunState::new(
+                &x0,
+                m,
+                rounds,
+                domain,
+                RngPolicy::ForkPerWorker,
+                OutputMode::PolyakAverage,
+                Some(codecs[0].as_ref()),
+                &mut rng,
+            );
+            let pools = Arc::new(ChannelPools::new(m));
+            let mut ctx = MtRoundCtx {
+                problem: Problem::Sharded(&problem),
+                oracles: &bank,
+                codecs: Codecs::PerWorker(&codecs),
+                schedule: &sched,
+                feedback: &mut fb,
+                domain,
+                drop_prob,
+                rounds,
+                x_star: None,
+            };
+            while st.step_mt(&mut ctx, threads, &pools) {}
+            st.release_mt_slots(&pools);
+            st.finalize(Problem::Sharded(&problem), OutputMode::PolyakAverage, None);
+            let mut fb_state = Vec::new();
+            fb.save_state(&mut fb_state);
+            (std::mem::take(&mut st.trace), fb_state)
+        };
+
+        let (tr_inline, fb_inline) = run_inline();
+        for threads in [1usize, 2, m, m + 3] {
+            let (tr_mt, fb_mt) = run_mt(threads);
+            assert_eq!(tr_inline.records.len(), tr_mt.records.len(), "t={threads}");
+            for (t, (a, b)) in tr_inline.records.iter().zip(&tr_mt.records).enumerate() {
+                assert_eq!(a.value.to_bits(), b.value.to_bits(), "t={threads} record {t} value");
+                assert_eq!(a.payload_bits, b.payload_bits, "t={threads} record {t} bits");
+                assert_eq!(a.participants, b.participants, "t={threads} record {t} delivered");
+            }
+            assert_eq!(
+                tr_inline.final_x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                tr_mt.final_x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "t={threads} final_x"
+            );
+            assert_eq!(tr_inline.total_payload_bits, tr_mt.total_payload_bits);
+            assert_eq!(tr_inline.total_side_bits, tr_mt.total_side_bits);
+            assert_eq!(
+                fb_inline.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                fb_mt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "t={threads} feedback memories"
+            );
+        }
     }
 
     #[test]

@@ -1,12 +1,19 @@
 //! Versioned binary job snapshots: save a running job, restore it in a
 //! fresh process, continue the uninterrupted trace **bit for bit**.
 //!
-//! A snapshot carries two sections:
+//! A snapshot carries three sections:
 //!
 //! | Section | Contents |
 //! |---|---|
 //! | spec    | name, scheme (canonical registry string), `R`, `n`, workers, problem, rounds, schedule, feedback kind, batch, drop-prob, domain, output mode, seed |
 //! | state   | round index `t`, iterate `x`, Polyak average, job RNG, per-worker RNG streams, feedback memory, accumulated trace + traffic totals |
+//! | sched trailer (v2) | DRR deficit counter, adaptive-`R` rung, QoS class, FNV-1a checksum ([`SchedTrailer`]) |
+//!
+//! The trailer is what makes a snapshot **fleet-independent**: a job
+//! checkpointed mid-deficit restores into another fleet with its banked
+//! scheduler credit and last-granted rung intact, not reset to zero —
+//! the migration path ([`crate::serve::cluster`]) depends on it.
+//! Version-1 snapshots (no trailer) still load, with scheduler defaults.
 //!
 //! Static artifacts (dataset, frames/codecs, workspace) are **not**
 //! serialized: [`restore`] rebuilds them deterministically from the spec
@@ -31,11 +38,16 @@ use crate::opt::projection::Domain;
 use crate::opt::{IterRecord, Trace};
 use crate::quant::registry::CompressorSpec;
 use crate::serve::job::{FeedbackKind, Job, JobSpec, ProblemSpec};
+use crate::serve::scheduler::QosClass;
 
 /// Magic bytes opening every snapshot (version-tagged family).
 pub const CHECKPOINT_MAGIC: &[u8; 8] = b"KFCKPT01";
-/// Format version this build writes and accepts.
-pub const CHECKPOINT_VERSION: u32 = 1;
+/// Format version this build writes. Version 2 appends the mandatory
+/// [`SchedTrailer`]; version-1 snapshots (engine state only) are still
+/// accepted by [`restore`] and restore with scheduler defaults.
+pub const CHECKPOINT_VERSION: u32 = 2;
+/// Oldest format version [`restore`] still reads.
+pub const CHECKPOINT_MIN_VERSION: u32 = 1;
 
 /// Sanity caps: generous for every real configuration (transformer-scale
 /// `n`, thousands of workers, millions of rounds), low enough that a
@@ -228,14 +240,103 @@ fn output_from_tag(tag: u8) -> io::Result<OutputMode> {
 }
 
 // ---------------------------------------------------------------------------
+// The scheduler trailer (format version 2).
+// ---------------------------------------------------------------------------
+
+/// The scheduler-side state of a snapshotted job: everything the fleet
+/// (not the engine) owns about it. Travels as a fixed-length,
+/// checksummed trailer after the engine state so a job migrated between
+/// fleets keeps its banked DRR credit, its last adaptive-`R` rung, and
+/// its QoS class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedTrailer {
+    /// Banked DRR credit in payload bits at snapshot time.
+    pub deficit_bits: u64,
+    /// Ladder level of the job's most recent grant (`None` before its
+    /// first served round). Observability plus adaptive-policy
+    /// continuity; never changes what a restored round computes.
+    pub rung: Option<u8>,
+    /// Weighted-QoS class ([`QosClass::Silver`] by default).
+    pub qos: QosClass,
+}
+
+/// Trailer magic (distinct from the header magic so a truncated body
+/// cannot alias as a trailer).
+const TRAILER_MAGIC: &[u8; 4] = b"KFT1";
+/// Serialized trailer length: magic (4) + deficit (8) + rung (1) +
+/// qos (1) + FNV-1a checksum (4).
+const TRAILER_LEN: usize = 18;
+/// `rung = None` on the wire.
+const RUNG_NONE: u8 = 0xFF;
+
+/// 32-bit FNV-1a over the trailer's magic + payload. The engine body is
+/// covered by its own cross-checks (shape, tag and cap validation); the
+/// trailer's payload is free-form integers, so without a checksum a
+/// flipped deficit byte would silently restore as different (valid)
+/// credit — the corruption fuzz in `rust/tests/test_serve.rs` requires
+/// every trailer byte-flip to surface as `InvalidData`.
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h = 0x811c_9dc5u32;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn w_sched_trailer(out: &mut Vec<u8>, sched: &SchedTrailer) {
+    let start = out.len();
+    out.extend_from_slice(TRAILER_MAGIC);
+    w_u64(out, sched.deficit_bits);
+    w_u8(out, sched.rung.unwrap_or(RUNG_NONE));
+    w_u8(out, sched.qos.tag());
+    let sum = fnv1a(&out[start..]);
+    w_u32(out, sum);
+}
+
+fn r_sched_trailer(r: &mut &[u8]) -> io::Result<SchedTrailer> {
+    if r.len() < TRAILER_LEN {
+        return Err(invalid(format!(
+            "truncated scheduler trailer ({} of {TRAILER_LEN} bytes)",
+            r.len()
+        )));
+    }
+    let body = &r[..TRAILER_LEN - 4];
+    if &body[..4] != TRAILER_MAGIC {
+        return Err(invalid("bad scheduler-trailer magic"));
+    }
+    let mut rr: &[u8] = &body[4..];
+    let deficit_bits = r_u64(&mut rr)?;
+    let rung_byte = r_u8(&mut rr)?;
+    let qos_tag = r_u8(&mut rr)?;
+    let mut rr: &[u8] = &r[TRAILER_LEN - 4..TRAILER_LEN];
+    let want = r_u32(&mut rr)?;
+    if fnv1a(body) != want {
+        return Err(invalid("scheduler-trailer checksum mismatch"));
+    }
+    let rung = if rung_byte == RUNG_NONE { None } else { Some(rung_byte) };
+    let qos = QosClass::from_tag(qos_tag)
+        .ok_or_else(|| invalid(format!("bad QoS tag {qos_tag} in scheduler trailer")))?;
+    *r = &r[TRAILER_LEN..];
+    Ok(SchedTrailer { deficit_bits, rung, qos })
+}
+
+// ---------------------------------------------------------------------------
 // Save / restore.
 // ---------------------------------------------------------------------------
 
+/// [`save_with_sched`] with a zeroed scheduler trailer (the job's own
+/// QoS class, no banked credit, no rung) — the standalone-job form.
+pub fn save(job: &Job) -> io::Result<Vec<u8>> {
+    save_with_sched(job, &SchedTrailer { qos: job.spec().qos, ..SchedTrailer::default() })
+}
+
 /// Serialize a resumable snapshot of `job` (see the module docs for the
-/// layout). Refuses a finalized job: snapshots exist to resume
+/// layout), with the fleet's scheduler-side state in the trailer.
+/// Refuses a finalized job: snapshots exist to resume
 /// running/paused jobs, and a finalized trace (trailing record appended,
 /// `final_x` set) would restore into a double-finalized, diverged trace.
-pub fn save(job: &Job) -> io::Result<Vec<u8>> {
+pub fn save_with_sched(job: &Job, sched: &SchedTrailer) -> io::Result<Vec<u8>> {
     if job.run.is_finalized() {
         return Err(io::Error::new(
             io::ErrorKind::InvalidInput,
@@ -291,16 +392,26 @@ pub fn save(job: &Job) -> io::Result<Vec<u8>> {
     }
     w_u64(&mut out, trace.total_payload_bits as u64);
     w_u64(&mut out, trace.total_side_bits as u64);
+    // --- scheduler trailer (version 2) ---
+    w_sched_trailer(&mut out, sched);
     Ok(out)
 }
 
-/// Rebuild a job from a snapshot. The static artifacts are regrown from
-/// the spec seed (identical by the derivation discipline of
-/// [`crate::serve::job`]); the dynamic state is overlaid and
-/// cross-checked against the spec — any inconsistency, unknown tag,
-/// out-of-cap length, truncation or trailing garbage is
-/// [`io::ErrorKind::InvalidData`].
+/// [`restore_with_sched`] discarding the scheduler trailer — the
+/// standalone-job form (the restored job still carries the trailer's QoS
+/// class on its spec).
 pub fn restore(bytes: &[u8]) -> io::Result<Job> {
+    restore_with_sched(bytes).map(|(job, _)| job)
+}
+
+/// Rebuild a job (and its scheduler-side state) from a snapshot. The
+/// static artifacts are regrown from the spec seed (identical by the
+/// derivation discipline of [`crate::serve::job`]); the dynamic state is
+/// overlaid and cross-checked against the spec — any inconsistency,
+/// unknown tag, out-of-cap length, truncation, checksum mismatch or
+/// trailing garbage is [`io::ErrorKind::InvalidData`]. A version-1
+/// snapshot (pre-trailer) restores with [`SchedTrailer::default`].
+pub fn restore_with_sched(bytes: &[u8]) -> io::Result<(Job, SchedTrailer)> {
     let mut r: &[u8] = bytes;
     let mut magic = [0u8; 8];
     ck(r.read_exact(&mut magic))?;
@@ -308,9 +419,10 @@ pub fn restore(bytes: &[u8]) -> io::Result<Job> {
         return Err(invalid("not a KFCKPT01 job checkpoint"));
     }
     let version = r_u32(&mut r)?;
-    if version != CHECKPOINT_VERSION {
+    if !(CHECKPOINT_MIN_VERSION..=CHECKPOINT_VERSION).contains(&version) {
         return Err(invalid(format!(
-            "unsupported checkpoint version {version} (this build reads {CHECKPOINT_VERSION})"
+            "unsupported checkpoint version {version} \
+             (this build reads {CHECKPOINT_MIN_VERSION}..={CHECKPOINT_VERSION})"
         )));
     }
     // --- spec ---
@@ -358,6 +470,9 @@ pub fn restore(bytes: &[u8]) -> io::Result<Job> {
         drop_prob,
         domain,
         output,
+        // Not in the spec section: the v2 scheduler trailer carries the
+        // class, and the overlay below installs it post-build.
+        qos: QosClass::default(),
         seed,
     };
     let mut job =
@@ -408,6 +523,8 @@ pub fn restore(bytes: &[u8]) -> io::Result<Job> {
     }
     trace.total_payload_bits = r_u64(&mut r)? as usize;
     trace.total_side_bits = r_u64(&mut r)? as usize;
+    // --- scheduler trailer: mandatory in v2, absent in v1 ---
+    let sched = if version >= 2 { r_sched_trailer(&mut r)? } else { SchedTrailer::default() };
     if !r.is_empty() {
         return Err(invalid(format!("{} trailing bytes after checkpoint", r.len())));
     }
@@ -418,7 +535,8 @@ pub fn restore(bytes: &[u8]) -> io::Result<Job> {
     job.run.worker_rngs = worker_rngs;
     job.run.trace = trace;
     job.rng = rng;
-    Ok(job)
+    job.spec.qos = sched.qos;
+    Ok((job, sched))
 }
 
 #[cfg(test)]
@@ -491,6 +609,64 @@ mod tests {
         s.problem =
             ProblemSpec::PlantedRegression { rows_per_shard: super::MAX_ROWS + 1, student_t: false };
         assert!(Job::build(s).is_err(), "rows beyond the reader cap");
+    }
+
+    #[test]
+    fn sched_trailer_roundtrips_deficit_rung_and_qos() {
+        let mut a = job();
+        a.step_round(0);
+        let sched =
+            SchedTrailer { deficit_bits: 12_345, rung: Some(2), qos: QosClass::Gold };
+        let bytes = save_with_sched(&a, &sched).unwrap();
+        let (b, got) = restore_with_sched(&bytes).unwrap();
+        assert_eq!(got, sched);
+        assert_eq!(b.spec().qos, QosClass::Gold, "QoS travels on the restored spec");
+        assert_eq!(b.rounds_done(), 1);
+        // The plain save writes a zeroed trailer with the spec's class.
+        let plain = save(&b).unwrap();
+        let (_, zeroed) = restore_with_sched(&plain).unwrap();
+        assert_eq!(zeroed, SchedTrailer { qos: QosClass::Gold, ..SchedTrailer::default() });
+    }
+
+    #[test]
+    fn version_1_snapshots_without_trailer_still_load() {
+        // A v1 snapshot is exactly the v2 bytes minus the trailer, with
+        // the version word rolled back — what every pre-trailer build
+        // wrote. It must restore with scheduler defaults.
+        let mut a = job();
+        for _ in 0..3 {
+            a.step_round(0);
+        }
+        let v2 = save(&a).unwrap();
+        let mut v1 = v2[..v2.len() - TRAILER_LEN].to_vec();
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let (b, sched) = restore_with_sched(&v1).unwrap();
+        assert_eq!(sched, SchedTrailer::default());
+        assert_eq!(b.rounds_done(), 3);
+        assert_eq!(b.trace().total_payload_bits, a.trace().total_payload_bits);
+        // ...but a v2 snapshot with the trailer cut off is truncated, not
+        // a v1 snapshot: the version word says the trailer must be there.
+        let cut = &v2[..v2.len() - TRAILER_LEN];
+        assert_eq!(restore(cut).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn every_trailer_byte_flip_is_detected() {
+        // The trailer payload is free-form integers (deficit, rung), so
+        // only the checksum stands between a flipped bit and silently
+        // restored wrong scheduler credit.
+        let mut a = job();
+        a.step_round(0);
+        let good =
+            save_with_sched(&a, &SchedTrailer { deficit_bits: 999, rung: Some(1), qos: QosClass::Bronze })
+                .unwrap();
+        for pos in good.len() - TRAILER_LEN..good.len() {
+            let mut bad = good.clone();
+            bad[pos] ^= 0xA5;
+            let err = restore_with_sched(&bad)
+                .expect_err(&format!("trailer flip at byte {pos} must be rejected"));
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "byte {pos}");
+        }
     }
 
     #[test]

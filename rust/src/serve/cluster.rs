@@ -1,0 +1,391 @@
+//! Multi-fleet serving: partition the tenant population across several
+//! coordinator fleets and run their rounds concurrently.
+//!
+//! A [`FleetCluster`] owns `k` independent [`JobServer`]s, each with its
+//! own per-round bit budget, DRR scheduler and job registry. Placement
+//! and migration are the only cluster-level decisions; everything about
+//! *how* a job's rounds run stays inside its fleet, which is what makes
+//! the whole construction trace-neutral:
+//!
+//! * **Placement** — a submission hashes `(name, seed)` (FNV-1a) onto a
+//!   home fleet; a load-aware override reroutes it to the least-loaded
+//!   fleet when the home fleet is more than one live job ahead of the
+//!   lightest one, so adversarial name distributions cannot pile every
+//!   tenant onto one fleet.
+//! * **Concurrent rounds** — [`FleetCluster::run_round`] runs one fleet
+//!   round on every member fleet, each on its own scoped thread. Fleets
+//!   share no mutable state (the recycled buffer pool is lock-protected
+//!   and content-independent), so per-job traces are bit-identical to a
+//!   solo fleet's — `rust/tests/test_serve.rs` proves it.
+//! * **Migration** — [`FleetCluster::migrate`] drains a job's grant,
+//!   snapshots it (`KFCKPT01` v2, scheduler trailer included), restores
+//!   it into the target fleet and evicts the source copy. Checkpoints
+//!   are fleet-independent, so the migrated job's trace continues
+//!   bit-for-bit mid-deficit and mid-rung.
+//!
+//! Worker-thread fan-out inside granted rounds is armed per fleet with
+//! the cluster's fleet count, so the never-nest cap
+//! ([`crate::coordinator::config::FLEET_MAX_WORKER_THREADS`]) holds
+//! across the whole cluster, not per fleet.
+
+use std::sync::Arc;
+
+use crate::coordinator::channel::ChannelPools;
+use crate::coordinator::metrics::ClusterMetrics;
+use crate::serve::fleet::{JobId, JobServer, JobState, ServeError};
+use crate::serve::job::{Job, JobSpec};
+use crate::serve::scheduler::Policy;
+
+/// Cluster-assigned job handle (stable across migrations, unlike the
+/// per-fleet [`JobId`] which changes when a job changes fleets).
+pub type GlobalJobId = u64;
+
+/// Where a job currently lives.
+#[derive(Clone, Copy, Debug)]
+struct Placement {
+    gid: GlobalJobId,
+    fleet: usize,
+    local: JobId,
+}
+
+/// The multi-fleet job cluster (see the [module docs](self)).
+pub struct FleetCluster {
+    fleets: Vec<JobServer>,
+    placements: Vec<Placement>,
+    pools: Arc<ChannelPools>,
+    next_gid: GlobalJobId,
+    rounds: u64,
+    rejected: u64,
+    migrated: u64,
+}
+
+/// FNV-1a over the placement key — stable across processes (no
+/// `DefaultHasher` seed dependence), so a resubmitted spec lands on the
+/// same home fleet.
+fn place_hash(name: &str, seed: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in name.as_bytes().iter().chain(seed.to_le_bytes().iter()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl FleetCluster {
+    /// A cluster of `fleets` member fleets, each offering
+    /// `budget_bits_per_fleet_round` payload bits per round under
+    /// `policy`. All fleets share one recycled buffer pool, and each is
+    /// armed for worker-thread fan-out with the cluster's fleet count
+    /// (the never-nest share).
+    pub fn new(fleets: usize, budget_bits_per_fleet_round: usize, policy: Policy) -> Self {
+        let k = fleets.max(1);
+        let pools = Arc::new(ChannelPools::new(8));
+        let fleets = (0..k)
+            .map(|_| {
+                let mut f =
+                    JobServer::with_pools(budget_bits_per_fleet_round, policy, pools.clone());
+                f.enable_fanout(k);
+                f
+            })
+            .collect();
+        FleetCluster {
+            fleets,
+            placements: Vec::new(),
+            pools,
+            next_gid: 0,
+            rounds: 0,
+            rejected: 0,
+            migrated: 0,
+        }
+    }
+
+    /// Member fleet count.
+    pub fn fleet_count(&self) -> usize {
+        self.fleets.len()
+    }
+
+    /// Read access to a member fleet (metrics, budget).
+    pub fn fleet(&self, i: usize) -> &JobServer {
+        &self.fleets[i]
+    }
+
+    /// The cluster-shared recycled buffer pool.
+    pub fn pools(&self) -> &Arc<ChannelPools> {
+        &self.pools
+    }
+
+    /// Which fleet a job currently lives on.
+    pub fn fleet_of(&self, gid: GlobalJobId) -> Option<usize> {
+        self.placement(gid).map(|p| p.fleet)
+    }
+
+    /// Hash-based placement with the load-aware override (exposed so
+    /// tests can predict where a submission lands).
+    pub fn placement_for(&self, spec: &JobSpec) -> usize {
+        let home = (place_hash(&spec.name, spec.seed) % self.fleets.len() as u64) as usize;
+        let lightest = (0..self.fleets.len())
+            .min_by_key(|&i| self.fleets[i].live_jobs())
+            .unwrap_or(home);
+        if self.fleets[home].live_jobs() > self.fleets[lightest].live_jobs() + 1 {
+            lightest
+        } else {
+            home
+        }
+    }
+
+    /// Validate, place and admit a job on its (possibly rebalanced) home
+    /// fleet. Admission failures count toward the cluster's `rejected`
+    /// breakdown.
+    pub fn submit(&mut self, spec: JobSpec) -> Result<GlobalJobId, ServeError> {
+        let fleet = self.placement_for(&spec);
+        match self.fleets[fleet].submit(spec) {
+            Ok(local) => {
+                let gid = self.next_gid;
+                self.next_gid += 1;
+                self.placements.push(Placement { gid, fleet, local });
+                Ok(gid)
+            }
+            Err(e) => {
+                self.rejected += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Run one cluster round: every member fleet runs one fleet round,
+    /// each on its own scoped thread (fleets share no mutable state, so
+    /// this is trace-neutral at any interleaving). Returns the total
+    /// number of jobs granted an engine round.
+    pub fn run_round(&mut self) -> usize {
+        let granted = if self.fleets.len() == 1 {
+            self.fleets[0].run_round()
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .fleets
+                    .iter_mut()
+                    .map(|f| s.spawn(move || f.run_round()))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("fleet thread panicked")).sum()
+            })
+        };
+        self.rounds += 1;
+        granted
+    }
+
+    /// Run cluster rounds until no job is live anywhere or
+    /// `max_rounds` have executed; returns how many ran.
+    pub fn run(&mut self, max_rounds: usize) -> usize {
+        let mut ran = 0;
+        while ran < max_rounds && self.fleets.iter().any(|f| f.live_jobs() > 0) {
+            self.run_round();
+            ran += 1;
+        }
+        ran
+    }
+
+    /// Move a live (`Running`/`Paused`) job to `to_fleet`: drain its
+    /// grant (the move happens between fleet rounds), snapshot with the
+    /// scheduler trailer, restore into the target and evict the source
+    /// copy. The global id is stable across the move; the job's trace,
+    /// banked deficit and adaptive rung continue exactly where they
+    /// were.
+    pub fn migrate(&mut self, gid: GlobalJobId, to_fleet: usize) -> Result<(), ServeError> {
+        if to_fleet >= self.fleets.len() {
+            return Err(ServeError::Snapshot(format!(
+                "no fleet {to_fleet} in a {}-fleet cluster",
+                self.fleets.len()
+            )));
+        }
+        let p = *self.placement(gid).ok_or(ServeError::UnknownJob(gid))?;
+        if p.fleet == to_fleet {
+            return Ok(());
+        }
+        let was_paused = self.fleets[p.fleet].state(p.local) == Some(JobState::Paused);
+        let snap = self.fleets[p.fleet].checkpoint(p.local)?;
+        let new_local = self.fleets[to_fleet]
+            .restore(&snap)
+            .map_err(|e| ServeError::Snapshot(e.to_string()))?;
+        if was_paused {
+            // restore() admits as Running; re-park to preserve lifecycle.
+            self.fleets[to_fleet].pause(new_local)?;
+        }
+        self.fleets[p.fleet].evict(p.local)?;
+        let entry = self.placement_mut(gid).expect("placement vanished mid-migration");
+        entry.fleet = to_fleet;
+        entry.local = new_local;
+        self.migrated += 1;
+        Ok(())
+    }
+
+    /// A job's lifecycle state.
+    pub fn state(&self, gid: GlobalJobId) -> Option<JobState> {
+        let p = self.placement(gid)?;
+        self.fleets[p.fleet].state(p.local)
+    }
+
+    /// Read access to a job (trace, spec, progress).
+    pub fn job(&self, gid: GlobalJobId) -> Option<&Job> {
+        let p = self.placement(gid)?;
+        self.fleets[p.fleet].job(p.local)
+    }
+
+    /// A job's banked DRR deficit (invariant checks / debugging).
+    pub fn deficit_bits(&self, gid: GlobalJobId) -> Option<u64> {
+        let p = self.placement(gid)?;
+        self.fleets[p.fleet].deficit_bits(p.local)
+    }
+
+    /// Park a running job.
+    pub fn pause(&mut self, gid: GlobalJobId) -> Result<(), ServeError> {
+        let p = *self.placement(gid).ok_or(ServeError::UnknownJob(gid))?;
+        self.fleets[p.fleet].pause(p.local)
+    }
+
+    /// Unpark a paused job.
+    pub fn resume(&mut self, gid: GlobalJobId) -> Result<(), ServeError> {
+        let p = *self.placement(gid).ok_or(ServeError::UnknownJob(gid))?;
+        self.fleets[p.fleet].resume(p.local)
+    }
+
+    /// Terminate a running or paused job (partial trace finalized).
+    pub fn cancel(&mut self, gid: GlobalJobId) -> Result<(), ServeError> {
+        let p = *self.placement(gid).ok_or(ServeError::UnknownJob(gid))?;
+        self.fleets[p.fleet].cancel(p.local)
+    }
+
+    /// Cluster rounds executed so far.
+    pub fn round(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Jobs currently live (running or paused) across all fleets.
+    pub fn queued_jobs(&self) -> u64 {
+        self.placements
+            .iter()
+            .filter(|p| {
+                matches!(
+                    self.fleets[p.fleet].state(p.local),
+                    Some(JobState::Running) | Some(JobState::Paused)
+                )
+            })
+            .count() as u64
+    }
+
+    /// The cluster's aggregate accounting: the
+    /// served/queued/rejected/migrated tenant breakdown plus per-fleet
+    /// snapshots.
+    pub fn metrics(&self) -> ClusterMetrics {
+        ClusterMetrics {
+            cluster_rounds: self.rounds,
+            served_jobs: self
+                .placements
+                .iter()
+                .filter(|p| self.fleets[p.fleet].state(p.local) == Some(JobState::Finished))
+                .count() as u64,
+            queued_jobs: self.queued_jobs(),
+            rejected_jobs: self.rejected,
+            migrated_jobs: self.migrated,
+            served_job_rounds: self.fleets.iter().map(|f| f.metrics().served_job_rounds()).sum(),
+            spent_payload_bits: self.fleets.iter().map(|f| f.metrics().spent_payload_bits).sum(),
+            fleets: self.fleets.iter().map(|f| f.metrics().clone()).collect(),
+        }
+    }
+
+    fn placement(&self, gid: GlobalJobId) -> Option<&Placement> {
+        self.placements.iter().find(|p| p.gid == gid)
+    }
+
+    fn placement_mut(&mut self, gid: GlobalJobId) -> Option<&mut Placement> {
+        self.placements.iter_mut().find(|p| p.gid == gid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::registry::CompressorSpec;
+
+    fn spec(name: &str, rounds: usize, seed: u64) -> JobSpec {
+        JobSpec::new(name, CompressorSpec::parse("ndsc-dith").unwrap(), 1.0, 16, rounds, seed)
+    }
+
+    #[test]
+    fn placement_is_stable_and_load_aware() {
+        let mut c = FleetCluster::new(4, 1 << 20, Policy::Drr);
+        // Same spec always hashes to the same home fleet.
+        let s = spec("stable", 8, 7);
+        assert_eq!(c.placement_for(&s), c.placement_for(&s));
+        // Whatever the hash distribution does, the load-aware override
+        // must keep the live counts within its rebalance threshold.
+        for i in 0..12 {
+            c.submit(spec(&format!("j{i}"), 64, i as u64)).unwrap();
+        }
+        let live: Vec<usize> = (0..4).map(|i| c.fleet(i).live_jobs()).collect();
+        let spread = live.iter().max().unwrap() - live.iter().min().unwrap();
+        assert!(spread <= 2, "load-aware placement must keep fleets balanced, got {live:?}");
+        assert_eq!(c.queued_jobs(), 12);
+    }
+
+    #[test]
+    fn rejected_submissions_count_in_the_breakdown() {
+        let mut c = FleetCluster::new(2, 10, Policy::Drr);
+        // qsgd at R=4, n=16 needs 64 bits/round > the 10-bit budget.
+        let bad = JobSpec::new("greedy", CompressorSpec::parse("qsgd").unwrap(), 4.0, 16, 8, 1);
+        assert!(matches!(c.submit(bad), Err(ServeError::Infeasible { .. })));
+        let m = c.metrics();
+        assert_eq!(m.rejected_jobs, 1);
+        assert_eq!(m.queued_jobs, 0);
+    }
+
+    #[test]
+    fn cluster_runs_jobs_to_completion_across_fleets() {
+        let mut c = FleetCluster::new(3, 1 << 20, Policy::Drr);
+        let gids: Vec<_> =
+            (0..6).map(|i| c.submit(spec(&format!("j{i}"), 10, 100 + i as u64)).unwrap()).collect();
+        c.run(64);
+        for gid in gids {
+            assert_eq!(c.state(gid), Some(JobState::Finished));
+            let t = c.job(gid).unwrap().trace();
+            assert_eq!(t.records.len(), 10);
+            assert!(t.final_x.iter().all(|v| v.is_finite()));
+        }
+        let m = c.metrics();
+        assert_eq!(m.served_jobs, 6);
+        assert_eq!(m.queued_jobs, 0);
+        assert_eq!(m.served_job_rounds, 60);
+        assert_eq!(m.fleets.len(), 3);
+    }
+
+    #[test]
+    fn migrate_is_rejected_for_bad_targets_and_is_idempotent_in_place() {
+        let mut c = FleetCluster::new(2, 1 << 20, Policy::Drr);
+        let gid = c.submit(spec("m", 20, 5)).unwrap();
+        let home = c.fleet_of(gid).unwrap();
+        assert!(matches!(c.migrate(gid, 9), Err(ServeError::Snapshot(_))));
+        c.migrate(gid, home).unwrap();
+        assert_eq!(c.fleet_of(gid), Some(home), "same-fleet migrate is a no-op");
+        assert!(matches!(c.migrate(99, 0), Err(ServeError::UnknownJob(99))));
+        assert_eq!(c.metrics().migrated_jobs, 0);
+    }
+
+    #[test]
+    fn migration_preserves_lifecycle_and_counts() {
+        let mut c = FleetCluster::new(2, 1 << 20, Policy::Drr);
+        let gid = c.submit(spec("mover", 30, 5)).unwrap();
+        for _ in 0..4 {
+            c.run_round();
+        }
+        c.pause(gid).unwrap();
+        let from = c.fleet_of(gid).unwrap();
+        let to = 1 - from;
+        c.migrate(gid, to).unwrap();
+        assert_eq!(c.fleet_of(gid), Some(to));
+        assert_eq!(c.state(gid), Some(JobState::Paused), "paused jobs migrate parked");
+        c.resume(gid).unwrap();
+        c.run(64);
+        assert_eq!(c.state(gid), Some(JobState::Finished));
+        assert_eq!(c.job(gid).unwrap().trace().records.len(), 30);
+        assert_eq!(c.metrics().migrated_jobs, 1);
+    }
+}

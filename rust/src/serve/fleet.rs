@@ -8,13 +8,32 @@
 //! (`submit`/`pause`/`resume`/`cancel`) take effect between fleet
 //! rounds; a paused job's state is untouched until resume, so its trace
 //! continues exactly where it stopped.
+//!
+//! **QoS.** Each job carries a [`QosClass`]: its DRR quantum is the
+//! weighted share `⌊B·w_j/Σ_live w⌋`, and every class with live members
+//! holds a reserved slice of the round budget
+//! ([`QosClass::reserve_num`]/[`scheduler::RESERVE_DENOM`]) that only
+//! its own members may draw — a granted job spends its class reserve
+//! first, then the common pool. Single-class fleets reduce exactly to
+//! the unweighted scheduler, so pre-QoS traces are unchanged.
+//!
+//! **Threaded granted rounds.** [`JobServer::enable_fanout`] switches
+//! granted rounds from the inline engine to the threaded executor
+//! ([`Job::step_round_mt`]) whenever the never-nest gate
+//! ([`crate::coordinator::config::fleet_fanout_threads`]) allows — the
+//! per-worker scratch comes from a fleet-owned (or cluster-shared)
+//! [`ChannelPools`]. Traces are bit-identical either way, so a fleet may
+//! flip fan-out on or off mid-run.
 
 use std::io;
+use std::sync::Arc;
 
+use crate::coordinator::channel::ChannelPools;
+use crate::coordinator::config;
 use crate::coordinator::metrics::{FleetMetrics, JobBits};
-use crate::serve::checkpoint;
+use crate::serve::checkpoint::{self, SchedTrailer};
 use crate::serve::job::{Job, JobSpec};
-use crate::serve::scheduler::{self, Deficit, Policy};
+use crate::serve::scheduler::{self, Deficit, Policy, QosClass};
 
 /// Fleet-assigned job handle.
 pub type JobId = u64;
@@ -67,6 +86,9 @@ pub enum ServeError {
         /// The rejected operation.
         op: &'static str,
     },
+    /// A checkpoint round-trip inside a compound operation (migration)
+    /// failed; the message carries the underlying snapshot error.
+    Snapshot(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -82,6 +104,7 @@ impl std::fmt::Display for ServeError {
             ServeError::BadState { id, state, op } => {
                 write!(f, "cannot {op} job {id} in state {state}")
             }
+            ServeError::Snapshot(e) => write!(f, "checkpoint round-trip failed: {e}"),
         }
     }
 }
@@ -92,6 +115,10 @@ struct JobSlot {
     id: JobId,
     state: JobState,
     deficit: Deficit,
+    /// Last granted ladder level (`None` until the first grant) — the
+    /// adaptive-R rung that travels in the checkpoint trailer so a
+    /// restored job's observability picks up where it left off.
+    rung: Option<u8>,
     job: Job,
 }
 
@@ -103,12 +130,29 @@ pub struct JobServer {
     metrics: FleetMetrics,
     cursor: usize,
     next_id: JobId,
+    /// Recycled threaded-round scratch (shared across the cluster when
+    /// this fleet was built by [`JobServer::with_pools`]).
+    pools: Arc<ChannelPools>,
+    /// `Some(active_fleets)` once [`JobServer::enable_fanout`] armed
+    /// threaded granted rounds; `None` (the default) steps inline.
+    fanout_fleets: Option<usize>,
 }
 
 impl JobServer {
     /// A fleet offering `budget_bits_per_round` payload bits per fleet
     /// round, arbitrated by `policy`.
     pub fn new(budget_bits_per_round: usize, policy: Policy) -> Self {
+        Self::with_pools(budget_bits_per_round, policy, Arc::new(ChannelPools::new(8)))
+    }
+
+    /// Like [`JobServer::new`], with a caller-provided buffer pool — the
+    /// cluster hands every member fleet one shared pool so migrated
+    /// jobs' scratch is recycled fleet-to-fleet.
+    pub fn with_pools(
+        budget_bits_per_round: usize,
+        policy: Policy,
+        pools: Arc<ChannelPools>,
+    ) -> Self {
         JobServer {
             policy,
             budget_bits: budget_bits_per_round,
@@ -119,7 +163,26 @@ impl JobServer {
             },
             cursor: 0,
             next_id: 0,
+            pools,
+            fanout_fleets: None,
         }
+    }
+
+    /// Arm threaded granted rounds: with `active_fleets` fleets running
+    /// concurrently, each granted job's worker phase fans out over at
+    /// most `FLEET_MAX_WORKER_THREADS / active_fleets` scoped threads
+    /// (never-nest cap; see
+    /// [`crate::coordinator::config::fleet_fanout_threads`]). Jobs the
+    /// gate declines (single-worker, kernel-parallel dims, exhausted
+    /// allowance) keep stepping inline. Idempotent; pass the cluster's
+    /// fleet count, or `1` for a solo fleet.
+    pub fn enable_fanout(&mut self, active_fleets: usize) {
+        self.fanout_fleets = Some(active_fleets.max(1));
+    }
+
+    /// The fleet's recycled threaded-round buffer pool.
+    pub fn pools(&self) -> &Arc<ChannelPools> {
+        &self.pools
     }
 
     /// The fleet's arbitration policy.
@@ -165,16 +228,26 @@ impl JobServer {
         let id = self.next_id;
         self.next_id += 1;
         self.metrics.jobs.push(JobBits { job: id, name: job.spec().name.clone(), ..Default::default() });
-        self.slots.push(JobSlot { id, state: JobState::Running, deficit: Deficit::default(), job });
+        self.slots.push(JobSlot {
+            id,
+            state: JobState::Running,
+            deficit: Deficit::default(),
+            rung: None,
+            job,
+        });
         Ok(id)
     }
 
     /// Restore a checkpointed job into this fleet (a fresh id is
     /// assigned; accounting rows are seeded from the snapshot's trace
     /// totals so per-job bits stay cumulative across restores). The
-    /// restored job is admitted like any submission.
+    /// restored job is admitted like any submission. Scheduler state in
+    /// the trailer — banked DRR deficit (clamped to the classic DRR cap
+    /// so a foreign snapshot cannot bank unbounded credit here) and the
+    /// adaptive-R rung — resumes intact, which is what makes a
+    /// mid-deficit fleet-to-fleet migration trace-neutral.
     pub fn restore(&mut self, bytes: &[u8]) -> io::Result<JobId> {
-        let job = checkpoint::restore(bytes)?;
+        let (job, sched) = checkpoint::restore_with_sched(bytes)?;
         let needed = job.min_cost_bits(self.policy);
         if needed > self.budget_bits as u64 {
             return Err(io::Error::new(
@@ -194,8 +267,16 @@ impl JobServer {
             payload_bits: job.trace().total_payload_bits as u64,
             side_bits: job.trace().total_side_bits as u64,
         });
+        let cost = job.requested_cost_bits();
+        let cap = Deficit::cap(scheduler::quantum(self.budget_bits, 1), cost);
         let state = if job.is_complete() { JobState::Finished } else { JobState::Running };
-        let mut slot = JobSlot { id, state, deficit: Deficit::default(), job };
+        let mut slot = JobSlot {
+            id,
+            state,
+            deficit: Deficit { bits: sched.deficit_bits.min(cap) },
+            rung: sched.rung,
+            job,
+        };
         if slot.state == JobState::Finished {
             slot.job.finalize();
         }
@@ -203,7 +284,10 @@ impl JobServer {
         Ok(id)
     }
 
-    /// Serialize a resumable snapshot of a `Running`/`Paused` job.
+    /// Serialize a resumable snapshot of a `Running`/`Paused` job,
+    /// scheduler trailer (banked deficit, adaptive-R rung, QoS class)
+    /// included — fleet-independent by construction, so any fleet (this
+    /// one or a migration target) restores it bit-for-bit.
     pub fn checkpoint(&self, id: JobId) -> Result<Vec<u8>, ServeError> {
         let slot = self.slot(id)?;
         match slot.state {
@@ -211,10 +295,44 @@ impl JobServer {
             // finalizes and marks Finished in the same round), so the
             // writer's finalized-job refusal is unreachable here; map it
             // to BadState defensively rather than panicking.
-            JobState::Running | JobState::Paused => checkpoint::save(&slot.job)
-                .map_err(|_| ServeError::BadState { id, state: slot.state, op: "checkpoint" }),
+            JobState::Running | JobState::Paused => {
+                let sched = SchedTrailer {
+                    deficit_bits: slot.deficit.bits,
+                    rung: slot.rung,
+                    qos: slot.job.spec().qos,
+                };
+                checkpoint::save_with_sched(&slot.job, &sched)
+                    .map_err(|_| ServeError::BadState { id, state: slot.state, op: "checkpoint" })
+            }
             state => Err(ServeError::BadState { id, state, op: "checkpoint" }),
         }
+    }
+
+    /// Remove a job from the registry entirely, returning it — the
+    /// drain step of a fleet-to-fleet migration (snapshot first via
+    /// [`JobServer::checkpoint`]; the trailer carries the scheduler
+    /// state eviction discards here). The job's threaded-round scratch
+    /// goes back to the fleet pool, and its metrics row leaves with it
+    /// so slot/metrics stay in lockstep.
+    pub fn evict(&mut self, id: JobId) -> Result<Job, ServeError> {
+        let j = self
+            .slots
+            .iter()
+            .position(|s| s.id == id)
+            .ok_or(ServeError::UnknownJob(id))?;
+        let mut slot = self.slots.remove(j);
+        self.metrics.jobs.remove(j);
+        // Keep the rotation anchored on the same successor slot.
+        if j < self.cursor {
+            self.cursor -= 1;
+        }
+        if self.slots.is_empty() {
+            self.cursor = 0;
+        } else {
+            self.cursor %= self.slots.len();
+        }
+        slot.job.release_mt(&self.pools);
+        Ok(slot.job)
     }
 
     /// Park a running job: it keeps its place in the registry but is
@@ -271,9 +389,22 @@ impl JobServer {
         self.slots.iter().find(|s| s.id == id).map(|s| s.deficit.bits)
     }
 
+    /// A job's last granted ladder level (`None` until first grant) —
+    /// the adaptive-R rung preserved across checkpoint/restore.
+    pub fn last_rung(&self, id: JobId) -> Option<Option<u8>> {
+        self.slots.iter().find(|s| s.id == id).map(|s| s.rung)
+    }
+
     /// Execute one fleet round (see the [scheduler docs]). Returns the
     /// number of jobs granted an engine round. A fleet with no live job
     /// is idle: nothing runs and the round counter does not advance.
+    ///
+    /// Per round: every class with live members gets its reserved slice
+    /// of the budget; each live job accrues its weighted quantum, and a
+    /// granted job's cost is drawn from its class reserve first, then
+    /// the common pool. With one live class this is arithmetic-identical
+    /// to the unweighted scheduler (the reserve and common pool are one
+    /// undifferentiated budget).
     ///
     /// [scheduler docs]: crate::serve::scheduler
     pub fn run_round(&mut self) -> usize {
@@ -281,8 +412,33 @@ impl JobServer {
         if live == 0 {
             return 0;
         }
-        let quantum = scheduler::quantum(self.budget_bits, live);
-        let mut remaining = self.budget_bits as u64;
+        // Class census → weighted quanta + per-class reservations.
+        let mut live_weight = [0u64; QosClass::ALL.len()];
+        for s in &self.slots {
+            if s.state == JobState::Running {
+                live_weight[s.job.spec().qos.index()] += s.job.spec().qos.weight();
+            }
+        }
+        let total_weight: u64 = live_weight.iter().sum();
+        let budget = self.budget_bits as u64;
+        let mut reserved = [0u64; QosClass::ALL.len()];
+        for c in QosClass::ALL {
+            if live_weight[c.index()] > 0 {
+                reserved[c.index()] = budget * c.reserve_num() / scheduler::RESERVE_DENOM;
+            }
+        }
+        // Idle classes' slices stay in the common pool.
+        let mut common = budget - reserved.iter().sum::<u64>();
+        // A class's steady-state ceiling: its own reserve plus the common
+        // pool. An *admitted* job whose cheapest rung exceeds this ceiling
+        // would be starved forever by the reservations alone, breaking the
+        // admission contract — such jobs bypass the class cap and draw on
+        // the whole remaining budget instead (reservations yield to the
+        // admission guarantee, never the other way around).
+        let mut class_ceiling = [0u64; QosClass::ALL.len()];
+        for c in QosClass::ALL {
+            class_ceiling[c.index()] = reserved[c.index()] + common;
+        }
         let mut served = 0usize;
         let nslots = self.slots.len();
         for k in 0..nslots {
@@ -291,13 +447,50 @@ impl JobServer {
             if slot.state != JobState::Running {
                 continue;
             }
+            let class = slot.job.spec().qos;
+            let quantum =
+                scheduler::weighted_quantum(self.budget_bits, class.weight(), total_weight);
             slot.deficit.accrue(quantum, slot.job.requested_cost_bits());
-            let afford = slot.deficit.bits.min(remaining);
+            let oversized = slot.job.min_cost_bits(self.policy) > class_ceiling[class.index()];
+            let pool = if oversized {
+                reserved.iter().sum::<u64>() + common
+            } else {
+                reserved[class.index()] + common
+            };
+            let afford = slot.deficit.bits.min(pool);
             if let Some(lvl) = slot.job.pick_level(self.policy, afford) {
                 let cost = slot.job.level_cost(lvl);
-                let (payload, side) = slot.job.step_round(lvl);
+                let threads = self.fanout_fleets.and_then(|fleets| {
+                    config::fleet_fanout_threads(
+                        slot.job.spec().workers,
+                        slot.job.spec().n,
+                        fleets,
+                    )
+                });
+                let (payload, side) = match threads {
+                    Some(t) => slot.job.step_round_mt(lvl, t, &self.pools),
+                    None => slot.job.step_round(lvl),
+                };
+                // Draw the class reserve down first, then the common pool,
+                // then (oversized bypass only) other classes' reserves.
+                // `afford ≤ pool` guarantees the drain terminates at zero.
+                let mut owed = cost;
+                let take = owed.min(reserved[class.index()]);
+                reserved[class.index()] -= take;
+                owed -= take;
+                let take = owed.min(common);
+                common -= take;
+                owed -= take;
+                if owed > 0 {
+                    for c in QosClass::ALL {
+                        let take = owed.min(reserved[c.index()]);
+                        reserved[c.index()] -= take;
+                        owed -= take;
+                    }
+                }
+                debug_assert_eq!(owed, 0, "grant exceeded the round budget");
                 slot.deficit.charge(cost);
-                remaining -= cost;
+                slot.rung = Some(lvl as u8);
                 served += 1;
                 if slot.job.is_complete() {
                     slot.job.finalize();
@@ -362,6 +555,28 @@ mod tests {
     }
 
     #[test]
+    fn oversized_admitted_tenant_bypasses_class_ceiling_and_finishes() {
+        // Budget 80, all three classes live: reservations are 30/20/10,
+        // common 20, so gold's class ceiling is 30+20 = 50 — below the
+        // gold qsgd tenant's only rung (64 bits). It is admitted
+        // (64 ≤ 80), so the reservation cap must yield: without the
+        // oversized bypass this job would be starved forever.
+        let mut srv = JobServer::new(80, Policy::Drr);
+        let g = srv
+            .submit(spec("g-qsgd", "qsgd", 4.0, 3, 1).with_qos(QosClass::Gold))
+            .unwrap();
+        let s = srv.submit(spec("s-sd", "sd", 0.5, 5, 2)).unwrap();
+        let b = srv
+            .submit(spec("b-randk", "randk1b", 0.25, 5, 3).with_qos(QosClass::Bronze))
+            .unwrap();
+        srv.run(256);
+        for id in [g, s, b] {
+            assert_eq!(srv.state(id), Some(JobState::Finished), "job {id} starved");
+        }
+        assert_eq!(srv.job(g).unwrap().rounds_done(), 3);
+    }
+
+    #[test]
     fn paused_jobs_are_skipped_cancelled_jobs_keep_their_trace() {
         let mut srv = JobServer::new(1 << 20, Policy::Drr);
         let a = srv.submit(spec("a", "ndsc-dith", 1.0, 50, 1)).unwrap();
@@ -381,6 +596,48 @@ mod tests {
         srv.resume(a).unwrap();
         srv.run(256);
         assert_eq!(srv.state(a), Some(JobState::Finished));
+    }
+
+    #[test]
+    fn evict_removes_slot_and_metrics_in_lockstep() {
+        let mut srv = JobServer::new(1 << 20, Policy::Drr);
+        let a = srv.submit(spec("a", "ndsc-dith", 1.0, 50, 1)).unwrap();
+        let b = srv.submit(spec("b", "sd", 0.5, 50, 2)).unwrap();
+        let c = srv.submit(spec("c", "ndsc-dith", 1.0, 50, 3)).unwrap();
+        srv.run_round();
+        let job = srv.evict(b).unwrap();
+        assert_eq!(job.spec().name, "b");
+        assert!(matches!(srv.evict(b), Err(ServeError::UnknownJob(_))));
+        assert_eq!(srv.job_ids().collect::<Vec<_>>(), vec![a, c]);
+        assert_eq!(srv.metrics().jobs.len(), 2);
+        assert_eq!(srv.metrics().jobs[1].name, "c");
+        // The survivors keep being scheduled to completion.
+        srv.run(256);
+        assert_eq!(srv.state(a), Some(JobState::Finished));
+        assert_eq!(srv.state(c), Some(JobState::Finished));
+        assert_eq!(srv.metrics().jobs[0].rounds_served, 50);
+    }
+
+    #[test]
+    fn rung_tracks_last_granted_level_and_restores_with_deficit() {
+        // Scarce adaptive fleet: jobs get downgraded rungs; checkpoint
+        // then restore into a fresh fleet must carry both the banked
+        // deficit and the rung.
+        let mut srv = JobServer::new(40, Policy::DrrAdaptive);
+        let a = srv.submit(spec("a", "ndsc-dith", 1.0, 400, 1)).unwrap();
+        let _b = srv.submit(spec("b", "ndsc-dith", 1.0, 400, 2)).unwrap();
+        assert_eq!(srv.last_rung(a), Some(None), "no grant yet, no rung");
+        for _ in 0..12 {
+            srv.run_round();
+        }
+        let rung = srv.last_rung(a).unwrap();
+        assert!(rung.is_some(), "12 scarce rounds must have granted job a at least once");
+        let deficit = srv.deficit_bits(a).unwrap();
+        let snap = srv.checkpoint(a).unwrap();
+        let mut dst = JobServer::new(40, Policy::DrrAdaptive);
+        let a2 = dst.restore(&snap).unwrap();
+        assert_eq!(dst.deficit_bits(a2), Some(deficit), "banked credit survives restore");
+        assert_eq!(dst.last_rung(a2), Some(rung), "adaptive rung survives restore");
     }
 
     #[test]

@@ -16,19 +16,25 @@
 //! identical data and frames; only the dynamic state (iterate, RNGs,
 //! feedback, trace) needs to travel in a snapshot.
 
+use std::sync::Arc;
+
+use crate::coordinator::channel::ChannelPools;
 use crate::coordinator::transport::Participation;
 use crate::data::synthetic::planted_regression_shards;
 use crate::linalg::rng::Rng;
 use crate::opt::engine::feedback::{DefFeedback, FeedbackMemory, NoFeedback};
 use crate::opt::engine::schedule::Schedule;
-use crate::opt::engine::{Codecs, OracleBank, OutputMode, Problem, RngPolicy, RoundCtx, RunState};
+use crate::opt::engine::{
+    Codecs, MtRoundCtx, OracleBank, OutputMode, Problem, RngPolicy, RoundCtx, RunState,
+    SharedOracleBank,
+};
 use crate::opt::multi::ShardedProblem;
 use crate::opt::objectives::{DatasetObjective, Loss};
 use crate::opt::projection::Domain;
 use crate::opt::Trace;
 use crate::quant::registry::CompressorSpec;
 use crate::quant::{budget_bits, Compressor};
-use crate::serve::scheduler::Policy;
+use crate::serve::scheduler::{Policy, QosClass};
 
 /// Salt for the problem-data RNG stream (`seed ^ DATA_SALT`).
 pub const DATA_SALT: u64 = 0xDA7A_5EED;
@@ -104,6 +110,12 @@ pub struct JobSpec {
     pub domain: Domain,
     /// Trace shape.
     pub output: OutputMode,
+    /// Weighted QoS class: scales the job's DRR quantum and backs the
+    /// per-class budget reservations
+    /// ([`crate::serve::scheduler::QosClass`]). Travels in the
+    /// checkpoint's scheduler trailer, not the spec section, so v1
+    /// snapshots restore as the default class.
+    pub qos: QosClass,
     /// Master seed; every stream is salted off it.
     pub seed: u64,
 }
@@ -127,6 +139,7 @@ impl JobSpec {
             drop_prob: 0.0,
             domain: Domain::Unconstrained,
             output: OutputMode::PolyakAverage,
+            qos: QosClass::default(),
             seed,
         }
     }
@@ -180,6 +193,12 @@ impl JobSpec {
     /// Set the trace shape.
     pub fn with_output(mut self, o: OutputMode) -> Self {
         self.output = o;
+        self
+    }
+
+    /// Set the weighted QoS class (default: [`QosClass::Silver`]).
+    pub fn with_qos(mut self, q: QosClass) -> Self {
+        self.qos = q;
         self
     }
 }
@@ -426,6 +445,50 @@ impl Job {
         )
     }
 
+    /// [`Job::step_round`]'s threaded twin: execute one engine round at
+    /// ladder level `lvl` with the worker phase fanned out over `threads`
+    /// scoped threads ([`RunState::step_mt`]), per-worker scratch drawn
+    /// from the fleet's recycled `pools`. Bit-identical to the inline
+    /// path at any thread count — the serve conformance tests compare
+    /// whole traces — so a fleet may freely mix inline and threaded
+    /// rounds on the same job.
+    pub fn step_round_mt(
+        &mut self,
+        lvl: usize,
+        threads: usize,
+        pools: &Arc<ChannelPools>,
+    ) -> (u64, u64) {
+        let before_payload = self.run.trace().total_payload_bits;
+        let before_side = self.run.trace().total_side_bits;
+        let bank =
+            ShardBank { shards: &self.problem.shards, batch: self.spec.batch, idx: &mut self.idx };
+        let mut ctx = MtRoundCtx {
+            problem: Problem::Sharded(&self.problem),
+            oracles: &bank,
+            codecs: Codecs::PerWorker(&self.ladder[lvl].codecs),
+            schedule: &self.sched_eff,
+            feedback: self.feedback.as_dyn_mut(),
+            domain: self.spec.domain,
+            drop_prob: self.spec.drop_prob,
+            rounds: self.spec.rounds,
+            x_star: Some(&self.x_star),
+        };
+        let stepped = self.run.step_mt(&mut ctx, threads, pools);
+        debug_assert!(stepped, "step_round_mt called on a completed job");
+        (
+            (self.run.trace().total_payload_bits - before_payload) as u64,
+            (self.run.trace().total_side_bits - before_side) as u64,
+        )
+    }
+
+    /// Return the run's threaded-round scratch buffers to `pools` (called
+    /// when a job leaves a fleet — completion, eviction, or migration —
+    /// so its successors reuse the allocations). No-op if the job never
+    /// ran a threaded round.
+    pub fn release_mt(&mut self, pools: &Arc<ChannelPools>) {
+        self.run.release_mt_slots(pools);
+    }
+
     /// Close the trace (trailing record + `final_x`). Idempotent.
     pub fn finalize(&mut self) {
         self.run.finalize(Problem::Sharded(&self.problem), self.spec.output, Some(&self.x_star));
@@ -493,6 +556,23 @@ impl OracleBank for ShardBank<'_> {
             Some(b) => {
                 rng.sample_indices_into(obj.m, b.min(obj.m), self.idx);
                 obj.minibatch_gradient(x, Some(self.idx), out);
+            }
+            None => obj.gradient(x, out),
+        }
+    }
+}
+
+impl SharedOracleBank for ShardBank<'_> {
+    fn query_shared(&self, i: usize, x: &[f32], rng: &mut Rng, idx: &mut Vec<usize>, out: &mut [f32]) {
+        // Same draws as `query` — `sample_indices_into` clears its scratch
+        // first, so the caller-owned `idx` (one per worker slot in the
+        // threaded executor) yields bit-identical batches to the shared
+        // buffer the inline path reuses.
+        let obj = &self.shards[i];
+        match self.batch {
+            Some(b) => {
+                rng.sample_indices_into(obj.m, b.min(obj.m), idx);
+                obj.minibatch_gradient(x, Some(idx), out);
             }
             None => obj.gradient(x, out),
         }

@@ -8,18 +8,23 @@
 //! over a single communication budget:
 //!
 //! ```text
-//!  submit / pause / resume / cancel             (lifecycle, fleet.rs)
-//!        │
+//!  submit / pause / resume / cancel / migrate   (lifecycle, cluster.rs)
+//!        │  FNV-1a(name,seed) % k placement + load-aware rebalance
 //!        ▼
-//!  ┌───────────┐  per-round grants (job, level R_i)  ┌───────────────┐
-//!  │ JobServer │ ───────────────────────────────────▶│ engine round   │
-//!  │  registry │  deficit round robin over a global  │ (RunState +    │
-//!  │  + DRR    │  bits/round budget (scheduler.rs)   │  RoundCtx)     │
-//!  └───────────┘                                     └───────────────┘
-//!        │                                                   │
-//!        ▼                                                   ▼
+//!  ┌──────────────── FleetCluster (k fleets, 1 thread each) ─────────┐
+//!  │ ┌───────────┐  per-round grants (job, level R_i) ┌────────────┐ │
+//!  │ │ JobServer │ ──────────────────────────────────▶│ engine     │ │
+//!  │ │ registry  │  weighted DRR + QoS reservations   │ round      │ │
+//!  │ │ + DRR     │  over a per-fleet bits/round       │ (inline or │ │
+//!  │ │ + QoS     │  budget (scheduler.rs)             │ step_mt    │ │
+//!  │ └───────────┘                                    │ fan-out)   │ │
+//!  │      ·            ... fleet 2 .. fleet k ...     └────────────┘ │
+//!  └──────────────────────────────────────────────────────────────────┘
+//!        │ drain grant → snapshot → restore in target (migration)
+//!        ▼
 //!  checkpoint.rs — versioned binary snapshots         per-job Trace +
-//!  (resume bit-for-bit, corrupt input ⇒ InvalidData)  FleetMetrics
+//!  (KFCKPT01 v2: + scheduler trailer with deficit /   FleetMetrics +
+//!  rung / QoS; corrupt input ⇒ InvalidData)           ClusterMetrics
 //! ```
 //!
 //! Design invariants:
@@ -43,6 +48,10 @@
 //!   [`crate::coordinator::protocol`] hardening rules).
 //! * **Zero-allocation steady state** — a fleet round performs no heap
 //!   allocation per job once warm (`rust/tests/test_alloc.rs`, phase 4).
+//! * **Fleet-independence** — a snapshot carries no fleet identity, so a
+//!   job restores into *any* fleet (same process or not) and its trace,
+//!   banked deficit and adaptive rung continue bit-for-bit; this is the
+//!   whole mechanism behind [`cluster::FleetCluster::migrate`].
 //!
 //! The CLI load-driver is `repro serve` ([`crate::exp::serve`]); the
 //! throughput benchmark is `rust/benches/bench_serve.rs`
@@ -52,10 +61,12 @@
 //! [`FleetMetrics`]: crate::coordinator::metrics::FleetMetrics
 
 pub mod checkpoint;
+pub mod cluster;
 pub mod fleet;
 pub mod job;
 pub mod scheduler;
 
+pub use cluster::{FleetCluster, GlobalJobId};
 pub use fleet::{JobId, JobServer, JobState, ServeError};
 pub use job::{FeedbackKind, Job, JobSpec, ProblemSpec};
-pub use scheduler::{Deficit, Policy};
+pub use scheduler::{Deficit, Policy, QosClass};

@@ -95,6 +95,127 @@ pub fn quantum(budget_bits: usize, live_jobs: usize) -> u64 {
     (budget_bits as u64 / live_jobs.max(1) as u64).max(1)
 }
 
+/// Weighted QoS class of a tenant: how large its DRR quantum share is
+/// and how much of the fleet budget is held in reserve for its class.
+///
+/// Grammar (CLI / spec builders): `gold` (weight 4), `silver` (weight 2,
+/// the default), `bronze` (weight 1). A job's per-round quantum is
+/// `⌊B · w_j / Σ_live w⌋` ([`weighted_quantum`]) — when every live job
+/// is in one class this is exactly the unweighted `⌊B/live⌋`, so
+/// single-class fleets behave identically to the pre-QoS scheduler.
+///
+/// On top of the weighted quanta, [`QosClass::reserve_num`] carves
+/// guaranteed budget reservations (over [`RESERVE_DENOM`]) per class
+/// with members live: a granted job draws its class reservation first
+/// and only then the common pool, so a heavy gold tenant burning the
+/// common pool can never starve a light bronze tenant out of its
+/// reserved slice (property-tested in `rust/tests/test_serve.rs`).
+///
+/// One carve-out: an *admitted* job whose cheapest rung exceeds its
+/// class ceiling (own reserve + common pool) would be starved forever by
+/// the reservations alone, so the fleet grants such oversized tenants
+/// from the whole remaining round budget instead — the admission
+/// guarantee outranks the per-round reservation, which in those rounds
+/// becomes best-effort.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum QosClass {
+    /// Weight 4, reservation 3/8 of the budget.
+    Gold,
+    /// Weight 2, reservation 2/8 — the default class.
+    #[default]
+    Silver,
+    /// Weight 1, reservation 1/8.
+    Bronze,
+}
+
+/// Denominator of the per-class budget reservations (numerators in
+/// [`QosClass::reserve_num`]; 3+2+1 = 6 of 8, leaving 2/8 always in the
+/// common pool).
+pub const RESERVE_DENOM: u64 = 8;
+
+impl QosClass {
+    /// All classes, in tag order (iteration / reservation bookkeeping).
+    pub const ALL: [QosClass; 3] = [QosClass::Gold, QosClass::Silver, QosClass::Bronze];
+
+    /// DRR quantum weight.
+    pub fn weight(self) -> u64 {
+        match self {
+            QosClass::Gold => 4,
+            QosClass::Silver => 2,
+            QosClass::Bronze => 1,
+        }
+    }
+
+    /// Reservation numerator over [`RESERVE_DENOM`]: the slice of the
+    /// fleet budget held for this class each round while it has live
+    /// members (idle classes' slices return to the common pool).
+    pub fn reserve_num(self) -> u64 {
+        match self {
+            QosClass::Gold => 3,
+            QosClass::Silver => 2,
+            QosClass::Bronze => 1,
+        }
+    }
+
+    /// Canonical CLI / checkpoint name.
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Gold => "gold",
+            QosClass::Silver => "silver",
+            QosClass::Bronze => "bronze",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s {
+            "gold" => Some(QosClass::Gold),
+            "silver" => Some(QosClass::Silver),
+            "bronze" => Some(QosClass::Bronze),
+            _ => None,
+        }
+    }
+
+    /// Stable one-byte wire tag (the checkpoint trailer's encoding).
+    pub fn tag(self) -> u8 {
+        match self {
+            QosClass::Gold => 0,
+            QosClass::Silver => 1,
+            QosClass::Bronze => 2,
+        }
+    }
+
+    /// Inverse of [`QosClass::tag`]; `None` on an unknown byte (corrupt
+    /// snapshot).
+    pub fn from_tag(tag: u8) -> Option<QosClass> {
+        match tag {
+            0 => Some(QosClass::Gold),
+            1 => Some(QosClass::Silver),
+            2 => Some(QosClass::Bronze),
+            _ => None,
+        }
+    }
+
+    /// Index into [`QosClass::ALL`]-shaped bookkeeping arrays.
+    pub fn index(self) -> usize {
+        self.tag() as usize
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The weighted per-round credit quantum: job `j`'s share of the budget
+/// is `⌊B · w_j / Σ_live w⌋`, floored at 1 so starved counters always
+/// grow. Degenerates to the unweighted [`quantum`] when all live jobs
+/// share one class: `⌊B·w/(live·w)⌋ = ⌊B/live⌋`.
+pub fn weighted_quantum(budget_bits: usize, weight: u64, total_weight: u64) -> u64 {
+    (budget_bits as u64 * weight / total_weight.max(1)).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +251,39 @@ mod tests {
         assert_eq!(quantum(1000, 4), 250);
         assert_eq!(quantum(3, 8), 1);
         assert_eq!(quantum(0, 0), 1);
+    }
+
+    #[test]
+    fn qos_names_tags_and_weights_roundtrip() {
+        for c in QosClass::ALL {
+            assert_eq!(QosClass::parse(c.name()), Some(c));
+            assert_eq!(QosClass::from_tag(c.tag()), Some(c));
+            assert_eq!(format!("{c}"), c.name());
+            assert_eq!(QosClass::ALL[c.index()], c);
+        }
+        assert_eq!(QosClass::parse("platinum"), None);
+        assert_eq!(QosClass::from_tag(7), None);
+        assert_eq!(QosClass::default(), QosClass::Silver);
+        // Gold outweighs silver outweighs bronze, in quanta and reserves.
+        assert!(QosClass::Gold.weight() > QosClass::Silver.weight());
+        assert!(QosClass::Silver.weight() > QosClass::Bronze.weight());
+        let reserved: u64 = QosClass::ALL.iter().map(|c| c.reserve_num()).sum();
+        assert!(reserved < RESERVE_DENOM, "a common pool must always remain");
+    }
+
+    #[test]
+    fn weighted_quantum_degenerates_to_equal_share_for_one_class() {
+        // All-silver fleet of 4: exactly the unweighted quantum — the
+        // pre-QoS scheduler's arithmetic, so single-class fleets (and
+        // every existing deficit/starvation bound) are unchanged.
+        let w = QosClass::Silver.weight();
+        assert_eq!(weighted_quantum(1000, w, 4 * w), quantum(1000, 4));
+        assert_eq!(weighted_quantum(3, w, 8 * w), quantum(3, 8));
+        // Mixed fleet: gold gets 4x bronze's share of the same budget.
+        let total = QosClass::Gold.weight() + QosClass::Bronze.weight();
+        let g = weighted_quantum(1000, QosClass::Gold.weight(), total);
+        let b = weighted_quantum(1000, QosClass::Bronze.weight(), total);
+        assert_eq!(g, 4 * b);
+        assert_eq!(weighted_quantum(0, 1, 0), 1, "floored at 1");
     }
 }

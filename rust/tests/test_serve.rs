@@ -14,10 +14,17 @@
 //! * **Fairness** — deficit counters stay within their cap and every
 //!   live job is served within the starvation bound under an adversarial
 //!   tiny-R + greedy high-R mix.
+//! * **Multi-fleet** — tenants partitioned across a [`FleetCluster`]'s
+//!   concurrent threaded fleets (worker fan-out armed) trace exactly as
+//!   solo inline runs, through mid-run fleet-to-fleet migrations
+//!   included; the migrated job's banked deficit and adaptive rung
+//!   survive the move.
+//! * **QoS** — weighted classes bias service toward gold without ever
+//!   starving bronze out of its reserved budget slice.
 
 mod common;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io;
 
 use common::assert_trace_bit_identical;
@@ -32,7 +39,7 @@ use kashinflow::quant::Compressor;
 use kashinflow::serve::checkpoint;
 use kashinflow::serve::job::{DATA_SALT, FRAME_SALT, RUN_SALT};
 use kashinflow::serve::scheduler::Deficit;
-use kashinflow::serve::{Job, JobServer, JobSpec, JobState, Policy};
+use kashinflow::serve::{FleetCluster, Job, JobServer, JobSpec, JobState, Policy, QosClass};
 
 fn spec(name: &str, scheme: &str, r: f32, n: usize, rounds: usize, seed: u64) -> JobSpec {
     JobSpec::new(name, CompressorSpec::parse(scheme).unwrap(), r, n, rounds, seed)
@@ -308,6 +315,165 @@ fn deficit_counters_stay_bounded_and_no_job_starves() {
         let served = srv.metrics().jobs[slot].rounds_served;
         assert!(served >= window / k_bound, "job {slot} served only {served} rounds");
     }
+}
+
+/// The four tenants plus four more — enough population that a 4-fleet
+/// cluster puts work on every fleet. Costs stay within a 128-bit
+/// per-fleet budget so the scarce variants stay admissible.
+fn eight_tenants(n: usize, rounds: usize) -> Vec<JobSpec> {
+    let mut v = four_tenants(n, rounds);
+    v.push(spec("e-dith3w", "ndsc-dith", 1.0, n, rounds, 55).with_workers(3));
+    v.push(spec("f-dith", "ndsc-dith", 0.5, n, rounds, 66));
+    v.push(spec("g-def2w", "ndsc", 2.0, n, rounds, 77).with_workers(2).with_def_feedback());
+    v.push(spec("h-sd", "sd", 1.0, n, rounds, 88));
+    v
+}
+
+#[test]
+fn multi_fleet_interleaved_serve_is_bit_identical_to_solo() {
+    // The tentpole claim: tenants sharded across 4 concurrently-running
+    // threaded fleets (worker fan-out armed cluster-wide) trace exactly
+    // as solo inline runs — under an ample budget (every tenant served
+    // every fleet round) and a scarce one (time-sliced, different
+    // interleaving entirely).
+    let n = 24;
+    let rounds = 30;
+    let solos: Vec<Trace> = eight_tenants(n, rounds).into_iter().map(solo_trace).collect();
+    for budget in [1usize << 24, 128] {
+        let mut cluster = FleetCluster::new(4, budget, Policy::Drr);
+        let gids: Vec<_> =
+            eight_tenants(n, rounds).into_iter().map(|s| cluster.submit(s).unwrap()).collect();
+        let fleets_used: HashSet<usize> =
+            gids.iter().map(|&g| cluster.fleet_of(g).unwrap()).collect();
+        assert!(
+            fleets_used.len() > 1,
+            "placement must spread 8 tenants over several fleets, got {fleets_used:?}"
+        );
+        cluster.run(rounds * 64);
+        for (i, &gid) in gids.iter().enumerate() {
+            assert_eq!(
+                cluster.state(gid),
+                Some(JobState::Finished),
+                "budget {budget}: job {i} must finish"
+            );
+            assert_trace_bit_identical(
+                cluster.job(gid).unwrap().trace(),
+                &solos[i],
+                &format!("4-fleet cluster (budget {budget}) job {i}"),
+            );
+        }
+        let m = cluster.metrics();
+        assert_eq!(m.served_jobs, 8);
+        assert_eq!(m.queued_jobs, 0);
+        assert_eq!(m.rejected_jobs, 0);
+        assert_eq!(m.served_job_rounds, 8 * rounds as u64);
+    }
+}
+
+#[test]
+fn fanout_fleet_matches_inline_fleet_bit_for_bit() {
+    // Same fleet, same job, fan-out armed vs not: the threaded executor
+    // behind `enable_fanout` must not perturb a single bit of the trace
+    // (DEF feedback included — the memory contract at work).
+    let n = 24;
+    let rounds = 20;
+    let mk = || spec("fan", "ndsc", 2.0, n, rounds, 91).with_workers(4).with_def_feedback();
+    let inline_trace = solo_trace(mk()); // default fleet: no fan-out
+    let mut srv = JobServer::new(1 << 24, Policy::Drr);
+    srv.enable_fanout(1);
+    let id = srv.submit(mk()).unwrap();
+    srv.run(rounds + 4);
+    assert_eq!(srv.state(id), Some(JobState::Finished));
+    assert_trace_bit_identical(srv.job(id).unwrap().trace(), &inline_trace, "fan-out vs inline");
+}
+
+#[test]
+fn mid_run_migration_preserves_traces_deficit_and_rung() {
+    // Live migration: drain grant → snapshot → restore in the next fleet
+    // over, for every tenant at once, mid-run under a scarce budget (so
+    // deficits are mid-flight). Traces must equal uninterrupted solo
+    // runs, and the scheduler state must survive the move.
+    let n = 24;
+    let rounds = 30;
+    let tenants = four_tenants(n, rounds);
+    let solos: Vec<Trace> = tenants.iter().cloned().map(solo_trace).collect();
+    let mut cluster = FleetCluster::new(4, 128, Policy::Drr);
+    let gids: Vec<_> = tenants.into_iter().map(|s| cluster.submit(s).unwrap()).collect();
+    for _ in 0..7 {
+        cluster.run_round();
+    }
+    for &gid in &gids {
+        let from = cluster.fleet_of(gid).unwrap();
+        let to = (from + 1) % cluster.fleet_count();
+        let deficit = cluster.deficit_bits(gid).unwrap();
+        let done = cluster.job(gid).unwrap().rounds_done();
+        cluster.migrate(gid, to).unwrap();
+        assert_eq!(cluster.fleet_of(gid), Some(to));
+        assert_eq!(cluster.deficit_bits(gid), Some(deficit), "banked deficit survives the move");
+        assert_eq!(cluster.job(gid).unwrap().rounds_done(), done, "no rounds lost in transit");
+    }
+    assert_eq!(cluster.metrics().migrated_jobs, gids.len() as u64);
+    cluster.run(rounds * 64);
+    for (i, &gid) in gids.iter().enumerate() {
+        assert_eq!(cluster.state(gid), Some(JobState::Finished), "migrated job {i} must finish");
+        assert_trace_bit_identical(
+            cluster.job(gid).unwrap().trace(),
+            &solos[i],
+            &format!("mid-run migration, job {i}"),
+        );
+    }
+}
+
+#[test]
+fn qos_classes_bias_service_without_starving_bronze() {
+    // Two gold tenants and one bronze, identical 64-bit-cost jobs on a
+    // 128-bit budget: weights 4/4/1 give gold ~4x bronze's accrual rate,
+    // while bronze's reserved slice + rotation guarantee it still
+    // transmits regularly. Property-check both directions over a window.
+    let n = 64;
+    let rounds = 400;
+    let mut srv = JobServer::new(128, Policy::Drr);
+    let mk = |name: &str, seed: u64, q: QosClass| {
+        spec(name, "ndsc-dith", 1.0, n, rounds, seed).with_qos(q)
+    };
+    let ids = [
+        srv.submit(mk("g1", 1, QosClass::Gold)).unwrap(),
+        srv.submit(mk("g2", 2, QosClass::Gold)).unwrap(),
+        srv.submit(mk("bz", 3, QosClass::Bronze)).unwrap(),
+    ];
+    let window = 120u64;
+    let mut bronze_gap_max = 0u64;
+    let mut bronze_last = (0u64, 0u64); // (rounds_served, fleet round)
+    for round in 1..=window {
+        srv.run_round();
+        // Weighted deficit caps: each job's counter stays within the DRR
+        // bound at its own weighted quantum.
+        let total_w = 2 * QosClass::Gold.weight() + QosClass::Bronze.weight();
+        for (slot, &id) in ids.iter().enumerate() {
+            let q = srv.job(id).unwrap().spec().qos;
+            let quantum = kashinflow::serve::scheduler::weighted_quantum(128, q.weight(), total_w);
+            let cap = Deficit::cap(quantum, srv.job(id).unwrap().requested_cost_bits());
+            assert!(
+                srv.deficit_bits(id).unwrap() <= cap,
+                "slot {slot} deficit beyond weighted cap at round {round}"
+            );
+        }
+        let bz_served = srv.metrics().jobs[2].rounds_served;
+        if bz_served > bronze_last.0 {
+            bronze_last = (bz_served, round);
+        } else {
+            bronze_gap_max = bronze_gap_max.max(round - bronze_last.1);
+        }
+    }
+    let gold = srv.metrics().jobs[0].rounds_served + srv.metrics().jobs[1].rounds_served;
+    let bronze = srv.metrics().jobs[2].rounds_served;
+    // No starvation: bronze keeps transmitting at its reserved rate...
+    assert!(bronze >= window / 8, "bronze served only {bronze} of {window} rounds");
+    assert!(bronze_gap_max <= 24, "bronze starved for {bronze_gap_max} consecutive rounds");
+    // ...while gold's weight genuinely buys it more service.
+    assert!(gold >= 3 * bronze, "gold ({gold}) should far outpace bronze ({bronze})");
+    // Sanity: the budget can't have served more than 2 cost-64 jobs/round.
+    assert!(gold + bronze <= 2 * window);
 }
 
 #[test]
