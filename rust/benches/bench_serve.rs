@@ -1,18 +1,21 @@
 //! Serving-layer benchmarks: fleet-round throughput with 8 concurrent
 //! heterogeneous jobs under both scheduler policies, the checkpoint
-//! save/restore round-trip, and a multi-fleet cluster drill (1024
+//! save/restore round-trip, a multi-fleet cluster drill (1024
 //! tenants sharded over 4 fleets, with mid-run migrations and the
-//! served/queued/rejected/migrated breakdown). Saves `BENCH_serve.json`
-//! with the per-case stats **and** the measured aggregate
-//! job-rounds/sec (the serving layer's headline throughput number), so
-//! regressions diff mechanically across PRs.
+//! served/queued/rejected/migrated breakdown), and the skewed-mix
+//! straggler case: the same 1-big + 1023-small tenant population timed
+//! under the lockstep per-round barrier executor and the work-stealing
+//! epoch executor, with the same-run speedup ratio in the JSON. Saves
+//! `BENCH_serve.json` with the per-case stats **and** the measured
+//! aggregate job-rounds/sec (the serving layer's headline throughput
+//! number), so regressions diff mechanically across PRs.
 
 use std::time::Instant;
 
 use kashinflow::exp::serve::job_mix;
 use kashinflow::quant::budget_bits;
 use kashinflow::quant::registry::CompressorSpec;
-use kashinflow::serve::{checkpoint, FleetCluster, Job, JobServer, JobSpec, Policy};
+use kashinflow::serve::{checkpoint, FleetCluster, Job, JobServer, JobSpec, Policy, QosClass};
 use kashinflow::testkit::bench::{black_box, Bencher};
 
 const JOBS: usize = 8;
@@ -188,6 +191,105 @@ fn main() {
                 ", \"fleets\": {FLEETS}, \"served\": {}, \"queued_mid\": {queued_mid}, \
                  \"rejected\": {}, \"migrated\": {}",
                 m.served_jobs, m.rejected_jobs, m.migrated_jobs
+            ),
+        });
+    }
+
+    // Skewed-mix straggler case (the work-stealing acceptance number):
+    // one n = 2^20 heavyweight tenant — a single engine round costs the
+    // whole per-fleet bit budget and milliseconds of FWHT — plus 1023
+    // n = 16 lightweights, a quarter of them active and the rest parked
+    // as paused backlog, over 4 fleets. The lockstep executor pays a
+    // scoped spawn-and-join barrier on EVERY cluster round and stalls
+    // every fleet whenever the straggler transmits; the epoch executor
+    // arbitrates EPOCH_LEN rounds per barrier and lets the persistent
+    // pool absorb the straggler by stealing the other grants. Grants are
+    // bit-identical between the two executors (test_serve.rs proves it),
+    // so the same-run ratio isolates pure executor overhead. Rows report
+    // *cluster* rounds/sec — the per-round barrier is the quantity under
+    // test. Protocol details: EXPERIMENTS.md § Serving.
+    {
+        const EPOCH_LEN: usize = 64;
+        let big_n = 1usize << 20;
+        // Bronze weight against gold/silver lightweights: the straggler
+        // banks deficit for hundreds of rounds between transmissions, so
+        // its (identical-in-both-executors) compute cost stays a small
+        // additive term and the barrier overhead dominates the contrast.
+        let budget = budget_bits(big_n, 1.0) + 64;
+        let build = || {
+            let mut cluster = FleetCluster::new(FLEETS, budget, Policy::Drr);
+            let big = JobSpec::new(
+                "straggler-ndsc-dith",
+                CompressorSpec::parse("ndsc-dith").expect("canonical"),
+                1.0,
+                big_n,
+                JOB_ROUNDS,
+                7,
+            )
+            .with_qos(QosClass::Bronze);
+            cluster.submit(big).expect("the straggler fits its own cost budget");
+            let gids: Vec<_> = job_mix(TENANTS - 1, 16, JOB_ROUNDS, 7)
+                .into_iter()
+                .map(|s| cluster.submit(s).expect("lightweights fit under the big budget"))
+                .collect();
+            // Park 3 of every 4 lightweights: live queue pressure plus a
+            // paused backlog, without the active slice's step work
+            // drowning out the per-round executor overhead.
+            for (i, &gid) in gids.iter().enumerate() {
+                if i % 4 != 0 {
+                    cluster.pause(gid).expect("freshly admitted jobs pause");
+                }
+            }
+            cluster
+        };
+        let window = if std::env::var_os("BENCH_SMOKE").is_some() { 0.2 } else { 1.0 };
+
+        let mut lockstep = build();
+        let t0 = Instant::now();
+        let mut lock_rounds = 0u64;
+        while t0.elapsed().as_secs_f64() < window {
+            lockstep.run_round();
+            lock_rounds += 1;
+        }
+        let lock_rps = lock_rounds as f64 / t0.elapsed().as_secs_f64();
+        drop(lockstep); // the straggler's 40 MB problem shard, promptly
+
+        let mut steal = build();
+        let t0 = Instant::now();
+        let mut steal_rounds = 0u64;
+        while t0.elapsed().as_secs_f64() < window {
+            steal.run_epoch(EPOCH_LEN);
+            steal_rounds += EPOCH_LEN as u64;
+        }
+        let steal_rps = steal_rounds as f64 / t0.elapsed().as_secs_f64();
+
+        let ratio = steal_rps / lock_rps.max(1e-9);
+        let stolen = steal.metrics().stolen_grants;
+        println!(
+            "serve/skewed-{FLEETS}fleets-{TENANTS}tenants         lockstep {lock_rps:>9.0} \
+             vs steal {steal_rps:>9.0} cluster-rounds/s (ratio {ratio:.2}x, {stolen} stolen grants)"
+        );
+        let shape = format!(
+            ", \"fleets\": {FLEETS}, \"big_n\": {big_n}, \"active_tenants\": {}",
+            1 + (TENANTS - 1).div_ceil(4)
+        );
+        rows.push(ThroughputRow {
+            case: format!("serve/skewed-{FLEETS}fleets-{TENANTS}tenants-lockstep"),
+            policy: Policy::Drr,
+            jobs: TENANTS,
+            rounds_per_sec: lock_rps,
+            median_ns: 0,
+            extra: format!("{shape}, \"executor\": \"lockstep\""),
+        });
+        rows.push(ThroughputRow {
+            case: format!("serve/skewed-{FLEETS}fleets-{TENANTS}tenants-steal"),
+            policy: Policy::Drr,
+            jobs: TENANTS,
+            rounds_per_sec: steal_rps,
+            median_ns: 0,
+            extra: format!(
+                "{shape}, \"executor\": \"steal\", \"epoch_len\": {EPOCH_LEN}, \
+                 \"stolen_grants\": {stolen}, \"ratio_vs_lockstep\": {ratio}"
             ),
         });
     }

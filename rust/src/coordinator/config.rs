@@ -75,6 +75,23 @@ pub fn fleet_fanout_threads(workers: usize, n: usize, active_fleets: usize) -> O
     Some(workers.min(allowance))
 }
 
+/// Autoscaler high watermark: when the cluster's queued (running +
+/// paused) job count reaches this many jobs **per active fleet**, the
+/// autoscaler activates another fleet (up to the cluster's member
+/// count) and rebalances onto it over the live-migration path. Chosen
+/// well above the DRR round-robin's comfortable per-fleet multiplexing
+/// level so transient submission bursts don't thrash the fleet set.
+pub const AUTOSCALE_HIGH_QUEUED_PER_FLEET: usize = 8;
+
+/// Autoscaler low watermark: when queued jobs drop to this many **per
+/// active fleet** (or fewer), the autoscaler drains the last active
+/// fleet onto the survivors and deactivates it (floor: one active
+/// fleet). Strictly below [`AUTOSCALE_HIGH_QUEUED_PER_FLEET`] with
+/// hysteresis room: after a shrink, queued-per-fleet rises by roughly
+/// `active/(active-1)`, which must not immediately re-trip the high
+/// watermark.
+pub const AUTOSCALE_LOW_QUEUED_PER_FLEET: usize = 2;
+
 /// Compression scheme selector (the CLI surface of [`crate::quant`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SchemeKind {
@@ -679,6 +696,24 @@ mod tests {
         assert_eq!(fleet_fanout_threads(8, 1024, FLEET_MAX_WORKER_THREADS / 2 + 1), None);
         // active_fleets = 0 is treated as 1 defensively, not a panic.
         assert_eq!(fleet_fanout_threads(4, 1024, 0), Some(4));
+    }
+
+    #[test]
+    fn autoscale_watermarks_leave_hysteresis_room() {
+        assert!(AUTOSCALE_LOW_QUEUED_PER_FLEET < AUTOSCALE_HIGH_QUEUED_PER_FLEET);
+        assert!(AUTOSCALE_LOW_QUEUED_PER_FLEET >= 1);
+        // A shrink at exactly the low watermark concentrates
+        // `LOW · active` queued jobs onto `active − 1` fleets; that new
+        // per-fleet load must stay strictly under the high watermark or
+        // the very next autoscale pass would grow right back (thrash).
+        // Worst case is the smallest shrinkable cluster, active = 2.
+        for active in 2..=64usize {
+            let queued = AUTOSCALE_LOW_QUEUED_PER_FLEET * active;
+            assert!(
+                queued < AUTOSCALE_HIGH_QUEUED_PER_FLEET * (active - 1),
+                "shrink at active={active} would immediately re-grow"
+            );
+        }
     }
 
     #[test]

@@ -192,6 +192,14 @@ pub struct ClusterMetrics {
     pub rejected_jobs: u64,
     /// Fleet-to-fleet migrations performed.
     pub migrated_jobs: u64,
+    /// Grants a work-stealing pool worker executed for a fleet other
+    /// than its own (0 under the lockstep executor).
+    pub stolen_grants: u64,
+    /// Fleets currently taking placements (≤ `fleets.len()`; the
+    /// autoscaler moves this between epochs).
+    pub active_fleets: u64,
+    /// Times the autoscaler resized the active fleet set.
+    pub autoscale_events: u64,
     /// Engine rounds granted across the whole cluster.
     pub served_job_rounds: u64,
     /// Measured payload bits spent across the whole cluster.
@@ -230,6 +238,9 @@ mod tests {
             queued_jobs: 1,
             rejected_jobs: 2,
             migrated_jobs: 1,
+            stolen_grants: 5,
+            active_fleets: 2,
+            autoscale_events: 1,
             served_job_rounds: 9,
             spent_payload_bits: 400,
             fleets: vec![FleetMetrics::default(), FleetMetrics::default()],

@@ -14,8 +14,10 @@
 //! A multi-fleet cluster pass then shards a ≥1000-tenant population over
 //! `fleets=` concurrent fleets (hash placement + load-aware rebalance,
 //! threaded worker fan-out, a burst of mid-run migrations and a few
-//! deliberately oversized tenants) and reports the
-//! served/queued/rejected/migrated breakdown.
+//! deliberately oversized tenants), drains it on the work-stealing
+//! epoch executor with the autoscaler in the loop, and reports the
+//! served/queued/rejected/migrated breakdown plus the stolen-grant and
+//! autoscale counters.
 //!
 //! ```text
 //! repro serve [--quick] [jobs=8] [n=64] [rounds=150] [seed=7] [fleets=4]
@@ -145,6 +147,9 @@ struct ClusterCell {
     queued_mid: u64,
     rejected: u64,
     migrated: u64,
+    stolen_grants: u64,
+    active_fleets: u64,
+    autoscale_events: u64,
     cluster_rounds: u64,
     served_job_rounds: u64,
     rounds_per_sec: f64,
@@ -196,7 +201,12 @@ fn run_cluster_cell(
             .migrate(gid, (from + 1) % fleets)
             .expect("mid-run migration of a live job");
     }
-    cluster.run(rounds * tenants.max(1) * 8);
+    // Drain on the work-stealing epoch executor with the autoscaler
+    // between epochs (grants stay bit-identical to the lockstep round
+    // above — test_serve.rs proves the executor equivalence).
+    cluster
+        .run_autoscaled(rounds * tenants.max(1) * 8, 4)
+        .expect("autoscaled drain rebalances over the migration path");
     let secs = t0.elapsed().as_secs_f64().max(1e-9);
     let m = cluster.metrics();
     let offered: u64 = m.fleets.iter().map(|f| budget as u64 * f.fleet_rounds).sum();
@@ -209,6 +219,9 @@ fn run_cluster_cell(
         queued_mid,
         rejected: m.rejected_jobs,
         migrated: m.migrated_jobs,
+        stolen_grants: m.stolen_grants,
+        active_fleets: m.active_fleets,
+        autoscale_events: m.autoscale_events,
         cluster_rounds: m.cluster_rounds,
         served_job_rounds: m.served_job_rounds,
         rounds_per_sec: m.served_job_rounds as f64 / secs,
@@ -252,6 +265,7 @@ fn cluster_row(c: &ClusterCell) -> String {
         "  {{\"source\": \"repro-serve\", \"kind\": \"cluster\", \"policy\": \"{}\", \
          \"fleets\": {}, \"tenants\": {}, \"budget_bits_per_fleet\": {}, \
          \"served\": {}, \"queued_mid\": {}, \"rejected\": {}, \"migrated\": {}, \
+         \"stolen_grants\": {}, \"active_fleets\": {}, \"autoscale_events\": {}, \
          \"cluster_rounds\": {}, \"served_job_rounds\": {}, \
          \"rounds_per_sec\": {}, \"utilization\": {}}}",
         c.policy,
@@ -262,6 +276,9 @@ fn cluster_row(c: &ClusterCell) -> String {
         c.queued_mid,
         c.rejected,
         c.migrated,
+        c.stolen_grants,
+        c.active_fleets,
+        c.autoscale_events,
         c.cluster_rounds,
         c.served_job_rounds,
         c.rounds_per_sec,
@@ -405,14 +422,14 @@ pub fn run(quick: bool, args: &[String]) {
     let cluster_rounds_per_job = if quick { 2 } else { 3 };
     println!("--- multi-fleet cluster ({tenants} tenants over {fleets} fleets, n=16) ---");
     println!(
-        "{:<10} {:>7} {:>12} {:>8} {:>10} {:>9} {:>9} {:>14} {:>12} {:>8}",
-        "policy", "tenants", "budget/fleet", "served", "queued@mid", "rejected", "migrated", "job-rounds", "rounds/s", "util"
+        "{:<10} {:>7} {:>12} {:>8} {:>10} {:>9} {:>9} {:>7} {:>7} {:>14} {:>12} {:>8}",
+        "policy", "tenants", "budget/fleet", "served", "queued@mid", "rejected", "migrated", "stolen", "scales", "job-rounds", "rounds/s", "util"
     );
     let mut clusters = Vec::new();
     for &policy in &policies {
         let cell = run_cluster_cell(fleets, tenants, 16, cluster_rounds_per_job, seed, policy, 0.5);
         println!(
-            "{:<10} {:>7} {:>12} {:>8} {:>10} {:>9} {:>9} {:>14} {:>12.0} {:>8.3}",
+            "{:<10} {:>7} {:>12} {:>8} {:>10} {:>9} {:>9} {:>7} {:>7} {:>14} {:>12.0} {:>8.3}",
             cell.policy.to_string(),
             cell.tenants,
             cell.budget_bits_per_fleet,
@@ -420,6 +437,8 @@ pub fn run(quick: bool, args: &[String]) {
             cell.queued_mid,
             cell.rejected,
             cell.migrated,
+            cell.stolen_grants,
+            cell.autoscale_events,
             cell.served_job_rounds,
             cell.rounds_per_sec,
             cell.utilization,
@@ -480,7 +499,9 @@ mod tests {
     fn cluster_cell_reports_every_breakdown() {
         // A scaled-down cluster pass (40 tenants over 4 fleets) must
         // still exercise every breakdown: backlog at mid-horizon,
-        // oversized-tenant rejections, and at least one live migration.
+        // oversized-tenant rejections, and at least one live migration —
+        // now drained on the work-stealing epoch executor with the
+        // autoscaler in the loop, which must not change any outcome.
         let cell = run_cluster_cell(4, 40, 16, 2, 3, Policy::Drr, 0.5);
         assert_eq!(cell.fleets, 4);
         assert_eq!(cell.served, 40, "every feasible tenant must finish");
@@ -488,9 +509,16 @@ mod tests {
         assert_eq!(cell.rejected, 4, "the oversized tenants must all be rejected");
         assert!(cell.migrated >= 1, "the mid-run migration slice must move jobs");
         assert!(cell.served_job_rounds == 80);
+        assert!(
+            (1..=4).contains(&cell.active_fleets),
+            "active fleet count stays within the cluster, got {}",
+            cell.active_fleets
+        );
         let json = cells_to_json(&[], &[cell]);
         assert!(json.contains("\"kind\": \"cluster\""), "got: {json}");
         assert!(json.contains("\"queued_mid\": 40"), "got: {json}");
+        assert!(json.contains("\"stolen_grants\""), "got: {json}");
+        assert!(json.contains("\"autoscale_events\""), "got: {json}");
         assert!(json.trim_end().ends_with(']'));
     }
 }

@@ -683,6 +683,18 @@ impl RunState {
     /// what the worker computes. `threads ≤ 1` still goes through the
     /// slot machinery (one chunk, current thread) — same code path, no
     /// spawns.
+    ///
+    /// **Reentrancy under the serve layer's epoch pool** (desk-checked
+    /// for PR 8): this method may be called concurrently from several
+    /// cluster pool workers, each on a *different* job's state. That is
+    /// sound because every mutable touch is confined to `self`, `ctx`,
+    /// and this job's pool-checked-out slots (`ensure_mt_slots` goes
+    /// through the `Mutex`-protected [`ChannelPools`], which is shared
+    /// and thread-safe); the scoped threads spawned here nest under the
+    /// never-nest cap because the fleet fan-out gate
+    /// ([`crate::coordinator::config::fleet_fanout_threads`]) divides
+    /// the budget by the cluster's **maximum** fleet count — exactly the
+    /// number of pool workers that can run grants at once.
     pub fn step_mt(
         &mut self,
         ctx: &mut MtRoundCtx<'_>,

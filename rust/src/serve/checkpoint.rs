@@ -15,6 +15,21 @@
 //! the migration path ([`crate::serve::cluster`]) depends on it.
 //! Version-1 snapshots (no trailer) still load, with scheduler defaults.
 //!
+//! **Delta snapshots (version 3)** make periodic autosave O(changed)
+//! instead of O(job): [`save_delta`] records only the dynamic state that
+//! moves round to round — iterate, RNGs, feedback memory, the trace
+//! records appended *since a pinned base snapshot* — plus the base's
+//! length and FNV-1a-64 fingerprint, and covers the **entire record**
+//! with a trailing FNV-1a-32 checksum (stronger than v2, whose body
+//! relies on cross-checks: any single byte flip anywhere in a delta
+//! surfaces as [`io::ErrorKind::InvalidData`]). [`restore_delta`]
+//! verifies the checksum, verifies the provided base against the pinned
+//! fingerprint, restores the base through the full v1/v2 validation
+//! path, then overlays the delta. [`compact`] folds a base plus its
+//! delta chain back into one plain v2 snapshot for retirement of long
+//! chains. A v3 record is *not* loadable by [`restore`] (it has no spec
+//! section); the version word guards the two families apart.
+//!
 //! Static artifacts (dataset, frames/codecs, workspace) are **not**
 //! serialized: [`restore`] rebuilds them deterministically from the spec
 //! seed via [`crate::serve::job::Job::build`], then overlays the dynamic
@@ -48,6 +63,10 @@ pub const CHECKPOINT_MAGIC: &[u8; 8] = b"KFCKPT01";
 pub const CHECKPOINT_VERSION: u32 = 2;
 /// Oldest format version [`restore`] still reads.
 pub const CHECKPOINT_MIN_VERSION: u32 = 1;
+/// Format version of delta records ([`save_delta`]/[`restore_delta`]).
+/// Deliberately *outside* [`restore`]'s accepted range: a delta is not a
+/// standalone snapshot and cannot restore without its base.
+pub const CHECKPOINT_DELTA_VERSION: u32 = 3;
 
 /// Sanity caps: generous for every real configuration (transformer-scale
 /// `n`, thousands of workers, millions of rounds), low enough that a
@@ -419,6 +438,11 @@ pub fn restore_with_sched(bytes: &[u8]) -> io::Result<(Job, SchedTrailer)> {
         return Err(invalid("not a KFCKPT01 job checkpoint"));
     }
     let version = r_u32(&mut r)?;
+    if version == CHECKPOINT_DELTA_VERSION {
+        return Err(invalid(
+            "this is a delta snapshot; it restores only against its base (restore_delta)",
+        ));
+    }
     if !(CHECKPOINT_MIN_VERSION..=CHECKPOINT_VERSION).contains(&version) {
         return Err(invalid(format!(
             "unsupported checkpoint version {version} \
@@ -537,6 +561,340 @@ pub fn restore_with_sched(bytes: &[u8]) -> io::Result<(Job, SchedTrailer)> {
     job.rng = rng;
     job.spec.qos = sched.qos;
     Ok((job, sched))
+}
+
+// ---------------------------------------------------------------------------
+// Delta snapshots (version 3).
+// ---------------------------------------------------------------------------
+
+/// 64-bit FNV-1a — the base snapshot's fingerprint inside a delta
+/// record (same constants as the cluster's placement hash).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Advance the cursor `n` bytes without materializing them.
+fn skip(r: &mut &[u8], n: usize, what: &str) -> io::Result<()> {
+    if r.len() < n {
+        return Err(invalid(format!("truncated base snapshot ({what})")));
+    }
+    *r = &r[n..];
+    Ok(())
+}
+
+fn skip_str(r: &mut &[u8], what: &str) -> io::Result<()> {
+    let len = checked_len_capped(r_u64(r)?, what, MAX_STR as u64)?;
+    skip(r, len, what)
+}
+
+fn skip_f32s(r: &mut &[u8], what: &str) -> io::Result<()> {
+    let len = checked_len_capped(r_u64(r)?, what, MAX_VEC)?;
+    skip(r, len * 4, what)
+}
+
+/// Serialized [`w_rng`] length: 4 state words + spare flag + spare slot.
+const RNG_LEN: usize = 4 * 8 + 1 + 8;
+
+/// What [`save_delta_with_sched`] needs to know about a base snapshot:
+/// enough to pin it and to tell where its trace ends. A length-checked
+/// byte walk, not a restore — pinning a base must not cost a job
+/// rebuild. The base is *fully* validated on the restore side.
+struct BaseSummary {
+    name: String,
+    n: usize,
+    workers: usize,
+    rounds: usize,
+    seed: u64,
+    t: usize,
+    records: usize,
+}
+
+fn base_summary(base: &[u8]) -> io::Result<BaseSummary> {
+    let mut r: &[u8] = base;
+    let mut magic = [0u8; 8];
+    ck(r.read_exact(&mut magic))?;
+    if &magic != CHECKPOINT_MAGIC {
+        return Err(invalid("delta base is not a KFCKPT01 job checkpoint"));
+    }
+    let version = r_u32(&mut r)?;
+    if !(CHECKPOINT_MIN_VERSION..=CHECKPOINT_VERSION).contains(&version) {
+        return Err(invalid(format!(
+            "delta base must be a plain v{CHECKPOINT_MIN_VERSION}..=v{CHECKPOINT_VERSION} \
+             snapshot, got version {version} (deltas cannot chain on deltas)"
+        )));
+    }
+    // --- spec ---
+    let name = r_str(&mut r, "job name")?;
+    skip_str(&mut r, "scheme name")?;
+    skip(&mut r, 4, "rate")?;
+    let n = checked_len_capped(r_u64(&mut r)?, "dimension", MAX_DIM as u64)?;
+    let workers = checked_len_capped(r_u64(&mut r)?, "worker count", MAX_WORKERS as u64)?;
+    skip(&mut r, 8 + 1, "problem")?;
+    let rounds = checked_len_capped(r_u64(&mut r)?, "round count", MAX_ROUNDS as u64)?;
+    skip(&mut r, 1 + 4 + 4, "schedule")?;
+    skip(&mut r, 1 + 8 + 4, "feedback/batch/drop")?;
+    skip(&mut r, 1 + 4 + 4, "domain")?;
+    skip(&mut r, 1, "output mode")?;
+    let seed = r_u64(&mut r)?;
+    // --- dynamic state ---
+    let t = checked_len_capped(r_u64(&mut r)?, "round index", MAX_ROUNDS as u64)?;
+    skip_f32s(&mut r, "iterate")?;
+    skip_f32s(&mut r, "Polyak average")?;
+    skip(&mut r, RNG_LEN, "job RNG")?;
+    let n_wr = checked_len_capped(r_u64(&mut r)?, "worker RNG count", MAX_WORKERS as u64)?;
+    skip(&mut r, n_wr * RNG_LEN, "worker RNGs")?;
+    skip_f32s(&mut r, "feedback state")?;
+    let records = checked_len_capped(r_u64(&mut r)?, "trace record count", MAX_ROUNDS as u64 + 1)?;
+    Ok(BaseSummary { name, n, workers, rounds, seed, t, records })
+}
+
+/// `true` if `bytes` opens like a delta record (v3); the full
+/// magic/checksum validation happens in [`restore_delta`].
+pub fn is_delta(bytes: &[u8]) -> bool {
+    bytes.len() >= 12
+        && &bytes[..8] == CHECKPOINT_MAGIC
+        && u32::from_le_bytes(bytes[8..12].try_into().unwrap()) == CHECKPOINT_DELTA_VERSION
+}
+
+/// [`save_delta_with_sched`] with a zeroed scheduler trailer — the
+/// standalone-job form, mirroring [`save`].
+pub fn save_delta(job: &Job, base: &[u8]) -> io::Result<Vec<u8>> {
+    save_delta_with_sched(
+        job,
+        &SchedTrailer { qos: job.spec().qos, ..SchedTrailer::default() },
+        base,
+    )
+}
+
+/// Serialize a **delta record** of `job` against a pinned `base`
+/// snapshot (v1/v2 bytes previously produced by [`save_with_sched`] for
+/// the *same* job at an earlier round). The record carries only the
+/// state that moves round to round — no spec, no pre-base trace — so
+/// periodic autosave costs O(changed): for a long-horizon job the trace
+/// tail is the only part that grows.
+///
+/// Layout: magic, version 3, base length + FNV-1a-64 fingerprint, base
+/// record count, then round index, iterate, Polyak average, job RNG,
+/// worker RNGs, feedback memory, appended trace records, traffic
+/// totals, the scheduler trailer — and a final FNV-1a-32 checksum over
+/// **all preceding bytes** of the record.
+pub fn save_delta_with_sched(job: &Job, sched: &SchedTrailer, base: &[u8]) -> io::Result<Vec<u8>> {
+    if job.run.is_finalized() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "cannot checkpoint a finalized job; snapshots resume running/paused jobs",
+        ));
+    }
+    let summary = base_summary(base)?;
+    let spec = job.spec();
+    if summary.name != spec.name
+        || summary.n != spec.n
+        || summary.workers != spec.workers
+        || summary.rounds != spec.rounds
+        || summary.seed != spec.seed
+    {
+        return Err(invalid("delta base does not belong to this job"));
+    }
+    let trace = job.trace();
+    if summary.t > job.run.round() || summary.records > trace.records.len() {
+        return Err(invalid(format!(
+            "delta base is ahead of the job (base round {} / job round {})",
+            summary.t,
+            job.run.round()
+        )));
+    }
+    let mut out = Vec::with_capacity(1024);
+    out.extend_from_slice(CHECKPOINT_MAGIC);
+    w_u32(&mut out, CHECKPOINT_DELTA_VERSION);
+    w_u64(&mut out, base.len() as u64);
+    w_u64(&mut out, fnv1a64(base));
+    w_u64(&mut out, summary.records as u64);
+    // --- dynamic state (same field order as the full format) ---
+    w_u64(&mut out, job.run.round() as u64);
+    w_f32s(&mut out, &job.run.x);
+    w_f32s(&mut out, &job.run.avg);
+    w_rng(&mut out, &job.rng);
+    w_u64(&mut out, job.run.worker_rngs.len() as u64);
+    for wr in &job.run.worker_rngs {
+        w_rng(&mut out, wr);
+    }
+    let mut fb = Vec::new();
+    job.save_feedback(&mut fb);
+    w_f32s(&mut out, &fb);
+    let tail = &trace.records[summary.records..];
+    w_u64(&mut out, tail.len() as u64);
+    for rec in tail {
+        w_f32(&mut out, rec.value);
+        w_f32(&mut out, rec.dist_to_opt);
+        w_u64(&mut out, rec.payload_bits as u64);
+        w_u64(&mut out, rec.participants as u64);
+    }
+    w_u64(&mut out, trace.total_payload_bits as u64);
+    w_u64(&mut out, trace.total_side_bits as u64);
+    w_sched_trailer(&mut out, sched);
+    let sum = fnv1a(&out);
+    w_u32(&mut out, sum);
+    Ok(out)
+}
+
+/// [`restore_delta_with_sched`] discarding the scheduler trailer.
+pub fn restore_delta(delta: &[u8], base: &[u8]) -> io::Result<Job> {
+    restore_delta_with_sched(delta, base).map(|(job, _)| job)
+}
+
+/// Rebuild a job from a pinned `base` snapshot plus one `delta` record.
+/// The whole-record checksum is verified **first**, so any truncation or
+/// byte flip anywhere in the delta is [`io::ErrorKind::InvalidData`]
+/// before a single field is trusted; the base must match the delta's
+/// pinned length + fingerprint byte for byte and then passes the full
+/// v1/v2 validation path; the delta must not be behind its base (a
+/// stale delta never silently rolls a job back).
+pub fn restore_delta_with_sched(delta: &[u8], base: &[u8]) -> io::Result<(Job, SchedTrailer)> {
+    if delta.len() < 16 {
+        return Err(invalid("truncated delta snapshot"));
+    }
+    let (body, sum_bytes) = delta.split_at(delta.len() - 4);
+    let want = u32::from_le_bytes(sum_bytes.try_into().expect("4-byte split"));
+    if fnv1a(body) != want {
+        return Err(invalid("delta snapshot checksum mismatch"));
+    }
+    let mut r: &[u8] = body;
+    let mut magic = [0u8; 8];
+    ck(r.read_exact(&mut magic))?;
+    if &magic != CHECKPOINT_MAGIC {
+        return Err(invalid("not a KFCKPT01 delta snapshot"));
+    }
+    let version = r_u32(&mut r)?;
+    if version != CHECKPOINT_DELTA_VERSION {
+        return Err(invalid(format!(
+            "not a delta snapshot (version {version}, expected {CHECKPOINT_DELTA_VERSION})"
+        )));
+    }
+    let base_len = r_u64(&mut r)?;
+    let base_hash = r_u64(&mut r)?;
+    if base.len() as u64 != base_len || fnv1a64(base) != base_hash {
+        return Err(invalid("delta's pinned base does not match the provided base snapshot"));
+    }
+    // The fingerprint matched: restore the base through the full v1/v2
+    // validation path, then overlay the delta on top.
+    let (mut job, _base_sched) = restore_with_sched(base)?;
+    let base_records =
+        checked_len_capped(r_u64(&mut r)?, "base record count", MAX_ROUNDS as u64 + 1)?;
+    if job.trace().records.len() != base_records {
+        return Err(invalid(format!(
+            "delta pins {base_records} base trace records, base has {}",
+            job.trace().records.len()
+        )));
+    }
+    let (n, workers, rounds, output) =
+        (job.spec().n, job.spec().workers, job.spec().rounds, job.spec().output);
+    let t = checked_len_capped(r_u64(&mut r)?, "round index", MAX_ROUNDS as u64)?;
+    if t > rounds {
+        return Err(invalid(format!("round index {t} exceeds configured rounds {rounds}")));
+    }
+    if t < job.run.round() {
+        return Err(invalid(format!(
+            "stale delta: round {t} is behind its own base (round {})",
+            job.run.round()
+        )));
+    }
+    let x = r_f32s(&mut r, "iterate")?;
+    if x.len() != n {
+        return Err(invalid(format!("iterate length {} != dimension {n}", x.len())));
+    }
+    let avg = r_f32s(&mut r, "Polyak average")?;
+    let want_avg = if output == OutputMode::PolyakAverage { n } else { 0 };
+    if avg.len() != want_avg {
+        return Err(invalid(format!(
+            "Polyak average length {} != expected {want_avg}",
+            avg.len()
+        )));
+    }
+    let rng = r_rng(&mut r)?;
+    let n_wr = checked_len_capped(r_u64(&mut r)?, "worker RNG count", MAX_WORKERS as u64)?;
+    if n_wr != workers {
+        return Err(invalid(format!("worker RNG count {n_wr} != workers {workers}")));
+    }
+    let mut worker_rngs = Vec::with_capacity(n_wr);
+    for _ in 0..n_wr {
+        worker_rngs.push(r_rng(&mut r)?);
+    }
+    let fb = r_f32s(&mut r, "feedback state")?;
+    if !job.restore_feedback(&fb) {
+        return Err(invalid(format!("feedback state has wrong shape ({} floats)", fb.len())));
+    }
+    let n_tail = checked_len_capped(r_u64(&mut r)?, "appended record count", MAX_ROUNDS as u64 + 1)?;
+    if base_records + n_tail > rounds + 1 {
+        return Err(invalid(format!(
+            "{} trace records for a {rounds}-round job",
+            base_records + n_tail
+        )));
+    }
+    for _ in 0..n_tail {
+        job.run.trace.records.push(IterRecord {
+            value: r_f32(&mut r)?,
+            dist_to_opt: r_f32(&mut r)?,
+            payload_bits: r_u64(&mut r)? as usize,
+            participants: r_u64(&mut r)? as usize,
+        });
+    }
+    let total_payload = r_u64(&mut r)? as usize;
+    let total_side = r_u64(&mut r)? as usize;
+    if total_payload < job.run.trace.total_payload_bits
+        || total_side < job.run.trace.total_side_bits
+    {
+        return Err(invalid("delta traffic totals regress below the base's"));
+    }
+    let sched = r_sched_trailer(&mut r)?;
+    if !r.is_empty() {
+        return Err(invalid(format!("{} trailing bytes after delta snapshot", r.len())));
+    }
+    // Overlay the moved state (same overlay discipline as the full path).
+    job.run.t = t;
+    job.run.x.copy_from_slice(&x);
+    job.run.avg.copy_from_slice(&avg);
+    job.run.worker_rngs = worker_rngs;
+    job.run.trace.total_payload_bits = total_payload;
+    job.run.trace.total_side_bits = total_side;
+    job.rng = rng;
+    job.spec.qos = sched.qos;
+    Ok((job, sched))
+}
+
+/// Fold a base snapshot and its delta chain back into one plain v2
+/// snapshot (the compaction pass: retire a long autosave chain into a
+/// fresh base). Every delta must pin `base` (deltas reference the base,
+/// not each other) and the chain must be round-monotonic; each link is
+/// fully restored — compaction doubles as end-to-end validation of the
+/// chain. With an empty chain the base itself is re-validated and
+/// re-serialized as v2.
+pub fn compact(base: &[u8], deltas: &[&[u8]]) -> io::Result<Vec<u8>> {
+    if deltas.is_empty() {
+        let (job, sched) = restore_with_sched(base)?;
+        return save_with_sched(&job, &sched);
+    }
+    let mut newest: Option<(Job, SchedTrailer)> = None;
+    for (i, d) in deltas.iter().enumerate() {
+        let (job, sched) = restore_delta_with_sched(d, base)?;
+        if let Some((prev, _)) = &newest {
+            if job.run.round() < prev.run.round() {
+                return Err(invalid(format!(
+                    "delta chain is not round-monotonic at link {i} \
+                     (round {} after round {})",
+                    job.run.round(),
+                    prev.run.round()
+                )));
+            }
+        }
+        newest = Some((job, sched));
+    }
+    let (job, sched) = newest.expect("non-empty chain");
+    save_with_sched(&job, &sched)
 }
 
 #[cfg(test)]
@@ -695,5 +1053,150 @@ mod tests {
         let mut bad = good.clone();
         bad.extend_from_slice(&[0u8; 3]);
         assert_eq!(restore(&bad).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn delta_roundtrips_bit_for_bit_and_stays_small() {
+        let mut a = job();
+        for _ in 0..4 {
+            a.step_round(0);
+        }
+        let base = save(&a).unwrap();
+        for _ in 0..4 {
+            a.step_round(0);
+        }
+        let full = save(&a).unwrap();
+        let delta = save_delta(&a, &base).unwrap();
+        assert!(is_delta(&delta));
+        assert!(!is_delta(&base));
+        assert!(
+            delta.len() < full.len(),
+            "delta ({}) must be smaller than the full snapshot ({})",
+            delta.len(),
+            full.len()
+        );
+        let b = restore_delta(&delta, &base).unwrap();
+        assert_eq!(b.rounds_done(), 8);
+        // The restored job re-serializes byte-identically to the
+        // original — the delta lost nothing.
+        assert_eq!(save(&b).unwrap(), full);
+        // A delta is not a standalone snapshot.
+        assert_eq!(restore(&delta).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn delta_carries_the_scheduler_trailer() {
+        let mut a = job();
+        a.step_round(0);
+        let base = save(&a).unwrap();
+        a.step_round(0);
+        let sched = SchedTrailer { deficit_bits: 777, rung: Some(3), qos: QosClass::Gold };
+        let delta = save_delta_with_sched(&a, &sched, &base).unwrap();
+        let (b, got) = restore_delta_with_sched(&delta, &base).unwrap();
+        assert_eq!(got, sched);
+        assert_eq!(b.spec().qos, QosClass::Gold);
+        assert_eq!(b.rounds_done(), 2);
+    }
+
+    #[test]
+    fn compaction_folds_a_delta_chain_into_a_plain_snapshot() {
+        let mut a = job();
+        for _ in 0..2 {
+            a.step_round(0);
+        }
+        let base = save(&a).unwrap();
+        for _ in 0..2 {
+            a.step_round(0);
+        }
+        let d4 = save_delta(&a, &base).unwrap();
+        for _ in 0..2 {
+            a.step_round(0);
+        }
+        let d6 = save_delta(&a, &base).unwrap();
+        let compacted = compact(&base, &[d4.as_slice(), d6.as_slice()]).unwrap();
+        assert!(!is_delta(&compacted), "compaction retires the chain into a plain v2 base");
+        assert_eq!(compacted, save(&a).unwrap(), "compaction ≡ a fresh full snapshot");
+        // A reversed (non-monotonic) chain is a caller bug, not a state
+        // to silently roll back to.
+        assert_eq!(
+            compact(&base, &[d6.as_slice(), d4.as_slice()]).unwrap_err().kind(),
+            io::ErrorKind::InvalidData
+        );
+        // The empty chain re-validates and re-serializes the base.
+        assert_eq!(compact(&base, &[]).unwrap(), base);
+    }
+
+    #[test]
+    fn every_delta_byte_flip_and_truncation_is_invalid_data() {
+        let mut a = job();
+        for _ in 0..3 {
+            a.step_round(0);
+        }
+        let base = save(&a).unwrap();
+        a.step_round(0);
+        let delta =
+            save_delta_with_sched(&a, &SchedTrailer { deficit_bits: 5, rung: Some(1), qos: QosClass::Silver }, &base)
+                .unwrap();
+        // The whole-record checksum leaves no byte uncovered: every
+        // single flip surfaces as InvalidData, never a panic and never a
+        // silently different restore.
+        for pos in 0..delta.len() {
+            let mut bad = delta.clone();
+            bad[pos] ^= 0xA5;
+            let err = restore_delta(&bad, &base)
+                .expect_err(&format!("delta flip at byte {pos} must be rejected"));
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "byte {pos}");
+        }
+        for cut in 0..delta.len() {
+            let err = restore_delta(&delta[..cut], &base)
+                .expect_err(&format!("truncation to {cut} bytes must be rejected"));
+            assert_eq!(err.kind(), io::ErrorKind::InvalidData, "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn wrong_or_corrupt_base_is_rejected_at_both_ends() {
+        let mut a = job();
+        a.step_round(0);
+        let base = save(&a).unwrap();
+        a.step_round(0);
+        let delta = save_delta(&a, &base).unwrap();
+        // A flipped base byte breaks the pinned fingerprint.
+        for pos in [0usize, 12, base.len() / 2, base.len() - 1] {
+            let mut bad = base.clone();
+            bad[pos] ^= 0xA5;
+            assert_eq!(
+                restore_delta(&delta, &bad).unwrap_err().kind(),
+                io::ErrorKind::InvalidData,
+                "base flip at byte {pos}"
+            );
+        }
+        // A different job's snapshot is not this delta's base...
+        let other = {
+            let spec = JobSpec::new(
+                "other-job",
+                CompressorSpec::parse("ndsc-dith").unwrap(),
+                1.0,
+                16,
+                10,
+                99,
+            )
+            .with_workers(2)
+            .with_def_feedback();
+            let mut j = Job::build(spec).unwrap();
+            j.step_round(0);
+            save(&j).unwrap()
+        };
+        assert_eq!(restore_delta(&delta, &other).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        // ...and save_delta refuses to pin it in the first place.
+        assert_eq!(save_delta(&a, &other).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        // A base *ahead* of the job (stale job state) is refused at save
+        // time: a delta must never roll a job backwards.
+        let mut behind = job();
+        behind.step_round(0);
+        let ahead = save(&a).unwrap(); // a is at round 2
+        assert_eq!(save_delta(&behind, &ahead).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        // A delta never chains on a delta.
+        assert_eq!(save_delta(&a, &delta).unwrap_err().kind(), io::ErrorKind::InvalidData);
     }
 }

@@ -12,11 +12,25 @@
 //!   fleet when the home fleet is more than one live job ahead of the
 //!   lightest one, so adversarial name distributions cannot pile every
 //!   tenant onto one fleet.
-//! * **Concurrent rounds** — [`FleetCluster::run_round`] runs one fleet
-//!   round on every member fleet, each on its own scoped thread. Fleets
-//!   share no mutable state (the recycled buffer pool is lock-protected
-//!   and content-independent), so per-job traces are bit-identical to a
-//!   solo fleet's — `rust/tests/test_serve.rs` proves it.
+//! * **Concurrent rounds, two executors** — [`FleetCluster::run_round`]
+//!   is the lockstep barrier (one scoped thread per fleet, joined every
+//!   round): one big-n straggler stalls every fleet.
+//!   [`FleetCluster::run_epoch`] replaces it with an epoch: every fleet
+//!   arbitrates `E` rounds of grants up front (nominal ladder costs
+//!   only, so batching is bit-identical — see the fleet docs), then the
+//!   granted work executes on a **persistent pool** of per-fleet worker
+//!   threads with per-fleet deques and cross-fleet stealing. A worker
+//!   that drains its own fleet's deque steals from its neighbours', so
+//!   the straggler occupies one worker while the other workers absorb
+//!   the rest of the cluster's grants. Jobs are independent and own
+//!   their RNG/state, so per-job traces are bit-identical to lockstep
+//!   (and to a solo fleet) at any interleaving —
+//!   `rust/tests/test_serve.rs` proves both identities.
+//! * **Autoscaling** — [`FleetCluster::autoscale`] grows/shrinks the
+//!   *active* fleet count between epochs from the queued-jobs pressure
+//!   (watermarks in [`crate::coordinator::config`]), rebalancing with
+//!   the live-migration path. Inactive fleets idle (their arbitration
+//!   is a no-op) and their pool workers steal for the active ones.
 //! * **Migration** — [`FleetCluster::migrate`] drains a job's grant,
 //!   snapshots it (`KFCKPT01` v2, scheduler trailer included), restores
 //!   it into the target fleet and evicts the source copy. Checkpoints
@@ -24,15 +38,48 @@
 //!   bit-for-bit mid-deficit and mid-rung.
 //!
 //! Worker-thread fan-out inside granted rounds is armed per fleet with
-//! the cluster's fleet count, so the never-nest cap
+//! the cluster's **maximum** fleet count (never the autoscaled active
+//! count — with stealing, up to `max` pool workers can execute grants
+//! concurrently), so the never-nest cap
 //! ([`crate::coordinator::config::FLEET_MAX_WORKER_THREADS`]) holds
 //! across the whole cluster, not per fleet.
+//!
+//! # The epoch pool's synchronization protocol
+//!
+//! Work items are **filled before the epoch starts and never pushed
+//! mid-epoch**, which degenerates the classic Chase–Lev deque to a
+//! fixed buffer with one atomic claim cursor (`top`) and one publish
+//! watermark (`bottom`): owners and thieves both claim by CAS on `top`,
+//! and an item is claimable only while `top < bottom`. The coordinator
+//! refills between epochs while workers may still be lagging inside the
+//! previous epoch's steal sweep, so refill order is load-bearing:
+//!
+//! 1. `bottom := 0` — unpublish (claims now fail),
+//! 2. `top := 0` — rewind the cursor,
+//! 3. rewrite the buffer (plain stores; nobody can claim),
+//! 4. `remaining := Σ items` (the completion counter, set **before**
+//!    any item becomes claimable so a early steal cannot underflow it),
+//! 5. `bottom := len` — publish (the SeqCst store releases the buffer
+//!    writes to any thief whose load of `bottom` observes it).
+//!
+//! A lagging thief that read the *old* cursor and the *new* watermark
+//! fails its CAS (the cursor moved under it) and retries with fresh
+//! values, so no stale item can ever be claimed twice; a thief that
+//! observes the new cursor and watermark simply joins the new epoch
+//! early, which is benign (each item still executes exactly once, and
+//! each execution decrements `remaining` exactly once). The coordinator
+//! parks on a condvar until `remaining == 0`, so completion is signaled
+//! by the counter — never by epoch number, which a lagging worker could
+//! report stale.
 
-use std::sync::Arc;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicIsize, AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::channel::ChannelPools;
+use crate::coordinator::config;
 use crate::coordinator::metrics::ClusterMetrics;
-use crate::serve::fleet::{JobId, JobServer, JobState, ServeError};
+use crate::serve::fleet::{self, JobId, JobServer, JobState, ServeError, WorkItem};
 use crate::serve::job::{Job, JobSpec};
 use crate::serve::scheduler::Policy;
 
@@ -50,6 +97,10 @@ struct Placement {
 
 /// The multi-fleet job cluster (see the [module docs](self)).
 pub struct FleetCluster {
+    /// Declared before `fleets` so the pool joins its workers before any
+    /// fleet memory its stale work items point into is freed (the
+    /// workers are parked by then — this is belt-and-braces).
+    pool: Option<EpochPool>,
     fleets: Vec<JobServer>,
     placements: Vec<Placement>,
     pools: Arc<ChannelPools>,
@@ -57,6 +108,10 @@ pub struct FleetCluster {
     rounds: u64,
     rejected: u64,
     migrated: u64,
+    /// Fleets `0..active_fleets` take new placements; the rest idle
+    /// until the autoscaler re-activates them.
+    active_fleets: usize,
+    autoscale_events: u64,
 }
 
 /// FNV-1a over the placement key — stable across processes (no
@@ -69,6 +124,163 @@ fn place_hash(name: &str, seed: u64) -> u64 {
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// One fleet's work buffer for an epoch: a fill-before-start Chase–Lev
+/// degenerate (see the [module docs](self) for the refill protocol that
+/// makes coordinator refills safe against lagging thieves).
+struct Deque {
+    buf: UnsafeCell<Vec<WorkItem>>,
+    /// Claim cursor: the next unclaimed index. Owners and thieves CAS it.
+    top: AtomicIsize,
+    /// Publish watermark: items `top..bottom` are claimable. Written only
+    /// by the coordinator between epochs.
+    bottom: AtomicIsize,
+}
+
+// SAFETY: `buf` is written only by the coordinator while unpublished
+// (`bottom == 0`), and read by workers only at indices they won the CAS
+// for under a published watermark whose SeqCst store released the
+// writes — the module-docs protocol.
+unsafe impl Sync for Deque {}
+
+impl Deque {
+    fn new() -> Self {
+        Deque {
+            buf: UnsafeCell::new(Vec::new()),
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+        }
+    }
+
+    /// Claim the next unexecuted item, or `None` if this deque is
+    /// drained. `top < bottom` implies `top` is in bounds because the
+    /// coordinator publishes `bottom == buf.len()`.
+    fn claim(&self) -> Option<WorkItem> {
+        loop {
+            let t = self.top.load(SeqCst);
+            let b = self.bottom.load(SeqCst);
+            if t >= b {
+                return None;
+            }
+            let item = unsafe { (*self.buf.get())[t as usize] };
+            if self.top.compare_exchange(t, t + 1, SeqCst, SeqCst).is_ok() {
+                return Some(item);
+            }
+        }
+    }
+}
+
+/// State the pool's condvars guard.
+struct PoolState {
+    /// Monotonic epoch counter; workers sweep once per increment.
+    epoch: u64,
+    shutdown: bool,
+}
+
+/// Everything the coordinator and the pool workers share.
+struct PoolShared {
+    deques: Vec<Deque>,
+    /// Unexecuted items in the current epoch; the worker that takes it
+    /// to zero signals `done`.
+    remaining: AtomicUsize,
+    /// Cumulative cross-fleet steals (surfaced in [`ClusterMetrics`]).
+    steals: AtomicU64,
+    state: Mutex<PoolState>,
+    start: Condvar,
+    done_lock: Mutex<()>,
+    done: Condvar,
+    pools: Arc<ChannelPools>,
+}
+
+/// The persistent work-stealing pool: one worker thread per member
+/// fleet, spawned lazily at the first multi-fleet epoch and joined on
+/// drop. Between epochs the workers park on `start`; the per-round
+/// thread spawn/join the lockstep barrier pays is replaced by one
+/// condvar wake per epoch.
+struct EpochPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl EpochPool {
+    fn spawn(workers: usize, pools: Arc<ChannelPools>) -> Self {
+        let shared = Arc::new(PoolShared {
+            deques: (0..workers).map(|_| Deque::new()).collect(),
+            remaining: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            state: Mutex::new(PoolState { epoch: 0, shutdown: false }),
+            start: Condvar::new(),
+            done_lock: Mutex::new(()),
+            done: Condvar::new(),
+            pools,
+        });
+        let handles = (0..workers)
+            .map(|me| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("kf-epoch-{me}"))
+                    .spawn(move || worker_loop(me, shared))
+                    .expect("spawn epoch pool worker")
+            })
+            .collect();
+        EpochPool { shared, handles }
+    }
+}
+
+impl Drop for EpochPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A pool worker: wake per epoch, drain the own fleet's deque first
+/// (locality — the fleet's jobs stay on the fleet's worker when nobody
+/// is behind), then sweep the other deques stealing whatever is left.
+/// One sweep suffices because no items appear mid-epoch: a deque that
+/// reads empty stays empty, and every claimed item is executed by its
+/// claimant.
+fn worker_loop(me: usize, shared: Arc<PoolShared>) {
+    let mut seen = 0u64;
+    loop {
+        {
+            let mut st = shared.state.lock().unwrap();
+            while st.epoch <= seen && !st.shutdown {
+                st = shared.start.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen = st.epoch;
+        }
+        let k = shared.deques.len();
+        for offset in 0..k {
+            let d = &shared.deques[(me + offset) % k];
+            while let Some(item) = d.claim() {
+                if offset != 0 {
+                    shared.steals.fetch_add(1, SeqCst);
+                }
+                // SAFETY: the claim CAS gives this thread exclusive
+                // ownership of the item's job and group; the coordinator
+                // parks until `remaining == 0`, so the pointers stay live.
+                unsafe { fleet::execute_item(item, &shared.pools) };
+                if shared.remaining.fetch_sub(1, SeqCst) == 1 {
+                    // Last item in the epoch: wake the coordinator. Taking
+                    // the lock orders the notify after the coordinator's
+                    // predicate check, so the wake cannot be lost.
+                    let _guard = shared.done_lock.lock().unwrap();
+                    shared.done.notify_all();
+                }
+            }
+        }
+    }
 }
 
 impl FleetCluster {
@@ -89,6 +301,7 @@ impl FleetCluster {
             })
             .collect();
         FleetCluster {
+            pool: None,
             fleets,
             placements: Vec::new(),
             pools,
@@ -96,7 +309,26 @@ impl FleetCluster {
             rounds: 0,
             rejected: 0,
             migrated: 0,
+            active_fleets: k,
+            autoscale_events: 0,
         }
+    }
+
+    /// Fleets currently taking placements (the autoscaler moves this
+    /// between 1 and [`FleetCluster::fleet_count`]).
+    pub fn active_fleets(&self) -> usize {
+        self.active_fleets
+    }
+
+    /// Times the autoscaler resized the active fleet set.
+    pub fn autoscale_events(&self) -> u64 {
+        self.autoscale_events
+    }
+
+    /// Cumulative grants executed by a pool worker for a fleet other
+    /// than its own (0 until the first multi-fleet epoch).
+    pub fn stolen_grants(&self) -> u64 {
+        self.pool.as_ref().map(|p| p.shared.steals.load(SeqCst)).unwrap_or(0)
     }
 
     /// Member fleet count.
@@ -122,8 +354,8 @@ impl FleetCluster {
     /// Hash-based placement with the load-aware override (exposed so
     /// tests can predict where a submission lands).
     pub fn placement_for(&self, spec: &JobSpec) -> usize {
-        let home = (place_hash(&spec.name, spec.seed) % self.fleets.len() as u64) as usize;
-        let lightest = (0..self.fleets.len())
+        let home = (place_hash(&spec.name, spec.seed) % self.active_fleets as u64) as usize;
+        let lightest = (0..self.active_fleets)
             .min_by_key(|&i| self.fleets[i].live_jobs())
             .unwrap_or(home);
         if self.fleets[home].live_jobs() > self.fleets[lightest].live_jobs() + 1 {
@@ -182,6 +414,164 @@ impl FleetCluster {
             ran += 1;
         }
         ran
+    }
+
+    /// Run `rounds` cluster rounds as one epoch on the work-stealing
+    /// pool: every fleet arbitrates all `rounds` grants at the barrier
+    /// (bit-identical to `rounds` lockstep rounds — the grant pass uses
+    /// nominal ladder costs only), the granted work executes with
+    /// cross-fleet stealing, and the accounting pass folds measured bits
+    /// back in deterministic slot order. Returns total jobs granted an
+    /// engine round. A single-fleet cluster skips the pool entirely.
+    pub fn run_epoch(&mut self, rounds: usize) -> usize {
+        if rounds == 0 {
+            return 0;
+        }
+        let granted = if self.fleets.len() == 1 {
+            self.fleets[0].run_epoch(rounds)
+        } else {
+            for f in &mut self.fleets {
+                f.compute_epoch_grants(rounds);
+            }
+            let pool = self
+                .pool
+                .get_or_insert_with(|| EpochPool::spawn(self.fleets.len(), self.pools.clone()));
+            let shared = &pool.shared;
+            // Refill every deque unpublished (bottom = 0) first; items
+            // become claimable only after `remaining` is set, per the
+            // module-docs protocol.
+            let mut total_items = 0usize;
+            for (i, f) in self.fleets.iter_mut().enumerate() {
+                let d = &shared.deques[i];
+                d.bottom.store(0, SeqCst);
+                d.top.store(0, SeqCst);
+                // SAFETY: unpublished — no worker can claim, and lagging
+                // thieves never read `buf` without a published watermark.
+                let buf = unsafe { &mut *d.buf.get() };
+                buf.clear();
+                f.collect_epoch_items(buf);
+                total_items += buf.len();
+            }
+            if total_items > 0 {
+                shared.remaining.store(total_items, SeqCst);
+                for d in &shared.deques {
+                    // SAFETY: still single-writer; only the length is read.
+                    let n = unsafe { (*d.buf.get()).len() };
+                    d.bottom.store(n as isize, SeqCst);
+                }
+                {
+                    let mut st = shared.state.lock().unwrap();
+                    st.epoch += 1;
+                    shared.start.notify_all();
+                }
+                let mut guard = shared.done_lock.lock().unwrap();
+                while shared.remaining.load(SeqCst) != 0 {
+                    guard = shared.done.wait(guard).unwrap();
+                }
+            }
+            self.fleets.iter_mut().map(|f| f.apply_epoch()).sum()
+        };
+        self.rounds += rounds as u64;
+        granted
+    }
+
+    /// Run epochs of `epoch_len` cluster rounds until no job is live or
+    /// `max_rounds` have executed; returns how many ran.
+    pub fn run_async(&mut self, max_rounds: usize, epoch_len: usize) -> usize {
+        let epoch = epoch_len.max(1);
+        let mut ran = 0;
+        while ran < max_rounds && self.fleets.iter().any(|f| f.live_jobs() > 0) {
+            let chunk = epoch.min(max_rounds - ran);
+            self.run_epoch(chunk);
+            ran += chunk;
+        }
+        ran
+    }
+
+    /// [`FleetCluster::run_async`] with an [`FleetCluster::autoscale`]
+    /// pass between epochs.
+    pub fn run_autoscaled(
+        &mut self,
+        max_rounds: usize,
+        epoch_len: usize,
+    ) -> Result<usize, ServeError> {
+        let epoch = epoch_len.max(1);
+        let mut ran = 0;
+        while ran < max_rounds && self.fleets.iter().any(|f| f.live_jobs() > 0) {
+            self.autoscale()?;
+            let chunk = epoch.min(max_rounds - ran);
+            self.run_epoch(chunk);
+            ran += chunk;
+        }
+        ran
+    }
+
+    /// One autoscaler step: compare queued-jobs pressure against the
+    /// per-active-fleet watermarks and grow or shrink the active fleet
+    /// set by one, rebalancing live jobs over the migration path (which
+    /// preserves traces bit-for-bit). Returns whether a resize happened.
+    ///
+    /// * **Grow** (`queued ≥ HIGH × active`, room left): activate the
+    ///   next fleet and pull jobs off the heaviest active fleets until
+    ///   the newcomer is within one job of them.
+    /// * **Shrink** (`queued ≤ LOW × active`, more than one active):
+    ///   drain the last active fleet onto the lightest survivors and
+    ///   deactivate it.
+    pub fn autoscale(&mut self) -> Result<bool, ServeError> {
+        let queued = self.queued_jobs() as usize;
+        let active = self.active_fleets;
+        if active < self.fleets.len() && queued >= config::AUTOSCALE_HIGH_QUEUED_PER_FLEET * active
+        {
+            let newcomer = active;
+            self.active_fleets = active + 1;
+            loop {
+                let heaviest = (0..newcomer)
+                    .max_by_key(|&i| self.fleets[i].live_jobs())
+                    .expect("grow always has an active fleet");
+                if self.fleets[heaviest].live_jobs() <= self.fleets[newcomer].live_jobs() + 1 {
+                    break;
+                }
+                let gid = self
+                    .placements
+                    .iter()
+                    .find(|p| {
+                        p.fleet == heaviest
+                            && matches!(
+                                self.fleets[p.fleet].state(p.local),
+                                Some(JobState::Running) | Some(JobState::Paused)
+                            )
+                    })
+                    .map(|p| p.gid)
+                    .expect("heaviest fleet reported live jobs");
+                self.migrate(gid, newcomer)?;
+            }
+            self.autoscale_events += 1;
+            return Ok(true);
+        }
+        if active > 1 && queued <= config::AUTOSCALE_LOW_QUEUED_PER_FLEET * active {
+            let retiring = active - 1;
+            while let Some(gid) = self
+                .placements
+                .iter()
+                .find(|p| {
+                    p.fleet == retiring
+                        && matches!(
+                            self.fleets[p.fleet].state(p.local),
+                            Some(JobState::Running) | Some(JobState::Paused)
+                        )
+                })
+                .map(|p| p.gid)
+            {
+                let lightest = (0..retiring)
+                    .min_by_key(|&i| self.fleets[i].live_jobs())
+                    .expect("shrink keeps at least one active fleet");
+                self.migrate(gid, lightest)?;
+            }
+            self.active_fleets = retiring;
+            self.autoscale_events += 1;
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     /// Move a live (`Running`/`Paused`) job to `to_fleet`: drain its
@@ -286,6 +676,9 @@ impl FleetCluster {
             queued_jobs: self.queued_jobs(),
             rejected_jobs: self.rejected,
             migrated_jobs: self.migrated,
+            stolen_grants: self.stolen_grants(),
+            active_fleets: self.active_fleets as u64,
+            autoscale_events: self.autoscale_events,
             served_job_rounds: self.fleets.iter().map(|f| f.metrics().served_job_rounds()).sum(),
             spent_payload_bits: self.fleets.iter().map(|f| f.metrics().spent_payload_bits).sum(),
             fleets: self.fleets.iter().map(|f| f.metrics().clone()).collect(),
@@ -355,6 +748,83 @@ mod tests {
         assert_eq!(m.queued_jobs, 0);
         assert_eq!(m.served_job_rounds, 60);
         assert_eq!(m.fleets.len(), 3);
+    }
+
+    #[test]
+    fn epoch_executor_matches_lockstep_cluster() {
+        // Same tenants, same submission order: R lockstep cluster rounds
+        // vs. the same R rounds in ragged work-stealing epochs must agree
+        // on every lifecycle state, trace, and accounting row.
+        let build = || {
+            let mut c = FleetCluster::new(4, 256, Policy::DrrAdaptive);
+            let gids: Vec<_> = (0..8)
+                .map(|i| c.submit(spec(&format!("t{i}"), 12, 40 + i as u64)).unwrap())
+                .collect();
+            (c, gids)
+        };
+        let (mut lockstep, gids) = build();
+        let (mut epoch, gids2) = build();
+        assert_eq!(gids, gids2);
+        for _ in 0..24 {
+            lockstep.run_round();
+        }
+        for chunk in [1usize, 5, 10, 8] {
+            epoch.run_epoch(chunk);
+        }
+        assert_eq!(lockstep.round(), epoch.round());
+        for &gid in &gids {
+            assert_eq!(lockstep.state(gid), epoch.state(gid), "state diverged for {gid}");
+            assert_eq!(
+                lockstep.deficit_bits(gid),
+                epoch.deficit_bits(gid),
+                "deficit diverged for {gid}"
+            );
+            let (a, b) = (lockstep.job(gid).unwrap(), epoch.job(gid).unwrap());
+            assert_eq!(a.rounds_done(), b.rounds_done(), "rounds diverged for {gid}");
+            assert_eq!(
+                a.trace().total_payload_bits,
+                b.trace().total_payload_bits,
+                "payload diverged for {gid}"
+            );
+            assert_eq!(
+                a.trace().final_x,
+                b.trace().final_x,
+                "final iterate diverged for {gid}"
+            );
+        }
+        let (ma, mb) = (lockstep.metrics(), epoch.metrics());
+        assert_eq!(ma.served_job_rounds, mb.served_job_rounds);
+        assert_eq!(ma.spent_payload_bits, mb.spent_payload_bits);
+    }
+
+    #[test]
+    fn autoscaler_tracks_queue_pressure_and_preserves_jobs() {
+        let mut c = FleetCluster::new(4, 1 << 20, Policy::Drr);
+        assert_eq!(c.active_fleets(), 4);
+        // Two live jobs on four fleets is under the low watermark:
+        // repeated passes shrink to the floor of one active fleet.
+        let a = c.submit(spec("lo-a", 40, 1)).unwrap();
+        let b = c.submit(spec("lo-b", 40, 2)).unwrap();
+        while c.autoscale().unwrap() {}
+        assert_eq!(c.active_fleets(), 1, "low pressure must shrink to the floor");
+        assert_eq!(c.fleet_of(a), Some(0));
+        assert_eq!(c.fleet_of(b), Some(0));
+        // Pile on tenants until the high watermark trips: the autoscaler
+        // re-activates fleets and rebalances onto them.
+        let more: Vec<_> =
+            (0..14).map(|i| c.submit(spec(&format!("hi{i}"), 40, 50 + i as u64)).unwrap()).collect();
+        c.autoscale().unwrap();
+        assert_eq!(c.active_fleets(), 2, "high pressure must grow");
+        let m = c.metrics();
+        assert!(m.autoscale_events >= 4, "3 shrinks + 1 grow, got {}", m.autoscale_events);
+        assert!(m.migrated_jobs >= 1, "rebalance uses the migration path");
+        assert_eq!(m.active_fleets, 2);
+        // Everything still runs to completion through autoscaled epochs.
+        c.run_autoscaled(4096, 8).unwrap();
+        for gid in [a, b].into_iter().chain(more) {
+            assert_eq!(c.state(gid), Some(JobState::Finished), "job {gid} lost in autoscaling");
+            assert_eq!(c.job(gid).unwrap().trace().records.len(), 40);
+        }
     }
 
     #[test]

@@ -9,6 +9,23 @@
 //! rounds; a paused job's state is untouched until resume, so its trace
 //! continues exactly where it stopped.
 //!
+//! **Epochs: arbitration split from execution.** A fleet round is two
+//! passes that only *look* fused: the grant pass (census, accrual,
+//! level pick, budget drain, deficit charge, cursor rotation) consumes
+//! nothing but **nominal** ladder costs, and the execution pass
+//! (engine rounds) feeds nothing back into grants — measured bits go to
+//! metrics rows only. [`JobServer::run_epoch`] exploits that: it
+//! arbitrates `E` rounds up front at a barrier (bit-identical to `E`
+//! calls of [`JobServer::run_round`], including virtual completion —
+//! a job granted its final round is excluded from later rounds' census
+//! exactly as the fused loop's `Finished` transition would), then each
+//! granted job executes its levels back-to-back. Because grants of one
+//! epoch touch disjoint jobs and all cross-round state lives inside the
+//! job, the execution pass may run in any order or on any thread — the
+//! cluster's work-stealing pool ([`crate::serve::cluster`]) executes
+//! the same [`EpochGroup`]s concurrently with cross-fleet stealing and
+//! stays trace- and accounting-identical to lockstep.
+//!
 //! **QoS.** Each job carries a [`QosClass`]: its DRR quantum is the
 //! weighted share `⌊B·w_j/Σ_live w⌋`, and every class with live members
 //! holds a reserved slice of the round budget
@@ -119,7 +136,79 @@ struct JobSlot {
     /// adaptive-R rung that travels in the checkpoint trailer so a
     /// restored job's observability picks up where it left off.
     rung: Option<u8>,
+    /// Ladder levels granted to this slot in the current epoch, in
+    /// round order. Cleared at each arbitration barrier; the capacity
+    /// persists, so steady-state epochs push within it (phase 5 of
+    /// `rust/tests/test_alloc.rs`).
+    granted: Vec<u8>,
     job: Job,
+}
+
+/// One slot's share of an epoch: which slot runs, how wide its worker
+/// fan-out may go, and (after execution) the measured bits its granted
+/// rounds put on the wire. The grant pass emits these in slot order;
+/// the execution pass — inline or on the cluster's work-stealing pool —
+/// fills `payload`/`side`; [`JobServer::apply_epoch`] folds them into
+/// the metrics rows deterministically.
+#[derive(Clone, Copy)]
+pub(crate) struct EpochGroup {
+    pub(crate) slot: usize,
+    pub(crate) threads: Option<usize>,
+    pub(crate) payload: u64,
+    pub(crate) side: u64,
+}
+
+/// One [`EpochGroup`] as raw pointers, so the cluster's persistent pool
+/// workers can execute it from any thread. Disjointness is structural:
+/// the grant pass emits at most one group per slot per epoch, so no two
+/// items alias a job, and the coordinator parks until every item
+/// completes before touching fleet state again.
+#[derive(Clone, Copy)]
+pub(crate) struct WorkItem {
+    pub(crate) job: *mut Job,
+    pub(crate) levels: *const u8,
+    pub(crate) n_levels: usize,
+    pub(crate) threads: Option<usize>,
+    pub(crate) out: *mut EpochGroup,
+}
+
+// SAFETY: a WorkItem is an owned capability to one job for one epoch —
+// the epoch executor hands each item to exactly one worker and joins the
+// pool before the fleet's `&mut self` methods run again.
+unsafe impl Send for WorkItem {}
+
+/// Step every granted level of one epoch group, returning the summed
+/// measured `(payload, side)` bits. Shared by the inline and the
+/// work-stealing execution paths so they cannot drift.
+pub(crate) fn execute_group(
+    job: &mut Job,
+    levels: &[u8],
+    threads: Option<usize>,
+    pools: &Arc<ChannelPools>,
+) -> (u64, u64) {
+    let (mut payload, mut side) = (0u64, 0u64);
+    for &lvl in levels {
+        let (p, s) = job.step_round_auto(lvl as usize, threads, pools);
+        payload += p;
+        side += s;
+    }
+    (payload, side)
+}
+
+/// Execute one [`WorkItem`] (pool workers call this; the inline path
+/// goes through [`JobServer::execute_epoch_inline`]).
+///
+/// # Safety
+/// The item's pointers must be live and this thread must hold exclusive
+/// logical ownership of the item's job and group for the duration of
+/// the call — guaranteed by the epoch protocol above.
+pub(crate) unsafe fn execute_item(item: WorkItem, pools: &Arc<ChannelPools>) {
+    let job = unsafe { &mut *item.job };
+    let levels = unsafe { std::slice::from_raw_parts(item.levels, item.n_levels) };
+    let (payload, side) = execute_group(job, levels, item.threads, pools);
+    let out = unsafe { &mut *item.out };
+    out.payload = payload;
+    out.side = side;
 }
 
 /// The multi-job server (see the [module docs](self)).
@@ -136,6 +225,10 @@ pub struct JobServer {
     /// `Some(active_fleets)` once [`JobServer::enable_fanout`] armed
     /// threaded granted rounds; `None` (the default) steps inline.
     fanout_fleets: Option<usize>,
+    /// The current epoch's execution groups, in slot order. Pooled: the
+    /// grant pass clears and refills it, so steady-state epochs allocate
+    /// nothing.
+    groups: Vec<EpochGroup>,
 }
 
 impl JobServer {
@@ -165,6 +258,7 @@ impl JobServer {
             next_id: 0,
             pools,
             fanout_fleets: None,
+            groups: Vec::new(),
         }
     }
 
@@ -233,6 +327,7 @@ impl JobServer {
             state: JobState::Running,
             deficit: Deficit::default(),
             rung: None,
+            granted: Vec::new(),
             job,
         });
         Ok(id)
@@ -275,6 +370,7 @@ impl JobServer {
             state,
             deficit: Deficit { bits: sched.deficit_bits.min(cap) },
             rung: sched.rung,
+            granted: Vec::new(),
             job,
         };
         if slot.state == JobState::Finished {
@@ -305,6 +401,28 @@ impl JobServer {
                     .map_err(|_| ServeError::BadState { id, state: slot.state, op: "checkpoint" })
             }
             state => Err(ServeError::BadState { id, state, op: "checkpoint" }),
+        }
+    }
+
+    /// [`JobServer::checkpoint`] as a **delta record** against a pinned
+    /// `base` snapshot previously taken of the same job (periodic
+    /// autosave: O(changed) bytes per save instead of O(job)). The
+    /// current scheduler trailer rides along; restore with
+    /// [`checkpoint::restore_delta_with_sched`] or fold chains back into
+    /// a base with [`checkpoint::compact`].
+    pub fn checkpoint_delta(&self, id: JobId, base: &[u8]) -> Result<Vec<u8>, ServeError> {
+        let slot = self.slot(id)?;
+        match slot.state {
+            JobState::Running | JobState::Paused => {
+                let sched = SchedTrailer {
+                    deficit_bits: slot.deficit.bits,
+                    rung: slot.rung,
+                    qos: slot.job.spec().qos,
+                };
+                checkpoint::save_delta_with_sched(&slot.job, &sched, base)
+                    .map_err(|e| ServeError::Snapshot(e.to_string()))
+            }
+            state => Err(ServeError::BadState { id, state, op: "checkpoint_delta" }),
         }
     }
 
@@ -408,23 +526,80 @@ impl JobServer {
     ///
     /// [scheduler docs]: crate::serve::scheduler
     pub fn run_round(&mut self) -> usize {
-        let live = self.live_jobs();
-        if live == 0 {
-            return 0;
+        self.run_epoch(1)
+    }
+
+    /// Arbitrate and execute `rounds` fleet rounds as one epoch: every
+    /// grant decision is made up front at a barrier (the grant pass
+    /// consumes only nominal ladder costs, so batching it is
+    /// **bit-identical** to `rounds` calls of [`JobServer::run_round`]),
+    /// then each granted job steps its levels back-to-back on the
+    /// current thread. Returns job-rounds granted. The cluster's
+    /// work-stealing executor uses the same three passes but runs the
+    /// middle one on its persistent pool.
+    pub fn run_epoch(&mut self, rounds: usize) -> usize {
+        self.compute_epoch_grants(rounds);
+        self.execute_epoch_inline();
+        self.apply_epoch()
+    }
+
+    /// The grant pass: arbitrate `rounds` fleet rounds, mutating all
+    /// scheduler state (deficits, rungs, cursor, round counter) exactly
+    /// as the fused loop did, and record each slot's granted levels for
+    /// the execution pass. Returns job-rounds granted.
+    pub(crate) fn compute_epoch_grants(&mut self, rounds: usize) -> usize {
+        for s in &mut self.slots {
+            s.granted.clear();
+        }
+        self.groups.clear();
+        let mut total = 0;
+        for _ in 0..rounds {
+            total += self.arbitrate_round();
+        }
+        // Execution groups in slot order (deterministic apply order).
+        let groups = &mut self.groups;
+        let fanout = self.fanout_fleets;
+        for (j, s) in self.slots.iter().enumerate() {
+            if s.granted.is_empty() {
+                continue;
+            }
+            let threads = fanout.and_then(|fleets| {
+                config::fleet_fanout_threads(s.job.spec().workers, s.job.spec().n, fleets)
+            });
+            groups.push(EpochGroup { slot: j, threads, payload: 0, side: 0 });
+        }
+        total
+    }
+
+    /// Arbitrate one fleet round. A slot already granted its last
+    /// configured round earlier in this epoch is *virtually complete*:
+    /// the fused loop would have flipped it to `Finished` before the
+    /// next round's census, so the batched pass must exclude it the
+    /// same way. An idle round (no live, non-complete job) advances
+    /// nothing — matching [`JobServer::run_round`] on an idle fleet.
+    fn arbitrate_round(&mut self) -> usize {
+        fn eligible(s: &JobSlot) -> bool {
+            s.state == JobState::Running
+                && s.job.rounds_done() + s.granted.len() < s.job.spec().rounds
         }
         // Class census → weighted quanta + per-class reservations.
         let mut live_weight = [0u64; QosClass::ALL.len()];
         for s in &self.slots {
-            if s.state == JobState::Running {
+            if eligible(s) {
                 live_weight[s.job.spec().qos.index()] += s.job.spec().qos.weight();
             }
         }
         let total_weight: u64 = live_weight.iter().sum();
+        if total_weight == 0 {
+            return 0;
+        }
         let budget = self.budget_bits as u64;
         let mut reserved = [0u64; QosClass::ALL.len()];
         for c in QosClass::ALL {
             if live_weight[c.index()] > 0 {
-                reserved[c.index()] = budget * c.reserve_num() / scheduler::RESERVE_DENOM;
+                reserved[c.index()] =
+                    (budget as u128 * c.reserve_num() as u128 / scheduler::RESERVE_DENOM as u128)
+                        as u64;
             }
         }
         // Idle classes' slices stay in the common pool.
@@ -444,7 +619,7 @@ impl JobServer {
         for k in 0..nslots {
             let j = (self.cursor + k) % nslots;
             let slot = &mut self.slots[j];
-            if slot.state != JobState::Running {
+            if !eligible(slot) {
                 continue;
             }
             let class = slot.job.spec().qos;
@@ -460,17 +635,6 @@ impl JobServer {
             let afford = slot.deficit.bits.min(pool);
             if let Some(lvl) = slot.job.pick_level(self.policy, afford) {
                 let cost = slot.job.level_cost(lvl);
-                let threads = self.fanout_fleets.and_then(|fleets| {
-                    config::fleet_fanout_threads(
-                        slot.job.spec().workers,
-                        slot.job.spec().n,
-                        fleets,
-                    )
-                });
-                let (payload, side) = match threads {
-                    Some(t) => slot.job.step_round_mt(lvl, t, &self.pools),
-                    None => slot.job.step_round(lvl),
-                };
                 // Draw the class reserve down first, then the common pool,
                 // then (oversized bypass only) other classes' reserves.
                 // `afford ≤ pool` guarantees the drain terminates at zero.
@@ -491,20 +655,65 @@ impl JobServer {
                 debug_assert_eq!(owed, 0, "grant exceeded the round budget");
                 slot.deficit.charge(cost);
                 slot.rung = Some(lvl as u8);
+                slot.granted.push(lvl as u8);
                 served += 1;
-                if slot.job.is_complete() {
-                    slot.job.finalize();
-                    slot.state = JobState::Finished;
-                }
-                let row = &mut self.metrics.jobs[j];
-                row.rounds_served += 1;
-                row.payload_bits += payload;
-                row.side_bits += side;
-                self.metrics.spent_payload_bits += payload;
             }
         }
         self.cursor = (self.cursor + 1) % nslots;
         self.metrics.fleet_rounds += 1;
+        served
+    }
+
+    /// The execution pass, inline flavor: step every epoch group on the
+    /// current thread, in slot order.
+    pub(crate) fn execute_epoch_inline(&mut self) {
+        for gi in 0..self.groups.len() {
+            let EpochGroup { slot, threads, .. } = self.groups[gi];
+            let s = &mut self.slots[slot];
+            let (payload, side) = execute_group(&mut s.job, &s.granted, threads, &self.pools);
+            self.groups[gi].payload = payload;
+            self.groups[gi].side = side;
+        }
+    }
+
+    /// Emit the epoch's groups as raw [`WorkItem`]s for the cluster's
+    /// work-stealing pool. Caller contract: the fleet must not be
+    /// touched again until every item has executed, and
+    /// [`JobServer::apply_epoch`] must run afterwards.
+    pub(crate) fn collect_epoch_items(&mut self, out: &mut Vec<WorkItem>) {
+        let slots = &mut self.slots;
+        for g in self.groups.iter_mut() {
+            let s = &mut slots[g.slot];
+            out.push(WorkItem {
+                job: &mut s.job,
+                levels: s.granted.as_ptr(),
+                n_levels: s.granted.len(),
+                threads: g.threads,
+                out: g,
+            });
+        }
+    }
+
+    /// The accounting pass: fold measured bits into the per-job metrics
+    /// rows and apply completion transitions, in slot order. Returns
+    /// job-rounds served (= granted — every granted level executed).
+    pub(crate) fn apply_epoch(&mut self) -> usize {
+        let mut served = 0usize;
+        for gi in 0..self.groups.len() {
+            let g = self.groups[gi];
+            let slot = &mut self.slots[g.slot];
+            let grants = slot.granted.len();
+            served += grants;
+            if slot.job.is_complete() {
+                slot.job.finalize();
+                slot.state = JobState::Finished;
+            }
+            let row = &mut self.metrics.jobs[g.slot];
+            row.rounds_served += grants as u64;
+            row.payload_bits += g.payload;
+            row.side_bits += g.side;
+            self.metrics.spent_payload_bits += g.payload;
+        }
         served
     }
 
@@ -655,6 +864,57 @@ mod tests {
         // An idle fleet does not advance its round counter.
         assert_eq!(srv.run_round(), 0);
         assert_eq!(srv.round(), 0);
+    }
+
+    #[test]
+    fn epoch_grants_match_sequential_rounds() {
+        // The batched grant pass must be indistinguishable from the fused
+        // per-round loop: same grants, same deficits, same rungs, same
+        // metrics, same traces — under a scarce adaptive budget where the
+        // DRR arithmetic actually bites, and across ragged epoch sizes
+        // that straddle job completions.
+        let build = || {
+            let mut srv = JobServer::new(96, Policy::DrrAdaptive);
+            srv.submit(spec("g", "ndsc-dith", 1.0, 7, 11).with_qos(QosClass::Gold)).unwrap();
+            srv.submit(spec("s", "sd", 0.5, 23, 12)).unwrap();
+            srv.submit(spec("b", "ndsc-dith", 1.0, 23, 13).with_qos(QosClass::Bronze)).unwrap();
+            srv
+        };
+        let mut lockstep = build();
+        let mut epoch = build();
+        let mut served_lock = 0usize;
+        let mut served_epoch = 0usize;
+        for &chunk in &[1usize, 3, 8, 16, 5] {
+            for _ in 0..chunk {
+                served_lock += lockstep.run_round();
+            }
+            served_epoch += epoch.run_epoch(chunk);
+            assert_eq!(served_lock, served_epoch, "served diverged at chunk {chunk}");
+        }
+        assert_eq!(lockstep.round(), epoch.round());
+        for id in lockstep.job_ids().collect::<Vec<_>>() {
+            assert_eq!(lockstep.state(id), epoch.state(id), "state diverged for job {id}");
+            assert_eq!(
+                lockstep.deficit_bits(id),
+                epoch.deficit_bits(id),
+                "deficit diverged for job {id}"
+            );
+            assert_eq!(lockstep.last_rung(id), epoch.last_rung(id), "rung diverged for job {id}");
+            let (a, b) = (lockstep.job(id).unwrap(), epoch.job(id).unwrap());
+            assert_eq!(a.rounds_done(), b.rounds_done(), "rounds diverged for job {id}");
+            assert_eq!(
+                a.trace().total_payload_bits,
+                b.trace().total_payload_bits,
+                "payload diverged for job {id}"
+            );
+        }
+        let (ma, mb) = (lockstep.metrics(), epoch.metrics());
+        assert_eq!(ma.spent_payload_bits, mb.spent_payload_bits);
+        for (ra, rb) in ma.jobs.iter().zip(&mb.jobs) {
+            assert_eq!(ra.rounds_served, rb.rounds_served, "row diverged for {}", ra.name);
+            assert_eq!(ra.payload_bits, rb.payload_bits, "row diverged for {}", ra.name);
+            assert_eq!(ra.side_bits, rb.side_bits, "row diverged for {}", ra.name);
+        }
     }
 
     #[test]

@@ -481,6 +481,23 @@ impl Job {
         )
     }
 
+    /// Execute one granted engine round, threaded when the fleet's
+    /// never-nest gate allowed it (`threads = Some(t ≥ 2)`), inline
+    /// otherwise — the one execution entry point both the lockstep round
+    /// and the work-stealing epoch executor call, so the two paths
+    /// cannot drift. Bit-identical either way.
+    pub(crate) fn step_round_auto(
+        &mut self,
+        lvl: usize,
+        threads: Option<usize>,
+        pools: &Arc<ChannelPools>,
+    ) -> (u64, u64) {
+        match threads {
+            Some(t) => self.step_round_mt(lvl, t, pools),
+            None => self.step_round(lvl),
+        }
+    }
+
     /// Return the run's threaded-round scratch buffers to `pools` (called
     /// when a job leaves a fleet — completion, eviction, or migration —
     /// so its successors reuse the allocations). No-op if the job never

@@ -9,22 +9,23 @@
 //!
 //! ```text
 //!  submit / pause / resume / cancel / migrate   (lifecycle, cluster.rs)
-//!        │  FNV-1a(name,seed) % k placement + load-aware rebalance
+//!        │  FNV-1a(name,seed) % active placement + load-aware rebalance
 //!        ▼
-//!  ┌──────────────── FleetCluster (k fleets, 1 thread each) ─────────┐
-//!  │ ┌───────────┐  per-round grants (job, level R_i) ┌────────────┐ │
-//!  │ │ JobServer │ ──────────────────────────────────▶│ engine     │ │
-//!  │ │ registry  │  weighted DRR + QoS reservations   │ round      │ │
-//!  │ │ + DRR     │  over a per-fleet bits/round       │ (inline or │ │
-//!  │ │ + QoS     │  budget (scheduler.rs)             │ step_mt    │ │
-//!  │ └───────────┘                                    │ fan-out)   │ │
-//!  │      ·            ... fleet 2 .. fleet k ...     └────────────┘ │
+//!  ┌───────── FleetCluster (k fleets, epoch-based executor) ──────────┐
+//!  │ ┌───────────┐  epoch grants (job, level R_i)·E    ┌────────────┐ │
+//!  │ │ JobServer │ ──────────────────────────────────▶ │ per-fleet  │ │
+//!  │ │ registry  │  weighted DRR + QoS reservations    │ deques +   │ │
+//!  │ │ + DRR     │  arbitrated E rounds at a barrier   │ stealing   │ │
+//!  │ │ + QoS     │  (scheduler.rs, nominal costs)      │ (pool of k │ │
+//!  │ └───────────┘                                     │ workers)   │ │
+//!  │      · autoscaler grows/shrinks active fleets ·   └────────────┘ │
 //!  └──────────────────────────────────────────────────────────────────┘
 //!        │ drain grant → snapshot → restore in target (migration)
 //!        ▼
 //!  checkpoint.rs — versioned binary snapshots         per-job Trace +
 //!  (KFCKPT01 v2: + scheduler trailer with deficit /   FleetMetrics +
-//!  rung / QoS; corrupt input ⇒ InvalidData)           ClusterMetrics
+//!  rung / QoS; v3: delta records vs a pinned base;    ClusterMetrics
+//!  corrupt input ⇒ InvalidData)
 //! ```
 //!
 //! Design invariants:
@@ -42,12 +43,21 @@
 //!   bounded deficit counters guaranteeing starvation-freedom.
 //! * **Resumability** — [`checkpoint::save`] serializes the complete
 //!   resumable state; [`checkpoint::restore`] rebuilds the job in a
-//!   fresh context and continues the uninterrupted trace bit-for-bit.
-//!   Corrupt or truncated snapshots surface as
-//!   [`std::io::ErrorKind::InvalidData`], never as a panic (the
-//!   [`crate::coordinator::protocol`] hardening rules).
+//!   fresh context and continues the uninterrupted trace bit-for-bit;
+//!   [`checkpoint::save_delta`] records only what moved since a pinned
+//!   base (O(changed) periodic autosave) and [`checkpoint::compact`]
+//!   folds delta chains back into a base. Corrupt or truncated
+//!   snapshots surface as [`std::io::ErrorKind::InvalidData`], never as
+//!   a panic (the [`crate::coordinator::protocol`] hardening rules).
+//! * **Epochs over barriers** — the cluster arbitrates E rounds of
+//!   grants up front (bit-identical to E lockstep rounds, because
+//!   arbitration consumes only nominal ladder costs), then executes
+//!   them on a persistent work-stealing pool, so one big-`n` straggler
+//!   no longer stalls every fleet at a per-round join
+//!   ([`cluster::FleetCluster::run_epoch`]).
 //! * **Zero-allocation steady state** — a fleet round performs no heap
-//!   allocation per job once warm (`rust/tests/test_alloc.rs`, phase 4).
+//!   allocation per job once warm, and a work-stealing cluster epoch
+//!   performs none per epoch (`rust/tests/test_alloc.rs`, phases 4–5).
 //! * **Fleet-independence** — a snapshot carries no fleet identity, so a
 //!   job restores into *any* fleet (same process or not) and its trace,
 //!   banked deficit and adaptive rung continue bit-for-bit; this is the

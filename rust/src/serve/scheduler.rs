@@ -213,7 +213,11 @@ impl std::fmt::Display for QosClass {
 /// grow. Degenerates to the unweighted [`quantum`] when all live jobs
 /// share one class: `⌊B·w/(live·w)⌋ = ⌊B/live⌋`.
 pub fn weighted_quantum(budget_bits: usize, weight: u64, total_weight: u64) -> u64 {
-    (budget_bits as u64 * weight / total_weight.max(1)).max(1)
+    // Widen before multiplying: `budget · weight` overflows u64 for
+    // budgets past 2^62 (weight 4), and a silently wrapped quantum would
+    // starve the very tenants the weights privilege.
+    let q = (budget_bits as u128 * weight as u128) / total_weight.max(1) as u128;
+    q.clamp(1, u64::MAX as u128) as u64
 }
 
 #[cfg(test)]
@@ -285,5 +289,18 @@ mod tests {
         let b = weighted_quantum(1000, QosClass::Bronze.weight(), total);
         assert_eq!(g, 4 * b);
         assert_eq!(weighted_quantum(0, 1, 0), 1, "floored at 1");
+    }
+
+    #[test]
+    fn weighted_quantum_survives_huge_budgets_without_wrapping() {
+        // budget · weight would wrap u64 here; the widened arithmetic
+        // must return the true share, not a wrapped remnant.
+        let b = usize::MAX;
+        let w = QosClass::Gold.weight();
+        assert_eq!(weighted_quantum(b, w, w), b as u64, "solo gold gets the whole budget");
+        assert_eq!(weighted_quantum(b, w, 2 * w), b as u64 / 2);
+        // Degenerate caller (weight beyond the live total) saturates
+        // instead of truncating through a narrowing cast.
+        assert_eq!(weighted_quantum(b, 8, 1), u64::MAX);
     }
 }

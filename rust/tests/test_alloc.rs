@@ -22,6 +22,11 @@
 //!    exactly zero heap allocations per steady-state fleet round: the
 //!    scheduler is integer arithmetic over preallocated slots and the
 //!    per-job accounting updates rows in place.
+//! 5. **Cluster epoch level** — a multi-fleet work-stealing cluster
+//!    epoch (`FleetCluster::run_epoch`: barrier grant pass, per-fleet
+//!    deque refill, persistent-pool execution with stealing, accounting
+//!    fold) performs exactly zero heap allocations once the pool
+//!    threads, grant vectors and deque buffers are warm.
 //!
 //! Everything lives in ONE `#[test]` so the libtest harness cannot run a
 //! second counter-touching test concurrently and pollute the tallies.
@@ -235,6 +240,58 @@ fn serve_level_zero_allocs() {
     assert!(warmup + measured < job_rounds, "no job may finalize inside the window");
 }
 
+fn serve_cluster_epoch_zero_allocs() {
+    use kashinflow::quant::registry::CompressorSpec;
+    use kashinflow::serve::{FleetCluster, JobSpec, Policy};
+
+    let n = 1024;
+    let job_rounds = 200usize;
+    let epoch = 8usize;
+    let warmup_epochs = 6usize;
+    let measured_epochs = 10usize;
+    // Four single-worker tenants over a two-fleet cluster: the epoch
+    // path (barrier grant pass → deque refill → persistent pool with
+    // stealing → accounting fold) must be allocation-free end to end.
+    let specs = vec![
+        JobSpec::new("w-ndsc-dith", CompressorSpec::parse("ndsc-dith").unwrap(), 1.0, n, job_rounds, 1),
+        JobSpec::new("x-sd", CompressorSpec::parse("sd").unwrap(), 0.5, n, job_rounds, 2),
+        JobSpec::new("y-ndsc-def", CompressorSpec::parse("ndsc").unwrap(), 2.0, n, job_rounds, 3)
+            .with_def_feedback(),
+        JobSpec::new("z-dith", CompressorSpec::parse("ndsc-dith").unwrap(), 0.5, n, job_rounds, 4),
+    ];
+    let tenants = specs.len();
+    let mut cluster = FleetCluster::new(2, 1 << 24, Policy::Drr);
+    for s in specs {
+        cluster.submit(s).expect("ample budget admits all tenants");
+    }
+    // Warm-up epochs spawn the persistent pool threads (thread spawn
+    // allocates) and size every slot's grant vector and per-fleet deque
+    // buffer; the same epoch length afterwards reuses all of it.
+    for _ in 0..warmup_epochs {
+        cluster.run_epoch(epoch);
+    }
+    for i in 0..measured_epochs {
+        let before = alloc_count();
+        let served = cluster.run_epoch(epoch);
+        let grew = alloc_count() - before;
+        assert_eq!(
+            served,
+            tenants * epoch,
+            "every tenant must be granted every round of the epoch"
+        );
+        assert_eq!(
+            grew,
+            0,
+            "work-stealing cluster epoch {i} performed {grew} heap allocations \
+             (allocation-free epoch contract violated; warm-up = {warmup_epochs} epochs)"
+        );
+    }
+    assert!(
+        (warmup_epochs + measured_epochs) * epoch < job_rounds,
+        "no job may finalize inside the measured window"
+    );
+}
+
 /// One test fn on purpose: all phases read the global counter, and the
 /// libtest harness runs separate `#[test]`s on concurrent threads.
 #[test]
@@ -243,4 +300,5 @@ fn zero_steady_state_allocations() {
     coordinator_level_zero_allocs();
     engine_level_zero_allocs();
     serve_level_zero_allocs();
+    serve_cluster_epoch_zero_allocs();
 }

@@ -21,6 +21,10 @@
 //!   survive the move.
 //! * **QoS** — weighted classes bias service toward gold without ever
 //!   starving bronze out of its reserved budget slice.
+//! * **Epoch executor** — the work-stealing epoch path (`run_epoch` /
+//!   `run_async`) is bit-identical to the lockstep cluster: per-job
+//!   traces, deficit counters, adaptive rungs and the full DRR/QoS
+//!   accounting agree field-for-field at any epoch chunking.
 
 mod common;
 
@@ -474,6 +478,142 @@ fn qos_classes_bias_service_without_starving_bronze() {
     assert!(gold >= 3 * bronze, "gold ({gold}) should far outpace bronze ({bronze})");
     // Sanity: the budget can't have served more than 2 cost-64 jobs/round.
     assert!(gold + bronze <= 2 * window);
+}
+
+#[test]
+fn async_epoch_serve_is_bit_identical_to_lockstep() {
+    // The PR-8 tentpole claim: arbitrating E rounds of grants at a
+    // barrier and executing them on the work-stealing pool yields
+    // *exactly* the lockstep cluster's behaviour — per-job traces,
+    // scheduler state and round counts — no matter how the horizon is
+    // chunked into epochs or how the pool interleaves the work.
+    let n = 24;
+    let rounds = 30;
+    for budget in [1usize << 24, 128] {
+        let mut lockstep = FleetCluster::new(4, budget, Policy::Drr);
+        let mut epoch = FleetCluster::new(4, budget, Policy::Drr);
+        let gids: Vec<_> =
+            eight_tenants(n, rounds).into_iter().map(|s| lockstep.submit(s).unwrap()).collect();
+        let egids: Vec<_> =
+            eight_tenants(n, rounds).into_iter().map(|s| epoch.submit(s).unwrap()).collect();
+        assert_eq!(gids, egids, "identical submissions must place identically");
+
+        // Mid-flight checkpoint: 24 lockstep rounds vs the same 24 as
+        // unevenly chunked epochs. The schedulers must agree exactly
+        // while deficits and partial progress are still in flight.
+        for _ in 0..24 {
+            lockstep.run_round();
+        }
+        for chunk in [1usize, 5, 10, 8] {
+            epoch.run_epoch(chunk);
+        }
+        assert_eq!(lockstep.round(), epoch.round());
+        for (i, &gid) in gids.iter().enumerate() {
+            assert_eq!(
+                lockstep.state(gid),
+                epoch.state(gid),
+                "budget {budget}: job {i} state diverged mid-flight"
+            );
+            assert_eq!(
+                lockstep.deficit_bits(gid),
+                epoch.deficit_bits(gid),
+                "budget {budget}: job {i} banked deficit diverged mid-flight"
+            );
+            assert_eq!(
+                lockstep.job(gid).unwrap().rounds_done(),
+                epoch.job(gid).unwrap().rounds_done(),
+                "budget {budget}: job {i} progress diverged mid-flight"
+            );
+        }
+
+        // Finish both and compare whole traces bitwise.
+        lockstep.run(rounds * 64);
+        epoch.run_async(rounds * 64, 7);
+        for (i, &gid) in gids.iter().enumerate() {
+            assert_eq!(epoch.state(gid), Some(JobState::Finished), "epoch job {i} must finish");
+            assert_trace_bit_identical(
+                epoch.job(gid).unwrap().trace(),
+                lockstep.job(gid).unwrap().trace(),
+                &format!("epoch vs lockstep (budget {budget}) job {i}"),
+            );
+        }
+        // Stealing is the epoch executor's prerogative; the lockstep
+        // path must never report any.
+        assert_eq!(lockstep.metrics().stolen_grants, 0);
+    }
+}
+
+#[test]
+fn work_stealing_epoch_accounting_identity_under_scarce_budget() {
+    // The DRR/QoS ledger is part of the bit-identity contract: under a
+    // scarce budget with the adaptive policy — banked deficits, rung
+    // downgrades and QoS reservations all in play — the epoch
+    // executor's accounting must match lockstep field-for-field, both
+    // mid-flight and at the end.
+    let n = 24;
+    let rounds = 60;
+    let tenants = || {
+        eight_tenants(n, rounds).into_iter().enumerate().map(|(i, s)| match i % 3 {
+            0 => s.with_qos(QosClass::Gold),
+            1 => s.with_qos(QosClass::Bronze),
+            _ => s,
+        })
+    };
+    let mut lockstep = FleetCluster::new(4, 128, Policy::DrrAdaptive);
+    let mut epoch = FleetCluster::new(4, 128, Policy::DrrAdaptive);
+    let gids: Vec<_> = tenants().map(|s| lockstep.submit(s).unwrap()).collect();
+    for s in tenants() {
+        epoch.submit(s).unwrap();
+    }
+
+    let assert_ledgers_match = |lockstep: &FleetCluster, epoch: &FleetCluster, when: &str| {
+        for i in 0..lockstep.fleet_count() {
+            let (a, b) = (lockstep.fleet(i).metrics(), epoch.fleet(i).metrics());
+            assert_eq!(a.fleet_rounds, b.fleet_rounds, "{when}: fleet {i} rounds");
+            assert_eq!(
+                a.spent_payload_bits, b.spent_payload_bits,
+                "{when}: fleet {i} spent payload"
+            );
+            // The per-job CSV covers every JobBits row: id, name,
+            // rounds_served, payload_bits, side_bits, bits/round.
+            assert_eq!(a.to_csv(), b.to_csv(), "{when}: fleet {i} per-job accounting");
+            for (x, y) in lockstep.fleet(i).job_ids().zip(epoch.fleet(i).job_ids()) {
+                assert_eq!(
+                    lockstep.fleet(i).deficit_bits(x),
+                    epoch.fleet(i).deficit_bits(y),
+                    "{when}: fleet {i} deficit"
+                );
+                assert_eq!(
+                    lockstep.fleet(i).last_rung(x),
+                    epoch.fleet(i).last_rung(y),
+                    "{when}: fleet {i} adaptive rung"
+                );
+            }
+        }
+        let (ma, mb) = (lockstep.metrics(), epoch.metrics());
+        assert_eq!(ma.served_job_rounds, mb.served_job_rounds, "{when}: cluster job rounds");
+        assert_eq!(ma.spent_payload_bits, mb.spent_payload_bits, "{when}: cluster payload");
+        assert_eq!(ma.served_jobs, mb.served_jobs, "{when}: served jobs");
+        assert_eq!(ma.queued_jobs, mb.queued_jobs, "{when}: queued jobs");
+    };
+
+    // Mid-flight, while the scarce budget keeps deficits banked.
+    for _ in 0..36 {
+        lockstep.run_round();
+    }
+    for chunk in [2usize, 3, 13, 1, 17] {
+        epoch.run_epoch(chunk);
+    }
+    assert_ledgers_match(&lockstep, &epoch, "mid-flight");
+
+    // And after both executors drain the whole population.
+    lockstep.run(rounds * 64);
+    epoch.run_async(rounds * 64, 9);
+    for (i, &gid) in gids.iter().enumerate() {
+        assert_eq!(lockstep.state(gid), Some(JobState::Finished), "lockstep job {i}");
+        assert_eq!(epoch.state(gid), Some(JobState::Finished), "epoch job {i}");
+    }
+    assert_ledgers_match(&lockstep, &epoch, "drained");
 }
 
 #[test]
