@@ -48,32 +48,44 @@
 //!
 //! Work items are **filled before the epoch starts and never pushed
 //! mid-epoch**, which degenerates the classic Chase–Lev deque to a
-//! fixed buffer with one atomic claim cursor (`top`) and one publish
-//! watermark (`bottom`): owners and thieves both claim by CAS on `top`,
-//! and an item is claimable only while `top < bottom`. The coordinator
+//! fixed buffer with one claim `cursor` and one publish watermark
+//! (`bottom`). Both pack a **generation** with their position
+//! (`gen << 32 | idx` in one `AtomicU64`): owners and thieves claim by
+//! CAS on the cursor, an item is claimable only while the two
+//! generations match *and* `idx < len`, and the item is read from the
+//! buffer only **after** the CAS is won — never before. The coordinator
 //! refills between epochs while workers may still be lagging inside the
 //! previous epoch's steal sweep, so refill order is load-bearing:
 //!
-//! 1. `bottom := 0` — unpublish (claims now fail),
-//! 2. `top := 0` — rewind the cursor,
-//! 3. rewrite the buffer (plain stores; nobody can claim),
-//! 4. `remaining := Σ items` (the completion counter, set **before**
-//!    any item becomes claimable so a early steal cannot underflow it),
-//! 5. `bottom := len` — publish (the SeqCst store releases the buffer
-//!    writes to any thief whose load of `bottom` observes it).
+//! 1. `cursor := (gen+1) << 32` — retire the old generation. The packed
+//!    value is fresh (the generation only ever grows), so a stale CAS
+//!    from the previous epoch can never succeed again — there is no ABA
+//!    window even though every epoch's indices restart at 0. New claims
+//!    cannot succeed either: `bottom` still carries the old generation,
+//!    so the generations mismatch.
+//! 2. rewrite the buffer (plain stores — safe because a worker reads
+//!    the buffer only after winning a CAS at matching generations,
+//!    impossible until step 4 publishes),
+//! 3. `remaining := Σ items` (the completion counter, set **before**
+//!    any item becomes claimable so an early steal cannot underflow it),
+//! 4. `bottom := (gen+1) << 32 | len` — publish (the SeqCst store
+//!    releases the buffer writes to any thief whose load observes it).
 //!
-//! A lagging thief that read the *old* cursor and the *new* watermark
-//! fails its CAS (the cursor moved under it) and retries with fresh
-//! values, so no stale item can ever be claimed twice; a thief that
-//! observes the new cursor and watermark simply joins the new epoch
-//! early, which is benign (each item still executes exactly once, and
-//! each execution decrements `remaining` exactly once). The coordinator
-//! parks on a condvar until `remaining == 0`, so completion is signaled
-//! by the counter — never by epoch number, which a lagging worker could
-//! report stale.
+//! Why the read-after-CAS is safe: winning a CAS at generation `g`
+//! proves the *next* refill has not begun (its step 1 would have bumped
+//! the cursor's generation past `g`, and the full 64-bit value never
+//! repeats), and it cannot begin until this epoch completes — the
+//! coordinator parks on a condvar until `remaining == 0`, and the
+//! claimed item has not decremented `remaining` yet. So the buffer is
+//! stable, holds generation `g`'s items, and `idx < len == buf.len()`
+//! is in bounds. A thief that observes the new cursor and watermark
+//! simply joins the new epoch early, which is benign (each item still
+//! executes exactly once, and each execution decrements `remaining`
+//! exactly once). Completion is signaled by the counter — never by
+//! epoch number, which a lagging worker could report stale.
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicIsize, AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::SeqCst};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::channel::ChannelPools;
@@ -131,16 +143,24 @@ fn place_hash(name: &str, seed: u64) -> u64 {
 /// makes coordinator refills safe against lagging thieves).
 struct Deque {
     buf: UnsafeCell<Vec<WorkItem>>,
-    /// Claim cursor: the next unclaimed index. Owners and thieves CAS it.
-    top: AtomicIsize,
-    /// Publish watermark: items `top..bottom` are claimable. Written only
-    /// by the coordinator between epochs.
-    bottom: AtomicIsize,
+    /// Claim cursor: `generation << 32 | next unclaimed index`. Owners
+    /// and thieves CAS it; the coordinator bumps the generation at each
+    /// refill, so the packed value never repeats and a stale CAS from a
+    /// previous epoch can never succeed (no ABA).
+    cursor: AtomicU64,
+    /// Publish watermark: `generation << 32 | len`. Items are claimable
+    /// only while the cursor's generation matches. Written only by the
+    /// coordinator between epochs.
+    bottom: AtomicU64,
 }
 
-// SAFETY: `buf` is written only by the coordinator while unpublished
-// (`bottom == 0`), and read by workers only at indices they won the CAS
-// for under a published watermark whose SeqCst store released the
+/// Low half of a packed cursor/watermark: the index (or length).
+const DEQUE_IDX_MASK: u64 = 0xffff_ffff;
+
+// SAFETY: `buf` is written only by the coordinator while the current
+// generation is unpublished (`bottom` carries the previous one), and
+// read by workers only at indices they won the claim CAS for at
+// matching generations, after the publish store released the buffer
 // writes — the module-docs protocol.
 unsafe impl Sync for Deque {}
 
@@ -148,26 +168,56 @@ impl Deque {
     fn new() -> Self {
         Deque {
             buf: UnsafeCell::new(Vec::new()),
-            top: AtomicIsize::new(0),
-            bottom: AtomicIsize::new(0),
+            cursor: AtomicU64::new(0),
+            bottom: AtomicU64::new(0),
         }
     }
 
     /// Claim the next unexecuted item, or `None` if this deque is
-    /// drained. `top < bottom` implies `top` is in bounds because the
-    /// coordinator publishes `bottom == buf.len()`.
+    /// drained (or mid-refill: the generations mismatch until the
+    /// coordinator publishes).
     fn claim(&self) -> Option<WorkItem> {
         loop {
-            let t = self.top.load(SeqCst);
+            let c = self.cursor.load(SeqCst);
             let b = self.bottom.load(SeqCst);
-            if t >= b {
+            if (c >> 32) != (b >> 32) || (c & DEQUE_IDX_MASK) >= (b & DEQUE_IDX_MASK) {
                 return None;
             }
-            let item = unsafe { (*self.buf.get())[t as usize] };
-            if self.top.compare_exchange(t, t + 1, SeqCst, SeqCst).is_ok() {
-                return Some(item);
+            if self.cursor.compare_exchange(c, c + 1, SeqCst, SeqCst).is_ok() {
+                // SAFETY: the won CAS proves the next refill has not
+                // begun (it would have bumped the generation, and the
+                // packed value never repeats) and it cannot begin until
+                // this item decrements `remaining`, so the buffer is
+                // stable and `idx < len == buf.len()` is in bounds.
+                return Some(unsafe { (*self.buf.get())[(c & DEQUE_IDX_MASK) as usize] });
             }
         }
+    }
+
+    /// Refill steps 1–2 (module docs): retire the old generation — after
+    /// this no stale or new claim can succeed until [`Deque::publish`] —
+    /// and hand the coordinator the buffer to rewrite.
+    ///
+    /// # Safety
+    /// Single writer only (the coordinator between epochs); must be
+    /// followed by [`Deque::publish`] before items are expected to run.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn begin_refill(&self) -> &mut Vec<WorkItem> {
+        let gen = (self.cursor.load(SeqCst) >> 32) + 1;
+        self.cursor.store(gen << 32, SeqCst);
+        unsafe { &mut *self.buf.get() }
+    }
+
+    /// Refill step 4: publish the rewritten buffer under the generation
+    /// [`Deque::begin_refill`] installed, making its items claimable.
+    fn publish(&self) {
+        // No claim can have touched the cursor since `begin_refill`
+        // (generation mismatch), so it still reads `gen << 32`.
+        let gen = self.cursor.load(SeqCst) >> 32;
+        // SAFETY: still single-writer; only the length is read.
+        let n = unsafe { (*self.buf.get()).len() } as u64;
+        debug_assert!(n <= DEQUE_IDX_MASK, "epoch item count must fit the 32-bit index half");
+        self.bottom.store((gen << 32) | n, SeqCst);
     }
 }
 
@@ -437,17 +487,15 @@ impl FleetCluster {
                 .pool
                 .get_or_insert_with(|| EpochPool::spawn(self.fleets.len(), self.pools.clone()));
             let shared = &pool.shared;
-            // Refill every deque unpublished (bottom = 0) first; items
-            // become claimable only after `remaining` is set, per the
-            // module-docs protocol.
+            // Refill under a fresh generation first; items become
+            // claimable only after `remaining` is set and every deque
+            // publishes, per the module-docs protocol.
             let mut total_items = 0usize;
             for (i, f) in self.fleets.iter_mut().enumerate() {
                 let d = &shared.deques[i];
-                d.bottom.store(0, SeqCst);
-                d.top.store(0, SeqCst);
-                // SAFETY: unpublished — no worker can claim, and lagging
-                // thieves never read `buf` without a published watermark.
-                let buf = unsafe { &mut *d.buf.get() };
+                // SAFETY: the coordinator is the single refill writer,
+                // and `publish` follows below before the epoch starts.
+                let buf = unsafe { d.begin_refill() };
                 buf.clear();
                 f.collect_epoch_items(buf);
                 total_items += buf.len();
@@ -455,9 +503,7 @@ impl FleetCluster {
             if total_items > 0 {
                 shared.remaining.store(total_items, SeqCst);
                 for d in &shared.deques {
-                    // SAFETY: still single-writer; only the length is read.
-                    let n = unsafe { (*d.buf.get()).len() };
-                    d.bottom.store(n as isize, SeqCst);
+                    d.publish();
                 }
                 {
                     let mut st = shared.state.lock().unwrap();
@@ -511,24 +557,31 @@ impl FleetCluster {
     /// set by one, rebalancing live jobs over the migration path (which
     /// preserves traces bit-for-bit). Returns whether a resize happened.
     ///
-    /// * **Grow** (`queued ≥ HIGH × active`, room left): activate the
-    ///   next fleet and pull jobs off the heaviest active fleets until
-    ///   the newcomer is within one job of them.
+    /// * **Grow** (`queued ≥ HIGH × active`, room left): rebalance jobs
+    ///   off the heaviest active fleets onto the next fleet until it is
+    ///   within one job of them, then activate it. The resize commits
+    ///   only after the rebalance succeeds, so an `Err` mid-migration
+    ///   leaves the active set and the event counter untouched (any
+    ///   already-completed migrations are trace-preserving no-ops to
+    ///   retry from).
     /// * **Shrink** (`queued ≤ LOW × active`, more than one active):
     ///   drain the last active fleet onto the lightest survivors and
     ///   deactivate it.
+    ///
+    /// Both branches balance on [`JobServer::lodged_jobs`]
+    /// (Running + Paused) — the same population the migration candidate
+    /// filter and [`FleetCluster::queued_jobs`] count.
     pub fn autoscale(&mut self) -> Result<bool, ServeError> {
         let queued = self.queued_jobs() as usize;
         let active = self.active_fleets;
         if active < self.fleets.len() && queued >= config::AUTOSCALE_HIGH_QUEUED_PER_FLEET * active
         {
             let newcomer = active;
-            self.active_fleets = active + 1;
             loop {
                 let heaviest = (0..newcomer)
-                    .max_by_key(|&i| self.fleets[i].live_jobs())
+                    .max_by_key(|&i| self.fleets[i].lodged_jobs())
                     .expect("grow always has an active fleet");
-                if self.fleets[heaviest].live_jobs() <= self.fleets[newcomer].live_jobs() + 1 {
+                if self.fleets[heaviest].lodged_jobs() <= self.fleets[newcomer].lodged_jobs() + 1 {
                     break;
                 }
                 let gid = self
@@ -542,9 +595,10 @@ impl FleetCluster {
                             )
                     })
                     .map(|p| p.gid)
-                    .expect("heaviest fleet reported live jobs");
+                    .expect("heaviest fleet reported lodged jobs");
                 self.migrate(gid, newcomer)?;
             }
+            self.active_fleets = active + 1;
             self.autoscale_events += 1;
             return Ok(true);
         }
@@ -563,7 +617,7 @@ impl FleetCluster {
                 .map(|p| p.gid)
             {
                 let lightest = (0..retiring)
-                    .min_by_key(|&i| self.fleets[i].live_jobs())
+                    .min_by_key(|&i| self.fleets[i].lodged_jobs())
                     .expect("shrink keeps at least one active fleet");
                 self.migrate(gid, lightest)?;
             }

@@ -299,6 +299,19 @@ impl JobServer {
         self.slots.iter().filter(|s| s.state == JobState::Running).count()
     }
 
+    /// Jobs currently occupying a slot, running **or** parked — the
+    /// migration-eligible population the cluster autoscaler balances
+    /// (matches [`FleetCluster::queued_jobs`]'s per-job filter, unlike
+    /// [`JobServer::live_jobs`] which counts `Running` only).
+    ///
+    /// [`FleetCluster::queued_jobs`]: crate::serve::cluster::FleetCluster::queued_jobs
+    pub fn lodged_jobs(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s.state, JobState::Running | JobState::Paused))
+            .count()
+    }
+
     /// All submitted job ids, in submission order.
     pub fn job_ids(&self) -> impl Iterator<Item = JobId> + '_ {
         self.slots.iter().map(|s| s.id)
