@@ -5,17 +5,25 @@
 //! served/queued/rejected/migrated breakdown), and the skewed-mix
 //! straggler case: the same 1-big + 1023-small tenant population timed
 //! under the lockstep per-round barrier executor and the work-stealing
-//! epoch executor, with the same-run speedup ratio in the JSON. Saves
-//! `BENCH_serve.json` with the per-case stats **and** the measured
-//! aggregate job-rounds/sec (the serving layer's headline throughput
-//! number), so regressions diff mechanically across PRs.
+//! epoch executor, with the same-run speedup ratio in the JSON. Two
+//! plan-cache rows complete the set: an admission storm (1024 same-spec
+//! submits of a heavy orthonormal-frame plan, cached vs uncached) and a
+//! migration churn (512 checkpoint→restore moves across a 4-fleet
+//! cluster, cache on vs off), each carrying its same-run
+//! `ratio_vs_uncached`. Saves `BENCH_serve.json` with the per-case
+//! stats **and** the measured aggregate job-rounds/sec (the serving
+//! layer's headline throughput number), so regressions diff
+//! mechanically across PRs.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use kashinflow::exp::serve::job_mix;
 use kashinflow::quant::budget_bits;
 use kashinflow::quant::registry::CompressorSpec;
-use kashinflow::serve::{checkpoint, FleetCluster, Job, JobServer, JobSpec, Policy, QosClass};
+use kashinflow::serve::{
+    checkpoint, FleetCluster, Job, JobServer, JobSpec, PlanCache, Policy, QosClass,
+};
 use kashinflow::testkit::bench::{black_box, Bencher};
 
 const JOBS: usize = 8;
@@ -290,6 +298,141 @@ fn main() {
             extra: format!(
                 "{shape}, \"executor\": \"steal\", \"epoch_len\": {EPOCH_LEN}, \
                  \"stolen_grants\": {stolen}, \"ratio_vs_lockstep\": {ratio}"
+            ),
+        });
+    }
+
+    // Admission storm (the plan-cache acceptance number): 1024 submits
+    // of the same heavy-plan spec. ndsc-ortho grows a dense Haar
+    // orthonormal frame per worker per ladder level, so ladder build
+    // dominates admission; with the cache installed every submit after
+    // the first reuses one shared plan. Same process, same spec stream
+    // — the ratio isolates pure ladder-rebuild work. The horizon is
+    // short so the (identical on both sides) trace reserve stays small.
+    {
+        const STORM: usize = 1024;
+        let storm_spec = |i: usize| {
+            JobSpec::new(
+                format!("storm{i}"),
+                CompressorSpec::parse("ndsc-ortho").expect("canonical"),
+                1.0,
+                64,
+                8,
+                7,
+            )
+            .with_workers(2)
+        };
+        let mut uncached = JobServer::new(1 << 30, Policy::Drr);
+        let t0 = Instant::now();
+        for i in 0..STORM {
+            black_box(uncached.submit(storm_spec(i)).expect("ample budget admits the storm"));
+        }
+        let cold = t0.elapsed();
+        drop(uncached);
+
+        let cache = Arc::new(PlanCache::with_default_cap());
+        let mut cached = JobServer::new(1 << 30, Policy::Drr);
+        cached.set_plan_cache(Some(cache.clone()));
+        let t0 = Instant::now();
+        for i in 0..STORM {
+            black_box(cached.submit(storm_spec(i)).expect("ample budget admits the storm"));
+        }
+        let warm = t0.elapsed();
+        let hits = cache.hits();
+        let ratio = cold.as_secs_f64() / warm.as_secs_f64().max(1e-12);
+        println!(
+            "serve/admit-storm-{STORM}-ndsc-ortho-n64          uncached {:>9.0} vs cached \
+             {:>9.0} admissions/s (ratio {ratio:.2}x, {hits} cache hits)",
+            STORM as f64 / cold.as_secs_f64().max(1e-12),
+            STORM as f64 / warm.as_secs_f64().max(1e-12),
+        );
+        rows.push(ThroughputRow {
+            case: format!("serve/admit-storm-{STORM}-uncached"),
+            policy: Policy::Drr,
+            jobs: STORM,
+            rounds_per_sec: STORM as f64 / cold.as_secs_f64().max(1e-12),
+            median_ns: cold.as_nanos() / STORM as u128,
+            extra: ", \"cache_hits\": 0".to_string(),
+        });
+        rows.push(ThroughputRow {
+            case: format!("serve/admit-storm-{STORM}-cached"),
+            policy: Policy::Drr,
+            jobs: STORM,
+            rounds_per_sec: STORM as f64 / warm.as_secs_f64().max(1e-12),
+            median_ns: warm.as_nanos() / STORM as u128,
+            extra: format!(", \"cache_hits\": {hits}, \"ratio_vs_uncached\": {ratio}"),
+        });
+    }
+
+    // Migration churn (the autoscaler's hot path): 256 same-generative-
+    // spec tenants on a 4-fleet cluster, then 512 checkpoint→restore
+    // moves, each rebuilding the ladder when the cache is off and
+    // hitting the admission-time plan when it is on. Cache-off runs
+    // first so the shared-process comparison is cold→warm.
+    {
+        const CHURN_TENANTS: usize = 256;
+        const CHURN_MIGRATIONS: usize = 512;
+        let churn_spec = |i: usize| {
+            JobSpec::new(
+                format!("churn{i}"),
+                CompressorSpec::parse("ndsc-ortho").expect("canonical"),
+                1.0,
+                64,
+                64,
+                7,
+            )
+            .with_workers(2)
+        };
+        let run_churn = |cache_on: bool| -> (f64, u64, u64) {
+            let mut cluster = FleetCluster::new(FLEETS, 1 << 30, Policy::Drr);
+            cluster.set_plan_cache_enabled(cache_on);
+            let gids: Vec<_> = (0..CHURN_TENANTS)
+                .map(|i| cluster.submit(churn_spec(i)).expect("ample budget admits the churn"))
+                .collect();
+            cluster.run_round();
+            let t0 = Instant::now();
+            let mut done = 0usize;
+            'churn: loop {
+                for &gid in &gids {
+                    if done == CHURN_MIGRATIONS {
+                        break 'churn;
+                    }
+                    let from = cluster.fleet_of(gid).unwrap_or(0);
+                    cluster.migrate(gid, (from + 1) % FLEETS).expect("live jobs migrate");
+                    done += 1;
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let m = cluster.metrics();
+            (done as f64 / secs, m.plan_cache_hits, m.migrated_jobs)
+        };
+        let (cold_rps, _, _) = run_churn(false);
+        let (warm_rps, hits, migrated) = run_churn(true);
+        let ratio = warm_rps / cold_rps.max(1e-9);
+        println!(
+            "serve/migrate-churn-{FLEETS}fleets-{CHURN_TENANTS}tenants     uncached \
+             {cold_rps:>9.0} vs cached {warm_rps:>9.0} migrations/s \
+             (ratio {ratio:.2}x, {hits} cache hits, {migrated} migrated)"
+        );
+        rows.push(ThroughputRow {
+            case: format!("serve/migrate-churn-{FLEETS}fleets-{CHURN_TENANTS}tenants-uncached"),
+            policy: Policy::Drr,
+            jobs: CHURN_TENANTS,
+            rounds_per_sec: cold_rps,
+            median_ns: 0,
+            extra: format!(
+                ", \"fleets\": {FLEETS}, \"migrations\": {CHURN_MIGRATIONS}, \"cache_hits\": 0"
+            ),
+        });
+        rows.push(ThroughputRow {
+            case: format!("serve/migrate-churn-{FLEETS}fleets-{CHURN_TENANTS}tenants-cached"),
+            policy: Policy::Drr,
+            jobs: CHURN_TENANTS,
+            rounds_per_sec: warm_rps,
+            median_ns: 0,
+            extra: format!(
+                ", \"fleets\": {FLEETS}, \"migrations\": {CHURN_MIGRATIONS}, \
+                 \"cache_hits\": {hits}, \"ratio_vs_uncached\": {ratio}"
             ),
         });
     }

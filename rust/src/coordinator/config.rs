@@ -92,6 +92,31 @@ pub const AUTOSCALE_HIGH_QUEUED_PER_FLEET: usize = 8;
 /// watermark.
 pub const AUTOSCALE_LOW_QUEUED_PER_FLEET: usize = 2;
 
+/// Byte cap on the cluster-wide codec-plan cache
+/// ([`crate::serve::plancache::PlanCache`]): the sum of
+/// `Compressor::resident_bytes` across cached ladders is kept at or
+/// below this figure by LRU eviction. Eviction only drops the cache's
+/// own `Arc` — live jobs keep theirs — so the cap bounds *extra*
+/// memory the cache pins, not job memory. 64 MiB holds hundreds of
+/// orthonormal-frame ladders at the bench shapes while staying
+/// irrelevant next to a single `n = 2^20` tenant's iterate state.
+pub const PLAN_CACHE_MAX_BYTES: usize = 64 << 20;
+
+/// Largest tenant dimension eligible for the batched small-tenant
+/// epoch executor: grant groups with `n` at or below this (and no
+/// worker fan-out threads) are coalesced into one contiguous panel per
+/// work item, amortizing per-grant deque/claim/steal fixed costs that
+/// dominate tiny jobs. Kept below [`PARALLEL_DECODE_MIN_DIM`] so a
+/// batched panel never straddles the inline/parallel decode boundary.
+pub const EPOCH_BATCH_MAX_DIM: usize = 4096;
+
+/// Cap on how many same-`(n, workers)` grant groups one batched panel
+/// may hold. A panel is the unit of work stealing, so an unbounded
+/// panel would re-create the straggler problem the epoch executor
+/// exists to kill; 64 amortizes the fixed costs to noise while leaving
+/// a 1024-lightweight epoch split across enough items to steal.
+pub const EPOCH_BATCH_MAX_GROUPS: usize = 64;
+
 /// Compression scheme selector (the CLI surface of [`crate::quant`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SchemeKind {

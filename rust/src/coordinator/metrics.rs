@@ -204,6 +204,16 @@ pub struct ClusterMetrics {
     pub served_job_rounds: u64,
     /// Measured payload bits spent across the whole cluster.
     pub spent_payload_bits: u64,
+    /// Codec-plan cache hits: ladders reused at admission, restore or
+    /// migration instead of regrown
+    /// ([`crate::serve::plancache::PlanCache`]).
+    pub plan_cache_hits: u64,
+    /// Codec-plan cache misses (ladder builds routed through the
+    /// cache; uncacheable schemes bypass and count in neither column).
+    pub plan_cache_misses: u64,
+    /// Bytes of immutable plan state the cache currently pins, by true
+    /// `resident_bytes` accounting (≤ the configured LRU cap).
+    pub plan_cache_resident_bytes: u64,
     /// One accounting snapshot per member fleet.
     pub fleets: Vec<FleetMetrics>,
 }
@@ -243,6 +253,9 @@ mod tests {
             autoscale_events: 1,
             served_job_rounds: 9,
             spent_payload_bits: 400,
+            plan_cache_hits: 4,
+            plan_cache_misses: 2,
+            plan_cache_resident_bytes: 1024,
             fleets: vec![FleetMetrics::default(), FleetMetrics::default()],
         };
         let csv = m.to_csv();

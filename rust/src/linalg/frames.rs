@@ -85,6 +85,12 @@ pub trait Frame: Send + Sync {
     fn apply_inplace_reference(&self, x: &mut [f32], out: &mut [f32]) {
         self.apply_inplace(x, out);
     }
+    /// Heap bytes this frame keeps resident for its lifetime (sign
+    /// tables, row samples, dense matrices) — the true figure, not an
+    /// estimate, so the serve-layer plan cache can account cached
+    /// ladders against its byte cap. Every in-tree frame implements
+    /// this; no default, so a new frame cannot silently report zero.
+    fn resident_bytes(&self) -> usize;
 }
 
 // ---------------------------------------------------------------------------
@@ -210,6 +216,12 @@ impl Frame for HadamardFrame {
             *o = self.signs[r] * x[r];
         }
     }
+
+    /// `N` diagonal signs plus `n` sampled row indices.
+    fn resident_bytes(&self) -> usize {
+        self.signs.len() * std::mem::size_of::<f32>()
+            + self.rows.len() * std::mem::size_of::<usize>()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -291,6 +303,11 @@ impl Frame for OrthonormalFrame {
     fn apply(&self, x: &[f32], out: &mut [f32]) {
         matvec(&self.s, self.n, self.big_n, x, out);
     }
+
+    /// The dense row-major `n × N` matrix.
+    fn resident_bytes(&self) -> usize {
+        self.s.len() * std::mem::size_of::<f32>()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -369,6 +386,11 @@ impl Frame for SubGaussianFrame {
         tmp.extend_from_slice(y);
         cholesky_solve(&self.chol, self.n, tmp);
         matvec_t(&self.s, self.n, self.big_n, tmp, out);
+    }
+
+    /// Dense `n × N` matrix plus the cached `n × n` Cholesky factor.
+    fn resident_bytes(&self) -> usize {
+        (self.s.len() + self.chol.len()) * std::mem::size_of::<f32>()
     }
 }
 

@@ -103,6 +103,11 @@ impl Compressor for EmbeddedCompressor {
         // (Theorem 4's first step).
         self.inner.is_unbiased()
     }
+
+    /// The frame's tables plus whatever the nested codec holds.
+    fn resident_bytes(&self) -> usize {
+        self.frame.resident_bytes() + self.inner.resident_bytes()
+    }
 }
 
 #[cfg(test)]

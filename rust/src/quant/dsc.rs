@@ -416,6 +416,12 @@ impl Compressor for SubspaceCodec {
     fn is_unbiased(&self) -> bool {
         self.mode == CodecMode::Dithered
     }
+
+    /// The frame's tables plus the cached label; solver scratch is warm
+    /// state, not plan, and is excluded by contract.
+    fn resident_bytes(&self) -> usize {
+        self.frame.resident_bytes() + self.label.len()
+    }
 }
 
 /// DSC constructor (democratic embedding, deterministic quantizer).

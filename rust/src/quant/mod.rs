@@ -210,6 +210,20 @@ pub trait Compressor: Send + Sync {
     fn is_unbiased(&self) -> bool {
         false
     }
+
+    /// Heap bytes of **immutable plan state** this codec holds resident
+    /// for its lifetime — materialized frames, sign vectors, nested
+    /// codecs — as accounted by the serve-layer plan cache
+    /// ([`crate::serve::plancache::PlanCache`]) against its byte cap.
+    /// Scalar-configured schemes (sign, QSGD, top-k, …) own no such
+    /// state and inherit this `0` default; schemes wrapping a
+    /// [`crate::linalg::frames::Frame`] or a sign table override it
+    /// with the true figure. Warm scratch (solver buffers, workspaces)
+    /// is deliberately excluded: it is rebuilt on demand and not part
+    /// of the shared plan.
+    fn resident_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// Budget ceiling in payload bits for dimension `n` at rate `r`.

@@ -150,6 +150,11 @@ impl Compressor for Ratq {
         // clamp — same caveat as the original.
         true
     }
+
+    /// The `N`-entry rotation sign table.
+    fn resident_bytes(&self) -> usize {
+        self.signs.len() * std::mem::size_of::<f32>()
+    }
 }
 
 #[cfg(test)]

@@ -301,6 +301,27 @@ impl CompressorSpec {
         }
     }
 
+    /// Whether a built plan (the `levels × workers` codec ladder a
+    /// served job regrows from its seed) is **immutable after
+    /// construction** and therefore safe to share across jobs via the
+    /// serve-layer plan cache ([`crate::serve::plancache::PlanCache`]).
+    ///
+    /// Every scheme here is a pure function of `(spec, n, R, rng
+    /// stream)` at *build* time; what disqualifies a scheme is mutable
+    /// *runtime* state inside the codec object. The only offender is
+    /// DQGD: [`crate::quant::dqgd::DqgdRange`] carries a per-codec
+    /// round counter (its range-refinement schedule) that advances on
+    /// every `compress`, so two jobs sharing one instance would
+    /// interleave each other's schedules and diverge from the solo
+    /// trace. DQGD jobs therefore always take a fresh deterministic
+    /// build — bit-identical anyway, just not shared. Solver scratch
+    /// behind a `Mutex` (subspace/embedded codecs) does **not**
+    /// disqualify: it is deterministic warm scratch with no
+    /// round-to-round memory.
+    pub fn plan_cacheable(&self) -> bool {
+        !matches!(*self, CompressorSpec::Dqgd { .. })
+    }
+
     /// Canonical spec name (round-trips through [`CompressorSpec::parse`]).
     pub fn name(&self) -> String {
         match *self {

@@ -53,6 +53,7 @@ use crate::opt::projection::Domain;
 use crate::opt::{IterRecord, Trace};
 use crate::quant::registry::CompressorSpec;
 use crate::serve::job::{FeedbackKind, Job, JobSpec, ProblemSpec};
+use crate::serve::plancache::PlanCache;
 use crate::serve::scheduler::QosClass;
 
 /// Magic bytes opening every snapshot (version-tagged family).
@@ -431,6 +432,19 @@ pub fn restore(bytes: &[u8]) -> io::Result<Job> {
 /// trailing garbage is [`io::ErrorKind::InvalidData`]. A version-1
 /// snapshot (pre-trailer) restores with [`SchedTrailer::default`].
 pub fn restore_with_sched(bytes: &[u8]) -> io::Result<(Job, SchedTrailer)> {
+    restore_with_sched_cached(bytes, None)
+}
+
+/// [`restore_with_sched`] with an optional codec-plan cache: the
+/// rebuilt job's ladder comes from the cache when the scheme's plan is
+/// shareable — the dominant cost of a restore (and therefore of a
+/// migration) for frame-backed schemes — and the overlaid dynamic
+/// state is untouched either way, so the restored trace is
+/// bit-identical to the uncached path.
+pub fn restore_with_sched_cached(
+    bytes: &[u8],
+    cache: Option<&PlanCache>,
+) -> io::Result<(Job, SchedTrailer)> {
     let mut r: &[u8] = bytes;
     let mut magic = [0u8; 8];
     ck(r.read_exact(&mut magic))?;
@@ -499,8 +513,8 @@ pub fn restore_with_sched(bytes: &[u8]) -> io::Result<(Job, SchedTrailer)> {
         qos: QosClass::default(),
         seed,
     };
-    let mut job =
-        Job::build(spec).map_err(|e| invalid(format!("checkpoint spec rejected: {e}")))?;
+    let mut job = Job::build_cached(spec, cache)
+        .map_err(|e| invalid(format!("checkpoint spec rejected: {e}")))?;
     // --- dynamic state ---
     let t = checked_len_capped(r_u64(&mut r)?, "round index", MAX_ROUNDS as u64)?;
     if t > rounds {
@@ -568,8 +582,9 @@ pub fn restore_with_sched(bytes: &[u8]) -> io::Result<(Job, SchedTrailer)> {
 // ---------------------------------------------------------------------------
 
 /// 64-bit FNV-1a — the base snapshot's fingerprint inside a delta
-/// record (same constants as the cluster's placement hash).
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// record (same constants as the cluster's placement hash); also the
+/// plan cache's spec-fingerprint primitive.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;
@@ -755,6 +770,17 @@ pub fn restore_delta(delta: &[u8], base: &[u8]) -> io::Result<Job> {
 /// v1/v2 validation path; the delta must not be behind its base (a
 /// stale delta never silently rolls a job back).
 pub fn restore_delta_with_sched(delta: &[u8], base: &[u8]) -> io::Result<(Job, SchedTrailer)> {
+    restore_delta_with_sched_cached(delta, base, None)
+}
+
+/// [`restore_delta_with_sched`] with an optional codec-plan cache for
+/// the base rebuild (see [`restore_with_sched_cached`]); validation and
+/// the overlay are byte-for-byte the uncached path.
+pub fn restore_delta_with_sched_cached(
+    delta: &[u8],
+    base: &[u8],
+    cache: Option<&PlanCache>,
+) -> io::Result<(Job, SchedTrailer)> {
     if delta.len() < 16 {
         return Err(invalid("truncated delta snapshot"));
     }
@@ -782,7 +808,7 @@ pub fn restore_delta_with_sched(delta: &[u8], base: &[u8]) -> io::Result<(Job, S
     }
     // The fingerprint matched: restore the base through the full v1/v2
     // validation path, then overlay the delta on top.
-    let (mut job, _base_sched) = restore_with_sched(base)?;
+    let (mut job, _base_sched) = restore_with_sched_cached(base, cache)?;
     let base_records =
         checked_len_capped(r_u64(&mut r)?, "base record count", MAX_ROUNDS as u64 + 1)?;
     if job.trace().records.len() != base_records {

@@ -92,6 +92,7 @@ use crate::coordinator::channel::ChannelPools;
 use crate::coordinator::config;
 use crate::coordinator::metrics::ClusterMetrics;
 use crate::serve::fleet::{self, JobId, JobServer, JobState, ServeError, WorkItem};
+use crate::serve::plancache::PlanCache;
 use crate::serve::job::{Job, JobSpec};
 use crate::serve::scheduler::Policy;
 
@@ -124,6 +125,11 @@ pub struct FleetCluster {
     /// until the autoscaler re-activates them.
     active_fleets: usize,
     autoscale_events: u64,
+    /// The cluster-wide codec-plan cache, shared by every member fleet.
+    /// Admission of a same-spec tenant, checkpoint restore, and — the
+    /// heaviest caller — autoscaler migration all reuse built ladders
+    /// through it instead of regrowing frames.
+    plan_cache: Arc<PlanCache>,
 }
 
 /// FNV-1a over the placement key — stable across processes (no
@@ -342,11 +348,13 @@ impl FleetCluster {
     pub fn new(fleets: usize, budget_bits_per_fleet_round: usize, policy: Policy) -> Self {
         let k = fleets.max(1);
         let pools = Arc::new(ChannelPools::new(8));
+        let plan_cache = Arc::new(PlanCache::with_default_cap());
         let fleets = (0..k)
             .map(|_| {
                 let mut f =
                     JobServer::with_pools(budget_bits_per_fleet_round, policy, pools.clone());
                 f.enable_fanout(k);
+                f.set_plan_cache(Some(Arc::clone(&plan_cache)));
                 f
             })
             .collect();
@@ -361,6 +369,32 @@ impl FleetCluster {
             migrated: 0,
             active_fleets: k,
             autoscale_events: 0,
+            plan_cache,
+        }
+    }
+
+    /// The cluster-wide codec-plan cache (hit/miss/resident gauges).
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plan_cache
+    }
+
+    /// Enable or disable plan-cache consultation across every member
+    /// fleet. Off clears each fleet's cache handle so admission,
+    /// restore and migration build ladders fresh — the uncached
+    /// baseline the bit-identity tests and `bench_serve` ratio rows
+    /// compare against. The cluster's cache (and its counters) survive
+    /// the toggle; re-enabling re-installs the same shared instance.
+    pub fn set_plan_cache_enabled(&mut self, on: bool) {
+        for f in &mut self.fleets {
+            f.set_plan_cache(if on { Some(Arc::clone(&self.plan_cache)) } else { None });
+        }
+    }
+
+    /// Toggle batched-panel emission on every member fleet (on by
+    /// default; see [`JobServer::set_epoch_batching`]).
+    pub fn set_epoch_batching(&mut self, on: bool) {
+        for f in &mut self.fleets {
+            f.set_epoch_batching(on);
         }
     }
 
@@ -735,6 +769,9 @@ impl FleetCluster {
             autoscale_events: self.autoscale_events,
             served_job_rounds: self.fleets.iter().map(|f| f.metrics().served_job_rounds()).sum(),
             spent_payload_bits: self.fleets.iter().map(|f| f.metrics().spent_payload_bits).sum(),
+            plan_cache_hits: self.plan_cache.hits(),
+            plan_cache_misses: self.plan_cache.misses(),
+            plan_cache_resident_bytes: self.plan_cache.resident_bytes(),
             fleets: self.fleets.iter().map(|f| f.metrics().clone()).collect(),
         }
     }
@@ -879,6 +916,149 @@ mod tests {
             assert_eq!(c.state(gid), Some(JobState::Finished), "job {gid} lost in autoscaling");
             assert_eq!(c.job(gid).unwrap().trace().records.len(), 40);
         }
+    }
+
+    #[test]
+    fn deque_generations_gate_claims_across_refills() {
+        // Audit pin for the PR 8 refill protocol: a stale or mid-refill
+        // deque must never surrender an item, and each published
+        // generation's items are claimable exactly once, in order.
+        let dummy = |k: usize| WorkItem {
+            slots: std::ptr::null_mut(),
+            groups: std::ptr::null_mut(),
+            n_groups: k,
+        };
+        let d = Deque::new();
+        // Nothing refilled yet: generation 0 at length 0.
+        assert!(d.claim().is_none());
+        // SAFETY: single-threaded test — one writer, publish follows.
+        let buf = unsafe { d.begin_refill() };
+        buf.clear();
+        buf.extend([dummy(1), dummy(2), dummy(3)]);
+        // Refilled but unpublished: the cursor generation is ahead of
+        // the watermark's, so nothing is claimable. This is also the
+        // exact state an all-idle epoch leaves behind (`run_epoch`
+        // skips publish when no fleet emitted items).
+        assert!(d.claim().is_none(), "unpublished refills must not leak items");
+        d.publish();
+        assert_eq!(d.claim().map(|w| w.n_groups), Some(1));
+        // Refill mid-generation, as the coordinator does between
+        // epochs: the unclaimed remainder dies with its generation.
+        let buf = unsafe { d.begin_refill() };
+        buf.clear();
+        buf.extend([dummy(7), dummy(8)]);
+        assert!(d.claim().is_none(), "retired generations must not serve claims");
+        d.publish();
+        assert_eq!(d.claim().map(|w| w.n_groups), Some(7));
+        assert_eq!(d.claim().map(|w| w.n_groups), Some(8));
+        assert!(d.claim().is_none(), "a drained deque must stay drained");
+    }
+
+    #[test]
+    fn all_paused_epochs_interleave_without_perturbing_traces() {
+        // An epoch where every tenant is paused grants nothing, so the
+        // executor never publishes and each deque's cursor generation
+        // stays ahead of its watermark. The next epoch must recover,
+        // and the active rounds must stay bit-identical to lockstep.
+        let build = || {
+            let mut c = FleetCluster::new(4, 256, Policy::Drr);
+            let gids: Vec<_> = (0..8)
+                .map(|i| c.submit(spec(&format!("z{i}"), 12, 70 + i as u64)).unwrap())
+                .collect();
+            (c, gids)
+        };
+        let (mut lockstep, gids) = build();
+        let (mut epoch, _) = build();
+        for _ in 0..16 {
+            lockstep.run_round();
+        }
+        epoch.run_epoch(4);
+        for &g in &gids {
+            epoch.pause(g).unwrap();
+        }
+        assert_eq!(epoch.run_epoch(3), 0, "an all-paused epoch grants nothing");
+        for &g in &gids {
+            epoch.resume(g).unwrap();
+        }
+        epoch.run_epoch(12);
+        // 4 + 12 active epoch rounds ≡ 16 lockstep rounds; the paused
+        // rounds freeze scheduler state rather than perturbing it.
+        for &gid in &gids {
+            assert_eq!(lockstep.state(gid), epoch.state(gid), "state diverged for {gid}");
+            assert_eq!(
+                lockstep.deficit_bits(gid),
+                epoch.deficit_bits(gid),
+                "deficit diverged for {gid}"
+            );
+            let (a, b) = (lockstep.job(gid).unwrap(), epoch.job(gid).unwrap());
+            assert_eq!(a.rounds_done(), b.rounds_done(), "rounds diverged for {gid}");
+            assert_eq!(a.trace().final_x, b.trace().final_x, "iterate diverged for {gid}");
+        }
+        let (ma, mb) = (lockstep.metrics(), epoch.metrics());
+        assert_eq!(ma.served_job_rounds, mb.served_job_rounds);
+        assert_eq!(ma.spent_payload_bits, mb.spent_payload_bits);
+    }
+
+    #[test]
+    fn autoscale_grow_commits_state_before_rebalance_is_visible() {
+        // Audit pin for the PR 8 commit ordering: by the time
+        // `autoscale` returns, the resize is committed (active set,
+        // event counter) and the rebalance it triggered has already
+        // evened lodged jobs over the *new* active set.
+        let mut c = FleetCluster::new(4, 1 << 20, Policy::Drr);
+        c.submit(spec("seed-a", 64, 3)).unwrap();
+        while c.autoscale().unwrap() {}
+        assert_eq!(c.active_fleets(), 1, "one tenant shrinks to the floor");
+        let resizes = c.autoscale_events();
+        for i in 0..16 {
+            c.submit(spec(&format!("g{i}"), 64, 90 + i as u64)).unwrap();
+        }
+        assert!(c.autoscale().unwrap(), "17 lodged on 1 fleet is above the high watermark");
+        assert_eq!(c.active_fleets(), 2);
+        assert_eq!(c.autoscale_events(), resizes + 1, "exactly one committed resize");
+        let lodged: Vec<usize> =
+            (0..c.active_fleets()).map(|i| c.fleet(i).lodged_jobs()).collect();
+        let spread = lodged.iter().max().unwrap() - lodged.iter().min().unwrap();
+        assert!(spread <= 1, "post-grow rebalance must even lodged jobs, got {lodged:?}");
+        // Placement bookkeeping stayed consistent: every job sits on an
+        // active fleet and still runs to completion from there.
+        for gid in 0..17u64 {
+            let f = c.fleet_of(gid).expect("every admitted job keeps a placement");
+            assert!(f < c.active_fleets(), "job {gid} stranded on an idle fleet");
+        }
+        c.run_autoscaled(4096, 8).unwrap();
+        for gid in 0..17u64 {
+            assert_eq!(c.state(gid), Some(JobState::Finished), "job {gid} lost after grow");
+        }
+    }
+
+    #[test]
+    fn plan_cache_is_shared_across_fleets_and_surfaces_in_metrics() {
+        let mut c = FleetCluster::new(4, 1 << 20, Policy::Drr);
+        // Same generative inputs, different names: the names hash to
+        // different home fleets, but the cluster-wide cache serves the
+        // second admission from the first's plan.
+        c.submit(spec("cache-a", 8, 77)).unwrap();
+        c.submit(spec("cache-b", 8, 77)).unwrap();
+        let m = c.metrics();
+        assert_eq!(m.plan_cache_misses, 1, "first admission builds the plan");
+        assert_eq!(m.plan_cache_hits, 1, "same-(spec, seed) admission reuses it");
+        assert!(m.plan_cache_resident_bytes > 0);
+        assert_eq!(m.plan_cache_resident_bytes, c.plan_cache().resident_bytes());
+        // DQGD codecs carry mutable per-round state: uncacheable, and
+        // the bypass touches neither counter.
+        let dq = JobSpec::new("dq", CompressorSpec::parse("dqgd").unwrap(), 4.0, 16, 8, 5);
+        c.submit(dq).unwrap();
+        let m2 = c.metrics();
+        assert_eq!((m2.plan_cache_hits, m2.plan_cache_misses), (1, 1), "dqgd must bypass");
+        // Cache-off clears the fleet handles but keeps the shared
+        // instance (and its counters) warm for re-enabling.
+        c.set_plan_cache_enabled(false);
+        c.submit(spec("cache-c", 8, 77)).unwrap();
+        assert_eq!(c.plan_cache().hits(), 1, "a disabled cache must not be consulted");
+        c.set_plan_cache_enabled(true);
+        c.submit(spec("cache-d", 8, 77)).unwrap();
+        assert_eq!(c.plan_cache().hits(), 2);
     }
 
     #[test]

@@ -50,6 +50,7 @@ use crate::coordinator::config;
 use crate::coordinator::metrics::{FleetMetrics, JobBits};
 use crate::serve::checkpoint::{self, SchedTrailer};
 use crate::serve::job::{Job, JobSpec};
+use crate::serve::plancache::PlanCache;
 use crate::serve::scheduler::{self, Deficit, Policy, QosClass};
 
 /// Fleet-assigned job handle.
@@ -128,7 +129,7 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-struct JobSlot {
+pub(crate) struct JobSlot {
     id: JobId,
     state: JobState,
     deficit: Deficit,
@@ -158,23 +159,37 @@ pub(crate) struct EpochGroup {
     pub(crate) side: u64,
 }
 
-/// One [`EpochGroup`] as raw pointers, so the cluster's persistent pool
-/// workers can execute it from any thread. Disjointness is structural:
-/// the grant pass emits at most one group per slot per epoch, so no two
-/// items alias a job, and the coordinator parks until every item
-/// completes before touching fleet state again.
+/// A contiguous **panel** of one fleet's [`EpochGroup`]s as raw
+/// pointers, so the cluster's persistent pool workers can execute it
+/// from any thread. A panel is the unit of claiming/stealing: heavy
+/// groups (worker fan-out, big `n`) travel as singleton panels exactly
+/// like the pre-batching executor, while runs of same-`(n, workers)`
+/// lightweight grants are coalesced by
+/// [`JobServer::collect_epoch_items`] so the 1000-small-tenant epoch
+/// pays the per-item fixed costs (deque CAS, steal scan, dispatch)
+/// once per panel instead of once per tenant.
+///
+/// Disjointness is structural: the grant pass emits at most one group
+/// per slot per epoch, panels partition the fleet's group list, and
+/// the coordinator parks until every item completes before touching
+/// fleet state again — so no two items (nor two groups within one
+/// item) ever alias a slot, and the `slots` base pointer is only ever
+/// dereferenced at this panel's own group indices.
 #[derive(Clone, Copy)]
 pub(crate) struct WorkItem {
-    pub(crate) job: *mut Job,
-    pub(crate) levels: *const u8,
-    pub(crate) n_levels: usize,
-    pub(crate) threads: Option<usize>,
-    pub(crate) out: *mut EpochGroup,
+    /// Base of the owning fleet's slot array (indexed by
+    /// `EpochGroup::slot`).
+    pub(crate) slots: *mut JobSlot,
+    /// First group of this panel (points into the fleet's pooled
+    /// `groups` vec; execution writes measured bits back through it).
+    pub(crate) groups: *mut EpochGroup,
+    /// Panel length (≥ 1 for items emitted by the grant pass).
+    pub(crate) n_groups: usize,
 }
 
-// SAFETY: a WorkItem is an owned capability to one job for one epoch —
-// the epoch executor hands each item to exactly one worker and joins the
-// pool before the fleet's `&mut self` methods run again.
+// SAFETY: a WorkItem is an owned capability to its panel's jobs for one
+// epoch — the epoch executor hands each item to exactly one worker and
+// joins the pool before the fleet's `&mut self` methods run again.
 unsafe impl Send for WorkItem {}
 
 /// Step every granted level of one epoch group, returning the summed
@@ -195,20 +210,25 @@ pub(crate) fn execute_group(
     (payload, side)
 }
 
-/// Execute one [`WorkItem`] (pool workers call this; the inline path
-/// goes through [`JobServer::execute_epoch_inline`]).
+/// Execute one [`WorkItem`] panel (pool workers call this; the inline
+/// path goes through [`JobServer::execute_epoch_inline`]). Groups run
+/// in panel order, which is slot order — each job still steps its own
+/// granted levels in sequence through the shared [`execute_group`], so
+/// a batched panel is bit-identical to the same groups executed as
+/// singleton items.
 ///
 /// # Safety
 /// The item's pointers must be live and this thread must hold exclusive
-/// logical ownership of the item's job and group for the duration of
-/// the call — guaranteed by the epoch protocol above.
+/// logical ownership of every job and group in the panel for the
+/// duration of the call — guaranteed by the epoch protocol above.
 pub(crate) unsafe fn execute_item(item: WorkItem, pools: &Arc<ChannelPools>) {
-    let job = unsafe { &mut *item.job };
-    let levels = unsafe { std::slice::from_raw_parts(item.levels, item.n_levels) };
-    let (payload, side) = execute_group(job, levels, item.threads, pools);
-    let out = unsafe { &mut *item.out };
-    out.payload = payload;
-    out.side = side;
+    for gi in 0..item.n_groups {
+        let g = unsafe { &mut *item.groups.add(gi) };
+        let s = unsafe { &mut *item.slots.add(g.slot) };
+        let (payload, side) = execute_group(&mut s.job, &s.granted, g.threads, pools);
+        g.payload = payload;
+        g.side = side;
+    }
 }
 
 /// The multi-job server (see the [module docs](self)).
@@ -229,6 +249,15 @@ pub struct JobServer {
     /// grant pass clears and refills it, so steady-state epochs allocate
     /// nothing.
     groups: Vec<EpochGroup>,
+    /// Shared codec-plan cache consulted by [`JobServer::submit`] and
+    /// [`JobServer::restore`]; `None` (the default) builds every ladder
+    /// fresh. The cluster installs one cache across all member fleets.
+    plan_cache: Option<Arc<PlanCache>>,
+    /// Whether [`JobServer::collect_epoch_items`] coalesces runs of
+    /// lightweight same-shape groups into batched panels (on by
+    /// default; the off switch exists for the batched-vs-per-job
+    /// bit-identity proofs and same-run benches).
+    batching: bool,
 }
 
 impl JobServer {
@@ -259,7 +288,32 @@ impl JobServer {
             pools,
             fanout_fleets: None,
             groups: Vec::new(),
+            plan_cache: None,
+            batching: true,
         }
+    }
+
+    /// Install (or clear) the shared codec-plan cache consulted by
+    /// [`JobServer::submit`] and [`JobServer::restore`].
+    /// [`FleetCluster`] installs one cache across all member fleets so
+    /// restore-after-migration reuses the evicted fleet's plan.
+    ///
+    /// [`FleetCluster`]: crate::serve::cluster::FleetCluster
+    pub fn set_plan_cache(&mut self, cache: Option<Arc<PlanCache>>) {
+        self.plan_cache = cache;
+    }
+
+    /// The installed plan cache, if any.
+    pub fn plan_cache(&self) -> Option<&Arc<PlanCache>> {
+        self.plan_cache.as_ref()
+    }
+
+    /// Toggle batched-panel emission in
+    /// [`JobServer::collect_epoch_items`] (on by default). Off forces
+    /// one panel per group — the per-job baseline the bit-identity
+    /// tests and same-run benches compare against.
+    pub fn set_epoch_batching(&mut self, on: bool) {
+        self.batching = on;
     }
 
     /// Arm threaded granted rounds: with `active_fleets` fleets running
@@ -327,7 +381,7 @@ impl JobServer {
     /// otherwise the job could never transmit and would starve by
     /// construction.
     pub fn submit(&mut self, spec: JobSpec) -> Result<JobId, ServeError> {
-        let job = Job::build(spec).map_err(ServeError::InvalidSpec)?;
+        let job = Job::build_cached(spec, self.plan_cache.as_deref()).map_err(ServeError::InvalidSpec)?;
         let needed = job.min_cost_bits(self.policy);
         if needed > self.budget_bits as u64 {
             return Err(ServeError::Infeasible { needed_bits: needed, budget_bits: self.budget_bits });
@@ -355,7 +409,7 @@ impl JobServer {
     /// adaptive-R rung — resumes intact, which is what makes a
     /// mid-deficit fleet-to-fleet migration trace-neutral.
     pub fn restore(&mut self, bytes: &[u8]) -> io::Result<JobId> {
-        let (job, sched) = checkpoint::restore_with_sched(bytes)?;
+        let (job, sched) = checkpoint::restore_with_sched_cached(bytes, self.plan_cache.as_deref())?;
         let needed = job.min_cost_bits(self.policy);
         if needed > self.budget_bits as u64 {
             return Err(io::Error::new(
@@ -689,21 +743,48 @@ impl JobServer {
         }
     }
 
-    /// Emit the epoch's groups as raw [`WorkItem`]s for the cluster's
-    /// work-stealing pool. Caller contract: the fleet must not be
-    /// touched again until every item has executed, and
-    /// [`JobServer::apply_epoch`] must run afterwards.
+    /// Emit the epoch's groups as [`WorkItem`] panels for the cluster's
+    /// work-stealing pool. Heavy groups — threaded worker fan-out, or
+    /// dims above [`config::EPOCH_BATCH_MAX_DIM`] — travel as singleton
+    /// panels exactly as before; a run of **consecutive** lightweight
+    /// same-`(n, workers)` groups coalesces into one panel of at most
+    /// [`config::EPOCH_BATCH_MAX_GROUPS`] groups (capped so a uniform
+    /// small-tenant mix still fragments into stealable units). Panels
+    /// partition the group list in slot order and execute their groups
+    /// in that order, so batched execution is bit-identical to one panel
+    /// per group ([`JobServer::set_epoch_batching`] forces the latter).
+    /// The scan allocates nothing (phase 5 of `rust/tests/test_alloc.rs`).
+    ///
+    /// Caller contract: the fleet must not be touched again until every
+    /// item has executed, and [`JobServer::apply_epoch`] must run
+    /// afterwards.
     pub(crate) fn collect_epoch_items(&mut self, out: &mut Vec<WorkItem>) {
-        let slots = &mut self.slots;
-        for g in self.groups.iter_mut() {
-            let s = &mut slots[g.slot];
-            out.push(WorkItem {
-                job: &mut s.job,
-                levels: s.granted.as_ptr(),
-                n_levels: s.granted.len(),
-                threads: g.threads,
-                out: g,
-            });
+        let slots = self.slots.as_mut_ptr();
+        let groups = self.groups.as_mut_ptr();
+        let n_groups = self.groups.len();
+        let mut i = 0usize;
+        while i < n_groups {
+            let g = &self.groups[i];
+            let mut len = 1usize;
+            if self.batching && g.threads.is_none() {
+                let spec = self.slots[g.slot].job.spec();
+                let (n0, w0) = (spec.n, spec.workers);
+                if n0 <= config::EPOCH_BATCH_MAX_DIM {
+                    while i + len < n_groups && len < config::EPOCH_BATCH_MAX_GROUPS {
+                        let h = &self.groups[i + len];
+                        if h.threads.is_some() {
+                            break;
+                        }
+                        let hs = self.slots[h.slot].job.spec();
+                        if hs.n != n0 || hs.workers != w0 {
+                            break;
+                        }
+                        len += 1;
+                    }
+                }
+            }
+            out.push(WorkItem { slots, groups: unsafe { groups.add(i) }, n_groups: len });
+            i += len;
         }
     }
 

@@ -34,6 +34,7 @@ use crate::opt::projection::Domain;
 use crate::opt::Trace;
 use crate::quant::registry::CompressorSpec;
 use crate::quant::{budget_bits, Compressor};
+use crate::serve::plancache::PlanCache;
 use crate::serve::scheduler::{Policy, QosClass};
 
 /// Salt for the problem-data RNG stream (`seed ^ DATA_SALT`).
@@ -215,6 +216,33 @@ pub struct LadderLevel {
     pub codecs: Vec<Box<dyn Compressor>>,
 }
 
+/// Grow a spec's full effective-budget ladder from `seed ^ FRAME_SALT`:
+/// level `l`'s codecs come from `fork(l)` of that stream, forked
+/// unconditionally so each level's frame randomness is fixed regardless
+/// of which levels turn out feasible. Pure in `(scheme, r, n, workers,
+/// seed)` — exactly the plan-cache key — so two calls with equal inputs
+/// return bit-identical ladders; the caller must have validated the
+/// spec (level 0 feasible, `r > 0`, caps respected).
+pub(crate) fn build_ladder(spec: &JobSpec) -> Vec<LadderLevel> {
+    let mut frame_rng = Rng::seed_from(spec.seed ^ FRAME_SALT);
+    let mut ladder = Vec::new();
+    for (lvl, &frac) in LADDER_FRACTIONS.iter().enumerate() {
+        let mut level_rng = frame_rng.fork(lvl as u64);
+        let r_l = spec.r * frac;
+        if lvl > 0 && !spec.scheme.is_feasible(spec.n, r_l) {
+            continue;
+        }
+        let codecs: Vec<Box<dyn Compressor>> =
+            (0..spec.workers).map(|_| spec.scheme.build(spec.n, r_l, &mut level_rng)).collect();
+        ladder.push(LadderLevel {
+            r: r_l,
+            cost_bits: (spec.workers * budget_bits(spec.n, r_l)) as u64,
+            codecs,
+        });
+    }
+    ladder
+}
+
 /// A live job: spec + owned components + resumable run state. Built by
 /// [`Job::build`]; stepped by the fleet via [`Job::step_round`].
 pub struct Job {
@@ -223,7 +251,12 @@ pub struct Job {
     x_star: Vec<f32>,
     /// The schedule actually queried each round (auto-step resolved).
     sched_eff: Schedule,
-    ladder: Vec<LadderLevel>,
+    /// The immutable codec-ladder plan. `Arc`-held so same-spec jobs
+    /// can share one build through the cluster plan cache
+    /// ([`crate::serve::plancache::PlanCache`]); a cache-less build
+    /// simply holds the sole reference. Codecs are `&self`-only on the
+    /// hot path, so sharing is invisible to execution.
+    ladder: Arc<Vec<LadderLevel>>,
     feedback: FeedbackSlot,
     pub(crate) run: RunState,
     pub(crate) rng: Rng,
@@ -236,8 +269,21 @@ impl Job {
     /// `seed ^ DATA_SALT`, codec ladder from `seed ^ FRAME_SALT`
     /// (level `l` forks stream `l`), run state + worker RNG forks from
     /// `seed ^ RUN_SALT`. Deterministic: two builds of the same spec are
-    /// identical, which is what makes snapshots spec + dynamic-state only.
+    /// identical, which is what makes snapshots spec + dynamic-state only
+    /// — and what makes the ladder safe to share via
+    /// [`Job::build_cached`].
     pub fn build(spec: JobSpec) -> Result<Job, String> {
+        Self::build_cached(spec, None)
+    }
+
+    /// [`Job::build`] with an optional plan cache: when the scheme's
+    /// plan is shareable ([`CompressorSpec::plan_cacheable`]) the codec
+    /// ladder is fetched from (or inserted into) the cache instead of
+    /// regrown — bit-identical by the derivation discipline, since the
+    /// cache key is exactly the ladder's generative inputs. Everything
+    /// else (data, run state, RNGs) is always built fresh: it is
+    /// per-job mutable state.
+    pub fn build_cached(spec: JobSpec, cache: Option<&PlanCache>) -> Result<Job, String> {
         use crate::serve::checkpoint::{MAX_DIM, MAX_ROUNDS, MAX_ROWS, MAX_STR, MAX_WORKERS};
         // The checkpoint reader's sanity caps are admission rules too:
         // a job the snapshot format could not restore must never be
@@ -315,24 +361,10 @@ impl Job {
             Schedule::Constant(c) if c.is_nan() => Schedule::Constant(problem.stable_step()),
             s => s,
         };
-        let mut frame_rng = Rng::seed_from(spec.seed ^ FRAME_SALT);
-        let mut ladder = Vec::new();
-        for (lvl, &frac) in LADDER_FRACTIONS.iter().enumerate() {
-            // Fork unconditionally so each level's frame stream is fixed
-            // regardless of which levels turn out to be feasible.
-            let mut level_rng = frame_rng.fork(lvl as u64);
-            let r_l = spec.r * frac;
-            if lvl > 0 && !spec.scheme.is_feasible(spec.n, r_l) {
-                continue;
-            }
-            let codecs: Vec<Box<dyn Compressor>> =
-                (0..spec.workers).map(|_| spec.scheme.build(spec.n, r_l, &mut level_rng)).collect();
-            ladder.push(LadderLevel {
-                r: r_l,
-                cost_bits: (spec.workers * budget_bits(spec.n, r_l)) as u64,
-                codecs,
-            });
-        }
+        let ladder: Arc<Vec<LadderLevel>> = match cache {
+            Some(c) if spec.scheme.plan_cacheable() => c.get_or_build(&spec),
+            _ => Arc::new(build_ladder(&spec)),
+        };
         let feedback = match spec.feedback {
             FeedbackKind::None => FeedbackSlot::None(NoFeedback),
             FeedbackKind::Def => FeedbackSlot::Def(DefFeedback::new(spec.workers, spec.n)),

@@ -58,6 +58,12 @@
 //! * **Zero-allocation steady state** — a fleet round performs no heap
 //!   allocation per job once warm, and a work-stealing cluster epoch
 //!   performs none per epoch (`rust/tests/test_alloc.rs`, phases 4–5).
+//! * **Plan reuse** — built codec ladders are immutable and derived
+//!   entirely from `(scheme, R, n, workers, seed)`, so the cluster
+//!   shares them through a content-addressed, LRU-capped
+//!   [`plancache::PlanCache`]: admission of a same-spec tenant,
+//!   checkpoint restore and autoscaler migration reuse the existing
+//!   plan (bit-identical by construction) instead of regrowing frames.
 //! * **Fleet-independence** — a snapshot carries no fleet identity, so a
 //!   job restores into *any* fleet (same process or not) and its trace,
 //!   banked deficit and adaptive rung continue bit-for-bit; this is the
@@ -74,9 +80,11 @@ pub mod checkpoint;
 pub mod cluster;
 pub mod fleet;
 pub mod job;
+pub mod plancache;
 pub mod scheduler;
 
 pub use cluster::{FleetCluster, GlobalJobId};
 pub use fleet::{JobId, JobServer, JobState, ServeError};
 pub use job::{FeedbackKind, Job, JobSpec, ProblemSpec};
+pub use plancache::PlanCache;
 pub use scheduler::{Deficit, Policy, QosClass};

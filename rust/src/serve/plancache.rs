@@ -1,0 +1,282 @@
+//! Cluster-wide codec-plan cache: content-addressed, `Arc`-shared
+//! storage of immutable built ladders.
+//!
+//! [`Job::build`](crate::serve::job::Job::build) regrows the full
+//! frame/codec ladder — `levels × workers` calls to
+//! `CompressorSpec::build`, each materializing sign vectors or dense
+//! `O(n·N)` orthonormal matrices — on every admission, every
+//! checkpoint restore, and every autoscaler migration. But the ladder
+//! is a **pure function of its generative inputs**: the derivation
+//! discipline in [`crate::serve::job`] fixes every frame bit as
+//! `f(scheme, R, n, workers, seed)`. This cache keys ladders by
+//! exactly those inputs — a 64-bit FNV-1a spec fingerprint plus the
+//! raw seed — so a hit returns a plan **bit-identical by construction**
+//! to the one a fresh build would grow, and a restore or migration
+//! reuses the very `Arc` the evicted job held.
+//!
+//! What is *not* cached: problem data, run state, RNGs, feedback —
+//! all per-job mutable state, always built fresh. Schemes whose codec
+//! objects carry mutable round-to-round state (DQGD's range-refinement
+//! counter) are excluded at the source via
+//! [`CompressorSpec::plan_cacheable`](crate::quant::registry::CompressorSpec::plan_cacheable);
+//! they silently take the uncached path.
+//!
+//! Memory is bounded by an LRU byte cap
+//! ([`config::PLAN_CACHE_MAX_BYTES`]) accounted with the **true**
+//! resident footprint (`Compressor::resident_bytes`, which frames
+//! report exactly). Eviction drops only the cache's own `Arc` — live
+//! jobs keep theirs — so the cap bounds the cache's extra pinned
+//! memory, never correctness: an evicted key simply rebuilds on next
+//! use, bit-identical again.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::config;
+use crate::serve::checkpoint::fnv1a64;
+use crate::serve::job::{build_ladder, JobSpec, LadderLevel};
+
+/// Cache key: `(spec fingerprint, seed)` — the ladder's generative
+/// inputs. The fingerprint hashes the scheme's **canonical name**
+/// (admission rejects specs whose name does not round-trip through the
+/// registry parser, so the name is a faithful content address), the
+/// requested budget's raw bits, the dimension and the worker count.
+/// The seed rides alongside unhashed: equal keys mean equal ladders,
+/// bit for bit.
+pub type PlanKey = (u64, u64);
+
+struct CacheEntry {
+    key: PlanKey,
+    plan: Arc<Vec<LadderLevel>>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct CacheInner {
+    /// Linear store: entry counts stay small (distinct `(spec, seed)`
+    /// shapes, not tenants), and eviction wants an LRU scan anyway.
+    entries: Vec<CacheEntry>,
+    /// Monotone access clock backing the LRU order.
+    tick: u64,
+    /// Sum of `entries[i].bytes` — the gauge behind
+    /// [`PlanCache::resident_bytes`].
+    resident: usize,
+}
+
+/// The cache. One instance is shared `Arc`-wide across a
+/// [`crate::serve::cluster::FleetCluster`]'s fleets; a standalone
+/// [`crate::serve::fleet::JobServer`] may also be handed one. All
+/// methods take `&self` (internal `Mutex`), so fleets on scoped threads
+/// can consult it concurrently — the lock is only held for map
+/// bookkeeping, never across a ladder build.
+pub struct PlanCache {
+    max_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inner: Mutex<CacheInner>,
+}
+
+impl PlanCache {
+    /// A cache holding at most `max_bytes` of resident plan state
+    /// (0 disables retention: every lookup misses, every build runs).
+    pub fn new(max_bytes: usize) -> Self {
+        PlanCache {
+            max_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inner: Mutex::new(CacheInner { entries: Vec::new(), tick: 0, resident: 0 }),
+        }
+    }
+
+    /// A cache at the configured cluster cap
+    /// ([`config::PLAN_CACHE_MAX_BYTES`]).
+    pub fn with_default_cap() -> Self {
+        Self::new(config::PLAN_CACHE_MAX_BYTES)
+    }
+
+    /// The `(fingerprint, seed)` key for a spec — see [`PlanKey`].
+    pub fn key_for(spec: &JobSpec) -> PlanKey {
+        let mut bytes = Vec::with_capacity(64);
+        bytes.extend_from_slice(spec.scheme.name().as_bytes());
+        bytes.extend_from_slice(&spec.r.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&(spec.n as u64).to_le_bytes());
+        bytes.extend_from_slice(&(spec.workers as u64).to_le_bytes());
+        (fnv1a64(&bytes), spec.seed)
+    }
+
+    /// Fetch the plan for `spec`, growing and (capacity permitting)
+    /// retaining it on a miss. The build runs **outside** the lock, so
+    /// a slow orthonormal-frame build never stalls other fleets'
+    /// lookups; if two fleets race the same cold key, the first insert
+    /// wins and both callers leave holding the same `Arc` (the ladders
+    /// are bit-identical either way).
+    ///
+    /// The caller is responsible for the cacheability gate
+    /// ([`crate::quant::registry::CompressorSpec::plan_cacheable`]):
+    /// this method assumes the spec's plan is immutable and the spec
+    /// already passed admission validation.
+    pub fn get_or_build(&self, spec: &JobSpec) -> Arc<Vec<LadderLevel>> {
+        let key = Self::key_for(spec);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(&e.plan);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(build_ladder(spec));
+        let bytes = plan_resident_bytes(&plan);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.iter_mut().find(|e| e.key == key) {
+            // A racing builder inserted first; adopt its (identical)
+            // plan so every holder of this key shares one allocation.
+            e.last_used = tick;
+            return Arc::clone(&e.plan);
+        }
+        if bytes <= self.max_bytes {
+            inner.resident += bytes;
+            inner.entries.push(CacheEntry { key, plan: Arc::clone(&plan), bytes, last_used: tick });
+            while inner.resident > self.max_bytes {
+                let lru = inner
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(i, _)| i)
+                    .expect("resident > cap implies a nonempty cache");
+                let evicted = inner.entries.swap_remove(lru);
+                inner.resident -= evicted.bytes;
+            }
+        }
+        plan
+    }
+
+    /// Cache hits since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (= ladder builds routed through the cache).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Bytes of plan state the cache currently pins
+    /// (`Compressor::resident_bytes` summed over retained ladders);
+    /// at most the construction-time cap.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident as u64
+    }
+
+    /// Number of retained plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Whether no plan is retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// True resident footprint of a built ladder: per-level struct
+/// overhead plus each codec's own accounting (frames report their
+/// exact table sizes; scalar-configured codecs report 0 and cost only
+/// their box).
+pub(crate) fn plan_resident_bytes(plan: &[LadderLevel]) -> usize {
+    plan.iter()
+        .map(|lvl| {
+            std::mem::size_of::<LadderLevel>()
+                + lvl
+                    .codecs
+                    .iter()
+                    .map(|c| std::mem::size_of_val(c) + c.resident_bytes())
+                    .sum::<usize>()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::registry::CompressorSpec;
+
+    fn spec(name: &str, scheme: &str, n: usize, seed: u64) -> JobSpec {
+        JobSpec::new(name, CompressorSpec::parse(scheme).unwrap(), 1.0, n, 8, seed)
+    }
+
+    fn key_of(s: &JobSpec) -> PlanKey {
+        PlanCache::key_for(s)
+    }
+
+    #[test]
+    fn key_ignores_name_and_separates_generative_inputs() {
+        // Two tenants, same generative inputs, different names: one plan.
+        let a = key_of(&spec("alice", "ndsc-dith", 32, 7));
+        let b = key_of(&spec("bob", "ndsc-dith", 32, 7));
+        assert_eq!(a, b, "job names are not generative inputs");
+        // Any generative input separates keys.
+        assert_ne!(a, key_of(&spec("alice", "ndsc-dith", 32, 8)), "seed");
+        assert_ne!(a, key_of(&spec("alice", "ndsc-dith", 64, 7)), "n");
+        assert_ne!(a, key_of(&spec("alice", "ndsc", 32, 7)), "scheme");
+        let mut wide = spec("alice", "ndsc-dith", 32, 7);
+        wide.workers = 9;
+        assert_ne!(a, key_of(&wide), "workers");
+        let mut rate = spec("alice", "ndsc-dith", 32, 7);
+        rate.r = 2.0;
+        assert_ne!(a, key_of(&rate), "budget R");
+    }
+
+    #[test]
+    fn hit_returns_the_same_arc_and_counts() {
+        let cache = PlanCache::new(usize::MAX >> 1);
+        let s = spec("t", "ndsc-dith", 16, 3);
+        let first = cache.get_or_build(&s);
+        let second = cache.get_or_build(&s);
+        assert!(Arc::ptr_eq(&first, &second), "a hit must share the stored plan");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.resident_bytes(), plan_resident_bytes(&first) as u64);
+    }
+
+    #[test]
+    fn lru_eviction_respects_the_byte_cap_and_recency() {
+        let sa = spec("a", "ndsc-dith", 16, 1);
+        let sb = spec("b", "ndsc-dith", 16, 2);
+        let sc = spec("c", "ndsc-dith", 16, 3);
+        // Cap sized for exactly two of these (equal-shape) plans.
+        let one = plan_resident_bytes(&build_ladder(&sa));
+        let cache = PlanCache::new(2 * one);
+        let a1 = cache.get_or_build(&sa);
+        let _b1 = cache.get_or_build(&sb);
+        // Touch `a` so `b` is the LRU victim when `c` arrives.
+        let _ = cache.get_or_build(&sa);
+        let _c1 = cache.get_or_build(&sc);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.resident_bytes() <= 2 * one as u64);
+        // `a` survived (hit), `b` was evicted (miss → rebuild), and the
+        // rebuild is a fresh allocation while `a`'s Arc is still shared.
+        let a2 = cache.get_or_build(&sa);
+        assert!(Arc::ptr_eq(&a1, &a2));
+        let hits_before = cache.hits();
+        let _b2 = cache.get_or_build(&sb);
+        assert_eq!(cache.hits(), hits_before, "evicted key must rebuild, not hit");
+    }
+
+    #[test]
+    fn zero_cap_disables_retention_but_still_builds() {
+        let cache = PlanCache::new(0);
+        let s = spec("t", "ndsc-dith", 16, 3);
+        let p = cache.get_or_build(&s);
+        assert_eq!(p.len(), 4, "full dyadic ladder at R=1");
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.resident_bytes(), 0);
+    }
+}

@@ -25,6 +25,14 @@
 //!   `run_async`) is bit-identical to the lockstep cluster: per-job
 //!   traces, deficit counters, adaptive rungs and the full DRR/QoS
 //!   accounting agree field-for-field at any epoch chunking.
+//! * **Plan cache** — the cluster-wide codec-plan cache changes *where*
+//!   a ladder comes from, never what it computes: cache-on equals
+//!   cache-off bitwise under ample and scarce budgets, migrations
+//!   restore through cache hits without perturbing traces, and an
+//!   LRU-evicted plan rebuilds bit-identically.
+//! * **Batched panels** — coalescing same-shape lightweight grants into
+//!   batched execution panels is bit-identical to per-job panels on a
+//!   mixed small/heavy tenant population.
 
 mod common;
 
@@ -614,6 +622,202 @@ fn work_stealing_epoch_accounting_identity_under_scarce_budget() {
         assert_eq!(epoch.state(gid), Some(JobState::Finished), "epoch job {i}");
     }
     assert_ledgers_match(&lockstep, &epoch, "drained");
+}
+
+/// The eight tenants plus four same-generative-input twins (different
+/// names only — names are not cache-key inputs), so a cached cluster
+/// sees admission hits while every tenant still has a solo baseline.
+fn twinned_tenants(n: usize, rounds: usize) -> Vec<JobSpec> {
+    let mut v = eight_tenants(n, rounds);
+    let twins: Vec<JobSpec> = four_tenants(n, rounds)
+        .into_iter()
+        .map(|mut s| {
+            s.name = format!("twin-{}", s.name);
+            s
+        })
+        .collect();
+    v.extend(twins);
+    v
+}
+
+#[test]
+fn plan_cache_on_equals_cache_off_bit_for_bit() {
+    // The cache changes where a ladder comes from, never what it
+    // computes: the same population served with and without the plan
+    // cache must agree bitwise, under an ample budget and a scarce one,
+    // and the cached run must actually have exercised the cache.
+    let n = 24;
+    let rounds = 30;
+    let solos: Vec<Trace> = twinned_tenants(n, rounds).into_iter().map(solo_trace).collect();
+    for budget in [1usize << 24, 128] {
+        let mut cached = FleetCluster::new(4, budget, Policy::Drr);
+        let mut uncached = FleetCluster::new(4, budget, Policy::Drr);
+        uncached.set_plan_cache_enabled(false);
+        let gids: Vec<_> =
+            twinned_tenants(n, rounds).into_iter().map(|s| cached.submit(s).unwrap()).collect();
+        let ugids: Vec<_> =
+            twinned_tenants(n, rounds).into_iter().map(|s| uncached.submit(s).unwrap()).collect();
+        assert_eq!(gids, ugids);
+        assert!(
+            cached.plan_cache().hits() >= 4,
+            "budget {budget}: the four twins must hit the cache at admission, got {}",
+            cached.plan_cache().hits()
+        );
+        assert_eq!(uncached.plan_cache().hits() + uncached.plan_cache().misses(), 0);
+        cached.run(rounds * 64);
+        uncached.run(rounds * 64);
+        for (i, &gid) in gids.iter().enumerate() {
+            assert_eq!(cached.state(gid), Some(JobState::Finished), "cached job {i}");
+            assert_eq!(uncached.state(gid), Some(JobState::Finished), "uncached job {i}");
+            assert_trace_bit_identical(
+                cached.job(gid).unwrap().trace(),
+                &solos[i],
+                &format!("cache-on vs solo (budget {budget}) job {i}"),
+            );
+            assert_trace_bit_identical(
+                cached.job(gid).unwrap().trace(),
+                uncached.job(gid).unwrap().trace(),
+                &format!("cache-on vs cache-off (budget {budget}) job {i}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn migration_through_the_plan_cache_preserves_traces() {
+    // Autoscaler-churn shape: every tenant is checkpointed and restored
+    // into the next fleet over. Admission populated the cache, so each
+    // migration's restore must *hit* it — and the reused plan must leave
+    // the continued traces exactly on the uninterrupted solo runs.
+    let n = 24;
+    let rounds = 30;
+    let tenants = four_tenants(n, rounds);
+    let solos: Vec<Trace> = tenants.iter().cloned().map(solo_trace).collect();
+    let mut cluster = FleetCluster::new(4, 128, Policy::Drr);
+    let gids: Vec<_> = tenants.into_iter().map(|s| cluster.submit(s).unwrap()).collect();
+    assert_eq!(cluster.plan_cache().misses(), gids.len() as u64);
+    for _ in 0..7 {
+        cluster.run_round();
+    }
+    let hits_before = cluster.plan_cache().hits();
+    for &gid in &gids {
+        let to = (cluster.fleet_of(gid).unwrap() + 1) % cluster.fleet_count();
+        cluster.migrate(gid, to).unwrap();
+    }
+    assert_eq!(cluster.metrics().migrated_jobs, gids.len() as u64);
+    assert!(
+        cluster.plan_cache().hits() >= hits_before + gids.len() as u64,
+        "each migration's restore must reuse the admitted plan ({} hits for {} migrations)",
+        cluster.plan_cache().hits() - hits_before,
+        gids.len()
+    );
+    cluster.run(rounds * 64);
+    for (i, &gid) in gids.iter().enumerate() {
+        assert_eq!(cluster.state(gid), Some(JobState::Finished), "migrated job {i}");
+        assert_trace_bit_identical(
+            cluster.job(gid).unwrap().trace(),
+            &solos[i],
+            &format!("migration through the plan cache, job {i}"),
+        );
+    }
+}
+
+#[test]
+fn batched_panels_are_bit_identical_to_per_job_panels() {
+    // A skewed mix — runs of same-(n, workers) lightweight tenants that
+    // the batched executor coalesces, broken up by heavy multi-worker
+    // and odd-dimension tenants that must stay singleton panels — run
+    // through ragged epochs with batching on vs off. Bit-identity of
+    // traces and of the full accounting ledger is the claim.
+    let rounds = 24;
+    let mix = || {
+        let mut v: Vec<JobSpec> = (0..6)
+            .map(|i| spec(&format!("small{i}"), "ndsc-dith", 1.0, 16, rounds, 200 + i as u64))
+            .collect();
+        v.push(spec("wide", "ndsc", 2.0, 24, rounds, 300).with_workers(3));
+        v.push(spec("odd", "sd", 0.5, 32, rounds, 301));
+        v.extend(
+            (0..4).map(|i| {
+                spec(&format!("tail{i}"), "ndsc-dith", 0.5, 16, rounds, 400 + i as u64)
+            }),
+        );
+        v
+    };
+    let solos: Vec<Trace> = mix().into_iter().map(solo_trace).collect();
+    let mut batched = FleetCluster::new(4, 1 << 24, Policy::Drr);
+    let mut perjob = FleetCluster::new(4, 1 << 24, Policy::Drr);
+    perjob.set_epoch_batching(false);
+    let gids: Vec<_> = mix().into_iter().map(|s| batched.submit(s).unwrap()).collect();
+    for s in mix() {
+        perjob.submit(s).unwrap();
+    }
+    for chunk in [3usize, 1, 7, 5, 8] {
+        batched.run_epoch(chunk);
+        perjob.run_epoch(chunk);
+    }
+    batched.run_async(rounds * 64, 6);
+    perjob.run_async(rounds * 64, 6);
+    for (i, &gid) in gids.iter().enumerate() {
+        assert_eq!(batched.state(gid), Some(JobState::Finished), "batched job {i}");
+        assert_eq!(perjob.state(gid), Some(JobState::Finished), "per-job job {i}");
+        assert_trace_bit_identical(
+            batched.job(gid).unwrap().trace(),
+            &solos[i],
+            &format!("batched panels vs solo, job {i}"),
+        );
+        assert_trace_bit_identical(
+            batched.job(gid).unwrap().trace(),
+            perjob.job(gid).unwrap().trace(),
+            &format!("batched vs per-job panels, job {i}"),
+        );
+    }
+    for i in 0..batched.fleet_count() {
+        assert_eq!(
+            batched.fleet(i).metrics().to_csv(),
+            perjob.fleet(i).metrics().to_csv(),
+            "fleet {i} accounting must not notice batching"
+        );
+    }
+}
+
+#[test]
+fn evicted_plan_rebuilds_bit_identically() {
+    // An LRU cap sized for exactly one plan: every same-shape admission
+    // evicts the previous entry, so the "rebuilt after eviction" path
+    // runs on every submit — and must produce the same job bit-for-bit
+    // as the plan it replaced.
+    let n = 24;
+    let rounds = 20;
+    let mk = |name: &str, seed: u64| spec(name, "ndsc-dith", 1.0, n, rounds, seed);
+    // Probe the resident size of one such plan through a roomy cache.
+    let probe = std::sync::Arc::new(kashinflow::serve::PlanCache::new(usize::MAX >> 1));
+    let mut sizer = JobServer::new(1 << 24, Policy::Drr);
+    sizer.set_plan_cache(Some(probe.clone()));
+    sizer.submit(mk("probe", 1)).unwrap();
+    let one = probe.resident_bytes() as usize;
+    assert!(one > 0, "a built plan must report a nonzero resident footprint");
+
+    let cache = std::sync::Arc::new(kashinflow::serve::PlanCache::new(one));
+    let mut srv = JobServer::new(1 << 24, Policy::Drr);
+    srv.set_plan_cache(Some(cache.clone()));
+    let a = srv.submit(mk("a", 1)).unwrap();
+    let b = srv.submit(mk("b", 2)).unwrap(); // same shape, new seed: evicts a's plan
+    let a2 = srv.submit(mk("a-again", 1)).unwrap(); // evicted: must rebuild, not hit
+    assert_eq!(cache.misses(), 3, "the one-plan cap forces a rebuild on every admission");
+    assert_eq!(cache.hits(), 0);
+    assert_eq!(cache.len(), 1);
+    assert!(cache.resident_bytes() as usize <= one);
+    srv.run(rounds * 8);
+    for id in [a, b, a2] {
+        assert_eq!(srv.state(id), Some(JobState::Finished));
+    }
+    let solo = solo_trace(mk("solo", 1));
+    assert_trace_bit_identical(srv.job(a).unwrap().trace(), &solo, "through-cache build");
+    assert_trace_bit_identical(
+        srv.job(a2).unwrap().trace(),
+        &solo,
+        "rebuild after LRU eviction",
+    );
 }
 
 #[test]
