@@ -1,0 +1,176 @@
+//! Mesh-engine benchmarks: per-round gossip cost (oracle + per-edge
+//! innovation encode/decode + Metropolis mix) for a compressed ring, a
+//! 3×3 torus and the uncompressed fp32 ring twin, a threads=4 variant
+//! of the compressed ring (the scoped-thread phases are pure overhead
+//! at this size — the row documents the crossover, not a win), and one
+//! end-to-end accounting run whose exact per-link byte tallies land in
+//! the JSON. Saves `BENCH_mesh.json` so gossip-throughput and wire-
+//! accounting regressions diff mechanically across PRs.
+
+use std::time::Instant;
+
+use kashinflow::coordinator::transport::Topology;
+use kashinflow::data::synthetic::planted_regression_shards;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::mesh::{run_sharded, MeshConfig, MeshDriver};
+use kashinflow::opt::engine::oracle::ExactGrad;
+use kashinflow::opt::engine::schedule::Schedule;
+use kashinflow::opt::multi::ShardedProblem;
+use kashinflow::opt::objectives::Loss;
+use kashinflow::quant::registry::CompressorSpec;
+use kashinflow::testkit::bench::{black_box, Bencher};
+
+const SEED: u64 = 7;
+
+/// Small planted shards (8 rows each) so the codec path, not the
+/// oracle, dominates the per-round cost under measurement.
+fn problem(m: usize, n: usize) -> ShardedProblem {
+    let mut rng = Rng::seed_from(SEED ^ 0xBE9C);
+    let (shards, _) = planted_regression_shards(m, 8, n, Loss::Square, &mut rng, false);
+    ShardedProblem::new(shards)
+}
+
+/// A config on `prob`'s own stable step, so the timed rounds stay on a
+/// convergent (bounded-iterate) trajectory however long the window is.
+fn mesh_cfg(prob: &ShardedProblem, topology: Topology, scheme: &str, r: f32) -> MeshConfig {
+    let spec = CompressorSpec::parse(scheme).expect("registry scheme");
+    let mut cfg = MeshConfig::new(prob.m(), prob.n, topology, spec, r, SEED);
+    cfg.schedule = Schedule::Constant(prob.stable_step());
+    cfg.rounds = 4096;
+    cfg
+}
+
+struct MeshRow {
+    case: String,
+    topology: String,
+    scheme: String,
+    nodes: usize,
+    n: usize,
+    rounds_per_sec: f64,
+    median_ns: u128,
+    /// Pre-rendered extra JSON fields (`, "k": v` fragments) for rows
+    /// with a wider schema (the accounting run); empty otherwise.
+    extra: String,
+}
+
+// `BENCH_mesh.json` has two producers by design — this bench (CI's
+// smoke artifact, written in `rust/`) and the `repro mesh` sweep
+// (written in the invocation cwd). Rows carry a `source` discriminator
+// so a mixed diff is always attributable to its writer.
+fn rows_to_json(rows: &[MeshRow]) -> String {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"source\": \"bench\", \"case\": \"{}\", \"topology\": \"{}\", \
+             \"scheme\": \"{}\", \"nodes\": {}, \"n\": {}, \"rounds_per_sec\": {}, \
+             \"median_ns\": {}{}}}{}\n",
+            r.case,
+            r.topology,
+            r.scheme,
+            r.nodes,
+            r.n,
+            r.rounds_per_sec,
+            r.median_ns,
+            r.extra,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut rows = Vec::new();
+
+    let n = 256usize;
+    let cases: [(&str, usize, Topology, &str, f32, usize); 4] = [
+        ("mesh/ring8-ndsc-dith-r1", 8, Topology::Ring, "ndsc-dith", 1.0, 1),
+        ("mesh/torus3x3-sd-r1", 9, Topology::Torus { rows: 3, cols: 3 }, "sd", 1.0, 1),
+        ("mesh/ring8-fp32", 8, Topology::Ring, "fp32", 32.0, 1),
+        ("mesh/ring8-ndsc-dith-r1-threads4", 8, Topology::Ring, "ndsc-dith", 1.0, 4),
+    ];
+    for (case, m, topology, scheme, r, threads) in cases {
+        let prob = problem(m, n);
+        let mut cfg = mesh_cfg(&prob, topology, scheme, r);
+        cfg.threads = threads;
+        let topo_name = cfg.topology.to_string();
+        let oracles: Vec<ExactGrad<'_>> =
+            prob.shards.iter().map(|s| ExactGrad { obj: s }).collect();
+        let x0 = vec![0.0f32; n];
+        let mut drv = MeshDriver::new(cfg, oracles, &x0).expect("bench config is valid");
+        // The trace value closure is free on purpose: the number under
+        // test is the gossip round itself, not objective evaluation.
+        let stats = b.run(case, || {
+            drv.step(&|_| 0.0);
+            black_box(drv.round());
+        });
+        rows.push(MeshRow {
+            case: case.to_string(),
+            topology: topo_name,
+            scheme: scheme.to_string(),
+            nodes: m,
+            n,
+            rounds_per_sec: 1e9 / (stats.median.as_nanos().max(1) as f64),
+            median_ns: stats.median.as_nanos(),
+            extra: String::new(),
+        });
+    }
+
+    // End-to-end accounting run: a lossy ring under 10% link drops,
+    // with the exact per-link byte/delivered/dropped tallies in the
+    // row — the mechanical diff surface for the wire-accounting
+    // contract (`protocol::upload_wire_bytes`, both directions of
+    // every link charged separately).
+    {
+        let (m, acc_n) = (6usize, 64usize);
+        let rounds = if std::env::var_os("BENCH_SMOKE").is_some() { 40 } else { 200 };
+        let prob = problem(m, acc_n);
+        let mut cfg = mesh_cfg(&prob, Topology::Ring, "ndsc-dith", 1.0);
+        cfg.rounds = rounds;
+        cfg.link.drop_prob = 0.1;
+        let t0 = Instant::now();
+        let metrics = run_sharded(cfg, &prob).expect("accounting config is valid");
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let mut links = String::from("[");
+        for (k, l) in metrics.per_link.iter().enumerate() {
+            links.push_str(&format!(
+                "{{\"a\": {}, \"b\": {}, \"bytes\": {}, \"delivered\": {}, \"dropped\": {}}}{}",
+                l.a,
+                l.b,
+                l.bytes,
+                l.delivered,
+                l.dropped,
+                if k + 1 == metrics.per_link.len() { "" } else { ", " }
+            ));
+        }
+        links.push(']');
+        let case = format!("mesh/accounting-ring{m}-ndsc-dith-r1-drop0.1");
+        let rps = rounds as f64 / secs;
+        println!(
+            "{case:<48} {rps:>12.0} rounds/s ({} wire bytes over {} links)",
+            metrics.total_wire_bytes(),
+            metrics.per_link.len()
+        );
+        rows.push(MeshRow {
+            case,
+            topology: "ring".into(),
+            scheme: "ndsc-dith".into(),
+            nodes: m,
+            n: acc_n,
+            rounds_per_sec: rps,
+            median_ns: 0,
+            extra: format!(
+                ", \"rounds\": {rounds}, \"drop\": 0.1, \"wire_bytes\": {}, \
+                 \"final_consensus\": {}, \"per_link\": {links}",
+                metrics.total_wire_bytes(),
+                metrics.final_consensus
+            ),
+        });
+    }
+
+    match std::fs::write("BENCH_mesh.json", rows_to_json(&rows)) {
+        Ok(()) => println!("wrote BENCH_mesh.json ({} cases)", rows.len()),
+        Err(e) => eprintln!("could not write BENCH_mesh.json: {e}"),
+    }
+}

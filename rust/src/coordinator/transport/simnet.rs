@@ -63,6 +63,12 @@ impl Default for LinkModel {
 }
 
 /// Network shape: how many hops worker `i`'s uplink traffic traverses.
+///
+/// The first three shapes are server-rooted (the coordinator path);
+/// `Ring`, `Torus` and `Random` are peer shapes consumed by the mesh
+/// engine ([`crate::mesh`]) through [`Topology::mesh_edges`]. Every
+/// shape also answers [`Topology::mesh_edges`] as a peer graph (node 0
+/// takes the root seat), so the mesh engine accepts the whole grammar.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Topology {
     /// Server star: every worker one hop from the server.
@@ -73,9 +79,27 @@ pub enum Topology {
     /// Complete `fanout`-ary tree rooted at the server; hops = the
     /// worker's depth (`fanout` is clamped to ≥ 2).
     Tree { fanout: usize },
+    /// Peer ring: node `i` links to `i ± 1 (mod m)`. Needs `m ≥ 3` so
+    /// the two neighbors are distinct ([`Topology::validate`]).
+    Ring,
+    /// Peer `rows × cols` torus, wrapping in both axes. Each axis
+    /// needs ≥ 3 nodes (distinct wrap edges) and `rows·cols` must
+    /// equal the node count exactly ([`Topology::validate`]).
+    Torus { rows: usize, cols: usize },
+    /// Seeded Erdős–Rényi overlay on a ring backbone: every non-ring
+    /// pair is linked with probability `p`, drawn from a pure
+    /// `(seed, i, j)` hash. The backbone keeps the graph connected at
+    /// any `m ≥ 3`. The probability is stored as raw `f32` bits so the
+    /// enum stays `Copy + Eq`.
+    Random { p_bits: u32 },
 }
 
 impl Topology {
+    /// A `Random` shape with edge probability `p` (see [`Topology::Random`]).
+    pub fn random(p: f32) -> Topology {
+        Topology::Random { p_bits: p.to_bits() }
+    }
+
     /// Hop count from worker `worker` to the server.
     pub fn hops(self, worker: usize) -> u32 {
         match self {
@@ -94,17 +118,133 @@ impl Topology {
                 }
                 depth
             }
+            // Peer shapes have no server root; if one is used on the
+            // coordinator uplink path anyway, every worker is one peer
+            // hop from the collector.
+            Topology::Ring | Topology::Torus { .. } | Topology::Random { .. } => 1,
         }
     }
 
-    /// Parse `star`, `chain`, `tree` (fanout 2) or `tree:<fanout>`.
+    /// Whether this shape is well-formed over `workers` nodes — a
+    /// config error, never a panic, at degenerate sizes. Server-rooted
+    /// shapes accept any count; peer shapes need their wrap-around
+    /// edges distinct, and a torus must tile the node count exactly.
+    pub fn validate(self, workers: usize) -> Result<(), String> {
+        match self {
+            Topology::Star | Topology::Chain | Topology::Tree { .. } => Ok(()),
+            Topology::Ring => {
+                if workers < 3 {
+                    Err(format!("ring topology needs at least 3 nodes, got {workers}"))
+                } else {
+                    Ok(())
+                }
+            }
+            Topology::Torus { rows, cols } => {
+                if rows < 3 || cols < 3 {
+                    Err(format!("torus axes need at least 3 nodes each, got {rows}x{cols}"))
+                } else if rows * cols != workers {
+                    Err(format!("torus {rows}x{cols} tiles {} nodes, got {workers}", rows * cols))
+                } else {
+                    Ok(())
+                }
+            }
+            Topology::Random { p_bits } => {
+                let p = f32::from_bits(p_bits);
+                if !(0.0..=1.0).contains(&p) {
+                    Err(format!("random-graph probability must lie in [0, 1], got {p}"))
+                } else if workers < 3 {
+                    Err(format!("random-graph topology needs at least 3 nodes, got {workers}"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Undirected peer edges `(i, j)` with `i < j`, sorted, over `m`
+    /// nodes. Server-rooted shapes become peer graphs with node 0 in
+    /// the root seat (star hub, chain head, heap-order tree root).
+    /// `Random` draws each non-backbone pair from a pure `(seed, i, j)`
+    /// hash on top of the connecting ring backbone, so equal seeds
+    /// always yield the same overlay. Call [`Topology::validate`]
+    /// first; the edge set of a degenerate shape is unspecified.
+    pub fn mesh_edges(self, m: usize, seed: u64) -> Vec<(usize, usize)> {
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        match self {
+            Topology::Star => edges.extend((1..m).map(|i| (0, i))),
+            Topology::Chain => edges.extend((1..m).map(|i| (i - 1, i))),
+            Topology::Tree { fanout } => {
+                let f = fanout.max(2);
+                edges.extend((1..m).map(|i| ((i - 1) / f, i)));
+            }
+            Topology::Ring => {
+                for i in 0..m {
+                    let j = (i + 1) % m;
+                    edges.push((i.min(j), i.max(j)));
+                }
+            }
+            Topology::Torus { rows, cols } => {
+                let at = |r: usize, c: usize| r * cols + c;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let i = at(r, c);
+                        let right = at(r, (c + 1) % cols);
+                        let down = at((r + 1) % rows, c);
+                        edges.push((i.min(right), i.max(right)));
+                        edges.push((i.min(down), i.max(down)));
+                    }
+                }
+            }
+            Topology::Random { p_bits } => {
+                let p = f32::from_bits(p_bits);
+                for i in 0..m {
+                    let j = (i + 1) % m;
+                    edges.push((i.min(j), i.max(j)));
+                }
+                for i in 0..m {
+                    for j in (i + 2)..m {
+                        if i == 0 && j == m - 1 {
+                            continue; // backbone wrap edge, already present
+                        }
+                        let mut erng = Rng::seed_from(round_rank(seed, i as u64, j));
+                        if erng.uniform_f32() < p {
+                            edges.push((i, j));
+                        }
+                    }
+                }
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        edges
+    }
+
+    /// Parse `star`, `chain`, `tree` (fanout 2), `tree:<fanout>`,
+    /// `ring`, `torus:<rows>x<cols>` or `random:<p>` (alias
+    /// `random-graph:<p>`, `p ∈ [0, 1]`).
     pub fn parse(s: &str) -> Option<Topology> {
         let t = s.to_ascii_lowercase();
         match t.as_str() {
             "star" => Some(Topology::Star),
             "chain" => Some(Topology::Chain),
             "tree" => Some(Topology::Tree { fanout: 2 }),
+            "ring" => Some(Topology::Ring),
             _ => {
+                if let Some(dims) = t.strip_prefix("torus:") {
+                    let (r, c) = dims.split_once('x')?;
+                    let rows: usize = r.parse().ok()?;
+                    let cols: usize = c.parse().ok()?;
+                    return Some(Topology::Torus { rows, cols });
+                }
+                if let Some(p) =
+                    t.strip_prefix("random:").or_else(|| t.strip_prefix("random-graph:"))
+                {
+                    let p: f32 = p.parse().ok()?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return None;
+                    }
+                    return Some(Topology::random(p));
+                }
                 let f: usize = t.strip_prefix("tree:")?.parse().ok()?;
                 Some(Topology::Tree { fanout: f.max(2) })
             }
@@ -118,6 +258,9 @@ impl std::fmt::Display for Topology {
             Topology::Star => write!(f, "star"),
             Topology::Chain => write!(f, "chain"),
             Topology::Tree { fanout } => write!(f, "tree:{fanout}"),
+            Topology::Ring => write!(f, "ring"),
+            Topology::Torus { rows, cols } => write!(f, "torus:{rows}x{cols}"),
+            Topology::Random { p_bits } => write!(f, "random:{}", f32::from_bits(*p_bits)),
         }
     }
 }
@@ -272,11 +415,75 @@ mod tests {
 
     #[test]
     fn topology_parse_roundtrip() {
-        for t in [Topology::Star, Topology::Chain, Topology::Tree { fanout: 4 }] {
+        for t in [
+            Topology::Star,
+            Topology::Chain,
+            Topology::Tree { fanout: 4 },
+            Topology::Ring,
+            Topology::Torus { rows: 3, cols: 4 },
+            Topology::random(0.25),
+        ] {
             assert_eq!(Topology::parse(&t.to_string()), Some(t));
         }
         assert_eq!(Topology::parse("tree"), Some(Topology::Tree { fanout: 2 }));
+        assert_eq!(Topology::parse("random-graph:0.5"), Some(Topology::random(0.5)));
         assert_eq!(Topology::parse("mesh"), None);
+        assert_eq!(Topology::parse("torus:3"), None, "torus needs <rows>x<cols>");
+        assert_eq!(Topology::parse("random:1.5"), None, "p must lie in [0, 1]");
+    }
+
+    #[test]
+    fn degenerate_peer_shapes_are_config_errors_not_panics() {
+        // Ring below the minimum size.
+        assert!(Topology::Ring.validate(2).is_err());
+        assert!(Topology::Ring.validate(0).is_err());
+        assert!(Topology::Ring.validate(3).is_ok());
+        // Torus axes too short, or tiling the wrong worker count.
+        assert!(Topology::Torus { rows: 2, cols: 3 }.validate(6).is_err());
+        assert!(Topology::Torus { rows: 3, cols: 3 }.validate(8).is_err());
+        assert!(Topology::Torus { rows: 3, cols: 3 }.validate(9).is_ok());
+        // Random graph: too few nodes, or a probability outside [0, 1].
+        assert!(Topology::random(0.3).validate(2).is_err());
+        assert!(Topology::random(1.5).validate(9).is_err());
+        assert!(Topology::random(0.3).validate(3).is_ok());
+        // Server-rooted shapes accept any worker count.
+        for m in [0, 1, 5] {
+            assert!(Topology::Star.validate(m).is_ok());
+            assert!(Topology::Chain.validate(m).is_ok());
+            assert!(Topology::Tree { fanout: 2 }.validate(m).is_ok());
+        }
+    }
+
+    #[test]
+    fn mesh_edges_match_the_shape() {
+        // Ring over m nodes: exactly m edges, all degrees 2.
+        let ring = Topology::Ring.mesh_edges(5, 0);
+        assert_eq!(ring, vec![(0, 1), (0, 4), (1, 2), (2, 3), (3, 4)]);
+        // Torus 3×3: 2·9 = 18 distinct edges, all degrees 4.
+        let torus = Topology::Torus { rows: 3, cols: 3 }.mesh_edges(9, 0);
+        assert_eq!(torus.len(), 18);
+        let mut deg = [0usize; 9];
+        for &(a, b) in &torus {
+            assert!(a < b);
+            deg[a] += 1;
+            deg[b] += 1;
+        }
+        assert!(deg.iter().all(|&d| d == 4));
+        // Random overlay: p = 0 is exactly the ring backbone; p = 1 is
+        // the complete graph; the draw is pure in the seed.
+        assert_eq!(Topology::random(0.0).mesh_edges(6, 7), Topology::Ring.mesh_edges(6, 7));
+        assert_eq!(Topology::random(1.0).mesh_edges(6, 7).len(), 6 * 5 / 2);
+        assert_eq!(
+            Topology::random(0.4).mesh_edges(8, 11),
+            Topology::random(0.4).mesh_edges(8, 11)
+        );
+        // Server-rooted shapes as peer graphs: node 0 takes the root seat.
+        assert_eq!(Topology::Star.mesh_edges(4, 0), vec![(0, 1), (0, 2), (0, 3)]);
+        assert_eq!(Topology::Chain.mesh_edges(4, 0), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(
+            Topology::Tree { fanout: 2 }.mesh_edges(5, 0),
+            vec![(0, 1), (0, 2), (1, 3), (1, 4)]
+        );
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! `repro mesh` — decentralized gossip sweeps: **topology × scheme ×
+//! R × drop-rate** grids on the planted multi-shard regression, run on
+//! the serverless mesh engine ([`crate::mesh`]).
+//!
+//! Each cell gossips compressed innovations over the peer graph with
+//! Metropolis mixing and per-edge DEF feedback, and reports the final
+//! consensus distance `max_i ‖x_i − x̄‖`, the global objective at the
+//! node average, and the **exact** wire accounting: every delivered
+//! directed message is charged
+//! [`upload_wire_bytes`](crate::coordinator::protocol::upload_wire_bytes),
+//! so a bidirectional link counts twice per round. The grid is printed
+//! as a table and saved to `BENCH_mesh.json` — per-link byte tallies
+//! included — so mesh regressions diff mechanically across PRs. An
+//! uncompressed `fp32` twin (R = 32) anchors every topology × drop
+//! pair.
+//!
+//! ```text
+//! repro mesh [--quick] [n=32] [m=9] [rounds=400] [seed=7] [gamma=0.5]
+//! ```
+
+use crate::coordinator::transport::{LinkModel, Topology};
+use crate::data::synthetic::planted_regression_shards;
+use crate::linalg::rng::Rng;
+use crate::mesh::{run_sharded, LinkStats, MeshConfig};
+use crate::opt::engine::schedule::Schedule;
+use crate::opt::multi::ShardedProblem;
+use crate::opt::objectives::Loss;
+use crate::quant::registry::CompressorSpec;
+
+/// Shard-data salt (kept distinct from the CLI's so `repro mesh`
+/// traces stay byte-stable across PRs).
+const MESH_DATA_SALT: u64 = 0xDA7A_3E5B;
+
+/// One grid cell's summary.
+struct MeshCell {
+    topology: String,
+    scheme: String,
+    r: f32,
+    drop: f32,
+    rounds: usize,
+    final_consensus: f32,
+    final_value: f32,
+    wire_bytes: u64,
+    mean_node_bits: f64,
+    per_link: Vec<LinkStats>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    n: usize,
+    m: usize,
+    rounds: usize,
+    seed: u64,
+    gamma: f32,
+    topology: Topology,
+    scheme: CompressorSpec,
+    r: f32,
+    drop: f32,
+) -> MeshCell {
+    let mut rng = Rng::seed_from(seed ^ MESH_DATA_SALT);
+    let (shards, _xs) = planted_regression_shards(m, 2 * n, n, Loss::Square, &mut rng, false);
+    let problem = ShardedProblem::new(shards);
+    let step = problem.stable_step();
+    let mut cfg = MeshConfig::new(m, n, topology, scheme, r, seed);
+    cfg.gamma = gamma;
+    cfg.schedule = Schedule::Constant(step);
+    cfg.rounds = rounds;
+    cfg.link = LinkModel {
+        base_latency_us: 200,
+        jitter_us: 100,
+        drop_prob: drop,
+        bandwidth_bits_per_us: 8.0,
+    };
+    // One source of truth for invariants (topology node counts, budget
+    // feasibility, gamma range): the same validation the library runs.
+    let metrics = run_sharded(cfg, &problem).unwrap_or_else(|e| {
+        eprintln!("mesh: invalid configuration: {e}");
+        std::process::exit(2);
+    });
+    let mean_node_bits = metrics.node_wire_bits.iter().sum::<u64>() as f64 / m as f64;
+    MeshCell {
+        topology: topology.to_string(),
+        scheme: scheme.name(),
+        r,
+        drop,
+        rounds,
+        final_consensus: metrics.final_consensus,
+        final_value: metrics.final_value,
+        wire_bytes: metrics.total_wire_bytes(),
+        mean_node_bits,
+        per_link: metrics.per_link,
+    }
+}
+
+fn cells_to_json(cells: &[MeshCell]) -> String {
+    let mut s = String::from("[\n");
+    for (i, c) in cells.iter().enumerate() {
+        let mut links = String::from("[");
+        for (k, l) in c.per_link.iter().enumerate() {
+            links.push_str(&format!(
+                "{{\"a\": {}, \"b\": {}, \"bytes\": {}, \"delivered\": {}, \"dropped\": {}}}{}",
+                l.a,
+                l.b,
+                l.bytes,
+                l.delivered,
+                l.dropped,
+                if k + 1 == c.per_link.len() { "" } else { ", " }
+            ));
+        }
+        links.push(']');
+        s.push_str(&format!(
+            "  {{\"topology\": \"{}\", \"scheme\": \"{}\", \"r\": {}, \"drop\": {}, \
+             \"rounds\": {}, \"final_consensus\": {}, \"final_value\": {}, \
+             \"wire_bytes\": {}, \"mean_node_bits\": {}, \"per_link\": {}}}{}\n",
+            c.topology,
+            c.scheme,
+            c.r,
+            c.drop,
+            c.rounds,
+            c.final_consensus,
+            c.final_value,
+            c.wire_bytes,
+            c.mean_node_bits,
+            links,
+            if i + 1 == cells.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("]\n");
+    s
+}
+
+/// The most-square torus that tiles `m` nodes with both axes ≥ 3, if
+/// one exists.
+fn torus_for(m: usize) -> Option<Topology> {
+    let mut best = None;
+    let mut rows = 3usize;
+    while rows * rows <= m {
+        if m % rows == 0 && m / rows >= 3 {
+            best = Some(Topology::Torus { rows, cols: m / rows });
+        }
+        rows += 1;
+    }
+    best
+}
+
+/// Run the sweep. `args` accepts `n=`, `m=`/`nodes=`, `rounds=`,
+/// `seed=` and `gamma=` overrides.
+pub fn run(quick: bool, args: &[String]) {
+    let mut n = 32usize;
+    let mut m = 9usize;
+    let mut rounds = if quick { 60 } else { 400 };
+    let mut seed = 7u64;
+    let mut gamma = 0.5f32;
+    // Malformed values abort just like unknown keys do: silently keeping
+    // a default would run the whole sweep on the wrong parameters.
+    fn bail(key: &str, v: &str) -> ! {
+        eprintln!("mesh: bad value '{v}' for {key}=");
+        std::process::exit(2);
+    }
+    for a in args {
+        match a.split_once('=') {
+            Some(("n", v)) => n = v.parse().unwrap_or_else(|_| bail("n", v)),
+            Some(("m", v)) | Some(("nodes", v)) => {
+                m = v.parse().unwrap_or_else(|_| bail("m", v))
+            }
+            Some(("rounds", v)) => rounds = v.parse().unwrap_or_else(|_| bail("rounds", v)),
+            Some(("seed", v)) => seed = v.parse().unwrap_or_else(|_| bail("seed", v)),
+            Some(("gamma", v)) => gamma = v.parse().unwrap_or_else(|_| bail("gamma", v)),
+            _ => {
+                eprintln!("mesh: expected n=|m=|rounds=|seed=|gamma=, got '{a}'");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let mut topologies = vec![Topology::Ring, Topology::random(0.3)];
+    match torus_for(m) {
+        Some(t) => topologies.insert(1, t),
+        None => println!("(no torus fits m={m} with both axes >= 3; skipping the torus column)"),
+    }
+    let schemes: Vec<CompressorSpec> = ["ndsc-dith", "sd", "sign"]
+        .iter()
+        .map(|s| CompressorSpec::parse(s).expect("registry scheme"))
+        .collect();
+    let rates = [0.5f32, 1.0, 4.0];
+    let drops = [0.0f32, 0.1];
+
+    println!("=== repro mesh: gossip sweep (n={n}, m={m}, rounds={rounds}, gamma={gamma}) ===");
+    println!(
+        "{:<12} {:<10} {:>5} {:>6} {:>12} {:>12} {:>12}",
+        "topology", "scheme", "R", "drop", "consensus", "f(x_bar)", "KiB/node"
+    );
+    let mut cells = Vec::new();
+    for &topology in &topologies {
+        for drop in drops {
+            // The uncompressed twin anchors each topology × drop pair.
+            for (scheme, r) in schemes
+                .iter()
+                .flat_map(|s| rates.iter().map(move |&r| (*s, r)))
+                .chain(std::iter::once((CompressorSpec::Fp32, 32.0)))
+            {
+                if !scheme.is_feasible(n, r) {
+                    continue; // e.g. sign below 1 bit/dim
+                }
+                let cell = run_cell(n, m, rounds, seed, gamma, topology, scheme, r, drop);
+                println!(
+                    "{:<12} {:<10} {:>5} {:>6} {:>12.5} {:>12.5} {:>12.2}",
+                    cell.topology,
+                    cell.scheme,
+                    cell.r,
+                    cell.drop,
+                    cell.final_consensus,
+                    cell.final_value,
+                    cell.mean_node_bits / 8192.0
+                );
+                cells.push(cell);
+            }
+        }
+    }
+    let json = cells_to_json(&cells);
+    match std::fs::write("BENCH_mesh.json", &json) {
+        Ok(()) => println!("wrote BENCH_mesh.json ({} cells)", cells.len()),
+        Err(e) => eprintln!("could not write BENCH_mesh.json: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_cell_runs_and_serializes() {
+        let cell = run_cell(
+            16,
+            4,
+            10,
+            3,
+            0.5,
+            Topology::Ring,
+            CompressorSpec::parse("ndsc-dith").unwrap(),
+            1.0,
+            0.1,
+        );
+        assert!(cell.final_value.is_finite());
+        assert_eq!(cell.per_link.len(), 4, "a 4-ring has 4 links");
+        let json = cells_to_json(&[cell]);
+        assert!(json.contains("\"topology\": \"ring\""));
+        assert!(json.contains("\"per_link\": [{\"a\": 0"));
+        assert!(json.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn torus_fitting_prefers_square_tilings() {
+        assert_eq!(torus_for(9), Some(Topology::Torus { rows: 3, cols: 3 }));
+        assert_eq!(torus_for(12), Some(Topology::Torus { rows: 3, cols: 4 }));
+        assert_eq!(torus_for(16), Some(Topology::Torus { rows: 4, cols: 4 }));
+        assert_eq!(torus_for(7), None);
+        assert_eq!(torus_for(6), None, "2x3 axes are too short");
+    }
+}

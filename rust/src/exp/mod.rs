@@ -13,6 +13,7 @@ pub mod common;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
+pub mod mesh;
 pub mod net;
 pub mod serve;
 pub mod table1;

@@ -29,6 +29,11 @@
 //!   traces with bit-exact replay), byte-accounted and budget-enforced
 //!   per worker (`⌊n·R_i⌋`), with full / k-of-m / deadline participation —
 //!   the multi-worker consensus loop of §4.3.
+//! * **Mesh engine** ([`mesh`]) — the serverless counterpart: every
+//!   node owns its iterate and gossips *compressed innovations* with
+//!   its peer-graph neighbors (ring / torus / seeded random graphs)
+//!   over Metropolis mixing weights, with the full codec registry and
+//!   a DEF-style feedback memory on every directed link.
 //! * **Serving layer** ([`serve`]) — N concurrent jobs (any engine
 //!   composition) multiplexed over one **global** bits-per-round budget:
 //!   job registry with lifecycle, deficit-round-robin arbitration with
@@ -45,6 +50,7 @@ pub mod data;
 pub mod embed;
 pub mod exp;
 pub mod linalg;
+pub mod mesh;
 pub mod opt;
 pub mod quant;
 pub mod runtime;

@@ -8,7 +8,9 @@
 //!
 //! Highlights: `figures` regenerates every table/figure, `schemes`
 //! prints the registry zoo at one `(n, R)`, `net` sweeps SimNet
-//! topology × budget × drop, `serve` sweeps the multi-job serving layer
+//! topology × budget × drop, `mesh` sweeps the serverless gossip engine
+//! (peer topology × scheme × R × drop, with per-link byte accounting),
+//! `serve` sweeps the multi-job serving layer
 //! (jobs × global budget × scheduler policy, a mid-run
 //! pause/resume/cancel drill, and a ≥1000-tenant multi-fleet cluster
 //! pass with live migration), `train` runs the distributed coordinator
@@ -46,6 +48,7 @@ const COMMANDS: &str = "  figures                 every table/figure below in se
   ablation-ef ablation-lambda ablation-dqgd
   schemes                 print the registry zoo at (n, R)
   net                     SimNet topology x budget x drop sweep
+  mesh                    decentralized gossip sweep (topology x scheme x R x drop)
   serve                   multi-job serving sweep (jobs x budget x policy x fleets)
   train                   distributed run on a planted problem
   train-transformer       federated transformer (needs artifacts)
@@ -191,6 +194,9 @@ fn main() {
         }
         "net" => {
             exp::net::run(quick, &args);
+        }
+        "mesh" => {
+            exp::mesh::run(quick, &args);
         }
         "serve" => {
             exp::serve::run(quick, &args);

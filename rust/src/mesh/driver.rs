@@ -1,0 +1,469 @@
+//! The lockstep gossip driver: all nodes advanced round by round on
+//! scoped threads, with a deterministic, deadlock-free exchange.
+//!
+//! # Round structure
+//!
+//! Each round has two parallel phases separated by one barrier (the
+//! scoped-thread join), plus a sequential accounting pass:
+//!
+//! 1. **send** — every node queries its local oracle at its own
+//!    iterate, then, for each *live* outgoing link, encodes the
+//!    innovation `x_i − x̂_{i→j}` (after the edge's
+//!    [`FeedbackMemory::pre_encode`]) with that directed link's codec,
+//!    immediately decodes it (shared randomness makes the sender-side
+//!    decode bit-identical to the receiver's), advances its replica
+//!    `x̂_{i→j} += q`, and posts `q` plus the
+//!    [`upload_wire_bytes`]-charged byte count to its outbox;
+//! 2. **mix** — every node folds the posted codewords of its live
+//!    in-links into its estimates `x̂_{j→i} += q` and takes the
+//!    difference-form Metropolis gossip step
+//!    `x_i += γ Σ_j W_ij (x̂_{j→i} − x̂_{i→j}) − α_t g_i`.
+//!
+//! Because `x̂_{j→i}` (kept by `i`) and `x̂_{i→j}` (kept by `j`) are
+//! replicas advanced by the same codewords on the same live rounds,
+//! the pairwise gossip terms cancel exactly and the node average obeys
+//! `x̄ += −(α_t/m) Σ g_i` — compression never leaks mass. With a
+//! lossless codec the estimates equal the iterates after one exchange
+//! and the update reduces to exact Metropolis DGD.
+//!
+//! # Determinism
+//!
+//! Every random draw comes from a stream that is pure in its owner:
+//! per-node oracle streams (forked once from the config seed), per-
+//! directed-edge dither streams reseeded per round from
+//! `round_rank(seed, round, directed_id)`, and per-edge link verdicts
+//! from the PR-3 SimNet [`delivery`] model. No draw depends on thread
+//! interleaving, every floating-point reduction runs in fixed node
+//! order on one thread, and the phase barrier is the only
+//! synchronization — traces are bit-identical across repeated runs
+//! *and* across `threads` settings (`rust/tests/test_mesh.rs`).
+//!
+//! # Pause-on-drop
+//!
+//! A link's up/down verdict is drawn once per round per *undirected*
+//! edge, so both directions pause together (the FSPDA-style rule):
+//! no encode, no dither draw consumed from the edge stream, no bytes
+//! charged, and the edge's feedback memory and estimate replicas stay
+//! untouched on both endpoints of the paused link.
+
+use crate::coordinator::protocol::upload_wire_bytes;
+use crate::coordinator::transport::round_rank;
+use crate::coordinator::transport::simnet::{delivery, LinkModel};
+use crate::linalg::rng::Rng;
+use crate::opt::engine::feedback::{DefFeedback, FeedbackMemory, NoFeedback};
+use crate::opt::engine::oracle::Oracle;
+use crate::opt::engine::schedule::StepSchedule;
+use crate::quant::{Compressed, Compressor, Workspace};
+
+use super::graph::MeshGraph;
+use super::metrics::{LinkStats, MeshMetrics, MeshRound};
+use super::{MeshConfig, EDGE_BUILD_SALT, EDGE_CODEC_SALT, LINK_SALT, NODE_SALT};
+
+/// Pure per-`(seed, round, edge)` link verdict shared by both
+/// directions of undirected edge `edge`: one hop of the PR-3 SimNet
+/// [`delivery`] model decides whether the edge is up this round. Both
+/// endpoints evaluate the same verdict, so a down edge pauses
+/// symmetrically.
+pub fn link_up(seed: u64, round: u64, edge: usize, link: &LinkModel) -> bool {
+    delivery(seed ^ LINK_SALT, round, edge, 1, link, 0).is_some()
+}
+
+/// One node's private state. Codecs, feedback memories and estimate
+/// replicas are indexed by the node's neighbor *slot* (position in the
+/// sorted neighbor list).
+struct MeshNode {
+    x: Vec<f32>,
+    grad: Vec<f32>,
+    rng: Rng,
+    ws: Workspace,
+    msg: Compressed,
+    /// Innovation scratch (the vector handed to the encoder).
+    ubuf: Vec<f32>,
+    /// Decode scratch in the send phase, mix accumulator afterwards.
+    qbuf: Vec<f32>,
+    /// One codec per outgoing directed link.
+    codecs: Vec<Box<dyn Compressor>>,
+    /// One feedback memory per outgoing directed link.
+    fb: Vec<Box<dyn FeedbackMemory>>,
+    /// `x̂_{i→slot}`: replica of the receiver's estimate of me.
+    est_out: Vec<Vec<f32>>,
+    /// `x̂_{slot→i}`: my estimate of each neighbor.
+    est_in: Vec<Vec<f32>>,
+}
+
+/// What a node posts per outgoing link per round.
+#[derive(Clone)]
+struct OutSlot {
+    /// Decoded codeword the receiver applies to its estimate.
+    q: Vec<f32>,
+    /// `upload_wire_bytes` of the message, 0 on a paused round.
+    bytes: u64,
+    /// Whether the link was up this round.
+    up: bool,
+}
+
+/// The decentralized gossip engine: owns all node state and advances
+/// the whole mesh one lockstep round at a time.
+pub struct MeshDriver<O: Oracle + Send> {
+    cfg: MeshConfig,
+    graph: MeshGraph,
+    nodes: Vec<MeshNode>,
+    oracles: Vec<O>,
+    outboxes: Vec<Vec<OutSlot>>,
+    round: usize,
+    link_bytes: Vec<u64>,
+    link_delivered: Vec<u64>,
+    link_dropped: Vec<u64>,
+    node_bits: Vec<u64>,
+    trace: Vec<MeshRound>,
+}
+
+impl<O: Oracle + Send> MeshDriver<O> {
+    /// Build the mesh: one oracle per node, all nodes starting at `x0`.
+    /// Validates the config (including the topology's node count) and
+    /// grows one codec + one feedback memory per directed link.
+    pub fn new(cfg: MeshConfig, oracles: Vec<O>, x0: &[f32]) -> Result<Self, String> {
+        cfg.validate()?;
+        if oracles.len() != cfg.nodes {
+            return Err(format!(
+                "mesh needs one oracle per node: got {} oracles for {} nodes",
+                oracles.len(),
+                cfg.nodes
+            ));
+        }
+        if let Some(o) = oracles.iter().find(|o| o.dim() != cfg.n) {
+            return Err(format!("oracle dimension {} does not match n = {}", o.dim(), cfg.n));
+        }
+        if x0.len() != cfg.n {
+            return Err(format!("x0 has dimension {}, expected {}", x0.len(), cfg.n));
+        }
+        let graph = MeshGraph::build(cfg.topology, cfg.nodes, cfg.seed)?;
+        let mut nodes = Vec::with_capacity(cfg.nodes);
+        let mut outboxes = Vec::with_capacity(cfg.nodes);
+        for i in 0..cfg.nodes {
+            let deg = graph.degree(i);
+            let mut codecs: Vec<Box<dyn Compressor>> = Vec::with_capacity(deg);
+            let mut fb: Vec<Box<dyn FeedbackMemory>> = Vec::with_capacity(deg);
+            for slot in 0..deg {
+                // Each directed link owns its codec, built from a
+                // stream pure in (seed, directed edge id): shared
+                // randomness between the endpoints by construction.
+                let dir = graph.directed_id(i, slot);
+                let mut crng =
+                    Rng::seed_from(round_rank(cfg.seed ^ EDGE_BUILD_SALT, dir as u64, 0));
+                codecs.push(cfg.scheme.build(cfg.n, cfg.r, &mut crng));
+                fb.push(if cfg.feedback {
+                    Box::new(DefFeedback::new(1, cfg.n)) as Box<dyn FeedbackMemory>
+                } else {
+                    Box::new(NoFeedback)
+                });
+            }
+            let ws = codecs
+                .first()
+                .map_or_else(Workspace::new, |c| Workspace::for_compressor(c.as_ref()));
+            nodes.push(MeshNode {
+                x: x0.to_vec(),
+                grad: vec![0.0; cfg.n],
+                rng: Rng::seed_from(cfg.seed ^ NODE_SALT).fork(i as u64),
+                ws,
+                msg: Compressed::empty(cfg.n),
+                ubuf: vec![0.0; cfg.n],
+                qbuf: vec![0.0; cfg.n],
+                codecs,
+                fb,
+                est_out: vec![vec![0.0; cfg.n]; deg],
+                est_in: vec![vec![0.0; cfg.n]; deg],
+            });
+            outboxes.push(vec![OutSlot { q: vec![0.0; cfg.n], bytes: 0, up: false }; deg]);
+        }
+        let e = graph.edges.len();
+        Ok(MeshDriver {
+            graph,
+            nodes,
+            oracles,
+            outboxes,
+            round: 0,
+            link_bytes: vec![0; e],
+            link_delivered: vec![0; e],
+            link_dropped: vec![0; e],
+            node_bits: vec![0; cfg.nodes],
+            trace: Vec::with_capacity(cfg.rounds + 1),
+            cfg,
+        })
+    }
+
+    /// Advance one lockstep round. `value` evaluates the *global*
+    /// objective at the node average for the trace record.
+    pub fn step(&mut self, value: &dyn Fn(&[f32]) -> f32) {
+        let round = self.round as u64;
+        let alpha = self.cfg.schedule.step(self.round);
+        // One verdict per undirected edge, shared by both directions.
+        let up: Vec<bool> = (0..self.graph.edges.len())
+            .map(|e| link_up(self.cfg.seed, round, e, &self.cfg.link))
+            .collect();
+        let threads = self.cfg.threads.max(1).min(self.nodes.len());
+        let chunk = self.nodes.len().div_ceil(threads);
+
+        let cfg = &self.cfg;
+        let graph = &self.graph;
+        {
+            // Phase 1 (send): each thread owns a disjoint node range
+            // plus the matching outbox range; nothing else is written.
+            let up = &up[..];
+            let nodes = &mut self.nodes;
+            let oracles = &mut self.oracles;
+            let outboxes = &mut self.outboxes;
+            if threads == 1 {
+                for (i, ((node, oracle), out)) in
+                    nodes.iter_mut().zip(oracles.iter_mut()).zip(outboxes.iter_mut()).enumerate()
+                {
+                    phase_send(cfg, graph, up, round, i, node, oracle, out);
+                }
+            } else {
+                std::thread::scope(|s| {
+                    let mut base = 0usize;
+                    for ((nc, oc), xc) in nodes
+                        .chunks_mut(chunk)
+                        .zip(oracles.chunks_mut(chunk))
+                        .zip(outboxes.chunks_mut(chunk))
+                    {
+                        let b = base;
+                        base += nc.len();
+                        s.spawn(move || {
+                            for (k, ((node, oracle), out)) in
+                                nc.iter_mut().zip(oc.iter_mut()).zip(xc.iter_mut()).enumerate()
+                            {
+                                phase_send(cfg, graph, up, round, b + k, node, oracle, out);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+        {
+            // Phase 2 (mix): reads only the outboxes written above
+            // (the scope join is the barrier) and each thread's own
+            // node range.
+            let up = &up[..];
+            let nodes = &mut self.nodes;
+            let outboxes = &self.outboxes[..];
+            if threads == 1 {
+                for (i, node) in nodes.iter_mut().enumerate() {
+                    phase_mix(cfg, graph, up, outboxes, alpha, i, node);
+                }
+            } else {
+                std::thread::scope(|s| {
+                    let mut base = 0usize;
+                    for nc in nodes.chunks_mut(chunk) {
+                        let b = base;
+                        base += nc.len();
+                        s.spawn(move || {
+                            for (k, node) in nc.iter_mut().enumerate() {
+                                phase_mix(cfg, graph, up, outboxes, alpha, b + k, node);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+        // Sequential accounting in fixed node/slot order, so byte
+        // tallies and the f32 reductions are thread-count independent.
+        let mut round_bytes = 0u64;
+        for i in 0..self.graph.m {
+            for slot in 0..self.graph.degree(i) {
+                let e = self.graph.edge_of[i][slot];
+                let o = &self.outboxes[i][slot];
+                if o.up {
+                    self.link_bytes[e] += o.bytes;
+                    self.link_delivered[e] += 1;
+                    self.node_bits[i] += 8 * o.bytes;
+                    round_bytes += o.bytes;
+                } else {
+                    self.link_dropped[e] += 1;
+                }
+            }
+        }
+        let mean = self.node_mean();
+        let mut consensus = 0.0f32;
+        for node in &self.nodes {
+            let mut d2 = 0.0f32;
+            for k in 0..self.cfg.n {
+                let d = node.x[k] - mean[k];
+                d2 += d * d;
+            }
+            consensus = consensus.max(d2.sqrt());
+        }
+        self.trace.push(MeshRound {
+            round: self.round,
+            consensus,
+            value: value(&mean),
+            wire_bytes: round_bytes,
+        });
+        self.round += 1;
+    }
+
+    /// Run the configured number of rounds and return the metrics.
+    pub fn run(&mut self, value: &dyn Fn(&[f32]) -> f32) -> MeshMetrics {
+        for _ in 0..self.cfg.rounds {
+            self.step(value);
+        }
+        self.metrics()
+    }
+
+    /// Metrics snapshot: the trace so far plus the per-link accounting.
+    pub fn metrics(&self) -> MeshMetrics {
+        let last = self.trace.last();
+        MeshMetrics {
+            rounds: self.trace.clone(),
+            per_link: self
+                .graph
+                .edges
+                .iter()
+                .enumerate()
+                .map(|(e, &(a, b))| LinkStats {
+                    a,
+                    b,
+                    bytes: self.link_bytes[e],
+                    delivered: self.link_delivered[e],
+                    dropped: self.link_dropped[e],
+                })
+                .collect(),
+            node_wire_bits: self.node_bits.clone(),
+            final_consensus: last.map_or(0.0, |r| r.consensus),
+            final_value: last.map_or(0.0, |r| r.value),
+            final_mean: self.node_mean(),
+        }
+    }
+
+    /// The node average `x̄`, reduced in fixed node order.
+    pub fn node_mean(&self) -> Vec<f32> {
+        let mut mean = vec![0.0f32; self.cfg.n];
+        for node in &self.nodes {
+            for k in 0..self.cfg.n {
+                mean[k] += node.x[k];
+            }
+        }
+        let inv = 1.0 / self.graph.m as f32;
+        for v in &mut mean {
+            *v *= inv;
+        }
+        mean
+    }
+
+    /// The config this driver runs.
+    pub fn cfg(&self) -> &MeshConfig {
+        &self.cfg
+    }
+
+    /// The indexed peer graph.
+    pub fn graph(&self) -> &MeshGraph {
+        &self.graph
+    }
+
+    /// Rounds completed so far.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Node `i`'s current iterate.
+    pub fn node_x(&self, i: usize) -> &[f32] {
+        &self.nodes[i].x
+    }
+
+    /// Snapshot of the feedback memory on `node`'s `slot`-th outgoing
+    /// link (via [`FeedbackMemory::save_state`]).
+    pub fn edge_feedback_state(&self, node: usize, slot: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.nodes[node].fb[slot].save_state(&mut out);
+        out
+    }
+
+    /// `node`'s replica of what its `slot`-th neighbor believes about
+    /// `node`'s iterate (`x̂_{node→neighbor}`).
+    pub fn estimate_out(&self, node: usize, slot: usize) -> &[f32] {
+        &self.nodes[node].est_out[slot]
+    }
+}
+
+/// Send phase for node `i`: local gradient, then one encoded
+/// innovation per live outgoing link.
+#[allow(clippy::too_many_arguments)]
+fn phase_send<O: Oracle>(
+    cfg: &MeshConfig,
+    graph: &MeshGraph,
+    up: &[bool],
+    round: u64,
+    i: usize,
+    node: &mut MeshNode,
+    oracle: &mut O,
+    out: &mut [OutSlot],
+) {
+    oracle.query(&node.x, &mut node.rng, &mut node.grad);
+    for slot in 0..graph.neighbors[i].len() {
+        if !up[graph.edge_of[i][slot]] {
+            // Pause-on-drop: no encode, no dither draw, no bytes, and
+            // the edge's memory and replicas stay untouched.
+            out[slot].up = false;
+            out[slot].bytes = 0;
+            continue;
+        }
+        // Innovation: the part of x_i the receiver's estimate lacks.
+        for k in 0..node.x.len() {
+            node.ubuf[k] = node.x[k] - node.est_out[slot][k];
+        }
+        node.fb[slot].pre_encode(0, &mut node.ubuf);
+        let dir = graph.directed_id(i, slot);
+        let mut erng = Rng::seed_from(round_rank(cfg.seed ^ EDGE_CODEC_SALT, round, dir));
+        node.codecs[slot].compress_into(&node.ubuf, &mut erng, &mut node.ws, &mut node.msg);
+        node.codecs[slot].decompress_into(&node.msg, &mut node.ws, &mut node.qbuf);
+        node.fb[slot].post_decode(0, &node.qbuf, &node.ubuf);
+        // The sender-side replica advances exactly as the receiver's
+        // copy will in the mix phase.
+        for k in 0..node.x.len() {
+            node.est_out[slot][k] += node.qbuf[k];
+        }
+        out[slot].q.copy_from_slice(&node.qbuf);
+        out[slot].bytes = upload_wire_bytes(&node.msg) as u64;
+        out[slot].up = true;
+    }
+}
+
+/// Mix phase for node `i`: fold live in-link codewords into the
+/// estimates, then the gossip + gradient step.
+fn phase_mix(
+    cfg: &MeshConfig,
+    graph: &MeshGraph,
+    up: &[bool],
+    outboxes: &[Vec<OutSlot>],
+    alpha: f32,
+    i: usize,
+    node: &mut MeshNode,
+) {
+    let n = node.x.len();
+    for slot in 0..graph.neighbors[i].len() {
+        if !up[graph.edge_of[i][slot]] {
+            continue;
+        }
+        let j = graph.neighbors[i][slot];
+        let q = &outboxes[j][graph.rev_slot[i][slot]].q;
+        for k in 0..n {
+            node.est_in[slot][k] += q[k];
+        }
+    }
+    node.qbuf.fill(0.0);
+    // Difference-form Metropolis gossip over the live links; paused
+    // links contribute nothing this round (FSPDA-style). The pairwise
+    // terms cancel across each edge, so the node average is preserved.
+    for slot in 0..graph.neighbors[i].len() {
+        if !up[graph.edge_of[i][slot]] {
+            continue;
+        }
+        let w = graph.weights[i][slot];
+        for k in 0..n {
+            node.qbuf[k] += w * (node.est_in[slot][k] - node.est_out[slot][k]);
+        }
+    }
+    for k in 0..n {
+        node.x[k] += cfg.gamma * node.qbuf[k] - alpha * node.grad[k];
+    }
+}

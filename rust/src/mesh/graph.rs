@@ -1,0 +1,151 @@
+//! Peer-graph structure and Metropolis mixing weights.
+//!
+//! [`MeshGraph`] turns a [`Topology`] into the indexed adjacency the
+//! driver's hot loop needs: sorted neighbor lists, the undirected edge
+//! id behind every `(node, slot)`, the reverse slot (where the
+//! neighbor keeps its state for the opposite direction), and the
+//! Metropolis–Hastings mixing weights
+//!
+//! ```text
+//!   W_ij = 1 / (1 + max(deg_i, deg_j))   for each edge {i, j},
+//!   W_ii = 1 − Σ_{j ∈ N_i} W_ij,
+//! ```
+//!
+//! which are symmetric and doubly stochastic for **any** connected
+//! graph, using only local degree information — the standard choice in
+//! the decentralized literature (Michelusi et al.; CHOCO-Gossip). The
+//! self-weight is strictly positive (each row sums at most
+//! `deg_i / (1 + deg_i)` over the neighbors), so `W` is also positive
+//! semi-definite enough in practice for gossip steps `γ ≤ 1`.
+
+use crate::coordinator::transport::Topology;
+
+/// Indexed peer graph: adjacency, edge ids and Metropolis weights.
+#[derive(Clone, Debug)]
+pub struct MeshGraph {
+    /// Node count.
+    pub m: usize,
+    /// Undirected edges `(i, j)`, `i < j`, sorted — the id space for
+    /// per-link accounting and link up/down verdicts.
+    pub edges: Vec<(usize, usize)>,
+    /// Sorted neighbor list per node.
+    pub neighbors: Vec<Vec<usize>>,
+    /// Metropolis weight per `(node, slot)`, aligned with `neighbors`.
+    pub weights: Vec<Vec<f32>>,
+    /// Undirected edge id per `(node, slot)`.
+    pub edge_of: Vec<Vec<usize>>,
+    /// For `(node i, slot k)` with neighbor `j`: the slot of `i` in
+    /// `j`'s neighbor list (where `j` keeps the `j→i` direction).
+    pub rev_slot: Vec<Vec<usize>>,
+}
+
+impl MeshGraph {
+    /// Build the indexed graph for `topology` over `m` nodes.
+    /// `seed` fixes the `random:<p>` overlay; other shapes ignore it.
+    pub fn build(topology: Topology, m: usize, seed: u64) -> Result<MeshGraph, String> {
+        topology.validate(m)?;
+        let edges = topology.mesh_edges(m, seed);
+        let mut neighbors = vec![Vec::new(); m];
+        for &(a, b) in &edges {
+            neighbors[a].push(b);
+            neighbors[b].push(a);
+        }
+        for list in &mut neighbors {
+            list.sort_unstable();
+        }
+        let deg: Vec<usize> = neighbors.iter().map(|l| l.len()).collect();
+        let mut weights = Vec::with_capacity(m);
+        let mut edge_of = Vec::with_capacity(m);
+        let mut rev_slot = Vec::with_capacity(m);
+        for i in 0..m {
+            let mut w_row = Vec::with_capacity(deg[i]);
+            let mut e_row = Vec::with_capacity(deg[i]);
+            let mut r_row = Vec::with_capacity(deg[i]);
+            for &j in &neighbors[i] {
+                w_row.push(1.0 / (1 + deg[i].max(deg[j])) as f32);
+                let key = (i.min(j), i.max(j));
+                let e = edges.binary_search(&key).expect("edge from adjacency");
+                e_row.push(e);
+                let r = neighbors[j].binary_search(&i).expect("adjacency is symmetric");
+                r_row.push(r);
+            }
+            weights.push(w_row);
+            edge_of.push(e_row);
+            rev_slot.push(r_row);
+        }
+        Ok(MeshGraph { m, edges, neighbors, weights, edge_of, rev_slot })
+    }
+
+    /// Node degree.
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    /// The Metropolis self-weight `W_ii = 1 − Σ_j W_ij` (the
+    /// difference-form gossip update never multiplies by it, but it
+    /// completes the doubly-stochastic picture for reporting/tests).
+    pub fn self_weight(&self, i: usize) -> f32 {
+        1.0 - self.weights[i].iter().sum::<f32>()
+    }
+
+    /// Globally unique directed-edge id for `(node, slot)`: undirected
+    /// edge id doubled, plus one for the high→low direction. Seeds the
+    /// per-direction codec dither streams.
+    pub fn directed_id(&self, i: usize, slot: usize) -> usize {
+        2 * self.edge_of[i][slot] + usize::from(i > self.neighbors[i][slot])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metropolis_weights_are_symmetric_and_doubly_stochastic() {
+        for (topo, m) in [
+            (Topology::Ring, 6),
+            (Topology::Torus { rows: 3, cols: 3 }, 9),
+            (Topology::random(0.5), 8),
+            (Topology::Star, 5),
+        ] {
+            let g = MeshGraph::build(topo, m, 42).unwrap();
+            for i in 0..m {
+                // Row sum with the self-weight is exactly 1 by
+                // construction; the neighbor mass must leave it positive.
+                let row: f32 = g.weights[i].iter().sum();
+                assert!(row < 1.0, "self-weight must stay positive");
+                assert!(g.self_weight(i) > 0.0);
+                for (slot, &j) in g.neighbors[i].iter().enumerate() {
+                    let back = g.rev_slot[i][slot];
+                    assert_eq!(g.neighbors[j][back], i, "rev_slot must point back");
+                    assert_eq!(
+                        g.weights[i][slot].to_bits(),
+                        g.weights[j][back].to_bits(),
+                        "W must be symmetric bit-for-bit"
+                    );
+                    assert_eq!(g.edge_of[i][slot], g.edge_of[j][back]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn directed_ids_cover_both_directions_of_every_edge() {
+        let g = MeshGraph::build(Topology::Ring, 5, 0).unwrap();
+        let mut seen = vec![false; 2 * g.edges.len()];
+        for i in 0..g.m {
+            for slot in 0..g.degree(i) {
+                let id = g.directed_id(i, slot);
+                assert!(!seen[id], "directed ids must be unique");
+                seen[id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every direction must appear");
+    }
+
+    #[test]
+    fn degenerate_shapes_surface_the_config_error() {
+        assert!(MeshGraph::build(Topology::Ring, 2, 0).is_err());
+        assert!(MeshGraph::build(Topology::Torus { rows: 3, cols: 3 }, 8, 0).is_err());
+    }
+}

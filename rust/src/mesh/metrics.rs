@@ -1,0 +1,63 @@
+//! Mesh run metrics: the consensus trajectory, the objective at the
+//! node average, and exact per-link wire accounting.
+//!
+//! The wire contract matches the coordinator path bit for bit: every
+//! delivered directed message is charged
+//! [`upload_wire_bytes`](crate::coordinator::protocol::upload_wire_bytes)
+//! at the moment it leaves its sender, so a bidirectional link is
+//! counted **twice per round** (once per direction) — exactly what the
+//! paper's per-node budget `⌊nR⌋` doubles to on peer-to-peer links.
+
+/// One round of the mesh trace.
+#[derive(Clone, Debug)]
+pub struct MeshRound {
+    /// 0-based round index.
+    pub round: usize,
+    /// Consensus distance `max_i ‖x_i − x̄‖₂` after the round.
+    pub consensus: f32,
+    /// Global objective at the node average `f(x̄)`.
+    pub value: f32,
+    /// Wire bytes shipped this round, all delivered directions summed.
+    pub wire_bytes: u64,
+}
+
+/// Per-undirected-link accounting over a whole run.
+#[derive(Clone, Debug)]
+pub struct LinkStats {
+    /// Lower endpoint.
+    pub a: usize,
+    /// Higher endpoint.
+    pub b: usize,
+    /// Total wire bytes — both directions, each delivered message
+    /// charged `upload_wire_bytes` exactly.
+    pub bytes: u64,
+    /// Delivered directed messages.
+    pub delivered: u64,
+    /// Directed messages suppressed by a down round (pause-on-drop).
+    pub dropped: u64,
+}
+
+/// Full metrics of a mesh run.
+#[derive(Clone, Debug, Default)]
+pub struct MeshMetrics {
+    /// Per-round trace, in round order.
+    pub rounds: Vec<MeshRound>,
+    /// Per-link wire accounting, indexed like `MeshGraph::edges`.
+    pub per_link: Vec<LinkStats>,
+    /// Total outgoing wire bits per node.
+    pub node_wire_bits: Vec<u64>,
+    /// Consensus distance after the last round.
+    pub final_consensus: f32,
+    /// Objective at the node average after the last round.
+    pub final_value: f32,
+    /// The node average after the last round.
+    pub final_mean: Vec<f32>,
+}
+
+impl MeshMetrics {
+    /// Total wire bytes over all links (= Σ node bits / 8, since every
+    /// byte is charged to exactly one sending node and one link).
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.per_link.iter().map(|l| l.bytes).sum()
+    }
+}

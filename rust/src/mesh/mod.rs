@@ -1,0 +1,201 @@
+//! Decentralized mesh engine: quantized gossip optimization without a
+//! server.
+//!
+//! Every other engine in this repo assumes a star — a coordinator
+//! decodes all uploads and broadcasts one consensus iterate. This
+//! module drops the server: each node holds its **own** iterate and
+//! exchanges *compressed* information with its peer-graph neighbors
+//! each round, in the spirit of the decentralized anchors in
+//! `PAPERS.md` (Michelusi et al., finite-bit quantization over mesh
+//! networks; El Gamal & Lai, randomized quantized coordinate descent)
+//! — while reusing this repo's entire codec registry, budget
+//! machinery and wire accounting unchanged.
+//!
+//! # Algorithm (compressed-innovation gossip)
+//!
+//! Per round `t`, node `i` with iterate `x_i`:
+//!
+//! 1. queries its local oracle: `g_i = ∇f_i(x_i)`;
+//! 2. for each live outgoing link `(i→j)`, encodes the **innovation**
+//!    `d = x_i − x̂_{i→j}` (what the receiver does not yet know) with
+//!    that link's codec after the link's DEF-style
+//!    [`FeedbackMemory`](crate::opt::engine::feedback::FeedbackMemory)
+//!    correction, and both endpoints advance their shared estimate
+//!    `x̂_{i→j} += q`;
+//! 3. takes the difference-form Metropolis gossip step
+//!    `x_i += γ Σ_j W_ij (x̂_{j→i} − x̂_{i→j}) − α_t g_i`.
+//!
+//! Transmitting innovations instead of raw iterates is what makes a
+//! finite per-round budget `⌊nR⌋` compatible with *exact* consensus:
+//! as the nodes agree, the innovations shrink, and relative-error
+//! codecs (the registry zoo) shrink their absolute error with them —
+//! the CHOCO-Gossip observation, which Michelusi et al. sharpen to
+//! linear convergence under finite bit budgets. With a lossless codec
+//! (`fp32`) the estimates track the iterates exactly and the update
+//! reduces to textbook Metropolis DGD.
+//!
+//! The mixing weights `W_ij = 1/(1 + max(deg_i, deg_j))` come from the
+//! topology alone ([`MeshGraph`]); the link up/down verdicts, byte
+//! accounting ([`upload_wire_bytes`](crate::coordinator::protocol::upload_wire_bytes),
+//! bidirectional links charged once per direction) and topology
+//! grammar (`ring`, `torus:<r>x<c>`, `random:<p>`, plus the
+//! server-rooted shapes as peer graphs) all come from the PR-3
+//! transport layer ([`crate::coordinator::transport::simnet`]).
+
+pub mod driver;
+pub mod graph;
+pub mod metrics;
+
+pub use driver::{link_up, MeshDriver};
+pub use graph::MeshGraph;
+pub use metrics::{LinkStats, MeshMetrics, MeshRound};
+
+use crate::coordinator::transport::{LinkModel, Topology};
+use crate::opt::engine::oracle::ExactGrad;
+use crate::opt::engine::schedule::Schedule;
+use crate::opt::multi::ShardedProblem;
+use crate::quant::registry::CompressorSpec;
+
+/// Salt for per-directed-edge codec construction streams.
+pub(crate) const EDGE_BUILD_SALT: u64 = 0xB111_DC0D;
+/// Salt for per-round, per-directed-edge dither streams.
+pub(crate) const EDGE_CODEC_SALT: u64 = 0xD17E_35A1;
+/// Salt for per-round, per-edge link up/down verdicts.
+pub(crate) const LINK_SALT: u64 = 0x11AC_E550;
+/// Salt for per-node oracle RNG forks.
+pub(crate) const NODE_SALT: u64 = 0x40DE_5EED;
+
+/// Full description of a mesh run. Plain fields; [`MeshConfig::new`]
+/// fills sensible defaults for the knobs most runs leave alone.
+#[derive(Clone, Debug)]
+pub struct MeshConfig {
+    /// Node count `m` (one oracle/shard per node).
+    pub nodes: usize,
+    /// Problem dimension.
+    pub n: usize,
+    /// Peer-graph shape (validated against `nodes`).
+    pub topology: Topology,
+    /// Codec scheme instantiated on every directed link.
+    pub scheme: CompressorSpec,
+    /// Per-message budget rate `R` (bits per dimension).
+    pub r: f32,
+    /// Gossip (consensus) step `γ ∈ (0, 1]`. `1` is exact-DGD
+    /// aggressive; lossy codecs want headroom (default `0.5`).
+    pub gamma: f32,
+    /// Gradient step schedule `α_t`.
+    pub schedule: Schedule,
+    /// Rounds to run.
+    pub rounds: usize,
+    /// Master seed: fixes the random-graph overlay, all codec frames,
+    /// all dither streams and the link drop schedule.
+    pub seed: u64,
+    /// Delay/loss model applied to every mesh link; `drop_prob` drives
+    /// the pause-on-drop path.
+    pub link: LinkModel,
+    /// Per-edge DEF error feedback on the innovation codewords.
+    pub feedback: bool,
+    /// Scoped worker threads for the per-round phases (traces are
+    /// bit-identical for any value).
+    pub threads: usize,
+}
+
+impl MeshConfig {
+    /// A config with the common defaults: `γ = 0.5`, constant step
+    /// `0.05`, 400 rounds, ideal links, feedback on, single-threaded.
+    pub fn new(
+        nodes: usize,
+        n: usize,
+        topology: Topology,
+        scheme: CompressorSpec,
+        r: f32,
+        seed: u64,
+    ) -> Self {
+        MeshConfig {
+            nodes,
+            n,
+            topology,
+            scheme,
+            r,
+            gamma: 0.5,
+            schedule: Schedule::Constant(0.05),
+            rounds: 400,
+            seed,
+            link: LinkModel::IDEAL,
+            feedback: true,
+            threads: 1,
+        }
+    }
+
+    /// Validate the whole config — topology node count included — as a
+    /// config error, never a panic.
+    pub fn validate(&self) -> Result<(), String> {
+        self.topology.validate(self.nodes)?;
+        if self.n == 0 {
+            return Err("mesh dimension n must be positive".into());
+        }
+        if !self.scheme.is_feasible(self.n, self.r) {
+            return Err(format!(
+                "scheme {} cannot honor the budget at n = {}, R = {}",
+                self.scheme.name(),
+                self.n,
+                self.r
+            ));
+        }
+        if !(self.gamma > 0.0 && self.gamma <= 1.0) {
+            return Err(format!("gossip step gamma must lie in (0, 1], got {}", self.gamma));
+        }
+        if self.rounds == 0 {
+            return Err("mesh runs need at least one round".into());
+        }
+        if self.threads == 0 {
+            return Err("mesh threads must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Run a full mesh job with one objective shard per node (exact local
+/// gradients), all nodes starting from `x = 0`; the traced objective
+/// is the global average `f(x̄) = (1/m) Σ f_i(x̄)`.
+pub fn run_sharded(cfg: MeshConfig, prob: &ShardedProblem) -> Result<MeshMetrics, String> {
+    if prob.m() != cfg.nodes {
+        return Err(format!(
+            "problem has {} shards but the mesh has {} nodes",
+            prob.m(),
+            cfg.nodes
+        ));
+    }
+    if prob.n != cfg.n {
+        return Err(format!("problem dimension {} does not match n = {}", prob.n, cfg.n));
+    }
+    let oracles: Vec<ExactGrad<'_>> = prob.shards.iter().map(|s| ExactGrad { obj: s }).collect();
+    let x0 = vec![0.0f32; cfg.n];
+    let mut drv = MeshDriver::new(cfg, oracles, &x0)?;
+    Ok(drv.run(&|x| prob.value(x)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_catches_degenerate_shapes_and_knobs() {
+        let ok = MeshConfig::new(4, 16, Topology::Ring, CompressorSpec::Fp32, 32.0, 1);
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.nodes = 2;
+        assert!(bad.validate().is_err(), "ring below minimum size");
+        let mut bad = ok.clone();
+        bad.topology = Topology::Torus { rows: 3, cols: 3 };
+        assert!(bad.validate().is_err(), "torus must tile the node count");
+        let mut bad = ok.clone();
+        bad.r = 1.0;
+        assert!(bad.validate().is_err(), "fp32 needs R >= 32");
+        let mut bad = ok.clone();
+        bad.gamma = 0.0;
+        assert!(bad.validate().is_err(), "gamma must be positive");
+        let mut bad = ok;
+        bad.rounds = 0;
+        assert!(bad.validate().is_err(), "at least one round");
+    }
+}

@@ -279,4 +279,43 @@ mod tests {
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.resident_bytes(), 0);
     }
+
+    /// Pin the documented cold-key race: builds run outside the lock,
+    /// the first insert wins, and every losing builder *adopts* the
+    /// stored plan instead of retaining a duplicate allocation.
+    #[test]
+    fn racing_cold_builders_converge_on_one_shared_plan() {
+        let cache = PlanCache::new(usize::MAX >> 1);
+        // An orthonormal-frame ladder: the build is slow enough to keep
+        // the race window open for real.
+        let s = spec("race", "ndsc-ortho", 32, 5);
+        let plans: Vec<Arc<Vec<LadderLevel>>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..4).map(|_| sc.spawn(|| cache.get_or_build(&s))).collect();
+            handles.into_iter().map(|h| h.join().expect("racer panicked")).collect()
+        });
+        let stored = cache.get_or_build(&s);
+        for p in &plans {
+            assert!(Arc::ptr_eq(p, &stored), "every racer must share the one retained plan");
+        }
+        assert_eq!(cache.len(), 1, "a cold-key race must retain exactly one entry");
+        assert!(cache.misses() >= 1, "somebody built the plan");
+        assert_eq!(cache.hits() + cache.misses(), 5, "each lookup counts exactly once");
+        assert_eq!(cache.resident_bytes(), plan_resident_bytes(&stored) as u64);
+    }
+
+    /// A plan bigger than the whole cap must be served to the caller
+    /// but never pinned — and must never poison the resident tally.
+    #[test]
+    fn oversized_plan_is_served_but_never_retained() {
+        let s = spec("big", "ndsc-dith", 16, 9);
+        let cap = plan_resident_bytes(&build_ladder(&s)) - 1;
+        let cache = PlanCache::new(cap);
+        let p = cache.get_or_build(&s);
+        assert_eq!(p.len(), 4, "the caller still gets the full dyadic ladder");
+        assert_eq!(cache.len(), 0, "an over-cap plan must not be retained");
+        assert_eq!(cache.resident_bytes(), 0, "nor counted as resident");
+        let _ = cache.get_or_build(&s);
+        assert_eq!(cache.misses(), 2, "every oversized lookup rebuilds");
+        assert_eq!(cache.hits(), 0);
+    }
 }

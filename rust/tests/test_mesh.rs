@@ -1,0 +1,242 @@
+//! Mesh-engine acceptance: seed-deterministic gossip traces that are
+//! bit-identical across runs *and* thread counts, consensus convergence
+//! of the fp32 reference and its lossy R = 1 twin on the strongly
+//! convex planted problem, the per-edge feedback invariants (exactly
+//! zero under a lossless codec; frozen while a link is down), and exact
+//! per-link wire accounting against `protocol::upload_wire_bytes`.
+
+use kashinflow::coordinator::protocol::UPLOAD_HEADER_BITS;
+use kashinflow::coordinator::transport::Topology;
+use kashinflow::linalg::rng::Rng;
+use kashinflow::linalg::vecops::matvec;
+use kashinflow::mesh::{link_up, run_sharded, MeshConfig, MeshDriver, MeshMetrics};
+use kashinflow::opt::engine::oracle::ExactGrad;
+use kashinflow::opt::engine::schedule::Schedule;
+use kashinflow::opt::multi::ShardedProblem;
+use kashinflow::opt::objectives::{DatasetObjective, Loss};
+use kashinflow::quant::registry::CompressorSpec;
+
+/// A consistent planted least-squares problem: every shard is generated
+/// from the **same** planted `x*` with noiseless labels, so all local
+/// minimizers coincide, `f* = 0`, and exact consensus at the optimum is
+/// reachable even with a constant step. Plain Gaussian rows keep the
+/// conditioning mild (`s = 3n` rows per shard).
+fn consistent_problem(m: usize, n: usize, seed: u64) -> ShardedProblem {
+    let s = 3 * n;
+    let mut rng = Rng::seed_from(seed);
+    let x_star: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+    let shards: Vec<DatasetObjective> = (0..m)
+        .map(|_| {
+            let a: Vec<f32> = (0..s * n).map(|_| rng.gaussian_f32()).collect();
+            let mut b = vec![0.0f32; s];
+            matvec(&a, s, n, &x_star, &mut b);
+            DatasetObjective::new(a, b, s, n, Loss::Square, 0.0)
+        })
+        .collect();
+    ShardedProblem::new(shards)
+}
+
+fn cfg_for(
+    prob: &ShardedProblem,
+    topology: Topology,
+    scheme: &str,
+    r: f32,
+    rounds: usize,
+    seed: u64,
+) -> MeshConfig {
+    let scheme = CompressorSpec::parse(scheme).expect("registry scheme");
+    let mut cfg = MeshConfig::new(prob.m(), prob.n, topology, scheme, r, seed);
+    cfg.schedule = Schedule::Constant(prob.stable_step());
+    cfg.rounds = rounds;
+    cfg
+}
+
+/// Everything a mesh run reports, flattened to exact bit patterns:
+/// per-round consensus/value/bytes, per-link tallies, per-node bits and
+/// the final mean iterate.
+fn fingerprint(m: &MeshMetrics) -> Vec<u64> {
+    let mut f = Vec::new();
+    for r in &m.rounds {
+        f.push(u64::from(r.consensus.to_bits()));
+        f.push(u64::from(r.value.to_bits()));
+        f.push(r.wire_bytes);
+    }
+    for l in &m.per_link {
+        f.extend([l.a as u64, l.b as u64, l.bytes, l.delivered, l.dropped]);
+    }
+    f.extend(m.node_wire_bits.iter().copied());
+    f.extend(m.final_mean.iter().map(|v| u64::from(v.to_bits())));
+    f
+}
+
+#[test]
+fn same_seed_traces_are_bit_identical_across_runs_and_thread_counts() {
+    let prob = consistent_problem(5, 16, 11);
+    let run = |threads: usize, seed: u64| {
+        let mut cfg = cfg_for(&prob, Topology::Ring, "ndsc-dith", 1.0, 40, seed);
+        cfg.threads = threads;
+        cfg.link.drop_prob = 0.2; // exercise the pause path too
+        run_sharded(cfg, &prob).unwrap()
+    };
+    let base = fingerprint(&run(1, 42));
+    assert_eq!(base, fingerprint(&run(1, 42)), "same-seed rerun must be bit-identical");
+    assert_eq!(base, fingerprint(&run(2, 42)), "threads=2 must not change the trace");
+    assert_eq!(base, fingerprint(&run(4, 42)), "threads=4 must not change the trace");
+    assert_ne!(base, fingerprint(&run(1, 43)), "the seed must actually steer the run");
+}
+
+#[test]
+fn fp32_gossip_on_a_ring_converges_to_consensus_at_the_optimum() {
+    let prob = consistent_problem(4, 16, 5);
+    let cfg = cfg_for(&prob, Topology::Ring, "fp32", 32.0, 1200, 9);
+    let m = run_sharded(cfg, &prob).unwrap();
+    let first = m.rounds.first().unwrap().value;
+    assert!(
+        m.final_consensus < 1e-3,
+        "fp32 ring consensus distance {} should vanish",
+        m.final_consensus
+    );
+    assert!(
+        m.final_value < 1e-4 * first.max(1.0),
+        "objective {} barely moved from {first}",
+        m.final_value
+    );
+}
+
+/// The ISSUE acceptance bar: ring topology, a lossy registry scheme at
+/// R = 1, consensus distance within 1e-3 of the fp32 twin's final
+/// objective gap (`f* = 0` on the consistent problem).
+#[test]
+fn lossy_ring_gossip_at_r1_matches_its_fp32_twin() {
+    let prob = consistent_problem(4, 16, 5);
+    let run = |scheme: &str, r: f32| {
+        let mut cfg = cfg_for(&prob, Topology::Ring, scheme, r, 2000, 21);
+        cfg.gamma = 0.4;
+        run_sharded(cfg, &prob).unwrap()
+    };
+    let lossy = run("ndsc-dith", 1.0);
+    let twin = run("fp32", 32.0);
+    assert!(
+        lossy.final_consensus <= twin.final_value + 1e-3,
+        "lossy consensus {} vs fp32 twin gap {}",
+        lossy.final_consensus,
+        twin.final_value
+    );
+    assert!(
+        lossy.final_value < 1e-2,
+        "the lossy run must also optimize: f(x_bar) = {}",
+        lossy.final_value
+    );
+    // And at 32x fewer payload bits per message, the wire story holds.
+    assert!(lossy.total_wire_bytes() < twin.total_wire_bytes() / 8);
+}
+
+#[test]
+fn lossless_codec_keeps_every_edge_memory_exactly_zero() {
+    let prob = consistent_problem(4, 8, 3);
+    let mut cfg = cfg_for(&prob, Topology::Ring, "fp32", 32.0, 30, 17);
+    cfg.link.drop_prob = 0.3; // pausing must not disturb the invariant
+    let oracles: Vec<ExactGrad<'_>> = prob.shards.iter().map(|s| ExactGrad { obj: s }).collect();
+    let x0 = vec![0.0f32; prob.n];
+    let mut drv = MeshDriver::new(cfg, oracles, &x0).unwrap();
+    for _ in 0..30 {
+        drv.step(&|x| prob.value(x));
+    }
+    for i in 0..prob.m() {
+        for slot in 0..drv.graph().degree(i) {
+            let state = drv.edge_feedback_state(i, slot);
+            assert_eq!(state.len(), prob.n);
+            assert!(
+                state.iter().all(|&v| v == 0.0),
+                "fp32 per-edge feedback must stay exactly zero (node {i}, slot {slot})"
+            );
+        }
+    }
+}
+
+#[test]
+fn dropped_link_rounds_leave_the_paused_memory_untouched() {
+    let prob = consistent_problem(4, 8, 3);
+    let mut cfg = cfg_for(&prob, Topology::Ring, "ndsc-dith", 1.0, 60, 23);
+    cfg.link.drop_prob = 0.5;
+    let seed = cfg.seed;
+    let link = cfg.link;
+    let oracles: Vec<ExactGrad<'_>> = prob.shards.iter().map(|s| ExactGrad { obj: s }).collect();
+    let x0 = vec![0.0f32; prob.n];
+    let mut drv = MeshDriver::new(cfg, oracles, &x0).unwrap();
+    let edge = drv.graph().edge_of[0][0];
+    let (mut ups, mut downs, mut changed_when_up) = (0u32, 0u32, 0u32);
+    for round in 0..60u64 {
+        let fb_before = drv.edge_feedback_state(0, 0);
+        let est_before = drv.estimate_out(0, 0).to_vec();
+        let was_up = link_up(seed, round, edge, &link);
+        drv.step(&|x| prob.value(x));
+        if was_up {
+            ups += 1;
+            if drv.edge_feedback_state(0, 0) != fb_before {
+                changed_when_up += 1;
+            }
+        } else {
+            downs += 1;
+            assert_eq!(
+                drv.edge_feedback_state(0, 0),
+                fb_before,
+                "round {round}: paused edge memory must stay untouched"
+            );
+            assert_eq!(
+                drv.estimate_out(0, 0),
+                &est_before[..],
+                "round {round}: paused replicas must stay untouched"
+            );
+        }
+    }
+    assert!(ups > 0 && downs > 0, "drop 0.5 over 60 rounds must see both verdicts");
+    assert!(changed_when_up > 0, "a lossy codec must actually exercise the memory");
+}
+
+#[test]
+fn per_link_bytes_match_upload_wire_bytes_in_both_directions() {
+    let prob = consistent_problem(4, 8, 7);
+    let rounds = 80usize;
+    let mut cfg = cfg_for(&prob, Topology::Ring, "fp32", 32.0, rounds, 31);
+    cfg.link.drop_prob = 0.3;
+    let m = run_sharded(cfg, &prob).unwrap();
+    // fp32 frames carry no side info: the exact protocol charge per
+    // delivered directed message is (32n + header) bits, byte-rounded.
+    let per_msg = ((32 * prob.n + UPLOAD_HEADER_BITS).div_ceil(8)) as u64;
+    let mut link_bits = 0u64;
+    for l in &m.per_link {
+        assert_eq!(
+            l.delivered + l.dropped,
+            2 * rounds as u64,
+            "a bidirectional link is tallied once per direction per round"
+        );
+        assert_eq!(l.bytes, l.delivered * per_msg, "link ({}, {})", l.a, l.b);
+        link_bits += 8 * l.bytes;
+    }
+    assert!(m.per_link.iter().any(|l| l.dropped > 0), "drop 0.3 must pause something");
+    assert_eq!(
+        m.node_wire_bits.iter().sum::<u64>(),
+        link_bits,
+        "per-node and per-link tallies must agree"
+    );
+    assert_eq!(m.total_wire_bytes(), m.per_link.iter().map(|l| l.bytes).sum::<u64>());
+    assert_eq!(
+        m.rounds.iter().map(|r| r.wire_bytes).sum::<u64>(),
+        m.total_wire_bytes(),
+        "the per-round trace must carry the same bytes"
+    );
+}
+
+#[test]
+fn torus_and_random_topologies_run_with_full_link_accounting() {
+    let prob = consistent_problem(9, 8, 13);
+    let torus = cfg_for(&prob, Topology::Torus { rows: 3, cols: 3 }, "sd", 1.0, 20, 3);
+    let mt = run_sharded(torus, &prob).unwrap();
+    assert_eq!(mt.per_link.len(), 18, "a 3x3 torus has 2m edges");
+    assert!(mt.final_value.is_finite());
+    let random = cfg_for(&prob, Topology::random(0.4), "sign", 1.0, 20, 3);
+    let mr = run_sharded(random, &prob).unwrap();
+    assert!(mr.per_link.len() >= 9, "the random overlay keeps its ring backbone");
+    assert!(mr.final_value.is_finite());
+}
